@@ -1,0 +1,42 @@
+//! §Perf harness: measure per-step execute time of the sss_step variants
+//! lowered by `python -m compile.perf_variants` (Pallas row-block B ×
+//! backward chunk C) and print the ranking. Drives the L1/L2 rows of
+//! EXPERIMENTS.md §Perf.
+
+use shufflesort::bench::bench;
+use shufflesort::runtime::{Arg, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts_perf".into());
+    let rt = Runtime::from_manifest(&dir)?;
+    let names = rt.artifact_names();
+    println!("{} variants in {dir}", names.len());
+
+    let mut results: Vec<(String, f64)> = Vec::new();
+    for name in names {
+        let exe = rt.load(&name)?;
+        let n = exe.meta.n;
+        let d = exe.meta.d;
+        let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let x: Vec<f32> = (0..n * d).map(|i| ((i * 2654435761) % 1000) as f32 / 1000.0).collect();
+        let inv: Vec<i32> = (0..n as i32).collect();
+        let s = bench(&name, 3, 15, || {
+            exe.run(&[
+                Arg::F32(&w),
+                Arg::F32(&x),
+                Arg::I32(&inv),
+                Arg::ScalarF32(0.3),
+                Arg::ScalarF32(0.5),
+            ])
+            .unwrap()
+        });
+        println!("{}", s.line());
+        results.push((s.name, s.min_s));
+    }
+    results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    println!("\nranking (min step time):");
+    for (name, t) in &results {
+        println!("  {:<34} {:.2} ms", name, t * 1e3);
+    }
+    Ok(())
+}

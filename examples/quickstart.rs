@@ -1,0 +1,56 @@
+//! Quickstart: sort 256 random RGB colors onto a 16×16 grid with
+//! ShuffleSoftSort and report the quality metrics.
+//!
+//! Run (after `make artifacts && cargo build --release`):
+//!
+//! ```sh
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use shufflesort::prelude::*;
+use shufflesort::metrics::mean_neighbor_distance;
+use shufflesort::util::ppm;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT artifacts (HLO text, compiled once per process).
+    let rt = Runtime::from_manifest("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 2. A workload: 256 random RGB colors on a 16×16 grid.
+    let data = shufflesort::data::random_colors(256, 42);
+    let g = GridShape::new(16, 16);
+    println!(
+        "unsorted: neighbor-dist={:.4}  DPQ16={:.3}",
+        mean_neighbor_distance(&data.rows, data.d, g),
+        dpq(&data.rows, data.d, g, 16.0, 16)
+    );
+
+    // 3. Sort with the paper's method (Algorithm 1). `for_grid` picks the
+    //    tuned defaults; everything is overridable (see `sssort help`).
+    let mut cfg = ShuffleSoftSortConfig::for_grid(16, 16);
+    cfg.phases = 2048; // quickstart budget: a few seconds
+    let sorter = ShuffleSoftSort::new(&rt, cfg)?;
+    let out: SortOutcome = sorter.sort(&data)?;
+
+    // 4. Inspect the result.
+    println!("{}", out.report.summary());
+    println!(
+        "sorted:   neighbor-dist={:.4}  DPQ16={:.3}  ({} phases rejected by greedy accept)",
+        mean_neighbor_distance(&out.arranged, data.d, g),
+        out.report.final_dpq,
+        out.report.rejected_phases,
+    );
+
+    // 5. The permutation maps grid cells to original item indices and the
+    //    loss curve is recorded for plotting.
+    let p = out.perm.as_slice();
+    println!("perm[0..8] = {:?}", &p[..8]);
+    let (first, last) = out.report.loss_span();
+    println!("loss: {first:.4} -> {last:.4} over {} steps", out.report.steps);
+
+    // 6. Save a viewable image of the sorted grid.
+    std::fs::create_dir_all("out")?;
+    ppm::write_ppm_upscaled(std::path::Path::new("out/quickstart.ppm"), &out.arranged, 16, 16, 16)?;
+    println!("wrote out/quickstart.ppm");
+    Ok(())
+}

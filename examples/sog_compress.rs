@@ -1,0 +1,79 @@
+//! END-TO-END DRIVER (DESIGN.md §10, Fig. 6): the full Self-Organizing-
+//! Gaussians pipeline on a real (synthetic-scene) workload, exercising all
+//! three layers:
+//!
+//!   scene (Rust substrate) → ShuffleSoftSort (Rust coordinator → PJRT →
+//!   AOT HLO containing the Pallas kernel) → attribute-plane codec (Rust)
+//!   → compression ratio + PSNR vs the shuffled and heuristic baselines.
+//!
+//! Results are recorded in EXPERIMENTS.md §E6. Pass `--full` for the
+//! 4096-splat paper-scale run (several minutes on one core); default is a
+//! 1024-splat run (~1 minute).
+
+use anyhow::Result;
+
+use shufflesort::config::ShuffleSoftSortConfig;
+use shufflesort::grid::GridShape;
+use shufflesort::metrics::corr::mean_lag1_autocorr;
+use shufflesort::runtime::Runtime;
+use shufflesort::sog::codec::CodecConfig;
+use shufflesort::sog::scene::{GaussianScene, SceneConfig, ATTR_DIM};
+use shufflesort::sog::{run_pipeline, SorterKind};
+
+fn main() -> Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let (n, phases) = if full { (4096, 16384) } else { (1024, 8192) };
+    let side = (n as f64).sqrt() as usize;
+    let g = GridShape::new(side, side);
+
+    println!("=== Self-Organizing Gaussians end-to-end ({n} splats, {side}x{side} grid) ===");
+    let scene = GaussianScene::generate(&SceneConfig {
+        n_splats: n,
+        seed: 7,
+        ..Default::default()
+    });
+    let (norm, _) = scene.normalized();
+    println!(
+        "scene: {} attributes/splat, raw {} bytes, shuffled-order lag-1 corr {:.3}",
+        ATTR_DIM,
+        n * ATTR_DIM * 4,
+        mean_lag1_autocorr(&norm, ATTR_DIM, g)
+    );
+
+    let codec = CodecConfig::default(); // 8-bit, adaptive range coder
+
+    // Baseline 1: no sorting (what a raw export compresses to).
+    let shuffled = run_pipeline(&scene, g, SorterKind::Shuffled, &codec)?;
+    println!("{}", shuffled.summary());
+
+    // Baseline 2: heuristic sorting (original SOG uses a non-learned sorter).
+    let heuristic = run_pipeline(&scene, g, SorterKind::Heuristic, &codec)?;
+    println!("{}", heuristic.summary());
+
+    // The paper's contribution: gradient-based sorting with N parameters.
+    let rt = Runtime::from_manifest("artifacts")?;
+    let mut cfg = ShuffleSoftSortConfig::for_grid(side, side);
+    cfg.phases = phases;
+    cfg.record_curve = false; // keep memory flat on the long run
+    let learned = run_pipeline(&scene, g, SorterKind::Learned(&rt, cfg), &codec)?;
+    println!("{}", learned.summary());
+
+    println!("\n--- Fig. 6 reproduction summary ---");
+    for r in [&shuffled, &heuristic, &learned] {
+        println!(
+            "{:<12} ratio={:>5.2}x corr={:>6.3} psnr={:>5.1}dB",
+            r.label, r.ratio, r.spatial_corr, r.mean_psnr_db
+        );
+    }
+    let gain = shuffled.compressed_bytes as f64 / learned.compressed_bytes as f64;
+    println!(
+        "\nlearned sorting stores the same scene in {:.1}% of the shuffled-order size ({gain:.2}x denser)",
+        100.0 / gain
+    );
+    println!(
+        "memory for permutation learning: {} parameters (Gumbel-Sinkhorn would need {})",
+        n,
+        n * n
+    );
+    Ok(())
+}

@@ -1,0 +1,2 @@
+# Build-time compile package: L1 Pallas kernels, L2 JAX model/losses,
+# AOT lowering to HLO text. Never imported at request time.

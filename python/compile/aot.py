@@ -1,0 +1,141 @@
+"""AOT lowering: every ArtifactSpec → artifacts/<name>.hlo.txt + manifest.
+
+Interchange is **HLO text**, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (the version the
+published ``xla`` 0.1.6 crate links) rejects (``proto.id() <= INT_MAX``).
+The HLO text parser reassigns ids, so text round-trips cleanly.
+(See /opt/xla-example/README.md.)
+
+Run via ``make artifacts``:  ``cd python && python -m compile.aot --out ../artifacts``
+Python never runs on the Rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .shapes import ARTIFACTS, ArtifactSpec
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _io_entry(name, dtype, shape):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+def build_spec(spec: ArtifactSpec):
+    """Return (jitted_fn, example_args, input_descs, output_descs)."""
+    n, d, h, w, m = spec.n, spec.d, spec.h, spec.w, spec.m
+    sds = jax.ShapeDtypeStruct
+
+    if spec.method == "sss":
+        fn = model.make_sss_step(n, d, h, w, block=spec.block)
+        args = (sds((n,), F32), sds((n, d), F32), sds((n,), I32),
+                sds((), F32), sds((), F32))
+        ins = [_io_entry("w", "f32", (n,)), _io_entry("x_shuf", "f32", (n, d)),
+               _io_entry("inv_idx", "i32", (n,)), _io_entry("tau", "f32", ()),
+               _io_entry("norm", "f32", ())]
+        outs = [_io_entry("loss", "f32", ()), _io_entry("grad", "f32", (n,)),
+                _io_entry("sort_idx", "i32", (n,)),
+                _io_entry("colsum", "f32", (n,)), _io_entry("y", "f32", (n, d))]
+    elif spec.method == "gs":
+        fn = model.make_gs_step(n, d, h, w)
+        args = (sds((n, n), F32), sds((n, d), F32), sds((n, n), F32),
+                sds((), F32), sds((), F32))
+        ins = [_io_entry("logits", "f32", (n, n)), _io_entry("x", "f32", (n, d)),
+               _io_entry("gumbel", "f32", (n, n)), _io_entry("tau", "f32", ()),
+               _io_entry("norm", "f32", ())]
+        outs = [_io_entry("loss", "f32", ()), _io_entry("grad", "f32", (n, n)),
+                _io_entry("sort_idx", "i32", (n,)),
+                _io_entry("colsum", "f32", (n,))]
+    elif spec.method == "gs_probe":
+        fn = model.make_gs_probe(n)
+        args = (sds((n, n), F32), sds((n, n), F32), sds((), F32))
+        ins = [_io_entry("logits", "f32", (n, n)),
+               _io_entry("gumbel", "f32", (n, n)), _io_entry("tau", "f32", ())]
+        outs = [_io_entry("p", "f32", (n, n))]
+    elif spec.method == "kiss":
+        fn = model.make_kiss_step(n, m, d, h, w)
+        args = (sds((n, m), F32), sds((n, m), F32), sds((n, d), F32),
+                sds((), F32), sds((), F32))
+        ins = [_io_entry("v", "f32", (n, m)), _io_entry("w", "f32", (n, m)),
+               _io_entry("x", "f32", (n, d)), _io_entry("tau", "f32", ()),
+               _io_entry("norm", "f32", ())]
+        outs = [_io_entry("loss", "f32", ()),
+                _io_entry("grad_v", "f32", (n, m)),
+                _io_entry("grad_w", "f32", (n, m)),
+                _io_entry("sort_idx", "i32", (n,)),
+                _io_entry("colsum", "f32", (n,))]
+    else:
+        raise ValueError(spec.method)
+    return jax.jit(fn), args, ins, outs
+
+
+def lower_one(spec: ArtifactSpec, out_dir: str) -> dict:
+    fn, args, ins, outs = build_spec(spec)
+    t0 = time.time()
+    text = to_hlo_text(fn.lower(*args))
+    path = f"{spec.name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    dt = time.time() - t0
+    print(f"  {spec.name:34s} {len(text)/1e6:7.2f} MB text  {dt:6.1f}s",
+          flush=True)
+    return {
+        "name": spec.name, "method": spec.method, "file": path,
+        "n": spec.n, "d": spec.d, "h": spec.h, "w": spec.w, "m": spec.m,
+        "block": spec.block, "param_count": spec.param_count,
+        "inputs": ins, "outputs": outs,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name substrings to build")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    specs = ARTIFACTS
+    if args.only:
+        keys = args.only.split(",")
+        specs = [s for s in specs if any(k in s.name for k in keys)]
+
+    print(f"lowering {len(specs)} artifacts -> {args.out}", flush=True)
+    entries = []
+    for spec in specs:
+        entries.append(lower_one(spec, args.out))
+
+    manifest = {
+        "version": 1,
+        "jax_version": jax.__version__,
+        "interchange": "hlo-text",
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(entries)} entries")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+# L1: Pallas kernel(s) + oracles for the paper's compute hot-spot.
+from .softsort import softsort_apply_pallas, pick_block, vmem_bytes  # noqa: F401
+from .ref import (  # noqa: F401
+    softsort_matrix,
+    softsort_apply_ref,
+    softsort_apply_chunked,
+)

@@ -1,0 +1,123 @@
+"""Layer-1 Pallas kernel: fused SoftSort-apply.
+
+For weights ``w ∈ R^N``, data ``x ∈ R^{N×d}`` and temperature ``τ`` the
+SoftSort relaxation (Prillo & Eisenschlos, ICML 2020; eq. 1 of the paper) is
+
+    P = softmax_rows( -|sort_desc(w)_i - w_j| / τ )          (N×N)
+
+and the quantities the training step actually needs are
+
+    y        = P @ x                 soft-sorted data          (N×d)
+    sort_idx = argmax_rows(P)        hard permutation draft    (N,)
+    colsum   = Σ_i P_ij              for the L_s loss (eq. 3)  (N,)
+
+The kernel computes all three in ONE pass over a row-block grid without ever
+materializing the N×N matrix in HBM — the paper's "row-wise" memory
+requirement (§II) expressed as a BlockSpec schedule:
+
+  grid step i (of N/B):
+    VMEM in : ws block (B,), full w (N,), full x (N,d), τ (1,1)
+    compute : B×N block of P (block-local softmax — each block spans a full
+              row, so row max/sum need no cross-step state)
+    VMEM out: y tile (B,d), idx tile (B,), colsum accumulator (N,) shared
+              across steps (same output block every step).
+
+VMEM footprint ≈ 4·(B·N + N·d + B·d + 2N) bytes; with B=32 every shipped
+shape fits a 16 MB TPU VMEM budget (see DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the Rust runtime. Correctness vs the dense oracle in
+``kernels/ref.py`` is enforced by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..primitives import sort_desc
+
+DEFAULT_BLOCK = 32
+
+
+def _softsort_kernel(tau_ref, ws_ref, w_ref, x_ref, y_ref, idx_ref, cs_ref):
+    """One row-block of the fused SoftSort-apply (see module docstring)."""
+    i = pl.program_id(0)
+    tau = tau_ref[0, 0]
+    ws = ws_ref[...]                       # (B,)  sorted-descending block
+    w = w_ref[...]                         # (N,)  full weight vector
+
+    # B×N block of logits; one-pass block-local softmax (rows are complete).
+    logits = -jnp.abs(ws[:, None] - w[None, :]) / tau
+    m = jnp.max(logits, axis=1, keepdims=True)
+    p = jnp.exp(logits - m)
+    denom = jnp.sum(p, axis=1, keepdims=True)
+    prob = p / denom                       # (B,N) block of P
+
+    y_ref[...] = jnp.dot(prob, x_ref[...].astype(prob.dtype)).astype(y_ref.dtype)
+    idx_ref[...] = jnp.argmax(prob, axis=1).astype(jnp.int32)
+
+    # Column-sum accumulator: every grid step maps to the same output block.
+    @pl.when(i == 0)
+    def _init():
+        cs_ref[...] = jnp.zeros_like(cs_ref)
+
+    cs_ref[...] += jnp.sum(prob, axis=0).astype(cs_ref.dtype)
+
+
+def pick_block(n: int, requested: int = DEFAULT_BLOCK) -> int:
+    """Largest block size ≤ requested that divides n."""
+    b = min(requested, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def softsort_apply_pallas(w, x, tau, block: int = DEFAULT_BLOCK):
+    """Fused SoftSort-apply via the Pallas row-block kernel.
+
+    Args:
+      w:   f32[N] trainable weights.
+      x:   [N, d] data to be soft-sorted (f32 or bf16).
+      tau: f32[] temperature.
+      block: row-block size (static); must divide N after clamping.
+
+    Returns:
+      (y [N,d], sort_idx i32[N], colsum f32[N]).
+    """
+    n, d = x.shape
+    b = pick_block(n, block)
+    ws = sort_desc(w)
+    tau2 = jnp.reshape(tau, (1, 1)).astype(jnp.float32)
+    return pl.pallas_call(
+        _softsort_kernel,
+        grid=(n // b,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),    # tau
+            pl.BlockSpec((b,), lambda i: (i,)),        # ws block
+            pl.BlockSpec((n,), lambda i: (0,)),        # full w
+            pl.BlockSpec((n, d), lambda i: (0, 0)),    # full x
+        ],
+        out_specs=[
+            pl.BlockSpec((b, d), lambda i: (i, 0)),    # y tile
+            pl.BlockSpec((b,), lambda i: (i,)),        # idx tile
+            pl.BlockSpec((n,), lambda i: (0,)),        # colsum accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), x.dtype),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,   # CPU PJRT cannot run Mosaic custom-calls
+    )(tau2, ws, w, x)
+
+
+def vmem_bytes(n: int, d: int, block: int = DEFAULT_BLOCK) -> int:
+    """Estimated VMEM working set of one grid step (f32), for DESIGN §Perf."""
+    b = pick_block(n, block)
+    return 4 * (b * n + n * d + b * d + 2 * n + b + 1)

@@ -1,0 +1,71 @@
+"""Layer-2 loss functions (paper eq. 2–4).
+
+    L(P) = L_nbr(P) + λ_s · L_s(P) + λ_σ · L_σ(P),   λ_s = 1, λ_σ = 2
+
+* ``l_nbr``  — smoothness term: normalized mean L2 distance of horizontally
+  and vertically adjacent grid cells of the (reverse-shuffled) soft output.
+  Separable — needs only y, never the N×N matrix.
+* ``l_s``    — stochastic-constraint loss (eq. 3) on the column sums of P
+  (the row sums are exactly 1 by softmax construction).
+* ``l_sigma``— std-preservation loss (eq. 4): |σ_X − σ_Y| / σ_X over all
+  N·d entries; pushes P away from the uniform-averaging fixed point.
+
+The normalizer ``norm`` (dataset mean pairwise distance) is computed once by
+the Rust coordinator and passed as a scalar input, keeping the artifact free
+of any O(N²) work.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LAMBDA_S = 1.0
+LAMBDA_SIGMA = 2.0
+EPS = 1e-12
+
+
+def l_nbr(y_grid, norm, metric: str = "l2"):
+    """Normalized mean neighbor distance on an (H, W, d) grid.
+
+    Mean of d(y[h,w], y[h,w+1]) over horizontal pairs and vertical
+    analogues, divided by ``norm``. ``metric`` selects L2 (per-pair
+    Euclidean) or L1 (mean absolute channel difference — [2]'s "color
+    distance" formulation, gradient magnitude independent of the gap).
+    Works for H == 1 (pure 1-D chains, Fig. 3) — the vertical term vanishes.
+    """
+    h, w, _ = y_grid.shape
+
+    def pair_dist(diff):
+        if metric == "l1":
+            return jnp.sum(jnp.abs(diff), axis=-1)
+        return jnp.sqrt(jnp.sum(diff * diff, axis=-1) + EPS)
+
+    horiz = pair_dist(y_grid[:, 1:, :] - y_grid[:, :-1, :])
+    total = jnp.sum(horiz)
+    count = h * (w - 1)
+    if h > 1:
+        vert = pair_dist(y_grid[1:, :, :] - y_grid[:-1, :, :])
+        total = total + jnp.sum(vert)
+        count += (h - 1) * w
+    return total / (count * norm)
+
+
+def l_s(colsum):
+    """Stochastic-constraint loss (eq. 3): mean squared column-sum error."""
+    dev = colsum - 1.0
+    return jnp.mean(dev * dev)
+
+
+def l_sigma(x, y):
+    """Std-preservation loss (eq. 4) over all entries."""
+    sx = jnp.std(x)
+    sy = jnp.std(y)
+    return jnp.abs(sx - sy) / (sx + EPS)
+
+
+def combined(y_grid, colsum, x, y, norm,
+             lambda_s: float = LAMBDA_S, lambda_sigma: float = LAMBDA_SIGMA):
+    """Full eq. (2) objective."""
+    return (l_nbr(y_grid, norm)
+            + lambda_s * l_s(colsum)
+            + lambda_sigma * l_sigma(x, y))

@@ -1,0 +1,196 @@
+"""Layer-2 JAX model: one training-step function per permutation-learning
+method, all lowered AOT to HLO text and executed from Rust.
+
+Methods (paper §II):
+
+* ``make_sss_step``      — SoftSort / ShuffleSoftSort shared step. The
+  difference between the two methods is pure L3 policy (identity shuffle +
+  one phase vs. Algorithm 1's shuffled phases); the compute step is
+  identical. Forward goes through the L1 Pallas kernel via a custom_vjp
+  whose backward is the O(C·N)-memory chunked oracle.
+* ``make_gs_step`` / ``make_gs_probe`` — Gumbel-Sinkhorn baseline [11].
+  Gumbel noise is sampled Rust-side and passed in, keeping the artifact a
+  pure function. The probe artifact returns the dense P for the final
+  JV-based hard extraction (only ever called O(1) times).
+* ``make_kiss_step``     — "Kissing to Find a Match" low-rank baseline [4]:
+  P ≈ row-softmax(scale · V̂ Ŵᵀ / τ) with row-normalized V̂, Ŵ.
+
+Every step returns (loss, grads…, sort_idx, colsum[, y]); parameters live in
+Rust (the optimizer is Rust-side Adam), so steps are stateless.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import losses
+from .kernels.ref import softsort_apply_chunked, softsort_matrix
+from .kernels.softsort import softsort_apply_pallas
+from .primitives import float0_zeros, take0
+
+KISS_SCALE = 30.0
+SINKHORN_ITERS = 20
+
+
+# --------------------------------------------------------------------------
+# SoftSort-apply with Pallas forward and chunked backward.
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def softsort_apply(w, x, tau, block: int = 32):
+    """(y, sort_idx, colsum) — Pallas forward, memory-bounded backward."""
+    return softsort_apply_pallas(w, x, tau, block=block)
+
+
+def _ssa_fwd(w, x, tau, block):
+    return softsort_apply_pallas(w, x, tau, block=block), (w, x, tau)
+
+
+def _ssa_bwd(block, res, ct):
+    w, x, tau = res
+    ct_y, _ct_idx, ct_cs = ct     # sort_idx is integer → float0 cotangent
+
+    def f(w_, x_):
+        return softsort_apply_chunked(w_, x_, tau)
+
+    _, vjp = jax.vjp(f, w, x)
+    gw, gx = vjp((ct_y.astype(x.dtype), ct_cs))
+    return gw, gx, jnp.zeros((), dtype=tau.dtype)
+
+
+softsort_apply.defvjp(_ssa_fwd, _ssa_bwd)
+
+
+# --------------------------------------------------------------------------
+# ShuffleSoftSort / SoftSort step (Algorithm 1 inner iteration).
+# --------------------------------------------------------------------------
+
+def make_sss_step(n: int, d: int, h: int, w_grid: int, block: int = 32):
+    """Build the jittable step for an (N, d) problem on an H×W grid.
+
+    Inputs : w f32[N], x_shuf f32[N,d], inv_idx i32[N], tau f32[], norm f32[]
+    Outputs: loss f32[], grad f32[N], sort_idx i32[N], colsum f32[N], y f32[N,d]
+
+    ``inv_idx`` is the inverse of the phase's shuffle permutation; the loss
+    is evaluated on the reverse-shuffled soft output (Algorithm 1:
+    ``x_sort_soft[shuf_idx] = x_sort_soft``), implemented as the
+    grad-safe gather ``take0(y, inv_idx)``.
+    """
+    assert n == h * w_grid, f"grid {h}x{w_grid} != N={n}"
+
+    def step(w, x_shuf, inv_idx, tau, norm):
+        def loss_fn(w_):
+            y, sort_idx, colsum = softsort_apply(w_, x_shuf, tau, block)
+            y_grid = take0(y, inv_idx).reshape(h, w_grid, d)
+            loss = losses.combined(y_grid, colsum, x_shuf, y, norm)
+            return loss, (sort_idx, colsum, y)
+
+        (loss, (sort_idx, colsum, y)), grad = jax.value_and_grad(
+            loss_fn, has_aux=True)(w)
+        return loss, grad, sort_idx, colsum, y
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# Gumbel-Sinkhorn baseline.
+# --------------------------------------------------------------------------
+
+def _sinkhorn_log(log_alpha, iters: int = SINKHORN_ITERS):
+    """Log-space Sinkhorn normalization → (approximately) doubly stochastic.
+
+    Unrolled python loop: fixed small iteration count, grad-safe in this
+    jax build (fori_loop reverse-mode is fine too, but unrolling keeps the
+    HLO free of dynamic-slice gathers — see primitives.py).
+    """
+    for _ in range(iters):
+        log_alpha = log_alpha - jax.nn.logsumexp(log_alpha, axis=1, keepdims=True)
+        log_alpha = log_alpha - jax.nn.logsumexp(log_alpha, axis=0, keepdims=True)
+    return jnp.exp(log_alpha)
+
+
+def make_gs_step(n: int, d: int, h: int, w_grid: int):
+    """Gumbel-Sinkhorn training step.
+
+    Inputs : logits f32[N,N], x f32[N,d], gumbel f32[N,N], tau f32[], norm f32[]
+    Outputs: loss f32[], grad f32[N,N], sort_idx i32[N], colsum f32[N]
+    """
+    assert n == h * w_grid
+
+    def step(logits, x, gumbel, tau, norm):
+        def loss_fn(logits_):
+            p = _sinkhorn_log((logits_ + gumbel) / tau)
+            y = p @ x
+            y_grid = y.reshape(h, w_grid, d)
+            colsum = jnp.sum(p, axis=0)
+            # Sinkhorn already enforces stochasticity; keep the σ term as
+            # in [2]'s gradient-based layout objective.
+            loss = (losses.l_nbr(y_grid, norm)
+                    + losses.LAMBDA_SIGMA * losses.l_sigma(x, y))
+            return loss, (p, colsum)
+
+        (loss, (p, colsum)), grad = jax.value_and_grad(
+            loss_fn, has_aux=True)(logits)
+        sort_idx = jnp.argmax(p, axis=1).astype(jnp.int32)
+        return loss, grad, sort_idx, colsum
+
+    return step
+
+
+def make_gs_probe(n: int):
+    """Return the dense doubly-stochastic P for final (JV) extraction."""
+
+    def probe(logits, gumbel, tau):
+        return _sinkhorn_log((logits + gumbel) / tau)
+
+    return probe
+
+
+# --------------------------------------------------------------------------
+# Kissing-to-Find-a-Match baseline (low-rank factorization).
+# --------------------------------------------------------------------------
+
+def make_kiss_step(n: int, m: int, d: int, h: int, w_grid: int,
+                   scale: float = KISS_SCALE):
+    """Low-rank step: P ≈ row-softmax(scale · V̂ Ŵᵀ / τ), V̂, Ŵ row-normalized.
+
+    Inputs : v f32[N,M], wf f32[N,M], x f32[N,d], tau f32[], norm f32[]
+    Outputs: loss f32[], grad_v f32[N,M], grad_w f32[N,M],
+             sort_idx i32[N], colsum f32[N]
+    """
+    assert n == h * w_grid
+
+    def step(v, wf, x, tau, norm):
+        def loss_fn(params):
+            v_, w_ = params
+            vn = v_ / (jnp.linalg.norm(v_, axis=1, keepdims=True) + 1e-8)
+            wn = w_ / (jnp.linalg.norm(w_, axis=1, keepdims=True) + 1e-8)
+            p = jax.nn.softmax(scale * (vn @ wn.T) / tau, axis=1)
+            y = p @ x
+            y_grid = y.reshape(h, w_grid, d)
+            colsum = jnp.sum(p, axis=0)
+            loss = losses.combined(y_grid, colsum, x, y, norm)
+            return loss, (p, colsum)
+
+        (loss, (p, colsum)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)((v, wf))
+        sort_idx = jnp.argmax(p, axis=1).astype(jnp.int32)
+        return loss, grads[0], grads[1], sort_idx, colsum
+
+    return step
+
+
+# --------------------------------------------------------------------------
+# Eval-only forward (used by Rust for hardening/monitoring sweeps).
+# --------------------------------------------------------------------------
+
+def make_sss_eval(n: int, d: int, block: int = 32):
+    """Forward-only fused apply: (y, sort_idx, colsum)."""
+
+    def ev(w, x, tau):
+        return softsort_apply_pallas(w, x, tau, block=block)
+
+    return ev

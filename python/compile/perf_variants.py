@@ -1,0 +1,103 @@
+"""Perf-pass helper: lower sss_step variants with different Pallas row-block
+sizes and backward chunk sizes so the Rust side can measure per-step wall
+time and pick the production configuration (EXPERIMENTS.md §Perf).
+
+Usage: cd python && python -m compile.perf_variants --out ../artifacts_perf
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from . import model
+from .aot import _io_entry, to_hlo_text
+from .shapes import ArtifactSpec
+
+F32 = "f32"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts_perf")
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--d", type=int, default=3)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    n, d = args.n, args.d
+    h = int(n ** 0.5)
+
+    entries = []
+    for block in [16, 32, 64, 128, 256]:
+        for chunk in [64, 128, 256]:
+            # chunk is baked into softsort_apply's bwd via default; rebuild
+            # model fn with a patched chunk by closing over it.
+            import functools
+
+            from .kernels.ref import softsort_apply_chunked
+            from .kernels.softsort import softsort_apply_pallas
+
+            @functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+            def ssa(w, x, tau, blk=block):
+                return softsort_apply_pallas(w, x, tau, block=blk)
+
+            def _fwd(w, x, tau, blk=block):
+                return softsort_apply_pallas(w, x, tau, block=blk), (w, x, tau)
+
+            def _bwd(blk, res, ct, _chunk=chunk):
+                w, x, tau = res
+                ct_y, _ct_idx, ct_cs = ct
+
+                def f(w_, x_):
+                    return softsort_apply_chunked(w_, x_, tau, chunk=_chunk)
+
+                _, vjp = jax.vjp(f, w, x)
+                gw, gx = vjp((ct_y.astype(x.dtype), ct_cs))
+                import jax.numpy as jnp
+
+                return gw, gx, jnp.zeros((), dtype=tau.dtype)
+
+            ssa.defvjp(_fwd, _bwd)
+
+            orig = model.softsort_apply
+            model.softsort_apply = ssa
+            try:
+                fn = jax.jit(model.make_sss_step(n, d, h, n // h, block=block))
+            finally:
+                model.softsort_apply = orig
+
+            import jax.numpy as jnp
+
+            sds = jax.ShapeDtypeStruct
+            lowered = fn.lower(
+                sds((n,), jnp.float32), sds((n, d), jnp.float32),
+                sds((n,), jnp.int32), sds((), jnp.float32), sds((), jnp.float32),
+            )
+            name = f"sss_step_b{block}_c{chunk}_n{n}_d{d}"
+            with open(os.path.join(args.out, f"{name}.hlo.txt"), "w") as f:
+                f.write(to_hlo_text(lowered))
+            spec = ArtifactSpec("sss", n, d, h, n // h, block=block)
+            entries.append({
+                "name": name, "method": "sss", "file": f"{name}.hlo.txt",
+                "n": n, "d": d, "h": h, "w": n // h, "m": 0, "block": block,
+                "param_count": n,
+                "inputs": [_io_entry("w", F32, (n,)), _io_entry("x_shuf", F32, (n, d)),
+                           _io_entry("inv_idx", "i32", (n,)), _io_entry("tau", F32, ()),
+                           _io_entry("norm", F32, ())],
+                "outputs": [_io_entry("loss", F32, ()), _io_entry("grad", F32, (n,)),
+                            _io_entry("sort_idx", "i32", (n,)),
+                            _io_entry("colsum", F32, (n,)), _io_entry("y", F32, (n, d))],
+            })
+            print(f"  {name}", flush=True)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"version": 1, "jax_version": jax.__version__,
+                   "interchange": "hlo-text", "artifacts": entries}, f, indent=1)
+    print(f"wrote {len(entries)} perf variants -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

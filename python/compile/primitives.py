@@ -1,0 +1,71 @@
+"""Differentiable gather/sort primitives with explicit VJPs.
+
+The image's jax install is a patched hybrid: ``GatherDimensionNumbers``
+lacks ``operand_batching_dims`` while the gather transpose rule passes it,
+so *any* reverse-mode gradient through gather/take/sort raises ``TypeError``.
+Every gather that appears on a differentiated path must therefore go through
+the ``custom_vjp`` wrappers below, whose backward passes are scatter-adds
+(scatter construction is unaffected by the bug).
+
+Forward-only gathers (argmax extraction, shuffling done outside the grad
+path) may use plain indexing.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def float0_zeros(shape):
+    """Zero cotangent for integer-dtype primal arguments."""
+    return np.zeros(shape, dtype=jax.dtypes.float0)
+
+
+# --------------------------------------------------------------------------
+# take0: x[idx] along axis 0, differentiable w.r.t. x.
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def take0(x, idx):
+    """Gather rows of ``x`` (any trailing shape) at ``idx`` (1-D int array)."""
+    return x[idx]
+
+
+def _take0_fwd(x, idx):
+    return x[idx], (idx, x.shape)
+
+
+def _take0_bwd(res, ct):
+    idx, shape = res
+    gx = jnp.zeros(shape, ct.dtype).at[idx].add(ct)
+    return gx, float0_zeros(idx.shape)
+
+
+take0.defvjp(_take0_fwd, _take0_bwd)
+
+
+# --------------------------------------------------------------------------
+# sort_desc: descending sort, differentiable (gradient is the inverse
+# permutation scatter — sort is differentiable a.e.).
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def sort_desc(w):
+    """Sort a 1-D vector in descending order."""
+    return -jnp.sort(-w)
+
+
+def _sort_desc_fwd(w):
+    idx = jnp.argsort(-w)
+    return w[idx], (idx, w.shape)
+
+
+def _sort_desc_bwd(res, ct):
+    idx, shape = res
+    gw = jnp.zeros(shape, ct.dtype).at[idx].add(ct)
+    return (gw,)
+
+
+sort_desc.defvjp(_sort_desc_fwd, _sort_desc_bwd)

@@ -1,0 +1,94 @@
+"""Artifact registry: every (method, shape) combination shipped to Rust.
+
+HLO is shape-static, so each problem size is its own artifact. The set below
+covers every experiment in DESIGN.md §4; the Rust runtime discovers them via
+``artifacts/manifest.json``.
+
+Kissing rank M follows [4]'s kissing-number rule (kissing_number(M) ≥ N);
+the paper's Table 2 entry 2·1024·13 = 26624 pins M(1024) = 13.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+# (max N covered, M) — classic kissing numbers K(M):
+# K(8)=240, K(9)=306, K(10)=500, K(11)=582, K(12)=840, K(13)=1154, K(16)=4320
+_KISSING_TABLE: List[Tuple[int, int]] = [
+    (240, 8), (306, 9), (500, 10), (582, 11), (840, 12), (1154, 13), (4320, 16),
+]
+
+
+def kissing_rank(n: int) -> int:
+    """Smallest M from the table with kissing_number(M) ≥ N."""
+    for max_n, m in _KISSING_TABLE:
+        if n <= max_n:
+            return m
+    raise ValueError(f"no tabulated kissing rank covers N={n}")
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    method: str              # "sss" | "gs" | "gs_probe" | "kiss"
+    n: int
+    d: int
+    h: int
+    w: int
+    m: int = 0               # kissing rank (kiss only)
+    block: int = 32          # pallas row-block (sss only)
+
+    @property
+    def name(self) -> str:
+        if self.method == "kiss":
+            return f"kiss_step_n{self.n}_m{self.m}_d{self.d}"
+        if self.method == "gs_probe":
+            return f"gs_probe_n{self.n}"
+        return f"{self.method}_step_n{self.n}_d{self.d}_h{self.h}"
+
+    @property
+    def param_count(self) -> int:
+        return {"sss": self.n, "gs": self.n * self.n,
+                "gs_probe": self.n * self.n,
+                "kiss": 2 * self.n * self.m}[self.method]
+
+
+def _sss(n, d, h, w, block=32):
+    return ArtifactSpec("sss", n, d, h, w, block=block)
+
+
+def _gs(n, d, h, w):
+    return ArtifactSpec("gs", n, d, h, w)
+
+
+def _gsp(n):
+    return ArtifactSpec("gs_probe", n, 0, 0, 0)
+
+
+def _kiss(n, d, h, w):
+    return ArtifactSpec("kiss", n, d, h, w, m=kissing_rank(n))
+
+
+ARTIFACTS: List[ArtifactSpec] = [
+    # --- ShuffleSoftSort / SoftSort (shared step) -------------------------
+    _sss(16, 3, 1, 16, block=8),    # Fig. 3 1-D toy
+    _sss(64, 3, 1, 64),             # 1-D chain, integration tests
+    _sss(64, 3, 8, 8),              # small grid, integration tests
+    _sss(256, 3, 16, 16),           # quickstart
+    _sss(1024, 3, 32, 32),          # Table 2 / Fig. 1 headline
+    _sss(4096, 3, 64, 64),          # scaling
+    _sss(256, 50, 16, 16),          # Fig. 5 features (small)
+    _sss(1024, 50, 32, 32),         # Fig. 5 features
+    _sss(1024, 14, 32, 32),         # SOG attributes (small)
+    _sss(4096, 14, 64, 64),         # SOG attributes (end-to-end example)
+    # --- Gumbel-Sinkhorn ---------------------------------------------------
+    _gs(64, 3, 8, 8),
+    _gs(256, 3, 16, 16),
+    _gs(1024, 3, 32, 32),
+    _gsp(64), _gsp(256), _gsp(1024),
+    # --- Kissing ------------------------------------------------------------
+    _kiss(64, 3, 8, 8),
+    _kiss(256, 3, 16, 16),
+    _kiss(1024, 3, 32, 32),
+    _kiss(4096, 3, 64, 64),
+]

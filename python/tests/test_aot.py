@@ -1,0 +1,68 @@
+"""AOT layer: spec registry, HLO text emission, manifest schema."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.shapes import ARTIFACTS, ArtifactSpec, kissing_rank
+
+
+def test_kissing_rank_matches_paper():
+    # Table 2: Kissing memory 2*1024*M = 26624 → M = 13.
+    assert kissing_rank(1024) == 13
+    assert 2 * 1024 * kissing_rank(1024) == 26624
+    assert kissing_rank(64) == 8
+    assert kissing_rank(4096) == 16
+    with pytest.raises(ValueError):
+        kissing_rank(100_000)
+
+
+def test_artifact_names_unique_and_grids_consistent():
+    names = [s.name for s in ARTIFACTS]
+    assert len(names) == len(set(names))
+    for s in ARTIFACTS:
+        if s.method in ("sss", "gs", "kiss"):
+            assert s.n == s.h * s.w, s.name
+
+
+def test_param_counts():
+    by = {s.name: s for s in ARTIFACTS}
+    assert by["sss_step_n1024_d3_h32"].param_count == 1024
+    assert by["gs_step_n1024_d3_h32"].param_count == 1024 * 1024
+    assert by["kiss_step_n1024_m13_d3"].param_count == 26624
+
+
+def test_hlo_text_emission_smoke():
+    spec = ArtifactSpec("sss", 16, 3, 4, 4, block=8)
+    fn, args, ins, outs = aot.build_spec(spec)
+    text = aot.to_hlo_text(fn.lower(*args))
+    assert text.startswith("HloModule")
+    assert "custom-call" not in text.lower(), \
+        "interpret=True must lower pallas to plain HLO (no Mosaic custom-call)"
+    assert len(ins) == 5 and len(outs) == 5
+
+
+def test_built_manifest_schema():
+    """If make artifacts ran, validate the manifest against the registry."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        man = json.load(f)
+    assert man["interchange"] == "hlo-text"
+    entries = {e["name"]: e for e in man["artifacts"]}
+    for s in ARTIFACTS:
+        assert s.name in entries, f"missing artifact {s.name}"
+        e = entries[s.name]
+        assert e["param_count"] == s.param_count
+        hlo = os.path.join(os.path.dirname(path), e["file"])
+        assert os.path.exists(hlo)
+        with open(hlo) as fh:
+            assert fh.read(9) == "HloModule"
+        for io in e["inputs"] + e["outputs"]:
+            assert io["dtype"] in ("f32", "i32")

@@ -1,0 +1,123 @@
+"""L1 correctness: Pallas fused SoftSort-apply vs the dense jnp oracle.
+
+Hypothesis sweeps shapes, temperatures, block sizes and dtypes — the CORE
+correctness signal for the kernel that every artifact embeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    softsort_apply_chunked,
+    softsort_apply_ref,
+    softsort_matrix,
+)
+from compile.kernels.softsort import pick_block, softsort_apply_pallas, vmem_bytes
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(n, d, seed, scale=3.0):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    x = jnp.asarray(rng.uniform(size=(n, d)), jnp.float32)
+    return w, x
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([8, 16, 24, 32, 48, 64, 96]),
+    d=st.integers(1, 8),
+    tau=st.sampled_from([0.05, 0.2, 1.0, 4.0]),
+    block=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 10_000),
+)
+def test_kernel_matches_dense_ref(n, d, tau, block, seed):
+    w, x = _rand(n, d, seed)
+    t = jnp.float32(tau)
+    y1, i1, c1 = softsort_apply_pallas(w, x, t, block=block)
+    y2, i2, c2 = softsort_apply_ref(w, x, t)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([16, 64, 128]),
+    d=st.integers(1, 6),
+    tau=st.sampled_from([0.1, 0.7, 2.0]),
+    chunk=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_chunked_matches_dense_ref(n, d, tau, chunk, seed):
+    w, x = _rand(n, d, seed)
+    t = jnp.float32(tau)
+    y1, c1 = softsort_apply_chunked(w, x, t, chunk=chunk)
+    y2, _, c2 = softsort_apply_ref(w, x, t)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_bf16_tolerance():
+    w, x = _rand(64, 4, 7)
+    xb = x.astype(jnp.bfloat16)
+    y1, i1, c1 = softsort_apply_pallas(w, xb, jnp.float32(0.5))
+    y2, i2, c2 = softsort_apply_ref(w, x, jnp.float32(0.5))
+    assert y1.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(y1, np.float32), np.asarray(y2),
+                               rtol=3e-2, atol=3e-2)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_low_tau_is_hard_permutation():
+    """τ → 0: P must converge to the exact argsort permutation matrix."""
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.permutation(32).astype(np.float32))
+    x = jnp.asarray(rng.uniform(size=(32, 3)), jnp.float32)
+    y, idx, cs = softsort_apply_pallas(w, x, jnp.float32(0.01))
+    expect = np.argsort(-np.asarray(w), kind="stable")
+    np.testing.assert_array_equal(np.asarray(idx), expect)
+    np.testing.assert_allclose(np.asarray(cs), np.ones(32), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x)[expect], atol=1e-3)
+
+
+def test_rows_sum_to_one():
+    w, x = _rand(48, 2, 11)
+    p = softsort_matrix(w, jnp.float32(0.8))
+    np.testing.assert_allclose(np.asarray(p.sum(axis=1)), np.ones(48), atol=1e-5)
+    np.testing.assert_allclose(float(p.sum()), 48.0, rtol=1e-5)
+
+
+def test_linear_init_conventions():
+    """Order-preserving init (Algorithm 1: "initially preserves the previous
+    order") is the DESCENDING ramp under eq. (1)'s descending-sort convention;
+    the ascending ramp reverses. The Rust coordinator inits descending."""
+    n = 40
+    x = jnp.asarray(np.random.default_rng(5).uniform(size=(n, 3)), jnp.float32)
+    asc = jnp.arange(n, dtype=jnp.float32)
+    _, idx_asc, _ = softsort_apply_pallas(asc, x, jnp.float32(0.05))
+    np.testing.assert_array_equal(np.asarray(idx_asc), np.arange(n)[::-1])
+    desc = jnp.arange(n, 0, -1, dtype=jnp.float32)
+    _, idx_desc, _ = softsort_apply_pallas(desc, x, jnp.float32(0.05))
+    np.testing.assert_array_equal(np.asarray(idx_desc), np.arange(n))
+
+
+def test_pick_block():
+    assert pick_block(64, 32) == 32
+    assert pick_block(16, 32) == 16
+    assert pick_block(48, 32) == 24
+    assert pick_block(7, 32) == 7
+    for n in [8, 12, 100, 1024]:
+        assert n % pick_block(n, 32) == 0
+
+
+def test_vmem_budget_for_shipped_shapes():
+    """Every shipped artifact shape must fit a 16 MB VMEM budget (DESIGN §9)."""
+    from compile.shapes import ARTIFACTS
+    for s in ARTIFACTS:
+        if s.method == "sss":
+            assert vmem_bytes(s.n, s.d, s.block) <= 16 * 2**20, s.name

@@ -1,0 +1,64 @@
+"""Loss components (eq. 2–4) against hand-computed values."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import losses
+
+
+def test_l_nbr_constant_grid_is_zero():
+    y = jnp.ones((4, 4, 3)) * 0.7
+    assert float(losses.l_nbr(y, jnp.float32(1.0))) < 1e-5
+
+
+def test_l_nbr_hand_computed_1d():
+    # chain [0, 1, 3]: neighbor distances 1 and 2 → mean 1.5; norm=0.5 → 3.0
+    y = jnp.array([[[0.0], [1.0], [3.0]]])
+    got = float(losses.l_nbr(y, jnp.float32(0.5)))
+    assert got == pytest.approx(3.0, abs=1e-4)
+
+
+def test_l_nbr_hand_computed_2d():
+    # 2x2 grid, scalar features [[0,1],[2,4]]:
+    # horiz: |0-1|=1, |2-4|=2 ; vert: |0-2|=2, |1-4|=3 ; mean = 8/4 = 2
+    y = jnp.array([[[0.0], [1.0]], [[2.0], [4.0]]])
+    got = float(losses.l_nbr(y, jnp.float32(1.0)))
+    assert got == pytest.approx(2.0, abs=1e-4)
+
+
+def test_l_nbr_uses_l2_over_feature_dim():
+    # single horizontal pair with diff (3,4) → distance 5
+    y = jnp.array([[[0.0, 0.0], [3.0, 4.0]]])
+    got = float(losses.l_nbr(y, jnp.float32(1.0)))
+    assert got == pytest.approx(5.0, abs=1e-4)
+
+
+def test_l_s_perfect_and_off():
+    assert float(losses.l_s(jnp.ones(10))) == pytest.approx(0.0, abs=1e-8)
+    # colsum [2,0]: ((1)^2 + (-1)^2)/2 = 1
+    assert float(losses.l_s(jnp.array([2.0, 0.0]))) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_l_sigma_zero_for_same_std():
+    x = jnp.array([[0.0], [1.0], [2.0]])
+    assert float(losses.l_sigma(x, x + 5.0)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_l_sigma_collapse_penalized():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(32, 4)), jnp.float32)
+    y = jnp.zeros_like(x)  # fully averaged output
+    assert float(losses.l_sigma(x, y)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_combined_weights():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(16, 2)), jnp.float32)
+    y = x * 0.5
+    yg = y.reshape(4, 4, 2)
+    cs = jnp.full(16, 1.25)
+    norm = jnp.float32(2.0)
+    expect = (float(losses.l_nbr(yg, norm))
+              + 1.0 * float(losses.l_s(cs))
+              + 2.0 * float(losses.l_sigma(x, y)))
+    assert float(losses.combined(yg, cs, x, y, norm)) == pytest.approx(expect, rel=1e-5)

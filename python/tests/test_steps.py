@@ -1,0 +1,157 @@
+"""Step functions: gradient correctness (finite differences), backward-path
+memory discipline, and a short end-to-end optimization sanity run per method.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import losses, model
+from compile.kernels.ref import softsort_apply_ref
+from compile.primitives import take0
+
+N, D, H, W = 16, 3, 4, 4
+
+
+def _data(seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(size=(N, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(N,)).astype(np.float32) * 2)
+    inv = jnp.asarray(rng.permutation(N).astype(np.int32))
+    return w, x, inv
+
+
+def _dense_loss(w, x, inv, tau, norm):
+    """Same objective as make_sss_step but via the dense oracle only."""
+    y, _, cs = softsort_apply_ref(w, x, tau)
+    yg = take0(y, inv).reshape(H, W, D)
+    return losses.combined(yg, cs, x, y, norm)
+
+
+def test_sss_step_loss_matches_dense():
+    w, x, inv = _data()
+    tau, norm = jnp.float32(0.7), jnp.float32(0.4)
+    step = jax.jit(model.make_sss_step(N, D, H, W, block=8))
+    loss, grad, idx, cs, y = step(w, x, inv, tau, norm)
+    expect = _dense_loss(w, x, inv, tau, norm)
+    assert float(loss) == pytest.approx(float(expect), rel=1e-4)
+
+
+def test_sss_step_grad_matches_dense_autodiff():
+    w, x, inv = _data(2)
+    tau, norm = jnp.float32(0.5), jnp.float32(0.4)
+    step = jax.jit(model.make_sss_step(N, D, H, W, block=8))
+    _, grad, *_ = step(w, x, inv, tau, norm)
+    gref = jax.grad(lambda w_: _dense_loss(w_, x, inv, tau, norm))(w)
+    np.testing.assert_allclose(np.asarray(grad), np.asarray(gref),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_sss_step_grad_matches_finite_differences():
+    w, x, inv = _data(3)
+    tau, norm = jnp.float32(1.0), jnp.float32(0.4)
+    step = jax.jit(model.make_sss_step(N, D, H, W, block=8))
+    _, grad, *_ = step(w, x, inv, tau, norm)
+    eps = 1e-2
+    wn = np.asarray(w, np.float64)
+    # The objective is piecewise-smooth in w (kinks where the argsort order
+    # flips); only probe coordinates whose ±eps ball stays on one piece.
+    gaps = np.abs(wn[:, None] - wn[None, :]) + np.eye(N) * 1e9
+    smooth = [i for i in range(N) if gaps[i].min() > 4 * eps]
+    assert len(smooth) >= 4
+    for i in smooth[:6]:
+        wp, wm = wn.copy(), wn.copy()
+        wp[i] += eps; wm[i] -= eps
+        lp = float(step(jnp.asarray(wp, jnp.float32), x, inv, tau, norm)[0])
+        lm = float(step(jnp.asarray(wm, jnp.float32), x, inv, tau, norm)[0])
+        fd = (lp - lm) / (2 * eps)
+        assert float(grad[i]) == pytest.approx(fd, rel=0.1, abs=2e-3)
+
+
+def test_sss_optimization_reduces_loss_and_hardens():
+    """A few Adam-free GD steps must reduce loss; τ→0 must yield a valid perm."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.uniform(size=(N, D)), jnp.float32)
+    inv = jnp.arange(N, dtype=jnp.int32)
+    norm = jnp.float32(np.sqrt(D / 6.0))
+    step = jax.jit(model.make_sss_step(N, D, H, W, block=8))
+    w = jnp.arange(N, 0, -1, dtype=jnp.float32)  # order-preserving init
+    first = None
+    for it in range(30):
+        tau = jnp.float32(1.0 * (0.1 ** (it / 29)))
+        loss, grad, idx, cs, y = step(w, x, inv, tau, norm)
+        if first is None:
+            first = float(loss)
+        w = w - 5.0 * grad
+    assert float(loss) < first
+    # Hard extraction at the final low temperature:
+    _, _, idx, _, _ = step(w, x, inv, jnp.float32(0.02), norm)
+    assert sorted(np.asarray(idx).tolist()) == list(range(N))
+
+
+def test_gs_step_grad_finite_differences():
+    rng = np.random.default_rng(5)
+    n, d, h, wg = 9, 2, 3, 3
+    step = jax.jit(model.make_gs_step(n, d, h, wg))
+    logits = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32))
+    x = jnp.asarray(rng.uniform(size=(n, d)), jnp.float32)
+    gum = jnp.zeros((n, n), jnp.float32)
+    tau, norm = jnp.float32(0.8), jnp.float32(0.5)
+    loss, grad, idx, cs = step(logits, x, gum, tau, norm)
+    eps = 1e-2
+    ln = np.asarray(logits, np.float64)
+    for (i, j) in [(0, 0), (4, 7), (8, 2)]:
+        lp, lm = ln.copy(), ln.copy()
+        lp[i, j] += eps; lm[i, j] -= eps
+        fp = float(step(jnp.asarray(lp, jnp.float32), x, gum, tau, norm)[0])
+        fm = float(step(jnp.asarray(lm, jnp.float32), x, gum, tau, norm)[0])
+        fd = (fp - fm) / (2 * eps)
+        assert float(grad[i, j]) == pytest.approx(fd, rel=0.1, abs=2e-3)
+
+
+def test_gs_probe_doubly_stochastic():
+    rng = np.random.default_rng(6)
+    n = 16
+    probe = jax.jit(model.make_gs_probe(n))
+    logits = jnp.asarray(rng.normal(size=(n, n)).astype(np.float32) * 2)
+    p = probe(logits, jnp.zeros((n, n), jnp.float32), jnp.float32(0.5))
+    # 20 Sinkhorn sweeps: row sums exact (last normalization is per-column,
+    # so allow a few % residual on the other axis).
+    np.testing.assert_allclose(np.asarray(p.sum(0)), np.ones(n), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(p.sum(1)), np.ones(n), atol=5e-2)
+    assert float(p.min()) >= 0.0
+
+
+def test_kiss_step_grad_finite_differences():
+    rng = np.random.default_rng(7)
+    n, m, d, h, wg = 16, 5, 2, 4, 4
+    step = jax.jit(model.make_kiss_step(n, m, d, h, wg))
+    v = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    wf = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    x = jnp.asarray(rng.uniform(size=(n, d)), jnp.float32)
+    tau, norm = jnp.float32(1.0), jnp.float32(0.5)
+    loss, gv, gw, idx, cs = step(v, wf, x, tau, norm)
+    eps = 1e-2
+    vn = np.asarray(v, np.float64)
+    for (i, j) in [(0, 0), (7, 3), (15, 4)]:
+        vp, vm = vn.copy(), vn.copy()
+        vp[i, j] += eps; vm[i, j] -= eps
+        fp = float(step(jnp.asarray(vp, jnp.float32), wf, x, tau, norm)[0])
+        fm = float(step(jnp.asarray(vm, jnp.float32), wf, x, tau, norm)[0])
+        fd = (fp - fm) / (2 * eps)
+        assert float(gv[i, j]) == pytest.approx(fd, rel=0.12, abs=3e-3)
+
+
+def test_kiss_rows_normalized_invariance():
+    """Scaling a row of V must not change the loss (row normalization)."""
+    rng = np.random.default_rng(8)
+    n, m, d, h, wg = 16, 5, 2, 4, 4
+    step = jax.jit(model.make_kiss_step(n, m, d, h, wg))
+    v = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    wf = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    x = jnp.asarray(rng.uniform(size=(n, d)), jnp.float32)
+    l1 = float(step(v, wf, x, jnp.float32(1.0), jnp.float32(0.5))[0])
+    v2 = v.at[3].multiply(7.0)
+    l2 = float(step(v2, wf, x, jnp.float32(1.0), jnp.float32(0.5))[0])
+    assert l1 == pytest.approx(l2, rel=1e-4)

@@ -1,0 +1,61 @@
+//! Shared helpers for the paper-reproduction benches.
+
+use shufflesort::config::{BaselineConfig, ShuffleSoftSortConfig};
+use shufflesort::coordinator::baselines::{
+    GumbelSinkhornDriver, KissingDriver, SoftSortDriver,
+};
+use shufflesort::coordinator::{ShuffleSoftSort, SortOutcome};
+use shufflesort::data::Dataset;
+use shufflesort::runtime::Runtime;
+
+/// Headline grid: 16×16 in quick mode, the paper's 32×32 with `--full`.
+pub fn headline_side() -> usize {
+    if shufflesort::bench::quick_mode() {
+        16
+    } else {
+        32
+    }
+}
+
+pub fn runtime() -> Runtime {
+    Runtime::from_manifest("artifacts").expect("run `make artifacts` first")
+}
+
+/// Budgets chosen so each method gets a comparable optimization effort at
+/// the bench's scale (quick mode shrinks them 4x).
+pub fn sss_config(side: usize) -> ShuffleSoftSortConfig {
+    let mut cfg = ShuffleSoftSortConfig::for_grid(side, side);
+    if shufflesort::bench::quick_mode() {
+        cfg.phases = (cfg.phases / 4).max(512);
+    }
+    cfg.record_curve = false;
+    cfg
+}
+
+pub fn softsort_config(side: usize) -> BaselineConfig {
+    let mut cfg = BaselineConfig::for_grid(side, side);
+    cfg.steps = sss_config(side).phases * sss_config(side).inner_iters;
+    cfg
+}
+
+pub fn gs_config(side: usize) -> BaselineConfig {
+    let mut cfg = BaselineConfig::for_gs(side, side);
+    cfg.steps = if shufflesort::bench::quick_mode() { 1024 } else { 3072 };
+    cfg
+}
+
+pub fn kiss_config(side: usize) -> BaselineConfig {
+    let mut cfg = BaselineConfig::for_grid(side, side);
+    cfg.steps = if shufflesort::bench::quick_mode() { 1024 } else { 3072 };
+    cfg
+}
+
+pub fn run_method(rt: &Runtime, name: &str, ds: &Dataset, side: usize) -> SortOutcome {
+    match name {
+        "sss" => ShuffleSoftSort::new(rt, sss_config(side)).unwrap().sort(ds).unwrap(),
+        "softsort" => SoftSortDriver::new(rt, softsort_config(side)).sort(ds).unwrap(),
+        "gs" => GumbelSinkhornDriver::new(rt, gs_config(side)).sort(ds).unwrap(),
+        "kiss" => KissingDriver::new(rt, kiss_config(side)).sort(ds).unwrap(),
+        _ => panic!("unknown method {name}"),
+    }
+}

@@ -1,0 +1,48 @@
+//! E3 — Fig. 1: 1024 random RGB colors sorted by SoftSort (left) vs
+//! ShuffleSoftSort (right). Regenerates the two grid images as PPM files
+//! and reports the quantitative gap the figure illustrates.
+
+mod common;
+
+use shufflesort::bench::banner;
+use shufflesort::data::random_colors;
+use shufflesort::grid::GridShape;
+use shufflesort::metrics::mean_neighbor_distance;
+use shufflesort::util::ppm;
+
+fn main() {
+    let side = common::headline_side();
+    let n = side * side;
+    banner("E3/fig1", &format!("{n} RGB colors: SoftSort vs ShuffleSoftSort grids"));
+    let rt = common::runtime();
+    let ds = random_colors(n, 42);
+    let g = GridShape::new(side, side);
+    std::fs::create_dir_all("out").unwrap();
+
+    ppm::write_ppm_upscaled(
+        std::path::Path::new("out/fig1_unsorted.ppm"),
+        &ds.rows,
+        side,
+        side,
+        8,
+    )
+    .unwrap();
+
+    for (key, label, file) in [
+        ("softsort", "SoftSort", "out/fig1_softsort.ppm"),
+        ("sss", "ShuffleSoftSort", "out/fig1_shufflesoftsort.ppm"),
+    ] {
+        let out = common::run_method(&rt, key, &ds, side);
+        ppm::write_ppm_upscaled(std::path::Path::new(file), &out.arranged, side, side, 8)
+            .unwrap();
+        println!(
+            "{label:<16} dpq16={:.3} nbr={:.4} -> {file}",
+            out.report.final_dpq,
+            mean_neighbor_distance(&out.arranged, 3, g)
+        );
+    }
+    println!(
+        "\nexpected shape (Fig. 1): ShuffleSoftSort image shows coherent color patches;\n\
+         SoftSort only a rough 1-D-ish gradient; dpq gap ≳ 0.2."
+    );
+}

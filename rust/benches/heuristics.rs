@@ -1,0 +1,61 @@
+//! E9 — §I-B context: the heuristic grid-layout family (SOM, SSM,
+//! LAS/FLAS, DR+LAP) vs the learned methods, same workload and metric.
+//! The paper's [2]-line claim: gradient-based layouts reach (and can pass)
+//! heuristic quality; ShuffleSoftSort does it with N parameters.
+
+mod common;
+
+use shufflesort::bench::{banner, Table};
+use shufflesort::data::random_colors;
+use shufflesort::dimred::DrLap;
+use shufflesort::grid::GridShape;
+use shufflesort::heuristics::{flas::Flas, som::Som, ssm::Ssm, GridSorter};
+use shufflesort::metrics::dpq16;
+use shufflesort::util::timer::Stopwatch;
+
+fn main() {
+    let side = common::headline_side();
+    let n = side * side;
+    banner("E9/heuristics", &format!("{n} colors: heuristics vs learned"));
+    let rt = common::runtime();
+    let ds = random_colors(n, 42);
+    let g = GridShape::new(side, side);
+
+    let mut table = Table::new(&["Method", "Kind", "DPQ16", "secs"]);
+    table.row(&["unsorted".into(), "-".into(), format!("{:.3}", dpq16(&ds.rows, 3, g)), "-".into()]);
+
+    let sorters: Vec<Box<dyn GridSorter>> = vec![
+        Box::new(Som::default()),
+        Box::new(Ssm::default()),
+        Box::new(Flas::default()),
+        Box::new(Flas::las(24)),
+        Box::new(DrLap { use_tsne: false }),
+        Box::new(DrLap { use_tsne: true }),
+    ];
+    for s in sorters {
+        let t = Stopwatch::start();
+        let p = s.sort(&ds.rows, 3, g, 7);
+        let secs = t.secs();
+        table.row(&[
+            s.name().into(),
+            "heuristic".into(),
+            format!("{:.3}", dpq16(&p.apply_rows(&ds.rows, 3), 3, g)),
+            format!("{secs:.1}"),
+        ]);
+    }
+
+    for (key, label) in [("sss", "ShuffleSoftSort"), ("softsort", "SoftSort")] {
+        let out = common::run_method(&rt, key, &ds, side);
+        table.row(&[
+            label.into(),
+            "learned (N params)".into(),
+            format!("{:.3}", out.report.final_dpq),
+            format!("{:.1}", out.report.wall_secs),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nexpected shape: LAS/FLAS/SOM strong; SSM/DR+LAP weaker; ShuffleSoftSort in the\n\
+         strong band and far above plain SoftSort."
+    );
+}

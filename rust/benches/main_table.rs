@@ -1,0 +1,58 @@
+//! E2 — the paper's §III evaluation table on random RGB colors:
+//!
+//! | Method          | Memory ↓ | Runtime [s] ↓ | Quality (DPQ16) ↑ |
+//! | Gumbel-Sinkhorn | 1048576  | 226.8         | 0.913             |
+//! | Kissing         | 26624    | 114.4         | -* (invalid)      |
+//! | SoftSort        | 1024     | 110.7         | 0.698             |
+//! | ShuffleSoftSort | 1024     | 98.0          | 0.892             |
+//!
+//! Absolute runtimes are testbed-relative (the paper used an M1 Max; this
+//! runs single-core CPU PJRT). What must reproduce (DESIGN.md §4): the
+//! memory column exactly; ShuffleSoftSort ≈ Gumbel-Sinkhorn quality with
+//! both well above SoftSort; Kissing unstable; ShuffleSoftSort cheapest
+//! per unit of quality.
+
+mod common;
+
+use shufflesort::bench::{banner, Table};
+use shufflesort::data::random_colors;
+
+fn main() {
+    let side = common::headline_side();
+    let n = side * side;
+    banner("E2/main-table", &format!("{n} random RGB colors on {side}x{side}"));
+    let rt = common::runtime();
+    let ds = random_colors(n, 42);
+
+    let paper: &[(&str, &str, f64, &str)] = &[
+        ("Gumbel-Sinkhorn", "gs", 226.8, "0.913"),
+        ("Kissing", "kiss", 114.4, "-* invalid"),
+        ("SoftSort", "softsort", 110.7, "0.698"),
+        ("ShuffleSoftSort", "sss", 98.0, "0.892"),
+    ];
+
+    let mut table = Table::new(&[
+        "Method", "Memory", "Runtime[s]", "DPQ16", "Valid", "Paper-DPQ16", "Paper-Rt[s]",
+    ]);
+    for (label, key, paper_rt, paper_q) in paper {
+        let out = common::run_method(&rt, key, &ds, side);
+        table.row(&[
+            label.to_string(),
+            out.report.param_count.to_string(),
+            format!("{:.1}", out.report.wall_secs),
+            format!("{:.3}", out.report.final_dpq),
+            if out.report.valid_without_repair {
+                "yes".into()
+            } else {
+                format!("repaired {}", out.report.repaired)
+            },
+            paper_q.to_string(),
+            format!("{paper_rt}"),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nexpected shape: memory column exact; ShuffleSoftSort & GS ≫ SoftSort quality;\n\
+         Kissing invalid/repaired; ShuffleSoftSort lowest runtime per quality."
+    );
+}

@@ -1,0 +1,89 @@
+//! E1 — the paper's §II properties table:
+//!
+//! |                         | Gumbel-Sinkhorn | Kissing | SoftSort | Ours |
+//! | Number of parameters K  | N²              | 2NM     | N        | N    |
+//! | Non-iterative norm.     | no              | yes     | yes      | yes  |
+//! | Quality                 | ++              | +       | -        | ++   |
+//! | Stability               | +               | o       | ++       | ++   |
+//!
+//! Parameters and normalization are structural (read from the manifest /
+//! method definitions); quality and stability are *measured*: short runs
+//! over several seeds, stability = fraction of runs yielding a valid
+//! permutation without repair.
+
+mod common;
+
+use shufflesort::bench::{banner, quick_mode, Table};
+use shufflesort::data::random_colors;
+
+fn grade_quality(dpq: f64) -> &'static str {
+    match dpq {
+        q if q >= 0.75 => "++",
+        q if q >= 0.55 => "+",
+        q if q >= 0.35 => "o",
+        _ => "-",
+    }
+}
+
+fn grade_stability(valid_rate: f64) -> &'static str {
+    match valid_rate {
+        v if v >= 0.99 => "++",
+        v if v >= 0.8 => "+",
+        v if v >= 0.5 => "o",
+        _ => "-",
+    }
+}
+
+fn main() {
+    let side = 16usize; // stability statistics want repeats; keep N=256
+    let n = side * side;
+    banner("E1/properties", "structural + measured properties per method");
+    let rt = common::runtime();
+    let seeds: &[u64] = if quick_mode() { &[1, 2, 3] } else { &[1, 2, 3, 4, 5, 6, 7, 8] };
+
+    let methods: &[(&str, &str, &str, &str)] = &[
+        // label, key, params formula, non-iterative normalization?
+        ("Gumbel-Sinkhorn", "gs", "N^2", "no"),
+        ("Kissing", "kiss", "2NM", "yes"),
+        ("SoftSort", "softsort", "N", "yes"),
+        ("ShuffleSoftSort", "sss", "N", "yes"),
+    ];
+
+    let mut table = Table::new(&[
+        "Property", "Gumbel-Sinkhorn", "Kissing", "SoftSort", "Ours",
+    ]);
+
+    let mut params_row = vec!["Parameters K".to_string()];
+    let mut norm_row = vec!["Non-iterative normalization".to_string()];
+    let mut quality_row = vec!["Quality (measured)".to_string()];
+    let mut stability_row = vec!["Stability (measured)".to_string()];
+
+    for (_, key, formula, noniter) in methods {
+        let mut dpq_best = 0.0f64;
+        let mut valid = 0usize;
+        let mut params = 0usize;
+        for &seed in seeds {
+            let ds = random_colors(n, seed);
+            let out = common::run_method(&rt, key, &ds, side);
+            dpq_best = dpq_best.max(out.report.final_dpq);
+            if out.report.valid_without_repair {
+                valid += 1;
+            }
+            params = out.report.param_count;
+        }
+        let rate = valid as f64 / seeds.len() as f64;
+        params_row.push(format!("{formula} = {params}"));
+        norm_row.push(noniter.to_string());
+        quality_row.push(format!("{} ({dpq_best:.2})", grade_quality(dpq_best)));
+        stability_row.push(format!("{} ({:.0}%)", grade_stability(rate), rate * 100.0));
+    }
+    table.row(&params_row);
+    table.row(&norm_row);
+    table.row(&quality_row);
+    table.row(&stability_row);
+    table.print();
+    println!(
+        "\npaper expectations: K row exact; GS 'no' normalization; quality ++/+/-/++;\n\
+         stability +/o/++/++ (Kissing the least stable)."
+    );
+}

@@ -1,0 +1,65 @@
+//! E10 — infrastructure micro-benchmarks: where does a coordinator step's
+//! time go? Compile cost (once), host→device literal creation, execute
+//! dispatch, JV extraction, DPQ evaluation. Feeds EXPERIMENTS.md §Perf.
+
+mod common;
+
+use shufflesort::bench::{banner, bench, quick_mode};
+use shufflesort::assignment::jv;
+use shufflesort::data::random_colors;
+use shufflesort::grid::GridShape;
+use shufflesort::metrics::dpq16;
+use shufflesort::runtime::{Arg, Runtime};
+use shufflesort::util::rng::Pcg32;
+
+fn main() {
+    banner("E10/runtime-micro", "PJRT + substrate hot-path costs");
+    let reps = if quick_mode() { 10 } else { 50 };
+
+    // Artifact compile cost (fresh runtime → first load pays compilation).
+    let s = bench("compile sss_step_n1024 (cold cache)", 0, 3, || {
+        let rt2 = Runtime::from_manifest("artifacts").unwrap();
+        rt2.sss_step(1024, 3, 32).unwrap()
+    });
+    println!("{}", s.line());
+
+    let rt = common::runtime();
+    let n = 1024usize;
+    let ds = random_colors(n, 1);
+    let exe = rt.sss_step(n, 3, 32).unwrap();
+    let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+    let inv: Vec<i32> = (0..n as i32).collect();
+
+    let s = bench("load sss_step_n1024 (warm cache)", 1, reps, || {
+        rt.sss_step(1024, 3, 32).unwrap()
+    });
+    println!("{}", s.line());
+
+    let s = bench("execute sss_step n=1024 (full step)", 2, reps, || {
+        exe.run(&[
+            Arg::F32(&w),
+            Arg::F32(&ds.rows),
+            Arg::I32(&inv),
+            Arg::ScalarF32(0.3),
+            Arg::ScalarF32(0.5),
+        ])
+        .unwrap()
+    });
+    println!("{}", s.line());
+
+    // Pure-Rust substrate costs on the same scale.
+    let mut rng = Pcg32::new(3);
+    let cost: Vec<f64> = (0..256 * 256).map(|_| rng.f64()).collect();
+    let s = bench("JV solve 256x256", 1, reps, || jv::solve(&cost, 256));
+    println!("{}", s.line());
+
+    let g = GridShape::new(32, 32);
+    let s = bench("DPQ16 n=1024", 1, reps.min(10), || dpq16(&ds.rows, 3, g));
+    println!("{}", s.line());
+
+    let mut rng2 = Pcg32::new(4);
+    let s = bench("rng permutation n=4096", 1, reps, || rng2.permutation(4096));
+    println!("{}", s.line());
+
+    println!("\nuse: execute cost sets the coordinator step floor; everything else must stay ≪ it.");
+}

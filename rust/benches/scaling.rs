@@ -1,0 +1,82 @@
+//! E7 — the scalability claim (§I, §V): parameters and per-step cost vs N.
+//! Gumbel-Sinkhorn's O(N²) memory is the paper's motivating bottleneck;
+//! ShuffleSoftSort stays O(N). Per-step wall time is measured on the live
+//! artifacts (a few steps each; no full optimization runs).
+
+mod common;
+
+use shufflesort::bench::{banner, bench, quick_mode, Table};
+use shufflesort::data::random_colors;
+use shufflesort::runtime::Arg;
+use shufflesort::util::rng::Pcg32;
+
+fn main() {
+    banner("E7/scaling", "params + per-step time vs N (O(N) vs O(N^2))");
+    let rt = common::runtime();
+    let mut table = Table::new(&[
+        "N", "sss params", "gs params", "kiss params", "sss ms/step", "gs ms/step",
+    ]);
+    let reps = if quick_mode() { 5 } else { 20 };
+
+    for (n, side) in [(64usize, 8usize), (256, 16), (1024, 32), (4096, 64)] {
+        let ds = random_colors(n, 1);
+        let mut rng = Pcg32::new(2);
+
+        // ShuffleSoftSort step.
+        let exe = rt.sss_step(n, 3, side).unwrap();
+        let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let inv: Vec<i32> = (0..n as i32).collect();
+        let s = bench(&format!("sss n{n}"), 2, reps, || {
+            exe.run(&[
+                Arg::F32(&w),
+                Arg::F32(&ds.rows),
+                Arg::I32(&inv),
+                Arg::ScalarF32(0.3),
+                Arg::ScalarF32(0.5),
+            ])
+            .unwrap()
+        });
+
+        // Gumbel-Sinkhorn step (artifact exists only for N ≤ 1024).
+        let gs_ms = if n <= 1024 {
+            let gexe = rt.gs_step(n, 3, side).unwrap();
+            let logits: Vec<f32> = (0..n * n).map(|_| rng.gaussian() * 0.01).collect();
+            let gumbel = vec![0.0f32; n * n];
+            let gs = bench(&format!("gs n{n}"), 1, reps.min(5), || {
+                gexe.run(&[
+                    Arg::F32(&logits),
+                    Arg::F32(&ds.rows),
+                    Arg::F32(&gumbel),
+                    Arg::ScalarF32(0.3),
+                    Arg::ScalarF32(0.5),
+                ])
+                .unwrap()
+            });
+            format!("{:.2}", gs.mean_s * 1e3)
+        } else {
+            "OOM-scale (not shipped)".to_string()
+        };
+
+        let kiss_params = rt
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.method == "kiss" && a.n == n)
+            .map(|a| a.param_count.to_string())
+            .unwrap_or_else(|| "-".into());
+
+        table.row(&[
+            n.to_string(),
+            n.to_string(),
+            if n <= 1024 { (n * n).to_string() } else { format!("{} (4 GiB f32 grads)", n * n) },
+            kiss_params,
+            format!("{:.2}", s.mean_s * 1e3),
+            gs_ms,
+        ]);
+    }
+    table.print();
+    println!(
+        "\nexpected shape: sss params linear, gs quadratic (1024² = 1048576 matches the\n\
+         paper's Table 2 memory entry); gs per-step cost grows ~N² while sss stays near-linear."
+    );
+}

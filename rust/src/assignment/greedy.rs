@@ -1,0 +1,61 @@
+//! Greedy approximate assignment: repeatedly take the globally cheapest
+//! remaining (row, col) pair. O(n² log n), no optimality guarantee — the
+//! cheap comparator for the heuristics bench and a fast fallback.
+
+/// Greedy row→col assignment for a dense n×n cost matrix.
+pub fn solve(cost: &[f64], n: usize) -> Vec<u32> {
+    assert_eq!(cost.len(), n * n);
+    let mut entries: Vec<(f64, u32, u32)> = Vec::with_capacity(n * n);
+    for r in 0..n {
+        for c in 0..n {
+            entries.push((cost[r * n + c], r as u32, c as u32));
+        }
+    }
+    entries.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut row_done = vec![false; n];
+    let mut col_done = vec![false; n];
+    let mut assign = vec![u32::MAX; n];
+    let mut remaining = n;
+    for (_, r, c) in entries {
+        let (r, c) = (r as usize, c as usize);
+        if !row_done[r] && !col_done[c] {
+            row_done[r] = true;
+            col_done[c] = true;
+            assign[r] = c as u32;
+            remaining -= 1;
+            if remaining == 0 {
+                break;
+            }
+        }
+    }
+    assign
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assignment::jv;
+    use crate::perm::Permutation;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn produces_valid_permutation() {
+        let mut rng = Pcg32::new(41);
+        let n = 32;
+        let cost: Vec<f64> = (0..n * n).map(|_| rng.f64()).collect();
+        let a = solve(&cost, n);
+        Permutation::from_vec(a).unwrap();
+    }
+
+    #[test]
+    fn never_beats_jv_property() {
+        let mut rng = Pcg32::new(42);
+        for _ in 0..5 {
+            let n = 16;
+            let cost: Vec<f64> = (0..n * n).map(|_| rng.f64()).collect();
+            let g = jv::assignment_cost(&cost, n, &solve(&cost, n));
+            let o = jv::assignment_cost(&cost, n, &jv::solve(&cost, n));
+            assert!(g >= o - 1e-9, "greedy {g} < optimal {o}?!");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Linear assignment substrate.
+//!
+//! * `jv::solve` — the Jonker–Volgenant shortest-augmenting-path LAP solver
+//!   [6], used for (a) hard extraction of Gumbel-Sinkhorn's doubly
+//!   stochastic matrix and (b) the dimensionality-reduction + LAP grid
+//!   baseline of §I-B.
+//! * `greedy` — cheap approximate assignment, used as a fallback and as a
+//!   baseline in the heuristics bench.
+
+pub mod greedy;
+pub mod jv;
+
+pub use jv::solve as solve_lap;

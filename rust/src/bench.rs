@@ -1,0 +1,128 @@
+//! Hand-rolled benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each `rust/benches/*.rs` target with
+//! `harness = false`; they use this module for warmup + timed repetitions
+//! with mean/std/min reporting, and simple aligned-table printing for the
+//! paper-table reproductions.
+
+use std::time::Instant;
+
+use crate::util::stats::{mean, std_dev};
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub reps: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl Sample {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>10.4}s ± {:>8.4}s (min {:>8.4}s, n={})",
+            self.name, self.mean_s, self.std_s, self.min_s, self.reps
+        )
+    }
+}
+
+/// Run `f` `warmup` + `reps` times, timing the reps.
+pub fn bench<T>(name: &str, warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Sample {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    Sample {
+        name: name.to_string(),
+        reps: times.len(),
+        mean_s: mean(&times),
+        std_s: std_dev(&times),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Aligned table printer for the paper-table reproductions.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&"-".repeat(w + 2));
+            sep.push('|');
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Shared CLI convention for bench binaries: `--quick` shrinks workloads so
+/// `cargo bench` completes in minutes on one core; full runs are opt-in.
+pub fn quick_mode() -> bool {
+    // `cargo bench` passes `--bench`; our own flag is `--full`.
+    !std::env::args().any(|a| a == "--full")
+}
+
+/// Standard bench banner.
+pub fn banner(id: &str, what: &str) {
+    println!("\n=== {id}: {what} ===");
+    println!(
+        "mode: {} (pass --full after `--` for paper-scale runs)",
+        if quick_mode() { "quick" } else { "full" }
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_reps() {
+        let s = bench("noop", 1, 5, || 1 + 1);
+        assert_eq!(s.reps, 5);
+        assert!(s.mean_s >= 0.0 && s.min_s <= s.mean_s);
+        assert!(s.line().contains("noop"));
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["Method", "Memory", "Quality"]);
+        t.row(&["ours".into(), "1024".into(), "0.89".into()]);
+        t.print();
+    }
+}

@@ -1,0 +1,138 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `sssort <command> [positional...] [--flag] [--key value] [k=v]`.
+//! `k=v` pairs are collected as config overrides.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct ParsedArgs {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    /// `key=value` config overrides, applied in order.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl ParsedArgs {
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Result<ParsedArgs> {
+        let mut it = args.into_iter();
+        let mut out = ParsedArgs::default();
+        out.command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut pending_key: Option<String> = None;
+        for a in it {
+            if let Some(key) = pending_key.take() {
+                out.options.insert(key, a);
+                continue;
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                // `--key=value`, boolean `--flag`, or `--key value`.
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if KNOWN_VALUE_OPTS.contains(&stripped) {
+                    pending_key = Some(stripped.to_string());
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else if let Some((k, v)) = a.split_once('=') {
+                out.overrides.push((k.to_string(), v.to_string()));
+            } else {
+                out.positional.push(a);
+            }
+        }
+        if let Some(k) = pending_key {
+            bail!("option --{k} expects a value");
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} must be an integer")),
+        }
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+}
+
+/// Options that always take a value (everything else after `--` is a flag).
+const KNOWN_VALUE_OPTS: &[&str] = &[
+    "n", "grid", "method", "out", "seed", "config", "artifacts", "dataset",
+    "bits", "entropy", "scene-seed", "clusters", "dims",
+];
+
+pub const USAGE: &str = "\
+sssort — ShuffleSoftSort permutation-learning coordinator
+
+USAGE:
+  sssort sort    [--method sss|softsort|gs|kiss] [--grid HxW] [--dataset colors|features]
+                 [--seed S] [--out dir] [k=v overrides]   sort a dataset, report DPQ
+  sssort sog     [--n N] [--grid HxW] [--bits B] [--out dir]
+                 run the Self-Organizing-Gaussians pipeline (Fig. 6)
+  sssort inspect [--artifacts dir]                        list AOT artifacts
+  sssort help                                             this text
+
+Config overrides are bare k=v pairs, e.g. `phases=300 lr=0.3 shuffle=random`.
+";
+
+/// Parse "HxW" grid syntax.
+pub fn parse_grid(s: &str) -> Result<(usize, usize)> {
+    let (h, w) = s
+        .split_once(['x', 'X'])
+        .ok_or_else(|| anyhow!("grid must be HxW, got '{s}'"))?;
+    Ok((h.parse()?, w.parse()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> ParsedArgs {
+        ParsedArgs::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_options_flags_overrides() {
+        let a = parse(&[
+            "sort", "--grid", "16x16", "--method=sss", "--full", "phases=12", "lr=0.3",
+        ]);
+        assert_eq!(a.command, "sort");
+        assert_eq!(a.opt("grid"), Some("16x16"));
+        assert_eq!(a.opt("method"), Some("sss"));
+        assert!(a.flag("full"));
+        assert_eq!(a.overrides, vec![("phases".into(), "12".into()), ("lr".into(), "0.3".into())]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(ParsedArgs::parse(vec!["sort".to_string(), "--grid".to_string()]).is_err());
+    }
+
+    #[test]
+    fn grid_syntax() {
+        assert_eq!(parse_grid("32x32").unwrap(), (32, 32));
+        assert_eq!(parse_grid("8X16").unwrap(), (8, 16));
+        assert!(parse_grid("64").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["inspect"]);
+        assert_eq!(a.command, "inspect");
+        assert_eq!(a.opt_usize("n", 1024).unwrap(), 1024);
+    }
+}

@@ -1,0 +1,200 @@
+//! Typed configuration for every driver, loadable from JSON files and
+//! overridable from `key=value` CLI pairs (no serde/clap offline — see
+//! DESIGN.md §6).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::shuffle::ShuffleStrategy;
+use crate::coordinator::{optimizer::AdamConfig, schedule::TauSchedule};
+use crate::grid::GridShape;
+use crate::util::json::Json;
+
+/// Configuration of the ShuffleSoftSort driver (Algorithm 1).
+#[derive(Clone, Debug)]
+pub struct ShuffleSoftSortConfig {
+    pub grid: GridShape,
+    /// Outer phases R.
+    pub phases: usize,
+    /// SoftSort iterations per phase I (paper: 4).
+    pub inner_iters: usize,
+    pub tau: TauSchedule,
+    pub adam: AdamConfig,
+    pub shuffle: ShuffleStrategy,
+    /// Extra inner iterations allowed to reach a valid permutation
+    /// (paper §II: "iterations are extended until a valid permutation is
+    /// achieved") before greedy repair kicks in.
+    pub max_extensions: usize,
+    pub seed: u64,
+    /// Record the loss curve (small overhead; on by default).
+    pub record_curve: bool,
+    /// Greedy phase acceptance: adopt a phase's hard permutation only if it
+    /// does not worsen the hard neighbor metric. Guards the stochastic
+    /// phases against regressions (ablated in benches/ablations.rs).
+    pub greedy_accept: bool,
+    /// Scale the Adam lr with feature dimension: lr · (d/3)^0.25
+    /// (EXPERIMENTS.md §Tuning: 50-d wants ≈2× the 3-d step). Disabled
+    /// automatically when `lr` is overridden explicitly.
+    pub lr_auto_scale: bool,
+}
+
+impl ShuffleSoftSortConfig {
+    /// Defaults from the EXPERIMENTS.md §Tuning sweep: random shuffles
+    /// (Algorithm 1), τ 0.6→0.1, flat inner temperature (inner_frac = 1.0 —
+    /// the paper's 0.2τ→τ ramp measurably hurts under greedy acceptance,
+    /// see benches/ablations.rs), Adam lr 0.35·(d/3)^0.25, greedy phase
+    /// acceptance, and R ≈ 16·N phases (capped — each phase is I=4 cheap
+    /// steps).
+    pub fn for_grid(h: usize, w: usize) -> Self {
+        let n = h * w;
+        let phases = (16 * n).clamp(512, 16384);
+        ShuffleSoftSortConfig {
+            grid: GridShape::new(h, w),
+            phases,
+            inner_iters: 4,
+            tau: TauSchedule { tau_start: 0.6, tau_end: 0.1, inner_frac: 1.0 },
+            adam: AdamConfig { lr: 0.35, ..Default::default() },
+            shuffle: ShuffleStrategy::Random,
+            max_extensions: 8,
+            seed: 42,
+            record_curve: true,
+            greedy_accept: true,
+            lr_auto_scale: true,
+        }
+    }
+
+    /// Effective Adam lr for a d-dimensional dataset.
+    pub fn effective_lr(&self, d: usize) -> f32 {
+        if self.lr_auto_scale {
+            self.adam.lr * (d as f32 / 3.0).powf(0.25)
+        } else {
+            self.adam.lr
+        }
+    }
+
+    /// Apply a `key=value` override (CLI syntax).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "phases" | "r" => self.phases = value.parse()?,
+            "inner_iters" | "i" => self.inner_iters = value.parse()?,
+            "tau_start" => self.tau.tau_start = value.parse()?,
+            "tau_end" => self.tau.tau_end = value.parse()?,
+            "inner_frac" => self.tau.inner_frac = value.parse()?,
+            "lr" => {
+                self.adam.lr = value.parse()?;
+                self.lr_auto_scale = false; // explicit lr wins
+            }
+            "seed" => self.seed = value.parse()?,
+            "max_extensions" => self.max_extensions = value.parse()?,
+            "shuffle" => {
+                self.shuffle = ShuffleStrategy::parse(value)
+                    .ok_or_else(|| anyhow!("unknown shuffle strategy '{value}'"))?
+            }
+            "record_curve" => self.record_curve = value.parse()?,
+            "greedy_accept" | "accept" => self.greedy_accept = value.parse()?,
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON object file: {"phases": 300, ...}.
+    pub fn apply_json(&mut self, text: &str) -> Result<()> {
+        let j = Json::parse(text)?;
+        let obj = match &j {
+            Json::Obj(m) => m,
+            _ => bail!("config file must be a JSON object"),
+        };
+        for (k, v) in obj {
+            let s = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => format!("{n}"),
+                Json::Bool(b) => format!("{b}"),
+                _ => bail!("config value for '{k}' must be scalar"),
+            };
+            self.set(k, &s)?;
+        }
+        Ok(())
+    }
+}
+
+/// Configuration shared by the baseline drivers.
+#[derive(Clone, Debug)]
+pub struct BaselineConfig {
+    pub grid: GridShape,
+    pub steps: usize,
+    pub tau: TauSchedule,
+    pub adam: AdamConfig,
+    pub seed: u64,
+    /// Gumbel noise scale for GS (annealed to 0 over the run).
+    pub gumbel_scale: f32,
+}
+
+impl BaselineConfig {
+    pub fn for_grid(h: usize, w: usize) -> Self {
+        let n = h * w;
+        let steps = (16 * (n as f64).sqrt() as usize).clamp(256, 2048);
+        BaselineConfig {
+            grid: GridShape::new(h, w),
+            steps,
+            tau: TauSchedule::default(),
+            adam: AdamConfig { lr: 0.5, ..Default::default() },
+            seed: 42,
+            gumbel_scale: 0.2,
+        }
+    }
+
+    /// Gumbel-Sinkhorn variant: the N² logits want a much smaller Adam step
+    /// (EXPERIMENTS.md §Tuning: lr 0.02 ≫ quality of lr 0.5 on this loss).
+    pub fn for_gs(h: usize, w: usize) -> Self {
+        let mut cfg = Self::for_grid(h, w);
+        cfg.adam.lr = 0.02;
+        cfg
+    }
+
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "steps" => self.steps = value.parse()?,
+            "tau_start" => self.tau.tau_start = value.parse()?,
+            "tau_end" => self.tau.tau_end = value.parse()?,
+            "lr" => self.adam.lr = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "gumbel_scale" => self.gumbel_scale = value.parse()?,
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_scale_with_n() {
+        let small = ShuffleSoftSortConfig::for_grid(8, 8);
+        let large = ShuffleSoftSortConfig::for_grid(64, 64);
+        assert!(large.phases >= small.phases);
+        assert_eq!(small.inner_iters, 4);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = ShuffleSoftSortConfig::for_grid(8, 8);
+        c.set("phases", "77").unwrap();
+        c.set("lr", "0.25").unwrap();
+        c.set("shuffle", "random").unwrap();
+        assert_eq!(c.phases, 77);
+        assert_eq!(c.adam.lr, 0.25);
+        assert_eq!(c.shuffle, ShuffleStrategy::Random);
+        assert!(c.set("nope", "1").is_err());
+        assert!(c.set("shuffle", "nope").is_err());
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = ShuffleSoftSortConfig::for_grid(8, 8);
+        c.apply_json(r#"{"phases": 12, "tau_end": 0.05, "shuffle": "scan"}"#).unwrap();
+        assert_eq!(c.phases, 12);
+        assert!((c.tau.tau_end - 0.05).abs() < 1e-9);
+        assert!(c.apply_json("[1]").is_err());
+    }
+}

@@ -1,0 +1,302 @@
+//! Baseline drivers: plain SoftSort [14], Gumbel-Sinkhorn [11] and
+//! Kissing-to-Find-a-Match [4] — the comparison set of the paper's Table 2.
+//!
+//! All parameters live in Rust; the AOT artifacts are stateless step
+//! functions (see `python/compile/model.py`). Every driver returns the same
+//! `SortOutcome` shape so the benches treat methods uniformly.
+
+use anyhow::{Context, Result};
+
+use crate::assignment::jv;
+use crate::config::{BaselineConfig, ShuffleSoftSortConfig};
+use crate::data::Dataset;
+use crate::metrics::dpq16;
+use crate::perm::{repair, Permutation};
+use crate::runtime::{Arg, Runtime};
+use crate::util::rng::Pcg32;
+use crate::util::stats::mean_pairwise_distance;
+use crate::util::timer::Stopwatch;
+
+use super::events::RunReport;
+use super::optimizer::Adam;
+use super::shuffle::ShuffleStrategy;
+use super::SortOutcome;
+
+/// Plain SoftSort: the ShuffleSoftSort driver with the identity shuffle and
+/// ONE long phase over which `w` persists and τ anneals per-step — i.e. the
+/// original 1-D method the paper improves on.
+pub struct SoftSortDriver<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: BaselineConfig,
+}
+
+impl<'rt> SoftSortDriver<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: BaselineConfig) -> Self {
+        SoftSortDriver { rt, cfg }
+    }
+
+    pub fn sort(&self, data: &Dataset) -> Result<SortOutcome> {
+        let g = self.cfg.grid;
+        // Reuse the shared driver: steps = phases × 1 inner iteration with a
+        // persistent w is NOT what run_shuffle_softsort does (it re-inits w
+        // per phase), so plain SoftSort gets its own loop here.
+        let (n, d) = (data.n, data.d);
+        anyhow::ensure!(n == g.n());
+        let exe = self.rt.sss_step(n, d, g.h)?;
+        let watch = Stopwatch::start();
+        let mut rng = Pcg32::new(self.cfg.seed);
+        let mut report = RunReport {
+            method: "SoftSort".into(),
+            n,
+            d,
+            param_count: n,
+            phases: 1,
+            valid_without_repair: true,
+            ..Default::default()
+        };
+        let norm = mean_pairwise_distance(&data.rows, n, d, 20_000, &mut rng);
+        let identity_inv: Vec<i32> = (0..n as i32).collect();
+
+        // Unit-spacing descending ramp — same bandwidth rationale as the
+        // ShuffleSoftSort driver (coordinator/mod.rs).
+        let mut w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let mut adam = Adam::new(self.cfg.adam.clone(), n);
+        let mut idx = vec![0u32; n];
+        for s in 0..self.cfg.steps {
+            let tau = self.cfg.tau.phase_tau(s, self.cfg.steps);
+            let out = report.sections.time("execute", || {
+                exe.run(&[
+                    Arg::F32(&w),
+                    Arg::F32(&data.rows),
+                    Arg::I32(&identity_inv),
+                    Arg::ScalarF32(tau),
+                    Arg::ScalarF32(norm),
+                ])
+            })?;
+            adam.step(&mut w, out[1].as_f32());
+            report.record(0, s, tau, out[0].scalar_f32() as f64);
+            if s + 1 == self.cfg.steps {
+                for (dst, &v) in idx.iter_mut().zip(out[2].as_i32()) {
+                    *dst = v as u32;
+                }
+            }
+        }
+
+        let perm = if Permutation::count_duplicates(&idx) == 0 {
+            Permutation::from_vec(idx).expect("checked")
+        } else {
+            let (p, fixed) = repair(&idx);
+            report.repaired += fixed;
+            report.valid_without_repair = false;
+            p
+        };
+        let arranged = perm.apply_rows(&data.rows, d);
+        report.final_dpq = dpq16(&arranged, d, g);
+        report.wall_secs = watch.secs();
+        Ok(SortOutcome { perm, arranged, report })
+    }
+}
+
+/// Gumbel-Sinkhorn: N² logits, Rust-side Gumbel noise (annealed), JV-based
+/// hard extraction from the probe artifact's doubly stochastic matrix.
+pub struct GumbelSinkhornDriver<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: BaselineConfig,
+}
+
+impl<'rt> GumbelSinkhornDriver<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: BaselineConfig) -> Self {
+        GumbelSinkhornDriver { rt, cfg }
+    }
+
+    pub fn sort(&self, data: &Dataset) -> Result<SortOutcome> {
+        let g = self.cfg.grid;
+        let (n, d) = (data.n, data.d);
+        anyhow::ensure!(n == g.n());
+        let exe = self
+            .rt
+            .gs_step(n, d, g.h)
+            .context("no gumbel-sinkhorn artifact for this shape")?;
+        let probe = self.rt.gs_probe(n)?;
+        let watch = Stopwatch::start();
+        let mut rng = Pcg32::new(self.cfg.seed);
+        let mut report = RunReport {
+            method: "Gumbel-Sinkhorn".into(),
+            n,
+            d,
+            param_count: n * n,
+            phases: 1,
+            valid_without_repair: true,
+            ..Default::default()
+        };
+        let norm = mean_pairwise_distance(&data.rows, n, d, 20_000, &mut rng);
+
+        let mut logits = vec![0.0f32; n * n];
+        // Small random init breaks the uniform-P symmetry.
+        for v in logits.iter_mut() {
+            *v = rng.gaussian() * 0.01;
+        }
+        let mut adam = Adam::new(self.cfg.adam.clone(), n * n);
+        let mut gumbel = vec![0.0f32; n * n];
+
+        for s in 0..self.cfg.steps {
+            let tau = self.cfg.tau.phase_tau(s, self.cfg.steps);
+            // Fresh noise each step, annealed with the temperature.
+            let scale = self.cfg.gumbel_scale * (1.0 - s as f32 / self.cfg.steps as f32);
+            report.sections.time("noise", || {
+                for v in gumbel.iter_mut() {
+                    *v = rng.gumbel() * scale;
+                }
+            });
+            let out = report.sections.time("execute", || {
+                exe.run(&[
+                    Arg::F32(&logits),
+                    Arg::F32(&data.rows),
+                    Arg::F32(&gumbel),
+                    Arg::ScalarF32(tau),
+                    Arg::ScalarF32(norm),
+                ])
+            })?;
+            report.sections.time("adam", || {
+                adam.step(&mut logits, out[1].as_f32());
+            });
+            report.record(0, s, tau, out[0].scalar_f32() as f64);
+        }
+
+        // Final hard extraction: P from the probe (noise-free, sharp τ),
+        // then the optimal assignment via Jonker–Volgenant on -P.
+        let zeros = vec![0.0f32; n * n];
+        let p = report.sections.time("execute", || {
+            probe.run(&[
+                Arg::F32(&logits),
+                Arg::F32(&zeros),
+                Arg::ScalarF32(self.cfg.tau.tau_end),
+            ])
+        })?;
+        let p = p[0].as_f32();
+        let perm = report.sections.time("extract", || {
+            let mut cost = vec![0.0f64; n * n];
+            for (c, &v) in cost.iter_mut().zip(p) {
+                *c = -(v as f64);
+            }
+            let assign = jv::solve(&cost, n); // row -> col (grid pos -> item)
+            Permutation::from_vec(assign).expect("JV yields a bijection")
+        });
+
+        let arranged = perm.apply_rows(&data.rows, d);
+        report.final_dpq = dpq16(&arranged, d, g);
+        report.wall_secs = watch.secs();
+        Ok(SortOutcome { perm, arranged, report })
+    }
+}
+
+/// Kissing-to-Find-a-Match: low-rank V, W ∈ R^{N×M}. Extraction is plain
+/// row-argmax (the method's softmax is row-only) — the paper's observation
+/// that it "often fails to produce valid permutation matrices" is exactly
+/// what `valid_without_repair` records.
+pub struct KissingDriver<'rt> {
+    rt: &'rt Runtime,
+    pub cfg: BaselineConfig,
+}
+
+impl<'rt> KissingDriver<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: BaselineConfig) -> Self {
+        KissingDriver { rt, cfg }
+    }
+
+    pub fn sort(&self, data: &Dataset) -> Result<SortOutcome> {
+        let g = self.cfg.grid;
+        let (n, d) = (data.n, data.d);
+        anyhow::ensure!(n == g.n());
+        // Rank follows the manifest (kissing-number rule, shapes.py).
+        let meta = self
+            .rt
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.method == "kiss" && a.n == n && a.d == d)
+            .context("no kissing artifact for this shape")?
+            .clone();
+        let m = meta.m;
+        let exe = self.rt.load(&meta.name)?;
+        let watch = Stopwatch::start();
+        let mut rng = Pcg32::new(self.cfg.seed);
+        let mut report = RunReport {
+            method: "Kissing".into(),
+            n,
+            d,
+            param_count: 2 * n * m,
+            phases: 1,
+            valid_without_repair: true,
+            ..Default::default()
+        };
+        let norm = mean_pairwise_distance(&data.rows, n, d, 20_000, &mut rng);
+
+        let mut v: Vec<f32> = (0..n * m).map(|_| rng.gaussian()).collect();
+        let mut wf: Vec<f32> = (0..n * m).map(|_| rng.gaussian()).collect();
+        let mut adam_v = Adam::new(self.cfg.adam.clone(), n * m);
+        let mut adam_w = Adam::new(self.cfg.adam.clone(), n * m);
+        let mut idx = vec![0u32; n];
+
+        for s in 0..self.cfg.steps {
+            let tau = self.cfg.tau.phase_tau(s, self.cfg.steps);
+            let out = report.sections.time("execute", || {
+                exe.run(&[
+                    Arg::F32(&v),
+                    Arg::F32(&wf),
+                    Arg::F32(&data.rows),
+                    Arg::ScalarF32(tau),
+                    Arg::ScalarF32(norm),
+                ])
+            })?;
+            report.sections.time("adam", || {
+                adam_v.step(&mut v, out[1].as_f32());
+                adam_w.step(&mut wf, out[2].as_f32());
+            });
+            report.record(0, s, tau, out[0].scalar_f32() as f64);
+            if s + 1 == self.cfg.steps {
+                for (dst, &x) in idx.iter_mut().zip(out[3].as_i32()) {
+                    *dst = x as u32;
+                }
+            }
+        }
+
+        let dups = Permutation::count_duplicates(&idx);
+        let perm = if dups == 0 {
+            Permutation::from_vec(idx).expect("checked")
+        } else {
+            let (p, fixed) = repair(&idx);
+            report.repaired += fixed;
+            report.valid_without_repair = false;
+            p
+        };
+        let arranged = perm.apply_rows(&data.rows, d);
+        report.final_dpq = dpq16(&arranged, d, g);
+        report.wall_secs = watch.secs();
+        Ok(SortOutcome { perm, arranged, report })
+    }
+}
+
+/// Build a plain-SoftSort config equivalent in step budget to a
+/// ShuffleSoftSort config (for the Table 2 bench's fairness note).
+pub fn softsort_budget_of(cfg: &ShuffleSoftSortConfig) -> BaselineConfig {
+    BaselineConfig {
+        grid: cfg.grid,
+        steps: cfg.phases * cfg.inner_iters,
+        tau: cfg.tau.clone(),
+        adam: cfg.adam.clone(),
+        seed: cfg.seed,
+        gumbel_scale: 0.0,
+    }
+}
+
+// Re-export for convenience in benches.
+pub use super::shuffle::ShuffleStrategy as Strategy;
+
+/// Make a ShuffleSoftSort config that *is* plain SoftSort via policy
+/// (identity shuffle, single phase) — used by the ablation bench to verify
+/// the equivalence claim.
+pub fn softsort_as_policy(mut cfg: ShuffleSoftSortConfig) -> ShuffleSoftSortConfig {
+    cfg.shuffle = ShuffleStrategy::Identity;
+    cfg
+}

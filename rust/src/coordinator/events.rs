@@ -1,0 +1,88 @@
+//! Run reporting: loss curves, validity statistics and section timings —
+//! everything EXPERIMENTS.md records per run.
+
+use crate::util::timer::Sections;
+
+/// One recorded optimization event (per inner iteration or per phase).
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub phase: usize,
+    pub iter: usize,
+    pub tau: f32,
+    pub loss: f64,
+}
+
+/// Aggregated statistics of one optimization run.
+#[derive(Debug, Default)]
+pub struct RunReport {
+    pub method: String,
+    pub n: usize,
+    pub d: usize,
+    pub param_count: usize,
+    pub phases: usize,
+    pub steps: usize,
+    pub curve: Vec<CurvePoint>,
+    /// Phases whose argmax extraction needed extension iterations.
+    pub extensions: usize,
+    /// Phases rejected by greedy acceptance (ShuffleSoftSort only).
+    pub rejected_phases: usize,
+    /// Entries rewritten by greedy repair (0 in healthy runs).
+    pub repaired: usize,
+    /// Whether the final permutation came out valid without repair.
+    pub valid_without_repair: bool,
+    pub wall_secs: f64,
+    pub final_loss: f64,
+    /// DPQ16 of the final layout (filled by the caller that knows the data).
+    pub final_dpq: f64,
+    pub sections: Sections,
+}
+
+impl RunReport {
+    pub fn record(&mut self, phase: usize, iter: usize, tau: f32, loss: f64) {
+        self.curve.push(CurvePoint { phase, iter, tau, loss });
+        self.final_loss = loss;
+        self.steps += 1;
+    }
+
+    /// Loss of the first/last recorded step — convergence summary.
+    pub fn loss_span(&self) -> (f64, f64) {
+        match (self.curve.first(), self.curve.last()) {
+            (Some(a), Some(b)) => (a.loss, b.loss),
+            _ => (f64::NAN, f64::NAN),
+        }
+    }
+
+    /// Compact one-line summary for CLI/bench output.
+    pub fn summary(&self) -> String {
+        let (l0, l1) = self.loss_span();
+        format!(
+            "{}: N={} params={} steps={} loss {:.4}->{:.4} dpq={:.3} valid={} repairs={} {:.1}s",
+            self.method,
+            self.n,
+            self.param_count,
+            self.steps,
+            l0,
+            l1,
+            self.final_dpq,
+            self.valid_without_repair,
+            self.repaired,
+            self.wall_secs
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_span() {
+        let mut r = RunReport { method: "sss".into(), ..Default::default() };
+        r.record(0, 0, 1.0, 2.0);
+        r.record(0, 1, 0.9, 1.5);
+        r.record(1, 0, 0.8, 1.0);
+        assert_eq!(r.steps, 3);
+        assert_eq!(r.loss_span(), (2.0, 1.0));
+        assert!(r.summary().contains("loss 2.0000->1.0000"));
+    }
+}

@@ -1,0 +1,263 @@
+//! L3 coordinator — the paper's contribution, Algorithm 1 (ShuffleSoftSort),
+//! plus the three baseline drivers (plain SoftSort, Gumbel-Sinkhorn,
+//! Kissing) in `baselines`.
+//!
+//! Per phase r of R:
+//!   1. τ ← geometric decay (schedule::TauSchedule),
+//!   2. w ← order-preserving linear ramp (descending — see
+//!      `python/tests/test_kernel.py::test_linear_init_conventions`),
+//!   3. shuffle the current arrangement (shuffle::ShuffleStrategy),
+//!   4. I Adam steps on the AOT `sss_step` artifact (L2+L1 via PJRT), with
+//!      the inner τ_i ramp 0.2τ → τ,
+//!   5. argmax extraction; if duplicated, extend iterations at sharpened τ
+//!      (paper's rule), finally greedy `perm::repair` (counted),
+//!   6. compose the phase permutation into `perm::Tracker`.
+//!
+//! The original data never moves; the tracker owns the arrangement.
+
+pub mod baselines;
+pub mod events;
+pub mod optimizer;
+pub mod schedule;
+pub mod shuffle;
+
+use anyhow::{Context, Result};
+
+use crate::config::ShuffleSoftSortConfig;
+use crate::data::Dataset;
+use crate::metrics::dpq16;
+use crate::perm::{repair, Permutation, Tracker};
+use crate::runtime::{Arg, Executable, OutValue, Runtime};
+use crate::util::rng::Pcg32;
+use crate::util::stats::mean_pairwise_distance;
+use crate::util::timer::Stopwatch;
+
+use events::RunReport;
+use optimizer::Adam;
+
+/// Result of a sorting run: the learned permutation (grid position →
+/// original item index), the arranged data, and the run report.
+pub struct SortOutcome {
+    pub perm: Permutation,
+    pub arranged: Vec<f32>,
+    pub report: RunReport,
+}
+
+/// The ShuffleSoftSort driver bound to a runtime and a config.
+pub struct ShuffleSoftSort<'rt> {
+    rt: &'rt Runtime,
+    cfg: ShuffleSoftSortConfig,
+}
+
+impl<'rt> ShuffleSoftSort<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: ShuffleSoftSortConfig) -> Result<Self> {
+        Ok(ShuffleSoftSort { rt, cfg })
+    }
+
+    pub fn config(&self) -> &ShuffleSoftSortConfig {
+        &self.cfg
+    }
+
+    /// Sort `data` onto the configured grid.
+    pub fn sort(&self, data: &Dataset) -> Result<SortOutcome> {
+        let g = self.cfg.grid;
+        let (n, d) = (data.n, data.d);
+        anyhow::ensure!(n == g.n(), "dataset N={} != grid {}x{}", n, g.h, g.w);
+        let exe = self
+            .rt
+            .sss_step(n, d, g.h)
+            .with_context(|| format!("no sss artifact for N={n} d={d} h={}", g.h))?;
+        run_shuffle_softsort(&exe, data, &self.cfg, "ShuffleSoftSort")
+    }
+}
+
+/// Shared driver for ShuffleSoftSort and (via `ShuffleStrategy::Identity` +
+/// one long phase) plain SoftSort — the paper's point that the methods
+/// differ only in L3 policy.
+pub(crate) fn run_shuffle_softsort(
+    exe: &Executable,
+    data: &Dataset,
+    cfg: &ShuffleSoftSortConfig,
+    method: &str,
+) -> Result<SortOutcome> {
+    let g = cfg.grid;
+    let (n, d) = (data.n, data.d);
+    let watch = Stopwatch::start();
+    let mut rng = Pcg32::new(cfg.seed);
+
+    let mut report = RunReport {
+        method: method.to_string(),
+        n,
+        d,
+        param_count: n,
+        phases: cfg.phases,
+        valid_without_repair: true,
+        ..Default::default()
+    };
+
+    // Loss normalizer: dataset mean pairwise distance (DESIGN §7).
+    let norm = mean_pairwise_distance(&data.rows, n, d, 20_000, &mut rng);
+
+    let mut tracker = Tracker::new(n);
+    let mut adam_cfg = cfg.adam.clone();
+    adam_cfg.lr = cfg.effective_lr(d);
+    let mut adam = Adam::new(adam_cfg, n);
+    let mut w = vec![0.0f32; n];
+    let mut x_cur = data.rows.clone();
+    let mut x_shuf: Vec<f32> = Vec::with_capacity(n * d);
+    let mut x_trial: Vec<f32> = Vec::with_capacity(n * d);
+    let mut inv_idx_i32 = vec![0i32; n];
+    // Cached hard neighbor metric of the current arrangement (greedy
+    // acceptance recomputes only the trial side — §Perf L3 optimization).
+    let mut nbr_cur = crate::metrics::mean_neighbor_distance(&x_cur, d, g);
+
+    for r in 0..cfg.phases {
+        let tau = cfg.tau.phase_tau(r, cfg.phases);
+
+        // Fresh order-preserving weights + fresh optimizer moments. The
+        // ramp has unit spacing, so τ directly reads as the softmax
+        // bandwidth in *positions*: τ=8 blends ≈8 grid neighbors, τ<1 is
+        // effectively hard. The schedule anneals that bandwidth (see
+        // EXPERIMENTS.md §Tuning for the sweep that pinned this down).
+        for (i, wi) in w.iter_mut().enumerate() {
+            *wi = (n - i) as f32;
+        }
+        adam.reset();
+
+        let shuf = cfg.shuffle.shuffle_for_phase(r, g, &mut rng);
+        shuf.apply_rows_into(&x_cur, d, &mut x_shuf);
+        let inv = shuf.inverse();
+        for (dst, &v) in inv_idx_i32.iter_mut().zip(inv.as_slice()) {
+            *dst = v as i32;
+        }
+
+        // Inner SoftSort iterations with the τ_i ramp.
+        let mut last_sort_idx: Vec<i32> = Vec::new();
+        for i in 0..cfg.inner_iters {
+            let tau_i = cfg.tau.inner_tau(tau, i, cfg.inner_iters);
+            let out = report.sections.time("execute", || {
+                exe.run(&[
+                    Arg::F32(&w),
+                    Arg::F32(&x_shuf),
+                    Arg::I32(&inv_idx_i32),
+                    Arg::ScalarF32(tau_i),
+                    Arg::ScalarF32(norm),
+                ])
+            })?;
+            let loss = out[0].scalar_f32() as f64;
+            report.sections.time("adam", || {
+                adam.step(&mut w, out[1].as_f32());
+            });
+            if cfg.record_curve {
+                report.record(r, i, tau_i, loss);
+            } else {
+                report.final_loss = loss;
+                report.steps += 1;
+            }
+            if i + 1 == cfg.inner_iters {
+                last_sort_idx = match &out[2] {
+                    OutValue::I32(v) => v.clone(),
+                    _ => unreachable!("sort_idx is i32"),
+                };
+            }
+        }
+
+        // Hard extraction with the paper's extension rule.
+        let sort_perm = extract_valid(
+            exe,
+            &w,
+            &x_shuf,
+            &inv_idx_i32,
+            tau,
+            norm,
+            last_sort_idx,
+            cfg.max_extensions,
+            &mut adam,
+            &mut report,
+        )?;
+
+        // Greedy acceptance: adopt the phase only if the *hard* neighbor
+        // metric does not regress. The trial arrangement is the phase
+        // permutation applied to the CURRENT arrangement (no tracker clone,
+        // no re-arrangement from the originals — §Perf L3 optimization),
+        // and the current metric is cached.
+        if cfg.greedy_accept {
+            let (accept, nbr_trial) = report.sections.time("accept", || {
+                let phase = shuf.inverse().compose(&sort_perm).compose(&shuf);
+                phase.apply_rows_into(&x_cur, d, &mut x_trial);
+                let nbr_trial = crate::metrics::mean_neighbor_distance(&x_trial, d, g);
+                (nbr_trial <= nbr_cur + 1e-12, nbr_trial)
+            });
+            if accept {
+                tracker.record_phase(&shuf, &sort_perm);
+                std::mem::swap(&mut x_cur, &mut x_trial);
+                nbr_cur = nbr_trial;
+            } else {
+                report.rejected_phases += 1;
+            }
+        } else {
+            report.sections.time("compose", || {
+                tracker.record_phase(&shuf, &sort_perm);
+            });
+            // Maintain the live arrangement (used for the next phase).
+            x_cur = tracker.arrange(&data.rows, d);
+        }
+    }
+
+    let arranged = x_cur;
+    report.final_dpq = report
+        .sections
+        .time("dpq", || dpq16(&arranged, d, g));
+    report.wall_secs = watch.secs();
+    Ok(SortOutcome { perm: tracker.perm().clone(), arranged, report })
+}
+
+/// Argmax → validity check → extension iterations at sharpened τ → repair.
+#[allow(clippy::too_many_arguments)]
+fn extract_valid(
+    exe: &Executable,
+    w: &[f32],
+    x_shuf: &[f32],
+    inv_idx: &[i32],
+    tau: f32,
+    norm: f32,
+    first_idx: Vec<i32>,
+    max_extensions: usize,
+    adam: &mut Adam,
+    report: &mut RunReport,
+) -> Result<Permutation> {
+    let to_u32 = |v: &[i32]| v.iter().map(|&x| x as u32).collect::<Vec<u32>>();
+    let mut idx = to_u32(&first_idx);
+    if Permutation::count_duplicates(&idx) == 0 {
+        return Ok(Permutation::from_vec(idx).expect("checked"));
+    }
+
+    // Extend: keep optimizing at a sharpening temperature until valid.
+    let mut w = w.to_vec();
+    let mut tau_ext = tau;
+    for _ in 0..max_extensions {
+        report.extensions += 1;
+        tau_ext *= 0.6;
+        let out = report.sections.time("execute", || {
+            exe.run(&[
+                Arg::F32(&w),
+                Arg::F32(x_shuf),
+                Arg::I32(inv_idx),
+                Arg::ScalarF32(tau_ext),
+                Arg::ScalarF32(norm),
+            ])
+        })?;
+        adam.step(&mut w, out[1].as_f32());
+        idx = to_u32(out[2].as_i32());
+        if Permutation::count_duplicates(&idx) == 0 {
+            return Ok(Permutation::from_vec(idx).expect("checked"));
+        }
+    }
+
+    // Rare fallback: deterministic greedy repair (counted in the report —
+    // this is what the paper's "Stability" row measures).
+    let (perm, fixed) = repair(&idx);
+    report.repaired += fixed;
+    report.valid_without_repair = false;
+    Ok(perm)
+}

@@ -1,0 +1,122 @@
+//! Adam optimizer (Kingma & Ba) over flat f32 parameter vectors.
+//!
+//! Parameters live in Rust (the L2 artifacts are stateless step functions
+//! returning gradients), so the optimizer is Rust-side. The update loop is
+//! allocation-free after construction — it sits on the per-iteration hot
+//! path (N to N² parameters).
+
+#[derive(Clone, Debug)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+pub struct Adam {
+    cfg: AdamConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(cfg: AdamConfig, n: usize) -> Self {
+        Adam { cfg, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    /// Reset moments (fresh-`w` phases re-use the allocation).
+    pub fn reset(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.t = 0;
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.cfg.lr
+    }
+
+    pub fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    /// One in-place update step.
+    pub fn step(&mut self, params: &mut [f32], grad: &[f32]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1 = self.cfg.beta1;
+        let b2 = self.cfg.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let lr = self.cfg.lr;
+        let eps = self.cfg.eps;
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adam must minimize a simple convex quadratic.
+    #[test]
+    fn minimizes_quadratic() {
+        let mut adam = Adam::new(AdamConfig { lr: 0.1, ..Default::default() }, 3);
+        let target = [1.0f32, -2.0, 0.5];
+        let mut p = vec![5.0f32, 5.0, 5.0];
+        let mut g = vec![0.0f32; 3];
+        for _ in 0..500 {
+            for i in 0..3 {
+                g[i] = 2.0 * (p[i] - target[i]);
+            }
+            adam.step(&mut p, &g);
+        }
+        for i in 0..3 {
+            assert!((p[i] - target[i]).abs() < 1e-2, "p={p:?}");
+        }
+    }
+
+    #[test]
+    fn first_step_size_is_lr() {
+        // With bias correction, |Δp| of step 1 ≈ lr regardless of grad scale.
+        let mut adam = Adam::new(AdamConfig { lr: 0.25, ..Default::default() }, 1);
+        let mut p = vec![0.0f32];
+        adam.step(&mut p, &[1e-3]);
+        assert!((p[0] + 0.25).abs() < 1e-3, "p={}", p[0]);
+    }
+
+    #[test]
+    fn reset_restores_initial_state() {
+        // After reset, the update DELTA for a given gradient must equal a
+        // fresh optimizer's delta (moments zeroed, t back to 0).
+        let mut adam = Adam::new(AdamConfig::default(), 2);
+        let mut p = vec![1.0f32, 1.0];
+        adam.step(&mut p, &[0.5, -0.5]);
+        adam.reset();
+        let before = p.clone();
+        adam.step(&mut p, &[0.1, 0.2]);
+        let delta_reset = [p[0] - before[0], p[1] - before[1]];
+
+        let mut adam2 = Adam::new(AdamConfig::default(), 2);
+        let mut q = vec![7.0f32, -3.0];
+        adam2.step(&mut q, &[0.1, 0.2]);
+        let delta_fresh = [q[0] - 7.0, q[1] + 3.0];
+        // f32 subtraction at different magnitudes: tolerate a few ulps of 7.
+        assert!((delta_reset[0] - delta_fresh[0]).abs() < 1e-5);
+        assert!((delta_reset[1] - delta_fresh[1]).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,65 @@
+//! Temperature schedules (Algorithm 1).
+//!
+//! Outer: τ decays geometrically from τ_start=1 to τ_end=0.1 across the R
+//! phases. Inner: within a phase's I SoftSort iterations, τ_i ramps *up*
+//! from 0.2·τ to τ — the small initial temperature keeps the fresh linear
+//! weights locked to the previous order before exploration widens.
+
+#[derive(Clone, Debug)]
+pub struct TauSchedule {
+    pub tau_start: f32,
+    pub tau_end: f32,
+    /// Inner ramp start as a fraction of the phase temperature (paper: 0.2).
+    pub inner_frac: f32,
+}
+
+impl Default for TauSchedule {
+    fn default() -> Self {
+        TauSchedule { tau_start: 1.0, tau_end: 0.1, inner_frac: 0.2 }
+    }
+}
+
+impl TauSchedule {
+    /// Phase temperature: τ_start · (τ_end/τ_start)^(r/R)  (r is 1-based as
+    /// in Algorithm 1's exponent r/R; r=R gives exactly τ_end).
+    pub fn phase_tau(&self, r: usize, total: usize) -> f32 {
+        let total = total.max(1);
+        let t = (r + 1) as f32 / total as f32;
+        self.tau_start * (self.tau_end / self.tau_start).powf(t)
+    }
+
+    /// Inner iteration temperature: linear ramp inner_frac·τ → τ over I.
+    pub fn inner_tau(&self, phase_tau: f32, i: usize, inner_total: usize) -> f32 {
+        if inner_total <= 1 {
+            return phase_tau;
+        }
+        let t = i as f32 / (inner_total - 1) as f32;
+        phase_tau * (self.inner_frac + (1.0 - self.inner_frac) * t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_tau_endpoints_and_monotonicity() {
+        let s = TauSchedule::default();
+        let r_total = 100;
+        assert!((s.phase_tau(r_total - 1, r_total) - 0.1).abs() < 1e-6);
+        assert!(s.phase_tau(0, r_total) < 1.0);
+        for r in 1..r_total {
+            assert!(s.phase_tau(r, r_total) < s.phase_tau(r - 1, r_total));
+        }
+    }
+
+    #[test]
+    fn inner_ramp_bounds() {
+        let s = TauSchedule::default();
+        let tau = 0.5;
+        assert!((s.inner_tau(tau, 0, 4) - 0.1).abs() < 1e-6); // 0.2 · 0.5
+        assert!((s.inner_tau(tau, 3, 4) - 0.5).abs() < 1e-6);
+        assert!(s.inner_tau(tau, 1, 4) < s.inner_tau(tau, 2, 4));
+        assert_eq!(s.inner_tau(tau, 0, 1), tau);
+    }
+}

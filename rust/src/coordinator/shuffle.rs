@@ -1,0 +1,125 @@
+//! Shuffle strategies — the "Shuffle" in ShuffleSoftSort.
+//!
+//! Algorithm 1 uses `randperm(N)`. The paper's conclusion additionally
+//! mentions alternating horizontal/vertical sorting for grids, which is a
+//! *scan-order* shuffle (grid/ScanOrder). `Mixed` interleaves both: scan
+//! orders give SoftSort direct row/column mobility, random permutations
+//! give long-range moves. The ablation bench (E8) compares all three.
+
+use crate::grid::{GridShape, ScanOrder};
+use crate::perm::Permutation;
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShuffleStrategy {
+    /// Fresh uniform random permutation every phase (Algorithm 1).
+    Random,
+    /// Cycle snake-rows / snake-cols scans (pure H/V alternation).
+    AlternatingScan,
+    /// Alternate scan phases with random phases (default).
+    Mixed,
+    /// No shuffling at all — turns the driver into plain SoftSort.
+    Identity,
+}
+
+impl ShuffleStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "random" => Some(Self::Random),
+            "scan" | "alternating" => Some(Self::AlternatingScan),
+            "mixed" => Some(Self::Mixed),
+            "identity" | "none" => Some(Self::Identity),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Random => "random",
+            Self::AlternatingScan => "scan",
+            Self::Mixed => "mixed",
+            Self::Identity => "identity",
+        }
+    }
+
+    /// The shuffle permutation for phase `r`.
+    pub fn shuffle_for_phase(&self, r: usize, g: GridShape, rng: &mut Pcg32) -> Permutation {
+        let scans = [ScanOrder::SnakeRows, ScanOrder::SnakeCols];
+        match self {
+            Self::Identity => Permutation::identity(g.n()),
+            Self::Random => Permutation::from_vec(rng.permutation(g.n()))
+                .expect("rng permutations are valid"),
+            Self::AlternatingScan => {
+                if g.h == 1 {
+                    // 1-D problem: alternate identity and reversal-ish snake.
+                    scans[0].permutation(g)
+                } else {
+                    scans[r % 2].permutation(g)
+                }
+            }
+            Self::Mixed => {
+                if r % 2 == 0 {
+                    if g.h == 1 {
+                        Permutation::from_vec(rng.permutation(g.n())).unwrap()
+                    } else {
+                        scans[(r / 2) % 2].permutation(g)
+                    }
+                } else {
+                    Permutation::from_vec(rng.permutation(g.n())).unwrap()
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        for s in [
+            ShuffleStrategy::Random,
+            ShuffleStrategy::AlternatingScan,
+            ShuffleStrategy::Mixed,
+            ShuffleStrategy::Identity,
+        ] {
+            assert_eq!(ShuffleStrategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(ShuffleStrategy::parse("bogus"), None);
+    }
+
+    #[test]
+    fn identity_is_identity() {
+        let g = GridShape::new(4, 4);
+        let mut rng = Pcg32::new(1);
+        let p = ShuffleStrategy::Identity.shuffle_for_phase(3, g, &mut rng);
+        assert_eq!(p, Permutation::identity(16));
+    }
+
+    #[test]
+    fn all_strategies_produce_valid_perms() {
+        let g = GridShape::new(8, 8);
+        let mut rng = Pcg32::new(2);
+        for s in [
+            ShuffleStrategy::Random,
+            ShuffleStrategy::AlternatingScan,
+            ShuffleStrategy::Mixed,
+        ] {
+            for r in 0..6 {
+                let p = s.shuffle_for_phase(r, g, &mut rng);
+                assert_eq!(p.len(), 64);
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_alternates_scan_and_random() {
+        let g = GridShape::new(4, 4);
+        let mut rng = Pcg32::new(3);
+        let p0 = ShuffleStrategy::Mixed.shuffle_for_phase(0, g, &mut rng);
+        assert_eq!(p0, ScanOrder::SnakeRows.permutation(g));
+        let p2 = ShuffleStrategy::Mixed.shuffle_for_phase(2, g, &mut rng);
+        assert_eq!(p2, ScanOrder::SnakeCols.permutation(g));
+    }
+}

@@ -1,0 +1,130 @@
+//! Workload generators for every experiment (DESIGN.md §4):
+//! random RGB colors (Table 2 / Fig. 1), clustered feature vectors
+//! (Fig. 5's e-commerce stand-in) and re-exported synthetic Gaussian scenes
+//! (Fig. 6, see `crate::sog::scene`).
+
+use crate::util::rng::Pcg32;
+
+/// A row-major `[n, d]` dataset with provenance metadata.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub n: usize,
+    pub d: usize,
+    pub rows: Vec<f32>,
+    /// Optional ground-truth cluster labels (Fig. 5 coherence metric).
+    pub labels: Option<Vec<u32>>,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.rows[i * self.d..(i + 1) * self.d]
+    }
+}
+
+/// `n` uniform random RGB colors — the paper's Table 2 / Fig. 1 workload.
+pub fn random_colors(n: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg32::new(seed);
+    let rows = (0..n * 3).map(|_| rng.f32()).collect();
+    Dataset { name: format!("colors{n}"), n, d: 3, rows, labels: None }
+}
+
+/// Clustered synthetic "low-level visual feature" vectors — the Fig. 5
+/// e-commerce stand-in (DESIGN.md §3 substitutions): `k` isotropic Gaussian
+/// clusters in `d` dims with per-cluster spread, L2-clipped to [0, 1].
+pub fn clustered_features(n: usize, d: usize, k: usize, spread: f32, seed: u64) -> Dataset {
+    assert!(k >= 1);
+    let mut rng = Pcg32::new(seed);
+    let centers: Vec<f32> = (0..k * d).map(|_| rng.f32()).collect();
+    let mut rows = Vec::with_capacity(n * d);
+    let mut labels = Vec::with_capacity(n);
+    // Balanced but randomly ordered assignment — a cyclic i%k would align
+    // cluster-mates vertically on a k-divisible grid and pre-sort the data.
+    let mut assignment: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+    rng.shuffle(&mut assignment);
+    for i in 0..n {
+        let c = assignment[i];
+        labels.push(c);
+        for j in 0..d {
+            let v = centers[c as usize * d + j] + rng.gaussian() * spread;
+            rows.push(v.clamp(0.0, 1.0));
+        }
+    }
+    Dataset { name: format!("features{n}x{d}k{k}"), n, d, rows, labels: Some(labels) }
+}
+
+/// The Fig. 3 1-D toy: colors around the hue circle, deliberately arranged
+/// so plain SoftSort starts in the local optimum the paper illustrates
+/// (yellow and magenta swapped relative to the smooth circular order).
+pub fn fig3_colors() -> Dataset {
+    // 8 hues; perfect order is the hue circle; start order swaps two distant
+    // entries so fixing it requires moving through dissimilar intermediates.
+    let hues = [
+        [1.0, 0.0, 0.0], // red
+        [1.0, 0.0, 1.0], // magenta  (swapped with yellow)
+        [1.0, 1.0, 0.0], // ...
+        [0.5, 1.0, 0.0],
+        [0.0, 1.0, 0.0], // green
+        [0.0, 1.0, 1.0], // cyan
+        [0.0, 0.0, 1.0], // blue
+        [0.5, 0.0, 1.0],
+    ];
+    let mut rows = Vec::with_capacity(8 * 3);
+    let order = [0usize, 2, 1, 3, 4, 5, 6, 7]; // swap yellow/magenta
+    for &i in &order {
+        rows.extend_from_slice(&hues[i]);
+    }
+    // Tile to N=16 by interpolating midpoints (keeps the structure, matches
+    // the smallest shipped artifact).
+    let mut out = Vec::with_capacity(16 * 3);
+    for i in 0..8 {
+        let a = &rows[i * 3..i * 3 + 3];
+        let b = &rows[((i + 1) % 8) * 3..((i + 1) % 8) * 3 + 3];
+        out.extend_from_slice(a);
+        out.extend(a.iter().zip(b).map(|(x, y)| 0.5 * (x + y)));
+    }
+    Dataset { name: "fig3".into(), n: 16, d: 3, rows: out, labels: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn colors_shape_and_range() {
+        let ds = random_colors(100, 1);
+        assert_eq!((ds.n, ds.d, ds.rows.len()), (100, 3, 300));
+        assert!(ds.rows.iter().all(|v| (0.0..1.0).contains(v)));
+        // Deterministic per seed, varies across seeds.
+        assert_eq!(random_colors(100, 1).rows, ds.rows);
+        assert_ne!(random_colors(100, 2).rows, ds.rows);
+    }
+
+    #[test]
+    fn clusters_are_separated() {
+        let ds = clustered_features(200, 8, 4, 0.02, 3);
+        let labels = ds.labels.as_ref().unwrap();
+        // Mean intra-cluster distance must be well below inter-cluster.
+        let (mut intra, mut inter, mut ni, mut ne) = (0.0f64, 0.0f64, 0, 0);
+        for i in 0..ds.n {
+            for j in (i + 1)..ds.n {
+                let dist = crate::util::stats::l2(ds.row(i), ds.row(j)) as f64;
+                if labels[i] == labels[j] {
+                    intra += dist;
+                    ni += 1;
+                } else {
+                    inter += dist;
+                    ne += 1;
+                }
+            }
+        }
+        assert!(intra / ni as f64 * 3.0 < inter / ne as f64);
+    }
+
+    #[test]
+    fn fig3_has_16_rgb_rows() {
+        let ds = fig3_colors();
+        assert_eq!((ds.n, ds.d), (16, 3));
+        assert!(ds.rows.iter().all(|v| (0.0..=1.0).contains(v)));
+    }
+}

@@ -1,0 +1,84 @@
+//! Dimensionality-reduction substrate for the "project then LAP to grid"
+//! baseline (paper §I-B: t-SNE/UMAP + Jonker–Volgenant).
+
+pub mod pca;
+pub mod tsne;
+
+use crate::assignment::jv;
+use crate::grid::GridShape;
+use crate::heuristics::GridSorter;
+use crate::perm::Permutation;
+
+/// Project to 2-D (PCA or t-SNE) then assign points to grid cells with JV —
+/// the §I-B pipeline [5], [6].
+pub struct DrLap {
+    pub use_tsne: bool,
+}
+
+impl GridSorter for DrLap {
+    fn name(&self) -> &'static str {
+        if self.use_tsne {
+            "tSNE+LAP"
+        } else {
+            "PCA+LAP"
+        }
+    }
+
+    fn sort(&self, data: &[f32], d: usize, g: GridShape, seed: u64) -> Permutation {
+        let n = g.n();
+        let pos = if self.use_tsne {
+            tsne::tsne_2d(data, n, d, &tsne::TsneConfig::default(), seed)
+        } else {
+            pca::project_2d(data, n, d)
+        };
+        // Normalize projected coords to grid extent.
+        let (mut min_x, mut max_x, mut min_y, mut max_y) =
+            (f32::INFINITY, f32::NEG_INFINITY, f32::INFINITY, f32::NEG_INFINITY);
+        for p in pos.chunks_exact(2) {
+            min_x = min_x.min(p[0]);
+            max_x = max_x.max(p[0]);
+            min_y = min_y.min(p[1]);
+            max_y = max_y.max(p[1]);
+        }
+        let sx = (g.w - 1) as f32 / (max_x - min_x).max(1e-9);
+        let sy = (g.h - 1) as f32 / (max_y - min_y).max(1e-9);
+
+        // Cost: squared distance from scaled point to cell center.
+        let mut cost = vec![0.0f64; n * n];
+        for item in 0..n {
+            let px = (pos[item * 2] - min_x) * sx;
+            let py = (pos[item * 2 + 1] - min_y) * sy;
+            for cell in 0..n {
+                let (r, c) = g.coords(cell);
+                let dx = px - c as f32;
+                let dy = py - r as f32;
+                cost[item * n + cell] = (dx * dx + dy * dy) as f64;
+            }
+        }
+        let item_to_cell = jv::solve(&cost, n);
+        let mut assign = vec![0u32; n];
+        for (item, &cell) in item_to_cell.iter().enumerate() {
+            assign[cell as usize] = item as u32;
+        }
+        Permutation::from_vec(assign).expect("JV yields a bijection")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::random_colors;
+    use crate::metrics::mean_neighbor_distance;
+
+    #[test]
+    fn pca_lap_improves_over_random() {
+        let g = GridShape::new(8, 8);
+        let ds = random_colors(64, 35);
+        let p = DrLap { use_tsne: false }.sort(&ds.rows, 3, g, 11);
+        let arranged = p.apply_rows(&ds.rows, 3);
+        assert!(
+            mean_neighbor_distance(&arranged, 3, g)
+                < mean_neighbor_distance(&ds.rows, 3, g)
+        );
+    }
+}

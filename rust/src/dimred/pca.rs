@@ -1,0 +1,134 @@
+//! PCA via power iteration with deflation — enough for the 2-D projection
+//! the DR+LAP baseline needs (no LAPACK offline).
+
+/// Project `[n, d]` data onto its top-2 principal components → `[n, 2]`.
+pub fn project_2d(data: &[f32], n: usize, d: usize) -> Vec<f32> {
+    assert_eq!(data.len(), n * d);
+    if d <= 2 {
+        // Already ≤2-D: pad/copy.
+        let mut out = vec![0.0f32; n * 2];
+        for i in 0..n {
+            out[i * 2] = data[i * d];
+            out[i * 2 + 1] = if d > 1 { data[i * d + 1] } else { 0.0 };
+        }
+        return out;
+    }
+
+    // Column means.
+    let mut mean = vec![0.0f64; d];
+    for row in data.chunks_exact(d) {
+        for (m, &v) in mean.iter_mut().zip(row) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+
+    // Covariance (d×d, f64).
+    let mut cov = vec![0.0f64; d * d];
+    for row in data.chunks_exact(d) {
+        for i in 0..d {
+            let ci = row[i] as f64 - mean[i];
+            for j in i..d {
+                cov[i * d + j] += ci * (row[j] as f64 - mean[j]);
+            }
+        }
+    }
+    for i in 0..d {
+        for j in 0..i {
+            cov[i * d + j] = cov[j * d + i];
+        }
+    }
+    let scale = 1.0 / (n.max(2) - 1) as f64;
+    cov.iter_mut().for_each(|v| *v *= scale);
+
+    // Top-2 eigenvectors by power iteration + deflation.
+    let mut components = Vec::with_capacity(2);
+    let mut work = cov.clone();
+    for k in 0..2 {
+        let mut v: Vec<f64> = (0..d).map(|i| ((i + k + 1) as f64).sin() + 0.5).collect();
+        normalize(&mut v);
+        let mut lambda = 0.0f64;
+        for _ in 0..200 {
+            let mut nv = vec![0.0f64; d];
+            for i in 0..d {
+                let mut s = 0.0;
+                for j in 0..d {
+                    s += work[i * d + j] * v[j];
+                }
+                nv[i] = s;
+            }
+            let nl = normalize(&mut nv);
+            let delta: f64 = nv.iter().zip(&v).map(|(a, b)| (a - b).abs()).sum();
+            v = nv;
+            lambda = nl;
+            if delta < 1e-12 {
+                break;
+            }
+        }
+        // Deflate: work -= λ v vᵀ
+        for i in 0..d {
+            for j in 0..d {
+                work[i * d + j] -= lambda * v[i] * v[j];
+            }
+        }
+        components.push(v);
+    }
+
+    let mut out = vec![0.0f32; n * 2];
+    for (i, row) in data.chunks_exact(d).enumerate() {
+        for (k, comp) in components.iter().enumerate() {
+            let mut s = 0.0f64;
+            for j in 0..d {
+                s += (row[j] as f64 - mean[j]) * comp[j];
+            }
+            out[i * 2 + k] = s as f32;
+        }
+    }
+    out
+}
+
+fn normalize(v: &mut [f64]) -> f64 {
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+    v.iter_mut().for_each(|x| *x /= norm);
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn recovers_dominant_axis() {
+        // Data stretched 10x along a known direction in 5-D.
+        let mut rng = Pcg32::new(51);
+        let n = 300;
+        let d = 5;
+        let axis = [1.0f32, 2.0, -1.0, 0.5, 0.0];
+        let norm: f32 = axis.iter().map(|a| a * a).sum::<f32>().sqrt();
+        let mut data = vec![0.0f32; n * d];
+        for i in 0..n {
+            let t = rng.gaussian() * 10.0;
+            for j in 0..d {
+                data[i * d + j] = t * axis[j] / norm + rng.gaussian() * 0.1;
+            }
+        }
+        let proj = project_2d(&data, n, d);
+        // Variance of PC1 must dwarf PC2.
+        let (mut v1, mut v2) = (0.0f64, 0.0f64);
+        for p in proj.chunks_exact(2) {
+            v1 += (p[0] as f64).powi(2);
+            v2 += (p[1] as f64).powi(2);
+        }
+        assert!(v1 > 20.0 * v2, "v1={v1} v2={v2}");
+    }
+
+    #[test]
+    fn low_dim_passthrough() {
+        let data = vec![1.0, 2.0, 3.0, 4.0];
+        let out = project_2d(&data, 2, 2);
+        assert_eq!(out, data);
+    }
+}

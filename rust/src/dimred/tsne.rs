@@ -1,0 +1,217 @@
+//! Exact (O(N²)) t-SNE [19] — small-N projection for the DR+LAP baseline.
+//!
+//! Standard formulation: per-point perplexity calibration by bisection on
+//! the Gaussian bandwidth, symmetrized affinities, Student-t low-dim
+//! kernel, gradient descent with momentum and early exaggeration. N ≤ a few
+//! thousand is fine; the baseline benches use N ≤ 1024.
+
+use crate::dimred::pca::project_2d;
+use crate::util::rng::Pcg32;
+use crate::util::stats::l2_sq;
+
+pub struct TsneConfig {
+    pub perplexity: f64,
+    pub iters: usize,
+    pub learning_rate: f64,
+    pub early_exaggeration: f64,
+    pub exaggeration_iters: usize,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig {
+            perplexity: 20.0,
+            iters: 300,
+            learning_rate: 100.0,
+            early_exaggeration: 4.0,
+            exaggeration_iters: 60,
+        }
+    }
+}
+
+/// Project `[n, d]` data to 2-D with exact t-SNE. Deterministic per seed.
+pub fn tsne_2d(data: &[f32], n: usize, d: usize, cfg: &TsneConfig, seed: u64) -> Vec<f32> {
+    assert_eq!(data.len(), n * d);
+    if n <= 3 {
+        return project_2d(data, n, d);
+    }
+
+    // Pairwise squared distances.
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = l2_sq(&data[i * d..(i + 1) * d], &data[j * d..(j + 1) * d]) as f64;
+            d2[i * n + j] = v;
+            d2[j * n + i] = v;
+        }
+    }
+
+    // Conditional affinities with per-point bandwidth matching perplexity.
+    let target_h = cfg.perplexity.min((n - 1) as f64 / 3.0).max(2.0).ln();
+    let mut p = vec![0.0f64; n * n];
+    for i in 0..n {
+        let row = &d2[i * n..(i + 1) * n];
+        let (mut beta, mut beta_lo, mut beta_hi) = (1.0f64, 0.0f64, f64::INFINITY);
+        for _ in 0..50 {
+            let mut sum = 0.0;
+            let mut sum_dp = 0.0;
+            for j in 0..n {
+                if j != i {
+                    let e = (-row[j] * beta).exp();
+                    sum += e;
+                    sum_dp += row[j] * e;
+                }
+            }
+            let sum = sum.max(1e-300);
+            let h = sum.ln() + beta * sum_dp / sum;
+            if (h - target_h).abs() < 1e-5 {
+                break;
+            }
+            if h > target_h {
+                beta_lo = beta;
+                beta = if beta_hi.is_finite() { 0.5 * (beta + beta_hi) } else { beta * 2.0 };
+            } else {
+                beta_hi = beta;
+                beta = 0.5 * (beta + beta_lo);
+            }
+        }
+        let mut sum = 0.0;
+        for j in 0..n {
+            if j != i {
+                let e = (-row[j] * beta).exp();
+                p[i * n + j] = e;
+                sum += e;
+            }
+        }
+        let inv = 1.0 / sum.max(1e-300);
+        for j in 0..n {
+            p[i * n + j] *= inv;
+        }
+    }
+
+    // Symmetrize; apply early exaggeration.
+    let mut pij = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            pij[i * n + j] = ((p[i * n + j] + p[j * n + i]) / (2.0 * n as f64)).max(1e-12);
+        }
+    }
+
+    // Init from PCA (deterministic) + tiny jitter.
+    let mut rng = Pcg32::new(seed);
+    let pca = project_2d(data, n, d);
+    let scale = {
+        let m = pca.iter().fold(0.0f32, |a, &b| a.max(b.abs())).max(1e-6);
+        1e-2 / m
+    };
+    let mut y: Vec<f64> = pca.iter().map(|&v| (v * scale) as f64).collect();
+    for v in &mut y {
+        *v += rng.gaussian() as f64 * 1e-4;
+    }
+    let mut vel = vec![0.0f64; n * 2];
+    let mut grad = vec![0.0f64; n * 2];
+    let mut q = vec![0.0f64; n * n];
+
+    for it in 0..cfg.iters {
+        let exag = if it < cfg.exaggeration_iters { cfg.early_exaggeration } else { 1.0 };
+
+        // Student-t kernel and normalizer.
+        let mut zsum = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dx = y[i * 2] - y[j * 2];
+                let dy = y[i * 2 + 1] - y[j * 2 + 1];
+                let qv = 1.0 / (1.0 + dx * dx + dy * dy);
+                q[i * n + j] = qv;
+                q[j * n + i] = qv;
+                zsum += 2.0 * qv;
+            }
+        }
+        let zsum = zsum.max(1e-300);
+
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    let qv = q[i * n + j];
+                    let mult = (exag * pij[i * n + j] - qv / zsum) * qv;
+                    let dx = y[i * 2] - y[j * 2];
+                    let dy = y[i * 2 + 1] - y[j * 2 + 1];
+                    grad[i * 2] += 4.0 * mult * dx;
+                    grad[i * 2 + 1] += 4.0 * mult * dy;
+                }
+            }
+        }
+
+        let momentum = if it < 100 { 0.5 } else { 0.8 };
+        for k in 0..n * 2 {
+            vel[k] = momentum * vel[k] - cfg.learning_rate * grad[k];
+            y[k] += vel[k];
+        }
+        // Re-center (translation invariance).
+        let (mut mx, mut my) = (0.0f64, 0.0f64);
+        for i in 0..n {
+            mx += y[i * 2];
+            my += y[i * 2 + 1];
+        }
+        mx /= n as f64;
+        my /= n as f64;
+        for i in 0..n {
+            y[i * 2] -= mx;
+            y[i * 2 + 1] -= my;
+        }
+    }
+
+    y.iter().map(|&v| v as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Two well-separated clusters must stay separated in the embedding.
+    #[test]
+    fn separates_two_clusters() {
+        let mut rng = Pcg32::new(61);
+        let n = 60;
+        let d = 8;
+        let mut data = vec![0.0f32; n * d];
+        for i in 0..n {
+            let offset = if i < n / 2 { 0.0 } else { 5.0 };
+            for j in 0..d {
+                data[i * d + j] = offset + rng.gaussian() * 0.2;
+            }
+        }
+        let y = tsne_2d(&data, n, d, &TsneConfig { iters: 200, ..Default::default() }, 1);
+        // Centroid distance must exceed mean intra-cluster spread.
+        let centroid = |range: std::ops::Range<usize>| -> (f64, f64) {
+            let mut c = (0.0, 0.0);
+            for i in range.clone() {
+                c.0 += y[i * 2] as f64;
+                c.1 += y[i * 2 + 1] as f64;
+            }
+            let len = range.len() as f64;
+            (c.0 / len, c.1 / len)
+        };
+        let a = centroid(0..n / 2);
+        let b = centroid(n / 2..n);
+        let sep = ((a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)).sqrt();
+        let mut spread = 0.0f64;
+        for i in 0..n / 2 {
+            spread += ((y[i * 2] as f64 - a.0).powi(2)
+                + (y[i * 2 + 1] as f64 - a.1).powi(2))
+            .sqrt();
+        }
+        spread /= (n / 2) as f64;
+        assert!(sep > 2.0 * spread, "sep={sep} spread={spread}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Pcg32::new(62);
+        let data: Vec<f32> = (0..40 * 4).map(|_| rng.f32()).collect();
+        let cfg = TsneConfig { iters: 50, ..Default::default() };
+        assert_eq!(tsne_2d(&data, 40, 4, &cfg, 3), tsne_2d(&data, 40, 4, &cfg, 3));
+    }
+}

@@ -1,0 +1,192 @@
+//! Grid topology: shapes, scan orders (the 1-D ↔ 2-D bridge ShuffleSoftSort
+//! relies on), coordinates and neighbor enumeration.
+//!
+//! ShuffleSoftSort learns a *1-D* order; grid sorting interprets that order
+//! through a scan. The "alternating horizontal and vertical" shuffles the
+//! paper's conclusion mentions are exactly scan-order changes: sorting along
+//! the column-major scan lets elements move within columns, which the
+//! row-major order cannot express (Fig. 3's failure mode).
+
+use crate::perm::Permutation;
+
+/// An H×W grid; cells are addressed by the row-major linear index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GridShape {
+    pub h: usize,
+    pub w: usize,
+}
+
+impl GridShape {
+    pub fn new(h: usize, w: usize) -> Self {
+        assert!(h >= 1 && w >= 1);
+        GridShape { h, w }
+    }
+
+    pub fn n(&self) -> usize {
+        self.h * self.w
+    }
+
+    #[inline]
+    pub fn coords(&self, i: usize) -> (usize, usize) {
+        (i / self.w, i % self.w)
+    }
+
+    #[inline]
+    pub fn index(&self, r: usize, c: usize) -> usize {
+        r * self.w + c
+    }
+
+    /// All horizontally/vertically adjacent cell pairs (the L_nbr support).
+    pub fn neighbor_pairs(&self) -> Vec<(u32, u32)> {
+        let mut pairs = Vec::with_capacity(2 * self.n());
+        for r in 0..self.h {
+            for c in 0..self.w {
+                let i = self.index(r, c) as u32;
+                if c + 1 < self.w {
+                    pairs.push((i, self.index(r, c + 1) as u32));
+                }
+                if r + 1 < self.h {
+                    pairs.push((i, self.index(r + 1, c) as u32));
+                }
+            }
+        }
+        pairs
+    }
+
+    /// Squared Euclidean distance between two cells' centers.
+    #[inline]
+    pub fn cell_dist_sq(&self, a: usize, b: usize) -> f32 {
+        let (ar, ac) = self.coords(a);
+        let (br, bc) = self.coords(b);
+        let dr = ar as f32 - br as f32;
+        let dc = ac as f32 - bc as f32;
+        dr * dr + dc * dc
+    }
+}
+
+/// Scan orders: permutations mapping *scan position → row-major cell index*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScanOrder {
+    /// Row-major (the identity scan).
+    RowMajor,
+    /// Column-major: transposes the roles of rows and columns.
+    ColMajor,
+    /// Boustrophedon rows (every odd row reversed) — keeps 1-D neighbors
+    /// spatially adjacent across row boundaries.
+    SnakeRows,
+    /// Boustrophedon columns.
+    SnakeCols,
+}
+
+impl ScanOrder {
+    /// The scan as a permutation: `p[k]` = row-major index of the k-th cell
+    /// visited.
+    pub fn permutation(&self, g: GridShape) -> Permutation {
+        let mut idx = Vec::with_capacity(g.n());
+        match self {
+            ScanOrder::RowMajor => {
+                return Permutation::identity(g.n());
+            }
+            ScanOrder::ColMajor => {
+                for c in 0..g.w {
+                    for r in 0..g.h {
+                        idx.push(g.index(r, c) as u32);
+                    }
+                }
+            }
+            ScanOrder::SnakeRows => {
+                for r in 0..g.h {
+                    if r % 2 == 0 {
+                        for c in 0..g.w {
+                            idx.push(g.index(r, c) as u32);
+                        }
+                    } else {
+                        for c in (0..g.w).rev() {
+                            idx.push(g.index(r, c) as u32);
+                        }
+                    }
+                }
+            }
+            ScanOrder::SnakeCols => {
+                for c in 0..g.w {
+                    if c % 2 == 0 {
+                        for r in 0..g.h {
+                            idx.push(g.index(r, c) as u32);
+                        }
+                    } else {
+                        for r in (0..g.h).rev() {
+                            idx.push(g.index(r, c) as u32);
+                        }
+                    }
+                }
+            }
+        }
+        Permutation::from_vec(idx).expect("scan orders are bijections")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coords_round_trip() {
+        let g = GridShape::new(3, 5);
+        for i in 0..g.n() {
+            let (r, c) = g.coords(i);
+            assert_eq!(g.index(r, c), i);
+        }
+    }
+
+    #[test]
+    fn neighbor_pair_count() {
+        // H*(W-1) horizontal + (H-1)*W vertical
+        let g = GridShape::new(4, 7);
+        assert_eq!(g.neighbor_pairs().len(), 4 * 6 + 3 * 7);
+        let line = GridShape::new(1, 9);
+        assert_eq!(line.neighbor_pairs().len(), 8);
+    }
+
+    #[test]
+    fn all_scans_are_bijections() {
+        let g = GridShape::new(6, 4);
+        for s in [ScanOrder::RowMajor, ScanOrder::ColMajor, ScanOrder::SnakeRows, ScanOrder::SnakeCols] {
+            let p = s.permutation(g);
+            assert_eq!(p.len(), 24); // from_vec validates bijectivity
+        }
+    }
+
+    #[test]
+    fn colmajor_small_example() {
+        let g = GridShape::new(2, 3);
+        // cells: 0 1 2 / 3 4 5 ; column-major visit: 0,3,1,4,2,5
+        let p = ScanOrder::ColMajor.permutation(g);
+        assert_eq!(p.as_slice(), &[0, 3, 1, 4, 2, 5]);
+    }
+
+    #[test]
+    fn snake_rows_small_example() {
+        let g = GridShape::new(2, 3);
+        let p = ScanOrder::SnakeRows.permutation(g);
+        assert_eq!(p.as_slice(), &[0, 1, 2, 5, 4, 3]);
+    }
+
+    #[test]
+    fn snake_scan_consecutive_cells_are_grid_adjacent() {
+        let g = GridShape::new(5, 8);
+        for s in [ScanOrder::SnakeRows, ScanOrder::SnakeCols] {
+            let p = s.permutation(g);
+            for k in 0..g.n() - 1 {
+                let d = g.cell_dist_sq(p.as_slice()[k] as usize, p.as_slice()[k + 1] as usize);
+                assert_eq!(d, 1.0, "scan {s:?} breaks adjacency at {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn cell_dist() {
+        let g = GridShape::new(4, 4);
+        assert_eq!(g.cell_dist_sq(0, 5), 2.0);
+        assert_eq!(g.cell_dist_sq(0, 3), 9.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Fast Linear Assignment Sorting (Barthel et al. [3]).
+//!
+//! LAS merges SOM's continuously filtered map with SSM's swaps by solving a
+//! *linear assignment* between items and (blurred) map cells each epoch.
+//! FLAS keeps the quality close to LAS at much lower cost by solving the
+//! assignment on random subsets of cells instead of the full grid. Both are
+//! provided: `Flas { subset: None }` is exact LAS, `subset: Some(k)` is
+//! FLAS with k-cell batches.
+
+use super::{blur_map, GridSorter};
+use crate::assignment::jv;
+use crate::grid::GridShape;
+use crate::perm::Permutation;
+use crate::util::rng::Pcg32;
+use crate::util::stats::l2_sq;
+
+pub struct Flas {
+    pub epochs: usize,
+    /// None → full-grid assignment every epoch (LAS).
+    /// Some(k) → per-epoch random disjoint batches of k cells (FLAS).
+    pub subset: Option<usize>,
+    pub sigma_end: f32,
+}
+
+impl Default for Flas {
+    fn default() -> Self {
+        Flas { epochs: 24, subset: Some(64), sigma_end: 0.25 }
+    }
+}
+
+impl Flas {
+    pub fn las(epochs: usize) -> Self {
+        Flas { epochs, subset: None, sigma_end: 0.25 }
+    }
+
+    fn sigma(&self, g: GridShape, e: usize) -> f32 {
+        let s0 = g.w.max(g.h) as f32 / 3.0;
+        let t = e as f32 / (self.epochs.max(2) - 1) as f32;
+        s0 * (self.sigma_end / s0).powf(t)
+    }
+}
+
+impl GridSorter for Flas {
+    fn name(&self) -> &'static str {
+        if self.subset.is_none() {
+            "LAS"
+        } else {
+            "FLAS"
+        }
+    }
+
+    fn sort(&self, data: &[f32], d: usize, g: GridShape, seed: u64) -> Permutation {
+        let n = g.n();
+        assert_eq!(data.len(), n * d);
+        let mut rng = Pcg32::new(seed);
+        let mut assign = rng.permutation(n); // cell -> item
+
+        for e in 0..self.epochs {
+            // Blurred map of the current arrangement = assignment targets.
+            let mut map = Permutation::from_vec(assign.clone()).unwrap().apply_rows(data, d);
+            blur_map(&mut map, d, g, self.sigma(g, e));
+
+            match self.subset {
+                None => {
+                    // LAS: full n×n assignment item→cell.
+                    let mut cost = vec![0.0f64; n * n];
+                    for (cell, chunk) in map.chunks_exact(d).enumerate() {
+                        for item in 0..n {
+                            cost[item * n + cell] =
+                                l2_sq(&data[item * d..(item + 1) * d], chunk) as f64;
+                        }
+                    }
+                    let item_to_cell = jv::solve(&cost, n);
+                    for (item, &cell) in item_to_cell.iter().enumerate() {
+                        assign[cell as usize] = item as u32;
+                    }
+                }
+                Some(k) => {
+                    // FLAS: shuffle cells, solve disjoint k-cell LAPs among
+                    // the items currently occupying those cells.
+                    let mut cells = rng.permutation(n);
+                    let k = k.clamp(2, n);
+                    for batch in cells.chunks_mut(k) {
+                        let b = batch.len();
+                        let mut cost = vec![0.0f64; b * b];
+                        for (ci, &cell) in batch.iter().enumerate() {
+                            let target = &map[cell as usize * d..(cell as usize + 1) * d];
+                            for (ii, &src_cell) in batch.iter().enumerate() {
+                                let item = assign[src_cell as usize] as usize;
+                                cost[ii * b + ci] =
+                                    l2_sq(&data[item * d..(item + 1) * d], target) as f64;
+                            }
+                        }
+                        let sol = jv::solve(&cost, b);
+                        let items: Vec<u32> =
+                            batch.iter().map(|&c| assign[c as usize]).collect();
+                        for (ii, &ci) in sol.iter().enumerate() {
+                            assign[batch[ci as usize] as usize] = items[ii];
+                        }
+                    }
+                }
+            }
+        }
+        Permutation::from_vec(assign).expect("assignment rounds preserve bijectivity")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::random_colors;
+    use crate::metrics::{dpq16, mean_neighbor_distance};
+
+    #[test]
+    fn flas_improves_over_random() {
+        let g = GridShape::new(8, 8);
+        let ds = random_colors(64, 25);
+        let p = Flas::default().sort(&ds.rows, 3, g, 9);
+        let arranged = p.apply_rows(&ds.rows, 3);
+        assert!(
+            mean_neighbor_distance(&arranged, 3, g)
+                < 0.75 * mean_neighbor_distance(&ds.rows, 3, g)
+        );
+    }
+
+    #[test]
+    fn las_at_least_as_good_as_flas_small() {
+        let g = GridShape::new(8, 8);
+        let ds = random_colors(64, 26);
+        let flas = Flas::default().sort(&ds.rows, 3, g, 10);
+        let las = Flas::las(24).sort(&ds.rows, 3, g, 10);
+        let q_flas = dpq16(&flas.apply_rows(&ds.rows, 3), 3, g);
+        let q_las = dpq16(&las.apply_rows(&ds.rows, 3), 3, g);
+        // LAS solves the full assignment; allow small stochastic slack.
+        assert!(q_las > q_flas - 0.07, "LAS {q_las} vs FLAS {q_flas}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Heuristic distance-preserving grid-layout baselines (paper §I-B).
+//!
+//! All operate on row-major `[n, d]` data and return a `Permutation`
+//! (grid position → item index), so they plug into the same DPQ/metrics
+//! pipeline as the learned methods. Compared in `benches/heuristics.rs`.
+
+pub mod flas;
+pub mod som;
+pub mod ssm;
+
+use crate::grid::GridShape;
+use crate::perm::Permutation;
+
+/// Common interface so the bench can sweep heuristics uniformly.
+pub trait GridSorter {
+    fn name(&self) -> &'static str;
+    fn sort(&self, data: &[f32], d: usize, g: GridShape, seed: u64) -> Permutation;
+}
+
+/// 2-D Gaussian blur of a grid-arranged map (shared by SOM/LAS-style
+/// methods). `sigma` in cells; separable two-pass implementation.
+pub(crate) fn blur_map(map: &mut [f32], d: usize, g: GridShape, sigma: f32) {
+    if sigma <= 0.05 {
+        return;
+    }
+    let radius = (sigma * 3.0).ceil() as isize;
+    let mut kernel = Vec::with_capacity((2 * radius + 1) as usize);
+    for k in -radius..=radius {
+        kernel.push((-0.5 * (k as f32 / sigma).powi(2)).exp());
+    }
+    let ksum: f32 = kernel.iter().sum();
+    for k in &mut kernel {
+        *k /= ksum;
+    }
+
+    let (h, w) = (g.h as isize, g.w as isize);
+    let mut tmp = vec![0.0f32; map.len()];
+    // Horizontal pass (clamped borders).
+    for r in 0..h {
+        for c in 0..w {
+            let dst = ((r * w + c) as usize) * d;
+            for ch in 0..d {
+                let mut acc = 0.0f32;
+                for (ki, k) in kernel.iter().enumerate() {
+                    let cc = (c + ki as isize - radius).clamp(0, w - 1);
+                    acc += k * map[((r * w + cc) as usize) * d + ch];
+                }
+                tmp[dst + ch] = acc;
+            }
+        }
+    }
+    // Vertical pass.
+    for r in 0..h {
+        for c in 0..w {
+            let dst = ((r * w + c) as usize) * d;
+            for ch in 0..d {
+                let mut acc = 0.0f32;
+                for (ki, k) in kernel.iter().enumerate() {
+                    let rr = (r + ki as isize - radius).clamp(0, h - 1);
+                    acc += k * tmp[((rr * w + c) as usize) * d + ch];
+                }
+                map[dst + ch] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blur_smooths_a_delta() {
+        // Clamped-border convolution is an *averaging* filter (each output
+        // is a convex combination), so: peak shrinks, neighbors gain,
+        // max ≤ old max, all values ≥ 0. (It is not mass-preserving — a
+        // corner delta gets re-sampled by clamping.)
+        let g = GridShape::new(8, 8);
+        let mut map = vec![0.0f32; 64];
+        map[0] = 64.0; // delta at the corner
+        blur_map(&mut map, 1, g, 1.5);
+        assert!(map[0] < 64.0);
+        assert!(map[9] > 0.0); // diagonal neighbor gained energy
+        assert!(map.iter().all(|&v| (0.0..=64.0).contains(&v)));
+        // An interior constant map is a fixed point.
+        let mut flat = vec![3.0f32; 64];
+        blur_map(&mut flat, 1, g, 1.5);
+        assert!(flat.iter().all(|&v| (v - 3.0).abs() < 1e-5));
+    }
+
+    #[test]
+    fn zero_sigma_is_noop() {
+        let g = GridShape::new(4, 4);
+        let mut map: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let orig = map.clone();
+        blur_map(&mut map, 1, g, 0.0);
+        assert_eq!(map, orig);
+    }
+}

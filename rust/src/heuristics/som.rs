@@ -1,0 +1,113 @@
+//! Self-Organizing Map grid sorter (Kohonen [8], [9]).
+//!
+//! Classic SOM adapted to *layout* use: map vectors live on the grid, each
+//! epoch assigns every input to its best-matching free cell (greedy by
+//! sample order), then map vectors are pulled toward their assigned inputs
+//! and neighborhood-blurred with a shrinking radius. The final epoch's
+//! assignment is the layout.
+
+use super::{blur_map, GridSorter};
+use crate::grid::GridShape;
+use crate::perm::Permutation;
+use crate::util::rng::Pcg32;
+use crate::util::stats::l2_sq;
+
+pub struct Som {
+    pub epochs: usize,
+    pub sigma_start: f32,
+    pub sigma_end: f32,
+}
+
+impl Default for Som {
+    fn default() -> Self {
+        Som { epochs: 30, sigma_start: 0.0, sigma_end: 0.3 }
+    }
+}
+
+impl Som {
+    fn sigma(&self, g: GridShape, e: usize) -> f32 {
+        let s0 = if self.sigma_start > 0.0 { self.sigma_start } else { g.w.max(g.h) as f32 / 3.0 };
+        let t = e as f32 / (self.epochs.max(2) - 1) as f32;
+        s0 * (self.sigma_end / s0).powf(t)
+    }
+}
+
+impl GridSorter for Som {
+    fn name(&self) -> &'static str {
+        "SOM"
+    }
+
+    fn sort(&self, data: &[f32], d: usize, g: GridShape, seed: u64) -> Permutation {
+        let n = g.n();
+        assert_eq!(data.len(), n * d);
+        let mut rng = Pcg32::new(seed);
+
+        // Init map with a random arrangement of the inputs.
+        let mut assign = rng.permutation(n); // cell -> item
+        let mut map: Vec<f32> = Permutation::from_vec(assign.clone()).unwrap().apply_rows(data, d);
+
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let mut taken = vec![false; n];
+
+        for e in 0..self.epochs {
+            blur_map(&mut map, d, g, self.sigma(g, e));
+
+            // Greedy assignment of items to best free cells, random order.
+            rng.shuffle(&mut order);
+            taken.iter_mut().for_each(|t| *t = false);
+            let mut new_assign = vec![0u32; n];
+            for &item in &order {
+                let x = &data[item as usize * d..(item as usize + 1) * d];
+                let mut best = usize::MAX;
+                let mut best_d = f32::INFINITY;
+                for cell in 0..n {
+                    if !taken[cell] {
+                        let dist = l2_sq(x, &map[cell * d..(cell + 1) * d]);
+                        if dist < best_d {
+                            best_d = dist;
+                            best = cell;
+                        }
+                    }
+                }
+                taken[best] = true;
+                new_assign[best] = item;
+            }
+            assign = new_assign;
+
+            // Pull map toward assigned inputs (full replacement, as LAS's
+            // continuous map update with lr=1 before filtering).
+            for cell in 0..n {
+                let item = assign[cell] as usize;
+                map[cell * d..(cell + 1) * d].copy_from_slice(&data[item * d..(item + 1) * d]);
+            }
+        }
+        Permutation::from_vec(assign).expect("greedy assignment is a bijection")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::random_colors;
+    use crate::metrics::mean_neighbor_distance;
+
+    #[test]
+    fn improves_over_random_layout() {
+        let g = GridShape::new(8, 8);
+        let ds = random_colors(64, 5);
+        let p = Som::default().sort(&ds.rows, 3, g, 7);
+        let arranged = p.apply_rows(&ds.rows, 3);
+        let before = mean_neighbor_distance(&ds.rows, 3, g);
+        let after = mean_neighbor_distance(&arranged, 3, g);
+        assert!(after < before * 0.8, "SOM {after} vs random {before}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = GridShape::new(4, 4);
+        let ds = random_colors(16, 6);
+        let a = Som::default().sort(&ds.rows, 3, g, 1);
+        let b = Som::default().sort(&ds.rows, 3, g, 1);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,136 @@
+//! Self-Sorting Map (Strong & Gong [17], [18]).
+//!
+//! Hierarchical swap scheme: cells are compared against the *blurred
+//! neighborhood average* of the current arrangement, and all 4! orderings
+//! of small cell groups are tried, keeping the one minimizing the summed
+//! distance to each cell's neighborhood target. Block size starts at half
+//! the grid and halves every stage down to adjacent 2×2 quads.
+
+use super::{blur_map, GridSorter};
+use crate::grid::GridShape;
+use crate::perm::Permutation;
+use crate::util::rng::Pcg32;
+use crate::util::stats::l2_sq;
+
+pub struct Ssm {
+    pub sweeps_per_stage: usize,
+}
+
+impl Default for Ssm {
+    fn default() -> Self {
+        Ssm { sweeps_per_stage: 4 }
+    }
+}
+
+/// All permutations of 0..4 (4! = 24) — precomputed swap candidates.
+const PERMS4: [[u8; 4]; 24] = [
+    [0, 1, 2, 3], [0, 1, 3, 2], [0, 2, 1, 3], [0, 2, 3, 1], [0, 3, 1, 2], [0, 3, 2, 1],
+    [1, 0, 2, 3], [1, 0, 3, 2], [1, 2, 0, 3], [1, 2, 3, 0], [1, 3, 0, 2], [1, 3, 2, 0],
+    [2, 0, 1, 3], [2, 0, 3, 1], [2, 1, 0, 3], [2, 1, 3, 0], [2, 3, 0, 1], [2, 3, 1, 0],
+    [3, 0, 1, 2], [3, 0, 2, 1], [3, 1, 0, 2], [3, 1, 2, 0], [3, 2, 0, 1], [3, 2, 1, 0],
+];
+
+impl GridSorter for Ssm {
+    fn name(&self) -> &'static str {
+        "SSM"
+    }
+
+    fn sort(&self, data: &[f32], d: usize, g: GridShape, seed: u64) -> Permutation {
+        let n = g.n();
+        assert_eq!(data.len(), n * d);
+        let mut rng = Pcg32::new(seed);
+        let mut assign = rng.permutation(n); // cell -> item
+
+        let mut stride = (g.w.min(g.h) / 2).max(1);
+        while stride >= 1 {
+            for _ in 0..self.sweeps_per_stage {
+                // Neighborhood target = blurred current arrangement.
+                let mut target =
+                    Permutation::from_vec(assign.clone()).unwrap().apply_rows(data, d);
+                blur_map(&mut target, d, g, stride as f32);
+
+                // Visit quads {(r,c),(r,c+s),(r+s,c),(r+s,c+s)} at all four
+                // phase offsets so every cell participates (the original
+                // SSM alternates offsets between sweeps).
+                for (or_, oc) in [(0usize, 0usize), (0, stride), (stride, 0), (stride, stride)] {
+                    let mut r = or_;
+                    while r + stride < g.h {
+                        let mut c = oc;
+                        while c + stride < g.w {
+                            let cells = [
+                                g.index(r, c),
+                                g.index(r, c + stride),
+                                g.index(r + stride, c),
+                                g.index(r + stride, c + stride),
+                            ];
+                            best_quad(&mut assign, data, d, &target, &cells);
+                            c += 2 * stride;
+                        }
+                        r += 2 * stride;
+                    }
+                }
+            }
+            if stride == 1 {
+                break;
+            }
+            stride /= 2;
+        }
+        Permutation::from_vec(assign).expect("swaps preserve bijectivity")
+    }
+}
+
+/// Try all 24 arrangements of the quad's items; keep the best.
+fn best_quad(assign: &mut [u32], data: &[f32], d: usize, target: &[f32], cells: &[usize; 4]) {
+    let items = [
+        assign[cells[0]], assign[cells[1]], assign[cells[2]], assign[cells[3]],
+    ];
+    let mut best_cost = f32::INFINITY;
+    let mut best = &PERMS4[0];
+    for perm in &PERMS4 {
+        let mut cost = 0.0f32;
+        for (slot, &p) in perm.iter().enumerate() {
+            let item = items[p as usize] as usize;
+            cost += l2_sq(
+                &data[item * d..(item + 1) * d],
+                &target[cells[slot] * d..(cells[slot] + 1) * d],
+            );
+        }
+        if cost < best_cost {
+            best_cost = cost;
+            best = perm;
+        }
+    }
+    for (slot, &p) in best.iter().enumerate() {
+        assign[cells[slot]] = items[p as usize];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::random_colors;
+    use crate::metrics::mean_neighbor_distance;
+
+    #[test]
+    fn perms4_table_is_complete() {
+        let mut seen = std::collections::BTreeSet::new();
+        for p in &PERMS4 {
+            let mut q = *p;
+            q.sort();
+            assert_eq!(q, [0, 1, 2, 3]);
+            seen.insert(*p);
+        }
+        assert_eq!(seen.len(), 24);
+    }
+
+    #[test]
+    fn improves_over_random_layout() {
+        let g = GridShape::new(8, 8);
+        let ds = random_colors(64, 15);
+        let p = Ssm::default().sort(&ds.rows, 3, g, 8);
+        let arranged = p.apply_rows(&ds.rows, 3);
+        let before = mean_neighbor_distance(&ds.rows, 3, g);
+        let after = mean_neighbor_distance(&arranged, 3, g);
+        assert!(after < before, "SSM {after} vs random {before}");
+    }
+}

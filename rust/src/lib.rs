@@ -1,0 +1,50 @@
+//! # shufflesort
+//!
+//! Production reproduction of *"Permutation Learning with Only N Parameters:
+//! From SoftSort to Self-Organizing Gaussians"* (Barthel, Barthel, Eisert,
+//! 2025) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas fused SoftSort-apply kernel (`python/compile/kernels/`),
+//!   compiled at build time, never touched at run time.
+//! * **L2** — JAX training-step functions per method, AOT-lowered to HLO
+//!   text artifacts (`python/compile/model.py` → `artifacts/*.hlo.txt`).
+//! * **L3** — this crate: the optimization coordinator (Algorithm 1), the
+//!   baselines, every substrate (metrics, heuristics, assignment solvers,
+//!   the Self-Organizing-Gaussians pipeline) and the benchmark harness.
+//!
+//! Quick start (after `make artifacts`):
+//!
+//! ```no_run
+//! use shufflesort::prelude::*;
+//!
+//! let rt = Runtime::from_manifest("artifacts").unwrap();
+//! let data = shufflesort::data::random_colors(256, 42);
+//! let cfg = ShuffleSoftSortConfig::for_grid(16, 16);
+//! let result = ShuffleSoftSort::new(&rt, cfg).unwrap().sort(&data).unwrap();
+//! println!("DPQ16 = {}", result.report.final_dpq);
+//! ```
+
+pub mod assignment;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dimred;
+pub mod grid;
+pub mod heuristics;
+pub mod metrics;
+pub mod perm;
+pub mod runtime;
+pub mod sog;
+pub mod util;
+
+/// Convenience re-exports for the common entry points.
+pub mod prelude {
+    pub use crate::config::ShuffleSoftSortConfig;
+    pub use crate::coordinator::{ShuffleSoftSort, SortOutcome};
+    pub use crate::data::Dataset;
+    pub use crate::grid::GridShape;
+    pub use crate::metrics::dpq::dpq;
+    pub use crate::runtime::Runtime;
+}

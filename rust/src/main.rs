@@ -1,0 +1,180 @@
+//! `sssort` — the leader binary: CLI over the ShuffleSoftSort coordinator,
+//! the baselines and the SOG pipeline. See `cli::USAGE`.
+
+use anyhow::{anyhow, bail, Result};
+
+use shufflesort::cli::{parse_grid, ParsedArgs, USAGE};
+use shufflesort::config::{BaselineConfig, ShuffleSoftSortConfig};
+use shufflesort::coordinator::baselines::{GumbelSinkhornDriver, KissingDriver, SoftSortDriver};
+use shufflesort::coordinator::ShuffleSoftSort;
+use shufflesort::data;
+use shufflesort::grid::GridShape;
+use shufflesort::metrics::{dpq16, mean_neighbor_distance};
+use shufflesort::runtime::Runtime;
+use shufflesort::sog::codec::CodecConfig;
+use shufflesort::sog::scene::{GaussianScene, SceneConfig};
+use shufflesort::sog::{run_pipeline, SorterKind};
+use shufflesort::util::ppm;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = ParsedArgs::parse(std::env::args().skip(1))?;
+    match args.command.as_str() {
+        "sort" => cmd_sort(&args),
+        "sog" => cmd_sog(&args),
+        "inspect" => cmd_inspect(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+    }
+}
+
+fn artifacts_dir(args: &ParsedArgs) -> String {
+    args.opt("artifacts").unwrap_or("artifacts").to_string()
+}
+
+fn cmd_sort(args: &ParsedArgs) -> Result<()> {
+    let (h, w) = parse_grid(args.opt("grid").unwrap_or("16x16"))?;
+    let n = h * w;
+    let seed: u64 = args.opt("seed").unwrap_or("42").parse()?;
+    let method = args.opt("method").unwrap_or("sss");
+    let dataset = match args.opt("dataset").unwrap_or("colors") {
+        "colors" => data::random_colors(n, seed),
+        "features" => data::clustered_features(n, 50, 16, 0.06, seed),
+        other => bail!("unknown dataset '{other}'"),
+    };
+
+    let rt = Runtime::from_manifest(artifacts_dir(args))?;
+    println!("platform: {}", rt.platform());
+    let g = GridShape::new(h, w);
+    let base_nbr = mean_neighbor_distance(&dataset.rows, dataset.d, g);
+    let base_dpq = dpq16(&dataset.rows, dataset.d, g);
+    println!("unsorted: nbr={base_nbr:.4} dpq16={base_dpq:.3}");
+
+    let outcome = match method {
+        "sss" | "shufflesoftsort" => {
+            let mut cfg = ShuffleSoftSortConfig::for_grid(h, w);
+            cfg.seed = seed;
+            for (k, v) in &args.overrides {
+                cfg.set(k, v)?;
+            }
+            ShuffleSoftSort::new(&rt, cfg)?.sort(&dataset)?
+        }
+        "softsort" => {
+            let mut cfg = BaselineConfig::for_grid(h, w);
+            cfg.seed = seed;
+            for (k, v) in &args.overrides {
+                cfg.set(k, v)?;
+            }
+            SoftSortDriver::new(&rt, cfg).sort(&dataset)?
+        }
+        "gs" | "gumbel-sinkhorn" => {
+            let mut cfg = BaselineConfig::for_gs(h, w);
+            cfg.seed = seed;
+            for (k, v) in &args.overrides {
+                cfg.set(k, v)?;
+            }
+            GumbelSinkhornDriver::new(&rt, cfg).sort(&dataset)?
+        }
+        "kiss" | "kissing" => {
+            let mut cfg = BaselineConfig::for_grid(h, w);
+            cfg.seed = seed;
+            for (k, v) in &args.overrides {
+                cfg.set(k, v)?;
+            }
+            KissingDriver::new(&rt, cfg).sort(&dataset)?
+        }
+        other => bail!("unknown method '{other}'"),
+    };
+
+    println!("{}", outcome.report.summary());
+    println!("sections: {}", outcome.report.sections.report());
+    println!(
+        "sorted:   nbr={:.4} dpq16={:.3}",
+        mean_neighbor_distance(&outcome.arranged, dataset.d, g),
+        outcome.report.final_dpq
+    );
+
+    if let Some(dir) = args.opt("out") {
+        std::fs::create_dir_all(dir)?;
+        if dataset.d == 3 {
+            let path = std::path::Path::new(dir).join(format!("{method}_{h}x{w}.ppm"));
+            ppm::write_ppm_upscaled(&path, &outcome.arranged, h, w, 12)?;
+            println!("wrote {}", path.display());
+        }
+        let curve_path = std::path::Path::new(dir).join(format!("{method}_{h}x{w}_curve.csv"));
+        let mut csv = String::from("phase,iter,tau,loss\n");
+        for p in &outcome.report.curve {
+            csv.push_str(&format!("{},{},{},{}\n", p.phase, p.iter, p.tau, p.loss));
+        }
+        std::fs::write(&curve_path, csv)?;
+        println!("wrote {}", curve_path.display());
+    }
+    Ok(())
+}
+
+fn cmd_sog(args: &ParsedArgs) -> Result<()> {
+    let n = args.opt_usize("n", 4096)?;
+    let side = (n as f64).sqrt() as usize;
+    anyhow::ensure!(side * side == n, "--n must be a perfect square");
+    let (h, w) = match args.opt("grid") {
+        Some(s) => parse_grid(s)?,
+        None => (side, side),
+    };
+    let bits: u8 = args.opt("bits").unwrap_or("8").parse()?;
+    let scene_seed: u64 = args.opt("scene-seed").unwrap_or("7").parse()?;
+
+    let scene = GaussianScene::generate(&SceneConfig {
+        n_splats: n,
+        seed: scene_seed,
+        ..Default::default()
+    });
+    let g = GridShape::new(h, w);
+    let codec = CodecConfig { bits, ..Default::default() };
+
+    println!("SOG pipeline: N={n} grid={h}x{w} bits={bits}");
+    let shuffled = run_pipeline(&scene, g, SorterKind::Shuffled, &codec)?;
+    println!("{}", shuffled.summary());
+    let heuristic = run_pipeline(&scene, g, SorterKind::Heuristic, &codec)?;
+    println!("{}", heuristic.summary());
+
+    let rt = Runtime::from_manifest(artifacts_dir(args))?;
+    let mut cfg = ShuffleSoftSortConfig::for_grid(h, w);
+    for (k, v) in &args.overrides {
+        cfg.set(k, v)?;
+    }
+    let learned = run_pipeline(&scene, g, SorterKind::Learned(&rt, cfg), &codec)?;
+    println!("{}", learned.summary());
+
+    println!(
+        "gain: learned {:.2}x vs shuffled {:.2}x ({}% smaller)",
+        learned.ratio,
+        shuffled.ratio,
+        (100.0 * (1.0 - learned.compressed_bytes as f64 / shuffled.compressed_bytes as f64))
+            as i64
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &ParsedArgs) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let rt = Runtime::from_manifest(&dir)
+        .map_err(|e| anyhow!("{e} (build with `make artifacts`)"))?;
+    let m = rt.manifest();
+    println!("manifest v{} (jax {}), {} artifacts in {dir}:", m.version, m.jax_version, m.artifacts.len());
+    for a in &m.artifacts {
+        println!(
+            "  {:<34} method={:<8} N={:<5} d={:<3} grid={}x{} params={}",
+            a.name, a.method, a.n, a.d, a.h, a.w, a.param_count
+        );
+    }
+    Ok(())
+}

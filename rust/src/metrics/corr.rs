@@ -1,0 +1,87 @@
+//! Spatial autocorrelation of attribute planes — the SOG compressibility
+//! proxy: codecs exploit exactly the lag-1 correlation that grid sorting
+//! creates (paper §IV-B).
+
+use crate::grid::GridShape;
+
+/// Lag-1 spatial autocorrelation of a scalar plane (mean of the horizontal
+/// and vertical Pearson correlations between adjacent cells). 1.0 = smooth,
+/// ~0 = white noise.
+pub fn lag1_autocorr(plane: &[f32], g: GridShape) -> f64 {
+    assert_eq!(plane.len(), g.n());
+    let n = g.n() as f64;
+    let mean = plane.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var = plane.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    if var < 1e-18 {
+        return 1.0;
+    }
+    let mut cov = 0.0f64;
+    let mut cnt = 0usize;
+    for r in 0..g.h {
+        for c in 0..g.w {
+            let i = g.index(r, c);
+            if c + 1 < g.w {
+                cov += (plane[i] as f64 - mean) * (plane[i + 1] as f64 - mean);
+                cnt += 1;
+            }
+            if r + 1 < g.h {
+                cov += (plane[i] as f64 - mean) * (plane[g.index(r + 1, c)] as f64 - mean);
+                cnt += 1;
+            }
+        }
+    }
+    (cov / cnt as f64) / var
+}
+
+/// Mean lag-1 autocorrelation over the `d` channels of `[n, d]` data
+/// arranged on the grid.
+pub fn mean_lag1_autocorr(data: &[f32], d: usize, g: GridShape) -> f64 {
+    let n = g.n();
+    assert_eq!(data.len(), n * d);
+    let mut plane = vec![0.0f32; n];
+    let mut acc = 0.0f64;
+    for ch in 0..d {
+        for i in 0..n {
+            plane[i] = data[i * d + ch];
+        }
+        acc += lag1_autocorr(&plane, g);
+    }
+    acc / d as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn smooth_gradient_high_noise_low() {
+        let g = GridShape::new(16, 16);
+        let grad: Vec<f32> = (0..g.n()).map(|i| (i / 16) as f32 + (i % 16) as f32).collect();
+        assert!(lag1_autocorr(&grad, g) > 0.9);
+        let mut rng = Pcg32::new(1);
+        let noise: Vec<f32> = (0..g.n()).map(|_| rng.f32()).collect();
+        assert!(lag1_autocorr(&noise, g).abs() < 0.2);
+    }
+
+    #[test]
+    fn constant_plane_is_one() {
+        let g = GridShape::new(4, 4);
+        assert_eq!(lag1_autocorr(&vec![3.0; 16], g), 1.0);
+    }
+
+    #[test]
+    fn multichannel_averages() {
+        let g = GridShape::new(8, 8);
+        let mut data = vec![0.0f32; g.n() * 2];
+        for i in 0..g.n() {
+            data[i * 2] = (i / 8) as f32; // smooth channel
+        }
+        let mut rng = Pcg32::new(2);
+        for i in 0..g.n() {
+            data[i * 2 + 1] = rng.f32(); // noise channel
+        }
+        let m = mean_lag1_autocorr(&data, 2, g);
+        assert!(m > 0.3 && m < 0.8, "m={m}");
+    }
+}

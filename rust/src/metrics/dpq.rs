@@ -1,0 +1,184 @@
+//! Distance Preservation Quality — DPQ_p, after Barthel et al.,
+//! "Improved evaluation and generation of grid layouts using distance
+//! preservation quality and linear assignment sorting" (CGF 2023) — the
+//! quality metric of the paper's Table 2 (p = 16).
+//!
+//! Construction (DESIGN.md §7). For each neighborhood size k ∈ 1..K:
+//!
+//!   D_grid(k) — mean feature distance from each cell to its k spatially
+//!               nearest cells (the layout under evaluation),
+//!   D_opt(k)  — the same with the k *feature-space* nearest neighbors
+//!               (the unattainable-in-general lower bound),
+//!   D_rand    — mean feature distance over all pairs (the expectation of a
+//!               random layout).
+//!
+//!   q(k) = clamp((D_rand − D_grid(k)) / (D_rand − D_opt(k)), 0, 1)
+//!
+//! and DPQ_p aggregates with a 1/k-weighted power mean,
+//!
+//!   DPQ_p = ( Σ_k w_k q(k)^p / Σ_k w_k )^(1/p),   w_k = 1/k ,
+//!
+//! emphasizing small (perceptually dominant) neighborhoods, the role the
+//! exponent plays in [3]. DPQ ∈ [0, 1]; identical inputs to every method ⇒
+//! cross-method ordering (what the paper's table reports) is preserved.
+
+use crate::grid::GridShape;
+use crate::util::stats::l2;
+
+/// Default maximum neighborhood size: √N keeps O(N·K) accumulation cheap
+/// while covering the perceptually relevant range.
+fn default_k_max(n: usize) -> usize {
+    ((n as f64).sqrt() as usize).clamp(1, n - 1)
+}
+
+/// DPQ_16 — the paper's reported variant.
+pub fn dpq16(data: &[f32], d: usize, g: GridShape) -> f64 {
+    dpq(data, d, g, 16.0, default_k_max(g.n()))
+}
+
+/// General DPQ_p with explicit neighborhood cap.
+///
+/// `data` is row-major `[n, d]`, already arranged on the grid (cell i holds
+/// the vector at rows `i*d..`). O(N² (d + log N)) — fine for N ≤ 4096.
+pub fn dpq(data: &[f32], d: usize, g: GridShape, p: f64, k_max: usize) -> f64 {
+    let n = g.n();
+    assert_eq!(data.len(), n * d);
+    assert!(n >= 2);
+    let k_max = k_max.clamp(1, n - 1);
+
+    // Per-cell: feature distances to everyone, ranked once by grid distance
+    // and once by feature distance.
+    let mut d_grid_acc = vec![0.0f64; k_max]; // Σ over cells of mean-to-k-grid-nearest
+    let mut d_opt_acc = vec![0.0f64; k_max];
+    let mut d_rand_sum = 0.0f64;
+
+    let mut feat = vec![0.0f32; n];
+    let mut order_grid: Vec<u32> = Vec::with_capacity(n);
+    let mut order_feat: Vec<u32> = Vec::with_capacity(n);
+
+    for i in 0..n {
+        let xi = &data[i * d..(i + 1) * d];
+        for j in 0..n {
+            feat[j] = l2(xi, &data[j * d..(j + 1) * d]);
+        }
+        order_grid.clear();
+        order_feat.clear();
+        order_grid.extend((0..n as u32).filter(|&j| j as usize != i));
+        order_feat.extend_from_slice(&order_grid);
+        // Rank by grid distance (ties by index → deterministic).
+        order_grid.sort_by(|&a, &b| {
+            g.cell_dist_sq(i, a as usize)
+                .partial_cmp(&g.cell_dist_sq(i, b as usize))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        order_feat.sort_by(|&a, &b| {
+            feat[a as usize].partial_cmp(&feat[b as usize]).unwrap().then(a.cmp(&b))
+        });
+
+        let mut grid_run = 0.0f64;
+        let mut opt_run = 0.0f64;
+        for k in 0..k_max {
+            grid_run += feat[order_grid[k] as usize] as f64;
+            opt_run += feat[order_feat[k] as usize] as f64;
+            d_grid_acc[k] += grid_run / (k + 1) as f64;
+            d_opt_acc[k] += opt_run / (k + 1) as f64;
+        }
+        d_rand_sum += feat.iter().map(|&v| v as f64).sum::<f64>() / (n - 1) as f64;
+    }
+
+    let d_rand = d_rand_sum / n as f64;
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for k in 0..k_max {
+        let d_grid = d_grid_acc[k] / n as f64;
+        let d_opt = d_opt_acc[k] / n as f64;
+        let gap = d_rand - d_opt;
+        let q = if gap <= 1e-12 {
+            1.0 // degenerate data: every layout is optimal
+        } else {
+            ((d_rand - d_grid) / gap).clamp(0.0, 1.0)
+        };
+        let w = 1.0 / (k + 1) as f64;
+        num += w * q.powf(p);
+        den += w;
+    }
+    (num / den).powf(1.0 / p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// 1-D ramp on a line grid is the optimal layout → DPQ ≈ 1.
+    #[test]
+    fn perfect_line_is_one() {
+        let g = GridShape::new(1, 32);
+        let data: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let q = dpq16(&data, 1, g);
+        assert!(q > 0.97, "q={q}");
+    }
+
+    #[test]
+    fn random_layout_scores_low() {
+        let mut rng = Pcg32::new(9);
+        let g = GridShape::new(16, 16);
+        let data: Vec<f32> = (0..g.n() * 3).map(|_| rng.f32()).collect();
+        let q = dpq16(&data, 3, g);
+        assert!(q < 0.45, "random layout q={q}");
+    }
+
+    #[test]
+    fn sorted_beats_shuffled() {
+        // Smooth 2-D gradient arranged correctly vs the same set shuffled.
+        let g = GridShape::new(8, 8);
+        let mut sorted = Vec::with_capacity(g.n() * 2);
+        for r in 0..8 {
+            for c in 0..8 {
+                sorted.push(r as f32 / 8.0);
+                sorted.push(c as f32 / 8.0);
+            }
+        }
+        let mut rng = Pcg32::new(10);
+        let perm = rng.permutation(g.n());
+        let mut shuffled = vec![0.0f32; sorted.len()];
+        for (i, &s) in perm.iter().enumerate() {
+            shuffled[i * 2..i * 2 + 2].copy_from_slice(&sorted[s as usize * 2..s as usize * 2 + 2]);
+        }
+        let qs = dpq16(&sorted, 2, g);
+        let qr = dpq16(&shuffled, 2, g);
+        assert!(qs > qr + 0.3, "sorted {qs} vs shuffled {qr}");
+        assert!(qs > 0.9, "gradient layout should be near-optimal, got {qs}");
+    }
+
+    #[test]
+    fn bounded_in_unit_interval() {
+        let mut rng = Pcg32::new(11);
+        for seed in 0..3 {
+            let g = GridShape::new(6, 6);
+            let mut r = Pcg32::new(seed);
+            let data: Vec<f32> = (0..g.n() * 4).map(|_| r.f32() + rng.f32() * 0.0).collect();
+            let q = dpq(&data, 4, g, 16.0, 12);
+            assert!((0.0..=1.0).contains(&q));
+        }
+    }
+
+    #[test]
+    fn degenerate_constant_data_is_one() {
+        let g = GridShape::new(4, 4);
+        let data = vec![0.7f32; 16 * 2];
+        assert_eq!(dpq16(&data, 2, g), 1.0);
+    }
+
+    #[test]
+    fn higher_p_is_stricter() {
+        let mut rng = Pcg32::new(12);
+        let g = GridShape::new(8, 8);
+        let data: Vec<f32> = (0..g.n() * 3).map(|_| rng.f32()).collect();
+        let q2 = dpq(&data, 3, g, 2.0, 16);
+        let q16 = dpq(&data, 3, g, 16.0, 16);
+        // power-mean inequality: higher exponent ≥ for same q(k) profile
+        assert!(q16 >= q2 - 1e-9, "q16={q16} q2={q2}");
+    }
+}

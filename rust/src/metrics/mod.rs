@@ -1,0 +1,10 @@
+//! Layout-quality metrics: DPQ (the paper's headline quality number),
+//! mean-neighbor-distance (the smoothness objective itself) and spatial
+//! autocorrelation (the SOG compressibility proxy).
+
+pub mod corr;
+pub mod dpq;
+pub mod neighbor;
+
+pub use dpq::{dpq, dpq16};
+pub use neighbor::mean_neighbor_distance;

@@ -1,0 +1,60 @@
+//! Mean neighbor distance — the quantity L_nbr optimizes, reported raw
+//! (unnormalized) and normalized by the dataset's mean pairwise distance.
+
+use crate::grid::GridShape;
+use crate::util::stats::l2;
+
+/// Mean L2 feature distance over horizontally+vertically adjacent cells of
+/// `data` (row-major `[n, d]`, already arranged on the grid).
+pub fn mean_neighbor_distance(data: &[f32], d: usize, g: GridShape) -> f64 {
+    assert_eq!(data.len(), g.n() * d);
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for r in 0..g.h {
+        for c in 0..g.w {
+            let i = g.index(r, c);
+            if c + 1 < g.w {
+                sum += l2(&data[i * d..(i + 1) * d], &data[(i + 1) * d..(i + 2) * d]) as f64;
+                count += 1;
+            }
+            if r + 1 < g.h {
+                let j = g.index(r + 1, c);
+                sum += l2(&data[i * d..(i + 1) * d], &data[j * d..(j + 1) * d]) as f64;
+                count += 1;
+            }
+        }
+    }
+    sum / count as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hand_computed_2x2() {
+        // scalar grid [[0,1],[2,4]] → pairs |0-1|,|2-4|,|0-2|,|1-4| = 1,2,2,3
+        let g = GridShape::new(2, 2);
+        let data = vec![0.0, 1.0, 2.0, 4.0];
+        assert!((mean_neighbor_distance(&data, 1, g) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_grid_zero() {
+        let g = GridShape::new(3, 3);
+        let data = vec![0.5f32; 9 * 4];
+        assert_eq!(mean_neighbor_distance(&data, 4, g), 0.0);
+    }
+
+    #[test]
+    fn sorted_line_beats_shuffled_line() {
+        use crate::util::rng::Pcg32;
+        let g = GridShape::new(1, 64);
+        let sorted: Vec<f32> = (0..64).map(|i| i as f32 / 64.0).collect();
+        let mut shuffled = sorted.clone();
+        Pcg32::new(3).shuffle(&mut shuffled);
+        assert!(
+            mean_neighbor_distance(&sorted, 1, g) < mean_neighbor_distance(&shuffled, 1, g)
+        );
+    }
+}

@@ -1,0 +1,270 @@
+//! Permutation algebra: validated permutation type, composition, inversion,
+//! application to row-major data, and the `Tracker` that accumulates the
+//! permutation learned across ShuffleSoftSort phases.
+//!
+//! Conventions. A `Permutation` `p` maps *positions to source indices*:
+//! applying `p` to data `x` produces `y[i] = x[p[i]]` ("gather" form). This
+//! matches the paper's `x_sort = P_hard · x` with `p[i] = argmax_j P[i, j]`.
+
+mod tracker;
+
+pub use tracker::Tracker;
+
+/// A validated permutation of `0..n` in gather form.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Permutation {
+    idx: Vec<u32>,
+}
+
+impl Permutation {
+    /// The identity permutation of size `n`.
+    pub fn identity(n: usize) -> Self {
+        Permutation { idx: (0..n as u32).collect() }
+    }
+
+    /// Validate and wrap `idx`; error if it is not a bijection on 0..n.
+    pub fn from_vec(idx: Vec<u32>) -> Result<Self, InvalidPermutation> {
+        let n = idx.len();
+        let mut seen = vec![false; n];
+        let mut dups = 0usize;
+        let mut oob = 0usize;
+        for &v in &idx {
+            if (v as usize) >= n {
+                oob += 1;
+            } else if seen[v as usize] {
+                dups += 1;
+            } else {
+                seen[v as usize] = true;
+            }
+        }
+        if dups > 0 || oob > 0 {
+            Err(InvalidPermutation { n, duplicates: dups, out_of_bounds: oob })
+        } else {
+            Ok(Permutation { idx })
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// Number of duplicate targets in a *candidate* index vector (the
+    /// validity statistic the paper's "Stability" row measures).
+    pub fn count_duplicates(idx: &[u32]) -> usize {
+        let n = idx.len();
+        let mut seen = vec![false; n];
+        let mut dups = 0;
+        for &v in idx {
+            let v = v as usize;
+            if v < n {
+                if seen[v] {
+                    dups += 1;
+                } else {
+                    seen[v] = true;
+                }
+            } else {
+                dups += 1;
+            }
+        }
+        dups
+    }
+
+    /// Inverse permutation: `inv[p[i]] = i`.
+    pub fn inverse(&self) -> Permutation {
+        let mut inv = vec![0u32; self.idx.len()];
+        for (i, &v) in self.idx.iter().enumerate() {
+            inv[v as usize] = i as u32;
+        }
+        Permutation { idx: inv }
+    }
+
+    /// Composition `self ∘ other`: applying the result equals applying
+    /// `other` first, then `self`. `(a∘b)[i] = b[a[i]]`.
+    pub fn compose(&self, other: &Permutation) -> Permutation {
+        assert_eq!(self.len(), other.len());
+        let idx = self.idx.iter().map(|&i| other.idx[i as usize]).collect();
+        Permutation { idx }
+    }
+
+    /// Gather rows: `out[i] = data[p[i]]` for row-major `[n, d]` data.
+    pub fn apply_rows(&self, data: &[f32], d: usize) -> Vec<f32> {
+        let n = self.len();
+        assert_eq!(data.len(), n * d);
+        let mut out = vec![0.0f32; n * d];
+        for (i, &src) in self.idx.iter().enumerate() {
+            let s = src as usize * d;
+            out[i * d..(i + 1) * d].copy_from_slice(&data[s..s + d]);
+        }
+        out
+    }
+
+    /// In-place variant reusing a scratch buffer (hot path).
+    pub fn apply_rows_into(&self, data: &[f32], d: usize, out: &mut Vec<f32>) {
+        let n = self.len();
+        assert_eq!(data.len(), n * d);
+        out.clear();
+        out.reserve(n * d);
+        for &src in &self.idx {
+            let s = src as usize * d;
+            out.extend_from_slice(&data[s..s + d]);
+        }
+    }
+
+    /// Fixed points (used by tests and the properties bench).
+    pub fn fixed_points(&self) -> usize {
+        self.idx.iter().enumerate().filter(|(i, &v)| *i == v as usize).count()
+    }
+}
+
+/// Why an index vector is not a permutation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InvalidPermutation {
+    pub n: usize,
+    pub duplicates: usize,
+    pub out_of_bounds: usize,
+}
+
+impl std::fmt::Display for InvalidPermutation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "invalid permutation of {}: {} duplicates, {} out of bounds",
+            self.n, self.duplicates, self.out_of_bounds
+        )
+    }
+}
+
+impl std::error::Error for InvalidPermutation {}
+
+/// Greedy repair of a near-permutation (paper §II: in rare cases SoftSort
+/// yields duplicate columns; after the iteration-extension budget runs out
+/// we resolve deterministically). Duplicate/oob positions are reassigned the
+/// unused indices in ascending order, preserving every valid entry.
+/// Returns the repaired permutation and how many entries were rewritten.
+pub fn repair(idx: &[u32]) -> (Permutation, usize) {
+    let n = idx.len();
+    let mut seen = vec![false; n];
+    let mut out = idx.to_vec();
+    let mut bad = Vec::new();
+    for (i, v) in out.iter().enumerate() {
+        let v = *v as usize;
+        if v < n && !seen[v] {
+            seen[v] = true;
+        } else {
+            bad.push(i);
+        }
+    }
+    let mut unused = (0..n as u32).filter(|&v| !seen[v as usize]);
+    for &i in &bad {
+        out[i] = unused.next().expect("counts must balance");
+    }
+    let repaired = bad.len();
+    (Permutation::from_vec(out).expect("repair produces a bijection"), repaired)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_perm(rng: &mut Pcg32, n: usize) -> Permutation {
+        Permutation::from_vec(rng.permutation(n)).unwrap()
+    }
+
+    #[test]
+    fn identity_applies_as_noop() {
+        let p = Permutation::identity(4);
+        let data = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        assert_eq!(p.apply_rows(&data, 2), data);
+        assert_eq!(p.fixed_points(), 4);
+    }
+
+    #[test]
+    fn from_vec_rejects_duplicates_and_oob() {
+        let e = Permutation::from_vec(vec![0, 1, 1, 5]).unwrap_err();
+        assert_eq!(e.duplicates, 1);
+        assert_eq!(e.out_of_bounds, 1);
+        assert_eq!(Permutation::count_duplicates(&[0, 1, 1, 5]), 2);
+    }
+
+    #[test]
+    fn inverse_round_trip_property() {
+        let mut rng = Pcg32::new(11);
+        for n in [1usize, 2, 7, 64, 257] {
+            for _ in 0..5 {
+                let p = random_perm(&mut rng, n);
+                let inv = p.inverse();
+                assert_eq!(p.compose(&inv), Permutation::identity(n));
+                assert_eq!(inv.compose(&p), Permutation::identity(n));
+            }
+        }
+    }
+
+    #[test]
+    fn compose_matches_sequential_application_property() {
+        let mut rng = Pcg32::new(12);
+        for _ in 0..10 {
+            let n = 33;
+            let d = 3;
+            let a = random_perm(&mut rng, n);
+            let b = random_perm(&mut rng, n);
+            let data: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+            // apply b then a == apply (a∘b)
+            let seq = a.apply_rows(&b.apply_rows(&data, d), d);
+            let comp = a.compose(&b).apply_rows(&data, d);
+            assert_eq!(seq, comp);
+        }
+    }
+
+    #[test]
+    fn apply_rows_gathers() {
+        let p = Permutation::from_vec(vec![2, 0, 1]).unwrap();
+        let data = vec![10.0, 20.0, 30.0];
+        assert_eq!(p.apply_rows(&data, 1), vec![30.0, 10.0, 20.0]);
+    }
+
+    #[test]
+    fn apply_rows_into_matches_apply_rows() {
+        let mut rng = Pcg32::new(13);
+        let p = random_perm(&mut rng, 40);
+        let data: Vec<f32> = (0..40 * 5).map(|_| rng.f32()).collect();
+        let mut buf = Vec::new();
+        p.apply_rows_into(&data, 5, &mut buf);
+        assert_eq!(buf, p.apply_rows(&data, 5));
+    }
+
+    #[test]
+    fn repair_fixes_duplicates_minimally() {
+        let (p, fixed) = repair(&[0, 2, 2, 3]);
+        assert_eq!(fixed, 1);
+        assert_eq!(p.as_slice(), &[0, 2, 1, 3]);
+
+        let (p2, fixed2) = repair(&[1, 1, 1, 1]);
+        assert_eq!(fixed2, 3);
+        assert_eq!(p2.as_slice(), &[1, 0, 2, 3]);
+
+        // Already valid → untouched.
+        let (p3, fixed3) = repair(&[3, 1, 0, 2]);
+        assert_eq!(fixed3, 0);
+        assert_eq!(p3.as_slice(), &[3, 1, 0, 2]);
+    }
+
+    #[test]
+    fn repair_always_valid_property() {
+        let mut rng = Pcg32::new(14);
+        for _ in 0..50 {
+            let n = 20;
+            let idx: Vec<u32> = (0..n).map(|_| rng.below(n as u32 + 4)).collect();
+            let (p, _) = repair(&idx);
+            assert_eq!(p.len(), n as usize);
+        }
+    }
+}

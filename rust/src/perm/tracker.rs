@@ -1,0 +1,112 @@
+//! Tracks the permutation composed across ShuffleSoftSort phases.
+//!
+//! Algorithm 1 carries state implicitly by reordering the data between
+//! phases (`x ← reverse_shuffle(sort(shuffle(x)))`). The coordinator instead
+//! keeps the *original* data immutable and composes the per-phase
+//! permutations here, so the final result is a single `Permutation` mapping
+//! grid positions to original item indices. The invariant
+//! `current_arrangement == tracker.perm().apply_rows(original, d)`
+//! is enforced by tests and cheap to assert in debug builds.
+
+use super::Permutation;
+
+#[derive(Clone, Debug)]
+pub struct Tracker {
+    /// Composed permutation: grid position → original item index.
+    perm: Permutation,
+}
+
+impl Tracker {
+    pub fn new(n: usize) -> Self {
+        Tracker { perm: Permutation::identity(n) }
+    }
+
+    pub fn perm(&self) -> &Permutation {
+        &self.perm
+    }
+
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// Record one phase: the arrangement was shuffled with `shuf`
+    /// (`x_shuf[i] = x[shuf[i]]`), SoftSort produced `sort` over the
+    /// shuffled order (`x_sorted[i] = x_shuf[sort[i]]`), and the result was
+    /// scattered back through the shuffle
+    /// (`x_new[shuf[i]] = x_sorted[i]`, Algorithm 1's
+    /// `x_sort[shuf_idx] = x_shuf[sort_idx]`).
+    ///
+    /// Net per-phase update: `x_new = (shuf⁻¹ ∘ sort ∘ shuf)(x_old)`, so the
+    /// tracked permutation becomes `phase ∘ perm`.
+    pub fn record_phase(&mut self, shuf: &Permutation, sort: &Permutation) {
+        assert_eq!(shuf.len(), self.len());
+        assert_eq!(sort.len(), self.len());
+        let phase = shuf.inverse().compose(sort).compose(shuf);
+        self.perm = phase.compose(&self.perm);
+    }
+
+    /// Current arrangement of the original row-major data.
+    pub fn arrange(&self, original: &[f32], d: usize) -> Vec<f32> {
+        self.perm.apply_rows(original, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Reference implementation: mutate the data exactly as Algorithm 1 does.
+    fn algo1_phase(x: &mut Vec<f32>, d: usize, shuf: &Permutation, sort: &Permutation) {
+        let n = shuf.len();
+        let x_shuf = shuf.apply_rows(x, d);
+        let x_sorted = sort.apply_rows(&x_shuf, d);
+        let mut x_new = vec![0.0f32; n * d];
+        for i in 0..n {
+            let dst = shuf.as_slice()[i] as usize;
+            x_new[dst * d..(dst + 1) * d].copy_from_slice(&x_sorted[i * d..(i + 1) * d]);
+        }
+        *x = x_new;
+    }
+
+    #[test]
+    fn tracker_invariant_over_many_random_phases() {
+        let mut rng = Pcg32::new(21);
+        let n = 48;
+        let d = 3;
+        let original: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+        let mut live = original.clone();
+        let mut tracker = Tracker::new(n);
+        for _ in 0..25 {
+            let shuf = Permutation::from_vec(rng.permutation(n)).unwrap();
+            let sort = Permutation::from_vec(rng.permutation(n)).unwrap();
+            algo1_phase(&mut live, d, &shuf, &sort);
+            tracker.record_phase(&shuf, &sort);
+            assert_eq!(tracker.arrange(&original, d), live);
+        }
+    }
+
+    #[test]
+    fn identity_phases_keep_identity() {
+        let n = 16;
+        let mut t = Tracker::new(n);
+        let id = Permutation::identity(n);
+        t.record_phase(&id, &id);
+        assert_eq!(t.perm(), &Permutation::identity(n));
+    }
+
+    #[test]
+    fn single_phase_identity_shuffle_is_just_sort() {
+        let mut rng = Pcg32::new(22);
+        let n = 10;
+        let id = Permutation::identity(n);
+        let sort = Permutation::from_vec(rng.permutation(n)).unwrap();
+        let mut t = Tracker::new(n);
+        t.record_phase(&id, &sort);
+        assert_eq!(t.perm(), &sort);
+    }
+}

@@ -1,0 +1,172 @@
+//! Artifact manifest: typed view of `artifacts/manifest.json`.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One input/output tensor description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: String,
+    /// Empty for scalars.
+    pub shape: Vec<usize>,
+}
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub method: String,
+    pub file: String,
+    pub n: usize,
+    pub d: usize,
+    pub h: usize,
+    pub w: usize,
+    pub m: usize,
+    pub block: usize,
+    pub param_count: usize,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub jax_version: String,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+fn io_list(j: &Json, key: &str) -> Result<Vec<IoSpec>> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("manifest entry missing '{key}'"))?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("io missing name"))?
+                    .to_string(),
+                dtype: e
+                    .get("dtype")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("io missing dtype"))?
+                    .to_string(),
+                shape: e
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("io missing shape"))?
+                    .iter()
+                    .map(|s| s.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        })
+        .collect()
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key).and_then(Json::as_usize).ok_or_else(|| anyhow!("missing '{key}'"))
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest.json is not valid JSON")?;
+        let version = req_usize(&j, "version")?;
+        let jax_version = j
+            .get("jax_version")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let artifacts = arts
+            .iter()
+            .map(|a| {
+                Ok(ArtifactMeta {
+                    name: a
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact missing name"))?
+                        .to_string(),
+                    method: a
+                        .get("method")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    file: a
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("artifact missing file"))?
+                        .to_string(),
+                    n: req_usize(a, "n")?,
+                    d: req_usize(a, "d")?,
+                    h: req_usize(a, "h")?,
+                    w: req_usize(a, "w")?,
+                    m: req_usize(a, "m")?,
+                    block: req_usize(a, "block")?,
+                    param_count: req_usize(a, "param_count")?,
+                    inputs: io_list(a, "inputs")?,
+                    outputs: io_list(a, "outputs")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { version, jax_version, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "jax_version": "0.8.2", "interchange": "hlo-text",
+      "artifacts": [{
+        "name": "sss_step_n64_d3_h8", "method": "sss", "file": "sss_step_n64_d3_h8.hlo.txt",
+        "n": 64, "d": 3, "h": 8, "w": 8, "m": 0, "block": 32, "param_count": 64,
+        "inputs": [
+          {"name": "w", "dtype": "f32", "shape": [64]},
+          {"name": "tau", "dtype": "f32", "shape": []}
+        ],
+        "outputs": [{"name": "loss", "dtype": "f32", "shape": []}]
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        let a = m.find("sss_step_n64_d3_h8").unwrap();
+        assert_eq!(a.n, 64);
+        assert_eq!(a.inputs[0].shape, vec![64]);
+        assert!(a.inputs[1].shape.is_empty());
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"version": 1, "artifacts": [{"name": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.artifacts.len() >= 6);
+            let a = m.find("sss_step_n1024_d3_h32").expect("headline artifact");
+            assert_eq!(a.param_count, 1024);
+            assert_eq!(a.inputs.len(), 5);
+            assert_eq!(a.outputs.len(), 5);
+        }
+    }
+}

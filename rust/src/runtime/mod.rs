@@ -1,0 +1,228 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, built once
+//! by `make artifacts`) and executes them from the L3 hot path.
+//!
+//! Wraps the `xla` crate (docs.rs/xla 0.1.6 → xla_extension 0.5.1 CPU):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. The interchange is HLO *text* — see
+//! `python/compile/aot.py` for why serialized protos don't work.
+//!
+//! Design:
+//! * `Manifest` / `ArtifactMeta` — parsed from `manifest.json` with the
+//!   in-crate JSON parser; the runtime is fully manifest-driven (Rust never
+//!   hard-codes shapes).
+//! * `Runtime` — owns the client and a lazy compile cache keyed by artifact
+//!   name (compiling an HLO module costs ~10–100 ms; every step reuses it).
+//! * `Executable::run` — typed execute with shape checking against the
+//!   manifest, returning decomposed output literals.
+
+mod manifest;
+
+pub use manifest::{ArtifactMeta, IoSpec, Manifest};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Input argument for an artifact call.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+}
+
+/// Output values from an artifact call.
+#[derive(Debug, Clone)]
+pub enum OutValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl OutValue {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            OutValue::F32(v) => v,
+            _ => panic!("output is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            OutValue::I32(v) => v,
+            _ => panic!("output is not i32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        self.as_f32()[0]
+    }
+}
+
+/// A compiled artifact bound to its manifest metadata.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host inputs; validates arity/shape/dtype against the
+    /// manifest and returns one `OutValue` per manifest output.
+    pub fn run(&self, args: &[Arg<'_>]) -> Result<Vec<OutValue>> {
+        if args.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(&self.meta.inputs) {
+            literals.push(to_literal(arg, spec).with_context(|| {
+                format!("{}: input '{}'", self.meta.name, spec.name)
+            })?);
+        }
+        let bufs = self.exe.execute::<xla::Literal>(&literals)?;
+        let result = bufs[0][0].to_literal_sync()?;
+        decompose(result, &self.meta)
+    }
+}
+
+fn to_literal(arg: &Arg<'_>, spec: &IoSpec) -> Result<xla::Literal> {
+    let want: usize = spec.shape.iter().product::<usize>().max(1);
+    match (arg, spec.dtype.as_str()) {
+        (Arg::F32(v), "f32") => {
+            if v.len() != want {
+                bail!("length {} != expected {}", v.len(), want);
+            }
+            let lit = xla::Literal::vec1(v);
+            if spec.shape.len() == 1 {
+                Ok(lit)
+            } else {
+                let dims: Vec<i64> = spec.shape.iter().map(|&s| s as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+        }
+        (Arg::I32(v), "i32") => {
+            if v.len() != want {
+                bail!("length {} != expected {}", v.len(), want);
+            }
+            let lit = xla::Literal::vec1(v);
+            if spec.shape.len() == 1 {
+                Ok(lit)
+            } else {
+                let dims: Vec<i64> = spec.shape.iter().map(|&s| s as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+        }
+        (Arg::ScalarF32(v), "f32") => {
+            if !spec.shape.is_empty() {
+                bail!("scalar passed for non-scalar input");
+            }
+            Ok(xla::Literal::scalar(*v))
+        }
+        _ => bail!("dtype mismatch (spec {})", spec.dtype),
+    }
+}
+
+fn decompose(result: xla::Literal, meta: &ArtifactMeta) -> Result<Vec<OutValue>> {
+    // aot.py lowers with return_tuple=True → always a tuple literal.
+    let parts = result.to_tuple()?;
+    if parts.len() != meta.outputs.len() {
+        bail!(
+            "{}: expected {} outputs, got {}",
+            meta.name,
+            meta.outputs.len(),
+            parts.len()
+        );
+    }
+    let mut out = Vec::with_capacity(parts.len());
+    for (lit, spec) in parts.into_iter().zip(&meta.outputs) {
+        let v = match spec.dtype.as_str() {
+            "f32" => OutValue::F32(lit.to_vec::<f32>()?),
+            "i32" => OutValue::I32(lit.to_vec::<i32>()?),
+            other => bail!("unsupported output dtype {other}"),
+        };
+        out.push(v);
+    }
+    Ok(out)
+}
+
+/// The PJRT runtime: client + artifact registry + compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` (usually "artifacts") and start a CPU
+    /// PJRT client.
+    pub fn from_manifest(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of all available artifacts.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+
+    /// Load + compile an artifact by exact name (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let executable = Rc::new(Executable { meta, exe });
+        self.cache.borrow_mut().insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Find the SoftSort/ShuffleSoftSort step artifact for (n, d, h).
+    pub fn sss_step(&self, n: usize, d: usize, h: usize) -> Result<Rc<Executable>> {
+        self.load(&format!("sss_step_n{n}_d{d}_h{h}"))
+    }
+
+    pub fn gs_step(&self, n: usize, d: usize, h: usize) -> Result<Rc<Executable>> {
+        self.load(&format!("gs_step_n{n}_d{d}_h{h}"))
+    }
+
+    pub fn gs_probe(&self, n: usize) -> Result<Rc<Executable>> {
+        self.load(&format!("gs_probe_n{n}"))
+    }
+
+    pub fn kiss_step(&self, n: usize, m: usize, d: usize) -> Result<Rc<Executable>> {
+        self.load(&format!("kiss_step_n{n}_m{m}_d{d}"))
+    }
+}

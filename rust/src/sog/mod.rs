@@ -1,0 +1,20 @@
+//! Self-Organizing Gaussians (paper §IV-B): sort the attributes of a 3D
+//! Gaussian Splatting scene into 2-D grids to raise spatial correlation,
+//! then compress the attribute planes with a standard image-style codec.
+//!
+//! * `scene` — synthetic 3DGS scene generator (DESIGN.md §3 substitution
+//!   for real captured scenes: surfaces + clutter with correlated
+//!   attributes, preserving the order-invariance SOG exploits).
+//! * `codec` — attribute-plane codec: per-plane quantization → 2-D
+//!   prediction (PNG-style filters incl. Paeth) → entropy stage
+//!   (zstd / deflate), plus exact reconstruction for PSNR.
+//! * `pipeline` — end-to-end: scene → grid sort (learned or heuristic) →
+//!   compress → ratio + PSNR, the Fig. 6 experiment.
+
+pub mod codec;
+pub mod entropy;
+pub mod pipeline;
+pub mod scene;
+
+pub use pipeline::{run_pipeline, PipelineResult, SorterKind};
+pub use scene::{GaussianScene, SceneConfig};

@@ -1,0 +1,278 @@
+//! Synthetic 3D-Gaussian-Splatting scenes.
+//!
+//! A real 3DGS reconstruction is an unordered point set whose attributes
+//! (position, scale, rotation, opacity, color) are *spatially correlated* —
+//! nearby Gaussians look alike because they sample the same surface. That
+//! correlation is the entire substrate SOG needs, so the generator builds
+//! scenes from procedural primitives that reproduce it:
+//!
+//! * `planes` — textured wall/floor patches (smooth color fields, thin
+//!   anisotropic splats aligned to the surface),
+//! * `blobs`  — volumetric clutter clusters (rounder, noisier splats),
+//!
+//! then *shuffles* all splats: like a real exported .ply, the stored order
+//! carries no spatial structure — recovering it is the sorter's job.
+//!
+//! Attribute layout per splat (d = 14):
+//!   pos.xyz (3) | log-scale.xyz (3) | rot quaternion (4) | opacity (1) | rgb (3)
+
+use crate::util::rng::Pcg32;
+
+pub const ATTR_DIM: usize = 14;
+
+#[derive(Clone, Debug)]
+pub struct SceneConfig {
+    pub n_splats: usize,
+    pub n_planes: usize,
+    pub n_blobs: usize,
+    /// Color-field smoothness on surfaces (higher = smoother).
+    pub texture_scale: f32,
+    pub seed: u64,
+}
+
+impl Default for SceneConfig {
+    fn default() -> Self {
+        SceneConfig { n_splats: 4096, n_planes: 4, n_blobs: 6, texture_scale: 2.0, seed: 7 }
+    }
+}
+
+/// A generated scene: `attrs` is row-major `[n, ATTR_DIM]`, already
+/// randomly shuffled (order-free, as exported 3DGS data is).
+#[derive(Clone, Debug)]
+pub struct GaussianScene {
+    pub n: usize,
+    pub attrs: Vec<f32>,
+}
+
+impl GaussianScene {
+    pub fn generate(cfg: &SceneConfig) -> GaussianScene {
+        let mut rng = Pcg32::new(cfg.seed);
+        let n = cfg.n_splats;
+        let mut attrs = Vec::with_capacity(n * ATTR_DIM);
+
+        // Primitive definitions.
+        struct Plane {
+            origin: [f32; 3],
+            u: [f32; 3],
+            v: [f32; 3],
+            base_color: [f32; 3],
+        }
+        let mut planes = Vec::new();
+        for _ in 0..cfg.n_planes {
+            planes.push(Plane {
+                origin: [rng.f32() * 4.0 - 2.0, rng.f32() * 4.0 - 2.0, rng.f32() * 4.0 - 2.0],
+                u: rand_unit(&mut rng),
+                v: rand_unit(&mut rng),
+                base_color: [rng.f32(), rng.f32(), rng.f32()],
+            });
+        }
+        struct Blob {
+            center: [f32; 3],
+            radius: f32,
+            color: [f32; 3],
+        }
+        let mut blobs = Vec::new();
+        for _ in 0..cfg.n_blobs {
+            blobs.push(Blob {
+                center: [rng.f32() * 4.0 - 2.0, rng.f32() * 4.0 - 2.0, rng.f32() * 4.0 - 2.0],
+                radius: 0.2 + rng.f32() * 0.5,
+                color: [rng.f32(), rng.f32(), rng.f32()],
+            });
+        }
+
+        let n_surface = n * 7 / 10; // 70% surface splats, 30% clutter
+        for i in 0..n {
+            if i < n_surface && !planes.is_empty() {
+                let p = &planes[i % planes.len()];
+                let (su, sv) = (rng.f32() * 2.0 - 1.0, rng.f32() * 2.0 - 1.0);
+                let pos = [
+                    p.origin[0] + su * p.u[0] + sv * p.v[0] + rng.gaussian() * 0.01,
+                    p.origin[1] + su * p.u[1] + sv * p.v[1] + rng.gaussian() * 0.01,
+                    p.origin[2] + su * p.u[2] + sv * p.v[2] + rng.gaussian() * 0.01,
+                ];
+                // Smooth procedural texture over (su, sv).
+                let t = cfg.texture_scale;
+                let tex = 0.5 + 0.5 * (su * t).sin() * (sv * t).cos();
+                let color = [
+                    (p.base_color[0] * tex + 0.01 * rng.gaussian()).clamp(0.0, 1.0),
+                    (p.base_color[1] * tex + 0.01 * rng.gaussian()).clamp(0.0, 1.0),
+                    (p.base_color[2] * (1.0 - 0.3 * tex) + 0.01 * rng.gaussian()).clamp(0.0, 1.0),
+                ];
+                // Thin splats aligned with the plane: small normal-axis
+                // scale; scale varies smoothly with surface position (real
+                // reconstructions size splats by local texture frequency).
+                let s_mod = 0.3 * (su * 1.3).cos();
+                let ls = [
+                    -3.0 + s_mod + rng.gaussian() * 0.05,
+                    -3.0 + s_mod + rng.gaussian() * 0.05,
+                    -5.5 + rng.gaussian() * 0.05,
+                ];
+                let rot = quat_from_uv(&p.u, &p.v, &mut rng);
+                let opacity = 0.85 + 0.1 * rng.f32();
+                push_splat(&mut attrs, pos, ls, rot, opacity, color);
+            } else {
+                let b = &blobs[i % blobs.len().max(1)];
+                let dir = rand_unit(&mut rng);
+                let r = b.radius * rng.f32().powf(0.333);
+                let pos = [
+                    b.center[0] + dir[0] * r,
+                    b.center[1] + dir[1] * r,
+                    b.center[2] + dir[2] * r,
+                ];
+                // Shade varies smoothly with radius (denser core = darker).
+                let shade = 0.65 + 0.35 * (1.0 - r / b.radius.max(1e-6));
+                let color = [
+                    (b.color[0] * shade + 0.01 * rng.gaussian()).clamp(0.0, 1.0),
+                    (b.color[1] * shade + 0.01 * rng.gaussian()).clamp(0.0, 1.0),
+                    (b.color[2] * shade + 0.01 * rng.gaussian()).clamp(0.0, 1.0),
+                ];
+                let ls = [
+                    -4.0 + rng.gaussian() * 0.15,
+                    -4.0 + rng.gaussian() * 0.15,
+                    -4.0 + rng.gaussian() * 0.15,
+                ];
+                let rot = rand_quat(&mut rng);
+                let opacity = 0.35 + 0.45 * (1.0 - r / b.radius.max(1e-6)) + 0.05 * rng.f32();
+                push_splat(&mut attrs, pos, ls, rot, opacity, color);
+            }
+        }
+
+        // Destroy the storage order (real exports are unordered).
+        let perm = rng.permutation(n);
+        let mut shuffled = vec![0.0f32; attrs.len()];
+        for (dst, &src) in perm.iter().enumerate() {
+            let s = src as usize * ATTR_DIM;
+            shuffled[dst * ATTR_DIM..(dst + 1) * ATTR_DIM]
+                .copy_from_slice(&attrs[s..s + ATTR_DIM]);
+        }
+        GaussianScene { n, attrs: shuffled }
+    }
+
+    /// Channel-normalized copy in [0,1] per attribute — what the sorter and
+    /// the codec consume (the codec stores per-channel min/max to undo it).
+    pub fn normalized(&self) -> (Vec<f32>, Vec<(f32, f32)>) {
+        let n = self.n;
+        let mut ranges = Vec::with_capacity(ATTR_DIM);
+        let mut out = self.attrs.clone();
+        for ch in 0..ATTR_DIM {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for i in 0..n {
+                let v = self.attrs[i * ATTR_DIM + ch];
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let span = (hi - lo).max(1e-9);
+            for i in 0..n {
+                out[i * ATTR_DIM + ch] = (self.attrs[i * ATTR_DIM + ch] - lo) / span;
+            }
+            ranges.push((lo, hi));
+        }
+        (out, ranges)
+    }
+}
+
+fn push_splat(
+    attrs: &mut Vec<f32>,
+    pos: [f32; 3],
+    log_scale: [f32; 3],
+    rot: [f32; 4],
+    opacity: f32,
+    color: [f32; 3],
+) {
+    attrs.extend_from_slice(&pos);
+    attrs.extend_from_slice(&log_scale);
+    attrs.extend_from_slice(&rot);
+    attrs.push(opacity);
+    attrs.extend_from_slice(&color);
+}
+
+fn rand_unit(rng: &mut Pcg32) -> [f32; 3] {
+    loop {
+        let v = [rng.gaussian(), rng.gaussian(), rng.gaussian()];
+        let norm = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+        if norm > 1e-6 {
+            return [v[0] / norm, v[1] / norm, v[2] / norm];
+        }
+    }
+}
+
+fn rand_quat(rng: &mut Pcg32) -> [f32; 4] {
+    loop {
+        let q = [rng.gaussian(), rng.gaussian(), rng.gaussian(), rng.gaussian()];
+        let norm = q.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 1e-6 {
+            let mut q = [q[0] / norm, q[1] / norm, q[2] / norm, q[3] / norm];
+            if q[0] < 0.0 {
+                q.iter_mut().for_each(|x| *x = -*x); // canonical hemisphere
+            }
+            return q;
+        }
+    }
+}
+
+/// Quaternion roughly aligning a splat with the (u,v) plane, jittered.
+fn quat_from_uv(u: &[f32; 3], v: &[f32; 3], rng: &mut Pcg32) -> [f32; 4] {
+    // Normal = u × v; encode as an axis-angle-ish quat with jitter. The
+    // codec only needs *correlated* rotations, not exact geometry.
+    let n = [
+        u[1] * v[2] - u[2] * v[1],
+        u[2] * v[0] - u[0] * v[2],
+        u[0] * v[1] - u[1] * v[0],
+    ];
+    let norm = (n[0] * n[0] + n[1] * n[1] + n[2] * n[2]).sqrt().max(1e-6);
+    let angle = 0.3 * rng.gaussian();
+    let (s, c) = (angle * 0.5).sin_cos();
+    let mut q = [c, s * n[0] / norm, s * n[1] / norm, s * n[2] / norm];
+    if q[0] < 0.0 {
+        q.iter_mut().for_each(|x| *x = -*x);
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_count_and_dim() {
+        let s = GaussianScene::generate(&SceneConfig { n_splats: 256, ..Default::default() });
+        assert_eq!(s.n, 256);
+        assert_eq!(s.attrs.len(), 256 * ATTR_DIM);
+        assert!(s.attrs.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quaternions_are_unit_and_canonical() {
+        let s = GaussianScene::generate(&SceneConfig { n_splats: 128, ..Default::default() });
+        for i in 0..s.n {
+            let q = &s.attrs[i * ATTR_DIM + 6..i * ATTR_DIM + 10];
+            let norm: f32 = q.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-3, "splat {i}: |q|={norm}");
+            assert!(q[0] >= -1e-6);
+        }
+    }
+
+    #[test]
+    fn normalized_is_unit_range() {
+        let s = GaussianScene::generate(&SceneConfig { n_splats: 200, ..Default::default() });
+        let (norm, ranges) = s.normalized();
+        assert_eq!(ranges.len(), ATTR_DIM);
+        assert!(norm.iter().all(|&v| (-1e-6..=1.0 + 1e-6).contains(&v)));
+        // Undo: x = lo + v*(hi-lo) must reproduce the input.
+        for i in [0usize, 57, 199] {
+            for ch in 0..ATTR_DIM {
+                let (lo, hi) = ranges[ch];
+                let rec = lo + norm[i * ATTR_DIM + ch] * (hi - lo).max(1e-9);
+                assert!((rec - s.attrs[i * ATTR_DIM + ch]).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = GaussianScene::generate(&SceneConfig { n_splats: 64, ..Default::default() });
+        let b = GaussianScene::generate(&SceneConfig { n_splats: 64, ..Default::default() });
+        assert_eq!(a.attrs, b.attrs);
+    }
+}

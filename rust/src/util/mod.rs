@@ -1,0 +1,11 @@
+//! Self-contained utility substrates.
+//!
+//! The build is fully offline (DESIGN.md §6): no `rand`, `serde`,
+//! `criterion` or `clap` — the pieces of those crates this project needs
+//! are implemented (and tested) here.
+
+pub mod json;
+pub mod ppm;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,66 @@
+//! Binary PPM (P6) image writer — renders sorted color grids (Fig. 1/5
+//! reproductions) without an image crate.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write an H×W RGB image; `rgb` is row-major [h][w][3], values in [0,1].
+pub fn write_ppm(path: &Path, rgb: &[f32], h: usize, w: usize) -> std::io::Result<()> {
+    assert_eq!(rgb.len(), h * w * 3);
+    let mut buf = Vec::with_capacity(h * w * 3 + 32);
+    write!(buf, "P6\n{w} {h}\n255\n")?;
+    for &v in rgb {
+        buf.push((v.clamp(0.0, 1.0) * 255.0).round() as u8);
+    }
+    std::fs::write(path, buf)
+}
+
+/// Upscale each grid cell to `cell`×`cell` pixels (viewable thumbnails).
+pub fn write_ppm_upscaled(
+    path: &Path,
+    rgb: &[f32],
+    h: usize,
+    w: usize,
+    cell: usize,
+) -> std::io::Result<()> {
+    assert_eq!(rgb.len(), h * w * 3);
+    let (hh, ww) = (h * cell, w * cell);
+    let mut big = vec![0.0f32; hh * ww * 3];
+    for y in 0..hh {
+        for x in 0..ww {
+            let src = ((y / cell) * w + (x / cell)) * 3;
+            let dst = (y * ww + x) * 3;
+            big[dst..dst + 3].copy_from_slice(&rgb[src..src + 3]);
+        }
+    }
+    write_ppm(path, &big, hh, ww)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_valid_header_and_payload() {
+        let dir = std::env::temp_dir().join("shufflesort_ppm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ppm");
+        let img = vec![0.0, 0.5, 1.0, 1.0, 0.0, 0.0];
+        write_ppm(&p, &img, 1, 2).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n2 1\n255\n"));
+        assert_eq!(bytes.len(), "P6\n2 1\n255\n".len() + 6);
+        assert_eq!(&bytes[bytes.len() - 6..], &[0, 128, 255, 255, 0, 0]);
+    }
+
+    #[test]
+    fn upscale_dimensions() {
+        let dir = std::env::temp_dir().join("shufflesort_ppm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("u.ppm");
+        let img = vec![0.25; 4 * 3];
+        write_ppm_upscaled(&p, &img, 2, 2, 3).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n6 6\n255\n"));
+    }
+}

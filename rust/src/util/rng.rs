@@ -1,0 +1,220 @@
+//! Deterministic PRNG substrate (offline replacement for the `rand` crate).
+//!
+//! `Pcg32` (O'Neill's PCG-XSH-RR 64/32) seeded through SplitMix64, plus the
+//! samplers this project needs: uniform floats, bounded ints without modulo
+//! bias (Lemire), Fisher–Yates shuffles, Gaussian (Box–Muller) and Gumbel
+//! variates. Everything is reproducible from a single `u64` seed — every
+//! experiment in EXPERIMENTS.md records its seed.
+
+/// SplitMix64 — used to expand one seed into stream/state constants.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSH-RR 64/32: small, fast, statistically solid.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    const MUL: u64 = 6364136223846793005;
+
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let state = splitmix64(&mut sm);
+        let inc = splitmix64(&mut sm) | 1;
+        let mut rng = Pcg32 { state: 0, inc };
+        rng.state = state.wrapping_add(inc);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent stream (for per-phase / per-worker RNGs).
+    pub fn split(&mut self) -> Pcg32 {
+        Pcg32::new((self.next_u32() as u64) << 32 | self.next_u32() as u64)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(Self::MUL).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 24 bits of mantissa entropy.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with 53 bits.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) — Lemire's method, no modulo bias.
+    pub fn below(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (bound as u64);
+        let mut lo = m as u32;
+        if lo < bound {
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                x = self.next_u32();
+                m = (x as u64) * (bound as u64);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// A uniformly random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        self.shuffle(&mut p);
+        p
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple > fast).
+    pub fn gaussian(&mut self) -> f32 {
+        loop {
+            let u1 = self.f64();
+            if u1 > 1e-12 {
+                let u2 = self.f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return (r * (2.0 * std::f64::consts::PI * u2).cos()) as f32;
+            }
+        }
+    }
+
+    /// Standard Gumbel(0,1) variate: -ln(-ln(U)).
+    pub fn gumbel(&mut self) -> f32 {
+        loop {
+            let u = self.f64();
+            if u > 1e-12 && u < 1.0 - 1e-12 {
+                return (-(-u.ln()).ln()) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Pcg32::new(7);
+        let mut b = Pcg32::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        let mut c = Pcg32::new(8);
+        assert_ne!(a.next_u32(), c.next_u32());
+    }
+
+    #[test]
+    fn f32_in_unit_interval_and_roughly_uniform() {
+        let mut r = Pcg32::new(1);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+            sum += v as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Pcg32::new(2);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((9000..11100).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn permutation_is_valid_and_varies() {
+        let mut r = Pcg32::new(3);
+        let p = r.permutation(257);
+        let mut seen = vec![false; 257];
+        for &v in &p {
+            assert!(!seen[v as usize]);
+            seen[v as usize] = true;
+        }
+        let q = r.permutation(257);
+        assert_ne!(p, q);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg32::new(4);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let g = r.gaussian() as f64;
+            s += g;
+            s2 += g * g;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gumbel_mean_is_euler_gamma() {
+        let mut r = Pcg32::new(5);
+        let n = 100_000;
+        let mut s = 0.0f64;
+        for _ in 0..n {
+            s += r.gumbel() as f64;
+        }
+        let mean = s / n as f64;
+        assert!((mean - 0.5772).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn split_streams_are_independent_ish() {
+        let mut r = Pcg32::new(6);
+        let mut a = r.split();
+        let mut b = r.split();
+        let mut same = 0;
+        for _ in 0..1000 {
+            if a.next_u32() == b.next_u32() {
+                same += 1;
+            }
+        }
+        assert!(same < 3);
+    }
+}

@@ -1,0 +1,118 @@
+//! Small numeric/statistics helpers shared by metrics and benches.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Population std of an f32 slice (matches `jnp.std` over all entries).
+pub fn std_f32(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let n = xs.len() as f64;
+    let m = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let v = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / n;
+    v.sqrt() as f32
+}
+
+/// Euclidean distance between two d-dim vectors.
+#[inline]
+pub fn l2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s.sqrt()
+}
+
+/// Squared Euclidean distance (hot path of DPQ / heuristics — no sqrt).
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Mean pairwise L2 distance, estimated from up to `max_pairs` random pairs.
+/// This is the `norm` scalar fed to the L_nbr loss (DESIGN §7).
+pub fn mean_pairwise_distance(
+    data: &[f32],
+    n: usize,
+    d: usize,
+    max_pairs: usize,
+    rng: &mut crate::util::rng::Pcg32,
+) -> f32 {
+    assert_eq!(data.len(), n * d);
+    if n < 2 {
+        return 1.0;
+    }
+    let total_pairs = n * (n - 1) / 2;
+    let mut sum = 0.0f64;
+    let count = total_pairs.min(max_pairs);
+    if total_pairs <= max_pairs {
+        for i in 0..n {
+            for j in (i + 1)..n {
+                sum += l2(&data[i * d..(i + 1) * d], &data[j * d..(j + 1) * d]) as f64;
+            }
+        }
+    } else {
+        for _ in 0..count {
+            let i = rng.below(n as u32) as usize;
+            let mut j = rng.below(n as u32) as usize;
+            while j == i {
+                j = rng.below(n as u32) as usize;
+            }
+            sum += l2(&data[i * d..(i + 1) * d], &data[j * d..(j + 1) * d]) as f64;
+        }
+    }
+    (sum / count as f64).max(1e-9) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn mean_and_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+        assert_eq!(std_dev(&[5.0]), 0.0);
+    }
+
+    #[test]
+    fn l2_matches_hand() {
+        assert_eq!(l2(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+        assert_eq!(l2_sq(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+    }
+
+    #[test]
+    fn pairwise_exact_vs_sampled_agree() {
+        let mut rng = Pcg32::new(1);
+        let n = 64;
+        let d = 3;
+        let data: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+        let exact = mean_pairwise_distance(&data, n, d, usize::MAX, &mut rng);
+        let sampled = mean_pairwise_distance(&data, n, d, 1500, &mut rng);
+        assert!((exact - sampled).abs() / exact < 0.08, "{exact} vs {sampled}");
+    }
+}

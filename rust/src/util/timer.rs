@@ -1,0 +1,92 @@
+//! Lightweight wall-clock timing + per-section accumulators used by the
+//! coordinator's metrics and the bench harness.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A one-shot stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulates named section timings across a run (e.g. execute vs adam vs
+/// shuffle) — the L3 profiling primitive behind EXPERIMENTS.md §Perf.
+#[derive(Debug, Default)]
+pub struct Sections {
+    acc: BTreeMap<&'static str, (Duration, u64)>,
+}
+
+impl Sections {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        let e = self.acc.entry(name).or_insert((Duration::ZERO, 0));
+        e.0 += t.elapsed();
+        e.1 += 1;
+        out
+    }
+
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        let e = self.acc.entry(name).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    pub fn total(&self, name: &str) -> Duration {
+        self.acc.get(name).map(|e| e.0).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.acc.get(name).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// "execute: 1.234s/2400 calls (0.51ms avg); adam: ..." summary line.
+    pub fn report(&self) -> String {
+        let mut parts = Vec::new();
+        for (name, (dur, n)) in &self.acc {
+            let avg_ms = if *n > 0 {
+                dur.as_secs_f64() * 1e3 / *n as f64
+            } else {
+                0.0
+            };
+            parts.push(format!(
+                "{name}: {:.3}s/{n} calls ({avg_ms:.3}ms avg)",
+                dur.as_secs_f64()
+            ));
+        }
+        parts.join("; ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_accumulate() {
+        let mut s = Sections::new();
+        for _ in 0..3 {
+            s.time("work", || std::thread::sleep(Duration::from_millis(2)));
+        }
+        assert_eq!(s.count("work"), 3);
+        assert!(s.total("work") >= Duration::from_millis(6));
+        assert!(s.report().contains("work"));
+        assert_eq!(s.count("missing"), 0);
+    }
+}

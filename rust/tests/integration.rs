@@ -1,0 +1,203 @@
+//! Integration tests across runtime + coordinator + substrates.
+//!
+//! Require `make artifacts` (the Makefile `test` target guarantees it).
+//! Small-N shapes keep the whole suite under a couple of minutes on one
+//! core.
+
+use shufflesort::config::{BaselineConfig, ShuffleSoftSortConfig};
+use shufflesort::coordinator::baselines::{
+    GumbelSinkhornDriver, KissingDriver, SoftSortDriver,
+};
+use shufflesort::coordinator::ShuffleSoftSort;
+use shufflesort::data::{fig3_colors, random_colors};
+use shufflesort::grid::GridShape;
+use shufflesort::metrics::{dpq16, mean_neighbor_distance};
+use shufflesort::runtime::{Arg, Runtime};
+
+fn rt() -> Runtime {
+    Runtime::from_manifest(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+fn small_cfg() -> ShuffleSoftSortConfig {
+    let mut cfg = ShuffleSoftSortConfig::for_grid(8, 8);
+    cfg.phases = 768;
+    cfg
+}
+
+#[test]
+fn manifest_covers_every_runtime_lookup_used_by_benches() {
+    let rt = rt();
+    rt.sss_step(64, 3, 8).unwrap();
+    rt.sss_step(16, 3, 1).unwrap();
+    rt.gs_step(64, 3, 8).unwrap();
+    rt.gs_probe(64).unwrap();
+    rt.kiss_step(64, 8, 3).unwrap();
+    assert!(rt.load("no_such_artifact").is_err());
+}
+
+#[test]
+fn step_artifact_outputs_match_manifest_shapes() {
+    let rt = rt();
+    let exe = rt.sss_step(64, 3, 8).unwrap();
+    let w: Vec<f32> = (0..64).map(|i| (64 - i) as f32).collect();
+    let x: Vec<f32> = (0..64 * 3).map(|i| (i as f32 * 0.37).fract()).collect();
+    let inv: Vec<i32> = (0..64).collect();
+    let out = exe
+        .run(&[Arg::F32(&w), Arg::F32(&x), Arg::I32(&inv), Arg::ScalarF32(0.3), Arg::ScalarF32(0.5)])
+        .unwrap();
+    assert_eq!(out.len(), 5);
+    assert_eq!(out[0].as_f32().len(), 1); // loss scalar
+    assert_eq!(out[1].as_f32().len(), 64); // grad
+    assert_eq!(out[2].as_i32().len(), 64); // sort_idx
+    assert_eq!(out[3].as_f32().len(), 64); // colsum
+    assert_eq!(out[4].as_f32().len(), 64 * 3); // y
+    assert!(out[0].scalar_f32().is_finite());
+    // Order-preserving init at sharp tau ⇒ identity sort_idx.
+    let idx = out[2].as_i32();
+    assert!(idx.iter().enumerate().all(|(i, &v)| v as usize == i));
+    // colsum of a near-permutation ≈ 1.
+    for &c in out[3].as_f32() {
+        assert!((c - 1.0).abs() < 0.2, "colsum {c}");
+    }
+}
+
+#[test]
+fn artifact_rejects_wrong_arity_and_shapes() {
+    let rt = rt();
+    let exe = rt.sss_step(64, 3, 8).unwrap();
+    let w = vec![0.0f32; 64];
+    assert!(exe.run(&[Arg::F32(&w)]).is_err());
+    let bad_x = vec![0.0f32; 10];
+    let inv: Vec<i32> = (0..64).collect();
+    assert!(exe
+        .run(&[Arg::F32(&w), Arg::F32(&bad_x), Arg::I32(&inv), Arg::ScalarF32(0.3), Arg::ScalarF32(0.5)])
+        .is_err());
+}
+
+#[test]
+fn shuffle_softsort_improves_over_random_and_softsort() {
+    let rt = rt();
+    let ds = random_colors(64, 42);
+    let g = GridShape::new(8, 8);
+    let before = dpq16(&ds.rows, 3, g);
+
+    let out = ShuffleSoftSort::new(&rt, small_cfg()).unwrap().sort(&ds).unwrap();
+    assert!(out.report.final_dpq > before + 0.3, "sss {} vs unsorted {before}", out.report.final_dpq);
+
+    let mut ss_cfg = BaselineConfig::for_grid(8, 8);
+    ss_cfg.steps = 768 * 4;
+    let ss = SoftSortDriver::new(&rt, ss_cfg).sort(&ds).unwrap();
+    assert!(
+        out.report.final_dpq > ss.report.final_dpq,
+        "sss {} must beat plain softsort {}",
+        out.report.final_dpq,
+        ss.report.final_dpq
+    );
+    // The returned permutation really produces the returned arrangement.
+    assert_eq!(out.perm.apply_rows(&ds.rows, 3), out.arranged);
+}
+
+#[test]
+fn shuffle_softsort_is_deterministic_per_seed() {
+    let rt = rt();
+    let ds = random_colors(64, 7);
+    let mut cfg = small_cfg();
+    cfg.phases = 256;
+    let a = ShuffleSoftSort::new(&rt, cfg.clone()).unwrap().sort(&ds).unwrap();
+    let b = ShuffleSoftSort::new(&rt, cfg.clone()).unwrap().sort(&ds).unwrap();
+    assert_eq!(a.perm, b.perm);
+    cfg.seed = 8;
+    let c = ShuffleSoftSort::new(&rt, cfg).unwrap().sort(&ds).unwrap();
+    assert_ne!(a.perm, c.perm);
+}
+
+#[test]
+fn gumbel_sinkhorn_driver_runs_and_improves() {
+    let rt = rt();
+    let ds = random_colors(64, 42);
+    let g = GridShape::new(8, 8);
+    let mut cfg = BaselineConfig::for_gs(8, 8);
+    cfg.steps = 512;
+    let out = GumbelSinkhornDriver::new(&rt, cfg).sort(&ds).unwrap();
+    assert!(out.report.final_dpq > dpq16(&ds.rows, 3, g));
+    assert_eq!(out.perm.len(), 64); // JV extraction always valid
+}
+
+#[test]
+fn kissing_driver_runs_and_reports_validity() {
+    let rt = rt();
+    let ds = random_colors(64, 42);
+    let mut cfg = BaselineConfig::for_grid(8, 8);
+    cfg.steps = 256;
+    let out = KissingDriver::new(&rt, cfg).sort(&ds).unwrap();
+    // Whether valid or repaired, the final permutation must be a bijection
+    // and the stability stat must be consistent.
+    assert_eq!(out.perm.len(), 64);
+    assert_eq!(out.report.repaired == 0, out.report.valid_without_repair);
+}
+
+#[test]
+fn fig3_toy_shuffle_softsort_beats_softsort() {
+    let rt = rt();
+    let ds = fig3_colors();
+    let g = GridShape::new(1, 16);
+    let mut cfg = ShuffleSoftSortConfig::for_grid(1, 16);
+    cfg.phases = 512;
+    let sss = ShuffleSoftSort::new(&rt, cfg).unwrap().sort(&ds).unwrap();
+    let mut ss_cfg = BaselineConfig::for_grid(1, 16);
+    ss_cfg.steps = 2048;
+    let ss = SoftSortDriver::new(&rt, ss_cfg).sort(&ds).unwrap();
+    let n_sss = mean_neighbor_distance(&sss.arranged, 3, g);
+    let n_ss = mean_neighbor_distance(&ss.arranged, 3, g);
+    assert!(n_sss < n_ss + 1e-9, "sss {n_sss} vs softsort {n_ss}");
+}
+
+#[test]
+fn loss_curve_is_recorded_and_roughly_decreasing() {
+    let rt = rt();
+    let ds = random_colors(64, 3);
+    let mut cfg = small_cfg();
+    cfg.phases = 512;
+    cfg.record_curve = true;
+    let out = ShuffleSoftSort::new(&rt, cfg).unwrap().sort(&ds).unwrap();
+    assert_eq!(out.report.curve.len(), out.report.steps);
+    let k = out.report.curve.len() / 8;
+    let head: f64 =
+        out.report.curve[..k].iter().map(|p| p.loss).sum::<f64>() / k as f64;
+    let tail: f64 =
+        out.report.curve[out.report.curve.len() - k..].iter().map(|p| p.loss).sum::<f64>() / k as f64;
+    assert!(tail < head, "loss head {head} tail {tail}");
+}
+
+#[test]
+fn sog_learned_pipeline_beats_shuffled() {
+    use shufflesort::sog::codec::CodecConfig;
+    use shufflesort::sog::scene::{GaussianScene, SceneConfig};
+    use shufflesort::sog::{run_pipeline, SorterKind};
+
+    let rt = rt();
+    let scene = GaussianScene::generate(&SceneConfig {
+        n_splats: 1024,
+        seed: 5,
+        ..Default::default()
+    });
+    let g = GridShape::new(32, 32);
+    let codec = CodecConfig::default();
+    let shuffled = run_pipeline(&scene, g, SorterKind::Shuffled, &codec).unwrap();
+    let mut cfg = ShuffleSoftSortConfig::for_grid(32, 32);
+    cfg.phases = 2048;
+    cfg.record_curve = false;
+    let learned = run_pipeline(&scene, g, SorterKind::Learned(&rt, cfg), &codec).unwrap();
+    // The integration budget (2048 phases) is deliberately small — the
+    // assertion is directional; the full-quality numbers live in the
+    // fig6_sog bench (EXPERIMENTS.md §E6).
+    assert!(
+        (learned.compressed_bytes as f64) < 0.95 * shuffled.compressed_bytes as f64,
+        "learned {} vs shuffled {}",
+        learned.compressed_bytes,
+        shuffled.compressed_bytes
+    );
+    assert!(learned.spatial_corr > shuffled.spatial_corr + 0.15);
+    assert!((learned.mean_psnr_db - shuffled.mean_psnr_db).abs() < 3.0);
+}
