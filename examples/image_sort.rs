@@ -7,14 +7,11 @@
 
 use anyhow::Result;
 
-use shufflesort::config::ShuffleSoftSortConfig;
-use shufflesort::coordinator::ShuffleSoftSort;
+use shufflesort::api::{overrides, Engine};
 use shufflesort::data::clustered_features;
 use shufflesort::grid::GridShape;
-use shufflesort::heuristics::{flas::Flas, GridSorter};
 use shufflesort::metrics::{dpq16, mean_neighbor_distance};
 use shufflesort::perm::Permutation;
-use shufflesort::runtime::Runtime;
 use shufflesort::util::ppm;
 
 /// Fraction of horizontally/vertically adjacent cell pairs whose items
@@ -67,19 +64,25 @@ fn main() -> Result<()> {
         cluster_coherence(&Permutation::identity(n), &labels, g)
     );
 
+    // One session for both methods; the runtime loads lazily, so FLAS runs
+    // even before `make artifacts`.
+    let engine = Engine::builder("artifacts").build();
+
     // Heuristic reference (what a production system uses today).
-    let flas = Flas::default().sort(&data.rows, data.d, g, 3);
+    let flas = engine.sort("flas", &data, g, &overrides(&[("seed", "3")]))?;
     println!(
         "FLAS:     dpq={:.3} coherence={:.3}",
-        dpq16(&flas.apply_rows(&data.rows, data.d), data.d, g),
-        cluster_coherence(&flas, &labels, g)
+        flas.report.final_dpq,
+        cluster_coherence(&flas.perm, &labels, g)
     );
 
     // The paper's method.
-    let rt = Runtime::from_manifest("artifacts")?;
-    let mut cfg = ShuffleSoftSortConfig::for_grid(h, w);
-    cfg.phases = 3072;
-    let out = ShuffleSoftSort::new(&rt, cfg)?.sort(&data)?;
+    let out = engine.sort(
+        "shuffle-softsort",
+        &data,
+        g,
+        &overrides(&[("phases", "3072")]),
+    )?;
     println!(
         "ShuffleSoftSort: dpq={:.3} coherence={:.3} ({:.1}s, {} params)",
         out.report.final_dpq,

@@ -1,5 +1,6 @@
 //! Quickstart: sort 256 random RGB colors onto a 16×16 grid with
-//! ShuffleSoftSort and report the quality metrics.
+//! ShuffleSoftSort through the unified `Engine`/registry API and report
+//! the quality metrics.
 //!
 //! Run (after `make artifacts && cargo build --release`):
 //!
@@ -7,14 +8,17 @@
 //! cargo run --release --offline --example quickstart
 //! ```
 
-use shufflesort::prelude::*;
+use shufflesort::api::overrides;
 use shufflesort::metrics::mean_neighbor_distance;
+use shufflesort::prelude::*;
 use shufflesort::util::ppm;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the AOT artifacts (HLO text, compiled once per process).
-    let rt = Runtime::from_manifest("artifacts")?;
-    println!("PJRT platform: {}", rt.platform());
+    // 1. Open a session. The Engine owns the PJRT runtime (AOT HLO
+    //    artifacts, compiled once per process) and the method registry.
+    let engine = Engine::from_artifacts("artifacts")?;
+    println!("PJRT platform: {}", engine.runtime()?.platform());
+    println!("methods: {}", engine.registry().names().join(", "));
 
     // 2. A workload: 256 random RGB colors on a 16×16 grid.
     let data = shufflesort::data::random_colors(256, 42);
@@ -25,12 +29,16 @@ fn main() -> anyhow::Result<()> {
         dpq(&data.rows, data.d, g, 16.0, 16)
     );
 
-    // 3. Sort with the paper's method (Algorithm 1). `for_grid` picks the
-    //    tuned defaults; everything is overridable (see `sssort help`).
-    let mut cfg = ShuffleSoftSortConfig::for_grid(16, 16);
-    cfg.phases = 2048; // quickstart budget: a few seconds
-    let sorter = ShuffleSoftSort::new(&rt, cfg)?;
-    let out: SortOutcome = sorter.sort(&data)?;
+    // 3. Sort with the paper's method (Algorithm 1). Any registry name
+    //    works here — try "flas" or "som" for the runtime-free heuristics.
+    //    Defaults are tuned per grid; `k=v` overrides tweak them (same
+    //    pairs as `sssort sort ... phases=2048`).
+    let out: SortOutcome = engine.sort(
+        "shuffle-softsort",
+        &data,
+        g,
+        &overrides(&[("phases", "2048")]), // quickstart budget: a few seconds
+    )?;
 
     // 4. Inspect the result.
     println!("{}", out.report.summary());
@@ -52,5 +60,16 @@ fn main() -> anyhow::Result<()> {
     std::fs::create_dir_all("out")?;
     ppm::write_ppm_upscaled(std::path::Path::new("out/quickstart.ppm"), &out.arranged, 16, 16, 16)?;
     println!("wrote out/quickstart.ppm");
+
+    // 7. Batching: many datasets across worker threads, one call. Results
+    //    are bit-identical to sequential `sort` calls.
+    let batch: Vec<Dataset> = (0..4).map(|s| shufflesort::data::random_colors(256, s)).collect();
+    for (i, result) in engine
+        .sort_batch("shuffle-softsort", &batch, g, &overrides(&[("phases", "512")]))
+        .into_iter()
+        .enumerate()
+    {
+        println!("batch[{i}]: {}", result?.report.summary());
+    }
     Ok(())
 }

@@ -12,10 +12,9 @@
 
 use anyhow::Result;
 
-use shufflesort::config::ShuffleSoftSortConfig;
+use shufflesort::api::{overrides, Engine};
 use shufflesort::grid::GridShape;
 use shufflesort::metrics::corr::mean_lag1_autocorr;
-use shufflesort::runtime::Runtime;
 use shufflesort::sog::codec::CodecConfig;
 use shufflesort::sog::scene::{GaussianScene, SceneConfig, ATTR_DIM};
 use shufflesort::sog::{run_pipeline, SorterKind};
@@ -41,21 +40,25 @@ fn main() -> Result<()> {
     );
 
     let codec = CodecConfig::default(); // 8-bit, adaptive range coder
+    let engine = Engine::builder("artifacts").build();
 
     // Baseline 1: no sorting (what a raw export compresses to).
     let shuffled = run_pipeline(&scene, g, SorterKind::Shuffled, &codec)?;
     println!("{}", shuffled.summary());
 
     // Baseline 2: heuristic sorting (original SOG uses a non-learned sorter).
-    let heuristic = run_pipeline(&scene, g, SorterKind::Heuristic, &codec)?;
+    let flas = engine.sorter("flas", &overrides(&[("seed", "11")]))?;
+    let heuristic = run_pipeline(&scene, g, SorterKind::Sorter(flas.as_ref()), &codec)?;
     println!("{}", heuristic.summary());
 
     // The paper's contribution: gradient-based sorting with N parameters.
-    let rt = Runtime::from_manifest("artifacts")?;
-    let mut cfg = ShuffleSoftSortConfig::for_grid(side, side);
-    cfg.phases = phases;
-    cfg.record_curve = false; // keep memory flat on the long run
-    let learned = run_pipeline(&scene, g, SorterKind::Learned(&rt, cfg), &codec)?;
+    // record_curve=false keeps memory flat on the long run.
+    let phases = phases.to_string();
+    let sss = engine.sorter(
+        "shuffle-softsort",
+        &overrides(&[("phases", phases.as_str()), ("record_curve", "false")]),
+    )?;
+    let learned = run_pipeline(&scene, g, SorterKind::Sorter(sss.as_ref()), &codec)?;
     println!("{}", learned.summary());
 
     println!("\n--- Fig. 6 reproduction summary ---");

@@ -1,89 +1,49 @@
-//! Sorting zoo: every sorter in the crate — four learned methods (via the
-//! PJRT runtime) and four heuristic/classical baselines — on the same
-//! random-color workload, with DPQ₁₆ and runtime side by side.
+//! Sorting zoo: every sorter in the registry — four learned methods (via
+//! the PJRT runtime) and six heuristic/classical baselines — on the same
+//! random-color workload, with DPQ₁₆ and runtime side by side. The whole
+//! sweep is registry-driven: adding a method to `api::MethodRegistry`
+//! automatically adds a row here.
 
 use anyhow::Result;
 
-use shufflesort::config::{BaselineConfig, ShuffleSoftSortConfig};
-use shufflesort::coordinator::baselines::{
-    GumbelSinkhornDriver, KissingDriver, SoftSortDriver,
-};
-use shufflesort::coordinator::ShuffleSoftSort;
+use shufflesort::api::{overrides, Engine, MethodKind};
 use shufflesort::data::random_colors;
-use shufflesort::dimred::DrLap;
 use shufflesort::grid::GridShape;
-use shufflesort::heuristics::{flas::Flas, som::Som, ssm::Ssm, GridSorter};
 use shufflesort::metrics::dpq16;
-use shufflesort::runtime::Runtime;
-use shufflesort::util::timer::Stopwatch;
 
 fn main() -> Result<()> {
     let (h, w) = (16usize, 16usize);
     let n = h * w;
     let g = GridShape::new(h, w);
     let ds = random_colors(n, 42);
+    let engine = Engine::builder("artifacts").build();
     println!("workload: {n} random RGB colors on {h}x{w}");
     println!("{:<18} {:>8} {:>8} {:>9}", "method", "dpq16", "secs", "params");
     println!("{:-<18} {:->8} {:->8} {:->9}", "", "", "", "");
     println!("{:<18} {:>8.3} {:>8} {:>9}", "unsorted", dpq16(&ds.rows, 3, g), "-", "-");
 
-    // Heuristics (pure Rust).
-    let sorters: Vec<Box<dyn GridSorter>> = vec![
-        Box::new(Som::default()),
-        Box::new(Ssm::default()),
-        Box::new(Flas::default()),
-        Box::new(Flas::las(24)),
-        Box::new(DrLap { use_tsne: false }),
-        Box::new(DrLap { use_tsne: true }),
-    ];
-    for s in sorters {
-        let t = Stopwatch::start();
-        let p = s.sort(&ds.rows, 3, g, 7);
-        let secs = t.secs();
-        let q = dpq16(&p.apply_rows(&ds.rows, 3), 3, g);
-        println!("{:<18} {:>8.3} {:>8.2} {:>9}", s.name(), q, secs, "-");
+    // Heuristics (pure Rust — no artifacts needed).
+    for spec in engine.registry().specs().iter().filter(|s| s.kind == MethodKind::Heuristic) {
+        let out = engine.sort(spec.name, &ds, g, &overrides(&[("seed", "7")]))?;
+        println!(
+            "{:<18} {:>8.3} {:>8.2} {:>9}",
+            spec.name, out.report.final_dpq, out.report.wall_secs, "-"
+        );
     }
 
-    // Learned methods (PJRT runtime).
-    let rt = Runtime::from_manifest("artifacts")?;
-    {
-        let mut cfg = ShuffleSoftSortConfig::for_grid(h, w);
-        cfg.phases = 4096;
-        let out = ShuffleSoftSort::new(&rt, cfg)?.sort(&ds)?;
+    // Learned methods (PJRT runtime; budgets comparable across methods).
+    let learned: &[(&str, &[(&str, &str)])] = &[
+        ("shuffle-softsort", &[("phases", "4096")]),
+        ("softsort", &[("steps", "4096")]),
+        ("gumbel-sinkhorn", &[("steps", "2048")]),
+        ("kissing", &[("steps", "2048")]),
+    ];
+    for &(name, ov) in learned {
+        let out = engine.sort(name, &ds, g, &overrides(ov))?;
+        let valid = if out.report.valid_without_repair { "" } else { "  (repaired)" };
         println!(
-            "{:<18} {:>8.3} {:>8.2} {:>9}",
-            "ShuffleSoftSort", out.report.final_dpq, out.report.wall_secs, out.report.param_count
-        );
-    }
-    {
-        let mut cfg = BaselineConfig::for_grid(h, w);
-        cfg.steps = 4096;
-        let out = SoftSortDriver::new(&rt, cfg).sort(&ds)?;
-        println!(
-            "{:<18} {:>8.3} {:>8.2} {:>9}",
-            "SoftSort", out.report.final_dpq, out.report.wall_secs, out.report.param_count
-        );
-    }
-    {
-        let mut cfg = BaselineConfig::for_gs(h, w);
-        cfg.steps = 2048;
-        let out = GumbelSinkhornDriver::new(&rt, cfg).sort(&ds)?;
-        println!(
-            "{:<18} {:>8.3} {:>8.2} {:>9}",
-            "Gumbel-Sinkhorn", out.report.final_dpq, out.report.wall_secs, out.report.param_count
-        );
-    }
-    {
-        let mut cfg = BaselineConfig::for_grid(h, w);
-        cfg.steps = 2048;
-        let out = KissingDriver::new(&rt, cfg).sort(&ds)?;
-        println!(
-            "{:<18} {:>8.3} {:>8.2} {:>9}  (valid={})",
-            "Kissing",
-            out.report.final_dpq,
-            out.report.wall_secs,
-            out.report.param_count,
-            out.report.valid_without_repair
+            "{:<18} {:>8.3} {:>8.2} {:>9}{valid}",
+            name, out.report.final_dpq, out.report.wall_secs, out.report.param_count
         );
     }
     Ok(())

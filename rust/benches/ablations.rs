@@ -2,25 +2,30 @@
 //! shuffle strategy (Algorithm 1's randperm vs scan vs mixed vs none),
 //! inner iteration count I (paper: 4), the inner τ ramp, and the greedy
 //! phase-acceptance guard. All on the same color workload and budget.
+//!
+//! Each variant is the default registry config plus one `k=v` override —
+//! exactly what a user would pass on the `sssort` command line.
 
 mod common;
 
 use shufflesort::bench::{banner, Table};
-use shufflesort::coordinator::shuffle::ShuffleStrategy;
-use shufflesort::coordinator::ShuffleSoftSort;
 use shufflesort::data::random_colors;
+use shufflesort::grid::GridShape;
 
 fn main() {
     let side = 16usize; // ablations need repeats; N=256 keeps each run ~10 s
     let n = side * side;
     banner("E8/ablations", &format!("{n} colors, one factor varied at a time"));
-    let rt = common::runtime();
+    let engine = common::engine();
     let ds = random_colors(n, 42);
-    let base = common::sss_config(side);
+    let g = GridShape::new(side, side);
+    let base = common::method_overrides("sss", side);
 
     let mut table = Table::new(&["Variant", "DPQ16", "loss", "rejected", "secs"]);
-    let mut run = |label: &str, cfg: shufflesort::config::ShuffleSoftSortConfig| {
-        let out = ShuffleSoftSort::new(&rt, cfg).unwrap().sort(&ds).unwrap();
+    let mut run = |label: &str, extra: &[(&str, &str)]| {
+        let mut ov = base.clone();
+        ov.extend(extra.iter().map(|(k, v)| (k.to_string(), v.to_string())));
+        let out = engine.sort("shuffle-softsort", &ds, g, &ov).unwrap();
         table.row(&[
             label.to_string(),
             format!("{:.3}", out.report.final_dpq),
@@ -30,33 +35,17 @@ fn main() {
         ]);
     };
 
-    run("default (random, I=4, accept, flat tau_i)", base.clone());
+    run("default (random, I=4, accept, flat tau_i)", &[]);
 
-    for s in [ShuffleStrategy::AlternatingScan, ShuffleStrategy::Mixed, ShuffleStrategy::Identity] {
-        let mut cfg = base.clone();
-        cfg.shuffle = s;
-        run(&format!("shuffle={}", s.name()), cfg);
+    for s in ["scan", "mixed", "identity"] {
+        run(&format!("shuffle={s}"), &[("shuffle", s)]);
     }
-    for i in [2usize, 8] {
-        let mut cfg = base.clone();
-        cfg.inner_iters = i;
-        run(&format!("I={i}"), cfg);
+    for i in ["2", "8"] {
+        run(&format!("I={i}"), &[("inner_iters", i)]);
     }
-    {
-        let mut cfg = base.clone();
-        cfg.greedy_accept = false;
-        run("no greedy accept", cfg);
-    }
-    {
-        let mut cfg = base.clone();
-        cfg.tau.inner_frac = 0.2; // Algorithm 1's 0.2τ→τ inner ramp
-        run("paper inner ramp (0.2)", cfg);
-    }
-    {
-        let mut cfg = base.clone();
-        cfg.tau.tau_start = 0.1; // no annealing
-        run("no annealing (tau=0.1)", cfg);
-    }
+    run("no greedy accept", &[("greedy_accept", "false")]);
+    run("paper inner ramp (0.2)", &[("inner_frac", "0.2")]);
+    run("no annealing (tau=0.1)", &[("tau_start", "0.1")]);
     table.print();
     println!(
         "\nexpected shape: identity shuffle (= plain SoftSort policy) clearly worst —\n\

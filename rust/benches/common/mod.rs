@@ -1,11 +1,12 @@
-//! Shared helpers for the paper-reproduction benches.
+//! Shared helpers for the paper-reproduction benches. All method dispatch
+//! flows through the `api` registry/Engine — no bench constructs a driver
+//! directly.
+#![allow(dead_code)] // each bench target uses a subset of these helpers
 
-use shufflesort::config::{BaselineConfig, ShuffleSoftSortConfig};
-use shufflesort::coordinator::baselines::{
-    GumbelSinkhornDriver, KissingDriver, SoftSortDriver,
-};
-use shufflesort::coordinator::{ShuffleSoftSort, SortOutcome};
+use shufflesort::api::Engine;
+use shufflesort::coordinator::SortOutcome;
 use shufflesort::data::Dataset;
+use shufflesort::grid::GridShape;
 use shufflesort::runtime::Runtime;
 
 /// Headline grid: 16×16 in quick mode, the paper's 32×32 with `--full`.
@@ -17,45 +18,56 @@ pub fn headline_side() -> usize {
     }
 }
 
+/// The session every bench dispatches through (eager artifact load: the
+/// learned methods are the point of these benches).
+pub fn engine() -> Engine {
+    Engine::from_artifacts("artifacts").expect("run `make artifacts` first")
+}
+
+/// Raw runtime for the micro-benches that measure PJRT itself.
 pub fn runtime() -> Runtime {
     Runtime::from_manifest("artifacts").expect("run `make artifacts` first")
 }
 
-/// Budgets chosen so each method gets a comparable optimization effort at
-/// the bench's scale (quick mode shrinks them 4x).
-pub fn sss_config(side: usize) -> ShuffleSoftSortConfig {
-    let mut cfg = ShuffleSoftSortConfig::for_grid(side, side);
+fn kv(k: &str, v: impl ToString) -> (String, String) {
+    (k.to_string(), v.to_string())
+}
+
+/// ShuffleSoftSort phase budget at the bench scale (quick mode shrinks the
+/// grid-scaled default 4x, floored at 512).
+pub fn sss_phases(side: usize) -> usize {
+    let phases = shufflesort::config::ShuffleSoftSortConfig::for_grid(side, side).phases;
     if shufflesort::bench::quick_mode() {
-        cfg.phases = (cfg.phases / 4).max(512);
+        (phases / 4).max(512)
+    } else {
+        phases
     }
-    cfg.record_curve = false;
-    cfg
 }
 
-pub fn softsort_config(side: usize) -> BaselineConfig {
-    let mut cfg = BaselineConfig::for_grid(side, side);
-    cfg.steps = sss_config(side).phases * sss_config(side).inner_iters;
-    cfg
-}
-
-pub fn gs_config(side: usize) -> BaselineConfig {
-    let mut cfg = BaselineConfig::for_gs(side, side);
-    cfg.steps = if shufflesort::bench::quick_mode() { 1024 } else { 3072 };
-    cfg
-}
-
-pub fn kiss_config(side: usize) -> BaselineConfig {
-    let mut cfg = BaselineConfig::for_grid(side, side);
-    cfg.steps = if shufflesort::bench::quick_mode() { 1024 } else { 3072 };
-    cfg
-}
-
-pub fn run_method(rt: &Runtime, name: &str, ds: &Dataset, side: usize) -> SortOutcome {
-    match name {
-        "sss" => ShuffleSoftSort::new(rt, sss_config(side)).unwrap().sort(ds).unwrap(),
-        "softsort" => SoftSortDriver::new(rt, softsort_config(side)).sort(ds).unwrap(),
-        "gs" => GumbelSinkhornDriver::new(rt, gs_config(side)).sort(ds).unwrap(),
-        "kiss" => KissingDriver::new(rt, kiss_config(side)).sort(ds).unwrap(),
-        _ => panic!("unknown method {name}"),
+/// Registry overrides giving each method a comparable optimization effort
+/// at the bench's scale (quick mode shrinks budgets 4x / caps steps).
+pub fn method_overrides(method: &str, side: usize) -> Vec<(String, String)> {
+    match method {
+        "sss" | "shuffle-softsort" | "shufflesoftsort" => {
+            vec![kv("phases", sss_phases(side)), kv("record_curve", false)]
+        }
+        // Step budget matched to ShuffleSoftSort's phases × inner_iters.
+        "softsort" => {
+            let inner =
+                shufflesort::config::ShuffleSoftSortConfig::for_grid(side, side).inner_iters;
+            vec![kv("steps", sss_phases(side) * inner)]
+        }
+        "gs" | "gumbel-sinkhorn" | "kiss" | "kissing" => {
+            let steps = if shufflesort::bench::quick_mode() { 1024 } else { 3072 };
+            vec![kv("steps", steps)]
+        }
+        _ => Vec::new(),
     }
+}
+
+/// Run a method by registry name with the bench-scale budgets.
+pub fn run_method(engine: &Engine, name: &str, ds: &Dataset, side: usize) -> SortOutcome {
+    engine
+        .sort(name, ds, GridShape::new(side, side), &method_overrides(name, side))
+        .unwrap_or_else(|e| panic!("method {name} failed: {e:#}"))
 }

@@ -14,7 +14,7 @@ fn main() {
     let side = common::headline_side();
     let n = side * side;
     banner("E3/fig1", &format!("{n} RGB colors: SoftSort vs ShuffleSoftSort grids"));
-    let rt = common::runtime();
+    let engine = common::engine();
     let ds = random_colors(n, 42);
     let g = GridShape::new(side, side);
     std::fs::create_dir_all("out").unwrap();
@@ -32,7 +32,7 @@ fn main() {
         ("softsort", "SoftSort", "out/fig1_softsort.ppm"),
         ("sss", "ShuffleSoftSort", "out/fig1_shufflesoftsort.ppm"),
     ] {
-        let out = common::run_method(&rt, key, &ds, side);
+        let out = common::run_method(&engine, key, &ds, side);
         ppm::write_ppm_upscaled(std::path::Path::new(file), &out.arranged, side, side, 8)
             .unwrap();
         println!(

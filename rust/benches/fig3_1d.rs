@@ -6,33 +6,35 @@
 
 mod common;
 
+use shufflesort::api::overrides;
 use shufflesort::bench::banner;
-use shufflesort::config::{BaselineConfig, ShuffleSoftSortConfig};
-use shufflesort::coordinator::baselines::SoftSortDriver;
-use shufflesort::coordinator::ShuffleSoftSort;
 use shufflesort::data::fig3_colors;
 use shufflesort::grid::GridShape;
 use shufflesort::metrics::mean_neighbor_distance;
 
 fn main() {
     banner("E4/fig3", "1-D chain with a blocked swap: SoftSort stuck, ShuffleSoftSort not");
-    let rt = common::runtime();
+    let engine = common::engine();
     let ds = fig3_colors(); // N=16, engineered local optimum
     let g = GridShape::new(1, 16);
     let start = mean_neighbor_distance(&ds.rows, 3, g);
     println!("start arrangement: nbr={start:.4}");
 
     // Plain SoftSort, generous budget.
-    let mut ss_cfg = BaselineConfig::for_grid(1, 16);
-    ss_cfg.steps = 4096;
-    let ss = SoftSortDriver::new(&rt, ss_cfg).sort(&ds).unwrap();
+    let ss = engine
+        .sort("softsort", &ds, g, &overrides(&[("steps", "4096")]))
+        .unwrap();
     let ss_nbr = mean_neighbor_distance(&ss.arranged, 3, g);
 
     // ShuffleSoftSort, same step budget.
-    let mut cfg = ShuffleSoftSortConfig::for_grid(1, 16);
-    cfg.phases = 1024;
-    cfg.inner_iters = 4;
-    let sss = ShuffleSoftSort::new(&rt, cfg).unwrap().sort(&ds).unwrap();
+    let sss = engine
+        .sort(
+            "shuffle-softsort",
+            &ds,
+            g,
+            &overrides(&[("phases", "1024"), ("inner_iters", "4")]),
+        )
+        .unwrap();
     let sss_nbr = mean_neighbor_distance(&sss.arranged, 3, g);
 
     // Brute reference: best circular order = sorted hues.

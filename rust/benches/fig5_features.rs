@@ -2,14 +2,14 @@
 //! feature" vectors (the e-commerce application). Synthetic clustered
 //! features substitute the proprietary catalogue (DESIGN.md §3); measured:
 //! DPQ16 + cluster spatial coherence for FLAS (production heuristic) vs
-//! ShuffleSoftSort.
+//! ShuffleSoftSort — both dispatched through the registry.
 
 mod common;
 
+use shufflesort::api::overrides;
 use shufflesort::bench::{banner, Table};
 use shufflesort::data::clustered_features;
 use shufflesort::grid::GridShape;
-use shufflesort::heuristics::{flas::Flas, GridSorter};
 use shufflesort::metrics::dpq16;
 use shufflesort::perm::Permutation;
 
@@ -29,7 +29,7 @@ fn main() {
     let side = common::headline_side();
     let n = side * side;
     banner("E5/fig5", &format!("{n} x 50-d clustered features (e-commerce stand-in)"));
-    let rt = common::runtime();
+    let engine = common::engine();
     let ds = clustered_features(n, 50, 12, 0.06, 7);
     let labels = ds.labels.clone().unwrap();
     let g = GridShape::new(side, side);
@@ -42,23 +42,25 @@ fn main() {
         "-".into(),
     ]);
 
-    let t = std::time::Instant::now();
-    let flas = Flas::default().sort(&ds.rows, ds.d, g, 3);
-    let flas_secs = t.elapsed().as_secs_f64();
+    let flas = engine
+        .sort("flas", &ds, g, &overrides(&[("seed", "3")]))
+        .unwrap();
     table.row(&[
         "FLAS".into(),
-        format!("{:.3}", dpq16(&flas.apply_rows(&ds.rows, ds.d), ds.d, g)),
-        format!("{:.3}", coherence(&flas, &labels, g)),
-        format!("{flas_secs:.1}"),
+        format!("{:.3}", flas.report.final_dpq),
+        format!("{:.3}", coherence(&flas.perm, &labels, g)),
+        format!("{:.1}", flas.report.wall_secs),
     ]);
 
     // 50-d needs the full phase budget even in quick mode (the gradient
     // signal per phase is weaker than on RGB; EXPERIMENTS.md §Tuning).
-    let mut cfg = shufflesort::config::ShuffleSoftSortConfig::for_grid(side, side);
-    cfg.record_curve = false;
-    let out = shufflesort::coordinator::ShuffleSoftSort::new(&rt, cfg)
-        .unwrap()
-        .sort(&ds)
+    let out = engine
+        .sort(
+            "shuffle-softsort",
+            &ds,
+            g,
+            &overrides(&[("record_curve", "false")]),
+        )
         .unwrap();
     table.row(&[
         "ShuffleSoftSort".into(),

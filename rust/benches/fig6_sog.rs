@@ -5,6 +5,7 @@
 
 mod common;
 
+use shufflesort::api::overrides;
 use shufflesort::bench::{banner, quick_mode, Table};
 use shufflesort::grid::GridShape;
 use shufflesort::sog::codec::CodecConfig;
@@ -15,18 +16,28 @@ fn main() {
     let n: usize = if quick_mode() { 1024 } else { 4096 };
     let side = (n as f64).sqrt() as usize;
     banner("E6/fig6", &format!("SOG: {n} synthetic splats, {side}x{side} attribute grids"));
-    let rt = common::runtime();
+    let engine = common::engine();
     let scene = GaussianScene::generate(&SceneConfig { n_splats: n, seed: 7, ..Default::default() });
     let g = GridShape::new(side, side);
 
     let mut table = Table::new(&["Order", "Compressed", "Ratio", "lag-1 corr", "PSNR dB", "sort s"]);
     let mut rows = Vec::new();
     rows.push(random_baseline(&scene, g, &CodecConfig::default(), 3).unwrap());
-    rows.push(run_pipeline(&scene, g, SorterKind::Heuristic, &CodecConfig::default()).unwrap());
     {
-        let mut cfg = common::sss_config(side);
-        cfg.record_curve = false;
-        rows.push(run_pipeline(&scene, g, SorterKind::Learned(&rt, cfg), &CodecConfig::default()).unwrap());
+        let flas = engine.sorter("flas", &overrides(&[("seed", "11")])).unwrap();
+        rows.push(
+            run_pipeline(&scene, g, SorterKind::Sorter(flas.as_ref()), &CodecConfig::default())
+                .unwrap(),
+        );
+    }
+    {
+        let sss = engine
+            .sorter("shuffle-softsort", &common::method_overrides("sss", side))
+            .unwrap();
+        rows.push(
+            run_pipeline(&scene, g, SorterKind::Sorter(sss.as_ref()), &CodecConfig::default())
+                .unwrap(),
+        );
     }
     for r in &rows {
         table.row(&[

@@ -2,50 +2,43 @@
 //! LAS/FLAS, DR+LAP) vs the learned methods, same workload and metric.
 //! The paper's [2]-line claim: gradient-based layouts reach (and can pass)
 //! heuristic quality; ShuffleSoftSort does it with N parameters.
+//!
+//! Every method — heuristic and learned — dispatches through the `api`
+//! registry, so the sweep is simply "every `MethodKind::Heuristic` spec".
 
 mod common;
 
+use shufflesort::api::{overrides, MethodKind};
 use shufflesort::bench::{banner, Table};
 use shufflesort::data::random_colors;
-use shufflesort::dimred::DrLap;
 use shufflesort::grid::GridShape;
-use shufflesort::heuristics::{flas::Flas, som::Som, ssm::Ssm, GridSorter};
 use shufflesort::metrics::dpq16;
-use shufflesort::util::timer::Stopwatch;
 
 fn main() {
     let side = common::headline_side();
     let n = side * side;
     banner("E9/heuristics", &format!("{n} colors: heuristics vs learned"));
-    let rt = common::runtime();
+    let engine = common::engine();
     let ds = random_colors(n, 42);
     let g = GridShape::new(side, side);
 
     let mut table = Table::new(&["Method", "Kind", "DPQ16", "secs"]);
     table.row(&["unsorted".into(), "-".into(), format!("{:.3}", dpq16(&ds.rows, 3, g)), "-".into()]);
 
-    let sorters: Vec<Box<dyn GridSorter>> = vec![
-        Box::new(Som::default()),
-        Box::new(Ssm::default()),
-        Box::new(Flas::default()),
-        Box::new(Flas::las(24)),
-        Box::new(DrLap { use_tsne: false }),
-        Box::new(DrLap { use_tsne: true }),
-    ];
-    for s in sorters {
-        let t = Stopwatch::start();
-        let p = s.sort(&ds.rows, 3, g, 7);
-        let secs = t.secs();
+    for spec in engine.registry().specs().iter().filter(|s| s.kind == MethodKind::Heuristic) {
+        let out = engine
+            .sort(spec.name, &ds, g, &overrides(&[("seed", "7")]))
+            .unwrap();
         table.row(&[
-            s.name().into(),
+            spec.name.into(),
             "heuristic".into(),
-            format!("{:.3}", dpq16(&p.apply_rows(&ds.rows, 3), 3, g)),
-            format!("{secs:.1}"),
+            format!("{:.3}", out.report.final_dpq),
+            format!("{:.1}", out.report.wall_secs),
         ]);
     }
 
     for (key, label) in [("sss", "ShuffleSoftSort"), ("softsort", "SoftSort")] {
-        let out = common::run_method(&rt, key, &ds, side);
+        let out = common::run_method(&engine, key, &ds, side);
         table.row(&[
             label.into(),
             "learned (N params)".into(),

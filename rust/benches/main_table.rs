@@ -21,7 +21,7 @@ fn main() {
     let side = common::headline_side();
     let n = side * side;
     banner("E2/main-table", &format!("{n} random RGB colors on {side}x{side}"));
-    let rt = common::runtime();
+    let engine = common::engine();
     let ds = random_colors(n, 42);
 
     let paper: &[(&str, &str, f64, &str)] = &[
@@ -35,7 +35,7 @@ fn main() {
         "Method", "Memory", "Runtime[s]", "DPQ16", "Valid", "Paper-DPQ16", "Paper-Rt[s]",
     ]);
     for (label, key, paper_rt, paper_q) in paper {
-        let out = common::run_method(&rt, key, &ds, side);
+        let out = common::run_method(&engine, key, &ds, side);
         table.row(&[
             label.to_string(),
             out.report.param_count.to_string(),

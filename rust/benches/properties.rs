@@ -38,7 +38,7 @@ fn main() {
     let side = 16usize; // stability statistics want repeats; keep N=256
     let n = side * side;
     banner("E1/properties", "structural + measured properties per method");
-    let rt = common::runtime();
+    let engine = common::engine();
     let seeds: &[u64] = if quick_mode() { &[1, 2, 3] } else { &[1, 2, 3, 4, 5, 6, 7, 8] };
 
     let methods: &[(&str, &str, &str, &str)] = &[
@@ -64,7 +64,7 @@ fn main() {
         let mut params = 0usize;
         for &seed in seeds {
             let ds = random_colors(n, seed);
-            let out = common::run_method(&rt, key, &ds, side);
+            let out = common::run_method(&engine, key, &ds, side);
             dpq_best = dpq_best.max(out.report.final_dpq);
             if out.report.valid_without_repair {
                 valid += 1;

@@ -35,6 +35,15 @@ fn main() {
     });
     println!("{}", s.line());
 
+    // Engine front cache: (n, d, h)-keyed, skips the name formatting +
+    // string hashing of the runtime's own cache.
+    let engine = common::engine();
+    engine.sss_step(1024, 3, 32).unwrap();
+    let s = bench("engine.sss_step (memoized (n,d,h))", 1, reps, || {
+        engine.sss_step(1024, 3, 32).unwrap()
+    });
+    println!("{}", s.line());
+
     let s = bench("execute sss_step n=1024 (full step)", 2, reps, || {
         exe.run(&[
             Arg::F32(&w),

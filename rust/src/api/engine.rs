@@ -1,0 +1,228 @@
+//! The [`Engine`] session: owns the PJRT [`Runtime`] (lazily loaded),
+//! memoizes `Executable` lookups per `(n, d, h)`, and fans
+//! [`Engine::sort_batch`] requests out across `std::thread` workers.
+//!
+//! Determinism: every sort is a pure function of (method, overrides,
+//! dataset, grid) — each batch worker runs its own runtime + sorter, so
+//! batched results are bit-identical to sequential ones. Enforced by
+//! `rust/tests/api.rs`.
+
+use std::cell::{OnceCell, RefCell};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::SortOutcome;
+use crate::data::Dataset;
+use crate::grid::GridShape;
+use crate::runtime::{Executable, Runtime};
+
+use super::registry::{MethodKind, MethodRegistry};
+use super::sorter::Sorter;
+
+/// A sorting session bound to an artifacts directory.
+pub struct Engine {
+    artifacts_dir: PathBuf,
+    registry: MethodRegistry,
+    /// Lazily constructed so heuristic-only sessions never require
+    /// artifacts (`sssort sort --method flas` works without `make
+    /// artifacts`).
+    rt: OnceCell<Runtime>,
+    /// `(n, d, h)` → compiled step executable, for callers that drive step
+    /// executables directly (serving experiments, micro-benches). The
+    /// runtime's own cache is keyed by artifact *name*; this front cache
+    /// additionally skips the name formatting + string hashing per lookup.
+    /// The driver-based `sort`/`sort_batch` paths resolve executables
+    /// through the runtime instead.
+    step_cache: RefCell<HashMap<(usize, usize, usize), Rc<Executable>>>,
+    workers: usize,
+}
+
+impl Engine {
+    /// Eagerly load the artifacts at `dir` (errors early if missing).
+    pub fn from_artifacts(dir: impl AsRef<Path>) -> Result<Engine> {
+        let engine = Engine::builder(dir).build();
+        engine.runtime()?;
+        Ok(engine)
+    }
+
+    pub fn builder(dir: impl AsRef<Path>) -> EngineBuilder {
+        EngineBuilder {
+            artifacts_dir: dir.as_ref().to_path_buf(),
+            workers: None,
+        }
+    }
+
+    pub fn registry(&self) -> &MethodRegistry {
+        &self.registry
+    }
+
+    /// Number of worker threads `sort_batch` may use.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The session runtime, loading the artifact manifest on first use.
+    pub fn runtime(&self) -> Result<&Runtime> {
+        if self.rt.get().is_none() {
+            let rt = Runtime::from_manifest(&self.artifacts_dir).with_context(|| {
+                format!("loading artifacts from {}", self.artifacts_dir.display())
+            })?;
+            // A concurrent set is impossible (Engine is not Sync); ignore
+            // the Err(value) that would signal one.
+            let _ = self.rt.set(rt);
+        }
+        Ok(self.rt.get().expect("runtime initialized above"))
+    }
+
+    /// Memoized `(n, d, h)` lookup of the ShuffleSoftSort/SoftSort step
+    /// executable.
+    pub fn sss_step(&self, n: usize, d: usize, h: usize) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.step_cache.borrow().get(&(n, d, h)) {
+            return Ok(exe.clone());
+        }
+        let exe = self.runtime()?.sss_step(n, d, h)?;
+        self.step_cache.borrow_mut().insert((n, d, h), exe.clone());
+        Ok(exe)
+    }
+
+    /// Build a sorter by registry name; the runtime is attached only for
+    /// learned methods.
+    pub fn sorter(
+        &self,
+        method: &str,
+        overrides: &[(String, String)],
+    ) -> Result<Box<dyn Sorter + '_>> {
+        let spec = self.registry.resolve_or_err(method)?;
+        let rt = match spec.kind {
+            MethodKind::Learned => Some(self.runtime()?),
+            MethodKind::Heuristic => None,
+        };
+        self.registry.build(spec.name, rt, overrides)
+    }
+
+    /// Sort one dataset with the named method.
+    pub fn sort(
+        &self,
+        method: &str,
+        data: &Dataset,
+        g: GridShape,
+        overrides: &[(String, String)],
+    ) -> Result<SortOutcome> {
+        self.sorter(method, overrides)?.sort(data, g)
+    }
+
+    /// Sort many datasets with the named method, across up to
+    /// `self.workers()` threads. Results are positionally aligned with the
+    /// input and bit-identical to sequential `sort` calls (each worker
+    /// builds its own runtime + sorter; per-item state is never shared).
+    pub fn sort_batch(
+        &self,
+        method: &str,
+        datasets: &[Dataset],
+        g: GridShape,
+        overrides: &[(String, String)],
+    ) -> Vec<Result<SortOutcome>> {
+        let m = datasets.len();
+        if m == 0 {
+            return Vec::new();
+        }
+        let workers = self.workers.clamp(1, m);
+        if workers == 1 {
+            return match self.sorter(method, overrides) {
+                Ok(sorter) => datasets.iter().map(|ds| sorter.sort(ds, g)).collect(),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    (0..m).map(|_| Err(anyhow!("{msg}"))).collect()
+                }
+            };
+        }
+
+        let needs_rt = matches!(
+            self.registry.resolve(method).map(|s| s.kind),
+            Some(MethodKind::Learned)
+        );
+        let registry = self.registry;
+        let dir = self.artifacts_dir.clone();
+        let mut out: Vec<Option<Result<SortOutcome>>> = (0..m).map(|_| None).collect();
+
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for wk in 0..workers {
+                let dir = dir.clone();
+                handles.push(scope.spawn(move || {
+                    let idxs: Vec<usize> = (wk..m).step_by(workers).collect();
+                    // Each worker owns an independent runtime: `Runtime` is
+                    // single-threaded (Rc/RefCell caches), and per-worker
+                    // compile caches keep workers fully isolated.
+                    let rt = if needs_rt {
+                        match Runtime::from_manifest(&dir) {
+                            Ok(rt) => Some(rt),
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                return idxs
+                                    .into_iter()
+                                    .map(|i| (i, Err(anyhow!("{msg}"))))
+                                    .collect::<Vec<_>>();
+                            }
+                        }
+                    } else {
+                        None
+                    };
+                    let sorter = match registry.build(method, rt.as_ref(), overrides) {
+                        Ok(sorter) => sorter,
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            return idxs
+                                .into_iter()
+                                .map(|i| (i, Err(anyhow!("{msg}"))))
+                                .collect::<Vec<_>>();
+                        }
+                    };
+                    idxs.into_iter()
+                        .map(|i| (i, sorter.sort(&datasets[i], g)))
+                        .collect::<Vec<_>>()
+                }));
+            }
+            for handle in handles {
+                for (i, result) in handle.join().expect("sort_batch worker panicked") {
+                    out[i] = Some(result);
+                }
+            }
+        });
+
+        out.into_iter()
+            .map(|slot| slot.expect("every batch index is assigned to exactly one worker"))
+            .collect()
+    }
+}
+
+/// Builder for [`Engine`] sessions.
+pub struct EngineBuilder {
+    artifacts_dir: PathBuf,
+    workers: Option<usize>,
+}
+
+impl EngineBuilder {
+    /// Cap the number of `sort_batch` worker threads (default: the
+    /// machine's available parallelism).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers.max(1));
+        self
+    }
+
+    pub fn build(self) -> Engine {
+        let workers = self.workers.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+        Engine {
+            artifacts_dir: self.artifacts_dir,
+            registry: MethodRegistry::new(),
+            rt: OnceCell::new(),
+            step_cache: RefCell::new(HashMap::new()),
+            workers,
+        }
+    }
+}

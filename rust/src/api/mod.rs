@@ -1,0 +1,35 @@
+//! Unified public API: one interface for "a method that sorts a dataset
+//! onto a grid", regardless of whether the method is learned (PJRT-backed)
+//! or a pure-Rust heuristic.
+//!
+//! Three layers:
+//!
+//! * [`Sorter`] — the single trait every method implements. The four
+//!   learned drivers (`ShuffleSoftSort`, `SoftSortDriver`,
+//!   `GumbelSinkhornDriver`, `KissingDriver`) implement it directly;
+//!   the heuristics (FLAS/LAS/SOM/SSM/PCA+LAP/t-SNE+LAP) are wrapped by
+//!   [`sorter::HeuristicSorter`], so heuristic runs also produce a full
+//!   `RunReport` with section timings and the final DPQ.
+//! * [`MethodRegistry`] — string-keyed construction
+//!   (`registry.build("shuffle-softsort", &rt, &overrides)?`) consuming the
+//!   CLI's `k=v` override pairs. The CLI, every bench target and every
+//!   example dispatch through it; nothing constructs a driver by hand.
+//! * [`Engine`] — a session that owns the `Runtime` (lazily loaded, so
+//!   heuristic-only sessions never touch the artifacts), memoizes
+//!   `Executable` lookups per `(n, d, h)`, and runs
+//!   [`Engine::sort_batch`] across `std::thread` workers — the first step
+//!   toward the ROADMAP's serving story.
+
+pub mod engine;
+pub mod registry;
+pub mod sorter;
+
+pub use engine::{Engine, EngineBuilder};
+pub use registry::{MethodKind, MethodRegistry, MethodSpec};
+pub use sorter::{HeuristicSorter, LearnedSorter, Sorter};
+
+/// Convenience: turn `&[("k", "v"), ...]` literals into the owned override
+/// pairs the registry and config builders consume.
+pub fn overrides(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}

@@ -1,0 +1,372 @@
+//! String-keyed method construction: one path from a method name + `k=v`
+//! override pairs to a boxed [`Sorter`], shared by the CLI, every bench
+//! target and every example.
+//!
+//! Overrides follow the CLI's `ParsedArgs` semantics: applied in order
+//! (last one wins), unknown keys and unparsable values are errors naming
+//! the offending key. Overrides are validated eagerly at `build` time (on a
+//! probe config) so bad pairs fail before any optimization runs.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{BaselineConfig, ShuffleSoftSortConfig};
+use crate::dimred::DrLap;
+use crate::heuristics::{flas::Flas, som::Som, ssm::Ssm, GridSorter};
+use crate::runtime::Runtime;
+
+use super::sorter::{HeuristicSorter, LearnedKind, LearnedSorter, Sorter};
+
+/// Whether a method needs the PJRT runtime (learned) or is pure Rust.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MethodKind {
+    Learned,
+    Heuristic,
+}
+
+/// Static description of one registered method.
+#[derive(Clone, Copy, Debug)]
+pub struct MethodSpec {
+    /// Canonical name (the key `build` resolves and `Sorter::name` reports).
+    pub name: &'static str,
+    /// Accepted aliases (historical CLI spellings).
+    pub aliases: &'static [&'static str],
+    pub kind: MethodKind,
+    /// One-line summary for `sssort help`.
+    pub summary: &'static str,
+}
+
+const SPECS: &[MethodSpec] = &[
+    MethodSpec {
+        name: "shuffle-softsort",
+        aliases: &["sss", "shufflesoftsort"],
+        kind: MethodKind::Learned,
+        summary: "the paper's Algorithm 1: N params, shuffled SoftSort phases",
+    },
+    MethodSpec {
+        name: "softsort",
+        aliases: &[],
+        kind: MethodKind::Learned,
+        summary: "plain SoftSort baseline (Prillo & Eisenschlos), N params",
+    },
+    MethodSpec {
+        name: "gumbel-sinkhorn",
+        aliases: &["gs"],
+        kind: MethodKind::Learned,
+        summary: "Gumbel-Sinkhorn baseline (Mena et al.), N^2 params",
+    },
+    MethodSpec {
+        name: "kissing",
+        aliases: &["kiss"],
+        kind: MethodKind::Learned,
+        summary: "low-rank Kissing baseline (Droege et al.), 2NM params",
+    },
+    MethodSpec {
+        name: "flas",
+        aliases: &[],
+        kind: MethodKind::Heuristic,
+        summary: "Fast Linear Assignment Sorting (subset LAPs per epoch)",
+    },
+    MethodSpec {
+        name: "las",
+        aliases: &[],
+        kind: MethodKind::Heuristic,
+        summary: "Linear Assignment Sorting (full-grid LAP per epoch)",
+    },
+    MethodSpec {
+        name: "som",
+        aliases: &[],
+        kind: MethodKind::Heuristic,
+        summary: "Self-Organizing Map layout (Kohonen)",
+    },
+    MethodSpec {
+        name: "ssm",
+        aliases: &[],
+        kind: MethodKind::Heuristic,
+        summary: "Self-Sorting Map (hierarchical quad swaps)",
+    },
+    MethodSpec {
+        name: "pca-lap",
+        aliases: &["pca"],
+        kind: MethodKind::Heuristic,
+        summary: "PCA projection to 2-D + Jonker-Volgenant grid assignment",
+    },
+    MethodSpec {
+        name: "tsne-lap",
+        aliases: &["tsne"],
+        kind: MethodKind::Heuristic,
+        summary: "t-SNE projection to 2-D + Jonker-Volgenant grid assignment",
+    },
+];
+
+/// The built-in method set. Zero-sized and `Copy`: the registry is a
+/// namespace over the crate's drivers, safe to share across threads.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MethodRegistry;
+
+impl MethodRegistry {
+    pub fn new() -> Self {
+        MethodRegistry
+    }
+
+    /// All method specs, canonical order.
+    pub fn specs(&self) -> &'static [MethodSpec] {
+        SPECS
+    }
+
+    /// Canonical names of every registered method.
+    pub fn names(&self) -> Vec<&'static str> {
+        SPECS.iter().map(|s| s.name).collect()
+    }
+
+    /// Resolve a name or alias (case-insensitive) to its spec.
+    pub fn resolve(&self, name: &str) -> Option<&'static MethodSpec> {
+        let lower = name.to_ascii_lowercase();
+        SPECS
+            .iter()
+            .find(|s| s.name == lower || s.aliases.contains(&lower.as_str()))
+    }
+
+    /// `resolve` with the canonical "unknown method" error listing every
+    /// available name — the single source of that message for the registry,
+    /// `Engine` and the CLI.
+    pub fn resolve_or_err(&self, name: &str) -> Result<&'static MethodSpec> {
+        self.resolve(name).ok_or_else(|| {
+            anyhow!(
+                "unknown method '{name}' — available: {}",
+                self.names().join(", ")
+            )
+        })
+    }
+
+    /// Build a sorter by name. `rt` may be a `&Runtime` or `None`; learned
+    /// methods require it, heuristics ignore it. Overrides are the CLI's
+    /// `k=v` pairs, validated here (last-wins; errors name the bad key).
+    pub fn build<'rt>(
+        &self,
+        name: &str,
+        rt: impl Into<Option<&'rt Runtime>>,
+        overrides: &[(String, String)],
+    ) -> Result<Box<dyn Sorter + 'rt>> {
+        let spec = self.resolve_or_err(name)?;
+        match spec.kind {
+            MethodKind::Learned => {
+                let kind = match spec.name {
+                    "shuffle-softsort" => LearnedKind::ShuffleSoftSort,
+                    "softsort" => LearnedKind::SoftSort,
+                    "gumbel-sinkhorn" => LearnedKind::GumbelSinkhorn,
+                    "kissing" => LearnedKind::Kissing,
+                    other => unreachable!("unmapped learned method {other}"),
+                };
+                validate_learned_overrides(kind, overrides)?;
+                let rt = rt.into().ok_or_else(|| {
+                    anyhow!(
+                        "method '{}' needs a PJRT runtime — load artifacts first \
+                         (Runtime::from_manifest / Engine::from_artifacts)",
+                        spec.name
+                    )
+                })?;
+                Ok(Box::new(LearnedSorter::new(kind, rt, overrides.to_vec())))
+            }
+            MethodKind::Heuristic => {
+                Ok(Box::new(build_heuristic(spec.name, overrides)?))
+            }
+        }
+    }
+}
+
+/// Check learned-method overrides against a probe config so type errors and
+/// unknown keys surface at build time. Goes through the same builder path
+/// `LearnedSorter` uses at sort time, so validation cannot diverge from
+/// application.
+fn validate_learned_overrides(kind: LearnedKind, overrides: &[(String, String)]) -> Result<()> {
+    match kind {
+        LearnedKind::ShuffleSoftSort => {
+            ShuffleSoftSortConfig::builder()
+                .grid(4, 4)
+                .overrides(overrides.iter().cloned())
+                .build()?;
+        }
+        _ => {
+            BaselineConfig::builder()
+                .grid(4, 4)
+                .overrides(overrides.iter().cloned())
+                .build()?;
+        }
+    }
+    Ok(())
+}
+
+fn parse_val<T: std::str::FromStr>(k: &str, v: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    v.parse()
+        .map_err(|e| anyhow!("invalid override '{k}={v}': {e}"))
+}
+
+/// Construct a configured heuristic adapter from `k=v` overrides.
+fn build_heuristic(name: &'static str, overrides: &[(String, String)]) -> Result<HeuristicSorter> {
+    let mut seed = 42u64;
+    let inner: Box<dyn GridSorter> = match name {
+        "flas" | "las" => {
+            let mut f = if name == "las" { Flas::las(24) } else { Flas::default() };
+            for (k, v) in overrides {
+                match k.as_str() {
+                    "seed" => seed = parse_val(k, v)?,
+                    "epochs" => f.epochs = parse_val(k, v)?,
+                    "subset" => f.subset = Some(parse_val(k, v)?),
+                    "sigma_end" => f.sigma_end = parse_val(k, v)?,
+                    _ => bail!(
+                        "unknown config key '{k}' for {name} \
+                         (allowed: seed, epochs, subset, sigma_end)"
+                    ),
+                }
+            }
+            Box::new(f)
+        }
+        "som" => {
+            let mut s = Som::default();
+            for (k, v) in overrides {
+                match k.as_str() {
+                    "seed" => seed = parse_val(k, v)?,
+                    "epochs" => s.epochs = parse_val(k, v)?,
+                    "sigma_start" => s.sigma_start = parse_val(k, v)?,
+                    "sigma_end" => s.sigma_end = parse_val(k, v)?,
+                    _ => bail!(
+                        "unknown config key '{k}' for som \
+                         (allowed: seed, epochs, sigma_start, sigma_end)"
+                    ),
+                }
+            }
+            Box::new(s)
+        }
+        "ssm" => {
+            let mut s = Ssm::default();
+            for (k, v) in overrides {
+                match k.as_str() {
+                    "seed" => seed = parse_val(k, v)?,
+                    "sweeps" | "sweeps_per_stage" => s.sweeps_per_stage = parse_val(k, v)?,
+                    _ => bail!("unknown config key '{k}' for ssm (allowed: seed, sweeps)"),
+                }
+            }
+            Box::new(s)
+        }
+        "pca-lap" | "tsne-lap" => {
+            for (k, v) in overrides {
+                match k.as_str() {
+                    "seed" => seed = parse_val(k, v)?,
+                    _ => bail!("unknown config key '{k}' for {name} (allowed: seed)"),
+                }
+            }
+            Box::new(DrLap { use_tsne: name == "tsne-lap" })
+        }
+        other => unreachable!("unmapped heuristic method {other}"),
+    };
+    Ok(HeuristicSorter::new(name, inner, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::random_colors;
+    use crate::grid::GridShape;
+
+    #[test]
+    fn registry_covers_learned_and_heuristic_methods() {
+        let reg = MethodRegistry::new();
+        let names = reg.names();
+        assert!(names.len() >= 7, "got {names:?}");
+        for want in [
+            "shuffle-softsort",
+            "softsort",
+            "gumbel-sinkhorn",
+            "kissing",
+            "flas",
+            "som",
+            "ssm",
+        ] {
+            assert!(names.contains(&want), "missing {want} in {names:?}");
+        }
+        let learned = reg.specs().iter().filter(|s| s.kind == MethodKind::Learned).count();
+        let heuristic = reg.specs().iter().filter(|s| s.kind == MethodKind::Heuristic).count();
+        assert_eq!(learned, 4);
+        assert!(heuristic >= 3);
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_names() {
+        let reg = MethodRegistry::new();
+        assert_eq!(reg.resolve("sss").unwrap().name, "shuffle-softsort");
+        assert_eq!(reg.resolve("gs").unwrap().name, "gumbel-sinkhorn");
+        assert_eq!(reg.resolve("kiss").unwrap().name, "kissing");
+        assert_eq!(reg.resolve("SSS").unwrap().name, "shuffle-softsort");
+        assert!(reg.resolve("bogus").is_none());
+    }
+
+    #[test]
+    fn unknown_method_error_lists_available_names() {
+        let reg = MethodRegistry::new();
+        let err = reg.build("nope", None::<&Runtime>, &[]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown method 'nope'"), "{msg}");
+        assert!(msg.contains("shuffle-softsort"), "{msg}");
+        assert!(msg.contains("flas"), "{msg}");
+    }
+
+    #[test]
+    fn learned_without_runtime_is_a_helpful_error() {
+        let reg = MethodRegistry::new();
+        let err = reg.build("sss", None::<&Runtime>, &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("runtime"));
+    }
+
+    #[test]
+    fn override_errors_name_the_offending_key() {
+        let reg = MethodRegistry::new();
+        // Learned: type error, validated eagerly (before the runtime check).
+        let bad = crate::api::overrides(&[("phases", "not-a-number")]);
+        let err = reg.build("sss", None::<&Runtime>, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("phases"), "{err:#}");
+        // Learned: unknown key.
+        let bad = crate::api::overrides(&[("frobnicate", "1")]);
+        let err = reg.build("sss", None::<&Runtime>, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("frobnicate"));
+        // Heuristic: type error and unknown key.
+        let bad = crate::api::overrides(&[("epochs", "x")]);
+        let err = reg.build("flas", None::<&Runtime>, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("epochs"));
+        let bad = crate::api::overrides(&[("epochs", "3")]);
+        let err = reg.build("ssm", None::<&Runtime>, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("epochs"));
+    }
+
+    #[test]
+    fn every_heuristic_sorts_a_tiny_grid_to_a_valid_permutation() {
+        let reg = MethodRegistry::new();
+        let g = GridShape::new(4, 4);
+        let ds = random_colors(16, 9);
+        for spec in reg.specs().iter().filter(|s| s.kind == MethodKind::Heuristic) {
+            let sorter = reg.build(spec.name, None::<&Runtime>, &[]).unwrap();
+            let out = sorter.sort(&ds, g).unwrap();
+            // `Permutation` is validated on construction: length check
+            // suffices to prove a duplicate-free bijection on 0..16.
+            assert_eq!(out.perm.len(), 16, "{}", spec.name);
+            assert!(out.report.final_dpq.is_finite(), "{}", spec.name);
+            assert_eq!(out.arranged.len(), 16 * 3, "{}", spec.name);
+            assert_eq!(out.report.method, spec.name);
+            assert!(out.report.sections.count("sort") > 0, "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn heuristic_overrides_are_applied_and_deterministic() {
+        let reg = MethodRegistry::new();
+        let g = GridShape::new(4, 4);
+        let ds = random_colors(16, 10);
+        let ov = crate::api::overrides(&[("seed", "7"), ("epochs", "8")]);
+        let a = reg.build("flas", None::<&Runtime>, &ov).unwrap().sort(&ds, g).unwrap();
+        let b = reg.build("flas", None::<&Runtime>, &ov).unwrap().sort(&ds, g).unwrap();
+        assert_eq!(a.perm, b.perm);
+        assert_eq!(a.report.final_dpq.to_bits(), b.report.final_dpq.to_bits());
+    }
+}

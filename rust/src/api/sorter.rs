@@ -1,0 +1,229 @@
+//! The [`Sorter`] trait and its adapters.
+//!
+//! `Sorter` is grid-late-bound: the target grid is a *call* argument, not a
+//! construction argument, so one boxed sorter can serve many shapes. The
+//! learned drivers carry a grid inside their config; their trait impls
+//! therefore check that the requested grid matches the configured one,
+//! while the registry-built [`LearnedSorter`] derives a fresh config (grid
+//! defaults + stored `k=v` overrides) per call.
+
+use anyhow::{ensure, Result};
+
+use crate::config::{BaselineConfig, ShuffleSoftSortConfig};
+use crate::coordinator::baselines::{GumbelSinkhornDriver, KissingDriver, SoftSortDriver};
+use crate::coordinator::events::RunReport;
+use crate::coordinator::{ShuffleSoftSort, SortOutcome};
+use crate::data::Dataset;
+use crate::grid::GridShape;
+use crate::heuristics::GridSorter;
+use crate::metrics::dpq16;
+use crate::runtime::Runtime;
+use crate::util::timer::Stopwatch;
+
+/// A method that sorts a dataset onto a grid. Every learned driver and
+/// every heuristic adapter returns the same [`SortOutcome`] shape
+/// (permutation + arranged rows + `RunReport`), so callers treat methods
+/// uniformly.
+pub trait Sorter {
+    /// Canonical registry name of the method (e.g. `"shuffle-softsort"`).
+    fn name(&self) -> &str;
+
+    /// Sort `data` onto grid `g`.
+    fn sort(&self, data: &Dataset, g: GridShape) -> Result<SortOutcome>;
+}
+
+fn ensure_grid(configured: GridShape, asked: GridShape, method: &str) -> Result<()> {
+    ensure!(
+        configured == asked,
+        "{method} driver is configured for {}x{} but was asked to sort onto {}x{} \
+         (build via the registry/Engine for grid-late binding)",
+        configured.h,
+        configured.w,
+        asked.h,
+        asked.w
+    );
+    Ok(())
+}
+
+impl Sorter for ShuffleSoftSort<'_> {
+    fn name(&self) -> &str {
+        "shuffle-softsort"
+    }
+
+    fn sort(&self, data: &Dataset, g: GridShape) -> Result<SortOutcome> {
+        ensure_grid(self.config().grid, g, Sorter::name(self))?;
+        ShuffleSoftSort::sort(self, data)
+    }
+}
+
+impl Sorter for SoftSortDriver<'_> {
+    fn name(&self) -> &str {
+        "softsort"
+    }
+
+    fn sort(&self, data: &Dataset, g: GridShape) -> Result<SortOutcome> {
+        ensure_grid(self.cfg.grid, g, Sorter::name(self))?;
+        SoftSortDriver::sort(self, data)
+    }
+}
+
+impl Sorter for GumbelSinkhornDriver<'_> {
+    fn name(&self) -> &str {
+        "gumbel-sinkhorn"
+    }
+
+    fn sort(&self, data: &Dataset, g: GridShape) -> Result<SortOutcome> {
+        ensure_grid(self.cfg.grid, g, Sorter::name(self))?;
+        GumbelSinkhornDriver::sort(self, data)
+    }
+}
+
+impl Sorter for KissingDriver<'_> {
+    fn name(&self) -> &str {
+        "kissing"
+    }
+
+    fn sort(&self, data: &Dataset, g: GridShape) -> Result<SortOutcome> {
+        ensure_grid(self.cfg.grid, g, Sorter::name(self))?;
+        KissingDriver::sort(self, data)
+    }
+}
+
+/// Which learned driver a registry-built [`LearnedSorter`] dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LearnedKind {
+    ShuffleSoftSort,
+    SoftSort,
+    GumbelSinkhorn,
+    Kissing,
+}
+
+impl LearnedKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LearnedKind::ShuffleSoftSort => "shuffle-softsort",
+            LearnedKind::SoftSort => "softsort",
+            LearnedKind::GumbelSinkhorn => "gumbel-sinkhorn",
+            LearnedKind::Kissing => "kissing",
+        }
+    }
+}
+
+/// Registry-built adapter over the learned drivers: holds the runtime and
+/// the raw `k=v` overrides, and derives the concrete config from the grid
+/// at sort time (grid-scaled defaults, then overrides, last-wins).
+pub struct LearnedSorter<'rt> {
+    kind: LearnedKind,
+    rt: &'rt Runtime,
+    overrides: Vec<(String, String)>,
+}
+
+impl<'rt> LearnedSorter<'rt> {
+    pub fn new(kind: LearnedKind, rt: &'rt Runtime, overrides: Vec<(String, String)>) -> Self {
+        LearnedSorter { kind, rt, overrides }
+    }
+
+    fn sss_config(&self, g: GridShape) -> Result<ShuffleSoftSortConfig> {
+        ShuffleSoftSortConfig::builder()
+            .grid(g.h, g.w)
+            .overrides(self.overrides.iter().cloned())
+            .build()
+    }
+
+    fn baseline_config(&self, g: GridShape) -> Result<BaselineConfig> {
+        let mut b = BaselineConfig::builder().grid(g.h, g.w);
+        if self.kind == LearnedKind::GumbelSinkhorn {
+            b = b.gs_defaults();
+        }
+        b.overrides(self.overrides.iter().cloned()).build()
+    }
+}
+
+impl Sorter for LearnedSorter<'_> {
+    fn name(&self) -> &str {
+        self.kind.name()
+    }
+
+    fn sort(&self, data: &Dataset, g: GridShape) -> Result<SortOutcome> {
+        ensure!(
+            data.n == g.n(),
+            "dataset N={} != grid {}x{}",
+            data.n,
+            g.h,
+            g.w
+        );
+        match self.kind {
+            LearnedKind::ShuffleSoftSort => {
+                ShuffleSoftSort::new(self.rt, self.sss_config(g)?)?.sort(data)
+            }
+            LearnedKind::SoftSort => {
+                SoftSortDriver::new(self.rt, self.baseline_config(g)?).sort(data)
+            }
+            LearnedKind::GumbelSinkhorn => {
+                GumbelSinkhornDriver::new(self.rt, self.baseline_config(g)?).sort(data)
+            }
+            LearnedKind::Kissing => {
+                KissingDriver::new(self.rt, self.baseline_config(g)?).sort(data)
+            }
+        }
+    }
+}
+
+/// Adapter lifting a [`GridSorter`] heuristic into the unified [`Sorter`]
+/// interface. Heuristic runs thereby produce the same `RunReport` as the
+/// learned methods: section timings ("sort", "arrange", "dpq"), wall time
+/// and the final DPQ16.
+pub struct HeuristicSorter {
+    name: &'static str,
+    seed: u64,
+    inner: Box<dyn GridSorter>,
+}
+
+impl HeuristicSorter {
+    pub fn new(name: &'static str, inner: Box<dyn GridSorter>, seed: u64) -> Self {
+        HeuristicSorter { name, seed, inner }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+impl Sorter for HeuristicSorter {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn sort(&self, data: &Dataset, g: GridShape) -> Result<SortOutcome> {
+        ensure!(
+            data.n == g.n(),
+            "dataset N={} != grid {}x{}",
+            data.n,
+            g.h,
+            g.w
+        );
+        let watch = Stopwatch::start();
+        let mut report = RunReport {
+            method: self.name.to_string(),
+            n: data.n,
+            d: data.d,
+            // Heuristics optimize the layout in place; there is no learned
+            // parameter vector.
+            param_count: 0,
+            phases: 0,
+            valid_without_repair: true,
+            ..Default::default()
+        };
+        let perm = report
+            .sections
+            .time("sort", || self.inner.sort(&data.rows, data.d, g, self.seed));
+        let arranged = report
+            .sections
+            .time("arrange", || perm.apply_rows(&data.rows, data.d));
+        report.final_dpq = report
+            .sections
+            .time("dpq", || dpq16(&arranged, data.d, g));
+        report.wall_secs = watch.secs();
+        Ok(SortOutcome { perm, arranged, report })
+    }
+}

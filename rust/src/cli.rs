@@ -72,15 +72,16 @@ impl ParsedArgs {
 /// Options that always take a value (everything else after `--` is a flag).
 const KNOWN_VALUE_OPTS: &[&str] = &[
     "n", "grid", "method", "out", "seed", "config", "artifacts", "dataset",
-    "bits", "entropy", "scene-seed", "clusters", "dims",
+    "bits", "entropy", "scene-seed", "clusters", "dims", "batch", "workers",
 ];
 
 pub const USAGE: &str = "\
 sssort — ShuffleSoftSort permutation-learning coordinator
 
 USAGE:
-  sssort sort    [--method sss|softsort|gs|kiss] [--grid HxW] [--dataset colors|features]
-                 [--seed S] [--out dir] [k=v overrides]   sort a dataset, report DPQ
+  sssort sort    [--method NAME] [--grid HxW] [--dataset colors|features]
+                 [--seed S] [--batch K] [--workers W] [--out dir] [k=v overrides]
+                 sort dataset(s), report DPQ (batch >1 fans out across threads)
   sssort sog     [--n N] [--grid HxW] [--bits B] [--out dir]
                  run the Self-Organizing-Gaussians pipeline (Fig. 6)
   sssort inspect [--artifacts dir]                        list AOT artifacts
@@ -88,6 +89,33 @@ USAGE:
 
 Config overrides are bare k=v pairs, e.g. `phases=300 lr=0.3 shuffle=random`.
 ";
+
+/// Full usage text: the static grammar plus the live method list from the
+/// registry (so `help` and unknown-command errors always reflect what
+/// `--method` actually accepts).
+pub fn usage() -> String {
+    let reg = crate::api::MethodRegistry::new();
+    let mut text = String::from(USAGE);
+    text.push_str("\nMethods (--method NAME; aliases in parentheses):\n");
+    for spec in reg.specs() {
+        let alias = if spec.aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" ({})", spec.aliases.join(", "))
+        };
+        let kind = match spec.kind {
+            crate::api::MethodKind::Learned => "learned",
+            crate::api::MethodKind::Heuristic => "heuristic",
+        };
+        text.push_str(&format!(
+            "  {:<24} {:<9} {}\n",
+            format!("{}{alias}", spec.name),
+            kind,
+            spec.summary
+        ));
+    }
+    text
+}
 
 /// Parse "HxW" grid syntax.
 pub fn parse_grid(s: &str) -> Result<(usize, usize)> {
@@ -134,5 +162,22 @@ mod tests {
         let a = parse(&["inspect"]);
         assert_eq!(a.command, "inspect");
         assert_eq!(a.opt_usize("n", 1024).unwrap(), 1024);
+    }
+
+    #[test]
+    fn batch_and_workers_take_values() {
+        let a = parse(&["sort", "--batch", "4", "--workers", "2"]);
+        assert_eq!(a.opt_usize("batch", 1).unwrap(), 4);
+        assert_eq!(a.opt_usize("workers", 1).unwrap(), 2);
+        assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn usage_lists_registry_methods() {
+        let text = usage();
+        for name in crate::api::MethodRegistry::new().names() {
+            assert!(text.contains(name), "usage() missing method {name}");
+        }
+        assert!(text.contains("(sss, shufflesoftsort)"));
     }
 }

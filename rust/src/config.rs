@@ -2,7 +2,7 @@
 //! overridable from `key=value` CLI pairs (no serde/clap offline — see
 //! DESIGN.md §6).
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::shuffle::ShuffleStrategy;
 use crate::coordinator::{optimizer::AdamConfig, schedule::TauSchedule};
@@ -10,7 +10,7 @@ use crate::grid::GridShape;
 use crate::util::json::Json;
 
 /// Configuration of the ShuffleSoftSort driver (Algorithm 1).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ShuffleSoftSortConfig {
     pub grid: GridShape,
     /// Outer phases R.
@@ -38,6 +38,13 @@ pub struct ShuffleSoftSortConfig {
 }
 
 impl ShuffleSoftSortConfig {
+    /// Builder-style construction: `.grid(h, w)` is required (it seeds the
+    /// grid-scaled defaults), typed setters tweak individual fields, and
+    /// string `k=v` overrides (CLI semantics, last-wins) apply on top.
+    pub fn builder() -> ShuffleSoftSortConfigBuilder {
+        ShuffleSoftSortConfigBuilder::default()
+    }
+
     /// Defaults from the EXPERIMENTS.md §Tuning sweep: random shuffles
     /// (Algorithm 1), τ 0.6→0.1, flat inner temperature (inner_frac = 1.0 —
     /// the paper's 0.2τ→τ ramp measurably hurts under greedy acceptance,
@@ -116,8 +123,152 @@ impl ShuffleSoftSortConfig {
     }
 }
 
+/// Builder for [`ShuffleSoftSortConfig`]. Field order is irrelevant:
+/// `build()` starts from the `for_grid` defaults, applies the typed
+/// setters, then the string overrides (so `k=v` pairs win, matching the
+/// CLI's last-wins semantics).
+#[derive(Clone, Debug, Default)]
+pub struct ShuffleSoftSortConfigBuilder {
+    grid: Option<(usize, usize)>,
+    phases: Option<usize>,
+    inner_iters: Option<usize>,
+    tau_start: Option<f32>,
+    tau_end: Option<f32>,
+    inner_frac: Option<f32>,
+    lr: Option<f32>,
+    seed: Option<u64>,
+    shuffle: Option<ShuffleStrategy>,
+    max_extensions: Option<usize>,
+    record_curve: Option<bool>,
+    greedy_accept: Option<bool>,
+    overrides: Vec<(String, String)>,
+}
+
+impl ShuffleSoftSortConfigBuilder {
+    /// Target grid (required; all other defaults scale from it).
+    pub fn grid(mut self, h: usize, w: usize) -> Self {
+        self.grid = Some((h, w));
+        self
+    }
+
+    /// Outer phase count R.
+    pub fn phases(mut self, phases: usize) -> Self {
+        self.phases = Some(phases);
+        self
+    }
+
+    /// Inner SoftSort iterations per phase I.
+    pub fn inner_iters(mut self, inner_iters: usize) -> Self {
+        self.inner_iters = Some(inner_iters);
+        self
+    }
+
+    /// Outer temperature schedule endpoints.
+    pub fn tau(mut self, tau_start: f32, tau_end: f32) -> Self {
+        self.tau_start = Some(tau_start);
+        self.tau_end = Some(tau_end);
+        self
+    }
+
+    /// Inner ramp start as a fraction of the phase temperature.
+    pub fn inner_frac(mut self, inner_frac: f32) -> Self {
+        self.inner_frac = Some(inner_frac);
+        self
+    }
+
+    /// Explicit Adam lr (disables the d-dependent auto-scale, like the
+    /// `lr=` CLI override).
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn shuffle(mut self, shuffle: ShuffleStrategy) -> Self {
+        self.shuffle = Some(shuffle);
+        self
+    }
+
+    pub fn max_extensions(mut self, max_extensions: usize) -> Self {
+        self.max_extensions = Some(max_extensions);
+        self
+    }
+
+    pub fn record_curve(mut self, record_curve: bool) -> Self {
+        self.record_curve = Some(record_curve);
+        self
+    }
+
+    pub fn greedy_accept(mut self, greedy_accept: bool) -> Self {
+        self.greedy_accept = Some(greedy_accept);
+        self
+    }
+
+    /// Queue one `k=v` override (applied last, CLI semantics).
+    pub fn set(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
+        self.overrides.push((key.into(), value.into()));
+        self
+    }
+
+    /// Queue many `k=v` overrides (applied last, in order, last-wins).
+    pub fn overrides(mut self, pairs: impl IntoIterator<Item = (String, String)>) -> Self {
+        self.overrides.extend(pairs);
+        self
+    }
+
+    pub fn build(self) -> Result<ShuffleSoftSortConfig> {
+        let (h, w) = self
+            .grid
+            .ok_or_else(|| anyhow!("ShuffleSoftSortConfig builder: grid(h, w) is required"))?;
+        let mut cfg = ShuffleSoftSortConfig::for_grid(h, w);
+        if let Some(v) = self.phases {
+            cfg.phases = v;
+        }
+        if let Some(v) = self.inner_iters {
+            cfg.inner_iters = v;
+        }
+        if let Some(v) = self.tau_start {
+            cfg.tau.tau_start = v;
+        }
+        if let Some(v) = self.tau_end {
+            cfg.tau.tau_end = v;
+        }
+        if let Some(v) = self.inner_frac {
+            cfg.tau.inner_frac = v;
+        }
+        if let Some(v) = self.lr {
+            cfg.adam.lr = v;
+            cfg.lr_auto_scale = false;
+        }
+        if let Some(v) = self.seed {
+            cfg.seed = v;
+        }
+        if let Some(v) = self.shuffle {
+            cfg.shuffle = v;
+        }
+        if let Some(v) = self.max_extensions {
+            cfg.max_extensions = v;
+        }
+        if let Some(v) = self.record_curve {
+            cfg.record_curve = v;
+        }
+        if let Some(v) = self.greedy_accept {
+            cfg.greedy_accept = v;
+        }
+        for (k, v) in &self.overrides {
+            cfg.set(k, v)
+                .with_context(|| format!("invalid override '{k}={v}'"))?;
+        }
+        Ok(cfg)
+    }
+}
+
 /// Configuration shared by the baseline drivers.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BaselineConfig {
     pub grid: GridShape,
     pub steps: usize,
@@ -129,6 +280,13 @@ pub struct BaselineConfig {
 }
 
 impl BaselineConfig {
+    /// Builder-style construction mirroring
+    /// [`ShuffleSoftSortConfig::builder`]; call `.gs_defaults()` for the
+    /// Gumbel-Sinkhorn lr preset.
+    pub fn builder() -> BaselineConfigBuilder {
+        BaselineConfigBuilder::default()
+    }
+
     pub fn for_grid(h: usize, w: usize) -> Self {
         let n = h * w;
         let steps = (16 * (n as f64).sqrt() as usize).clamp(256, 2048);
@@ -164,6 +322,108 @@ impl BaselineConfig {
     }
 }
 
+/// Builder for [`BaselineConfig`]. Same layering as the ShuffleSoftSort
+/// builder: grid-scaled defaults → typed setters → `k=v` overrides.
+#[derive(Clone, Debug, Default)]
+pub struct BaselineConfigBuilder {
+    grid: Option<(usize, usize)>,
+    gs: bool,
+    steps: Option<usize>,
+    tau_start: Option<f32>,
+    tau_end: Option<f32>,
+    lr: Option<f32>,
+    seed: Option<u64>,
+    gumbel_scale: Option<f32>,
+    overrides: Vec<(String, String)>,
+}
+
+impl BaselineConfigBuilder {
+    /// Target grid (required).
+    pub fn grid(mut self, h: usize, w: usize) -> Self {
+        self.grid = Some((h, w));
+        self
+    }
+
+    /// Start from the Gumbel-Sinkhorn defaults (`for_gs`: small Adam lr
+    /// for the N² logits).
+    pub fn gs_defaults(mut self) -> Self {
+        self.gs = true;
+        self
+    }
+
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.steps = Some(steps);
+        self
+    }
+
+    pub fn tau(mut self, tau_start: f32, tau_end: f32) -> Self {
+        self.tau_start = Some(tau_start);
+        self.tau_end = Some(tau_end);
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.lr = Some(lr);
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn gumbel_scale(mut self, gumbel_scale: f32) -> Self {
+        self.gumbel_scale = Some(gumbel_scale);
+        self
+    }
+
+    /// Queue one `k=v` override (applied last, CLI semantics).
+    pub fn set(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
+        self.overrides.push((key.into(), value.into()));
+        self
+    }
+
+    /// Queue many `k=v` overrides (applied last, in order, last-wins).
+    pub fn overrides(mut self, pairs: impl IntoIterator<Item = (String, String)>) -> Self {
+        self.overrides.extend(pairs);
+        self
+    }
+
+    pub fn build(self) -> Result<BaselineConfig> {
+        let (h, w) = self
+            .grid
+            .ok_or_else(|| anyhow!("BaselineConfig builder: grid(h, w) is required"))?;
+        let mut cfg = if self.gs {
+            BaselineConfig::for_gs(h, w)
+        } else {
+            BaselineConfig::for_grid(h, w)
+        };
+        if let Some(v) = self.steps {
+            cfg.steps = v;
+        }
+        if let Some(v) = self.tau_start {
+            cfg.tau.tau_start = v;
+        }
+        if let Some(v) = self.tau_end {
+            cfg.tau.tau_end = v;
+        }
+        if let Some(v) = self.lr {
+            cfg.adam.lr = v;
+        }
+        if let Some(v) = self.seed {
+            cfg.seed = v;
+        }
+        if let Some(v) = self.gumbel_scale {
+            cfg.gumbel_scale = v;
+        }
+        for (k, v) in &self.overrides {
+            cfg.set(k, v)
+                .with_context(|| format!("invalid override '{k}={v}'"))?;
+        }
+        Ok(cfg)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,5 +456,80 @@ mod tests {
         assert_eq!(c.phases, 12);
         assert!((c.tau.tau_end - 0.05).abs() < 1e-9);
         assert!(c.apply_json("[1]").is_err());
+    }
+
+    #[test]
+    fn builder_defaults_round_trip_for_grid() {
+        // A bare builder must reproduce the struct-literal defaults exactly.
+        for (h, w) in [(4usize, 4usize), (16, 16), (1, 16)] {
+            let built = ShuffleSoftSortConfig::builder().grid(h, w).build().unwrap();
+            assert_eq!(built, ShuffleSoftSortConfig::for_grid(h, w));
+            let base = BaselineConfig::builder().grid(h, w).build().unwrap();
+            assert_eq!(base, BaselineConfig::for_grid(h, w));
+            let gs = BaselineConfig::builder().grid(h, w).gs_defaults().build().unwrap();
+            assert_eq!(gs, BaselineConfig::for_gs(h, w));
+        }
+    }
+
+    #[test]
+    fn builder_typed_setters_match_set_overrides() {
+        let typed = ShuffleSoftSortConfig::builder()
+            .grid(16, 16)
+            .phases(8)
+            .seed(7)
+            .lr(0.25)
+            .shuffle(ShuffleStrategy::Mixed)
+            .record_curve(false)
+            .build()
+            .unwrap();
+        let mut by_set = ShuffleSoftSortConfig::for_grid(16, 16);
+        by_set.set("phases", "8").unwrap();
+        by_set.set("seed", "7").unwrap();
+        by_set.set("lr", "0.25").unwrap();
+        by_set.set("shuffle", "mixed").unwrap();
+        by_set.set("record_curve", "false").unwrap();
+        assert_eq!(typed, by_set);
+        // Explicit lr disables the auto-scale in both paths.
+        assert!(!typed.lr_auto_scale);
+    }
+
+    #[test]
+    fn builder_requires_grid() {
+        assert!(ShuffleSoftSortConfig::builder().build().is_err());
+        assert!(BaselineConfig::builder().build().is_err());
+    }
+
+    #[test]
+    fn builder_string_overrides_are_last_wins() {
+        let cfg = ShuffleSoftSortConfig::builder()
+            .grid(8, 8)
+            .phases(10)
+            .set("phases", "20")
+            .set("phases", "30")
+            .build()
+            .unwrap();
+        assert_eq!(cfg.phases, 30);
+    }
+
+    #[test]
+    fn builder_override_errors_name_the_key() {
+        let err = ShuffleSoftSortConfig::builder()
+            .grid(8, 8)
+            .set("phases", "not-a-number")
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("phases"), "{err:#}");
+        let err = ShuffleSoftSortConfig::builder()
+            .grid(8, 8)
+            .set("frobnicate", "1")
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("frobnicate"), "{err:#}");
+        let err = BaselineConfig::builder()
+            .grid(8, 8)
+            .set("steps", "x")
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("steps"), "{err:#}");
     }
 }

@@ -52,17 +52,23 @@ impl RunReport {
         }
     }
 
-    /// Compact one-line summary for CLI/bench output.
+    /// Compact one-line summary for CLI/bench output. Methods that take no
+    /// optimization steps (the heuristic adapters) omit the loss clause.
     pub fn summary(&self) -> String {
-        let (l0, l1) = self.loss_span();
+        let progress = if self.steps == 0 {
+            String::new()
+        } else if self.curve.is_empty() {
+            // record_curve=false: only the last loss is known.
+            format!("steps={} loss ->{:.4} ", self.steps, self.final_loss)
+        } else {
+            let (l0, l1) = self.loss_span();
+            format!("steps={} loss {l0:.4}->{l1:.4} ", self.steps)
+        };
         format!(
-            "{}: N={} params={} steps={} loss {:.4}->{:.4} dpq={:.3} valid={} repairs={} {:.1}s",
+            "{}: N={} params={} {progress}dpq={:.3} valid={} repairs={} {:.1}s",
             self.method,
             self.n,
             self.param_count,
-            self.steps,
-            l0,
-            l1,
             self.final_dpq,
             self.valid_without_repair,
             self.repaired,

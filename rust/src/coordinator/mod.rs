@@ -183,7 +183,7 @@ pub(crate) fn run_shuffle_softsort(
         // and the current metric is cached.
         if cfg.greedy_accept {
             let (accept, nbr_trial) = report.sections.time("accept", || {
-                let phase = shuf.inverse().compose(&sort_perm).compose(&shuf);
+                let phase = inv.compose(&sort_perm).compose(&shuf);
                 phase.apply_rows_into(&x_cur, d, &mut x_trial);
                 let nbr_trial = crate::metrics::mean_neighbor_distance(&x_trial, d, g);
                 (nbr_trial <= nbr_cur + 1e-12, nbr_trial)
@@ -196,11 +196,17 @@ pub(crate) fn run_shuffle_softsort(
                 report.rejected_phases += 1;
             }
         } else {
+            // Maintain the live arrangement by applying the phase
+            // permutation into the reusable trial buffer — no per-phase
+            // allocation, no O(N·d) re-arrangement from the originals
+            // (matches the greedy branch; tracker invariant:
+            // x_new = (shuf⁻¹ ∘ sort ∘ shuf)(x_old)).
             report.sections.time("compose", || {
                 tracker.record_phase(&shuf, &sort_perm);
+                let phase = inv.compose(&sort_perm).compose(&shuf);
+                phase.apply_rows_into(&x_cur, d, &mut x_trial);
             });
-            // Maintain the live arrangement (used for the next phase).
-            x_cur = tracker.arrange(&data.rows, d);
+            std::mem::swap(&mut x_cur, &mut x_trial);
         }
     }
 

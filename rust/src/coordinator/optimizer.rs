@@ -5,7 +5,7 @@
 //! allocation-free after construction — it sits on the per-iteration hot
 //! path (N to N² parameters).
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct AdamConfig {
     pub lr: f32,
     pub beta1: f32,

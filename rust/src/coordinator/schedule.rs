@@ -5,7 +5,7 @@
 //! from 0.2·τ to τ — the small initial temperature keeps the fresh linear
 //! weights locked to the previous order before exploration widens.
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TauSchedule {
     pub tau_start: f32,
     pub tau_end: f32,

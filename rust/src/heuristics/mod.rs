@@ -11,7 +11,10 @@ pub mod ssm;
 use crate::grid::GridShape;
 use crate::perm::Permutation;
 
-/// Common interface so the bench can sweep heuristics uniformly.
+/// Low-level heuristic interface over raw row-major slices. External
+/// callers should prefer the unified `api::Sorter` trait — the registry
+/// wraps every `GridSorter` in an `api::HeuristicSorter` adapter that adds
+/// dataset handling, timing sections and the final DPQ to the outcome.
 pub trait GridSorter {
     fn name(&self) -> &'static str;
     fn sort(&self, data: &[f32], d: usize, g: GridShape, seed: u64) -> Permutation;

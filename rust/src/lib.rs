@@ -12,18 +12,50 @@
 //!   baselines, every substrate (metrics, heuristics, assignment solvers,
 //!   the Self-Organizing-Gaussians pipeline) and the benchmark harness.
 //!
+//! All methods — learned and heuristic — are reached through the unified
+//! [`api`] layer: the [`api::Sorter`] trait, the string-keyed
+//! [`api::MethodRegistry`], and the [`api::Engine`] session that owns the
+//! runtime and batches work across threads.
+//!
 //! Quick start (after `make artifacts`):
 //!
 //! ```no_run
 //! use shufflesort::prelude::*;
 //!
-//! let rt = Runtime::from_manifest("artifacts").unwrap();
+//! let engine = Engine::from_artifacts("artifacts").unwrap();
 //! let data = shufflesort::data::random_colors(256, 42);
-//! let cfg = ShuffleSoftSortConfig::for_grid(16, 16);
-//! let result = ShuffleSoftSort::new(&rt, cfg).unwrap().sort(&data).unwrap();
-//! println!("DPQ16 = {}", result.report.final_dpq);
+//! let g = GridShape::new(16, 16);
+//!
+//! // One call, any method: try "flas" or "som" for runtime-free heuristics.
+//! let out = engine.sort("shuffle-softsort", &data, g, &[]).unwrap();
+//! println!("DPQ16 = {}", out.report.final_dpq);
+//!
+//! // Batched sorting across worker threads, bit-identical to sequential.
+//! let batch: Vec<_> = (0..4).map(|s| shufflesort::data::random_colors(256, s)).collect();
+//! for result in engine.sort_batch("shuffle-softsort", &batch, g, &[]) {
+//!     println!("{}", result.unwrap().report.summary());
+//! }
+//! ```
+//!
+//! Fine-grained control goes through the config builders and the drivers
+//! directly:
+//!
+//! ```no_run
+//! use shufflesort::prelude::*;
+//!
+//! let rt = Runtime::from_manifest("artifacts").unwrap();
+//! let cfg = ShuffleSoftSortConfig::builder()
+//!     .grid(16, 16)
+//!     .phases(2048)
+//!     .seed(7)
+//!     .build()
+//!     .unwrap();
+//! let data = shufflesort::data::random_colors(256, 42);
+//! let out = ShuffleSoftSort::new(&rt, cfg).unwrap().sort(&data).unwrap();
+//! println!("DPQ16 = {}", out.report.final_dpq);
 //! ```
 
+pub mod api;
 pub mod assignment;
 pub mod bench;
 pub mod cli;
@@ -41,7 +73,8 @@ pub mod util;
 
 /// Convenience re-exports for the common entry points.
 pub mod prelude {
-    pub use crate::config::ShuffleSoftSortConfig;
+    pub use crate::api::{Engine, MethodKind, MethodRegistry, Sorter};
+    pub use crate::config::{BaselineConfig, ShuffleSoftSortConfig};
     pub use crate::coordinator::{ShuffleSoftSort, SortOutcome};
     pub use crate::data::Dataset;
     pub use crate::grid::GridShape;

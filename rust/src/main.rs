@@ -1,16 +1,15 @@
-//! `sssort` — the leader binary: CLI over the ShuffleSoftSort coordinator,
-//! the baselines and the SOG pipeline. See `cli::USAGE`.
+//! `sssort` — the leader binary: CLI over the unified `api` layer
+//! (`MethodRegistry` + `Engine`), the coordinator and the SOG pipeline.
+//! See `cli::usage()`.
 
 use anyhow::{anyhow, bail, Result};
 
-use shufflesort::cli::{parse_grid, ParsedArgs, USAGE};
-use shufflesort::config::{BaselineConfig, ShuffleSoftSortConfig};
-use shufflesort::coordinator::baselines::{GumbelSinkhornDriver, KissingDriver, SoftSortDriver};
-use shufflesort::coordinator::ShuffleSoftSort;
-use shufflesort::data;
+use shufflesort::api::{Engine, MethodKind};
+use shufflesort::cli::{parse_grid, usage, ParsedArgs};
+use shufflesort::coordinator::SortOutcome;
+use shufflesort::data::{self, Dataset};
 use shufflesort::grid::GridShape;
 use shufflesort::metrics::{dpq16, mean_neighbor_distance};
-use shufflesort::runtime::Runtime;
 use shufflesort::sog::codec::CodecConfig;
 use shufflesort::sog::scene::{GaussianScene, SceneConfig};
 use shufflesort::sog::{run_pipeline, SorterKind};
@@ -30,10 +29,10 @@ fn run() -> Result<()> {
         "sog" => cmd_sog(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
-            print!("{USAGE}");
+            print!("{}", usage());
             Ok(())
         }
-        other => bail!("unknown command '{other}'\n\n{USAGE}"),
+        other => bail!("unknown command '{other}'\n\n{}", usage()),
     }
 }
 
@@ -41,59 +40,78 @@ fn artifacts_dir(args: &ParsedArgs) -> String {
     args.opt("artifacts").unwrap_or("artifacts").to_string()
 }
 
+fn engine_for(args: &ParsedArgs) -> Result<Engine> {
+    let mut builder = Engine::builder(artifacts_dir(args));
+    if let Some(w) = args.opt("workers") {
+        let w: usize = w.parse().map_err(|_| anyhow!("--workers must be an integer"))?;
+        builder = builder.workers(w);
+    }
+    Ok(builder.build())
+}
+
 fn cmd_sort(args: &ParsedArgs) -> Result<()> {
     let (h, w) = parse_grid(args.opt("grid").unwrap_or("16x16"))?;
     let n = h * w;
     let seed: u64 = args.opt("seed").unwrap_or("42").parse()?;
+    let batch = args.opt_usize("batch", 1)?;
+    let g = GridShape::new(h, w);
+
+    let engine = engine_for(args)?;
     let method = args.opt("method").unwrap_or("sss");
-    let dataset = match args.opt("dataset").unwrap_or("colors") {
-        "colors" => data::random_colors(n, seed),
-        "features" => data::clustered_features(n, 50, 16, 0.06, seed),
-        other => bail!("unknown dataset '{other}'"),
+    let spec = engine.registry().resolve_or_err(method)?;
+
+    // `--seed` participates as the first override so an explicit `seed=...`
+    // pair still wins (last-wins semantics).
+    let mut overrides: Vec<(String, String)> = vec![("seed".into(), seed.to_string())];
+    overrides.extend(args.overrides.iter().cloned());
+
+    let make_dataset = |seed: u64| -> Result<Dataset> {
+        match args.opt("dataset").unwrap_or("colors") {
+            "colors" => Ok(data::random_colors(n, seed)),
+            "features" => Ok(data::clustered_features(n, 50, 16, 0.06, seed)),
+            other => bail!("unknown dataset '{other}'"),
+        }
     };
 
-    let rt = Runtime::from_manifest(artifacts_dir(args))?;
-    println!("platform: {}", rt.platform());
-    let g = GridShape::new(h, w);
+    if batch > 1 {
+        let datasets: Vec<Dataset> =
+            (0..batch).map(|i| make_dataset(seed + i as u64)).collect::<Result<_>>()?;
+        println!(
+            "batch sort: {} x {n} items on {h}x{w} via '{}' ({} workers)",
+            batch,
+            spec.name,
+            engine.workers().min(batch)
+        );
+        let mut failed = 0usize;
+        for (i, result) in engine.sort_batch(spec.name, &datasets, g, &overrides).iter().enumerate() {
+            match result {
+                Ok(out) => {
+                    println!("[{i}] {}", out.report.summary());
+                    if let Some(dir) = args.opt("out") {
+                        write_outputs(dir, spec.name, g, &format!("_b{i}"), out, datasets[i].d)?;
+                    }
+                }
+                Err(e) => {
+                    failed += 1;
+                    println!("[{i}] error: {e:#}");
+                }
+            }
+        }
+        if failed > 0 {
+            bail!("{failed}/{batch} batch items failed");
+        }
+        return Ok(());
+    }
+
+    let dataset = make_dataset(seed)?;
+    if spec.kind == MethodKind::Learned {
+        println!("platform: {}", engine.runtime()?.platform());
+    }
     let base_nbr = mean_neighbor_distance(&dataset.rows, dataset.d, g);
     let base_dpq = dpq16(&dataset.rows, dataset.d, g);
     println!("unsorted: nbr={base_nbr:.4} dpq16={base_dpq:.3}");
 
-    let outcome = match method {
-        "sss" | "shufflesoftsort" => {
-            let mut cfg = ShuffleSoftSortConfig::for_grid(h, w);
-            cfg.seed = seed;
-            for (k, v) in &args.overrides {
-                cfg.set(k, v)?;
-            }
-            ShuffleSoftSort::new(&rt, cfg)?.sort(&dataset)?
-        }
-        "softsort" => {
-            let mut cfg = BaselineConfig::for_grid(h, w);
-            cfg.seed = seed;
-            for (k, v) in &args.overrides {
-                cfg.set(k, v)?;
-            }
-            SoftSortDriver::new(&rt, cfg).sort(&dataset)?
-        }
-        "gs" | "gumbel-sinkhorn" => {
-            let mut cfg = BaselineConfig::for_gs(h, w);
-            cfg.seed = seed;
-            for (k, v) in &args.overrides {
-                cfg.set(k, v)?;
-            }
-            GumbelSinkhornDriver::new(&rt, cfg).sort(&dataset)?
-        }
-        "kiss" | "kissing" => {
-            let mut cfg = BaselineConfig::for_grid(h, w);
-            cfg.seed = seed;
-            for (k, v) in &args.overrides {
-                cfg.set(k, v)?;
-            }
-            KissingDriver::new(&rt, cfg).sort(&dataset)?
-        }
-        other => bail!("unknown method '{other}'"),
-    };
+    let outcome = engine.sort(spec.name, &dataset, g, &overrides)?;
 
     println!("{}", outcome.report.summary());
     println!("sections: {}", outcome.report.sections.report());
@@ -104,13 +122,31 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
     );
 
     if let Some(dir) = args.opt("out") {
-        std::fs::create_dir_all(dir)?;
-        if dataset.d == 3 {
-            let path = std::path::Path::new(dir).join(format!("{method}_{h}x{w}.ppm"));
-            ppm::write_ppm_upscaled(&path, &outcome.arranged, h, w, 12)?;
-            println!("wrote {}", path.display());
-        }
-        let curve_path = std::path::Path::new(dir).join(format!("{method}_{h}x{w}_curve.csv"));
+        write_outputs(dir, spec.name, g, "", &outcome, dataset.d)?;
+    }
+    Ok(())
+}
+
+/// Write the viewable grid image (3-d data) and, when recorded, the loss
+/// curve for one outcome. `suffix` disambiguates batch items.
+fn write_outputs(
+    dir: &str,
+    method: &str,
+    g: GridShape,
+    suffix: &str,
+    outcome: &SortOutcome,
+    d: usize,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    if d == 3 {
+        let path =
+            std::path::Path::new(dir).join(format!("{method}_{}x{}{suffix}.ppm", g.h, g.w));
+        ppm::write_ppm_upscaled(&path, &outcome.arranged, g.h, g.w, 12)?;
+        println!("wrote {}", path.display());
+    }
+    if !outcome.report.curve.is_empty() {
+        let curve_path = std::path::Path::new(dir)
+            .join(format!("{method}_{}x{}{suffix}_curve.csv", g.h, g.w));
         let mut csv = String::from("phase,iter,tau,loss\n");
         for p in &outcome.report.curve {
             csv.push_str(&format!("{},{},{},{}\n", p.phase, p.iter, p.tau, p.loss));
@@ -139,19 +175,18 @@ fn cmd_sog(args: &ParsedArgs) -> Result<()> {
     });
     let g = GridShape::new(h, w);
     let codec = CodecConfig { bits, ..Default::default() };
+    let engine = engine_for(args)?;
 
     println!("SOG pipeline: N={n} grid={h}x{w} bits={bits}");
     let shuffled = run_pipeline(&scene, g, SorterKind::Shuffled, &codec)?;
     println!("{}", shuffled.summary());
-    let heuristic = run_pipeline(&scene, g, SorterKind::Heuristic, &codec)?;
+
+    let flas = engine.sorter("flas", &shufflesort::api::overrides(&[("seed", "11")]))?;
+    let heuristic = run_pipeline(&scene, g, SorterKind::Sorter(flas.as_ref()), &codec)?;
     println!("{}", heuristic.summary());
 
-    let rt = Runtime::from_manifest(artifacts_dir(args))?;
-    let mut cfg = ShuffleSoftSortConfig::for_grid(h, w);
-    for (k, v) in &args.overrides {
-        cfg.set(k, v)?;
-    }
-    let learned = run_pipeline(&scene, g, SorterKind::Learned(&rt, cfg), &codec)?;
+    let sss = engine.sorter("shuffle-softsort", &args.overrides)?;
+    let learned = run_pipeline(&scene, g, SorterKind::Sorter(sss.as_ref()), &codec)?;
     println!("{}", learned.summary());
 
     println!(
@@ -166,8 +201,10 @@ fn cmd_sog(args: &ParsedArgs) -> Result<()> {
 
 fn cmd_inspect(args: &ParsedArgs) -> Result<()> {
     let dir = artifacts_dir(args);
-    let rt = Runtime::from_manifest(&dir)
-        .map_err(|e| anyhow!("{e} (build with `make artifacts`)"))?;
+    let engine = Engine::builder(&dir).build();
+    let rt = engine
+        .runtime()
+        .map_err(|e| anyhow!("{e:#} (build with `make artifacts`)"))?;
     let m = rt.manifest();
     println!("manifest v{} (jax {}), {} artifacts in {dir}:", m.version, m.jax_version, m.artifacts.len());
     for a in &m.artifacts {

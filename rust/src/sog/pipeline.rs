@@ -3,24 +3,20 @@
 
 use anyhow::Result;
 
-use crate::config::ShuffleSoftSortConfig;
-use crate::coordinator::ShuffleSoftSort;
+use crate::api::Sorter;
 use crate::data::Dataset;
 use crate::grid::GridShape;
-use crate::heuristics::{flas::Flas, GridSorter};
 use crate::metrics::corr::mean_lag1_autocorr;
 use crate::perm::Permutation;
-use crate::runtime::Runtime;
 use crate::sog::codec::{self, CodecConfig};
 use crate::sog::scene::{GaussianScene, ATTR_DIM};
 use crate::util::rng::Pcg32;
 
 /// Which sorter arranges the splats on the grid.
-pub enum SorterKind<'rt> {
-    /// The paper's method, via the PJRT runtime.
-    Learned(&'rt Runtime, ShuffleSoftSortConfig),
-    /// FLAS heuristic (the original SOG uses a non-differentiable sorter).
-    Heuristic,
+pub enum SorterKind<'a> {
+    /// Any unified-API sorter — learned or heuristic — built via
+    /// `api::MethodRegistry` / `api::Engine`.
+    Sorter(&'a dyn Sorter),
     /// No sorting — the shuffled baseline.
     Shuffled,
 }
@@ -69,14 +65,9 @@ pub fn run_pipeline(
     anyhow::ensure!(scene.n == grid.n(), "scene N={} != grid {}", scene.n, grid.n());
     let (normalized, ranges) = scene.normalized();
 
-    let t0 = std::time::Instant::now();
-    let (label, perm) = match sorter {
-        SorterKind::Shuffled => ("shuffled".to_string(), Permutation::identity(scene.n)),
-        SorterKind::Heuristic => {
-            let p = Flas::default().sort(&normalized, ATTR_DIM, grid, 11);
-            ("FLAS".to_string(), p)
-        }
-        SorterKind::Learned(rt, cfg) => {
+    let (label, arranged, sort_secs) = match sorter {
+        SorterKind::Shuffled => ("shuffled".to_string(), normalized.clone(), 0.0),
+        SorterKind::Sorter(s) => {
             let ds = Dataset {
                 name: "sog".into(),
                 n: scene.n,
@@ -84,13 +75,21 @@ pub fn run_pipeline(
                 rows: normalized.clone(),
                 labels: None,
             };
-            let out = ShuffleSoftSort::new(rt, cfg)?.sort(&ds)?;
-            ("ShuffleSSort".to_string(), out.perm)
+            let out = s.sort(&ds, grid)?;
+            // "sort s" means the sorting work itself. Heuristic adapters
+            // time it as the "sort" section (their wall time also covers
+            // arrange + DPQ); learned drivers fold DPQ into their wall
+            // time in all paths, so report it unchanged.
+            let sort = out.report.sections.total("sort");
+            let secs = if sort > std::time::Duration::ZERO {
+                sort.as_secs_f64()
+            } else {
+                out.report.wall_secs
+            };
+            (s.name().to_string(), out.arranged, secs)
         }
     };
-    let sort_secs = t0.elapsed().as_secs_f64();
 
-    let arranged = perm.apply_rows(&normalized, ATTR_DIM);
     let spatial_corr = mean_lag1_autocorr(&arranged, ATTR_DIM, grid);
 
     // Compress each attribute channel as its own plane (SOG stores one map
@@ -171,6 +170,8 @@ pub fn random_baseline(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::MethodRegistry;
+    use crate::runtime::Runtime;
     use crate::sog::scene::SceneConfig;
 
     #[test]
@@ -183,7 +184,10 @@ mod tests {
         let g = GridShape::new(16, 16);
         let cfg = CodecConfig::default();
         let shuffled = run_pipeline(&scene, g, SorterKind::Shuffled, &cfg).unwrap();
-        let sorted = run_pipeline(&scene, g, SorterKind::Heuristic, &cfg).unwrap();
+        let flas = MethodRegistry::new()
+            .build("flas", None::<&Runtime>, &crate::api::overrides(&[("seed", "11")]))
+            .unwrap();
+        let sorted = run_pipeline(&scene, g, SorterKind::Sorter(flas.as_ref()), &cfg).unwrap();
         assert!(
             sorted.compressed_bytes < shuffled.compressed_bytes,
             "sorted {} vs shuffled {}",

@@ -1,0 +1,183 @@
+//! Integration tests for the unified `api` layer: registry coverage,
+//! override semantics, and `Engine::sort_batch` determinism.
+//!
+//! Heuristic methods are pure Rust and run unconditionally. Learned
+//! methods need the AOT artifacts (`make artifacts`); those tests skip
+//! gracefully when the manifest is absent so `cargo test` stays meaningful
+//! on a fresh checkout.
+
+use shufflesort::api::{overrides, Engine, MethodKind, MethodRegistry};
+use shufflesort::data::random_colors;
+use shufflesort::grid::GridShape;
+use shufflesort::perm::Permutation;
+use shufflesort::runtime::Runtime;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn artifacts_present() -> bool {
+    std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
+}
+
+/// Permutation validity beyond the type invariant: explicit duplicate scan
+/// over the raw indices (what the satellite task asks to verify).
+fn assert_valid_perm(perm: &Permutation, n: usize, who: &str) {
+    assert_eq!(perm.len(), n, "{who}: wrong length");
+    assert_eq!(
+        Permutation::count_duplicates(perm.as_slice()),
+        0,
+        "{who}: duplicate grid targets"
+    );
+}
+
+#[test]
+fn every_heuristic_method_sorts_a_tiny_4x4_dataset() {
+    let engine = Engine::builder(ARTIFACTS).build();
+    let g = GridShape::new(4, 4);
+    let ds = random_colors(16, 3);
+    let mut tested = 0;
+    for spec in engine.registry().specs().iter().filter(|s| s.kind == MethodKind::Heuristic) {
+        let out = engine.sort(spec.name, &ds, g, &[]).unwrap();
+        assert_valid_perm(&out.perm, 16, spec.name);
+        assert!(out.report.final_dpq.is_finite(), "{}: dpq", spec.name);
+        assert_eq!(out.report.method, spec.name);
+        assert!(out.report.sections.count("sort") > 0, "{}: timing", spec.name);
+        tested += 1;
+    }
+    assert!(tested >= 3, "expected at least FLAS/SOM/SSM, got {tested}");
+}
+
+#[test]
+fn every_learned_method_sorts_a_small_dataset() {
+    if !artifacts_present() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::from_artifacts(ARTIFACTS).unwrap();
+    // 8x8 is the smallest grid with artifacts for all four methods.
+    let g = GridShape::new(8, 8);
+    let ds = random_colors(64, 3);
+    let budget: &[(&str, &[(&str, &str)])] = &[
+        ("shuffle-softsort", &[("phases", "64"), ("record_curve", "false")]),
+        ("softsort", &[("steps", "64")]),
+        ("gumbel-sinkhorn", &[("steps", "64")]),
+        ("kissing", &[("steps", "64")]),
+    ];
+    for &(name, ov) in budget {
+        let out = engine.sort(name, &ds, g, &overrides(ov)).unwrap();
+        assert_valid_perm(&out.perm, 64, name);
+        assert!(out.report.final_dpq.is_finite(), "{name}: dpq");
+        assert_eq!(out.perm.apply_rows(&ds.rows, 3), out.arranged, "{name}: arranged");
+    }
+}
+
+#[test]
+fn unknown_method_through_engine_lists_names() {
+    let engine = Engine::builder(ARTIFACTS).build();
+    let ds = random_colors(16, 1);
+    let err = engine.sort("definitely-not-a-method", &ds, GridShape::new(4, 4), &[]).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("definitely-not-a-method"), "{msg}");
+    for name in MethodRegistry::new().names() {
+        assert!(msg.contains(name), "error does not list {name}: {msg}");
+    }
+}
+
+#[test]
+fn registry_overrides_are_last_wins_like_the_cli() {
+    let reg = MethodRegistry::new();
+    let g = GridShape::new(4, 4);
+    let ds = random_colors(16, 5);
+    // flas epochs=2 then epochs=24: the later pair must win, i.e. equal a
+    // run with epochs=24 alone and (generically) differ from epochs=2.
+    let last_wins = reg
+        .build("flas", None::<&Runtime>, &overrides(&[("epochs", "2"), ("epochs", "24")]))
+        .unwrap()
+        .sort(&ds, g)
+        .unwrap();
+    let direct = reg
+        .build("flas", None::<&Runtime>, &overrides(&[("epochs", "24")]))
+        .unwrap()
+        .sort(&ds, g)
+        .unwrap();
+    assert_eq!(last_wins.perm, direct.perm);
+    assert_eq!(
+        last_wins.report.final_dpq.to_bits(),
+        direct.report.final_dpq.to_bits()
+    );
+}
+
+#[test]
+fn sort_batch_heuristic_is_bit_identical_to_sequential() {
+    let engine = Engine::builder(ARTIFACTS).workers(4).build();
+    let g = GridShape::new(8, 8);
+    let datasets: Vec<_> = (0..4).map(|s| random_colors(64, 100 + s)).collect();
+
+    let batched = engine.sort_batch("flas", &datasets, g, &[]);
+    assert_eq!(batched.len(), 4);
+    for (i, result) in batched.into_iter().enumerate() {
+        let batched = result.unwrap();
+        let sequential = engine.sort("flas", &datasets[i], g, &[]).unwrap();
+        assert_eq!(batched.perm, sequential.perm, "item {i}");
+        assert_eq!(
+            batched.report.final_dpq.to_bits(),
+            sequential.report.final_dpq.to_bits(),
+            "item {i}: final_dpq must be bit-identical under batching"
+        );
+        assert_eq!(batched.arranged, sequential.arranged, "item {i}");
+    }
+}
+
+#[test]
+fn sort_batch_learned_is_bit_identical_to_sequential() {
+    if !artifacts_present() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::builder(ARTIFACTS).workers(4).build();
+    let g = GridShape::new(8, 8);
+    let datasets: Vec<_> = (0..4).map(|s| random_colors(64, 200 + s)).collect();
+    let ov = overrides(&[("phases", "96"), ("record_curve", "false")]);
+
+    let batched = engine.sort_batch("shuffle-softsort", &datasets, g, &ov);
+    assert_eq!(batched.len(), 4);
+    for (i, result) in batched.into_iter().enumerate() {
+        let batched = result.unwrap();
+        let sequential = engine.sort("shuffle-softsort", &datasets[i], g, &ov).unwrap();
+        assert_eq!(batched.perm, sequential.perm, "item {i}");
+        assert_eq!(
+            batched.report.final_dpq.to_bits(),
+            sequential.report.final_dpq.to_bits(),
+            "item {i}: final_dpq must be bit-identical under batching"
+        );
+    }
+}
+
+#[test]
+fn sort_batch_reports_per_item_errors_for_learned_without_artifacts() {
+    // A learned method with a bogus artifacts dir must fail per item (not
+    // panic), keeping positional alignment.
+    let engine = Engine::builder("/definitely/not/artifacts").workers(2).build();
+    let g = GridShape::new(4, 4);
+    let datasets: Vec<_> = (0..3).map(|s| random_colors(16, s)).collect();
+    let results = engine.sort_batch("shuffle-softsort", &datasets, g, &[]);
+    assert_eq!(results.len(), 3);
+    for r in &results {
+        assert!(r.is_err());
+    }
+    // ... while heuristics on the same engine still succeed.
+    let results = engine.sort_batch("som", &datasets, g, &[]);
+    assert!(results.iter().all(|r| r.is_ok()));
+}
+
+#[test]
+fn engine_step_cache_memoizes_per_shape() {
+    if !artifacts_present() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::from_artifacts(ARTIFACTS).unwrap();
+    let a = engine.sss_step(64, 3, 8).unwrap();
+    let b = engine.sss_step(64, 3, 8).unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b), "second lookup must hit the (n,d,h) cache");
+    assert!(engine.sss_step(9999, 3, 8).is_err());
+}
