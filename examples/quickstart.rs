@@ -2,7 +2,9 @@
 //! ShuffleSoftSort through the unified `Engine`/registry API and report
 //! the quality metrics.
 //!
-//! Run (after `make artifacts && cargo build --release`):
+//! Works on a bare checkout: the default `auto` backend uses the AOT
+//! artifacts when `artifacts/manifest.json` exists and otherwise runs the
+//! pure-Rust native backend — no `make artifacts` required.
 //!
 //! ```sh
 //! cargo run --release --offline --example quickstart
@@ -14,10 +16,11 @@ use shufflesort::prelude::*;
 use shufflesort::util::ppm;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Open a session. The Engine owns the PJRT runtime (AOT HLO
-    //    artifacts, compiled once per process) and the method registry.
-    let engine = Engine::from_artifacts("artifacts")?;
-    println!("PJRT platform: {}", engine.runtime()?.platform());
+    // 1. Open a session. The Engine resolves the compute backend (`auto`:
+    //    prefer artifacts when present, else pure-Rust native) and owns the
+    //    method registry. Force one with .backend(BackendChoice::Native).
+    let engine = Engine::builder("artifacts").build();
+    println!("backend: {}", engine.backend_desc(&[])?);
     println!("methods: {}", engine.registry().names().join(", "));
 
     // 2. A workload: 256 random RGB colors on a 16×16 grid.
@@ -30,9 +33,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 3. Sort with the paper's method (Algorithm 1). Any registry name
-    //    works here — try "flas" or "som" for the runtime-free heuristics.
-    //    Defaults are tuned per grid; `k=v` overrides tweak them (same
-    //    pairs as `sssort sort ... phases=2048`).
+    //    works here — try "flas" or "som" for the heuristics. Defaults are
+    //    tuned per grid; `k=v` overrides tweak them (same pairs as
+    //    `sssort sort ... phases=2048`, including `backend=native`).
     let out: SortOutcome = engine.sort(
         "shuffle-softsort",
         &data,
@@ -62,7 +65,8 @@ fn main() -> anyhow::Result<()> {
     println!("wrote out/quickstart.ppm");
 
     // 7. Batching: many datasets across worker threads, one call. Results
-    //    are bit-identical to sequential `sort` calls.
+    //    are bit-identical to sequential `sort` calls (the native backend
+    //    is shared by all workers; PJRT builds one runtime per worker).
     let batch: Vec<Dataset> = (0..4).map(|s| shufflesort::data::random_colors(256, s)).collect();
     for (i, result) in engine
         .sort_batch("shuffle-softsort", &batch, g, &overrides(&[("phases", "512")]))

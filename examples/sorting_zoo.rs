@@ -1,8 +1,9 @@
-//! Sorting zoo: every sorter in the registry — four learned methods (via
-//! the PJRT runtime) and six heuristic/classical baselines — on the same
-//! random-color workload, with DPQ₁₆ and runtime side by side. The whole
-//! sweep is registry-driven: adding a method to `api::MethodRegistry`
-//! automatically adds a row here.
+//! Sorting zoo: every sorter in the registry — four learned methods (on
+//! the engine's resolved backend: PJRT artifacts when present, else the
+//! pure-Rust native backend) and six heuristic/classical baselines — on
+//! the same random-color workload, with DPQ₁₆ and runtime side by side.
+//! The whole sweep is registry-driven: adding a method to
+//! `api::MethodRegistry` automatically adds a row here.
 
 use anyhow::Result;
 
@@ -31,7 +32,7 @@ fn main() -> Result<()> {
         );
     }
 
-    // Learned methods (PJRT runtime; budgets comparable across methods).
+    // Learned methods (resolved backend; budgets comparable across methods).
     let learned: &[(&str, &[(&str, &str)])] = &[
         ("shuffle-softsort", &[("phases", "4096")]),
         ("softsort", &[("steps", "4096")]),

@@ -7,6 +7,7 @@ use shufflesort::api::Engine;
 use shufflesort::coordinator::SortOutcome;
 use shufflesort::data::Dataset;
 use shufflesort::grid::GridShape;
+#[cfg(feature = "pjrt")]
 use shufflesort::runtime::Runtime;
 
 /// Headline grid: 16×16 in quick mode, the paper's 32×32 with `--full`.
@@ -20,13 +21,29 @@ pub fn headline_side() -> usize {
 
 /// The session every bench dispatches through (eager artifact load: the
 /// learned methods are the point of these benches).
+#[cfg(feature = "pjrt")]
 pub fn engine() -> Engine {
     Engine::from_artifacts("artifacts").expect("run `make artifacts` first")
 }
 
 /// Raw runtime for the micro-benches that measure PJRT itself.
+#[cfg(feature = "pjrt")]
 pub fn runtime() -> Runtime {
     Runtime::from_manifest("artifacts").expect("run `make artifacts` first")
+}
+
+/// PJRT backend if the artifacts are present, else `None` (benches print a
+/// note and measure the native backend only).
+#[cfg(feature = "pjrt")]
+pub fn try_pjrt() -> Option<shufflesort::backend::PjrtBackend> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("note: artifacts missing — PJRT cases skipped (run `make artifacts`)");
+        return None;
+    }
+    Some(
+        shufflesort::backend::PjrtBackend::from_artifacts("artifacts")
+            .expect("artifacts present but failed to load"),
+    )
 }
 
 fn kv(k: &str, v: impl ToString) -> (String, String) {

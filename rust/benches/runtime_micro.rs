@@ -1,74 +1,129 @@
 //! E10 — infrastructure micro-benchmarks: where does a coordinator step's
-//! time go? Compile cost (once), host→device literal creation, execute
-//! dispatch, JV extraction, DPQ evaluation. Feeds EXPERIMENTS.md §Perf.
+//! time go? Native-vs-PJRT per-step cost on the same (n, d, h) grid,
+//! compile cost (once), execute dispatch, JV extraction, DPQ evaluation.
+//! Feeds EXPERIMENTS.md §Perf; the per-step numbers are also written to a
+//! machine-readable JSON report (`target/bench_reports/runtime_micro.json`).
+//!
+//! Runs without artifacts: the PJRT cases skip themselves (with a note)
+//! when `artifacts/manifest.json` is absent, so the native numbers are
+//! always measurable on a bare checkout.
 
 mod common;
 
-use shufflesort::bench::{banner, bench, quick_mode};
 use shufflesort::assignment::jv;
+use shufflesort::backend::{NativeBackend, StepBackend, StepShape};
+use shufflesort::bench::{banner, bench, quick_mode, write_json_report, Sample};
 use shufflesort::data::random_colors;
 use shufflesort::grid::GridShape;
 use shufflesort::metrics::dpq16;
-use shufflesort::runtime::{Arg, Runtime};
 use shufflesort::util::rng::Pcg32;
 
+const REPORT_PATH: &str = "target/bench_reports/runtime_micro.json";
+
 fn main() {
-    banner("E10/runtime-micro", "PJRT + substrate hot-path costs");
+    banner("E10/runtime-micro", "backend + substrate hot-path costs");
     let reps = if quick_mode() { 10 } else { 50 };
+    let mut samples: Vec<Sample> = Vec::new();
 
-    // Artifact compile cost (fresh runtime → first load pays compilation).
-    let s = bench("compile sss_step_n1024 (cold cache)", 0, 3, || {
-        let rt2 = Runtime::from_manifest("artifacts").unwrap();
-        rt2.sss_step(1024, 3, 32).unwrap()
-    });
-    println!("{}", s.line());
+    // ---- native vs pjrt: one full sss step on the same (n, d, h) grid ----
+    let native = NativeBackend::default();
+    #[cfg(feature = "pjrt")]
+    let pjrt = common::try_pjrt();
 
-    let rt = common::runtime();
-    let n = 1024usize;
-    let ds = random_colors(n, 1);
-    let exe = rt.sss_step(n, 3, 32).unwrap();
-    let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
-    let inv: Vec<i32> = (0..n as i32).collect();
+    for (n, d, h) in [(64usize, 3usize, 8usize), (256, 3, 16), (1024, 3, 32)] {
+        let ds = random_colors(n, 1);
+        let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let inv: Vec<i32> = (0..n as i32).collect();
+        let shape = StepShape::new(GridShape::new(h, n / h), d);
 
-    let s = bench("load sss_step_n1024 (warm cache)", 1, reps, || {
-        rt.sss_step(1024, 3, 32).unwrap()
-    });
-    println!("{}", s.line());
+        let s = bench(&format!("native sss_step n={n} d={d} h={h}"), 2, reps, || {
+            native.sss_step(shape, &w, &ds.rows, &inv, 0.3, 0.5).unwrap()
+        });
+        println!("{}", s.line());
+        samples.push(s);
 
-    // Engine front cache: (n, d, h)-keyed, skips the name formatting +
-    // string hashing of the runtime's own cache.
-    let engine = common::engine();
-    engine.sss_step(1024, 3, 32).unwrap();
-    let s = bench("engine.sss_step (memoized (n,d,h))", 1, reps, || {
-        engine.sss_step(1024, 3, 32).unwrap()
-    });
-    println!("{}", s.line());
+        #[cfg(feature = "pjrt")]
+        if let Some(backend) = pjrt.as_ref() {
+            let s = bench(&format!("pjrt sss_step n={n} d={d} h={h}"), 2, reps, || {
+                backend.sss_step(shape, &w, &ds.rows, &inv, 0.3, 0.5).unwrap()
+            });
+            println!("{}", s.line());
+            samples.push(s);
+        }
+    }
 
-    let s = bench("execute sss_step n=1024 (full step)", 2, reps, || {
-        exe.run(&[
-            Arg::F32(&w),
-            Arg::F32(&ds.rows),
-            Arg::I32(&inv),
-            Arg::ScalarF32(0.3),
-            Arg::ScalarF32(0.5),
-        ])
-        .unwrap()
-    });
-    println!("{}", s.line());
+    // ---- PJRT infrastructure costs (artifact compile, caches) -----------
+    #[cfg(feature = "pjrt")]
+    if pjrt.is_some() {
+        use shufflesort::runtime::{Arg, Runtime};
 
-    // Pure-Rust substrate costs on the same scale.
+        // Artifact compile cost (fresh runtime → first load pays
+        // compilation).
+        let s = bench("compile sss_step_n1024 (cold cache)", 0, 3, || {
+            let rt2 = Runtime::from_manifest("artifacts").unwrap();
+            rt2.sss_step(1024, 3, 32).unwrap()
+        });
+        println!("{}", s.line());
+        samples.push(s);
+
+        let rt = common::runtime();
+        let n = 1024usize;
+        let ds = random_colors(n, 1);
+        let exe = rt.sss_step(n, 3, 32).unwrap();
+        let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let inv: Vec<i32> = (0..n as i32).collect();
+
+        let s = bench("load sss_step_n1024 (warm cache)", 1, reps, || {
+            rt.sss_step(1024, 3, 32).unwrap()
+        });
+        println!("{}", s.line());
+        samples.push(s);
+
+        // Engine front cache: (n, d, h)-keyed, skips the name formatting +
+        // string hashing of the runtime's own cache.
+        let engine = common::engine();
+        engine.sss_step(1024, 3, 32).unwrap();
+        let s = bench("engine.sss_step (memoized (n,d,h))", 1, reps, || {
+            engine.sss_step(1024, 3, 32).unwrap()
+        });
+        println!("{}", s.line());
+        samples.push(s);
+
+        let s = bench("execute sss_step n=1024 (raw artifact)", 2, reps, || {
+            exe.run(&[
+                Arg::F32(&w),
+                Arg::F32(&ds.rows),
+                Arg::I32(&inv),
+                Arg::ScalarF32(0.3),
+                Arg::ScalarF32(0.5),
+            ])
+            .unwrap()
+        });
+        println!("{}", s.line());
+        samples.push(s);
+    }
+
+    // ---- pure-Rust substrate costs on the same scale ---------------------
     let mut rng = Pcg32::new(3);
     let cost: Vec<f64> = (0..256 * 256).map(|_| rng.f64()).collect();
     let s = bench("JV solve 256x256", 1, reps, || jv::solve(&cost, 256));
     println!("{}", s.line());
+    samples.push(s);
 
+    let ds = random_colors(1024, 1);
     let g = GridShape::new(32, 32);
     let s = bench("DPQ16 n=1024", 1, reps.min(10), || dpq16(&ds.rows, 3, g));
     println!("{}", s.line());
+    samples.push(s);
 
     let mut rng2 = Pcg32::new(4);
     let s = bench("rng permutation n=4096", 1, reps, || rng2.permutation(4096));
     println!("{}", s.line());
+    samples.push(s);
 
-    println!("\nuse: execute cost sets the coordinator step floor; everything else must stay ≪ it.");
+    match write_json_report(REPORT_PATH, "runtime_micro", &samples) {
+        Ok(()) => println!("\nwrote {REPORT_PATH}"),
+        Err(e) => eprintln!("\ncould not write {REPORT_PATH}: {e}"),
+    }
+    println!("use: the per-step cost sets the coordinator step floor; everything else must stay ≪ it.");
 }

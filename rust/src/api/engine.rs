@@ -1,56 +1,111 @@
-//! The [`Engine`] session: owns the PJRT [`Runtime`] (lazily loaded),
-//! memoizes `Executable` lookups per `(n, d, h)`, and fans
-//! [`Engine::sort_batch`] requests out across `std::thread` workers.
+//! The [`Engine`] session: resolves a compute backend per
+//! [`BackendChoice`] (`auto` / `native` / `pjrt`), owns the backend
+//! instances (lazily constructed), and fans [`Engine::sort_batch`]
+//! requests out across `std::thread` workers.
+//!
+//! Backend selection happens in one place — here — and is exposed to users
+//! three ways: the `EngineBuilder::backend` setter, the CLI `--backend`
+//! flag, and a `backend=native|pjrt|auto` override pair (peeled off before
+//! the remaining pairs reach the config builders, so it composes with any
+//! method). `auto` prefers the AOT artifacts when `manifest.json` is
+//! present and the crate was built with the `pjrt` feature, and falls back
+//! to the pure-Rust [`NativeBackend`] otherwise — a bare checkout with no
+//! artifacts can run every learned method.
 //!
 //! Determinism: every sort is a pure function of (method, overrides,
-//! dataset, grid) — each batch worker runs its own runtime + sorter, so
-//! batched results are bit-identical to sequential ones. Enforced by
-//! `rust/tests/api.rs`.
+//! dataset, grid) — batched results are bit-identical to sequential ones.
+//! On the native backend all workers *share one* `Send + Sync` backend
+//! (its chunk reduction is thread-count-invariant); on PJRT each worker
+//! builds its own runtime (the compile cache is `Rc`/`RefCell`). Enforced
+//! by `rust/tests/api.rs`.
 
-use std::cell::{OnceCell, RefCell};
+use std::cell::OnceCell;
+#[cfg(feature = "pjrt")]
+use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
+use crate::backend::{BackendChoice, NativeBackend, StepBackend};
+#[cfg(feature = "pjrt")]
+use crate::backend::PjrtBackend;
 use crate::coordinator::SortOutcome;
 use crate::data::Dataset;
 use crate::grid::GridShape;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Executable, Runtime};
 
 use super::registry::{MethodKind, MethodRegistry};
 use super::sorter::Sorter;
 
-/// A sorting session bound to an artifacts directory.
+/// The backend kind a [`BackendChoice`] resolved to for this session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Resolved {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+/// Split the `backend=...` pair (if any) off an override list. Last one
+/// wins, mirroring the config builders' override semantics.
+fn split_backend_override(
+    default: BackendChoice,
+    overrides: &[(String, String)],
+) -> Result<(BackendChoice, Vec<(String, String)>)> {
+    let mut choice = default;
+    let mut rest = Vec::with_capacity(overrides.len());
+    for (k, v) in overrides {
+        if k == "backend" {
+            choice = BackendChoice::parse(v)?;
+        } else {
+            rest.push((k.clone(), v.clone()));
+        }
+    }
+    Ok((choice, rest))
+}
+
+/// A sorting session bound to an artifacts directory and a backend choice.
 pub struct Engine {
     artifacts_dir: PathBuf,
     registry: MethodRegistry,
-    /// Lazily constructed so heuristic-only sessions never require
-    /// artifacts (`sssort sort --method flas` works without `make
-    /// artifacts`).
-    rt: OnceCell<Runtime>,
+    choice: BackendChoice,
+    /// Lazily constructed; shared by all batch workers (`Send + Sync`).
+    native: OnceCell<NativeBackend>,
+    /// Lazily constructed so heuristic-only and native-only sessions never
+    /// require artifacts.
+    #[cfg(feature = "pjrt")]
+    pjrt: OnceCell<PjrtBackend>,
     /// `(n, d, h)` → compiled step executable, for callers that drive step
     /// executables directly (serving experiments, micro-benches). The
     /// runtime's own cache is keyed by artifact *name*; this front cache
     /// additionally skips the name formatting + string hashing per lookup.
     /// The driver-based `sort`/`sort_batch` paths resolve executables
-    /// through the runtime instead.
+    /// through the backend instead.
+    #[cfg(feature = "pjrt")]
     step_cache: RefCell<HashMap<(usize, usize, usize), Rc<Executable>>>,
     workers: usize,
 }
 
 impl Engine {
-    /// Eagerly load the artifacts at `dir` (errors early if missing).
+    /// Eagerly load the artifacts at `dir` (errors early if missing) and
+    /// pin the session to the PJRT backend.
+    #[cfg(feature = "pjrt")]
     pub fn from_artifacts(dir: impl AsRef<Path>) -> Result<Engine> {
-        let engine = Engine::builder(dir).build();
-        engine.runtime()?;
+        let engine = Engine::builder(dir).backend(BackendChoice::Pjrt).build();
+        engine.pjrt_backend()?;
         Ok(engine)
     }
 
     pub fn builder(dir: impl AsRef<Path>) -> EngineBuilder {
         EngineBuilder {
             artifacts_dir: dir.as_ref().to_path_buf(),
+            backend: None,
             workers: None,
         }
     }
@@ -64,21 +119,41 @@ impl Engine {
         self.workers
     }
 
-    /// The session runtime, loading the artifact manifest on first use.
-    pub fn runtime(&self) -> Result<&Runtime> {
-        if self.rt.get().is_none() {
-            let rt = Runtime::from_manifest(&self.artifacts_dir).with_context(|| {
-                format!("loading artifacts from {}", self.artifacts_dir.display())
-            })?;
+    /// The session's default backend choice (overridable per call with a
+    /// `backend=...` pair).
+    pub fn backend_choice(&self) -> BackendChoice {
+        self.choice
+    }
+
+    /// The shared pure-Rust backend (constructed on first use).
+    pub fn native_backend(&self) -> &NativeBackend {
+        self.native.get_or_init(NativeBackend::default)
+    }
+
+    /// The PJRT backend, loading the artifact manifest on first use.
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt_backend(&self) -> Result<&PjrtBackend> {
+        if self.pjrt.get().is_none() {
+            let backend =
+                PjrtBackend::from_artifacts(&self.artifacts_dir).with_context(|| {
+                    format!("loading artifacts from {}", self.artifacts_dir.display())
+                })?;
             // A concurrent set is impossible (Engine is not Sync); ignore
             // the Err(value) that would signal one.
-            let _ = self.rt.set(rt);
+            let _ = self.pjrt.set(backend);
         }
-        Ok(self.rt.get().expect("runtime initialized above"))
+        Ok(self.pjrt.get().expect("backend initialized above"))
+    }
+
+    /// The session runtime (PJRT backend's), loading artifacts on first use.
+    #[cfg(feature = "pjrt")]
+    pub fn runtime(&self) -> Result<&Runtime> {
+        Ok(self.pjrt_backend()?.runtime())
     }
 
     /// Memoized `(n, d, h)` lookup of the ShuffleSoftSort/SoftSort step
     /// executable.
+    #[cfg(feature = "pjrt")]
     pub fn sss_step(&self, n: usize, d: usize, h: usize) -> Result<Rc<Executable>> {
         if let Some(exe) = self.step_cache.borrow().get(&(n, d, h)) {
             return Ok(exe.clone());
@@ -88,19 +163,72 @@ impl Engine {
         Ok(exe)
     }
 
-    /// Build a sorter by registry name; the runtime is attached only for
-    /// learned methods.
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    fn artifacts_present(&self) -> bool {
+        self.artifacts_dir.join("manifest.json").exists()
+    }
+
+    fn resolve_choice(&self, choice: BackendChoice) -> Result<Resolved> {
+        match choice {
+            BackendChoice::Native => Ok(Resolved::Native),
+            BackendChoice::Pjrt => {
+                #[cfg(feature = "pjrt")]
+                return Ok(Resolved::Pjrt);
+                #[cfg(not(feature = "pjrt"))]
+                return Err(anyhow!(
+                    "this build has no PJRT support (compiled without the 'pjrt' \
+                     feature) — use the native backend"
+                ));
+            }
+            BackendChoice::Auto => {
+                #[cfg(feature = "pjrt")]
+                if self.artifacts_present() {
+                    return Ok(Resolved::Pjrt);
+                }
+                Ok(Resolved::Native)
+            }
+        }
+    }
+
+    fn backend_for(&self, choice: BackendChoice) -> Result<&dyn StepBackend> {
+        match self.resolve_choice(choice)? {
+            Resolved::Native => Ok(self.native_backend() as &dyn StepBackend),
+            #[cfg(feature = "pjrt")]
+            Resolved::Pjrt => Ok(self.pjrt_backend()? as &dyn StepBackend),
+        }
+    }
+
+    /// Human-readable description of the backend the given overrides would
+    /// resolve to (e.g. `native (pure Rust, 8 threads)` or `pjrt (Host)`).
+    pub fn backend_desc(&self, overrides: &[(String, String)]) -> Result<String> {
+        let (choice, _) = split_backend_override(self.choice, overrides)?;
+        match self.resolve_choice(choice)? {
+            Resolved::Native => Ok(format!(
+                "native (pure Rust, {} threads)",
+                self.native_backend().threads()
+            )),
+            #[cfg(feature = "pjrt")]
+            Resolved::Pjrt => {
+                Ok(format!("pjrt ({})", self.pjrt_backend()?.runtime().platform()))
+            }
+        }
+    }
+
+    /// Build a sorter by registry name; a compute backend is resolved and
+    /// attached only for learned methods. A `backend=...` override pair
+    /// selects the backend per call.
     pub fn sorter(
         &self,
         method: &str,
         overrides: &[(String, String)],
     ) -> Result<Box<dyn Sorter + '_>> {
         let spec = self.registry.resolve_or_err(method)?;
-        let rt = match spec.kind {
-            MethodKind::Learned => Some(self.runtime()?),
+        let (choice, rest) = split_backend_override(self.choice, overrides)?;
+        let backend: Option<&dyn StepBackend> = match spec.kind {
+            MethodKind::Learned => Some(self.backend_for(choice)?),
             MethodKind::Heuristic => None,
         };
-        self.registry.build(spec.name, rt, overrides)
+        self.registry.build(spec.name, backend, &rest)
     }
 
     /// Sort one dataset with the named method.
@@ -116,8 +244,9 @@ impl Engine {
 
     /// Sort many datasets with the named method, across up to
     /// `self.workers()` threads. Results are positionally aligned with the
-    /// input and bit-identical to sequential `sort` calls (each worker
-    /// builds its own runtime + sorter; per-item state is never shared).
+    /// input and bit-identical to sequential `sort` calls: per-item state
+    /// is never shared, and the backends are either thread-count-invariant
+    /// (native — one shared instance) or per-worker (PJRT runtimes).
     pub fn sort_batch(
         &self,
         method: &str,
@@ -129,57 +258,98 @@ impl Engine {
         if m == 0 {
             return Vec::new();
         }
+        let all_err = |e: anyhow::Error| -> Vec<Result<SortOutcome>> {
+            let msg = format!("{e:#}");
+            (0..m).map(|_| Err(anyhow!("{msg}"))).collect()
+        };
         let workers = self.workers.clamp(1, m);
         if workers == 1 {
             return match self.sorter(method, overrides) {
                 Ok(sorter) => datasets.iter().map(|ds| sorter.sort(ds, g)).collect(),
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    (0..m).map(|_| Err(anyhow!("{msg}"))).collect()
-                }
+                Err(e) => all_err(e),
             };
         }
 
-        let needs_rt = matches!(
-            self.registry.resolve(method).map(|s| s.kind),
-            Some(MethodKind::Learned)
-        );
+        /// How each batch worker obtains its compute backend.
+        #[derive(Clone, Copy)]
+        enum BatchBackend<'e> {
+            /// Pure-Rust methods: no backend at all.
+            Heuristic,
+            /// One `Send + Sync` native backend shared by every worker.
+            Native(&'e NativeBackend),
+            /// Each worker loads its own runtime (`Rc`/`RefCell` caches).
+            #[cfg(feature = "pjrt")]
+            PerWorkerPjrt,
+        }
+
+        let spec = match self.registry.resolve_or_err(method) {
+            Ok(spec) => spec,
+            Err(e) => return all_err(e),
+        };
+        let (choice, rest) = match split_backend_override(self.choice, overrides) {
+            Ok(split) => split,
+            Err(e) => return all_err(e),
+        };
+        // Shared native backend for this batch, with row-parallelism capped
+        // so workers × row-threads ≈ machine parallelism instead of
+        // workers² (results are unaffected: the chunk reduction is
+        // thread-count-invariant by construction).
+        let capped_native: NativeBackend;
+        let batch_backend = match spec.kind {
+            MethodKind::Heuristic => BatchBackend::Heuristic,
+            MethodKind::Learned => match self.resolve_choice(choice) {
+                Ok(Resolved::Native) => {
+                    let total = self.native_backend().threads();
+                    capped_native = NativeBackend::new((total / workers).max(1));
+                    BatchBackend::Native(&capped_native)
+                }
+                #[cfg(feature = "pjrt")]
+                Ok(Resolved::Pjrt) => BatchBackend::PerWorkerPjrt,
+                Err(e) => return all_err(e),
+            },
+        };
+
         let registry = self.registry;
-        let dir = self.artifacts_dir.clone();
+        let dir = &self.artifacts_dir;
+        let rest = &rest;
         let mut out: Vec<Option<Result<SortOutcome>>> = (0..m).map(|_| None).collect();
 
         std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(workers);
             for wk in 0..workers {
-                let dir = dir.clone();
                 handles.push(scope.spawn(move || {
                     let idxs: Vec<usize> = (wk..m).step_by(workers).collect();
-                    // Each worker owns an independent runtime: `Runtime` is
-                    // single-threaded (Rc/RefCell caches), and per-worker
-                    // compile caches keep workers fully isolated.
-                    let rt = if needs_rt {
-                        match Runtime::from_manifest(&dir) {
-                            Ok(rt) => Some(rt),
-                            Err(e) => {
-                                let msg = format!("{e:#}");
-                                return idxs
-                                    .into_iter()
-                                    .map(|i| (i, Err(anyhow!("{msg}"))))
-                                    .collect::<Vec<_>>();
+                    let fail = |e: anyhow::Error, idxs: Vec<usize>| {
+                        let msg = format!("{e:#}");
+                        idxs.into_iter()
+                            .map(|i| (i, Err(anyhow!("{msg}"))))
+                            .collect::<Vec<_>>()
+                    };
+                    // Worker-owned PJRT backend, when that path is active
+                    // (must outlive the sorter borrowing it).
+                    #[cfg(feature = "pjrt")]
+                    let worker_pjrt: Option<PjrtBackend> = match batch_backend {
+                        BatchBackend::PerWorkerPjrt => {
+                            match PjrtBackend::from_artifacts(dir) {
+                                Ok(backend) => Some(backend),
+                                Err(e) => return fail(e, idxs),
                             }
                         }
-                    } else {
-                        None
+                        _ => None,
                     };
-                    let sorter = match registry.build(method, rt.as_ref(), overrides) {
+                    #[cfg(not(feature = "pjrt"))]
+                    let _ = dir;
+                    let backend: Option<&dyn StepBackend> = match batch_backend {
+                        BatchBackend::Heuristic => None,
+                        BatchBackend::Native(shared) => Some(shared),
+                        #[cfg(feature = "pjrt")]
+                        BatchBackend::PerWorkerPjrt => Some(
+                            worker_pjrt.as_ref().expect("constructed above"),
+                        ),
+                    };
+                    let sorter = match registry.build(spec.name, backend, rest) {
                         Ok(sorter) => sorter,
-                        Err(e) => {
-                            let msg = format!("{e:#}");
-                            return idxs
-                                .into_iter()
-                                .map(|i| (i, Err(anyhow!("{msg}"))))
-                                .collect::<Vec<_>>();
-                        }
+                        Err(e) => return fail(e, idxs),
                     };
                     idxs.into_iter()
                         .map(|i| (i, sorter.sort(&datasets[i], g)))
@@ -202,10 +372,17 @@ impl Engine {
 /// Builder for [`Engine`] sessions.
 pub struct EngineBuilder {
     artifacts_dir: PathBuf,
+    backend: Option<BackendChoice>,
     workers: Option<usize>,
 }
 
 impl EngineBuilder {
+    /// Default backend choice for the session (default: `auto`).
+    pub fn backend(mut self, choice: BackendChoice) -> Self {
+        self.backend = Some(choice);
+        self
+    }
+
     /// Cap the number of `sort_batch` worker threads (default: the
     /// machine's available parallelism).
     pub fn workers(mut self, workers: usize) -> Self {
@@ -220,7 +397,11 @@ impl EngineBuilder {
         Engine {
             artifacts_dir: self.artifacts_dir,
             registry: MethodRegistry::new(),
-            rt: OnceCell::new(),
+            choice: self.backend.unwrap_or_default(),
+            native: OnceCell::new(),
+            #[cfg(feature = "pjrt")]
+            pjrt: OnceCell::new(),
+            #[cfg(feature = "pjrt")]
             step_cache: RefCell::new(HashMap::new()),
             workers,
         }

@@ -1,6 +1,6 @@
 //! Unified public API: one interface for "a method that sorts a dataset
-//! onto a grid", regardless of whether the method is learned (PJRT-backed)
-//! or a pure-Rust heuristic.
+//! onto a grid", regardless of whether the method is learned (running on a
+//! compute backend) or a pure-Rust heuristic.
 //!
 //! Three layers:
 //!
@@ -11,14 +11,16 @@
 //!   [`sorter::HeuristicSorter`], so heuristic runs also produce a full
 //!   `RunReport` with section timings and the final DPQ.
 //! * [`MethodRegistry`] — string-keyed construction
-//!   (`registry.build("shuffle-softsort", &rt, &overrides)?`) consuming the
-//!   CLI's `k=v` override pairs. The CLI, every bench target and every
-//!   example dispatch through it; nothing constructs a driver by hand.
-//! * [`Engine`] — a session that owns the `Runtime` (lazily loaded, so
-//!   heuristic-only sessions never touch the artifacts), memoizes
-//!   `Executable` lookups per `(n, d, h)`, and runs
-//!   [`Engine::sort_batch`] across `std::thread` workers — the first step
-//!   toward the ROADMAP's serving story.
+//!   (`registry.build("shuffle-softsort", Some(&backend), &overrides)?`)
+//!   consuming the CLI's `k=v` override pairs. The CLI, every bench target
+//!   and every example dispatch through it; nothing constructs a driver by
+//!   hand.
+//! * [`Engine`] — a session that resolves the compute backend
+//!   ([`BackendChoice`]: `auto`/`native`/`pjrt`; `auto` prefers artifacts
+//!   when present and falls back to the pure-Rust `NativeBackend`),
+//!   memoizes backend construction, and runs [`Engine::sort_batch`] across
+//!   `std::thread` workers — on the native backend all workers share one
+//!   `Send + Sync` backend instance.
 
 pub mod engine;
 pub mod registry;
@@ -27,6 +29,9 @@ pub mod sorter;
 pub use engine::{Engine, EngineBuilder};
 pub use registry::{MethodKind, MethodRegistry, MethodSpec};
 pub use sorter::{HeuristicSorter, LearnedSorter, Sorter};
+
+// Backend selection is part of the public sorting API surface.
+pub use crate::backend::BackendChoice;
 
 /// Convenience: turn `&[("k", "v"), ...]` literals into the owned override
 /// pairs the registry and config builders consume.

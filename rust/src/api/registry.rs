@@ -9,14 +9,15 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::backend::StepBackend;
 use crate::config::{BaselineConfig, ShuffleSoftSortConfig};
 use crate::dimred::DrLap;
 use crate::heuristics::{flas::Flas, som::Som, ssm::Ssm, GridSorter};
-use crate::runtime::Runtime;
 
 use super::sorter::{HeuristicSorter, LearnedKind, LearnedSorter, Sorter};
 
-/// Whether a method needs the PJRT runtime (learned) or is pure Rust.
+/// Whether a method needs a compute backend (learned) or is a pure-Rust
+/// heuristic that never executes optimization steps.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MethodKind {
     Learned,
@@ -118,9 +119,10 @@ impl MethodRegistry {
         SPECS.iter().map(|s| s.name).collect()
     }
 
-    /// Resolve a name or alias (case-insensitive) to its spec.
+    /// Resolve a name or alias to its spec. Case-insensitive, and `_` is
+    /// accepted for `-` (so `shuffle_softsort` hits `shuffle-softsort`).
     pub fn resolve(&self, name: &str) -> Option<&'static MethodSpec> {
-        let lower = name.to_ascii_lowercase();
+        let lower = name.to_ascii_lowercase().replace('_', "-");
         SPECS
             .iter()
             .find(|s| s.name == lower || s.aliases.contains(&lower.as_str()))
@@ -138,15 +140,16 @@ impl MethodRegistry {
         })
     }
 
-    /// Build a sorter by name. `rt` may be a `&Runtime` or `None`; learned
-    /// methods require it, heuristics ignore it. Overrides are the CLI's
+    /// Build a sorter by name. `backend` is the compute backend learned
+    /// methods execute on (`NativeBackend`, `PjrtBackend`, or whatever the
+    /// `Engine` resolved); heuristics ignore it. Overrides are the CLI's
     /// `k=v` pairs, validated here (last-wins; errors name the bad key).
-    pub fn build<'rt>(
+    pub fn build<'b>(
         &self,
         name: &str,
-        rt: impl Into<Option<&'rt Runtime>>,
+        backend: Option<&'b dyn StepBackend>,
         overrides: &[(String, String)],
-    ) -> Result<Box<dyn Sorter + 'rt>> {
+    ) -> Result<Box<dyn Sorter + 'b>> {
         let spec = self.resolve_or_err(name)?;
         match spec.kind {
             MethodKind::Learned => {
@@ -158,14 +161,16 @@ impl MethodRegistry {
                     other => unreachable!("unmapped learned method {other}"),
                 };
                 validate_learned_overrides(kind, overrides)?;
-                let rt = rt.into().ok_or_else(|| {
+                let backend = backend.ok_or_else(|| {
                     anyhow!(
-                        "method '{}' needs a PJRT runtime — load artifacts first \
-                         (Runtime::from_manifest / Engine::from_artifacts)",
+                        "method '{}' needs a compute backend — pass a \
+                         backend::NativeBackend (pure Rust, artifact-free) or a \
+                         backend::PjrtBackend, or go through api::Engine which \
+                         resolves one automatically",
                         spec.name
                     )
                 })?;
-                Ok(Box::new(LearnedSorter::new(kind, rt, overrides.to_vec())))
+                Ok(Box::new(LearnedSorter::new(kind, backend, overrides.to_vec())))
             }
             MethodKind::Heuristic => {
                 Ok(Box::new(build_heuristic(spec.name, overrides)?))
@@ -300,13 +305,17 @@ mod tests {
         assert_eq!(reg.resolve("gs").unwrap().name, "gumbel-sinkhorn");
         assert_eq!(reg.resolve("kiss").unwrap().name, "kissing");
         assert_eq!(reg.resolve("SSS").unwrap().name, "shuffle-softsort");
+        // Underscore spellings normalize to the canonical hyphen form.
+        assert_eq!(reg.resolve("shuffle_softsort").unwrap().name, "shuffle-softsort");
+        assert_eq!(reg.resolve("gumbel_sinkhorn").unwrap().name, "gumbel-sinkhorn");
+        assert_eq!(reg.resolve("pca_lap").unwrap().name, "pca-lap");
         assert!(reg.resolve("bogus").is_none());
     }
 
     #[test]
     fn unknown_method_error_lists_available_names() {
         let reg = MethodRegistry::new();
-        let err = reg.build("nope", None::<&Runtime>, &[]).unwrap_err();
+        let err = reg.build("nope", None, &[]).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("unknown method 'nope'"), "{msg}");
         assert!(msg.contains("shuffle-softsort"), "{msg}");
@@ -314,10 +323,39 @@ mod tests {
     }
 
     #[test]
-    fn learned_without_runtime_is_a_helpful_error() {
+    fn learned_without_backend_is_a_helpful_error() {
         let reg = MethodRegistry::new();
-        let err = reg.build("sss", None::<&Runtime>, &[]).unwrap_err();
-        assert!(format!("{err:#}").contains("runtime"));
+        let err = reg.build("sss", None, &[]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("backend"), "{msg}");
+        assert!(msg.contains("NativeBackend"), "{msg}");
+    }
+
+    #[test]
+    fn learned_methods_build_and_sort_on_the_native_backend() {
+        // The registry + native backend path needs no artifacts at all.
+        let reg = MethodRegistry::new();
+        let backend = crate::backend::NativeBackend::default();
+        let g = GridShape::new(4, 4);
+        let ds = random_colors(16, 21);
+        let ov = crate::api::overrides(&[("steps", "24")]);
+        for name in ["softsort", "gumbel-sinkhorn", "kissing"] {
+            let out = reg
+                .build(name, Some(&backend), &ov)
+                .unwrap()
+                .sort(&ds, g)
+                .unwrap();
+            assert_eq!(out.perm.len(), 16, "{name}");
+            assert!(out.report.final_dpq.is_finite(), "{name}");
+        }
+        let ov = crate::api::overrides(&[("phases", "32"), ("record_curve", "false")]);
+        let out = reg
+            .build("shuffle-softsort", Some(&backend), &ov)
+            .unwrap()
+            .sort(&ds, g)
+            .unwrap();
+        assert_eq!(out.perm.len(), 16);
+        assert_eq!(out.report.steps, 32 * 4);
     }
 
     #[test]
@@ -325,18 +363,18 @@ mod tests {
         let reg = MethodRegistry::new();
         // Learned: type error, validated eagerly (before the runtime check).
         let bad = crate::api::overrides(&[("phases", "not-a-number")]);
-        let err = reg.build("sss", None::<&Runtime>, &bad).unwrap_err();
+        let err = reg.build("sss", None, &bad).unwrap_err();
         assert!(format!("{err:#}").contains("phases"), "{err:#}");
         // Learned: unknown key.
         let bad = crate::api::overrides(&[("frobnicate", "1")]);
-        let err = reg.build("sss", None::<&Runtime>, &bad).unwrap_err();
+        let err = reg.build("sss", None, &bad).unwrap_err();
         assert!(format!("{err:#}").contains("frobnicate"));
         // Heuristic: type error and unknown key.
         let bad = crate::api::overrides(&[("epochs", "x")]);
-        let err = reg.build("flas", None::<&Runtime>, &bad).unwrap_err();
+        let err = reg.build("flas", None, &bad).unwrap_err();
         assert!(format!("{err:#}").contains("epochs"));
         let bad = crate::api::overrides(&[("epochs", "3")]);
-        let err = reg.build("ssm", None::<&Runtime>, &bad).unwrap_err();
+        let err = reg.build("ssm", None, &bad).unwrap_err();
         assert!(format!("{err:#}").contains("epochs"));
     }
 
@@ -346,7 +384,7 @@ mod tests {
         let g = GridShape::new(4, 4);
         let ds = random_colors(16, 9);
         for spec in reg.specs().iter().filter(|s| s.kind == MethodKind::Heuristic) {
-            let sorter = reg.build(spec.name, None::<&Runtime>, &[]).unwrap();
+            let sorter = reg.build(spec.name, None, &[]).unwrap();
             let out = sorter.sort(&ds, g).unwrap();
             // `Permutation` is validated on construction: length check
             // suffices to prove a duplicate-free bijection on 0..16.
@@ -364,8 +402,8 @@ mod tests {
         let g = GridShape::new(4, 4);
         let ds = random_colors(16, 10);
         let ov = crate::api::overrides(&[("seed", "7"), ("epochs", "8")]);
-        let a = reg.build("flas", None::<&Runtime>, &ov).unwrap().sort(&ds, g).unwrap();
-        let b = reg.build("flas", None::<&Runtime>, &ov).unwrap().sort(&ds, g).unwrap();
+        let a = reg.build("flas", None, &ov).unwrap().sort(&ds, g).unwrap();
+        let b = reg.build("flas", None, &ov).unwrap().sort(&ds, g).unwrap();
         assert_eq!(a.perm, b.perm);
         assert_eq!(a.report.final_dpq.to_bits(), b.report.final_dpq.to_bits());
     }

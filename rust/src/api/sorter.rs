@@ -9,6 +9,7 @@
 
 use anyhow::{ensure, Result};
 
+use crate::backend::StepBackend;
 use crate::config::{BaselineConfig, ShuffleSoftSortConfig};
 use crate::coordinator::baselines::{GumbelSinkhornDriver, KissingDriver, SoftSortDriver};
 use crate::coordinator::events::RunReport;
@@ -17,7 +18,6 @@ use crate::data::Dataset;
 use crate::grid::GridShape;
 use crate::heuristics::GridSorter;
 use crate::metrics::dpq16;
-use crate::runtime::Runtime;
 use crate::util::timer::Stopwatch;
 
 /// A method that sorts a dataset onto a grid. Every learned driver and
@@ -109,18 +109,28 @@ impl LearnedKind {
     }
 }
 
-/// Registry-built adapter over the learned drivers: holds the runtime and
-/// the raw `k=v` overrides, and derives the concrete config from the grid
-/// at sort time (grid-scaled defaults, then overrides, last-wins).
-pub struct LearnedSorter<'rt> {
+/// Registry-built adapter over the learned drivers: holds the compute
+/// backend and the raw `k=v` overrides, and derives the concrete config
+/// from the grid at sort time (grid-scaled defaults, then overrides,
+/// last-wins).
+pub struct LearnedSorter<'b> {
     kind: LearnedKind,
-    rt: &'rt Runtime,
+    backend: &'b dyn StepBackend,
     overrides: Vec<(String, String)>,
 }
 
-impl<'rt> LearnedSorter<'rt> {
-    pub fn new(kind: LearnedKind, rt: &'rt Runtime, overrides: Vec<(String, String)>) -> Self {
-        LearnedSorter { kind, rt, overrides }
+impl<'b> LearnedSorter<'b> {
+    pub fn new(
+        kind: LearnedKind,
+        backend: &'b dyn StepBackend,
+        overrides: Vec<(String, String)>,
+    ) -> Self {
+        LearnedSorter { kind, backend, overrides }
+    }
+
+    /// The backend this sorter executes on.
+    pub fn backend(&self) -> &'b dyn StepBackend {
+        self.backend
     }
 
     fn sss_config(&self, g: GridShape) -> Result<ShuffleSoftSortConfig> {
@@ -154,16 +164,16 @@ impl Sorter for LearnedSorter<'_> {
         );
         match self.kind {
             LearnedKind::ShuffleSoftSort => {
-                ShuffleSoftSort::new(self.rt, self.sss_config(g)?)?.sort(data)
+                ShuffleSoftSort::new(self.backend, self.sss_config(g)?)?.sort(data)
             }
             LearnedKind::SoftSort => {
-                SoftSortDriver::new(self.rt, self.baseline_config(g)?).sort(data)
+                SoftSortDriver::new(self.backend, self.baseline_config(g)?).sort(data)
             }
             LearnedKind::GumbelSinkhorn => {
-                GumbelSinkhornDriver::new(self.rt, self.baseline_config(g)?).sort(data)
+                GumbelSinkhornDriver::new(self.backend, self.baseline_config(g)?).sort(data)
             }
             LearnedKind::Kissing => {
-                KissingDriver::new(self.rt, self.baseline_config(g)?).sort(data)
+                KissingDriver::new(self.backend, self.baseline_config(g)?).sort(data)
             }
         }
     }

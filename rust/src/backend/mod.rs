@@ -1,0 +1,227 @@
+//! Compute backends: the `StepBackend` abstraction over "execute one
+//! optimization step" for the learned methods, with two interchangeable
+//! implementations.
+//!
+//! The paper's methods decompose into an L3 policy loop (Rust, the
+//! `coordinator` module) around a stateless per-step compute function
+//! (SoftSort forward, grid loss, analytic gradient — see
+//! `python/compile/model.py` / `losses.py`). Historically that step was
+//! *only* reachable through AOT-compiled XLA artifacts executed by the
+//! PJRT runtime, which made the whole crate untestable without
+//! `make artifacts` and pinned `Engine::sort_batch` to one `Runtime` per
+//! worker thread (the runtime's compile cache is `Rc`/`RefCell`).
+//!
+//! This module breaks that coupling:
+//!
+//! * [`StepBackend`] — the trait: one method per artifact family
+//!   (`sss_step`, `gs_step`, `gs_probe`, `kiss_step`), mirroring the
+//!   artifact signatures exactly, so drivers are backend-agnostic.
+//! * [`NativeBackend`] — the full step in pure Rust: row-softmax of the
+//!   N×N SoftSort matrix, the eq. (2) loss, and a hand-derived backward
+//!   pass, chunk-parallel over rows with a deterministic reduction order
+//!   (results are bit-identical for any thread count). `Send + Sync`, so
+//!   batch workers share one instance. Zero native dependencies: every
+//!   learned method runs on a bare machine with no `artifacts/` directory.
+//! * [`PjrtBackend`] — the original path: wraps `runtime::Runtime` and
+//!   executes the AOT HLO artifacts. Only compiled with the `pjrt` cargo
+//!   feature (on by default); `--no-default-features` builds a pure-Rust
+//!   crate.
+//!
+//! Selection is by [`BackendChoice`]: `native`, `pjrt`, or `auto` (prefer
+//! artifacts when the manifest is present, fall back to native). The
+//! `Engine` exposes it as the `--backend` CLI flag and the `backend=...`
+//! override pair; see `api::engine`.
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+use anyhow::{anyhow, Result};
+
+use crate::grid::GridShape;
+
+/// Static problem shape of one step: N items of dimension d on an h×w grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StepShape {
+    pub n: usize,
+    pub d: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl StepShape {
+    pub fn new(g: GridShape, d: usize) -> Self {
+        StepShape { n: g.n(), d, h: g.h, w: g.w }
+    }
+
+    pub fn grid(&self) -> GridShape {
+        GridShape::new(self.h, self.w)
+    }
+}
+
+/// One SoftSort/ShuffleSoftSort step result (mirrors the `sss_step`
+/// artifact outputs: loss, grad, sort_idx, colsum, y).
+#[derive(Clone, Debug)]
+pub struct SssStep {
+    pub loss: f32,
+    /// dL/dw, length N.
+    pub grad: Vec<f32>,
+    /// Row-argmax of P — the hard permutation draft, length N.
+    pub sort_idx: Vec<i32>,
+    /// Column sums of P (the L_s support), length N.
+    pub colsum: Vec<f32>,
+    /// Soft-sorted data P·x, length N·d.
+    pub y: Vec<f32>,
+}
+
+/// One Gumbel-Sinkhorn step result (loss + dL/dlogits over N² entries).
+#[derive(Clone, Debug)]
+pub struct GsStep {
+    pub loss: f32,
+    pub grad: Vec<f32>,
+}
+
+/// One Kissing step result (loss, the two factor gradients, row argmax).
+#[derive(Clone, Debug)]
+pub struct KissStep {
+    pub loss: f32,
+    pub grad_v: Vec<f32>,
+    pub grad_w: Vec<f32>,
+    pub sort_idx: Vec<i32>,
+}
+
+/// A compute backend executing the learned methods' per-step functions.
+///
+/// Implementations mirror `python/compile/model.py` exactly — same inputs,
+/// same outputs, same loss (eq. 2–4) — so the L3 drivers are oblivious to
+/// where the arithmetic runs. The trait is object-safe; drivers hold a
+/// `&dyn StepBackend`.
+pub trait StepBackend {
+    /// Human-readable backend name ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// One SoftSort/ShuffleSoftSort training step.
+    ///
+    /// `w`: trainable weights f32[N]; `x_shuf`: shuffled data f32[N·d];
+    /// `inv_idx`: inverse shuffle permutation i32[N] (the loss is evaluated
+    /// on the reverse-shuffled soft output); `tau`: temperature;
+    /// `norm`: dataset mean pairwise distance (the L_nbr normalizer).
+    fn sss_step(
+        &self,
+        shape: StepShape,
+        w: &[f32],
+        x_shuf: &[f32],
+        inv_idx: &[i32],
+        tau: f32,
+        norm: f32,
+    ) -> Result<SssStep>;
+
+    /// One Gumbel-Sinkhorn training step over N² `logits`; `gumbel` is the
+    /// pre-sampled noise (annealed Rust-side), same length.
+    fn gs_step(
+        &self,
+        shape: StepShape,
+        logits: &[f32],
+        x: &[f32],
+        gumbel: &[f32],
+        tau: f32,
+        norm: f32,
+    ) -> Result<GsStep>;
+
+    /// Noise-free dense doubly-stochastic P for final JV extraction.
+    fn gs_probe(&self, n: usize, logits: &[f32], tau: f32) -> Result<Vec<f32>>;
+
+    /// Fail fast if [`StepBackend::gs_probe`] would be unavailable for this
+    /// `n` (e.g. a missing probe artifact). Called by the Gumbel-Sinkhorn
+    /// driver *before* its optimization loop so a broken extraction path
+    /// does not waste the whole run. Backends where the probe cannot fail
+    /// to resolve keep this default no-op.
+    fn gs_probe_ready(&self, n: usize) -> Result<()> {
+        let _ = n;
+        Ok(())
+    }
+
+    /// The Kissing low-rank dimension M for an (N, d) problem — from the
+    /// artifact manifest (pjrt) or the kissing-number rule (native).
+    fn kiss_rank(&self, n: usize, d: usize) -> Result<usize>;
+
+    /// One Kissing step over the factor pair `v`, `wf` ∈ f32[N·M].
+    #[allow(clippy::too_many_arguments)]
+    fn kiss_step(
+        &self,
+        shape: StepShape,
+        m: usize,
+        v: &[f32],
+        wf: &[f32],
+        x: &[f32],
+        tau: f32,
+        norm: f32,
+    ) -> Result<KissStep>;
+}
+
+/// Which backend a session should use.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Prefer the PJRT artifacts when the manifest is present (and the
+    /// `pjrt` feature is compiled in); fall back to native.
+    #[default]
+    Auto,
+    /// Pure-Rust backend; never touches artifacts.
+    Native,
+    /// AOT artifacts via PJRT; errors when they are missing.
+    Pjrt,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(Self::Auto),
+            "native" | "rust" => Ok(Self::Native),
+            "pjrt" | "xla" | "artifacts" => Ok(Self::Pjrt),
+            other => Err(anyhow!(
+                "unknown backend '{other}' — expected auto, native or pjrt"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Native => "native",
+            Self::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl std::fmt::Display for BackendChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_choice_parses_and_round_trips() {
+        for c in [BackendChoice::Auto, BackendChoice::Native, BackendChoice::Pjrt] {
+            assert_eq!(BackendChoice::parse(c.name()).unwrap(), c);
+        }
+        assert_eq!(BackendChoice::parse("RUST").unwrap(), BackendChoice::Native);
+        assert_eq!(BackendChoice::parse("xla").unwrap(), BackendChoice::Pjrt);
+        assert!(BackendChoice::parse("tpu").is_err());
+        assert_eq!(BackendChoice::default(), BackendChoice::Auto);
+    }
+
+    #[test]
+    fn step_shape_matches_grid() {
+        let s = StepShape::new(GridShape::new(8, 4), 3);
+        assert_eq!((s.n, s.d, s.h, s.w), (32, 3, 8, 4));
+        assert_eq!(s.grid(), GridShape::new(8, 4));
+    }
+}

@@ -1,0 +1,1000 @@
+//! Pure-Rust compute backend: the learned methods' per-step functions with
+//! hand-derived backward passes — no JAX, no XLA, no artifacts.
+//!
+//! Mirrors `python/compile/model.py` + `losses.py` operation by operation
+//! (same f32 arithmetic, same constants), so a `NativeBackend` step agrees
+//! with the AOT artifact to float tolerance — enforced by the parity tests
+//! in `rust/tests/integration.rs` and by the finite-difference gradient
+//! checks below (which run on every `cargo test`, artifacts or not).
+//!
+//! Memory follows the paper's "row-wise" requirement (§II): the N×N
+//! SoftSort matrix is never materialized — forward computes each row,
+//! consumes it and keeps only y/colsum/argmax; backward *recomputes* the
+//! row (the chunked-oracle trick of `python/compile/kernels/ref.py`) and
+//! reduces straight into the weight gradient. Working set is O(C·N) for a
+//! fixed row chunk C.
+//!
+//! Parallelism: rows are independent, so both passes fan chunks of
+//! [`ROW_CHUNK`] rows across `std::thread` scoped workers. Reductions
+//! (colsum, dL/dw) are accumulated per chunk and folded **in chunk index
+//! order**, so results are bit-identical for any thread count — the
+//! property `Engine::sort_batch` relies on when batch workers share one
+//! backend. Small problems (N < [`PAR_MIN_N`]) skip thread spawn entirely.
+//!
+//! The Gumbel-Sinkhorn and Kissing baselines are implemented sequentially
+//! (they are comparison points, not the hot path); GS reverse-mode stores
+//! the 2·`SINKHORN_ITERS` intermediate log-matrices, i.e. O(iters·N²)
+//! transient memory — same asymptotics as its N² parameter vector.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::stats::std_f32;
+
+use super::{GsStep, KissStep, SssStep, StepBackend, StepShape};
+
+/// Loss weights and epsilons — must match `python/compile/losses.py`.
+const LAMBDA_S: f32 = 1.0;
+const LAMBDA_SIGMA: f32 = 2.0;
+const EPS: f32 = 1e-12;
+
+/// Kissing softmax sharpness — must match `model.py::KISS_SCALE`.
+const KISS_SCALE: f32 = 30.0;
+/// Sinkhorn normalization sweeps — must match `model.py::SINKHORN_ITERS`.
+const SINKHORN_ITERS: usize = 20;
+/// Row-norm guard — must match the `1e-8` in `model.py::make_kiss_step`.
+const KISS_NORM_EPS: f32 = 1e-8;
+
+/// Rows per parallel work unit. Fixed (not derived from the thread count)
+/// so the reduction tree — and therefore every f32 rounding — is identical
+/// no matter how many workers run.
+const ROW_CHUNK: usize = 128;
+/// Below this N a step is cheaper than spawning threads; stay sequential.
+const PAR_MIN_N: usize = 512;
+
+/// The pure-Rust step backend. `Send + Sync`: one instance can serve any
+/// number of threads concurrently (all state is per-call).
+#[derive(Clone, Debug)]
+pub struct NativeBackend {
+    threads: usize,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        let threads =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        NativeBackend { threads }
+    }
+}
+
+impl NativeBackend {
+    /// Backend with an explicit row-parallel worker cap (1 = sequential).
+    pub fn new(threads: usize) -> Self {
+        NativeBackend { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn effective_threads(&self, n: usize) -> usize {
+        if n < PAR_MIN_N {
+            1
+        } else {
+            self.threads
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Shared helpers.
+// --------------------------------------------------------------------------
+
+#[inline]
+fn sgn(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Run `f(chunk_index)` for every chunk, on up to `threads` workers.
+/// Results come back ordered by chunk index regardless of scheduling.
+fn run_chunks<T, F>(threads: usize, n_chunks: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads.min(n_chunks);
+    if workers <= 1 {
+        return (0..n_chunks).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n_chunks).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for wk in 0..workers {
+            let f = &f;
+            handles.push(scope.spawn(move || {
+                (wk..n_chunks)
+                    .step_by(workers)
+                    .map(|c| (c, f(c)))
+                    .collect::<Vec<(usize, T)>>()
+            }));
+        }
+        for handle in handles {
+            for (c, v) in handle.join().expect("native backend worker panicked") {
+                out[c] = Some(v);
+            }
+        }
+    });
+    out.into_iter()
+        .map(|v| v.expect("every chunk index is assigned to exactly one worker"))
+        .collect()
+}
+
+/// Eq. (2) objective on a soft output `y`, plus the cotangents the backward
+/// passes need: `ct_y = dL/dy` and `ct_cs = dL/dcolsum`.
+///
+/// `inv_idx`: when `Some`, the neighbor term is evaluated on the
+/// reverse-shuffled output `y[inv_idx]` (the ShuffleSoftSort gather);
+/// `None` means the identity arrangement (GS/Kissing).
+/// `colsum`: when `Some`, the stochastic-constraint term λ_s·L_s is
+/// included (GS omits it — Sinkhorn already enforces stochasticity).
+struct GridLoss {
+    loss: f32,
+    ct_y: Vec<f32>,
+    ct_cs: Vec<f32>,
+}
+
+fn grid_loss(
+    shape: StepShape,
+    x: &[f32],
+    y: &[f32],
+    inv_idx: Option<&[i32]>,
+    colsum: Option<&[f32]>,
+    norm: f32,
+) -> GridLoss {
+    let StepShape { n, d, h, w } = shape;
+    let row_of = |k: usize| -> usize {
+        match inv_idx {
+            Some(iv) => iv[k] as usize,
+            None => k,
+        }
+    };
+
+    // L_nbr and its gradient w.r.t. the (gathered) grid output.
+    let horiz = h * (w.saturating_sub(1));
+    let vert = if h > 1 { (h - 1) * w } else { 0 };
+    let count = (horiz + vert).max(1) as f32;
+    let coef = 1.0 / (count * norm);
+    let mut dyg = vec![0.0f32; n * d];
+    let mut diff = vec![0.0f32; d];
+    let mut total = 0.0f64;
+    let mut pair = |k1: usize, k2: usize, dyg: &mut [f32]| {
+        let (a, b) = (row_of(k1) * d, row_of(k2) * d);
+        let mut s = 0.0f32;
+        for (t, dt) in diff.iter_mut().enumerate() {
+            let dd = y[a + t] - y[b + t];
+            *dt = dd;
+            s += dd * dd;
+        }
+        let dist = (s + EPS).sqrt();
+        total += dist as f64;
+        let g = coef / dist;
+        for (t, &dt) in diff.iter().enumerate() {
+            dyg[k1 * d + t] += dt * g;
+            dyg[k2 * d + t] -= dt * g;
+        }
+    };
+    for r in 0..h {
+        for c in 0..w.saturating_sub(1) {
+            let k = r * w + c;
+            pair(k, k + 1, &mut dyg);
+        }
+    }
+    if h > 1 {
+        for r in 0..h - 1 {
+            for c in 0..w {
+                let k = r * w + c;
+                pair(k, k + w, &mut dyg);
+            }
+        }
+    }
+    let l_nbr = total as f32 * coef;
+
+    // Scatter d/dy_grid back through the gather (bijective → plain adds).
+    let mut ct_y = if inv_idx.is_some() {
+        let mut ct = vec![0.0f32; n * d];
+        for k in 0..n {
+            let r = row_of(k) * d;
+            for t in 0..d {
+                ct[r + t] += dyg[k * d + t];
+            }
+        }
+        ct
+    } else {
+        dyg
+    };
+
+    // λ_s · L_s (eq. 3) on the column sums.
+    let mut ct_cs = vec![0.0f32; n];
+    let mut l_s = 0.0f32;
+    if let Some(cs) = colsum {
+        let mut acc = 0.0f64;
+        for (j, &c) in cs.iter().enumerate() {
+            let dev = c - 1.0;
+            acc += (dev * dev) as f64;
+            ct_cs[j] = LAMBDA_S * 2.0 * dev / n as f32;
+        }
+        l_s = (acc / n as f64) as f32;
+    }
+
+    // λ_σ · L_σ (eq. 4): |σ_X − σ_Y| / σ_X over all N·d entries.
+    let sx = std_f32(x);
+    let sy = std_f32(y);
+    let l_sigma = (sx - sy).abs() / (sx + EPS);
+    if sy > 0.0 && sx != sy {
+        let m = (n * d) as f64;
+        let mu_y = (y.iter().map(|&v| v as f64).sum::<f64>() / m) as f32;
+        let a = LAMBDA_SIGMA * sgn(sy - sx) / (sx + EPS) / (m as f32 * sy);
+        for (ct, &v) in ct_y.iter_mut().zip(y) {
+            *ct += a * (v - mu_y);
+        }
+    }
+
+    GridLoss { loss: l_nbr + LAMBDA_S * l_s + LAMBDA_SIGMA * l_sigma, ct_y, ct_cs }
+}
+
+// --------------------------------------------------------------------------
+// SoftSort / ShuffleSoftSort step.
+// --------------------------------------------------------------------------
+
+struct SssForwardChunk {
+    y: Vec<f32>,
+    idx: Vec<i32>,
+    cs: Vec<f32>,
+}
+
+/// Row-block forward: y = P·x, sort_idx = argmax rows, colsum = Σ rows.
+/// P rows are computed, consumed and dropped (row-wise memory).
+fn softsort_forward(
+    threads: usize,
+    n: usize,
+    d: usize,
+    ws: &[f32],
+    w: &[f32],
+    x: &[f32],
+    tau: f32,
+) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    let n_chunks = n.div_ceil(ROW_CHUNK);
+    let chunks = run_chunks(threads, n_chunks, |c| {
+        let r0 = c * ROW_CHUNK;
+        let r1 = (r0 + ROW_CHUNK).min(n);
+        let rows = r1 - r0;
+        let mut ch = SssForwardChunk {
+            y: vec![0.0f32; rows * d],
+            idx: vec![0i32; rows],
+            cs: vec![0.0f32; n],
+        };
+        let mut row = vec![0.0f32; n];
+        for i in r0..r1 {
+            let wsi = ws[i];
+            let mut mx = f32::NEG_INFINITY;
+            let mut arg = 0usize;
+            for (j, rj) in row.iter_mut().enumerate() {
+                let l = -(wsi - w[j]).abs() / tau;
+                *rj = l;
+                if l > mx {
+                    mx = l;
+                    arg = j;
+                }
+            }
+            let mut denom = 0.0f32;
+            for rj in row.iter_mut() {
+                *rj = (*rj - mx).exp();
+                denom += *rj;
+            }
+            let inv = 1.0 / denom;
+            let li = i - r0;
+            ch.idx[li] = arg as i32;
+            let yi = &mut ch.y[li * d..(li + 1) * d];
+            for (j, rj) in row.iter_mut().enumerate() {
+                let p = *rj * inv;
+                *rj = p;
+                ch.cs[j] += p;
+                let xj = &x[j * d..(j + 1) * d];
+                for (yc, &xc) in yi.iter_mut().zip(xj) {
+                    *yc += p * xc;
+                }
+            }
+        }
+        ch
+    });
+
+    let mut y = vec![0.0f32; n * d];
+    let mut idx = vec![0i32; n];
+    let mut colsum = vec![0.0f32; n];
+    for (c, ch) in chunks.into_iter().enumerate() {
+        let r0 = c * ROW_CHUNK;
+        y[r0 * d..r0 * d + ch.y.len()].copy_from_slice(&ch.y);
+        idx[r0..r0 + ch.idx.len()].copy_from_slice(&ch.idx);
+        for (dst, src) in colsum.iter_mut().zip(&ch.cs) {
+            *dst += src;
+        }
+    }
+    (y, idx, colsum)
+}
+
+struct SssBackwardChunk {
+    /// dL/dws for this chunk's rows (sorted-side weight gradient).
+    gws: Vec<f32>,
+    /// dL/dw partial from the column side (full length N).
+    gw: Vec<f32>,
+}
+
+/// Row-block backward: recompute each P row, pull the loss cotangents
+/// through softmax and the |ws_i − w_j| kernel, reduce into dL/dw.
+#[allow(clippy::too_many_arguments)]
+fn softsort_backward(
+    threads: usize,
+    n: usize,
+    d: usize,
+    ws: &[f32],
+    w: &[f32],
+    sigma: &[u32],
+    x: &[f32],
+    tau: f32,
+    ct_y: &[f32],
+    ct_cs: &[f32],
+) -> Vec<f32> {
+    let n_chunks = n.div_ceil(ROW_CHUNK);
+    let chunks = run_chunks(threads, n_chunks, |c| {
+        let r0 = c * ROW_CHUNK;
+        let r1 = (r0 + ROW_CHUNK).min(n);
+        let mut ch = SssBackwardChunk { gws: vec![0.0f32; r1 - r0], gw: vec![0.0f32; n] };
+        let mut prob = vec![0.0f32; n];
+        let mut gbuf = vec![0.0f32; n];
+        for i in r0..r1 {
+            let wsi = ws[i];
+            // Recompute the probability row (identical code path to the
+            // forward, so the same f32 roundings are reproduced).
+            let mut mx = f32::NEG_INFINITY;
+            for (j, pj) in prob.iter_mut().enumerate() {
+                let l = -(wsi - w[j]).abs() / tau;
+                *pj = l;
+                if l > mx {
+                    mx = l;
+                }
+            }
+            let mut denom = 0.0f32;
+            for pj in prob.iter_mut() {
+                *pj = (*pj - mx).exp();
+                denom += *pj;
+            }
+            let inv = 1.0 / denom;
+            for pj in prob.iter_mut() {
+                *pj *= inv;
+            }
+
+            // dL/dP_ij = ct_y[i]·x_j + ct_cs[j]; softmax row backward.
+            let cti = &ct_y[i * d..(i + 1) * d];
+            let mut dot = 0.0f32;
+            for (j, gj) in gbuf.iter_mut().enumerate() {
+                let mut g = ct_cs[j];
+                let xj = &x[j * d..(j + 1) * d];
+                for (ct, &xc) in cti.iter().zip(xj) {
+                    g += ct * xc;
+                }
+                *gj = g;
+                dot += g * prob[j];
+            }
+            let mut gws_i = 0.0f32;
+            for j in 0..n {
+                let dl = prob[j] * (gbuf[j] - dot);
+                let s = sgn(wsi - w[j]);
+                gws_i -= dl * s / tau;
+                ch.gw[j] += dl * s / tau;
+            }
+            ch.gws[i - r0] = gws_i;
+        }
+        ch
+    });
+
+    // Deterministic reduction: chunk-ordered column partials, then the
+    // sorted-side scatter through σ (sort_desc's VJP).
+    let mut grad = vec![0.0f32; n];
+    for ch in &chunks {
+        for (g, p) in grad.iter_mut().zip(&ch.gw) {
+            *g += p;
+        }
+    }
+    for (c, ch) in chunks.iter().enumerate() {
+        let r0 = c * ROW_CHUNK;
+        for (li, &gv) in ch.gws.iter().enumerate() {
+            grad[sigma[r0 + li] as usize] += gv;
+        }
+    }
+    grad
+}
+
+// --------------------------------------------------------------------------
+// Gumbel-Sinkhorn helpers.
+// --------------------------------------------------------------------------
+
+fn row_lse_normalize(la: &mut [f32], n: usize) {
+    for i in 0..n {
+        let row = &mut la[i * n..(i + 1) * n];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut s = 0.0f32;
+        for &v in row.iter() {
+            s += (v - mx).exp();
+        }
+        let lse = mx + s.ln();
+        for v in row.iter_mut() {
+            *v -= lse;
+        }
+    }
+}
+
+fn col_lse_normalize(la: &mut [f32], n: usize) {
+    for j in 0..n {
+        let mut mx = f32::NEG_INFINITY;
+        for i in 0..n {
+            mx = mx.max(la[i * n + j]);
+        }
+        let mut s = 0.0f32;
+        for i in 0..n {
+            s += (la[i * n + j] - mx).exp();
+        }
+        let lse = mx + s.ln();
+        for i in 0..n {
+            la[i * n + j] -= lse;
+        }
+    }
+}
+
+/// Log-space Sinkhorn forward. When `states` is `Some`, the output of every
+/// normalization is recorded (reverse-mode needs exactly those values).
+fn sinkhorn_log(mut la: Vec<f32>, n: usize, mut states: Option<&mut Vec<Vec<f32>>>) -> Vec<f32> {
+    for _ in 0..SINKHORN_ITERS {
+        row_lse_normalize(&mut la, n);
+        if let Some(s) = states.as_mut() {
+            s.push(la.clone());
+        }
+        col_lse_normalize(&mut la, n);
+        if let Some(s) = states.as_mut() {
+            s.push(la.clone());
+        }
+    }
+    la.iter_mut().for_each(|v| *v = v.exp());
+    la
+}
+
+// --------------------------------------------------------------------------
+// Kissing helpers.
+// --------------------------------------------------------------------------
+
+/// Classic kissing numbers K(M) — mirrors `python/compile/shapes.py`
+/// (`kissing_number(M) ≥ N` picks the rank; Table 2 pins M(1024) = 13).
+const KISSING_TABLE: &[(usize, usize)] =
+    &[(240, 8), (306, 9), (500, 10), (582, 11), (840, 12), (1154, 13), (4320, 16)];
+
+/// Row L2 norms, and the row-normalized matrix v̂ = v / (‖v_row‖ + ε).
+fn normalize_rows(v: &[f32], n: usize, m: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut norms = vec![0.0f32; n];
+    let mut vn = vec![0.0f32; n * m];
+    for i in 0..n {
+        let row = &v[i * m..(i + 1) * m];
+        let mut s = 0.0f32;
+        for &a in row {
+            s += a * a;
+        }
+        let r = s.sqrt();
+        norms[i] = r;
+        let inv = 1.0 / (r + KISS_NORM_EPS);
+        for (dst, &a) in vn[i * m..(i + 1) * m].iter_mut().zip(row) {
+            *dst = a * inv;
+        }
+    }
+    (norms, vn)
+}
+
+/// VJP of row normalization: given dL/dv̂, return dL/dv.
+fn normalize_rows_backward(
+    v: &[f32],
+    norms: &[f32],
+    dvn: &[f32],
+    n: usize,
+    m: usize,
+) -> Vec<f32> {
+    let mut dv = vec![0.0f32; n * m];
+    for i in 0..n {
+        let r = norms[i];
+        let denom = r + KISS_NORM_EPS;
+        let vi = &v[i * m..(i + 1) * m];
+        let di = &dvn[i * m..(i + 1) * m];
+        let mut dot = 0.0f32;
+        for (&a, &b) in vi.iter().zip(di) {
+            dot += a * b;
+        }
+        let out = &mut dv[i * m..(i + 1) * m];
+        if r > 0.0 {
+            let k = dot / (r * denom * denom);
+            for ((o, &b), &a) in out.iter_mut().zip(di).zip(vi) {
+                *o = b / denom - a * k;
+            }
+        } else {
+            for (o, &b) in out.iter_mut().zip(di) {
+                *o = b / denom;
+            }
+        }
+    }
+    dv
+}
+
+// --------------------------------------------------------------------------
+// Trait implementation.
+// --------------------------------------------------------------------------
+
+fn check_shape(shape: StepShape) -> Result<()> {
+    ensure!(shape.n >= 2, "native backend needs N >= 2 (got {})", shape.n);
+    ensure!(
+        shape.h * shape.w == shape.n,
+        "grid {}x{} != N={}",
+        shape.h,
+        shape.w,
+        shape.n
+    );
+    Ok(())
+}
+
+fn check_scalars(tau: f32, norm: f32) -> Result<()> {
+    ensure!(tau.is_finite() && tau > 0.0, "temperature must be positive, got {tau}");
+    ensure!(norm.is_finite() && norm > 0.0, "norm must be positive, got {norm}");
+    Ok(())
+}
+
+impl StepBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn sss_step(
+        &self,
+        shape: StepShape,
+        w: &[f32],
+        x_shuf: &[f32],
+        inv_idx: &[i32],
+        tau: f32,
+        norm: f32,
+    ) -> Result<SssStep> {
+        let StepShape { n, d, .. } = shape;
+        check_shape(shape)?;
+        check_scalars(tau, norm)?;
+        ensure!(w.len() == n, "w length {} != N={n}", w.len());
+        ensure!(x_shuf.len() == n * d, "x length {} != N*d={}", x_shuf.len(), n * d);
+        ensure!(inv_idx.len() == n, "inv_idx length {} != N={n}", inv_idx.len());
+        for &i in inv_idx {
+            ensure!((0..n as i32).contains(&i), "inv_idx entry {i} out of range 0..{n}");
+        }
+
+        // sort_desc(w): stable descending argsort (ties keep index order,
+        // matching jnp.argsort(-w)); its VJP is the scatter through σ.
+        let mut sigma: Vec<u32> = (0..n as u32).collect();
+        sigma.sort_by(|&a, &b| {
+            w[b as usize]
+                .partial_cmp(&w[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let ws: Vec<f32> = sigma.iter().map(|&i| w[i as usize]).collect();
+
+        let threads = self.effective_threads(n);
+        let (y, sort_idx, colsum) = softsort_forward(threads, n, d, &ws, w, x_shuf, tau);
+        let gl = grid_loss(shape, x_shuf, &y, Some(inv_idx), Some(&colsum), norm);
+        let grad = softsort_backward(
+            threads, n, d, &ws, w, &sigma, x_shuf, tau, &gl.ct_y, &gl.ct_cs,
+        );
+        Ok(SssStep { loss: gl.loss, grad, sort_idx, colsum, y })
+    }
+
+    fn gs_step(
+        &self,
+        shape: StepShape,
+        logits: &[f32],
+        x: &[f32],
+        gumbel: &[f32],
+        tau: f32,
+        norm: f32,
+    ) -> Result<GsStep> {
+        let StepShape { n, d, .. } = shape;
+        check_shape(shape)?;
+        check_scalars(tau, norm)?;
+        ensure!(logits.len() == n * n, "logits length {} != N²={}", logits.len(), n * n);
+        ensure!(gumbel.len() == n * n, "gumbel length {} != N²={}", gumbel.len(), n * n);
+        ensure!(x.len() == n * d, "x length {} != N*d={}", x.len(), n * d);
+
+        // Forward, recording every normalization output for reverse-mode.
+        let la0: Vec<f32> =
+            logits.iter().zip(gumbel).map(|(&l, &g)| (l + g) / tau).collect();
+        let mut states: Vec<Vec<f32>> = Vec::with_capacity(2 * SINKHORN_ITERS);
+        let p = sinkhorn_log(la0, n, Some(&mut states));
+
+        let mut y = vec![0.0f32; n * d];
+        for i in 0..n {
+            let yi = &mut y[i * d..(i + 1) * d];
+            for j in 0..n {
+                let pij = p[i * n + j];
+                let xj = &x[j * d..(j + 1) * d];
+                for (yc, &xc) in yi.iter_mut().zip(xj) {
+                    *yc += pij * xc;
+                }
+            }
+        }
+
+        // GS loss omits L_s (Sinkhorn already enforces stochasticity).
+        let gl = grid_loss(shape, x, &y, None, None, norm);
+
+        // dL/dP → through exp → reverse the 2·iters normalizations.
+        let mut dz = vec![0.0f32; n * n];
+        for i in 0..n {
+            let cti = &gl.ct_y[i * d..(i + 1) * d];
+            for j in 0..n {
+                let mut g = 0.0f32;
+                let xj = &x[j * d..(j + 1) * d];
+                for (ct, &xc) in cti.iter().zip(xj) {
+                    g += ct * xc;
+                }
+                dz[i * n + j] = p[i * n + j] * g;
+            }
+        }
+        for (t, z) in states.iter().enumerate().rev() {
+            // z = la − lse(la) ⇒ dla = dz − softmax(la)·Σdz, softmax = exp(z).
+            if t % 2 == 1 {
+                // Column normalization (second in each sweep).
+                for j in 0..n {
+                    let mut s = 0.0f32;
+                    for i in 0..n {
+                        s += dz[i * n + j];
+                    }
+                    for i in 0..n {
+                        dz[i * n + j] -= z[i * n + j].exp() * s;
+                    }
+                }
+            } else {
+                for i in 0..n {
+                    let row = &mut dz[i * n..(i + 1) * n];
+                    let zr = &z[i * n..(i + 1) * n];
+                    let s: f32 = row.iter().sum();
+                    for (dv, &zv) in row.iter_mut().zip(zr) {
+                        *dv -= zv.exp() * s;
+                    }
+                }
+            }
+        }
+        let grad: Vec<f32> = dz.iter().map(|&v| v / tau).collect();
+        Ok(GsStep { loss: gl.loss, grad })
+    }
+
+    fn gs_probe(&self, n: usize, logits: &[f32], tau: f32) -> Result<Vec<f32>> {
+        ensure!(logits.len() == n * n, "logits length {} != N²={}", logits.len(), n * n);
+        ensure!(tau.is_finite() && tau > 0.0, "temperature must be positive, got {tau}");
+        let la: Vec<f32> = logits.iter().map(|&l| l / tau).collect();
+        Ok(sinkhorn_log(la, n, None))
+    }
+
+    fn kiss_rank(&self, n: usize, _d: usize) -> Result<usize> {
+        for &(max_n, m) in KISSING_TABLE {
+            if n <= max_n {
+                return Ok(m);
+            }
+        }
+        bail!("no tabulated kissing rank covers N={n} (max 4320)")
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn kiss_step(
+        &self,
+        shape: StepShape,
+        m: usize,
+        v: &[f32],
+        wf: &[f32],
+        x: &[f32],
+        tau: f32,
+        norm: f32,
+    ) -> Result<KissStep> {
+        let StepShape { n, d, .. } = shape;
+        check_shape(shape)?;
+        check_scalars(tau, norm)?;
+        ensure!(m >= 1, "kissing rank must be >= 1");
+        ensure!(v.len() == n * m, "v length {} != N*M={}", v.len(), n * m);
+        ensure!(wf.len() == n * m, "w length {} != N*M={}", wf.len(), n * m);
+        ensure!(x.len() == n * d, "x length {} != N*d={}", x.len(), n * d);
+
+        let (rv, vn) = normalize_rows(v, n, m);
+        let (rw, wn) = normalize_rows(wf, n, m);
+        let scale_t = KISS_SCALE / tau;
+
+        // Forward: P = row-softmax(scale·v̂ŵᵀ/τ); rows recomputed in the
+        // backward pass (memory stays O(N·(M+d))).
+        let mut y = vec![0.0f32; n * d];
+        let mut colsum = vec![0.0f32; n];
+        let mut sort_idx = vec![0i32; n];
+        let mut row = vec![0.0f32; n];
+        let softmax_row = |i: usize, row: &mut [f32]| {
+            let vi = &vn[i * m..(i + 1) * m];
+            let mut mx = f32::NEG_INFINITY;
+            let mut arg = 0usize;
+            for (j, rj) in row.iter_mut().enumerate() {
+                let wj = &wn[j * m..(j + 1) * m];
+                let mut dot = 0.0f32;
+                for (&a, &b) in vi.iter().zip(wj) {
+                    dot += a * b;
+                }
+                let l = scale_t * dot;
+                *rj = l;
+                if l > mx {
+                    mx = l;
+                    arg = j;
+                }
+            }
+            let mut denom = 0.0f32;
+            for rj in row.iter_mut() {
+                *rj = (*rj - mx).exp();
+                denom += *rj;
+            }
+            let inv = 1.0 / denom;
+            for rj in row.iter_mut() {
+                *rj *= inv;
+            }
+            arg
+        };
+        for i in 0..n {
+            let arg = softmax_row(i, &mut row);
+            sort_idx[i] = arg as i32;
+            let yi = &mut y[i * d..(i + 1) * d];
+            for (j, &p) in row.iter().enumerate() {
+                colsum[j] += p;
+                let xj = &x[j * d..(j + 1) * d];
+                for (yc, &xc) in yi.iter_mut().zip(xj) {
+                    *yc += p * xc;
+                }
+            }
+        }
+
+        let gl = grid_loss(shape, x, &y, None, Some(&colsum), norm);
+
+        // Backward: softmax rows → the two normalized factors → v, w.
+        let mut dvn = vec![0.0f32; n * m];
+        let mut dwn = vec![0.0f32; n * m];
+        let mut gbuf = vec![0.0f32; n];
+        for i in 0..n {
+            softmax_row(i, &mut row);
+            let cti = &gl.ct_y[i * d..(i + 1) * d];
+            let mut dot = 0.0f32;
+            for (j, gj) in gbuf.iter_mut().enumerate() {
+                let mut g = gl.ct_cs[j];
+                let xj = &x[j * d..(j + 1) * d];
+                for (ct, &xc) in cti.iter().zip(xj) {
+                    g += ct * xc;
+                }
+                *gj = g;
+                dot += g * row[j];
+            }
+            let vi = &vn[i * m..(i + 1) * m];
+            for (j, &p) in row.iter().enumerate() {
+                let a = scale_t * p * (gbuf[j] - dot);
+                let wj = &wn[j * m..(j + 1) * m];
+                let dvi = &mut dvn[i * m..(i + 1) * m];
+                for (dv, &b) in dvi.iter_mut().zip(wj) {
+                    *dv += a * b;
+                }
+                let dwj = &mut dwn[j * m..(j + 1) * m];
+                for (dw, &b) in dwj.iter_mut().zip(vi) {
+                    *dw += a * b;
+                }
+            }
+        }
+        let grad_v = normalize_rows_backward(v, &rv, &dvn, n, m);
+        let grad_w = normalize_rows_backward(wf, &rw, &dwn, n, m);
+        Ok(KissStep { loss: gl.loss, grad_v, grad_w, sort_idx })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::GridShape;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn native_backend_is_send_sync() {
+        assert_send_sync::<NativeBackend>();
+    }
+
+    /// Deterministic pseudo-data in [0, 1) without pulling in the RNG.
+    fn pattern(len: usize, salt: u32) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                let h = (i as u32).wrapping_mul(2654435761).wrapping_add(salt);
+                (h % 10_000) as f32 / 10_000.0
+            })
+            .collect()
+    }
+
+    /// Well-separated weights (spacing ≈ 1) so finite differences never
+    /// cross a sort-order kink.
+    fn ramp_w(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (n - i) as f32 + 0.3 * (i as f32).sin()).collect()
+    }
+
+    fn rel_l2(a: &[f32], b: &[f32]) -> f32 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (&x, &y) in a.iter().zip(b) {
+            num += ((x - y) as f64).powi(2);
+            den += (y as f64).powi(2);
+        }
+        (num.sqrt() / (den.sqrt() + 1e-9)) as f32
+    }
+
+    /// Centered finite differences of `f` at `p`.
+    fn fd_grad(p: &[f32], eps: f32, mut f: impl FnMut(&[f32]) -> f32) -> Vec<f32> {
+        let mut g = vec![0.0f32; p.len()];
+        let mut q = p.to_vec();
+        for i in 0..p.len() {
+            let orig = q[i];
+            q[i] = orig + eps;
+            let hi = f(&q);
+            q[i] = orig - eps;
+            let lo = f(&q);
+            q[i] = orig;
+            g[i] = (hi - lo) / (2.0 * eps);
+        }
+        g
+    }
+
+    #[test]
+    fn sss_gradient_matches_finite_differences() {
+        let shape = StepShape::new(GridShape::new(4, 4), 2);
+        let be = NativeBackend::new(1);
+        let w = ramp_w(16);
+        let x = pattern(16 * 2, 7);
+        // A non-identity shuffle inverse (5 is coprime to 16).
+        let inv: Vec<i32> = (0..16).map(|k| (k * 5) % 16).collect();
+        let (tau, norm) = (0.7f32, 0.5f32);
+
+        let ana = be.sss_step(shape, &w, &x, &inv, tau, norm).unwrap().grad;
+        let fd = fd_grad(&w, 1e-2, |wp| {
+            be.sss_step(shape, wp, &x, &inv, tau, norm).unwrap().loss
+        });
+        let err = rel_l2(&fd, &ana);
+        assert!(err < 0.05, "sss grad rel-L2 error {err} (ana {ana:?} fd {fd:?})");
+    }
+
+    #[test]
+    fn gs_gradient_matches_finite_differences() {
+        let shape = StepShape::new(GridShape::new(3, 3), 2);
+        let be = NativeBackend::new(1);
+        let logits: Vec<f32> = pattern(81, 3).iter().map(|v| v - 0.5).collect();
+        let gumbel = vec![0.0f32; 81];
+        let x = pattern(9 * 2, 11);
+        let (tau, norm) = (1.0f32, 0.5f32);
+
+        let ana = be.gs_step(shape, &logits, &x, &gumbel, tau, norm).unwrap().grad;
+        let fd = fd_grad(&logits, 1e-2, |lp| {
+            be.gs_step(shape, lp, &x, &gumbel, tau, norm).unwrap().loss
+        });
+        let err = rel_l2(&fd, &ana);
+        assert!(err < 0.05, "gs grad rel-L2 error {err}");
+    }
+
+    #[test]
+    fn kiss_gradients_match_finite_differences() {
+        let shape = StepShape::new(GridShape::new(3, 3), 2);
+        let be = NativeBackend::new(1);
+        let m = be.kiss_rank(9, 2).unwrap();
+        let v: Vec<f32> = pattern(9 * m, 5).iter().map(|a| a + 0.2).collect();
+        let wf: Vec<f32> = pattern(9 * m, 9).iter().map(|a| a + 0.2).collect();
+        let x = pattern(9 * 2, 13);
+        // Soft temperature keeps the scale·τ⁻¹ softmax smooth enough for
+        // f32 finite differences.
+        let (tau, norm) = (6.0f32, 0.5f32);
+
+        let out = be.kiss_step(shape, m, &v, &wf, &x, tau, norm).unwrap();
+        let fd_v = fd_grad(&v, 5e-3, |vp| {
+            be.kiss_step(shape, m, vp, &wf, &x, tau, norm).unwrap().loss
+        });
+        let fd_w = fd_grad(&wf, 5e-3, |wp| {
+            be.kiss_step(shape, m, &v, wp, &x, tau, norm).unwrap().loss
+        });
+        let ev = rel_l2(&fd_v, &out.grad_v);
+        let ew = rel_l2(&fd_w, &out.grad_w);
+        assert!(ev < 0.08, "kiss grad_v rel-L2 error {ev}");
+        assert!(ew < 0.08, "kiss grad_w rel-L2 error {ew}");
+    }
+
+    #[test]
+    fn sss_step_is_bit_identical_across_thread_counts() {
+        // N=600 exceeds PAR_MIN_N → the 4-thread backend really runs the
+        // parallel path; fixed chunking must make it bit-identical.
+        let shape = StepShape::new(GridShape::new(20, 30), 3);
+        let w = ramp_w(600);
+        let x = pattern(600 * 3, 17);
+        let inv: Vec<i32> = (0..600).map(|k| ((k * 7) % 600) as i32).collect();
+        let a = NativeBackend::new(1).sss_step(shape, &w, &x, &inv, 0.4, 0.5).unwrap();
+        let b = NativeBackend::new(4).sss_step(shape, &w, &x, &inv, 0.4, 0.5).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.sort_idx, b.sort_idx);
+        for (ga, gb) in a.grad.iter().zip(&b.grad) {
+            assert_eq!(ga.to_bits(), gb.to_bits());
+        }
+        for (ya, yb) in a.y.iter().zip(&b.y) {
+            assert_eq!(ya.to_bits(), yb.to_bits());
+        }
+        for (ca, cb) in a.colsum.iter().zip(&b.colsum) {
+            assert_eq!(ca.to_bits(), cb.to_bits());
+        }
+    }
+
+    #[test]
+    fn sharp_tau_on_ordered_weights_gives_identity_argmax() {
+        // Mirrors the PJRT integration check: order-preserving init at a
+        // sharp temperature ⇒ identity sort_idx and colsum ≈ 1.
+        let n = 32;
+        let shape = StepShape::new(GridShape::new(4, 8), 3);
+        let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let x = pattern(n * 3, 23);
+        let inv: Vec<i32> = (0..n as i32).collect();
+        let out = NativeBackend::new(1).sss_step(shape, &w, &x, &inv, 0.05, 0.5).unwrap();
+        for (i, &v) in out.sort_idx.iter().enumerate() {
+            assert_eq!(v as usize, i);
+        }
+        for &c in &out.colsum {
+            assert!((c - 1.0).abs() < 1e-3, "colsum {c}");
+        }
+        assert!(out.loss.is_finite());
+    }
+
+    #[test]
+    fn gs_probe_is_approximately_doubly_stochastic() {
+        let n = 8;
+        let logits: Vec<f32> = pattern(64, 29).iter().map(|v| (v - 0.5) * 4.0).collect();
+        let p = NativeBackend::new(1).gs_probe(n, &logits, 0.5).unwrap();
+        for i in 0..n {
+            let rs: f32 = p[i * n..(i + 1) * n].iter().sum();
+            assert!((rs - 1.0).abs() < 1e-3, "row {i} sum {rs}");
+        }
+        for j in 0..n {
+            let cs: f32 = (0..n).map(|i| p[i * n + j]).sum();
+            assert!((cs - 1.0).abs() < 1e-3, "col {j} sum {cs}");
+        }
+    }
+
+    #[test]
+    fn kiss_rank_follows_the_kissing_number_table() {
+        let be = NativeBackend::new(1);
+        assert_eq!(be.kiss_rank(64, 3).unwrap(), 8);
+        assert_eq!(be.kiss_rank(256, 3).unwrap(), 9);
+        assert_eq!(be.kiss_rank(1024, 3).unwrap(), 13);
+        assert_eq!(be.kiss_rank(4096, 3).unwrap(), 16);
+        assert!(be.kiss_rank(100_000, 3).is_err());
+    }
+
+    #[test]
+    fn shape_and_scalar_validation_errors_are_described() {
+        let be = NativeBackend::new(1);
+        let shape = StepShape::new(GridShape::new(4, 4), 3);
+        let w = vec![0.0f32; 16];
+        let x = vec![0.0f32; 16 * 3];
+        let inv: Vec<i32> = (0..16).collect();
+        assert!(be.sss_step(shape, &w[..8], &x, &inv, 0.5, 0.5).is_err());
+        assert!(be.sss_step(shape, &w, &x[..10], &inv, 0.5, 0.5).is_err());
+        assert!(be.sss_step(shape, &w, &x, &inv, 0.0, 0.5).is_err());
+        assert!(be.sss_step(shape, &w, &x, &inv, 0.5, -1.0).is_err());
+        let bad_inv = vec![99i32; 16];
+        assert!(be.sss_step(shape, &w, &x, &bad_inv, 0.5, 0.5).is_err());
+    }
+}

@@ -1,0 +1,161 @@
+//! PJRT-backed [`StepBackend`]: executes the AOT HLO artifacts through the
+//! existing [`Runtime`] (manifest-driven compile cache, CPU PJRT client).
+//!
+//! This is the original compute path, now behind the backend trait so
+//! drivers no longer know about artifacts at all. Only compiled with the
+//! `pjrt` cargo feature; a `--no-default-features` build ships the
+//! [`super::NativeBackend`] alone.
+//!
+//! Not `Send`/`Sync` (the runtime's compile cache is `Rc`/`RefCell`), so
+//! `Engine::sort_batch` builds one `PjrtBackend` per worker — exactly the
+//! per-worker-`Runtime` behavior this backend inherited.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{Arg, Runtime};
+
+use super::{GsStep, KissStep, SssStep, StepBackend, StepShape};
+
+/// Backend executing AOT artifacts via the PJRT runtime.
+pub struct PjrtBackend {
+    rt: Runtime,
+}
+
+impl PjrtBackend {
+    /// Wrap an already-loaded runtime.
+    pub fn new(rt: Runtime) -> Self {
+        PjrtBackend { rt }
+    }
+
+    /// Load the artifact manifest at `dir` and start a CPU PJRT client.
+    pub fn from_artifacts(dir: impl AsRef<Path>) -> Result<Self> {
+        Runtime::from_manifest(dir).map(PjrtBackend::new)
+    }
+
+    /// The wrapped runtime (manifest inspection, direct executable access).
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl StepBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn sss_step(
+        &self,
+        shape: StepShape,
+        w: &[f32],
+        x_shuf: &[f32],
+        inv_idx: &[i32],
+        tau: f32,
+        norm: f32,
+    ) -> Result<SssStep> {
+        let StepShape { n, d, h, .. } = shape;
+        let exe = self
+            .rt
+            .sss_step(n, d, h)
+            .with_context(|| format!("no sss artifact for N={n} d={d} h={h}"))?;
+        let out = exe.run(&[
+            Arg::F32(w),
+            Arg::F32(x_shuf),
+            Arg::I32(inv_idx),
+            Arg::ScalarF32(tau),
+            Arg::ScalarF32(norm),
+        ])?;
+        Ok(SssStep {
+            loss: out[0].scalar_f32()?,
+            grad: out[1].as_f32()?.to_vec(),
+            sort_idx: out[2].as_i32()?.to_vec(),
+            colsum: out[3].as_f32()?.to_vec(),
+            y: out[4].as_f32()?.to_vec(),
+        })
+    }
+
+    fn gs_step(
+        &self,
+        shape: StepShape,
+        logits: &[f32],
+        x: &[f32],
+        gumbel: &[f32],
+        tau: f32,
+        norm: f32,
+    ) -> Result<GsStep> {
+        let StepShape { n, d, h, .. } = shape;
+        let exe = self
+            .rt
+            .gs_step(n, d, h)
+            .with_context(|| format!("no gumbel-sinkhorn artifact for N={n} d={d} h={h}"))?;
+        let out = exe.run(&[
+            Arg::F32(logits),
+            Arg::F32(x),
+            Arg::F32(gumbel),
+            Arg::ScalarF32(tau),
+            Arg::ScalarF32(norm),
+        ])?;
+        Ok(GsStep { loss: out[0].scalar_f32()?, grad: out[1].as_f32()?.to_vec() })
+    }
+
+    fn gs_probe(&self, n: usize, logits: &[f32], tau: f32) -> Result<Vec<f32>> {
+        let probe = self.rt.gs_probe(n)?;
+        // The probe artifact takes a noise input; the final extraction is
+        // always noise-free.
+        let zeros = vec![0.0f32; n * n];
+        let out = probe.run(&[Arg::F32(logits), Arg::F32(&zeros), Arg::ScalarF32(tau)])?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+
+    fn gs_probe_ready(&self, n: usize) -> Result<()> {
+        // Resolves + compiles the probe artifact now (the runtime caches
+        // it, so the real probe call later reuses the compilation).
+        self.rt
+            .gs_probe(n)
+            .with_context(|| format!("no gs_probe artifact for N={n}"))
+            .map(|_| ())
+    }
+
+    fn kiss_rank(&self, n: usize, d: usize) -> Result<usize> {
+        // Rank follows the manifest (kissing-number rule, shapes.py).
+        self.rt
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.method == "kiss" && a.n == n && a.d == d)
+            .map(|a| a.m)
+            .with_context(|| format!("no kissing artifact for N={n} d={d}"))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn kiss_step(
+        &self,
+        shape: StepShape,
+        m: usize,
+        v: &[f32],
+        wf: &[f32],
+        x: &[f32],
+        tau: f32,
+        norm: f32,
+    ) -> Result<KissStep> {
+        let StepShape { n, d, .. } = shape;
+        let exe = self
+            .rt
+            .kiss_step(n, m, d)
+            .with_context(|| format!("no kissing artifact for N={n} M={m} d={d}"))?;
+        let out = exe.run(&[
+            Arg::F32(v),
+            Arg::F32(wf),
+            Arg::F32(x),
+            Arg::ScalarF32(tau),
+            Arg::ScalarF32(norm),
+        ])?;
+        Ok(KissStep {
+            loss: out[0].scalar_f32()?,
+            grad_v: out[1].as_f32()?.to_vec(),
+            grad_w: out[2].as_f32()?.to_vec(),
+            sort_idx: out[3].as_i32()?.to_vec(),
+        })
+    }
+}

@@ -26,6 +26,43 @@ impl Sample {
             self.name, self.mean_s, self.std_s, self.min_s, self.reps
         )
     }
+
+    /// One JSON object for the machine-readable bench report.
+    pub fn json(&self) -> String {
+        format!(
+            r#"{{"name": "{}", "reps": {}, "mean_s": {}, "std_s": {}, "min_s": {}}}"#,
+            json_escape(&self.name),
+            self.reps,
+            self.mean_s,
+            self.std_s,
+            self.min_s
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Write a bench report as a JSON document: `{"bench": title, "samples":
+/// [...]}`. Parent directories are created; used by `runtime_micro` to
+/// record the native-vs-pjrt per-step numbers.
+pub fn write_json_report(
+    path: impl AsRef<std::path::Path>,
+    title: &str,
+    samples: &[Sample],
+) -> std::io::Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let body: Vec<String> = samples.iter().map(|s| format!("    {}", s.json())).collect();
+    let doc = format!(
+        "{{\n  \"bench\": \"{}\",\n  \"samples\": [\n{}\n  ]\n}}\n",
+        json_escape(title),
+        body.join(",\n")
+    );
+    std::fs::write(path, doc)
 }
 
 /// Run `f` `warmup` + `reps` times, timing the reps.
@@ -124,5 +161,15 @@ mod tests {
         let mut t = Table::new(&["Method", "Memory", "Quality"]);
         t.row(&["ours".into(), "1024".into(), "0.89".into()]);
         t.print();
+    }
+
+    #[test]
+    fn sample_json_round_trips_through_the_crate_parser() {
+        use crate::util::json::Json;
+        let s = bench("native \"sss\" n=64", 0, 2, || 1 + 1);
+        let j = Json::parse(&s.json()).expect("sample json parses");
+        assert_eq!(j.get("name").unwrap().as_str(), Some(r#"native "sss" n=64"#));
+        assert!(j.get("mean_s").is_some());
+        assert!(j.get("reps").is_some());
     }
 }

@@ -73,6 +73,7 @@ impl ParsedArgs {
 const KNOWN_VALUE_OPTS: &[&str] = &[
     "n", "grid", "method", "out", "seed", "config", "artifacts", "dataset",
     "bits", "entropy", "scene-seed", "clusters", "dims", "batch", "workers",
+    "backend",
 ];
 
 pub const USAGE: &str = "\
@@ -80,14 +81,18 @@ sssort — ShuffleSoftSort permutation-learning coordinator
 
 USAGE:
   sssort sort    [--method NAME] [--grid HxW] [--dataset colors|features]
-                 [--seed S] [--batch K] [--workers W] [--out dir] [k=v overrides]
+                 [--backend auto|native|pjrt] [--seed S] [--batch K]
+                 [--workers W] [--out dir] [k=v overrides]
                  sort dataset(s), report DPQ (batch >1 fans out across threads)
-  sssort sog     [--n N] [--grid HxW] [--bits B] [--out dir]
+  sssort sog     [--n N] [--grid HxW] [--bits B] [--backend B] [--out dir]
                  run the Self-Organizing-Gaussians pipeline (Fig. 6)
   sssort inspect [--artifacts dir]                        list AOT artifacts
   sssort help                                             this text
 
-Config overrides are bare k=v pairs, e.g. `phases=300 lr=0.3 shuffle=random`.
+Config overrides are bare k=v pairs, e.g. `phases=300 lr=0.3 shuffle=random`;
+`backend=native` works as an override pair too. The default backend is
+`auto`: use the AOT artifacts when artifacts/manifest.json exists, else run
+the learned methods on the pure-Rust native backend (no artifacts needed).
 ";
 
 /// Full usage text: the static grammar plus the live method list from the
@@ -170,6 +175,14 @@ mod tests {
         assert_eq!(a.opt_usize("batch", 1).unwrap(), 4);
         assert_eq!(a.opt_usize("workers", 1).unwrap(), 2);
         assert!(a.positional.is_empty());
+    }
+
+    #[test]
+    fn backend_takes_a_value() {
+        let a = parse(&["sort", "--backend", "native", "--method", "sss"]);
+        assert_eq!(a.opt("backend"), Some("native"));
+        assert!(a.positional.is_empty());
+        assert!(usage().contains("--backend"));
     }
 
     #[test]

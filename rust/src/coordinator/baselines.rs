@@ -1,18 +1,20 @@
 //! Baseline drivers: plain SoftSort [14], Gumbel-Sinkhorn [11] and
 //! Kissing-to-Find-a-Match [4] — the comparison set of the paper's Table 2.
 //!
-//! All parameters live in Rust; the AOT artifacts are stateless step
-//! functions (see `python/compile/model.py`). Every driver returns the same
-//! `SortOutcome` shape so the benches treat methods uniformly.
+//! All parameters live in Rust; the per-step compute functions are
+//! stateless (see `python/compile/model.py`) and execute on whichever
+//! [`StepBackend`] the driver holds — PJRT artifacts or the pure-Rust
+//! native backend. Every driver returns the same `SortOutcome` shape so
+//! the benches treat methods uniformly.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::assignment::jv;
+use crate::backend::{StepBackend, StepShape};
 use crate::config::{BaselineConfig, ShuffleSoftSortConfig};
 use crate::data::Dataset;
 use crate::metrics::dpq16;
 use crate::perm::{repair, Permutation};
-use crate::runtime::{Arg, Runtime};
 use crate::util::rng::Pcg32;
 use crate::util::stats::mean_pairwise_distance;
 use crate::util::timer::Stopwatch;
@@ -25,14 +27,14 @@ use super::SortOutcome;
 /// Plain SoftSort: the ShuffleSoftSort driver with the identity shuffle and
 /// ONE long phase over which `w` persists and τ anneals per-step — i.e. the
 /// original 1-D method the paper improves on.
-pub struct SoftSortDriver<'rt> {
-    rt: &'rt Runtime,
+pub struct SoftSortDriver<'b> {
+    backend: &'b dyn StepBackend,
     pub cfg: BaselineConfig,
 }
 
-impl<'rt> SoftSortDriver<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: BaselineConfig) -> Self {
-        SoftSortDriver { rt, cfg }
+impl<'b> SoftSortDriver<'b> {
+    pub fn new(backend: &'b dyn StepBackend, cfg: BaselineConfig) -> Self {
+        SoftSortDriver { backend, cfg }
     }
 
     pub fn sort(&self, data: &Dataset) -> Result<SortOutcome> {
@@ -42,7 +44,7 @@ impl<'rt> SoftSortDriver<'rt> {
         // per phase), so plain SoftSort gets its own loop here.
         let (n, d) = (data.n, data.d);
         anyhow::ensure!(n == g.n());
-        let exe = self.rt.sss_step(n, d, g.h)?;
+        let shape = StepShape::new(g, d);
         let watch = Stopwatch::start();
         let mut rng = Pcg32::new(self.cfg.seed);
         let mut report = RunReport {
@@ -65,18 +67,12 @@ impl<'rt> SoftSortDriver<'rt> {
         for s in 0..self.cfg.steps {
             let tau = self.cfg.tau.phase_tau(s, self.cfg.steps);
             let out = report.sections.time("execute", || {
-                exe.run(&[
-                    Arg::F32(&w),
-                    Arg::F32(&data.rows),
-                    Arg::I32(&identity_inv),
-                    Arg::ScalarF32(tau),
-                    Arg::ScalarF32(norm),
-                ])
+                self.backend.sss_step(shape, &w, &data.rows, &identity_inv, tau, norm)
             })?;
-            adam.step(&mut w, out[1].as_f32());
-            report.record(0, s, tau, out[0].scalar_f32() as f64);
+            adam.step(&mut w, &out.grad);
+            report.record(0, s, tau, out.loss as f64);
             if s + 1 == self.cfg.steps {
-                for (dst, &v) in idx.iter_mut().zip(out[2].as_i32()) {
+                for (dst, &v) in idx.iter_mut().zip(&out.sort_idx) {
                     *dst = v as u32;
                 }
             }
@@ -98,26 +94,22 @@ impl<'rt> SoftSortDriver<'rt> {
 }
 
 /// Gumbel-Sinkhorn: N² logits, Rust-side Gumbel noise (annealed), JV-based
-/// hard extraction from the probe artifact's doubly stochastic matrix.
-pub struct GumbelSinkhornDriver<'rt> {
-    rt: &'rt Runtime,
+/// hard extraction from the probe's doubly stochastic matrix.
+pub struct GumbelSinkhornDriver<'b> {
+    backend: &'b dyn StepBackend,
     pub cfg: BaselineConfig,
 }
 
-impl<'rt> GumbelSinkhornDriver<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: BaselineConfig) -> Self {
-        GumbelSinkhornDriver { rt, cfg }
+impl<'b> GumbelSinkhornDriver<'b> {
+    pub fn new(backend: &'b dyn StepBackend, cfg: BaselineConfig) -> Self {
+        GumbelSinkhornDriver { backend, cfg }
     }
 
     pub fn sort(&self, data: &Dataset) -> Result<SortOutcome> {
         let g = self.cfg.grid;
         let (n, d) = (data.n, data.d);
         anyhow::ensure!(n == g.n());
-        let exe = self
-            .rt
-            .gs_step(n, d, g.h)
-            .context("no gumbel-sinkhorn artifact for this shape")?;
-        let probe = self.rt.gs_probe(n)?;
+        let shape = StepShape::new(g, d);
         let watch = Stopwatch::start();
         let mut rng = Pcg32::new(self.cfg.seed);
         let mut report = RunReport {
@@ -130,6 +122,9 @@ impl<'rt> GumbelSinkhornDriver<'rt> {
             ..Default::default()
         };
         let norm = mean_pairwise_distance(&data.rows, n, d, 20_000, &mut rng);
+        // Fail fast: the final extraction needs the probe; surface a
+        // missing probe artifact before the optimization loop, not after.
+        self.backend.gs_probe_ready(n)?;
 
         let mut logits = vec![0.0f32; n * n];
         // Small random init breaks the uniform-P symmetry.
@@ -149,34 +144,22 @@ impl<'rt> GumbelSinkhornDriver<'rt> {
                 }
             });
             let out = report.sections.time("execute", || {
-                exe.run(&[
-                    Arg::F32(&logits),
-                    Arg::F32(&data.rows),
-                    Arg::F32(&gumbel),
-                    Arg::ScalarF32(tau),
-                    Arg::ScalarF32(norm),
-                ])
+                self.backend.gs_step(shape, &logits, &data.rows, &gumbel, tau, norm)
             })?;
             report.sections.time("adam", || {
-                adam.step(&mut logits, out[1].as_f32());
+                adam.step(&mut logits, &out.grad);
             });
-            report.record(0, s, tau, out[0].scalar_f32() as f64);
+            report.record(0, s, tau, out.loss as f64);
         }
 
         // Final hard extraction: P from the probe (noise-free, sharp τ),
         // then the optimal assignment via Jonker–Volgenant on -P.
-        let zeros = vec![0.0f32; n * n];
         let p = report.sections.time("execute", || {
-            probe.run(&[
-                Arg::F32(&logits),
-                Arg::F32(&zeros),
-                Arg::ScalarF32(self.cfg.tau.tau_end),
-            ])
+            self.backend.gs_probe(n, &logits, self.cfg.tau.tau_end)
         })?;
-        let p = p[0].as_f32();
         let perm = report.sections.time("extract", || {
             let mut cost = vec![0.0f64; n * n];
-            for (c, &v) in cost.iter_mut().zip(p) {
+            for (c, &v) in cost.iter_mut().zip(&p) {
                 *c = -(v as f64);
             }
             let assign = jv::solve(&cost, n); // row -> col (grid pos -> item)
@@ -194,31 +177,24 @@ impl<'rt> GumbelSinkhornDriver<'rt> {
 /// row-argmax (the method's softmax is row-only) — the paper's observation
 /// that it "often fails to produce valid permutation matrices" is exactly
 /// what `valid_without_repair` records.
-pub struct KissingDriver<'rt> {
-    rt: &'rt Runtime,
+pub struct KissingDriver<'b> {
+    backend: &'b dyn StepBackend,
     pub cfg: BaselineConfig,
 }
 
-impl<'rt> KissingDriver<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: BaselineConfig) -> Self {
-        KissingDriver { rt, cfg }
+impl<'b> KissingDriver<'b> {
+    pub fn new(backend: &'b dyn StepBackend, cfg: BaselineConfig) -> Self {
+        KissingDriver { backend, cfg }
     }
 
     pub fn sort(&self, data: &Dataset) -> Result<SortOutcome> {
         let g = self.cfg.grid;
         let (n, d) = (data.n, data.d);
         anyhow::ensure!(n == g.n());
-        // Rank follows the manifest (kissing-number rule, shapes.py).
-        let meta = self
-            .rt
-            .manifest()
-            .artifacts
-            .iter()
-            .find(|a| a.method == "kiss" && a.n == n && a.d == d)
-            .context("no kissing artifact for this shape")?
-            .clone();
-        let m = meta.m;
-        let exe = self.rt.load(&meta.name)?;
+        let shape = StepShape::new(g, d);
+        // Rank from the backend: manifest-driven (pjrt) or the
+        // kissing-number rule (native) — identical values either way.
+        let m = self.backend.kiss_rank(n, d)?;
         let watch = Stopwatch::start();
         let mut rng = Pcg32::new(self.cfg.seed);
         let mut report = RunReport {
@@ -241,21 +217,15 @@ impl<'rt> KissingDriver<'rt> {
         for s in 0..self.cfg.steps {
             let tau = self.cfg.tau.phase_tau(s, self.cfg.steps);
             let out = report.sections.time("execute", || {
-                exe.run(&[
-                    Arg::F32(&v),
-                    Arg::F32(&wf),
-                    Arg::F32(&data.rows),
-                    Arg::ScalarF32(tau),
-                    Arg::ScalarF32(norm),
-                ])
+                self.backend.kiss_step(shape, m, &v, &wf, &data.rows, tau, norm)
             })?;
             report.sections.time("adam", || {
-                adam_v.step(&mut v, out[1].as_f32());
-                adam_w.step(&mut wf, out[2].as_f32());
+                adam_v.step(&mut v, &out.grad_v);
+                adam_w.step(&mut wf, &out.grad_w);
             });
-            report.record(0, s, tau, out[0].scalar_f32() as f64);
+            report.record(0, s, tau, out.loss as f64);
             if s + 1 == self.cfg.steps {
-                for (dst, &x) in idx.iter_mut().zip(out[3].as_i32()) {
+                for (dst, &x) in idx.iter_mut().zip(&out.sort_idx) {
                     *dst = x as u32;
                 }
             }

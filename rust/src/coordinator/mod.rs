@@ -7,13 +7,17 @@
 //!   2. w ← order-preserving linear ramp (descending — see
 //!      `python/tests/test_kernel.py::test_linear_init_conventions`),
 //!   3. shuffle the current arrangement (shuffle::ShuffleStrategy),
-//!   4. I Adam steps on the AOT `sss_step` artifact (L2+L1 via PJRT), with
-//!      the inner τ_i ramp 0.2τ → τ,
+//!   4. I Adam steps on the `sss_step` compute function (L2+L1), executed
+//!      by whichever [`StepBackend`] the driver was built with — the AOT
+//!      PJRT artifact or the pure-Rust native implementation — with the
+//!      inner τ_i ramp 0.2τ → τ,
 //!   5. argmax extraction; if duplicated, extend iterations at sharpened τ
 //!      (paper's rule), finally greedy `perm::repair` (counted),
 //!   6. compose the phase permutation into `perm::Tracker`.
 //!
-//! The original data never moves; the tracker owns the arrangement.
+//! The original data never moves; the tracker owns the arrangement. The
+//! drivers never touch the runtime or artifacts directly — all compute
+//! dispatches through `&dyn StepBackend` (see `crate::backend`).
 
 pub mod baselines;
 pub mod events;
@@ -21,13 +25,13 @@ pub mod optimizer;
 pub mod schedule;
 pub mod shuffle;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+use crate::backend::{StepBackend, StepShape};
 use crate::config::ShuffleSoftSortConfig;
 use crate::data::Dataset;
 use crate::metrics::dpq16;
 use crate::perm::{repair, Permutation, Tracker};
-use crate::runtime::{Arg, Executable, OutValue, Runtime};
 use crate::util::rng::Pcg32;
 use crate::util::stats::mean_pairwise_distance;
 use crate::util::timer::Stopwatch;
@@ -43,15 +47,15 @@ pub struct SortOutcome {
     pub report: RunReport,
 }
 
-/// The ShuffleSoftSort driver bound to a runtime and a config.
-pub struct ShuffleSoftSort<'rt> {
-    rt: &'rt Runtime,
+/// The ShuffleSoftSort driver bound to a compute backend and a config.
+pub struct ShuffleSoftSort<'b> {
+    backend: &'b dyn StepBackend,
     cfg: ShuffleSoftSortConfig,
 }
 
-impl<'rt> ShuffleSoftSort<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: ShuffleSoftSortConfig) -> Result<Self> {
-        Ok(ShuffleSoftSort { rt, cfg })
+impl<'b> ShuffleSoftSort<'b> {
+    pub fn new(backend: &'b dyn StepBackend, cfg: ShuffleSoftSortConfig) -> Result<Self> {
+        Ok(ShuffleSoftSort { backend, cfg })
     }
 
     pub fn config(&self) -> &ShuffleSoftSortConfig {
@@ -61,13 +65,8 @@ impl<'rt> ShuffleSoftSort<'rt> {
     /// Sort `data` onto the configured grid.
     pub fn sort(&self, data: &Dataset) -> Result<SortOutcome> {
         let g = self.cfg.grid;
-        let (n, d) = (data.n, data.d);
-        anyhow::ensure!(n == g.n(), "dataset N={} != grid {}x{}", n, g.h, g.w);
-        let exe = self
-            .rt
-            .sss_step(n, d, g.h)
-            .with_context(|| format!("no sss artifact for N={n} d={d} h={}", g.h))?;
-        run_shuffle_softsort(&exe, data, &self.cfg, "ShuffleSoftSort")
+        anyhow::ensure!(data.n == g.n(), "dataset N={} != grid {}x{}", data.n, g.h, g.w);
+        run_shuffle_softsort(self.backend, data, &self.cfg, "ShuffleSoftSort")
     }
 }
 
@@ -75,13 +74,14 @@ impl<'rt> ShuffleSoftSort<'rt> {
 /// one long phase) plain SoftSort — the paper's point that the methods
 /// differ only in L3 policy.
 pub(crate) fn run_shuffle_softsort(
-    exe: &Executable,
+    backend: &dyn StepBackend,
     data: &Dataset,
     cfg: &ShuffleSoftSortConfig,
     method: &str,
 ) -> Result<SortOutcome> {
     let g = cfg.grid;
     let (n, d) = (data.n, data.d);
+    let shape = StepShape::new(g, d);
     let watch = Stopwatch::start();
     let mut rng = Pcg32::new(cfg.seed);
 
@@ -136,17 +136,11 @@ pub(crate) fn run_shuffle_softsort(
         for i in 0..cfg.inner_iters {
             let tau_i = cfg.tau.inner_tau(tau, i, cfg.inner_iters);
             let out = report.sections.time("execute", || {
-                exe.run(&[
-                    Arg::F32(&w),
-                    Arg::F32(&x_shuf),
-                    Arg::I32(&inv_idx_i32),
-                    Arg::ScalarF32(tau_i),
-                    Arg::ScalarF32(norm),
-                ])
+                backend.sss_step(shape, &w, &x_shuf, &inv_idx_i32, tau_i, norm)
             })?;
-            let loss = out[0].scalar_f32() as f64;
+            let loss = out.loss as f64;
             report.sections.time("adam", || {
-                adam.step(&mut w, out[1].as_f32());
+                adam.step(&mut w, &out.grad);
             });
             if cfg.record_curve {
                 report.record(r, i, tau_i, loss);
@@ -155,16 +149,14 @@ pub(crate) fn run_shuffle_softsort(
                 report.steps += 1;
             }
             if i + 1 == cfg.inner_iters {
-                last_sort_idx = match &out[2] {
-                    OutValue::I32(v) => v.clone(),
-                    _ => unreachable!("sort_idx is i32"),
-                };
+                last_sort_idx = out.sort_idx;
             }
         }
 
         // Hard extraction with the paper's extension rule.
         let sort_perm = extract_valid(
-            exe,
+            backend,
+            shape,
             &w,
             &x_shuf,
             &inv_idx_i32,
@@ -221,7 +213,8 @@ pub(crate) fn run_shuffle_softsort(
 /// Argmax → validity check → extension iterations at sharpened τ → repair.
 #[allow(clippy::too_many_arguments)]
 fn extract_valid(
-    exe: &Executable,
+    backend: &dyn StepBackend,
+    shape: StepShape,
     w: &[f32],
     x_shuf: &[f32],
     inv_idx: &[i32],
@@ -245,16 +238,10 @@ fn extract_valid(
         report.extensions += 1;
         tau_ext *= 0.6;
         let out = report.sections.time("execute", || {
-            exe.run(&[
-                Arg::F32(&w),
-                Arg::F32(x_shuf),
-                Arg::I32(inv_idx),
-                Arg::ScalarF32(tau_ext),
-                Arg::ScalarF32(norm),
-            ])
+            backend.sss_step(shape, &w, x_shuf, inv_idx, tau_ext, norm)
         })?;
-        adam.step(&mut w, out[1].as_f32());
-        idx = to_u32(out[2].as_i32());
+        adam.step(&mut w, &out.grad);
+        idx = to_u32(&out.sort_idx);
         if Permutation::count_duplicates(&idx) == 0 {
             return Ok(Permutation::from_vec(idx).expect("checked"));
         }

@@ -6,27 +6,31 @@
 //!
 //! * **L1** — Pallas fused SoftSort-apply kernel (`python/compile/kernels/`),
 //!   compiled at build time, never touched at run time.
-//! * **L2** — JAX training-step functions per method, AOT-lowered to HLO
-//!   text artifacts (`python/compile/model.py` → `artifacts/*.hlo.txt`).
+//! * **L2** — the per-method training-step functions, available through two
+//!   interchangeable [`backend`] implementations: AOT-lowered HLO artifacts
+//!   executed via PJRT (`python/compile/model.py` → `artifacts/*.hlo.txt`,
+//!   `pjrt` cargo feature), or the pure-Rust `NativeBackend` that needs no
+//!   artifacts at all.
 //! * **L3** — this crate: the optimization coordinator (Algorithm 1), the
 //!   baselines, every substrate (metrics, heuristics, assignment solvers,
 //!   the Self-Organizing-Gaussians pipeline) and the benchmark harness.
 //!
 //! All methods — learned and heuristic — are reached through the unified
 //! [`api`] layer: the [`api::Sorter`] trait, the string-keyed
-//! [`api::MethodRegistry`], and the [`api::Engine`] session that owns the
-//! runtime and batches work across threads.
+//! [`api::MethodRegistry`], and the [`api::Engine`] session that resolves
+//! the compute backend (`auto` prefers artifacts when present, else falls
+//! back to native) and batches work across threads.
 //!
-//! Quick start (after `make artifacts`):
+//! Quick start — works on a bare checkout, no artifacts required:
 //!
 //! ```no_run
 //! use shufflesort::prelude::*;
 //!
-//! let engine = Engine::from_artifacts("artifacts").unwrap();
+//! let engine = Engine::builder("artifacts").build(); // backend: auto
 //! let data = shufflesort::data::random_colors(256, 42);
 //! let g = GridShape::new(16, 16);
 //!
-//! // One call, any method: try "flas" or "som" for runtime-free heuristics.
+//! // One call, any method: try "flas" or "som" for the heuristics.
 //! let out = engine.sort("shuffle-softsort", &data, g, &[]).unwrap();
 //! println!("DPQ16 = {}", out.report.final_dpq);
 //!
@@ -37,13 +41,14 @@
 //! }
 //! ```
 //!
-//! Fine-grained control goes through the config builders and the drivers
-//! directly:
+//! Fine-grained control goes through the config builders, an explicit
+//! backend and the drivers directly:
 //!
 //! ```no_run
+//! use shufflesort::backend::NativeBackend;
 //! use shufflesort::prelude::*;
 //!
-//! let rt = Runtime::from_manifest("artifacts").unwrap();
+//! let backend = NativeBackend::default(); // or backend::PjrtBackend::from_artifacts(..)
 //! let cfg = ShuffleSoftSortConfig::builder()
 //!     .grid(16, 16)
 //!     .phases(2048)
@@ -51,12 +56,13 @@
 //!     .build()
 //!     .unwrap();
 //! let data = shufflesort::data::random_colors(256, 42);
-//! let out = ShuffleSoftSort::new(&rt, cfg).unwrap().sort(&data).unwrap();
+//! let out = ShuffleSoftSort::new(&backend, cfg).unwrap().sort(&data).unwrap();
 //! println!("DPQ16 = {}", out.report.final_dpq);
 //! ```
 
 pub mod api;
 pub mod assignment;
+pub mod backend;
 pub mod bench;
 pub mod cli;
 pub mod config;
@@ -67,17 +73,20 @@ pub mod grid;
 pub mod heuristics;
 pub mod metrics;
 pub mod perm;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sog;
 pub mod util;
 
 /// Convenience re-exports for the common entry points.
 pub mod prelude {
-    pub use crate::api::{Engine, MethodKind, MethodRegistry, Sorter};
+    pub use crate::api::{BackendChoice, Engine, MethodKind, MethodRegistry, Sorter};
+    pub use crate::backend::{NativeBackend, StepBackend};
     pub use crate::config::{BaselineConfig, ShuffleSoftSortConfig};
     pub use crate::coordinator::{ShuffleSoftSort, SortOutcome};
     pub use crate::data::Dataset;
     pub use crate::grid::GridShape;
     pub use crate::metrics::dpq::dpq;
+    #[cfg(feature = "pjrt")]
     pub use crate::runtime::Runtime;
 }

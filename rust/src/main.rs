@@ -4,7 +4,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use shufflesort::api::{Engine, MethodKind};
+use shufflesort::api::{BackendChoice, Engine, MethodKind};
 use shufflesort::cli::{parse_grid, usage, ParsedArgs};
 use shufflesort::coordinator::SortOutcome;
 use shufflesort::data::{self, Dataset};
@@ -45,6 +45,9 @@ fn engine_for(args: &ParsedArgs) -> Result<Engine> {
     if let Some(w) = args.opt("workers") {
         let w: usize = w.parse().map_err(|_| anyhow!("--workers must be an integer"))?;
         builder = builder.workers(w);
+    }
+    if let Some(b) = args.opt("backend") {
+        builder = builder.backend(BackendChoice::parse(b)?);
     }
     Ok(builder.build())
 }
@@ -105,7 +108,7 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
 
     let dataset = make_dataset(seed)?;
     if spec.kind == MethodKind::Learned {
-        println!("platform: {}", engine.runtime()?.platform());
+        println!("backend: {}", engine.backend_desc(&overrides)?);
     }
     let base_nbr = mean_neighbor_distance(&dataset.rows, dataset.d, g);
     let base_dpq = dpq16(&dataset.rows, dataset.d, g);
@@ -199,6 +202,7 @@ fn cmd_sog(args: &ParsedArgs) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_inspect(args: &ParsedArgs) -> Result<()> {
     let dir = artifacts_dir(args);
     let engine = Engine::builder(&dir).build();
@@ -214,4 +218,13 @@ fn cmd_inspect(args: &ParsedArgs) -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_inspect(_args: &ParsedArgs) -> Result<()> {
+    bail!(
+        "`inspect` lists AOT artifacts, but this build has no PJRT support \
+         (compiled without the 'pjrt' feature); learned methods run on the \
+         native backend instead"
+    )
 }

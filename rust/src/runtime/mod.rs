@@ -33,30 +33,119 @@ pub enum Arg<'a> {
     ScalarF32(f32),
 }
 
-/// Output values from an artifact call.
+/// Typed accessor error for artifact outputs: what was asked for vs what
+/// the artifact actually produced, naming the artifact and output index so
+/// a driver bug reads as "which artifact, which output, which type" instead
+/// of a panic backtrace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OutputTypeError {
+    Dtype {
+        artifact: String,
+        index: usize,
+        expected: &'static str,
+        actual: &'static str,
+    },
+    Shape {
+        artifact: String,
+        index: usize,
+        expected_len: usize,
+        actual_len: usize,
+    },
+}
+
+impl std::fmt::Display for OutputTypeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OutputTypeError::Dtype { artifact, index, expected, actual } => write!(
+                f,
+                "artifact '{artifact}': output #{index} is {actual}, expected {expected}"
+            ),
+            OutputTypeError::Shape { artifact, index, expected_len, actual_len } => write!(
+                f,
+                "artifact '{artifact}': output #{index} has {actual_len} elements, \
+                 expected {expected_len}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for OutputTypeError {}
+
+/// Raw payload of one artifact output.
 #[derive(Debug, Clone)]
-pub enum OutValue {
+pub enum OutData {
     F32(Vec<f32>),
     I32(Vec<i32>),
 }
 
+/// One output value from an artifact call, tagged with its provenance
+/// (artifact name + output index) so dtype/shape mismatches produce
+/// [`OutputTypeError`]s naming the artifact instead of panicking.
+#[derive(Debug, Clone)]
+pub struct OutValue {
+    artifact: Rc<str>,
+    index: usize,
+    data: OutData,
+}
+
 impl OutValue {
-    pub fn as_f32(&self) -> &[f32] {
-        match self {
-            OutValue::F32(v) => v,
-            _ => panic!("output is not f32"),
+    pub fn new(artifact: impl Into<Rc<str>>, index: usize, data: OutData) -> Self {
+        OutValue { artifact: artifact.into(), index, data }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self.data {
+            OutData::F32(_) => "f32",
+            OutData::I32(_) => "i32",
         }
     }
 
-    pub fn as_i32(&self) -> &[i32] {
-        match self {
-            OutValue::I32(v) => v,
-            _ => panic!("output is not i32"),
+    pub fn len(&self) -> usize {
+        match &self.data {
+            OutData::F32(v) => v.len(),
+            OutData::I32(v) => v.len(),
         }
     }
 
-    pub fn scalar_f32(&self) -> f32 {
-        self.as_f32()[0]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn dtype_error(&self, expected: &'static str) -> OutputTypeError {
+        OutputTypeError::Dtype {
+            artifact: self.artifact.to_string(),
+            index: self.index,
+            expected,
+            actual: self.dtype(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32], OutputTypeError> {
+        match &self.data {
+            OutData::F32(v) => Ok(v),
+            _ => Err(self.dtype_error("f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32], OutputTypeError> {
+        match &self.data {
+            OutData::I32(v) => Ok(v),
+            _ => Err(self.dtype_error("i32")),
+        }
+    }
+
+    /// The single f32 element of a scalar output (shape-checked).
+    pub fn scalar_f32(&self) -> Result<f32, OutputTypeError> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            return Err(OutputTypeError::Shape {
+                artifact: self.artifact.to_string(),
+                index: self.index,
+                expected_len: 1,
+                actual_len: v.len(),
+            });
+        }
+        Ok(v[0])
     }
 }
 
@@ -138,14 +227,15 @@ fn decompose(result: xla::Literal, meta: &ArtifactMeta) -> Result<Vec<OutValue>>
             parts.len()
         );
     }
+    let artifact: Rc<str> = Rc::from(meta.name.as_str());
     let mut out = Vec::with_capacity(parts.len());
-    for (lit, spec) in parts.into_iter().zip(&meta.outputs) {
-        let v = match spec.dtype.as_str() {
-            "f32" => OutValue::F32(lit.to_vec::<f32>()?),
-            "i32" => OutValue::I32(lit.to_vec::<i32>()?),
+    for (index, (lit, spec)) in parts.into_iter().zip(&meta.outputs).enumerate() {
+        let data = match spec.dtype.as_str() {
+            "f32" => OutData::F32(lit.to_vec::<f32>()?),
+            "i32" => OutData::I32(lit.to_vec::<i32>()?),
             other => bail!("unsupported output dtype {other}"),
         };
-        out.push(v);
+        out.push(OutValue::new(artifact.clone(), index, data));
     }
     Ok(out)
 }
@@ -224,5 +314,43 @@ impl Runtime {
 
     pub fn kiss_step(&self, n: usize, m: usize, d: usize) -> Result<Rc<Executable>> {
         self.load(&format!("kiss_step_n{n}_m{m}_d{d}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn out_value_accessors_return_typed_errors_naming_the_artifact() {
+        let v = OutValue::new("sss_step_n64_d3_h8", 2, OutData::I32(vec![1, 2, 3]));
+        assert_eq!(v.dtype(), "i32");
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.as_i32().unwrap(), &[1, 2, 3]);
+        let err = v.as_f32().unwrap_err();
+        assert_eq!(
+            err,
+            OutputTypeError::Dtype {
+                artifact: "sss_step_n64_d3_h8".into(),
+                index: 2,
+                expected: "f32",
+                actual: "i32",
+            }
+        );
+        let msg = err.to_string();
+        assert!(msg.contains("sss_step_n64_d3_h8"), "{msg}");
+        assert!(msg.contains("output #2"), "{msg}");
+    }
+
+    #[test]
+    fn scalar_accessor_shape_checks() {
+        let ok = OutValue::new("gs_probe_n64", 0, OutData::F32(vec![0.25]));
+        assert_eq!(ok.scalar_f32().unwrap(), 0.25);
+        let bad = OutValue::new("gs_probe_n64", 0, OutData::F32(vec![1.0, 2.0]));
+        let err = bad.scalar_f32().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("gs_probe_n64") && msg.contains("2 elements"), "{msg}");
+        let wrong = OutValue::new("gs_probe_n64", 0, OutData::I32(vec![1]));
+        assert!(wrong.scalar_f32().is_err());
     }
 }

@@ -171,7 +171,6 @@ pub fn random_baseline(
 mod tests {
     use super::*;
     use crate::api::MethodRegistry;
-    use crate::runtime::Runtime;
     use crate::sog::scene::SceneConfig;
 
     #[test]
@@ -185,7 +184,7 @@ mod tests {
         let cfg = CodecConfig::default();
         let shuffled = run_pipeline(&scene, g, SorterKind::Shuffled, &cfg).unwrap();
         let flas = MethodRegistry::new()
-            .build("flas", None::<&Runtime>, &crate::api::overrides(&[("seed", "11")]))
+            .build("flas", None, &crate::api::overrides(&[("seed", "11")]))
             .unwrap();
         let sorted = run_pipeline(&scene, g, SorterKind::Sorter(flas.as_ref()), &cfg).unwrap();
         assert!(

@@ -1,22 +1,19 @@
 //! Integration tests for the unified `api` layer: registry coverage,
-//! override semantics, and `Engine::sort_batch` determinism.
+//! override semantics, backend selection, and `Engine::sort_batch`
+//! determinism.
 //!
-//! Heuristic methods are pure Rust and run unconditionally. Learned
-//! methods need the AOT artifacts (`make artifacts`); those tests skip
-//! gracefully when the manifest is absent so `cargo test` stays meaningful
-//! on a fresh checkout.
+//! Heuristic methods and the native backend are pure Rust and run
+//! unconditionally — including learned-method end-to-end coverage, which
+//! no longer silently skips without artifacts. PJRT-specific tests need
+//! the AOT artifacts (`make artifacts`) and skip gracefully when the
+//! manifest is absent.
 
-use shufflesort::api::{overrides, Engine, MethodKind, MethodRegistry};
+use shufflesort::api::{overrides, BackendChoice, Engine, MethodKind, MethodRegistry};
 use shufflesort::data::random_colors;
 use shufflesort::grid::GridShape;
 use shufflesort::perm::Permutation;
-use shufflesort::runtime::Runtime;
 
 const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-
-fn artifacts_present() -> bool {
-    std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
-}
 
 /// Permutation validity beyond the type invariant: explicit duplicate scan
 /// over the raw indices (what the satellite task asks to verify).
@@ -47,15 +44,13 @@ fn every_heuristic_method_sorts_a_tiny_4x4_dataset() {
 }
 
 #[test]
-fn every_learned_method_sorts_a_small_dataset() {
-    if !artifacts_present() {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
-        return;
-    }
-    let engine = Engine::from_artifacts(ARTIFACTS).unwrap();
-    // 8x8 is the smallest grid with artifacts for all four methods.
-    let g = GridShape::new(8, 8);
-    let ds = random_colors(64, 3);
+fn every_learned_method_sorts_a_small_dataset_on_the_native_backend() {
+    // No artifacts required: an engine pointed at a nonexistent directory
+    // with backend=auto falls back to native and still runs every learned
+    // method end-to-end.
+    let engine = Engine::builder("/definitely/not/artifacts").build();
+    let g = GridShape::new(4, 4);
+    let ds = random_colors(16, 3);
     let budget: &[(&str, &[(&str, &str)])] = &[
         ("shuffle-softsort", &[("phases", "64"), ("record_curve", "false")]),
         ("softsort", &[("steps", "64")]),
@@ -64,10 +59,60 @@ fn every_learned_method_sorts_a_small_dataset() {
     ];
     for &(name, ov) in budget {
         let out = engine.sort(name, &ds, g, &overrides(ov)).unwrap();
-        assert_valid_perm(&out.perm, 64, name);
+        assert_valid_perm(&out.perm, 16, name);
         assert!(out.report.final_dpq.is_finite(), "{name}: dpq");
         assert_eq!(out.perm.apply_rows(&ds.rows, 3), out.arranged, "{name}: arranged");
     }
+}
+
+#[test]
+fn backend_override_pair_and_builder_choice_select_the_backend() {
+    // Explicit native choice on a bogus artifacts dir: must work.
+    let engine = Engine::builder("/definitely/not/artifacts")
+        .backend(BackendChoice::Native)
+        .build();
+    assert_eq!(engine.backend_choice(), BackendChoice::Native);
+    let desc = engine.backend_desc(&[]).unwrap();
+    assert!(desc.contains("native"), "{desc}");
+    let ds = random_colors(16, 4);
+    let out = engine
+        .sort("softsort", &ds, GridShape::new(4, 4), &overrides(&[("steps", "32")]))
+        .unwrap();
+    assert_valid_perm(&out.perm, 16, "softsort/native");
+
+    // The `backend=...` override pair wins over the session default and is
+    // peeled before config validation (it is not a config key).
+    let auto_engine = Engine::builder("/definitely/not/artifacts").build();
+    let out = auto_engine
+        .sort(
+            "softsort",
+            &ds,
+            GridShape::new(4, 4),
+            &overrides(&[("backend", "native"), ("steps", "32")]),
+        )
+        .unwrap();
+    assert_valid_perm(&out.perm, 16, "softsort/backend=native");
+
+    // Bad backend names error helpfully.
+    let err = auto_engine
+        .sort("softsort", &ds, GridShape::new(4, 4), &overrides(&[("backend", "gpu")]))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("unknown backend"), "{err:#}");
+}
+
+#[test]
+fn underscore_method_spelling_resolves() {
+    let engine = Engine::builder("/definitely/not/artifacts").build();
+    let ds = random_colors(16, 5);
+    let out = engine
+        .sort(
+            "shuffle_softsort",
+            &ds,
+            GridShape::new(4, 4),
+            &overrides(&[("phases", "32"), ("record_curve", "false")]),
+        )
+        .unwrap();
+    assert_eq!(out.report.method, "ShuffleSoftSort");
 }
 
 #[test]
@@ -90,12 +135,12 @@ fn registry_overrides_are_last_wins_like_the_cli() {
     // flas epochs=2 then epochs=24: the later pair must win, i.e. equal a
     // run with epochs=24 alone and (generically) differ from epochs=2.
     let last_wins = reg
-        .build("flas", None::<&Runtime>, &overrides(&[("epochs", "2"), ("epochs", "24")]))
+        .build("flas", None, &overrides(&[("epochs", "2"), ("epochs", "24")]))
         .unwrap()
         .sort(&ds, g)
         .unwrap();
     let direct = reg
-        .build("flas", None::<&Runtime>, &overrides(&[("epochs", "24")]))
+        .build("flas", None, &overrides(&[("epochs", "24")]))
         .unwrap()
         .sort(&ds, g)
         .unwrap();
@@ -128,18 +173,17 @@ fn sort_batch_heuristic_is_bit_identical_to_sequential() {
 }
 
 #[test]
-fn sort_batch_learned_is_bit_identical_to_sequential() {
-    if !artifacts_present() {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
-        return;
-    }
-    let engine = Engine::builder(ARTIFACTS).workers(4).build();
-    let g = GridShape::new(8, 8);
-    let datasets: Vec<_> = (0..4).map(|s| random_colors(64, 200 + s)).collect();
-    let ov = overrides(&[("phases", "96"), ("record_curve", "false")]);
+fn sort_batch_native_shares_one_backend_and_is_bit_identical_to_sequential() {
+    // The acceptance criterion: 4 workers on the native backend (one
+    // shared Send+Sync instance) must be bit-identical to sequential runs.
+    // Runs without any artifacts.
+    let engine = Engine::builder("/definitely/not/artifacts").workers(4).build();
+    let g = GridShape::new(4, 4);
+    let datasets: Vec<_> = (0..6).map(|s| random_colors(16, 300 + s)).collect();
+    let ov = overrides(&[("phases", "48"), ("record_curve", "false")]);
 
     let batched = engine.sort_batch("shuffle-softsort", &datasets, g, &ov);
-    assert_eq!(batched.len(), 4);
+    assert_eq!(batched.len(), 6);
     for (i, result) in batched.into_iter().enumerate() {
         let batched = result.unwrap();
         let sequential = engine.sort("shuffle-softsort", &datasets[i], g, &ov).unwrap();
@@ -149,14 +193,19 @@ fn sort_batch_learned_is_bit_identical_to_sequential() {
             sequential.report.final_dpq.to_bits(),
             "item {i}: final_dpq must be bit-identical under batching"
         );
+        assert_eq!(batched.arranged, sequential.arranged, "item {i}");
     }
 }
 
 #[test]
-fn sort_batch_reports_per_item_errors_for_learned_without_artifacts() {
-    // A learned method with a bogus artifacts dir must fail per item (not
-    // panic), keeping positional alignment.
-    let engine = Engine::builder("/definitely/not/artifacts").workers(2).build();
+fn sort_batch_reports_per_item_errors_for_pjrt_without_artifacts() {
+    // A learned method pinned to the pjrt backend with a bogus artifacts
+    // dir must fail per item (not panic), keeping positional alignment —
+    // and without the pjrt feature it must error that pjrt is unavailable.
+    let engine = Engine::builder("/definitely/not/artifacts")
+        .backend(BackendChoice::Pjrt)
+        .workers(2)
+        .build();
     let g = GridShape::new(4, 4);
     let datasets: Vec<_> = (0..3).map(|s| random_colors(16, s)).collect();
     let results = engine.sort_batch("shuffle-softsort", &datasets, g, &[]);
@@ -167,17 +216,97 @@ fn sort_batch_reports_per_item_errors_for_learned_without_artifacts() {
     // ... while heuristics on the same engine still succeed.
     let results = engine.sort_batch("som", &datasets, g, &[]);
     assert!(results.iter().all(|r| r.is_ok()));
+    // ... and a per-call backend=native override rescues the learned path.
+    let results = engine.sort_batch(
+        "shuffle-softsort",
+        &datasets,
+        g,
+        &overrides(&[("backend", "native"), ("phases", "16"), ("record_curve", "false")]),
+    );
+    assert!(results.iter().all(|r| r.is_ok()));
 }
 
-#[test]
-fn engine_step_cache_memoizes_per_shape() {
-    if !artifacts_present() {
-        eprintln!("skipping: no artifacts (run `make artifacts`)");
-        return;
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+
+    fn artifacts_present() -> bool {
+        std::path::Path::new(ARTIFACTS).join("manifest.json").exists()
     }
-    let engine = Engine::from_artifacts(ARTIFACTS).unwrap();
-    let a = engine.sss_step(64, 3, 8).unwrap();
-    let b = engine.sss_step(64, 3, 8).unwrap();
-    assert!(std::rc::Rc::ptr_eq(&a, &b), "second lookup must hit the (n,d,h) cache");
-    assert!(engine.sss_step(9999, 3, 8).is_err());
+
+    #[test]
+    fn every_learned_method_sorts_a_small_dataset() {
+        if !artifacts_present() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let engine = Engine::from_artifacts(ARTIFACTS).unwrap();
+        // 8x8 is the smallest grid with artifacts for all four methods.
+        let g = GridShape::new(8, 8);
+        let ds = random_colors(64, 3);
+        let budget: &[(&str, &[(&str, &str)])] = &[
+            ("shuffle-softsort", &[("phases", "64"), ("record_curve", "false")]),
+            ("softsort", &[("steps", "64")]),
+            ("gumbel-sinkhorn", &[("steps", "64")]),
+            ("kissing", &[("steps", "64")]),
+        ];
+        for &(name, ov) in budget {
+            let out = engine.sort(name, &ds, g, &overrides(ov)).unwrap();
+            assert_valid_perm(&out.perm, 64, name);
+            assert!(out.report.final_dpq.is_finite(), "{name}: dpq");
+            assert_eq!(out.perm.apply_rows(&ds.rows, 3), out.arranged, "{name}: arranged");
+        }
+    }
+
+    #[test]
+    fn auto_choice_prefers_artifacts_when_present() {
+        if !artifacts_present() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let engine = Engine::builder(ARTIFACTS).build();
+        let desc = engine.backend_desc(&[]).unwrap();
+        assert!(desc.contains("pjrt"), "auto with artifacts must pick pjrt: {desc}");
+        // An explicit override still forces native.
+        let desc = engine.backend_desc(&overrides(&[("backend", "native")])).unwrap();
+        assert!(desc.contains("native"), "{desc}");
+    }
+
+    #[test]
+    fn sort_batch_learned_is_bit_identical_to_sequential() {
+        if !artifacts_present() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let engine = Engine::builder(ARTIFACTS).workers(4).build();
+        let g = GridShape::new(8, 8);
+        let datasets: Vec<_> = (0..4).map(|s| random_colors(64, 200 + s)).collect();
+        let ov = overrides(&[("phases", "96"), ("record_curve", "false")]);
+
+        let batched = engine.sort_batch("shuffle-softsort", &datasets, g, &ov);
+        assert_eq!(batched.len(), 4);
+        for (i, result) in batched.into_iter().enumerate() {
+            let batched = result.unwrap();
+            let sequential = engine.sort("shuffle-softsort", &datasets[i], g, &ov).unwrap();
+            assert_eq!(batched.perm, sequential.perm, "item {i}");
+            assert_eq!(
+                batched.report.final_dpq.to_bits(),
+                sequential.report.final_dpq.to_bits(),
+                "item {i}: final_dpq must be bit-identical under batching"
+            );
+        }
+    }
+
+    #[test]
+    fn engine_step_cache_memoizes_per_shape() {
+        if !artifacts_present() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let engine = Engine::from_artifacts(ARTIFACTS).unwrap();
+        let a = engine.sss_step(64, 3, 8).unwrap();
+        let b = engine.sss_step(64, 3, 8).unwrap();
+        assert!(std::rc::Rc::ptr_eq(&a, &b), "second lookup must hit the (n,d,h) cache");
+        assert!(engine.sss_step(9999, 3, 8).is_err());
+    }
 }
