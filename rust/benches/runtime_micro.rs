@@ -11,7 +11,7 @@
 mod common;
 
 use shufflesort::assignment::jv;
-use shufflesort::backend::{NativeBackend, StepBackend, StepShape};
+use shufflesort::backend::{NativeBackend, SssStep, StepBackend, StepSession, StepShape};
 use shufflesort::bench::{banner, bench, quick_mode, write_json_report, Sample};
 use shufflesort::data::random_colors;
 use shufflesort::grid::GridShape;
@@ -26,6 +26,11 @@ fn main() {
     let mut samples: Vec<Sample> = Vec::new();
 
     // ---- native vs pjrt: one full sss step on the same (n, d, h) grid ----
+    // Two native rows per size: "session reuse" is the driver hot path
+    // (one session per run: warm scratch + persistent pool, zero per-step
+    // allocations); "fresh session" pays buffer allocation and pool spawn
+    // on every step — the per-step overhead of the pre-session
+    // scoped-thread code path.
     let native = NativeBackend::default();
     #[cfg(feature = "pjrt")]
     let pjrt = common::try_pjrt();
@@ -36,11 +41,34 @@ fn main() {
         let inv: Vec<i32> = (0..n as i32).collect();
         let shape = StepShape::new(GridShape::new(h, n / h), d);
 
-        let s = bench(&format!("native sss_step n={n} d={d} h={h}"), 2, reps, || {
-            native.sss_step(shape, &w, &ds.rows, &inv, 0.3, 0.5).unwrap()
-        });
-        println!("{}", s.line());
-        samples.push(s);
+        let mut session = native.session(shape, None).unwrap();
+        let mut step = SssStep::new_for(shape);
+        let reuse = bench(
+            &format!("native sss_step n={n} d={d} h={h} (session reuse)"),
+            2,
+            reps,
+            || {
+                session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
+                step.loss
+            },
+        );
+        println!("{}", reuse.line());
+
+        let fresh = bench(
+            &format!("native sss_step n={n} d={d} h={h} (fresh session)"),
+            2,
+            reps,
+            || native.sss_step(shape, &w, &ds.rows, &inv, 0.3, 0.5).unwrap().loss,
+        );
+        println!("{}", fresh.line());
+        println!(
+            "    session speedup at n={n}: {:.2}x (fresh {:.3} ms vs reuse {:.3} ms per step)",
+            fresh.mean_s / reuse.mean_s.max(1e-12),
+            fresh.mean_s * 1e3,
+            reuse.mean_s * 1e3
+        );
+        samples.push(reuse);
+        samples.push(fresh);
 
         #[cfg(feature = "pjrt")]
         if let Some(backend) = pjrt.as_ref() {
@@ -50,6 +78,26 @@ fn main() {
             println!("{}", s.line());
             samples.push(s);
         }
+    }
+
+    // ---- Engine (n, d, h) session memoization (native, artifact-free) ----
+    {
+        let engine = shufflesort::api::Engine::builder("artifacts")
+            .backend(shufflesort::api::BackendChoice::Native)
+            .build();
+        let n = 1024usize;
+        let ds = random_colors(n, 1);
+        let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let inv: Vec<i32> = (0..n as i32).collect();
+        let shape = StepShape::new(GridShape::new(32, 32), 3);
+        let mut sess = engine.step_session(n, 3, 32).unwrap();
+        let mut step = SssStep::new_for(shape);
+        let s = bench("engine.step_session sss n=1024 (memoized)", 2, reps, || {
+            sess.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
+            step.loss
+        });
+        println!("{}", s.line());
+        samples.push(s);
     }
 
     // ---- PJRT infrastructure costs (artifact compile, caches) -----------

@@ -1,82 +1,140 @@
 //! E7 — the scalability claim (§I, §V): parameters and per-step cost vs N.
 //! Gumbel-Sinkhorn's O(N²) memory is the paper's motivating bottleneck;
-//! ShuffleSoftSort stays O(N). Per-step wall time is measured on the live
-//! artifacts (a few steps each; no full optimization runs).
+//! ShuffleSoftSort stays O(N).
+//!
+//! Runs on a bare checkout: the native backend measures every size through
+//! the session hot path (one `StepSession` reused across steps) and, for
+//! contrast, the fresh-session-per-step cost — the per-step overhead of
+//! the pre-session scoped-thread path. PJRT rows are appended when the
+//! AOT artifacts are present. All samples land in the machine-readable
+//! report `target/bench_reports/scaling.json` next to `runtime_micro`'s.
 
 mod common;
 
-use shufflesort::bench::{banner, bench, quick_mode, Table};
+use shufflesort::backend::{GsStep, NativeBackend, SssStep, StepBackend, StepSession, StepShape};
+use shufflesort::bench::{banner, bench, quick_mode, write_json_report, Sample, Table};
 use shufflesort::data::random_colors;
-use shufflesort::runtime::Arg;
+use shufflesort::grid::GridShape;
 use shufflesort::util::rng::Pcg32;
+
+const REPORT_PATH: &str = "target/bench_reports/scaling.json";
 
 fn main() {
     banner("E7/scaling", "params + per-step time vs N (O(N) vs O(N^2))");
-    let rt = common::runtime();
-    let mut table = Table::new(&[
-        "N", "sss params", "gs params", "kiss params", "sss ms/step", "gs ms/step",
-    ]);
     let reps = if quick_mode() { 5 } else { 20 };
+    // GS is O(N²) memory *and* compute; cap the measured sizes so quick
+    // mode stays quick (the table still reports its parameter scaling).
+    let gs_max_n = if quick_mode() { 256 } else { 1024 };
+    let native = NativeBackend::default();
+    let mut samples: Vec<Sample> = Vec::new();
+    let mut table = Table::new(&[
+        "N",
+        "sss params",
+        "gs params",
+        "kiss params",
+        "sss ms/step (session)",
+        "sss ms/step (fresh)",
+        "gs ms/step (session)",
+    ]);
 
     for (n, side) in [(64usize, 8usize), (256, 16), (1024, 32), (4096, 64)] {
         let ds = random_colors(n, 1);
         let mut rng = Pcg32::new(2);
-
-        // ShuffleSoftSort step.
-        let exe = rt.sss_step(n, 3, side).unwrap();
+        let shape = StepShape::new(GridShape::new(side, n / side), 3);
         let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
         let inv: Vec<i32> = (0..n as i32).collect();
-        let s = bench(&format!("sss n{n}"), 2, reps, || {
-            exe.run(&[
-                Arg::F32(&w),
-                Arg::F32(&ds.rows),
-                Arg::I32(&inv),
-                Arg::ScalarF32(0.3),
-                Arg::ScalarF32(0.5),
-            ])
-            .unwrap()
-        });
+        let r = if n >= 4096 { reps.min(3) } else { reps };
 
-        // Gumbel-Sinkhorn step (artifact exists only for N ≤ 1024).
-        let gs_ms = if n <= 1024 {
-            let gexe = rt.gs_step(n, 3, side).unwrap();
+        // ShuffleSoftSort step: steady-state session path vs fresh session
+        // per step (≈ the legacy scoped-thread per-step overhead).
+        let mut session = native.session(shape, None).unwrap();
+        let mut step = SssStep::new_for(shape);
+        let sess = bench(&format!("native sss n{n} (session reuse)"), 1, r, || {
+            session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
+            step.loss
+        });
+        println!("{}", sess.line());
+        let fresh = bench(&format!("native sss n{n} (fresh session)"), 1, r, || {
+            native.sss_step(shape, &w, &ds.rows, &inv, 0.3, 0.5).unwrap().loss
+        });
+        println!("{}", fresh.line());
+
+        // Gumbel-Sinkhorn step (bounded: O(N²) params and compute).
+        let gs_ms = if n <= gs_max_n {
             let logits: Vec<f32> = (0..n * n).map(|_| rng.gaussian() * 0.01).collect();
             let gumbel = vec![0.0f32; n * n];
-            let gs = bench(&format!("gs n{n}"), 1, reps.min(5), || {
-                gexe.run(&[
-                    Arg::F32(&logits),
-                    Arg::F32(&ds.rows),
-                    Arg::F32(&gumbel),
-                    Arg::ScalarF32(0.3),
-                    Arg::ScalarF32(0.5),
-                ])
-                .unwrap()
+            let mut gout = GsStep::new_for(n);
+            let gs = bench(&format!("native gs n{n} (session reuse)"), 1, r.min(5), || {
+                session.gs_step(&logits, &ds.rows, &gumbel, 0.3, 0.5, &mut gout).unwrap();
+                gout.loss
             });
-            format!("{:.2}", gs.mean_s * 1e3)
+            println!("{}", gs.line());
+            let ms = format!("{:.2}", gs.mean_s * 1e3);
+            samples.push(gs);
+            ms
         } else {
-            "OOM-scale (not shipped)".to_string()
+            "O(N^2)-scale (skipped)".to_string()
         };
 
-        let kiss_params = rt
-            .manifest()
-            .artifacts
-            .iter()
-            .find(|a| a.method == "kiss" && a.n == n)
-            .map(|a| a.param_count.to_string())
-            .unwrap_or_else(|| "-".into());
+        let kiss_params = native
+            .kiss_rank(n, 3)
+            .map(|m| (2 * n * m).to_string())
+            .unwrap_or_else(|_| "-".into());
 
         table.row(&[
             n.to_string(),
             n.to_string(),
-            if n <= 1024 { (n * n).to_string() } else { format!("{} (4 GiB f32 grads)", n * n) },
+            if n <= 1024 {
+                (n * n).to_string()
+            } else {
+                format!("{} (4 GiB f32 grads)", n * n)
+            },
             kiss_params,
-            format!("{:.2}", s.mean_s * 1e3),
+            format!("{:.2}", sess.mean_s * 1e3),
+            format!("{:.2}", fresh.mean_s * 1e3),
             gs_ms,
         ]);
+        samples.push(sess);
+        samples.push(fresh);
     }
     table.print();
+
+    // PJRT comparison rows when the AOT artifacts are around.
+    #[cfg(feature = "pjrt")]
+    if let Some(backend) = common::try_pjrt() {
+        for (n, side) in [(64usize, 8usize), (256, 16), (1024, 32), (4096, 64)] {
+            let ds = random_colors(n, 1);
+            let shape = StepShape::new(GridShape::new(side, n / side), 3);
+            let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+            let inv: Vec<i32> = (0..n as i32).collect();
+            let mut session = match backend.session(shape, None) {
+                Ok(s) => s,
+                Err(e) => {
+                    println!("pjrt n{n}: {e:#}");
+                    continue;
+                }
+            };
+            let mut step = SssStep::new_for(shape);
+            if session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).is_err() {
+                println!("pjrt n{n}: no sss artifact, skipped");
+                continue;
+            }
+            let s = bench(&format!("pjrt sss n{n} (session reuse)"), 1, reps, || {
+                session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
+                step.loss
+            });
+            println!("{}", s.line());
+            samples.push(s);
+        }
+    }
+
+    match write_json_report(REPORT_PATH, "scaling", &samples) {
+        Ok(()) => println!("\nwrote {REPORT_PATH}"),
+        Err(e) => eprintln!("\ncould not write {REPORT_PATH}: {e}"),
+    }
     println!(
         "\nexpected shape: sss params linear, gs quadratic (1024² = 1048576 matches the\n\
-         paper's Table 2 memory entry); gs per-step cost grows ~N² while sss stays near-linear."
+         paper's Table 2 memory entry); gs per-step cost grows ~N² while sss stays\n\
+         near-linear, and session reuse beats fresh-session-per-step at every N."
     );
 }

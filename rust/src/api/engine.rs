@@ -10,7 +10,11 @@
 //! method). `auto` prefers the AOT artifacts when `manifest.json` is
 //! present and the crate was built with the `pjrt` feature, and falls back
 //! to the pure-Rust [`NativeBackend`] otherwise — a bare checkout with no
-//! artifacts can run every learned method.
+//! artifacts can run every learned method. Session worker-pool sizing is
+//! analogous: `EngineBuilder::threads` / `--threads` sets a default that
+//! per-call `threads=` config pairs override; and
+//! [`Engine::step_session`] memoizes `(n, d, h)` step sessions next to
+//! the executable cache for callers driving raw steps.
 //!
 //! Determinism: every sort is a pure function of (method, overrides,
 //! dataset, grid) — batched results are bit-identical to sequential ones.
@@ -19,20 +23,17 @@
 //! builds its own runtime (the compile cache is `Rc`/`RefCell`). Enforced
 //! by `rust/tests/api.rs`.
 
-use std::cell::OnceCell;
-#[cfg(feature = "pjrt")]
-use std::cell::RefCell;
-#[cfg(feature = "pjrt")]
+use std::cell::{OnceCell, RefCell, RefMut};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 #[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
-use crate::backend::{BackendChoice, NativeBackend, StepBackend};
+use crate::backend::{BackendChoice, NativeBackend, StepBackend, StepSession, StepShape};
 #[cfg(feature = "pjrt")]
 use crate::backend::PjrtBackend;
 use crate::coordinator::SortOutcome;
@@ -52,8 +53,30 @@ enum Resolved {
     Pjrt,
 }
 
+/// A memoized step session, kept per backend kind so the native-only
+/// build stores `dyn StepSession + Send` boxes — keeping `Engine: Send`
+/// on `--no-default-features` exactly as before this cache existed (the
+/// pjrt variant is `!Send` anyway via its `Rc` caches).
+enum CachedSession {
+    Native(Box<dyn StepSession + Send>),
+    #[cfg(feature = "pjrt")]
+    Pjrt(Box<dyn StepSession>),
+}
+
+impl CachedSession {
+    fn as_step_session(&mut self) -> &mut dyn StepSession {
+        match self {
+            CachedSession::Native(s) => s.as_mut(),
+            #[cfg(feature = "pjrt")]
+            CachedSession::Pjrt(s) => s.as_mut(),
+        }
+    }
+}
+
 /// Split the `backend=...` pair (if any) off an override list. Last one
-/// wins, mirroring the config builders' override semantics.
+/// wins, mirroring the config builders' override semantics. The remaining
+/// pairs (including any `threads=`, which IS a config key) pass through to
+/// the config builders untouched.
 fn split_backend_override(
     default: BackendChoice,
     overrides: &[(String, String)],
@@ -89,6 +112,16 @@ pub struct Engine {
     /// through the backend instead.
     #[cfg(feature = "pjrt")]
     step_cache: RefCell<HashMap<(usize, usize, usize), Rc<Executable>>>,
+    /// `(n, d, h)` → live step session on the session's default backend,
+    /// memoized alongside the executable cache for callers that drive
+    /// steps directly (serving experiments, micro-benches): repeated calls
+    /// hit warm scratch buffers and, natively, a warm worker pool.
+    sessions: RefCell<HashMap<(usize, usize, usize), CachedSession>>,
+    /// Default session pool size for learned methods (`--threads`). For
+    /// single sorts it is injected as a leading `threads=` override (so
+    /// per-call pairs win); for `sort_batch` it is the *total* row-thread
+    /// budget divided across workers.
+    threads: Option<usize>,
     workers: usize,
 }
 
@@ -106,6 +139,7 @@ impl Engine {
         EngineBuilder {
             artifacts_dir: dir.as_ref().to_path_buf(),
             backend: None,
+            threads: None,
             workers: None,
         }
     }
@@ -161,6 +195,58 @@ impl Engine {
         let exe = self.runtime()?.sss_step(n, d, h)?;
         self.step_cache.borrow_mut().insert((n, d, h), exe.clone());
         Ok(exe)
+    }
+
+    /// Memoized per-`(n, d, h)` step session on the session's default
+    /// backend choice. The returned guard holds the cache borrow: one
+    /// live session borrow at a time (sessions are single-consumer).
+    ///
+    /// This is the serving-style entry point: `sort`/`sort_batch` open
+    /// their own per-run sessions internally; use this when driving raw
+    /// steps in a loop (micro-benches, step servers) so repeated calls on
+    /// one shape reuse scratch and the native worker pool.
+    pub fn step_session(
+        &self,
+        n: usize,
+        d: usize,
+        h: usize,
+    ) -> Result<RefMut<'_, dyn StepSession>> {
+        let key = (n, d, h);
+        if !self.sessions.borrow().contains_key(&key) {
+            ensure!(h > 0 && n % h == 0, "grid height {h} does not divide N={n}");
+            let shape = StepShape { n, d, h, w: n / h };
+            let session = match self.resolve_choice(self.choice)? {
+                Resolved::Native => CachedSession::Native(
+                    self.native_backend().session_send(shape, self.threads)?,
+                ),
+                #[cfg(feature = "pjrt")]
+                Resolved::Pjrt => CachedSession::Pjrt(
+                    self.pjrt_backend()?.session(shape, self.threads)?,
+                ),
+            };
+            self.sessions.borrow_mut().insert(key, session);
+        }
+        Ok(RefMut::map(self.sessions.borrow_mut(), |m| {
+            m.get_mut(&key).expect("inserted above").as_step_session()
+        }))
+    }
+
+    /// Prepend the engine-level `--threads` default for learned methods
+    /// (explicit `threads=` override pairs still win: last-wins).
+    fn with_default_threads(
+        &self,
+        kind: MethodKind,
+        rest: Vec<(String, String)>,
+    ) -> Vec<(String, String)> {
+        match self.threads {
+            Some(t) if kind == MethodKind::Learned => {
+                let mut out = Vec::with_capacity(rest.len() + 1);
+                out.push(("threads".to_string(), t.to_string()));
+                out.extend(rest);
+                out
+            }
+            _ => rest,
+        }
     }
 
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
@@ -224,6 +310,7 @@ impl Engine {
     ) -> Result<Box<dyn Sorter + '_>> {
         let spec = self.registry.resolve_or_err(method)?;
         let (choice, rest) = split_backend_override(self.choice, overrides)?;
+        let rest = self.with_default_threads(spec.kind, rest);
         let backend: Option<&dyn StepBackend> = match spec.kind {
             MethodKind::Learned => Some(self.backend_for(choice)?),
             MethodKind::Heuristic => None,
@@ -245,8 +332,10 @@ impl Engine {
     /// Sort many datasets with the named method, across up to
     /// `self.workers()` threads. Results are positionally aligned with the
     /// input and bit-identical to sequential `sort` calls: per-item state
-    /// is never shared, and the backends are either thread-count-invariant
-    /// (native — one shared instance) or per-worker (PJRT runtimes).
+    /// is never shared — every run opens its own `StepSession` over the
+    /// shared backend (native: one `Send + Sync` instance, per-worker
+    /// sessions with pool-size-invariant reductions; PJRT: one runtime
+    /// per worker).
     pub fn sort_batch(
         &self,
         method: &str,
@@ -286,6 +375,10 @@ impl Engine {
             Ok(spec) => spec,
             Err(e) => return all_err(e),
         };
+        // NOTE: the engine-level threads default is deliberately NOT
+        // injected here — in a batch it acts as the *total* row-thread
+        // budget divided across workers (below), not a per-run pool size;
+        // an explicit per-call `threads=` pair still overrides the cap.
         let (choice, rest) = match split_backend_override(self.choice, overrides) {
             Ok(split) => split,
             Err(e) => return all_err(e),
@@ -299,7 +392,8 @@ impl Engine {
             MethodKind::Heuristic => BatchBackend::Heuristic,
             MethodKind::Learned => match self.resolve_choice(choice) {
                 Ok(Resolved::Native) => {
-                    let total = self.native_backend().threads();
+                    let total =
+                        self.threads.unwrap_or_else(|| self.native_backend().threads());
                     capped_native = NativeBackend::new((total / workers).max(1));
                     BatchBackend::Native(&capped_native)
                 }
@@ -373,6 +467,7 @@ impl Engine {
 pub struct EngineBuilder {
     artifacts_dir: PathBuf,
     backend: Option<BackendChoice>,
+    threads: Option<usize>,
     workers: Option<usize>,
 }
 
@@ -380,6 +475,15 @@ impl EngineBuilder {
     /// Default backend choice for the session (default: `auto`).
     pub fn backend(mut self, choice: BackendChoice) -> Self {
         self.backend = Some(choice);
+        self
+    }
+
+    /// Default step-session worker-pool size for learned methods (the
+    /// `--threads` CLI flag; 0 keeps the backend default). Per-call
+    /// `threads=` override pairs still win; in `sort_batch` the value is
+    /// the total row-thread budget divided across batch workers.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = crate::config::normalize_threads(threads);
         self
     }
 
@@ -403,6 +507,8 @@ impl EngineBuilder {
             pjrt: OnceCell::new(),
             #[cfg(feature = "pjrt")]
             step_cache: RefCell::new(HashMap::new()),
+            sessions: RefCell::new(HashMap::new()),
+            threads: self.threads,
             workers,
         }
     }

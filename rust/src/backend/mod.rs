@@ -13,26 +13,47 @@
 //!
 //! This module breaks that coupling:
 //!
-//! * [`StepBackend`] — the trait: one method per artifact family
-//!   (`sss_step`, `gs_step`, `gs_probe`, `kiss_step`), mirroring the
-//!   artifact signatures exactly, so drivers are backend-agnostic.
+//! * [`StepBackend`] — the trait: opens a [`StepSession`] per problem
+//!   shape, plus shape queries (`kiss_rank`) and stateless one-shot
+//!   conveniences (`sss_step`, `gs_step`, `gs_probe`, `kiss_step`) that
+//!   wrap a throwaway session, so drivers and old callers stay
+//!   backend-agnostic.
+//! * [`StepSession`] — the per-run hot path. The paper's whole point is
+//!   that ShuffleSoftSort runs *many cheap steps* (Algorithm 1: R phases ×
+//!   I inner iterations), so per-step overhead is the scaling bottleneck.
+//!   A session owns (a) every per-shape scratch buffer — softmax rows,
+//!   gradient chunk partials, column sums, the Sinkhorn state stack —
+//!   allocated once and reused across steps, and (b) on the native
+//!   backend, a persistent worker pool of parked threads replacing the
+//!   old per-step `thread::scope`. Steps write their results into
+//!   caller-owned [`SssStep`]/[`GsStep`]/[`KissStep`] buffers, so the
+//!   steady-state step loop performs **zero heap allocations**. Sessions
+//!   are `'static` (no borrow of the backend) but deliberately `!Send`-ish
+//!   stateful: one session serves one driver loop; concurrent runs open
+//!   one session each (see `Engine::sort_batch`).
 //! * [`NativeBackend`] — the full step in pure Rust: row-softmax of the
 //!   N×N SoftSort matrix, the eq. (2) loss, and a hand-derived backward
 //!   pass, chunk-parallel over rows with a deterministic reduction order
-//!   (results are bit-identical for any thread count). `Send + Sync`, so
-//!   batch workers share one instance. Zero native dependencies: every
-//!   learned method runs on a bare machine with no `artifacts/` directory.
+//!   (results are bit-identical for any pool size — partials are
+//!   accumulated per fixed-size chunk and folded in chunk-index order, so
+//!   the f32 rounding sequence never depends on the thread count).
+//!   `Send + Sync`, so batch workers share one instance; each worker's
+//!   session owns its own pool. Zero native dependencies: every learned
+//!   method runs on a bare machine with no `artifacts/` directory.
 //! * [`PjrtBackend`] — the original path: wraps `runtime::Runtime` and
-//!   executes the AOT HLO artifacts. Only compiled with the `pjrt` cargo
-//!   feature (on by default); `--no-default-features` builds a pure-Rust
-//!   crate.
+//!   executes the AOT HLO artifacts; its sessions pin the resolved
+//!   `(n, d, h)` executables so steps skip the name-keyed cache lookup.
+//!   Only compiled with the `pjrt` cargo feature (on by default);
+//!   `--no-default-features` builds a pure-Rust crate.
 //!
 //! Selection is by [`BackendChoice`]: `native`, `pjrt`, or `auto` (prefer
 //! artifacts when the manifest is present, fall back to native). The
 //! `Engine` exposes it as the `--backend` CLI flag and the `backend=...`
-//! override pair; see `api::engine`.
+//! override pair; pool sizing is the `--threads` flag / `threads=` config
+//! override (0 = backend default); see `api::engine`.
 
 pub mod native;
+pub(crate) mod pool;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
@@ -64,7 +85,9 @@ impl StepShape {
 }
 
 /// One SoftSort/ShuffleSoftSort step result (mirrors the `sss_step`
-/// artifact outputs: loss, grad, sort_idx, colsum, y).
+/// artifact outputs: loss, grad, sort_idx, colsum, y). Doubles as the
+/// session out-parameter: allocate once with [`SssStep::new_for`], pass
+/// `&mut` to every [`StepSession::sss_step`] — the buffers are reused.
 #[derive(Clone, Debug)]
 pub struct SssStep {
     pub loss: f32,
@@ -78,11 +101,31 @@ pub struct SssStep {
     pub y: Vec<f32>,
 }
 
+impl SssStep {
+    /// Zeroed output buffers sized for `shape` (one allocation per run).
+    pub fn new_for(shape: StepShape) -> Self {
+        SssStep {
+            loss: 0.0,
+            grad: vec![0.0; shape.n],
+            sort_idx: vec![0; shape.n],
+            colsum: vec![0.0; shape.n],
+            y: vec![0.0; shape.n * shape.d],
+        }
+    }
+}
+
 /// One Gumbel-Sinkhorn step result (loss + dL/dlogits over N² entries).
 #[derive(Clone, Debug)]
 pub struct GsStep {
     pub loss: f32,
     pub grad: Vec<f32>,
+}
+
+impl GsStep {
+    /// Zeroed output buffers for an N-item problem (grad is N²).
+    pub fn new_for(n: usize) -> Self {
+        GsStep { loss: 0.0, grad: vec![0.0; n * n] }
+    }
 }
 
 /// One Kissing step result (loss, the two factor gradients, row argmax).
@@ -94,17 +137,116 @@ pub struct KissStep {
     pub sort_idx: Vec<i32>,
 }
 
+impl KissStep {
+    /// Zeroed output buffers for an (N, M) factor pair.
+    pub fn new_for(n: usize, m: usize) -> Self {
+        KissStep {
+            loss: 0.0,
+            grad_v: vec![0.0; n * m],
+            grad_w: vec![0.0; n * m],
+            sort_idx: vec![0; n],
+        }
+    }
+}
+
+/// A stateful per-shape step executor: the hot path of every learned
+/// method. Obtained from [`StepBackend::session`]; owns all per-shape
+/// scratch (and, natively, a persistent worker pool) so that driving many
+/// steps through one session performs no steady-state heap allocation and
+/// no per-step thread spawn. Results are written into caller-owned out
+/// buffers (resized on first use if needed).
+///
+/// Sessions are single-consumer: `&mut self` methods, one optimization
+/// loop per session. They do not borrow their backend (`'static`), so a
+/// driver can own one outright; concurrent runs each open their own.
+/// Outputs are bit-identical to the stateless [`StepBackend`] entry
+/// points for any pool size.
+pub trait StepSession {
+    /// Name of the backend that opened this session.
+    fn backend_name(&self) -> &'static str;
+
+    /// The problem shape this session's buffers are sized for.
+    fn shape(&self) -> StepShape;
+
+    /// One SoftSort/ShuffleSoftSort step into `out` (see
+    /// [`StepBackend::sss_step`] for the argument contract).
+    fn sss_step(
+        &mut self,
+        w: &[f32],
+        x_shuf: &[f32],
+        inv_idx: &[i32],
+        tau: f32,
+        norm: f32,
+        out: &mut SssStep,
+    ) -> Result<()>;
+
+    /// One Gumbel-Sinkhorn step into `out` (see [`StepBackend::gs_step`]).
+    fn gs_step(
+        &mut self,
+        logits: &[f32],
+        x: &[f32],
+        gumbel: &[f32],
+        tau: f32,
+        norm: f32,
+        out: &mut GsStep,
+    ) -> Result<()>;
+
+    /// Noise-free dense doubly-stochastic P into `out` (resized to N²).
+    fn gs_probe(&mut self, logits: &[f32], tau: f32, out: &mut Vec<f32>) -> Result<()>;
+
+    /// One Kissing step into `out` (see [`StepBackend::kiss_step`]).
+    #[allow(clippy::too_many_arguments)]
+    fn kiss_step(
+        &mut self,
+        m: usize,
+        v: &[f32],
+        wf: &[f32],
+        x: &[f32],
+        tau: f32,
+        norm: f32,
+        out: &mut KissStep,
+    ) -> Result<()>;
+}
+
 /// A compute backend executing the learned methods' per-step functions.
 ///
 /// Implementations mirror `python/compile/model.py` exactly — same inputs,
 /// same outputs, same loss (eq. 2–4) — so the L3 drivers are oblivious to
 /// where the arithmetic runs. The trait is object-safe; drivers hold a
-/// `&dyn StepBackend`.
+/// `&dyn StepBackend` and open one [`StepSession`] per optimization run.
+///
+/// The stateless `*_step` methods are compatibility conveniences: each
+/// call opens a throwaway session, so they pay the full buffer-allocation
+/// (and, natively, pool-spawn) cost per step — fine for one-shot calls and
+/// tests, wrong for loops. Drivers use [`StepBackend::session`].
 pub trait StepBackend {
     /// Human-readable backend name ("native" / "pjrt").
     fn name(&self) -> &'static str;
 
-    /// One SoftSort/ShuffleSoftSort training step.
+    /// Open a step session for `shape`: all per-shape scratch is allocated
+    /// up front (per step family, on first use) and reused across steps.
+    ///
+    /// `threads` sizes the native session's row-parallel worker pool
+    /// (`None` = the backend's configured default; ignored by pjrt).
+    /// Results never depend on the pool size.
+    fn session(&self, shape: StepShape, threads: Option<usize>) -> Result<Box<dyn StepSession>>;
+
+    /// Fail fast if the GS probe would be unavailable for this `n` (e.g. a
+    /// missing probe artifact). Called by the Gumbel-Sinkhorn driver
+    /// *before* its optimization loop so a broken extraction path does not
+    /// waste the whole run. Backends where the probe cannot fail to
+    /// resolve keep this default no-op.
+    fn gs_probe_ready(&self, n: usize) -> Result<()> {
+        let _ = n;
+        Ok(())
+    }
+
+    /// The Kissing low-rank dimension M for an (N, d) problem — from the
+    /// artifact manifest (pjrt) or the kissing-number rule (native).
+    fn kiss_rank(&self, n: usize, d: usize) -> Result<usize>;
+
+    /// One stateless SoftSort/ShuffleSoftSort training step (throwaway
+    /// session; bit-identical to the session path).
     ///
     /// `w`: trainable weights f32[N]; `x_shuf`: shuffled data f32[N·d];
     /// `inv_idx`: inverse shuffle permutation i32[N] (the loss is evaluated
@@ -118,10 +260,16 @@ pub trait StepBackend {
         inv_idx: &[i32],
         tau: f32,
         norm: f32,
-    ) -> Result<SssStep>;
+    ) -> Result<SssStep> {
+        let mut session = self.session(shape, None)?;
+        let mut out = SssStep::new_for(shape);
+        session.sss_step(w, x_shuf, inv_idx, tau, norm, &mut out)?;
+        Ok(out)
+    }
 
-    /// One Gumbel-Sinkhorn training step over N² `logits`; `gumbel` is the
-    /// pre-sampled noise (annealed Rust-side), same length.
+    /// One stateless Gumbel-Sinkhorn training step over N² `logits`;
+    /// `gumbel` is the pre-sampled noise (annealed Rust-side), same
+    /// length. Throwaway session; see [`StepBackend::session`].
     fn gs_step(
         &self,
         shape: StepShape,
@@ -130,26 +278,26 @@ pub trait StepBackend {
         gumbel: &[f32],
         tau: f32,
         norm: f32,
-    ) -> Result<GsStep>;
-
-    /// Noise-free dense doubly-stochastic P for final JV extraction.
-    fn gs_probe(&self, n: usize, logits: &[f32], tau: f32) -> Result<Vec<f32>>;
-
-    /// Fail fast if [`StepBackend::gs_probe`] would be unavailable for this
-    /// `n` (e.g. a missing probe artifact). Called by the Gumbel-Sinkhorn
-    /// driver *before* its optimization loop so a broken extraction path
-    /// does not waste the whole run. Backends where the probe cannot fail
-    /// to resolve keep this default no-op.
-    fn gs_probe_ready(&self, n: usize) -> Result<()> {
-        let _ = n;
-        Ok(())
+    ) -> Result<GsStep> {
+        let mut session = self.session(shape, None)?;
+        let mut out = GsStep::new_for(shape.n);
+        session.gs_step(logits, x, gumbel, tau, norm, &mut out)?;
+        Ok(out)
     }
 
-    /// The Kissing low-rank dimension M for an (N, d) problem — from the
-    /// artifact manifest (pjrt) or the kissing-number rule (native).
-    fn kiss_rank(&self, n: usize, d: usize) -> Result<usize>;
+    /// Noise-free dense doubly-stochastic P for final JV extraction
+    /// (stateless; the probe is once-per-run, not hot).
+    fn gs_probe(&self, n: usize, logits: &[f32], tau: f32) -> Result<Vec<f32>> {
+        // A probe needs no data/grid buffers: a degenerate 1×n shape keeps
+        // the session's lazy per-family workspaces untouched.
+        let mut session = self.session(StepShape { n, d: 0, h: 1, w: n }, None)?;
+        let mut out = Vec::new();
+        session.gs_probe(logits, tau, &mut out)?;
+        Ok(out)
+    }
 
-    /// One Kissing step over the factor pair `v`, `wf` ∈ f32[N·M].
+    /// One stateless Kissing step over the factor pair `v`, `wf` ∈
+    /// f32[N·M]. Throwaway session; see [`StepBackend::session`].
     #[allow(clippy::too_many_arguments)]
     fn kiss_step(
         &self,
@@ -160,7 +308,12 @@ pub trait StepBackend {
         x: &[f32],
         tau: f32,
         norm: f32,
-    ) -> Result<KissStep>;
+    ) -> Result<KissStep> {
+        let mut session = self.session(shape, None)?;
+        let mut out = KissStep::new_for(shape.n, m);
+        session.kiss_step(m, v, wf, x, tau, norm, &mut out)?;
+        Ok(out)
+    }
 }
 
 /// Which backend a session should use.

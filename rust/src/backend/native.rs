@@ -14,23 +14,38 @@
 //! reduces straight into the weight gradient. Working set is O(C·N) for a
 //! fixed row chunk C.
 //!
-//! Parallelism: rows are independent, so both passes fan chunks of
-//! [`ROW_CHUNK`] rows across `std::thread` scoped workers. Reductions
-//! (colsum, dL/dw) are accumulated per chunk and folded **in chunk index
-//! order**, so results are bit-identical for any thread count — the
-//! property `Engine::sort_batch` relies on when batch workers share one
-//! backend. Small problems (N < [`PAR_MIN_N`]) skip thread spawn entirely.
+//! Hot path: all per-shape state lives in a [`NativeSession`] — scratch
+//! rows, per-chunk reduction slabs, the Sinkhorn state stack, and a
+//! persistent [`pool::WorkerPool`] of parked threads. Driving a run
+//! through one session performs **zero steady-state heap allocations**
+//! (buffers are allocated when a step family is first used) and no
+//! per-step thread spawn; the old stateless entry points remain as
+//! throwaway-session wrappers. Row kernels are restructured into separate
+//! stride-1 passes (logits, max-scan, exp, accumulate — with an unrolled
+//! d = 3 fast path) so the compiler can vectorize the inner loops, while
+//! keeping the f32 operation order — and therefore every rounding —
+//! exactly as before.
+//!
+//! Parallelism: rows are independent, so both SoftSort passes fan chunks
+//! of [`ROW_CHUNK`] rows across the session pool. Reductions (colsum,
+//! dL/dw) are accumulated per chunk into preallocated slabs and folded
+//! **in chunk index order**, so results are bit-identical for any pool
+//! size — the property `Engine::sort_batch` relies on when batch workers
+//! share one backend. Small problems (N < [`PAR_MIN_N`]) stay sequential
+//! and never spawn pool threads.
 //!
 //! The Gumbel-Sinkhorn and Kissing baselines are implemented sequentially
-//! (they are comparison points, not the hot path); GS reverse-mode stores
-//! the 2·`SINKHORN_ITERS` intermediate log-matrices, i.e. O(iters·N²)
-//! transient memory — same asymptotics as its N² parameter vector.
+//! (they are comparison points, not the hot path); GS reverse-mode keeps
+//! the 2·`SINKHORN_ITERS` intermediate N² log-matrices in one session slab
+//! that is reused every step — O(iters·N²) once per session instead of
+//! re-allocated per step.
 
 use anyhow::{bail, ensure, Result};
 
 use crate::util::stats::std_f32;
 
-use super::{GsStep, KissStep, SssStep, StepBackend, StepShape};
+use super::pool::WorkerPool;
+use super::{GsStep, KissStep, SssStep, StepBackend, StepSession, StepShape};
 
 /// Loss weights and epsilons — must match `python/compile/losses.py`.
 const LAMBDA_S: f32 = 1.0;
@@ -48,11 +63,13 @@ const KISS_NORM_EPS: f32 = 1e-8;
 /// so the reduction tree — and therefore every f32 rounding — is identical
 /// no matter how many workers run.
 const ROW_CHUNK: usize = 128;
-/// Below this N a step is cheaper than spawning threads; stay sequential.
-const PAR_MIN_N: usize = 512;
+/// Below this N a step is cheaper than coordinating threads; sessions for
+/// smaller shapes stay sequential and never spawn a pool.
+pub const PAR_MIN_N: usize = 512;
 
 /// The pure-Rust step backend. `Send + Sync`: one instance can serve any
-/// number of threads concurrently (all state is per-call).
+/// number of threads concurrently (all mutable state lives in the
+/// per-caller [`NativeSession`]s it opens).
 #[derive(Clone, Debug)]
 pub struct NativeBackend {
     threads: usize,
@@ -67,7 +84,8 @@ impl Default for NativeBackend {
 }
 
 impl NativeBackend {
-    /// Backend with an explicit row-parallel worker cap (1 = sequential).
+    /// Backend with an explicit default session pool size (1 = sequential).
+    /// Individual sessions can override it (`StepBackend::session`).
     pub fn new(threads: usize) -> Self {
         NativeBackend { threads: threads.max(1) }
     }
@@ -76,12 +94,25 @@ impl NativeBackend {
         self.threads
     }
 
-    fn effective_threads(&self, n: usize) -> usize {
-        if n < PAR_MIN_N {
+    /// Like [`StepBackend::session`], preserving the concrete `Send` bound
+    /// the trait-object return type erases (native sessions are plain
+    /// owned data + a pool, so they may move across threads).
+    pub fn session_send(
+        &self,
+        shape: StepShape,
+        threads: Option<usize>,
+    ) -> Result<Box<dyn StepSession + Send>> {
+        let requested = threads.unwrap_or(self.threads).max(1);
+        // Below PAR_MIN_N a step is cheaper than coordinating workers:
+        // stay sequential (and never spawn pool threads). Never keep more
+        // workers than there are row chunks to hand out — extra threads
+        // would only wake to acknowledge epochs they can't work on.
+        let effective = if shape.n < PAR_MIN_N {
             1
         } else {
-            self.threads
-        }
+            requested.min(shape.n.div_ceil(ROW_CHUNK))
+        };
+        Ok(Box::new(NativeSession::new(shape, effective)?))
     }
 }
 
@@ -100,62 +131,118 @@ fn sgn(x: f32) -> f32 {
     }
 }
 
-/// Run `f(chunk_index)` for every chunk, on up to `threads` workers.
-/// Results come back ordered by chunk index regardless of scheduling.
-fn run_chunks<T, F>(threads: usize, n_chunks: usize, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize) -> T + Sync,
-{
-    let workers = threads.min(n_chunks);
-    if workers <= 1 {
-        return (0..n_chunks).map(f).collect();
+/// Raw `f32` base pointer that may cross into pool workers. Each worker
+/// touches a disjoint region determined by its logical index, so shared
+/// access is sound (see the dispatch sites).
+#[derive(Clone, Copy)]
+struct SendPtrF32(*mut f32);
+unsafe impl Send for SendPtrF32 {}
+unsafe impl Sync for SendPtrF32 {}
+
+/// Same for `i32` outputs (sort_idx).
+#[derive(Clone, Copy)]
+struct SendPtrI32(*mut i32);
+unsafe impl Send for SendPtrI32 {}
+unsafe impl Sync for SendPtrI32 {}
+
+/// Run `job(worker)` for workers `0..active` — on the pool when one
+/// exists and parallelism is requested, inline otherwise.
+fn dispatch(pool: Option<&WorkerPool>, active: usize, job: &(dyn Fn(usize) + Sync)) {
+    match pool {
+        Some(p) if active > 1 => p.dispatch(active, job),
+        _ => job(0),
     }
-    let mut out: Vec<Option<T>> = (0..n_chunks).map(|_| None).collect();
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(workers);
-        for wk in 0..workers {
-            let f = &f;
-            handles.push(scope.spawn(move || {
-                (wk..n_chunks)
-                    .step_by(workers)
-                    .map(|c| (c, f(c)))
-                    .collect::<Vec<(usize, T)>>()
-            }));
-        }
-        for handle in handles {
-            for (c, v) in handle.join().expect("native backend worker panicked") {
-                out[c] = Some(v);
-            }
-        }
-    });
-    out.into_iter()
-        .map(|v| v.expect("every chunk index is assigned to exactly one worker"))
-        .collect()
 }
 
-/// Eq. (2) objective on a soft output `y`, plus the cotangents the backward
-/// passes need: `ct_y = dL/dy` and `ct_cs = dL/dcolsum`.
+/// Stable descending argsort of `w` into `idx` (ties keep index order,
+/// matching `jnp.argsort(-w)`), bottom-up merge into the preallocated
+/// `tmp` buffer — no per-call allocation. Produces the same permutation
+/// as `slice::sort_by` with the descending comparator (a stable sort's
+/// output is unique).
+fn stable_argsort_desc(idx: &mut [u32], tmp: &mut [u32], w: &[f32]) {
+    let n = idx.len();
+    debug_assert_eq!(tmp.len(), n);
+    let mut width = 1;
+    while width < n {
+        let mut lo = 0;
+        while lo < n {
+            let mid = (lo + width).min(n);
+            let hi = (lo + 2 * width).min(n);
+            let (mut i, mut j, mut k) = (lo, mid, lo);
+            while i < mid && j < hi {
+                let (a, b) = (idx[i], idx[j]);
+                // Descending by w; NaN and ties compare Equal, which keeps
+                // the left run first (stability), exactly like the
+                // `partial_cmp(..).unwrap_or(Equal)` comparator.
+                let take_left = !matches!(
+                    w[b as usize].partial_cmp(&w[a as usize]),
+                    Some(std::cmp::Ordering::Greater)
+                );
+                if take_left {
+                    tmp[k] = a;
+                    i += 1;
+                } else {
+                    tmp[k] = b;
+                    j += 1;
+                }
+                k += 1;
+            }
+            let left = mid - i;
+            tmp[k..k + left].copy_from_slice(&idx[i..mid]);
+            tmp[k + left..hi].copy_from_slice(&idx[j..hi]);
+            lo = hi;
+        }
+        idx.copy_from_slice(tmp);
+        width *= 2;
+    }
+}
+
+// --------------------------------------------------------------------------
+// Eq. (2) grid loss into a reusable workspace.
+// --------------------------------------------------------------------------
+
+/// Scratch for [`grid_loss_into`]: cotangent buffers sized once per
+/// session. After a call, `ct_y` holds dL/dy and `ct_cs` dL/dcolsum.
+struct LossWs {
+    /// dL/d(gathered grid output), n·d.
+    dyg: Vec<f32>,
+    /// dL/dy after un-gathering, n·d.
+    ct_y: Vec<f32>,
+    /// dL/dcolsum, n.
+    ct_cs: Vec<f32>,
+    /// Per-pair displacement, d.
+    diff: Vec<f32>,
+}
+
+impl LossWs {
+    fn new(n: usize, d: usize) -> Self {
+        LossWs {
+            dyg: vec![0.0; n * d],
+            ct_y: vec![0.0; n * d],
+            ct_cs: vec![0.0; n],
+            diff: vec![0.0; d],
+        }
+    }
+}
+
+/// Eq. (2) objective on a soft output `y`; returns the loss and leaves the
+/// cotangents the backward passes need in `ws` (`ct_y = dL/dy`,
+/// `ct_cs = dL/dcolsum`).
 ///
 /// `inv_idx`: when `Some`, the neighbor term is evaluated on the
 /// reverse-shuffled output `y[inv_idx]` (the ShuffleSoftSort gather);
 /// `None` means the identity arrangement (GS/Kissing).
 /// `colsum`: when `Some`, the stochastic-constraint term λ_s·L_s is
 /// included (GS omits it — Sinkhorn already enforces stochasticity).
-struct GridLoss {
-    loss: f32,
-    ct_y: Vec<f32>,
-    ct_cs: Vec<f32>,
-}
-
-fn grid_loss(
+fn grid_loss_into(
     shape: StepShape,
     x: &[f32],
     y: &[f32],
     inv_idx: Option<&[i32]>,
     colsum: Option<&[f32]>,
     norm: f32,
-) -> GridLoss {
+    ws: &mut LossWs,
+) -> f32 {
     let StepShape { n, d, h, w } = shape;
     let row_of = |k: usize| -> usize {
         match inv_idx {
@@ -169,64 +256,66 @@ fn grid_loss(
     let vert = if h > 1 { (h - 1) * w } else { 0 };
     let count = (horiz + vert).max(1) as f32;
     let coef = 1.0 / (count * norm);
-    let mut dyg = vec![0.0f32; n * d];
-    let mut diff = vec![0.0f32; d];
+    ws.dyg.fill(0.0);
     let mut total = 0.0f64;
-    let mut pair = |k1: usize, k2: usize, dyg: &mut [f32]| {
-        let (a, b) = (row_of(k1) * d, row_of(k2) * d);
-        let mut s = 0.0f32;
-        for (t, dt) in diff.iter_mut().enumerate() {
-            let dd = y[a + t] - y[b + t];
-            *dt = dd;
-            s += dd * dd;
-        }
-        let dist = (s + EPS).sqrt();
-        total += dist as f64;
-        let g = coef / dist;
-        for (t, &dt) in diff.iter().enumerate() {
-            dyg[k1 * d + t] += dt * g;
-            dyg[k2 * d + t] -= dt * g;
-        }
-    };
-    for r in 0..h {
-        for c in 0..w.saturating_sub(1) {
-            let k = r * w + c;
-            pair(k, k + 1, &mut dyg);
-        }
-    }
-    if h > 1 {
-        for r in 0..h - 1 {
-            for c in 0..w {
+    {
+        let diff = &mut ws.diff;
+        let dyg = &mut ws.dyg;
+        let mut pair = |k1: usize, k2: usize| {
+            let (a, b) = (row_of(k1) * d, row_of(k2) * d);
+            let mut s = 0.0f32;
+            for (t, dt) in diff.iter_mut().enumerate() {
+                let dd = y[a + t] - y[b + t];
+                *dt = dd;
+                s += dd * dd;
+            }
+            let dist = (s + EPS).sqrt();
+            total += dist as f64;
+            let g = coef / dist;
+            for (t, &dt) in diff.iter().enumerate() {
+                dyg[k1 * d + t] += dt * g;
+                dyg[k2 * d + t] -= dt * g;
+            }
+        };
+        for r in 0..h {
+            for c in 0..w.saturating_sub(1) {
                 let k = r * w + c;
-                pair(k, k + w, &mut dyg);
+                pair(k, k + 1);
+            }
+        }
+        if h > 1 {
+            for r in 0..h - 1 {
+                for c in 0..w {
+                    let k = r * w + c;
+                    pair(k, k + w);
+                }
             }
         }
     }
     let l_nbr = total as f32 * coef;
 
     // Scatter d/dy_grid back through the gather (bijective → plain adds).
-    let mut ct_y = if inv_idx.is_some() {
-        let mut ct = vec![0.0f32; n * d];
+    if inv_idx.is_some() {
+        ws.ct_y.fill(0.0);
         for k in 0..n {
             let r = row_of(k) * d;
             for t in 0..d {
-                ct[r + t] += dyg[k * d + t];
+                ws.ct_y[r + t] += ws.dyg[k * d + t];
             }
         }
-        ct
     } else {
-        dyg
-    };
+        ws.ct_y.copy_from_slice(&ws.dyg);
+    }
 
     // λ_s · L_s (eq. 3) on the column sums.
-    let mut ct_cs = vec![0.0f32; n];
+    ws.ct_cs.fill(0.0);
     let mut l_s = 0.0f32;
     if let Some(cs) = colsum {
         let mut acc = 0.0f64;
         for (j, &c) in cs.iter().enumerate() {
             let dev = c - 1.0;
             acc += (dev * dev) as f64;
-            ct_cs[j] = LAMBDA_S * 2.0 * dev / n as f32;
+            ws.ct_cs[j] = LAMBDA_S * 2.0 * dev / n as f32;
         }
         l_s = (acc / n as f64) as f32;
     }
@@ -239,189 +328,297 @@ fn grid_loss(
         let m = (n * d) as f64;
         let mu_y = (y.iter().map(|&v| v as f64).sum::<f64>() / m) as f32;
         let a = LAMBDA_SIGMA * sgn(sy - sx) / (sx + EPS) / (m as f32 * sy);
-        for (ct, &v) in ct_y.iter_mut().zip(y) {
+        for (ct, &v) in ws.ct_y.iter_mut().zip(y) {
             *ct += a * (v - mu_y);
         }
     }
 
-    GridLoss { loss: l_nbr + LAMBDA_S * l_s + LAMBDA_SIGMA * l_sigma, ct_y, ct_cs }
+    l_nbr + LAMBDA_S * l_s + LAMBDA_SIGMA * l_sigma
 }
 
 // --------------------------------------------------------------------------
-// SoftSort / ShuffleSoftSort step.
+// SoftSort / ShuffleSoftSort step kernels.
 // --------------------------------------------------------------------------
 
-struct SssForwardChunk {
-    y: Vec<f32>,
-    idx: Vec<i32>,
-    cs: Vec<f32>,
+/// Per-shape SoftSort workspace: the sort state, per-chunk reduction
+/// slabs, and per-worker scratch stripes, all allocated once.
+struct SssWs {
+    /// Stable descending argsort of w (σ), n.
+    sigma: Vec<u32>,
+    /// Merge-sort ping buffer, n.
+    sort_tmp: Vec<u32>,
+    /// w gathered through σ (the sorted weights), n.
+    ws_sorted: Vec<f32>,
+    /// Per-chunk colsum partials (n_chunks × n), folded in chunk order.
+    chunk_cs: Vec<f32>,
+    /// Per-chunk column-side gradient partials (n_chunks × n).
+    chunk_gw: Vec<f32>,
+    /// Sorted-row gradients by global row index, n.
+    gws: Vec<f32>,
+    /// Per-worker softmax-row scratch stripes (threads × n).
+    row_scratch: Vec<f32>,
+    /// Per-worker dL/dP-row scratch stripes (threads × n).
+    g_scratch: Vec<f32>,
+}
+
+impl SssWs {
+    fn new(n: usize, threads: usize) -> Self {
+        let n_chunks = n.div_ceil(ROW_CHUNK);
+        SssWs {
+            sigma: Vec::with_capacity(n),
+            sort_tmp: vec![0u32; n],
+            ws_sorted: vec![0.0; n],
+            chunk_cs: vec![0.0; n_chunks * n],
+            chunk_gw: vec![0.0; n_chunks * n],
+            gws: vec![0.0; n],
+            row_scratch: vec![0.0; threads * n],
+            g_scratch: vec![0.0; threads * n],
+        }
+    }
 }
 
 /// Row-block forward: y = P·x, sort_idx = argmax rows, colsum = Σ rows.
-/// P rows are computed, consumed and dropped (row-wise memory).
-fn softsort_forward(
+/// P rows are computed, consumed and dropped (row-wise memory). Writes
+/// y/sort_idx directly into `out` (disjoint chunk regions per worker) and
+/// folds the per-chunk colsum partials in chunk index order.
+#[allow(clippy::too_many_arguments)]
+fn sss_forward(
+    pool: Option<&WorkerPool>,
     threads: usize,
     n: usize,
     d: usize,
-    ws: &[f32],
+    ws_sorted: &[f32],
     w: &[f32],
     x: &[f32],
     tau: f32,
-) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    chunk_cs: &mut [f32],
+    row_scratch: &mut [f32],
+    out: &mut SssStep,
+) {
     let n_chunks = n.div_ceil(ROW_CHUNK);
-    let chunks = run_chunks(threads, n_chunks, |c| {
-        let r0 = c * ROW_CHUNK;
-        let r1 = (r0 + ROW_CHUNK).min(n);
-        let rows = r1 - r0;
-        let mut ch = SssForwardChunk {
-            y: vec![0.0f32; rows * d],
-            idx: vec![0i32; rows],
-            cs: vec![0.0f32; n],
-        };
-        let mut row = vec![0.0f32; n];
-        for i in r0..r1 {
-            let wsi = ws[i];
-            let mut mx = f32::NEG_INFINITY;
-            let mut arg = 0usize;
-            for (j, rj) in row.iter_mut().enumerate() {
-                let l = -(wsi - w[j]).abs() / tau;
-                *rj = l;
-                if l > mx {
-                    mx = l;
-                    arg = j;
+    let active = threads.min(n_chunks).max(1);
+    let y_ptr = SendPtrF32(out.y.as_mut_ptr());
+    let idx_ptr = SendPtrI32(out.sort_idx.as_mut_ptr());
+    let cs_ptr = SendPtrF32(chunk_cs.as_mut_ptr());
+    let row_ptr = SendPtrF32(row_scratch.as_mut_ptr());
+    let job = move |wk: usize| {
+        // Safety: worker `wk` owns scratch stripe `wk` and exactly the
+        // chunks c ≡ wk (mod active) — all regions disjoint across
+        // workers, and the dispatch blocks until every worker finished.
+        let row = unsafe { std::slice::from_raw_parts_mut(row_ptr.0.add(wk * n), n) };
+        let mut c = wk;
+        while c < n_chunks {
+            let r0 = c * ROW_CHUNK;
+            let r1 = (r0 + ROW_CHUNK).min(n);
+            let cs = unsafe { std::slice::from_raw_parts_mut(cs_ptr.0.add(c * n), n) };
+            cs.fill(0.0);
+            for i in r0..r1 {
+                let wsi = ws_sorted[i];
+                // Pass 1: logits (stride-1, branch-free).
+                for (rj, &wj) in row.iter_mut().zip(w) {
+                    *rj = -(wsi - wj).abs() / tau;
+                }
+                // Pass 2: max + argmax (same `>` scan order as the fused
+                // loop had, so ties resolve identically).
+                let mut mx = f32::NEG_INFINITY;
+                let mut arg = 0usize;
+                for (j, &rj) in row.iter().enumerate() {
+                    if rj > mx {
+                        mx = rj;
+                        arg = j;
+                    }
+                }
+                // Pass 3: exp + denominator.
+                let mut denom = 0.0f32;
+                for rj in row.iter_mut() {
+                    *rj = (*rj - mx).exp();
+                    denom += *rj;
+                }
+                let inv = 1.0 / denom;
+                unsafe { *idx_ptr.0.add(i) = arg as i32 };
+                // Pass 4: probabilities → colsum + y (unrolled d = 3 fast
+                // path accumulates in registers; same per-component add
+                // order as the generic path).
+                if d == 3 {
+                    let (mut y0, mut y1, mut y2) = (0.0f32, 0.0f32, 0.0f32);
+                    for (j, (rj, cj)) in row.iter().zip(cs.iter_mut()).enumerate() {
+                        let p = *rj * inv;
+                        *cj += p;
+                        let b = j * 3;
+                        y0 += p * x[b];
+                        y1 += p * x[b + 1];
+                        y2 += p * x[b + 2];
+                    }
+                    unsafe {
+                        *y_ptr.0.add(i * 3) = y0;
+                        *y_ptr.0.add(i * 3 + 1) = y1;
+                        *y_ptr.0.add(i * 3 + 2) = y2;
+                    }
+                } else {
+                    let yi =
+                        unsafe { std::slice::from_raw_parts_mut(y_ptr.0.add(i * d), d) };
+                    yi.fill(0.0);
+                    for (j, &rj) in row.iter().enumerate() {
+                        let p = rj * inv;
+                        cs[j] += p;
+                        let xj = &x[j * d..(j + 1) * d];
+                        for (yc, &xc) in yi.iter_mut().zip(xj) {
+                            *yc += p * xc;
+                        }
+                    }
                 }
             }
-            let mut denom = 0.0f32;
-            for rj in row.iter_mut() {
-                *rj = (*rj - mx).exp();
-                denom += *rj;
-            }
-            let inv = 1.0 / denom;
-            let li = i - r0;
-            ch.idx[li] = arg as i32;
-            let yi = &mut ch.y[li * d..(li + 1) * d];
-            for (j, rj) in row.iter_mut().enumerate() {
-                let p = *rj * inv;
-                *rj = p;
-                ch.cs[j] += p;
-                let xj = &x[j * d..(j + 1) * d];
-                for (yc, &xc) in yi.iter_mut().zip(xj) {
-                    *yc += p * xc;
-                }
-            }
+            c += active;
         }
-        ch
-    });
+    };
+    dispatch(pool, active, &job);
 
-    let mut y = vec![0.0f32; n * d];
-    let mut idx = vec![0i32; n];
-    let mut colsum = vec![0.0f32; n];
-    for (c, ch) in chunks.into_iter().enumerate() {
-        let r0 = c * ROW_CHUNK;
-        y[r0 * d..r0 * d + ch.y.len()].copy_from_slice(&ch.y);
-        idx[r0..r0 + ch.idx.len()].copy_from_slice(&ch.idx);
-        for (dst, src) in colsum.iter_mut().zip(&ch.cs) {
-            *dst += src;
+    // Deterministic reduction: fold per-chunk column partials in chunk
+    // index order — bit-identical for any pool size.
+    out.colsum.fill(0.0);
+    for c in 0..n_chunks {
+        for (dst, &s) in out.colsum.iter_mut().zip(&chunk_cs[c * n..(c + 1) * n]) {
+            *dst += s;
         }
     }
-    (y, idx, colsum)
-}
-
-struct SssBackwardChunk {
-    /// dL/dws for this chunk's rows (sorted-side weight gradient).
-    gws: Vec<f32>,
-    /// dL/dw partial from the column side (full length N).
-    gw: Vec<f32>,
 }
 
 /// Row-block backward: recompute each P row, pull the loss cotangents
-/// through softmax and the |ws_i − w_j| kernel, reduce into dL/dw.
+/// through softmax and the |ws_i − w_j| kernel, reduce into dL/dw via the
+/// chunk-ordered fold + the σ scatter (sort_desc's VJP).
 #[allow(clippy::too_many_arguments)]
-fn softsort_backward(
+fn sss_backward(
+    pool: Option<&WorkerPool>,
     threads: usize,
     n: usize,
     d: usize,
-    ws: &[f32],
+    ws_sorted: &[f32],
     w: &[f32],
     sigma: &[u32],
     x: &[f32],
     tau: f32,
     ct_y: &[f32],
     ct_cs: &[f32],
-) -> Vec<f32> {
+    chunk_gw: &mut [f32],
+    gws: &mut [f32],
+    row_scratch: &mut [f32],
+    g_scratch: &mut [f32],
+    grad: &mut [f32],
+) {
     let n_chunks = n.div_ceil(ROW_CHUNK);
-    let chunks = run_chunks(threads, n_chunks, |c| {
-        let r0 = c * ROW_CHUNK;
-        let r1 = (r0 + ROW_CHUNK).min(n);
-        let mut ch = SssBackwardChunk { gws: vec![0.0f32; r1 - r0], gw: vec![0.0f32; n] };
-        let mut prob = vec![0.0f32; n];
-        let mut gbuf = vec![0.0f32; n];
-        for i in r0..r1 {
-            let wsi = ws[i];
-            // Recompute the probability row (identical code path to the
-            // forward, so the same f32 roundings are reproduced).
-            let mut mx = f32::NEG_INFINITY;
-            for (j, pj) in prob.iter_mut().enumerate() {
-                let l = -(wsi - w[j]).abs() / tau;
-                *pj = l;
-                if l > mx {
-                    mx = l;
+    let active = threads.min(n_chunks).max(1);
+    let gw_ptr = SendPtrF32(chunk_gw.as_mut_ptr());
+    let gws_ptr = SendPtrF32(gws.as_mut_ptr());
+    let prob_ptr = SendPtrF32(row_scratch.as_mut_ptr());
+    let gbuf_ptr = SendPtrF32(g_scratch.as_mut_ptr());
+    let job = move |wk: usize| {
+        // Safety: disjoint stripes/chunks per worker, as in the forward.
+        let prob = unsafe { std::slice::from_raw_parts_mut(prob_ptr.0.add(wk * n), n) };
+        let gbuf = unsafe { std::slice::from_raw_parts_mut(gbuf_ptr.0.add(wk * n), n) };
+        let mut c = wk;
+        while c < n_chunks {
+            let r0 = c * ROW_CHUNK;
+            let r1 = (r0 + ROW_CHUNK).min(n);
+            let gw = unsafe { std::slice::from_raw_parts_mut(gw_ptr.0.add(c * n), n) };
+            gw.fill(0.0);
+            for i in r0..r1 {
+                let wsi = ws_sorted[i];
+                // Recompute the probability row (identical pass structure
+                // to the forward, so the same f32 roundings reproduce).
+                for (pj, &wj) in prob.iter_mut().zip(w) {
+                    *pj = -(wsi - wj).abs() / tau;
                 }
-            }
-            let mut denom = 0.0f32;
-            for pj in prob.iter_mut() {
-                *pj = (*pj - mx).exp();
-                denom += *pj;
-            }
-            let inv = 1.0 / denom;
-            for pj in prob.iter_mut() {
-                *pj *= inv;
-            }
+                let mut mx = f32::NEG_INFINITY;
+                for &pj in prob.iter() {
+                    if pj > mx {
+                        mx = pj;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for pj in prob.iter_mut() {
+                    *pj = (*pj - mx).exp();
+                    denom += *pj;
+                }
+                let inv = 1.0 / denom;
+                for pj in prob.iter_mut() {
+                    *pj *= inv;
+                }
 
-            // dL/dP_ij = ct_y[i]·x_j + ct_cs[j]; softmax row backward.
-            let cti = &ct_y[i * d..(i + 1) * d];
-            let mut dot = 0.0f32;
-            for (j, gj) in gbuf.iter_mut().enumerate() {
-                let mut g = ct_cs[j];
-                let xj = &x[j * d..(j + 1) * d];
-                for (ct, &xc) in cti.iter().zip(xj) {
-                    g += ct * xc;
+                // dL/dP_ij = ct_y[i]·x_j + ct_cs[j]; softmax row backward.
+                let cti = &ct_y[i * d..(i + 1) * d];
+                let mut dot = 0.0f32;
+                if d == 3 {
+                    let (c0, c1, c2) = (cti[0], cti[1], cti[2]);
+                    for (j, gj) in gbuf.iter_mut().enumerate() {
+                        let b = j * 3;
+                        let g = ((ct_cs[j] + c0 * x[b]) + c1 * x[b + 1]) + c2 * x[b + 2];
+                        *gj = g;
+                        dot += g * prob[j];
+                    }
+                } else {
+                    for (j, gj) in gbuf.iter_mut().enumerate() {
+                        let mut g = ct_cs[j];
+                        let xj = &x[j * d..(j + 1) * d];
+                        for (ct, &xc) in cti.iter().zip(xj) {
+                            g += ct * xc;
+                        }
+                        *gj = g;
+                        dot += g * prob[j];
+                    }
                 }
-                *gj = g;
-                dot += g * prob[j];
+                let mut gws_i = 0.0f32;
+                for j in 0..n {
+                    let dl = prob[j] * (gbuf[j] - dot);
+                    let s = sgn(wsi - w[j]);
+                    gws_i -= dl * s / tau;
+                    gw[j] += dl * s / tau;
+                }
+                unsafe { *gws_ptr.0.add(i) = gws_i };
             }
-            let mut gws_i = 0.0f32;
-            for j in 0..n {
-                let dl = prob[j] * (gbuf[j] - dot);
-                let s = sgn(wsi - w[j]);
-                gws_i -= dl * s / tau;
-                ch.gw[j] += dl * s / tau;
-            }
-            ch.gws[i - r0] = gws_i;
+            c += active;
         }
-        ch
-    });
+    };
+    dispatch(pool, active, &job);
 
     // Deterministic reduction: chunk-ordered column partials, then the
-    // sorted-side scatter through σ (sort_desc's VJP).
-    let mut grad = vec![0.0f32; n];
-    for ch in &chunks {
-        for (g, p) in grad.iter_mut().zip(&ch.gw) {
+    // sorted-side scatter through σ in ascending row order (identical to
+    // the pre-session chunk-then-row iteration).
+    grad.fill(0.0);
+    for c in 0..n_chunks {
+        for (g, &p) in grad.iter_mut().zip(&chunk_gw[c * n..(c + 1) * n]) {
             *g += p;
         }
     }
-    for (c, ch) in chunks.iter().enumerate() {
-        let r0 = c * ROW_CHUNK;
-        for (li, &gv) in ch.gws.iter().enumerate() {
-            grad[sigma[r0 + li] as usize] += gv;
-        }
+    for (i, &gv) in gws.iter().enumerate() {
+        grad[sigma[i] as usize] += gv;
     }
-    grad
 }
 
 // --------------------------------------------------------------------------
 // Gumbel-Sinkhorn helpers.
 // --------------------------------------------------------------------------
+
+/// Per-shape GS workspace. `states` is the reverse-mode state stack: one
+/// flat slab for the 2·`SINKHORN_ITERS` post-normalization log-matrices,
+/// reused every step (the pre-session code re-allocated a `Vec<Vec<f32>>`
+/// of N² clones per step).
+struct GsWs {
+    la: Vec<f32>,
+    states: Vec<f32>,
+    dz: Vec<f32>,
+    y: Vec<f32>,
+}
+
+impl GsWs {
+    fn new(n: usize, d: usize) -> Self {
+        GsWs {
+            la: vec![0.0; n * n],
+            states: vec![0.0; 2 * SINKHORN_ITERS * n * n],
+            dz: vec![0.0; n * n],
+            y: vec![0.0; n * d],
+        }
+    }
+}
 
 fn row_lse_normalize(la: &mut [f32], n: usize) {
     for i in 0..n {
@@ -455,21 +652,24 @@ fn col_lse_normalize(la: &mut [f32], n: usize) {
     }
 }
 
-/// Log-space Sinkhorn forward. When `states` is `Some`, the output of every
-/// normalization is recorded (reverse-mode needs exactly those values).
-fn sinkhorn_log(mut la: Vec<f32>, n: usize, mut states: Option<&mut Vec<Vec<f32>>>) -> Vec<f32> {
-    for _ in 0..SINKHORN_ITERS {
-        row_lse_normalize(&mut la, n);
-        if let Some(s) = states.as_mut() {
-            s.push(la.clone());
+/// Log-space Sinkhorn forward, in place. When `states` is `Some`, the
+/// output of every normalization is copied into the slab (reverse-mode
+/// needs exactly those values). Ends by exponentiating `la` into P.
+fn sinkhorn_log_in_place(la: &mut [f32], n: usize, mut states: Option<&mut [f32]>) {
+    let n2 = n * n;
+    for it in 0..SINKHORN_ITERS {
+        row_lse_normalize(la, n);
+        if let Some(s) = states.as_deref_mut() {
+            s[2 * it * n2..(2 * it + 1) * n2].copy_from_slice(la);
         }
-        col_lse_normalize(&mut la, n);
-        if let Some(s) = states.as_mut() {
-            s.push(la.clone());
+        col_lse_normalize(la, n);
+        if let Some(s) = states.as_deref_mut() {
+            s[(2 * it + 1) * n2..(2 * it + 2) * n2].copy_from_slice(la);
         }
     }
-    la.iter_mut().for_each(|v| *v = v.exp());
-    la
+    for v in la.iter_mut() {
+        *v = v.exp();
+    }
 }
 
 // --------------------------------------------------------------------------
@@ -481,10 +681,43 @@ fn sinkhorn_log(mut la: Vec<f32>, n: usize, mut states: Option<&mut Vec<Vec<f32>
 const KISSING_TABLE: &[(usize, usize)] =
     &[(240, 8), (306, 9), (500, 10), (582, 11), (840, 12), (1154, 13), (4320, 16)];
 
-/// Row L2 norms, and the row-normalized matrix v̂ = v / (‖v_row‖ + ε).
-fn normalize_rows(v: &[f32], n: usize, m: usize) -> (Vec<f32>, Vec<f32>) {
-    let mut norms = vec![0.0f32; n];
-    let mut vn = vec![0.0f32; n * m];
+/// Per-shape Kissing workspace (sized for one factor rank `m`; reallocated
+/// only if a caller switches ranks mid-session, which drivers never do).
+struct KissWs {
+    m: usize,
+    norms_v: Vec<f32>,
+    norms_w: Vec<f32>,
+    vn: Vec<f32>,
+    wn: Vec<f32>,
+    dvn: Vec<f32>,
+    dwn: Vec<f32>,
+    y: Vec<f32>,
+    colsum: Vec<f32>,
+    row: Vec<f32>,
+    gbuf: Vec<f32>,
+}
+
+impl KissWs {
+    fn new(n: usize, d: usize, m: usize) -> Self {
+        KissWs {
+            m,
+            norms_v: vec![0.0; n],
+            norms_w: vec![0.0; n],
+            vn: vec![0.0; n * m],
+            wn: vec![0.0; n * m],
+            dvn: vec![0.0; n * m],
+            dwn: vec![0.0; n * m],
+            y: vec![0.0; n * d],
+            colsum: vec![0.0; n],
+            row: vec![0.0; n],
+            gbuf: vec![0.0; n],
+        }
+    }
+}
+
+/// Row L2 norms and the row-normalized matrix v̂ = v / (‖v_row‖ + ε),
+/// written into the preallocated `norms`/`vn`.
+fn normalize_rows_into(v: &[f32], n: usize, m: usize, norms: &mut [f32], vn: &mut [f32]) {
     for i in 0..n {
         let row = &v[i * m..(i + 1) * m];
         let mut s = 0.0f32;
@@ -498,18 +731,17 @@ fn normalize_rows(v: &[f32], n: usize, m: usize) -> (Vec<f32>, Vec<f32>) {
             *dst = a * inv;
         }
     }
-    (norms, vn)
 }
 
-/// VJP of row normalization: given dL/dv̂, return dL/dv.
-fn normalize_rows_backward(
+/// VJP of row normalization: given dL/dv̂ in `dvn`, write dL/dv into `dv`.
+fn normalize_rows_backward_into(
     v: &[f32],
     norms: &[f32],
     dvn: &[f32],
     n: usize,
     m: usize,
-) -> Vec<f32> {
-    let mut dv = vec![0.0f32; n * m];
+    dv: &mut [f32],
+) {
     for i in 0..n {
         let r = norms[i];
         let denom = r + KISS_NORM_EPS;
@@ -531,11 +763,47 @@ fn normalize_rows_backward(
             }
         }
     }
-    dv
+}
+
+/// One row of P = row-softmax(scale·v̂ŵᵀ/τ) into `row`; returns the argmax.
+fn kiss_softmax_row(
+    i: usize,
+    m: usize,
+    scale_t: f32,
+    vn: &[f32],
+    wn: &[f32],
+    row: &mut [f32],
+) -> usize {
+    let vi = &vn[i * m..(i + 1) * m];
+    let mut mx = f32::NEG_INFINITY;
+    let mut arg = 0usize;
+    for (j, rj) in row.iter_mut().enumerate() {
+        let wj = &wn[j * m..(j + 1) * m];
+        let mut dot = 0.0f32;
+        for (&a, &b) in vi.iter().zip(wj) {
+            dot += a * b;
+        }
+        let l = scale_t * dot;
+        *rj = l;
+        if l > mx {
+            mx = l;
+            arg = j;
+        }
+    }
+    let mut denom = 0.0f32;
+    for rj in row.iter_mut() {
+        *rj = (*rj - mx).exp();
+        denom += *rj;
+    }
+    let inv = 1.0 / denom;
+    for rj in row.iter_mut() {
+        *rj *= inv;
+    }
+    arg
 }
 
 // --------------------------------------------------------------------------
-// Trait implementation.
+// Session + trait implementation.
 // --------------------------------------------------------------------------
 
 fn check_shape(shape: StepShape) -> Result<()> {
@@ -556,23 +824,64 @@ fn check_scalars(tau: f32, norm: f32) -> Result<()> {
     Ok(())
 }
 
-impl StepBackend for NativeBackend {
-    fn name(&self) -> &'static str {
+/// The native backend's stateful per-shape session: owns every scratch
+/// buffer (allocated on first use of each step family) and a persistent
+/// worker pool (spawned lazily on the first parallel dispatch). The
+/// steady-state step loop allocates nothing and spawns nothing.
+struct NativeSession {
+    shape: StepShape,
+    /// Effective row-parallel width for this shape (PAR_MIN_N-gated).
+    threads: usize,
+    pool: Option<WorkerPool>,
+    sss: Option<SssWs>,
+    loss: Option<LossWs>,
+    gs: Option<GsWs>,
+    kiss: Option<KissWs>,
+}
+
+impl NativeSession {
+    fn new(shape: StepShape, threads: usize) -> Result<Self> {
+        check_shape(shape)?;
+        Ok(NativeSession {
+            shape,
+            threads,
+            pool: None,
+            sss: None,
+            loss: None,
+            gs: None,
+            kiss: None,
+        })
+    }
+
+    fn ensure_pool(&mut self) {
+        if self.threads > 1 && self.pool.is_none() {
+            self.pool = Some(WorkerPool::new(self.threads - 1));
+        }
+    }
+}
+
+impl StepSession for NativeSession {
+    fn backend_name(&self) -> &'static str {
         "native"
     }
 
+    fn shape(&self) -> StepShape {
+        self.shape
+    }
+
     fn sss_step(
-        &self,
-        shape: StepShape,
+        &mut self,
         w: &[f32],
         x_shuf: &[f32],
         inv_idx: &[i32],
         tau: f32,
         norm: f32,
-    ) -> Result<SssStep> {
+        out: &mut SssStep,
+    ) -> Result<()> {
+        let shape = self.shape;
         let StepShape { n, d, .. } = shape;
-        check_shape(shape)?;
         check_scalars(tau, norm)?;
+        ensure!(d >= 1, "sss_step needs d >= 1 (this session has d={d})");
         ensure!(w.len() == n, "w length {} != N={n}", w.len());
         ensure!(x_shuf.len() == n * d, "x length {} != N*d={}", x_shuf.len(), n * d);
         ensure!(inv_idx.len() == n, "inv_idx length {} != N={n}", inv_idx.len());
@@ -580,50 +889,106 @@ impl StepBackend for NativeBackend {
             ensure!((0..n as i32).contains(&i), "inv_idx entry {i} out of range 0..{n}");
         }
 
+        self.ensure_pool();
+        let threads = self.threads;
+        if self.sss.is_none() {
+            self.sss = Some(SssWs::new(n, threads));
+        }
+        if self.loss.is_none() {
+            self.loss = Some(LossWs::new(n, d));
+        }
+        // Size caller buffers on first use (no-ops afterwards).
+        out.grad.resize(n, 0.0);
+        out.sort_idx.resize(n, 0);
+        out.colsum.resize(n, 0.0);
+        out.y.resize(n * d, 0.0);
+
+        let pool = self.pool.as_ref();
+        let sss = self.sss.as_mut().expect("allocated above");
+        let lws = self.loss.as_mut().expect("allocated above");
+
         // sort_desc(w): stable descending argsort (ties keep index order,
         // matching jnp.argsort(-w)); its VJP is the scatter through σ.
-        let mut sigma: Vec<u32> = (0..n as u32).collect();
-        sigma.sort_by(|&a, &b| {
-            w[b as usize]
-                .partial_cmp(&w[a as usize])
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        let ws: Vec<f32> = sigma.iter().map(|&i| w[i as usize]).collect();
+        sss.sigma.clear();
+        sss.sigma.extend(0..n as u32);
+        stable_argsort_desc(&mut sss.sigma, &mut sss.sort_tmp, w);
+        for (dst, &i) in sss.ws_sorted.iter_mut().zip(&sss.sigma) {
+            *dst = w[i as usize];
+        }
 
-        let threads = self.effective_threads(n);
-        let (y, sort_idx, colsum) = softsort_forward(threads, n, d, &ws, w, x_shuf, tau);
-        let gl = grid_loss(shape, x_shuf, &y, Some(inv_idx), Some(&colsum), norm);
-        let grad = softsort_backward(
-            threads, n, d, &ws, w, &sigma, x_shuf, tau, &gl.ct_y, &gl.ct_cs,
+        sss_forward(
+            pool,
+            threads,
+            n,
+            d,
+            &sss.ws_sorted,
+            w,
+            x_shuf,
+            tau,
+            &mut sss.chunk_cs,
+            &mut sss.row_scratch,
+            out,
         );
-        Ok(SssStep { loss: gl.loss, grad, sort_idx, colsum, y })
+        out.loss =
+            grid_loss_into(shape, x_shuf, &out.y, Some(inv_idx), Some(&out.colsum), norm, lws);
+        sss_backward(
+            pool,
+            threads,
+            n,
+            d,
+            &sss.ws_sorted,
+            w,
+            &sss.sigma,
+            x_shuf,
+            tau,
+            &lws.ct_y,
+            &lws.ct_cs,
+            &mut sss.chunk_gw,
+            &mut sss.gws,
+            &mut sss.row_scratch,
+            &mut sss.g_scratch,
+            &mut out.grad,
+        );
+        Ok(())
     }
 
     fn gs_step(
-        &self,
-        shape: StepShape,
+        &mut self,
         logits: &[f32],
         x: &[f32],
         gumbel: &[f32],
         tau: f32,
         norm: f32,
-    ) -> Result<GsStep> {
+        out: &mut GsStep,
+    ) -> Result<()> {
+        let shape = self.shape;
         let StepShape { n, d, .. } = shape;
-        check_shape(shape)?;
         check_scalars(tau, norm)?;
+        ensure!(d >= 1, "gs_step needs d >= 1 (this session has d={d})");
         ensure!(logits.len() == n * n, "logits length {} != N²={}", logits.len(), n * n);
         ensure!(gumbel.len() == n * n, "gumbel length {} != N²={}", gumbel.len(), n * n);
         ensure!(x.len() == n * d, "x length {} != N*d={}", x.len(), n * d);
 
-        // Forward, recording every normalization output for reverse-mode.
-        let la0: Vec<f32> =
-            logits.iter().zip(gumbel).map(|(&l, &g)| (l + g) / tau).collect();
-        let mut states: Vec<Vec<f32>> = Vec::with_capacity(2 * SINKHORN_ITERS);
-        let p = sinkhorn_log(la0, n, Some(&mut states));
+        if self.gs.is_none() {
+            self.gs = Some(GsWs::new(n, d));
+        }
+        if self.loss.is_none() {
+            self.loss = Some(LossWs::new(n, d));
+        }
+        out.grad.resize(n * n, 0.0);
+        let gs = self.gs.as_mut().expect("allocated above");
+        let lws = self.loss.as_mut().expect("allocated above");
 
-        let mut y = vec![0.0f32; n * d];
+        // Forward, recording every normalization output for reverse-mode.
+        for (dst, (&l, &g)) in gs.la.iter_mut().zip(logits.iter().zip(gumbel)) {
+            *dst = (l + g) / tau;
+        }
+        sinkhorn_log_in_place(&mut gs.la, n, Some(&mut gs.states));
+        let p = &gs.la; // now the dense doubly stochastic P
+
         for i in 0..n {
-            let yi = &mut y[i * d..(i + 1) * d];
+            let yi = &mut gs.y[i * d..(i + 1) * d];
+            yi.fill(0.0);
             for j in 0..n {
                 let pij = p[i * n + j];
                 let xj = &x[j * d..(j + 1) * d];
@@ -634,22 +999,23 @@ impl StepBackend for NativeBackend {
         }
 
         // GS loss omits L_s (Sinkhorn already enforces stochasticity).
-        let gl = grid_loss(shape, x, &y, None, None, norm);
+        out.loss = grid_loss_into(shape, x, &gs.y, None, None, norm, lws);
 
         // dL/dP → through exp → reverse the 2·iters normalizations.
-        let mut dz = vec![0.0f32; n * n];
         for i in 0..n {
-            let cti = &gl.ct_y[i * d..(i + 1) * d];
+            let cti = &lws.ct_y[i * d..(i + 1) * d];
             for j in 0..n {
                 let mut g = 0.0f32;
                 let xj = &x[j * d..(j + 1) * d];
                 for (ct, &xc) in cti.iter().zip(xj) {
                     g += ct * xc;
                 }
-                dz[i * n + j] = p[i * n + j] * g;
+                gs.dz[i * n + j] = p[i * n + j] * g;
             }
         }
-        for (t, z) in states.iter().enumerate().rev() {
+        let dz = &mut gs.dz;
+        for t in (0..2 * SINKHORN_ITERS).rev() {
+            let z = &gs.states[t * n * n..(t + 1) * n * n];
             // z = la − lse(la) ⇒ dla = dz − softmax(la)·Σdz, softmax = exp(z).
             if t % 2 == 1 {
                 // Column normalization (second in each sweep).
@@ -673,15 +1039,122 @@ impl StepBackend for NativeBackend {
                 }
             }
         }
-        let grad: Vec<f32> = dz.iter().map(|&v| v / tau).collect();
-        Ok(GsStep { loss: gl.loss, grad })
+        for (g, &v) in out.grad.iter_mut().zip(dz.iter()) {
+            *g = v / tau;
+        }
+        Ok(())
     }
 
-    fn gs_probe(&self, n: usize, logits: &[f32], tau: f32) -> Result<Vec<f32>> {
+    fn gs_probe(&mut self, logits: &[f32], tau: f32, out: &mut Vec<f32>) -> Result<()> {
+        let n = self.shape.n;
         ensure!(logits.len() == n * n, "logits length {} != N²={}", logits.len(), n * n);
         ensure!(tau.is_finite() && tau > 0.0, "temperature must be positive, got {tau}");
-        let la: Vec<f32> = logits.iter().map(|&l| l / tau).collect();
-        Ok(sinkhorn_log(la, n, None))
+        out.resize(n * n, 0.0);
+        for (dst, &l) in out.iter_mut().zip(logits) {
+            *dst = l / tau;
+        }
+        sinkhorn_log_in_place(out, n, None);
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn kiss_step(
+        &mut self,
+        m: usize,
+        v: &[f32],
+        wf: &[f32],
+        x: &[f32],
+        tau: f32,
+        norm: f32,
+        out: &mut KissStep,
+    ) -> Result<()> {
+        let shape = self.shape;
+        let StepShape { n, d, .. } = shape;
+        check_scalars(tau, norm)?;
+        ensure!(d >= 1, "kiss_step needs d >= 1 (this session has d={d})");
+        ensure!(m >= 1, "kissing rank must be >= 1");
+        ensure!(v.len() == n * m, "v length {} != N*M={}", v.len(), n * m);
+        ensure!(wf.len() == n * m, "w length {} != N*M={}", wf.len(), n * m);
+        ensure!(x.len() == n * d, "x length {} != N*d={}", x.len(), n * d);
+
+        if self.kiss.as_ref().map(|k| k.m) != Some(m) {
+            self.kiss = Some(KissWs::new(n, d, m));
+        }
+        if self.loss.is_none() {
+            self.loss = Some(LossWs::new(n, d));
+        }
+        out.grad_v.resize(n * m, 0.0);
+        out.grad_w.resize(n * m, 0.0);
+        out.sort_idx.resize(n, 0);
+        let kw = self.kiss.as_mut().expect("allocated above");
+        let lws = self.loss.as_mut().expect("allocated above");
+
+        normalize_rows_into(v, n, m, &mut kw.norms_v, &mut kw.vn);
+        normalize_rows_into(wf, n, m, &mut kw.norms_w, &mut kw.wn);
+        let scale_t = KISS_SCALE / tau;
+
+        // Forward: P = row-softmax(scale·v̂ŵᵀ/τ); rows recomputed in the
+        // backward pass (memory stays O(N·(M+d))).
+        kw.colsum.fill(0.0);
+        for i in 0..n {
+            let arg = kiss_softmax_row(i, m, scale_t, &kw.vn, &kw.wn, &mut kw.row);
+            out.sort_idx[i] = arg as i32;
+            let yi = &mut kw.y[i * d..(i + 1) * d];
+            yi.fill(0.0);
+            for (j, &p) in kw.row.iter().enumerate() {
+                kw.colsum[j] += p;
+                let xj = &x[j * d..(j + 1) * d];
+                for (yc, &xc) in yi.iter_mut().zip(xj) {
+                    *yc += p * xc;
+                }
+            }
+        }
+
+        out.loss = grid_loss_into(shape, x, &kw.y, None, Some(&kw.colsum), norm, lws);
+
+        // Backward: softmax rows → the two normalized factors → v, w.
+        kw.dvn.fill(0.0);
+        kw.dwn.fill(0.0);
+        for i in 0..n {
+            kiss_softmax_row(i, m, scale_t, &kw.vn, &kw.wn, &mut kw.row);
+            let cti = &lws.ct_y[i * d..(i + 1) * d];
+            let mut dot = 0.0f32;
+            for (j, gj) in kw.gbuf.iter_mut().enumerate() {
+                let mut g = lws.ct_cs[j];
+                let xj = &x[j * d..(j + 1) * d];
+                for (ct, &xc) in cti.iter().zip(xj) {
+                    g += ct * xc;
+                }
+                *gj = g;
+                dot += g * kw.row[j];
+            }
+            let vi = &kw.vn[i * m..(i + 1) * m];
+            for (j, &p) in kw.row.iter().enumerate() {
+                let a = scale_t * p * (kw.gbuf[j] - dot);
+                let wj = &kw.wn[j * m..(j + 1) * m];
+                let dvi = &mut kw.dvn[i * m..(i + 1) * m];
+                for (dv, &b) in dvi.iter_mut().zip(wj) {
+                    *dv += a * b;
+                }
+                let dwj = &mut kw.dwn[j * m..(j + 1) * m];
+                for (dw, &b) in dwj.iter_mut().zip(vi) {
+                    *dw += a * b;
+                }
+            }
+        }
+        normalize_rows_backward_into(v, &kw.norms_v, &kw.dvn, n, m, &mut out.grad_v);
+        normalize_rows_backward_into(wf, &kw.norms_w, &kw.dwn, n, m, &mut out.grad_w);
+        Ok(())
+    }
+}
+
+impl StepBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn session(&self, shape: StepShape, threads: Option<usize>) -> Result<Box<dyn StepSession>> {
+        Ok(self.session_send(shape, threads)?)
     }
 
     fn kiss_rank(&self, n: usize, _d: usize) -> Result<usize> {
@@ -691,114 +1164,6 @@ impl StepBackend for NativeBackend {
             }
         }
         bail!("no tabulated kissing rank covers N={n} (max 4320)")
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn kiss_step(
-        &self,
-        shape: StepShape,
-        m: usize,
-        v: &[f32],
-        wf: &[f32],
-        x: &[f32],
-        tau: f32,
-        norm: f32,
-    ) -> Result<KissStep> {
-        let StepShape { n, d, .. } = shape;
-        check_shape(shape)?;
-        check_scalars(tau, norm)?;
-        ensure!(m >= 1, "kissing rank must be >= 1");
-        ensure!(v.len() == n * m, "v length {} != N*M={}", v.len(), n * m);
-        ensure!(wf.len() == n * m, "w length {} != N*M={}", wf.len(), n * m);
-        ensure!(x.len() == n * d, "x length {} != N*d={}", x.len(), n * d);
-
-        let (rv, vn) = normalize_rows(v, n, m);
-        let (rw, wn) = normalize_rows(wf, n, m);
-        let scale_t = KISS_SCALE / tau;
-
-        // Forward: P = row-softmax(scale·v̂ŵᵀ/τ); rows recomputed in the
-        // backward pass (memory stays O(N·(M+d))).
-        let mut y = vec![0.0f32; n * d];
-        let mut colsum = vec![0.0f32; n];
-        let mut sort_idx = vec![0i32; n];
-        let mut row = vec![0.0f32; n];
-        let softmax_row = |i: usize, row: &mut [f32]| {
-            let vi = &vn[i * m..(i + 1) * m];
-            let mut mx = f32::NEG_INFINITY;
-            let mut arg = 0usize;
-            for (j, rj) in row.iter_mut().enumerate() {
-                let wj = &wn[j * m..(j + 1) * m];
-                let mut dot = 0.0f32;
-                for (&a, &b) in vi.iter().zip(wj) {
-                    dot += a * b;
-                }
-                let l = scale_t * dot;
-                *rj = l;
-                if l > mx {
-                    mx = l;
-                    arg = j;
-                }
-            }
-            let mut denom = 0.0f32;
-            for rj in row.iter_mut() {
-                *rj = (*rj - mx).exp();
-                denom += *rj;
-            }
-            let inv = 1.0 / denom;
-            for rj in row.iter_mut() {
-                *rj *= inv;
-            }
-            arg
-        };
-        for i in 0..n {
-            let arg = softmax_row(i, &mut row);
-            sort_idx[i] = arg as i32;
-            let yi = &mut y[i * d..(i + 1) * d];
-            for (j, &p) in row.iter().enumerate() {
-                colsum[j] += p;
-                let xj = &x[j * d..(j + 1) * d];
-                for (yc, &xc) in yi.iter_mut().zip(xj) {
-                    *yc += p * xc;
-                }
-            }
-        }
-
-        let gl = grid_loss(shape, x, &y, None, Some(&colsum), norm);
-
-        // Backward: softmax rows → the two normalized factors → v, w.
-        let mut dvn = vec![0.0f32; n * m];
-        let mut dwn = vec![0.0f32; n * m];
-        let mut gbuf = vec![0.0f32; n];
-        for i in 0..n {
-            softmax_row(i, &mut row);
-            let cti = &gl.ct_y[i * d..(i + 1) * d];
-            let mut dot = 0.0f32;
-            for (j, gj) in gbuf.iter_mut().enumerate() {
-                let mut g = gl.ct_cs[j];
-                let xj = &x[j * d..(j + 1) * d];
-                for (ct, &xc) in cti.iter().zip(xj) {
-                    g += ct * xc;
-                }
-                *gj = g;
-                dot += g * row[j];
-            }
-            let vi = &vn[i * m..(i + 1) * m];
-            for (j, &p) in row.iter().enumerate() {
-                let a = scale_t * p * (gbuf[j] - dot);
-                let wj = &wn[j * m..(j + 1) * m];
-                let dvi = &mut dvn[i * m..(i + 1) * m];
-                for (dv, &b) in dvi.iter_mut().zip(wj) {
-                    *dv += a * b;
-                }
-                let dwj = &mut dwn[j * m..(j + 1) * m];
-                for (dw, &b) in dwj.iter_mut().zip(vi) {
-                    *dw += a * b;
-                }
-            }
-        }
-        let grad_v = normalize_rows_backward(v, &rv, &dvn, n, m);
-        let grad_w = normalize_rows_backward(wf, &rw, &dwn, n, m);
-        Ok(KissStep { loss: gl.loss, grad_v, grad_w, sort_idx })
     }
 }
 
@@ -916,26 +1281,135 @@ mod tests {
         assert!(ew < 0.08, "kiss grad_w rel-L2 error {ew}");
     }
 
+    fn assert_sss_bits_eq(a: &SssStep, b: &SssStep, what: &str) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{what}: loss");
+        assert_eq!(a.sort_idx, b.sort_idx, "{what}: sort_idx");
+        for (ga, gb) in a.grad.iter().zip(&b.grad) {
+            assert_eq!(ga.to_bits(), gb.to_bits(), "{what}: grad");
+        }
+        for (ya, yb) in a.y.iter().zip(&b.y) {
+            assert_eq!(ya.to_bits(), yb.to_bits(), "{what}: y");
+        }
+        for (ca, cb) in a.colsum.iter().zip(&b.colsum) {
+            assert_eq!(ca.to_bits(), cb.to_bits(), "{what}: colsum");
+        }
+    }
+
     #[test]
-    fn sss_step_is_bit_identical_across_thread_counts() {
-        // N=600 exceeds PAR_MIN_N → the 4-thread backend really runs the
-        // parallel path; fixed chunking must make it bit-identical.
+    fn sss_step_is_bit_identical_across_pool_sizes() {
+        // N=600 exceeds PAR_MIN_N → multi-thread sessions really run the
+        // pool path; fixed chunking must make 1, 2 and 8 threads (and the
+        // stateless wrapper) bit-identical.
         let shape = StepShape::new(GridShape::new(20, 30), 3);
         let w = ramp_w(600);
         let x = pattern(600 * 3, 17);
         let inv: Vec<i32> = (0..600).map(|k| ((k * 7) % 600) as i32).collect();
-        let a = NativeBackend::new(1).sss_step(shape, &w, &x, &inv, 0.4, 0.5).unwrap();
-        let b = NativeBackend::new(4).sss_step(shape, &w, &x, &inv, 0.4, 0.5).unwrap();
-        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
-        assert_eq!(a.sort_idx, b.sort_idx);
-        for (ga, gb) in a.grad.iter().zip(&b.grad) {
-            assert_eq!(ga.to_bits(), gb.to_bits());
+        let base = NativeBackend::new(1).sss_step(shape, &w, &x, &inv, 0.4, 0.5).unwrap();
+        for threads in [2usize, 8] {
+            let out =
+                NativeBackend::new(threads).sss_step(shape, &w, &x, &inv, 0.4, 0.5).unwrap();
+            assert_sss_bits_eq(&out, &base, &format!("{threads} threads"));
         }
-        for (ya, yb) in a.y.iter().zip(&b.y) {
-            assert_eq!(ya.to_bits(), yb.to_bits());
+        // Explicit per-session thread override through the session API.
+        let be = NativeBackend::new(1);
+        let mut session = be.session(shape, Some(8)).unwrap();
+        let mut out = SssStep::new_for(shape);
+        session.sss_step(&w, &x, &inv, 0.4, 0.5, &mut out).unwrap();
+        assert_sss_bits_eq(&out, &base, "session threads=8 override");
+    }
+
+    #[test]
+    fn session_reuse_matches_fresh_sessions_on_an_sss_trajectory() {
+        // Drive a small gradient-descent trajectory twice: stateless calls
+        // (fresh session per step) vs one session reused — every step must
+        // be bit-identical, including after buffer reuse kicks in.
+        let shape = StepShape::new(GridShape::new(4, 4), 3);
+        let be = NativeBackend::new(2);
+        let x = pattern(16 * 3, 31);
+        let inv: Vec<i32> = (0..16).map(|k| (k * 3) % 16).collect();
+        let mut w_fresh = ramp_w(16);
+        let mut w_sess = w_fresh.clone();
+        let mut session = be.session(shape, None).unwrap();
+        let mut out = SssStep::new_for(shape);
+        for step in 0..5 {
+            let fresh = be.sss_step(shape, &w_fresh, &x, &inv, 0.5, 0.5).unwrap();
+            session.sss_step(&w_sess, &x, &inv, 0.5, 0.5, &mut out).unwrap();
+            assert_sss_bits_eq(&out, &fresh, &format!("step {step}"));
+            for (wv, &g) in w_fresh.iter_mut().zip(&fresh.grad) {
+                *wv -= 0.1 * g;
+            }
+            for (wv, &g) in w_sess.iter_mut().zip(&out.grad) {
+                *wv -= 0.1 * g;
+            }
         }
-        for (ca, cb) in a.colsum.iter().zip(&b.colsum) {
-            assert_eq!(ca.to_bits(), cb.to_bits());
+    }
+
+    #[test]
+    fn session_reuse_matches_fresh_sessions_for_gs_and_kiss() {
+        let shape = StepShape::new(GridShape::new(3, 3), 2);
+        let be = NativeBackend::new(1);
+        let x = pattern(9 * 2, 11);
+        let gumbel = vec![0.0f32; 81];
+        let mut logits: Vec<f32> = pattern(81, 3).iter().map(|v| v - 0.5).collect();
+        let mut session = be.session(shape, None).unwrap();
+        let mut gout = GsStep::new_for(9);
+        for step in 0..3 {
+            let fresh = be.gs_step(shape, &logits, &x, &gumbel, 1.0, 0.5).unwrap();
+            session.gs_step(&logits, &x, &gumbel, 1.0, 0.5, &mut gout).unwrap();
+            assert_eq!(gout.loss.to_bits(), fresh.loss.to_bits(), "gs step {step}");
+            for (a, b) in gout.grad.iter().zip(&fresh.grad) {
+                assert_eq!(a.to_bits(), b.to_bits(), "gs step {step}: grad");
+            }
+            for (l, &g) in logits.iter_mut().zip(&fresh.grad) {
+                *l -= 0.05 * g;
+            }
+        }
+        // Probe through the same session reuses its buffers too.
+        let probe_fresh = be.gs_probe(9, &logits, 0.5).unwrap();
+        let mut probe_sess = Vec::new();
+        session.gs_probe(&logits, 0.5, &mut probe_sess).unwrap();
+        for (a, b) in probe_sess.iter().zip(&probe_fresh) {
+            assert_eq!(a.to_bits(), b.to_bits(), "probe");
+        }
+
+        let m = be.kiss_rank(9, 2).unwrap();
+        let mut v: Vec<f32> = pattern(9 * m, 5).iter().map(|a| a + 0.2).collect();
+        let wf: Vec<f32> = pattern(9 * m, 9).iter().map(|a| a + 0.2).collect();
+        let mut kout = KissStep::new_for(9, m);
+        for step in 0..3 {
+            let fresh = be.kiss_step(shape, m, &v, &wf, &x, 6.0, 0.5).unwrap();
+            session.kiss_step(m, &v, &wf, &x, 6.0, 0.5, &mut kout).unwrap();
+            assert_eq!(kout.loss.to_bits(), fresh.loss.to_bits(), "kiss step {step}");
+            assert_eq!(kout.sort_idx, fresh.sort_idx, "kiss step {step}");
+            for (a, b) in kout.grad_v.iter().zip(&fresh.grad_v) {
+                assert_eq!(a.to_bits(), b.to_bits(), "kiss step {step}: grad_v");
+            }
+            for (a, b) in kout.grad_w.iter().zip(&fresh.grad_w) {
+                assert_eq!(a.to_bits(), b.to_bits(), "kiss step {step}: grad_w");
+            }
+            for (vv, &g) in v.iter_mut().zip(&fresh.grad_v) {
+                *vv -= 0.05 * g;
+            }
+        }
+    }
+
+    #[test]
+    fn stable_argsort_matches_std_stable_sort() {
+        for salt in [1u32, 2, 3] {
+            let mut w = pattern(137, salt);
+            // Inject ties to exercise stability.
+            w[10] = w[90];
+            w[20] = w[40];
+            let mut idx: Vec<u32> = (0..137).collect();
+            let mut tmp = vec![0u32; 137];
+            stable_argsort_desc(&mut idx, &mut tmp, &w);
+            let mut expect: Vec<u32> = (0..137).collect();
+            expect.sort_by(|&a, &b| {
+                w[b as usize]
+                    .partial_cmp(&w[a as usize])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            assert_eq!(idx, expect, "salt {salt}");
         }
     }
 
@@ -996,5 +1470,8 @@ mod tests {
         assert!(be.sss_step(shape, &w, &x, &inv, 0.5, -1.0).is_err());
         let bad_inv = vec![99i32; 16];
         assert!(be.sss_step(shape, &w, &x, &bad_inv, 0.5, 0.5).is_err());
+        // Bad shapes now fail at session creation.
+        let bad_shape = StepShape { n: 16, d: 3, h: 4, w: 5 };
+        assert!(be.session(bad_shape, None).is_err());
     }
 }

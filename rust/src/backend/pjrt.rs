@@ -6,27 +6,35 @@
 //! `pjrt` cargo feature; a `--no-default-features` build ships the
 //! [`super::NativeBackend`] alone.
 //!
+//! Sessions ([`StepBackend::session`]) wrap the runtime's executable
+//! lookup: the `(n, d, h)` executables are resolved once per session and
+//! pinned as `Rc<Executable>` handles, so the steady-state step loop skips
+//! the name formatting + string-keyed cache probe entirely, and results
+//! are copied into the caller's reusable out buffers. The runtime itself
+//! is held behind an `Rc`, so sessions are `'static` like native ones.
+//!
 //! Not `Send`/`Sync` (the runtime's compile cache is `Rc`/`RefCell`), so
 //! `Engine::sort_batch` builds one `PjrtBackend` per worker — exactly the
 //! per-worker-`Runtime` behavior this backend inherited.
 
 use std::path::Path;
+use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
-use crate::runtime::{Arg, Runtime};
+use crate::runtime::{Arg, Executable, Runtime};
 
-use super::{GsStep, KissStep, SssStep, StepBackend, StepShape};
+use super::{GsStep, KissStep, SssStep, StepBackend, StepSession, StepShape};
 
 /// Backend executing AOT artifacts via the PJRT runtime.
 pub struct PjrtBackend {
-    rt: Runtime,
+    rt: Rc<Runtime>,
 }
 
 impl PjrtBackend {
     /// Wrap an already-loaded runtime.
     pub fn new(rt: Runtime) -> Self {
-        PjrtBackend { rt }
+        PjrtBackend { rt: Rc::new(rt) }
     }
 
     /// Load the artifact manifest at `dir` and start a CPU PJRT client.
@@ -40,72 +48,175 @@ impl PjrtBackend {
     }
 }
 
-impl StepBackend for PjrtBackend {
-    fn name(&self) -> &'static str {
+/// A step session pinning the resolved executables for one `(n, d, h)`
+/// shape. Executables resolve lazily per step family (a GS run has no sss
+/// artifact to resolve) and are cached for the session's lifetime.
+struct PjrtSession {
+    rt: Rc<Runtime>,
+    shape: StepShape,
+    sss_exe: Option<Rc<Executable>>,
+    gs_exe: Option<Rc<Executable>>,
+    probe_exe: Option<Rc<Executable>>,
+    /// Keyed by the factor rank M (constant per driver run).
+    kiss_exe: Option<(usize, Rc<Executable>)>,
+    /// Zero noise for the probe artifact (lazily sized N²).
+    probe_zeros: Vec<f32>,
+}
+
+fn copy_f32(dst: &mut Vec<f32>, src: &[f32]) {
+    dst.clear();
+    dst.extend_from_slice(src);
+}
+
+fn copy_i32(dst: &mut Vec<i32>, src: &[i32]) {
+    dst.clear();
+    dst.extend_from_slice(src);
+}
+
+impl StepSession for PjrtSession {
+    fn backend_name(&self) -> &'static str {
         "pjrt"
     }
 
+    fn shape(&self) -> StepShape {
+        self.shape
+    }
+
     fn sss_step(
-        &self,
-        shape: StepShape,
+        &mut self,
         w: &[f32],
         x_shuf: &[f32],
         inv_idx: &[i32],
         tau: f32,
         norm: f32,
-    ) -> Result<SssStep> {
-        let StepShape { n, d, h, .. } = shape;
-        let exe = self
-            .rt
-            .sss_step(n, d, h)
-            .with_context(|| format!("no sss artifact for N={n} d={d} h={h}"))?;
-        let out = exe.run(&[
+        out: &mut SssStep,
+    ) -> Result<()> {
+        let StepShape { n, d, h, .. } = self.shape;
+        if self.sss_exe.is_none() {
+            let exe = self
+                .rt
+                .sss_step(n, d, h)
+                .with_context(|| format!("no sss artifact for N={n} d={d} h={h}"))?;
+            self.sss_exe = Some(exe);
+        }
+        let exe = self.sss_exe.as_ref().expect("resolved above");
+        let vals = exe.run(&[
             Arg::F32(w),
             Arg::F32(x_shuf),
             Arg::I32(inv_idx),
             Arg::ScalarF32(tau),
             Arg::ScalarF32(norm),
         ])?;
-        Ok(SssStep {
-            loss: out[0].scalar_f32()?,
-            grad: out[1].as_f32()?.to_vec(),
-            sort_idx: out[2].as_i32()?.to_vec(),
-            colsum: out[3].as_f32()?.to_vec(),
-            y: out[4].as_f32()?.to_vec(),
-        })
+        out.loss = vals[0].scalar_f32()?;
+        copy_f32(&mut out.grad, vals[1].as_f32()?);
+        copy_i32(&mut out.sort_idx, vals[2].as_i32()?);
+        copy_f32(&mut out.colsum, vals[3].as_f32()?);
+        copy_f32(&mut out.y, vals[4].as_f32()?);
+        Ok(())
     }
 
     fn gs_step(
-        &self,
-        shape: StepShape,
+        &mut self,
         logits: &[f32],
         x: &[f32],
         gumbel: &[f32],
         tau: f32,
         norm: f32,
-    ) -> Result<GsStep> {
-        let StepShape { n, d, h, .. } = shape;
-        let exe = self
-            .rt
-            .gs_step(n, d, h)
-            .with_context(|| format!("no gumbel-sinkhorn artifact for N={n} d={d} h={h}"))?;
-        let out = exe.run(&[
+        out: &mut GsStep,
+    ) -> Result<()> {
+        let StepShape { n, d, h, .. } = self.shape;
+        if self.gs_exe.is_none() {
+            let exe = self
+                .rt
+                .gs_step(n, d, h)
+                .with_context(|| format!("no gumbel-sinkhorn artifact for N={n} d={d} h={h}"))?;
+            self.gs_exe = Some(exe);
+        }
+        let exe = self.gs_exe.as_ref().expect("resolved above");
+        let vals = exe.run(&[
             Arg::F32(logits),
             Arg::F32(x),
             Arg::F32(gumbel),
             Arg::ScalarF32(tau),
             Arg::ScalarF32(norm),
         ])?;
-        Ok(GsStep { loss: out[0].scalar_f32()?, grad: out[1].as_f32()?.to_vec() })
+        out.loss = vals[0].scalar_f32()?;
+        copy_f32(&mut out.grad, vals[1].as_f32()?);
+        Ok(())
     }
 
-    fn gs_probe(&self, n: usize, logits: &[f32], tau: f32) -> Result<Vec<f32>> {
-        let probe = self.rt.gs_probe(n)?;
+    fn gs_probe(&mut self, logits: &[f32], tau: f32, out: &mut Vec<f32>) -> Result<()> {
+        let n = self.shape.n;
+        if self.probe_exe.is_none() {
+            let exe = self
+                .rt
+                .gs_probe(n)
+                .with_context(|| format!("no gs_probe artifact for N={n}"))?;
+            self.probe_exe = Some(exe);
+        }
+        let exe = self.probe_exe.as_ref().expect("resolved above");
         // The probe artifact takes a noise input; the final extraction is
         // always noise-free.
-        let zeros = vec![0.0f32; n * n];
-        let out = probe.run(&[Arg::F32(logits), Arg::F32(&zeros), Arg::ScalarF32(tau)])?;
-        Ok(out[0].as_f32()?.to_vec())
+        self.probe_zeros.resize(n * n, 0.0);
+        let vals = exe.run(&[
+            Arg::F32(logits),
+            Arg::F32(&self.probe_zeros),
+            Arg::ScalarF32(tau),
+        ])?;
+        copy_f32(out, vals[0].as_f32()?);
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn kiss_step(
+        &mut self,
+        m: usize,
+        v: &[f32],
+        wf: &[f32],
+        x: &[f32],
+        tau: f32,
+        norm: f32,
+        out: &mut KissStep,
+    ) -> Result<()> {
+        let StepShape { n, d, .. } = self.shape;
+        if self.kiss_exe.as_ref().map(|(mm, _)| *mm) != Some(m) {
+            let exe = self
+                .rt
+                .kiss_step(n, m, d)
+                .with_context(|| format!("no kissing artifact for N={n} M={m} d={d}"))?;
+            self.kiss_exe = Some((m, exe));
+        }
+        let (_, exe) = self.kiss_exe.as_ref().expect("resolved above");
+        let vals = exe.run(&[
+            Arg::F32(v),
+            Arg::F32(wf),
+            Arg::F32(x),
+            Arg::ScalarF32(tau),
+            Arg::ScalarF32(norm),
+        ])?;
+        out.loss = vals[0].scalar_f32()?;
+        copy_f32(&mut out.grad_v, vals[1].as_f32()?);
+        copy_f32(&mut out.grad_w, vals[2].as_f32()?);
+        copy_i32(&mut out.sort_idx, vals[3].as_i32()?);
+        Ok(())
+    }
+}
+
+impl StepBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn session(&self, shape: StepShape, _threads: Option<usize>) -> Result<Box<dyn StepSession>> {
+        Ok(Box::new(PjrtSession {
+            rt: Rc::clone(&self.rt),
+            shape,
+            sss_exe: None,
+            gs_exe: None,
+            probe_exe: None,
+            kiss_exe: None,
+            probe_zeros: Vec::new(),
+        }))
     }
 
     fn gs_probe_ready(&self, n: usize) -> Result<()> {
@@ -126,36 +237,5 @@ impl StepBackend for PjrtBackend {
             .find(|a| a.method == "kiss" && a.n == n && a.d == d)
             .map(|a| a.m)
             .with_context(|| format!("no kissing artifact for N={n} d={d}"))
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    fn kiss_step(
-        &self,
-        shape: StepShape,
-        m: usize,
-        v: &[f32],
-        wf: &[f32],
-        x: &[f32],
-        tau: f32,
-        norm: f32,
-    ) -> Result<KissStep> {
-        let StepShape { n, d, .. } = shape;
-        let exe = self
-            .rt
-            .kiss_step(n, m, d)
-            .with_context(|| format!("no kissing artifact for N={n} M={m} d={d}"))?;
-        let out = exe.run(&[
-            Arg::F32(v),
-            Arg::F32(wf),
-            Arg::F32(x),
-            Arg::ScalarF32(tau),
-            Arg::ScalarF32(norm),
-        ])?;
-        Ok(KissStep {
-            loss: out[0].scalar_f32()?,
-            grad_v: out[1].as_f32()?.to_vec(),
-            grad_w: out[2].as_f32()?.to_vec(),
-            sort_idx: out[3].as_i32()?.to_vec(),
-        })
     }
 }

@@ -1,0 +1,282 @@
+//! Persistent worker pool for the native backend's row-parallel kernels.
+//!
+//! The pre-session code paid a `std::thread::scope` (spawn + join of every
+//! worker) *twice per optimization step* — once for the forward row sweep,
+//! once for the backward. A [`WorkerPool`] replaces that with threads
+//! spawned once per [`super::StepSession`] and parked between dispatches:
+//! a dispatch publishes a borrowed job under a mutex, wakes the workers
+//! through a condvar, runs the dispatcher's own share inline, and blocks
+//! until every worker has acknowledged — no heap allocation, no thread
+//! creation, two mutex round-trips per worker per dispatch.
+//!
+//! Determinism is not the pool's concern: callers assign work by *logical
+//! worker index* (`0` is the dispatching thread, `1..=spawned` the pool
+//! threads) exactly as the old scoped code assigned chunk strides, so the
+//! arithmetic — and therefore every f32 rounding — is unchanged.
+//!
+//! # Safety model
+//!
+//! The job is a `&(dyn Fn(usize) + Sync)` borrowed from the dispatcher's
+//! stack, lifetime-erased into a raw fat pointer so it can sit in the
+//! shared slot. This is sound because [`WorkerPool::dispatch`] cannot
+//! return — not even by unwinding — before every worker has finished the
+//! epoch: the wait lives in a drop guard, and workers acknowledge each
+//! published epoch exactly once (wrapping their job call in
+//! `catch_unwind`). The borrow therefore strictly outlives every use.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Lifetime-erased fat pointer to the current job closure. Only ever
+/// dereferenced between an epoch's publication and its acknowledgement,
+/// while the dispatcher's frame (which owns the borrow) is pinned.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// Safety: the pointee is `Sync` (shared calls from many threads are fine)
+// and `dispatch` guarantees it outlives every dereference (see module
+// docs); the pointer itself is just an address.
+unsafe impl Send for JobPtr {}
+
+struct State {
+    /// Monotonic epoch counter; a bump publishes `job`/`active`.
+    epoch: u64,
+    job: Option<JobPtr>,
+    /// Logical workers that should run this epoch (index < active).
+    active: usize,
+    /// Spawned workers that have not yet acknowledged this epoch.
+    remaining: usize,
+    shutdown: bool,
+    panicked: bool,
+}
+
+struct Control {
+    state: Mutex<State>,
+    /// Workers wait here for a new epoch (or shutdown).
+    work: Condvar,
+    /// The dispatcher waits here for `remaining == 0`.
+    done: Condvar,
+}
+
+/// A set of parked worker threads executing borrowed row-sweep jobs.
+pub(crate) struct WorkerPool {
+    ctl: Arc<Control>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `spawned` parked workers, logical indices `1..=spawned`
+    /// (index 0 is the dispatching thread itself, so a pool for T-way
+    /// parallelism spawns T−1 threads).
+    pub fn new(spawned: usize) -> Self {
+        let ctl = Arc::new(Control {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                remaining: 0,
+                shutdown: false,
+                panicked: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..spawned)
+            .map(|t| {
+                let ctl = Arc::clone(&ctl);
+                std::thread::Builder::new()
+                    .name(format!("sss-step-{}", t + 1))
+                    .spawn(move || worker_loop(&ctl, t + 1))
+                    .expect("spawn native step worker")
+            })
+            .collect();
+        WorkerPool { ctl, handles }
+    }
+
+    /// Number of spawned (parked) worker threads.
+    pub fn spawned(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `job(i)` once for every logical worker index `i < active`,
+    /// index 0 on the calling thread. Blocks until all workers (active or
+    /// not — every spawned worker acknowledges every epoch) are done.
+    /// Panics in any worker are re-raised here after the epoch completes.
+    pub fn dispatch(&self, active: usize, job: &(dyn Fn(usize) + Sync)) {
+        // Hard invariant, checked in release too: an over-wide dispatch
+        // would silently skip the chunks of the never-spawned workers and
+        // let the chunk-ordered folds sum stale slab contents.
+        assert!(
+            active <= self.handles.len() + 1,
+            "active {} > pool capacity {}",
+            active,
+            self.handles.len() + 1
+        );
+        if active <= 1 || self.handles.is_empty() {
+            job(0);
+            return;
+        }
+        // Erase the borrow's lifetime; see the module-level safety model.
+        let ptr = JobPtr(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(job)
+        });
+        {
+            let mut st = self.ctl.state.lock().expect("pool mutex poisoned");
+            st.job = Some(ptr);
+            st.active = active;
+            st.remaining = self.handles.len();
+            st.panicked = false;
+            st.epoch += 1;
+            self.ctl.work.notify_all();
+        }
+        // The wait lives in a guard so it runs even if `job(0)` unwinds:
+        // workers may still be reading the borrowed job.
+        let guard = WaitGuard { ctl: &self.ctl };
+        job(0);
+        drop(guard);
+        if self.ctl.state.lock().expect("pool mutex poisoned").panicked {
+            panic!("native step worker panicked");
+        }
+    }
+}
+
+struct WaitGuard<'a> {
+    ctl: &'a Control,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.ctl.state.lock().expect("pool mutex poisoned");
+        while st.remaining > 0 {
+            st = self.ctl.done.wait(st).expect("pool mutex poisoned");
+        }
+        st.job = None;
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.ctl.state.lock().expect("pool mutex poisoned");
+            st.shutdown = true;
+            self.ctl.work.notify_all();
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(ctl: &Control, index: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (job, active) = {
+            let mut st = ctl.state.lock().expect("pool mutex poisoned");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = ctl.work.wait(st).expect("pool mutex poisoned");
+            }
+            seen = st.epoch;
+            (st.job.expect("published epoch carries a job"), st.active)
+        };
+        let ok = if index < active {
+            catch_unwind(AssertUnwindSafe(|| (unsafe { &*job.0 })(index))).is_ok()
+        } else {
+            true
+        };
+        let mut st = ctl.state.lock().expect("pool mutex poisoned");
+        if !ok {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            ctl.done.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn dispatch_covers_every_active_index_exactly_once() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.spawned(), 3);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            pool.dispatch(4, &|wk| {
+                hits[wk].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (wk, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 50, "worker {wk}");
+        }
+    }
+
+    #[test]
+    fn inactive_workers_stay_idle() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        pool.dispatch(2, &|wk| {
+            hits[wk].fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits[0].load(Ordering::Relaxed), 1);
+        assert_eq!(hits[1].load(Ordering::Relaxed), 1);
+        assert_eq!(hits[2].load(Ordering::Relaxed), 0);
+        assert_eq!(hits[3].load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn borrowed_state_is_visible_and_disjointly_writable() {
+        // The realistic use: workers write disjoint stripes of a buffer
+        // borrowed from the dispatcher's stack.
+        let pool = WorkerPool::new(1);
+        let mut out = vec![0u32; 8];
+        let base = out.as_mut_ptr() as usize;
+        pool.dispatch(2, &|wk| {
+            for c in (wk..8).step_by(2) {
+                // Safety: stripes are disjoint across worker indices.
+                unsafe { *(base as *mut u32).add(c) = (10 + wk) as u32 };
+            }
+        });
+        assert_eq!(out, vec![10, 11, 10, 11, 10, 11, 10, 11]);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_the_dispatcher() {
+        let pool = WorkerPool::new(1);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.dispatch(2, &|wk| {
+                if wk == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // The pool must still be usable after a worker panic.
+        let hits = AtomicUsize::new(0);
+        pool.dispatch(2, &|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn single_worker_dispatch_runs_inline() {
+        // With no spawned workers the job runs on the caller thread only.
+        let pool = WorkerPool::new(0);
+        let hits = AtomicUsize::new(0);
+        pool.dispatch(1, &|wk| {
+            hits.fetch_add(wk + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+}

@@ -73,7 +73,7 @@ impl ParsedArgs {
 const KNOWN_VALUE_OPTS: &[&str] = &[
     "n", "grid", "method", "out", "seed", "config", "artifacts", "dataset",
     "bits", "entropy", "scene-seed", "clusters", "dims", "batch", "workers",
-    "backend",
+    "backend", "threads",
 ];
 
 pub const USAGE: &str = "\
@@ -81,8 +81,8 @@ sssort — ShuffleSoftSort permutation-learning coordinator
 
 USAGE:
   sssort sort    [--method NAME] [--grid HxW] [--dataset colors|features]
-                 [--backend auto|native|pjrt] [--seed S] [--batch K]
-                 [--workers W] [--out dir] [k=v overrides]
+                 [--backend auto|native|pjrt] [--threads T] [--seed S]
+                 [--batch K] [--workers W] [--out dir] [k=v overrides]
                  sort dataset(s), report DPQ (batch >1 fans out across threads)
   sssort sog     [--n N] [--grid HxW] [--bits B] [--backend B] [--out dir]
                  run the Self-Organizing-Gaussians pipeline (Fig. 6)
@@ -93,6 +93,8 @@ Config overrides are bare k=v pairs, e.g. `phases=300 lr=0.3 shuffle=random`;
 `backend=native` works as an override pair too. The default backend is
 `auto`: use the AOT artifacts when artifacts/manifest.json exists, else run
 the learned methods on the pure-Rust native backend (no artifacts needed).
+`--threads T` (or a `threads=T` pair) sizes the native step session's
+worker pool; 0 = backend default. Results never depend on it.
 ";
 
 /// Full usage text: the static grammar plus the live method list from the
@@ -183,6 +185,14 @@ mod tests {
         assert_eq!(a.opt("backend"), Some("native"));
         assert!(a.positional.is_empty());
         assert!(usage().contains("--backend"));
+    }
+
+    #[test]
+    fn threads_takes_a_value() {
+        let a = parse(&["sort", "--threads", "4"]);
+        assert_eq!(a.opt_usize("threads", 0).unwrap(), 4);
+        assert!(a.positional.is_empty());
+        assert!(usage().contains("--threads"));
     }
 
     #[test]

@@ -9,6 +9,13 @@ use crate::coordinator::{optimizer::AdamConfig, schedule::TauSchedule};
 use crate::grid::GridShape;
 use crate::util::json::Json;
 
+/// The shared `threads` sentinel rule: 0 means "backend default" (`None`),
+/// anything else is an explicit session pool size. One definition for the
+/// CLI flag, the `threads=` override and both config builders.
+pub fn normalize_threads(threads: usize) -> Option<usize> {
+    (threads > 0).then_some(threads)
+}
+
 /// Configuration of the ShuffleSoftSort driver (Algorithm 1).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShuffleSoftSortConfig {
@@ -35,6 +42,10 @@ pub struct ShuffleSoftSortConfig {
     /// (EXPERIMENTS.md §Tuning: 50-d wants ≈2× the 3-d step). Disabled
     /// automatically when `lr` is overridden explicitly.
     pub lr_auto_scale: bool,
+    /// Worker-pool size for the backend step session (`None` = the
+    /// backend's default; `threads=0` resets to the default). Never
+    /// changes results — the native reduction is pool-size-invariant.
+    pub threads: Option<usize>,
 }
 
 impl ShuffleSoftSortConfig {
@@ -66,6 +77,7 @@ impl ShuffleSoftSortConfig {
             record_curve: true,
             greedy_accept: true,
             lr_auto_scale: true,
+            threads: None,
         }
     }
 
@@ -98,6 +110,7 @@ impl ShuffleSoftSortConfig {
             }
             "record_curve" => self.record_curve = value.parse()?,
             "greedy_accept" | "accept" => self.greedy_accept = value.parse()?,
+            "threads" => self.threads = normalize_threads(value.parse()?),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -141,6 +154,7 @@ pub struct ShuffleSoftSortConfigBuilder {
     max_extensions: Option<usize>,
     record_curve: Option<bool>,
     greedy_accept: Option<bool>,
+    threads: Option<usize>,
     overrides: Vec<(String, String)>,
 }
 
@@ -208,6 +222,13 @@ impl ShuffleSoftSortConfigBuilder {
         self
     }
 
+    /// Session worker-pool size (like the `threads=` override; 0 keeps
+    /// the backend default).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
     /// Queue one `k=v` override (applied last, CLI semantics).
     pub fn set(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
         self.overrides.push((key.into(), value.into()));
@@ -259,6 +280,9 @@ impl ShuffleSoftSortConfigBuilder {
         if let Some(v) = self.greedy_accept {
             cfg.greedy_accept = v;
         }
+        if let Some(v) = self.threads {
+            cfg.threads = normalize_threads(v);
+        }
         for (k, v) in &self.overrides {
             cfg.set(k, v)
                 .with_context(|| format!("invalid override '{k}={v}'"))?;
@@ -277,6 +301,9 @@ pub struct BaselineConfig {
     pub seed: u64,
     /// Gumbel noise scale for GS (annealed to 0 over the run).
     pub gumbel_scale: f32,
+    /// Worker-pool size for the backend step session (`None` = backend
+    /// default; `threads=0` resets). Never changes results.
+    pub threads: Option<usize>,
 }
 
 impl BaselineConfig {
@@ -297,6 +324,7 @@ impl BaselineConfig {
             adam: AdamConfig { lr: 0.5, ..Default::default() },
             seed: 42,
             gumbel_scale: 0.2,
+            threads: None,
         }
     }
 
@@ -316,6 +344,7 @@ impl BaselineConfig {
             "lr" => self.adam.lr = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "gumbel_scale" => self.gumbel_scale = value.parse()?,
+            "threads" => self.threads = normalize_threads(value.parse()?),
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -334,6 +363,7 @@ pub struct BaselineConfigBuilder {
     lr: Option<f32>,
     seed: Option<u64>,
     gumbel_scale: Option<f32>,
+    threads: Option<usize>,
     overrides: Vec<(String, String)>,
 }
 
@@ -377,6 +407,13 @@ impl BaselineConfigBuilder {
         self
     }
 
+    /// Session worker-pool size (like the `threads=` override; 0 keeps
+    /// the backend default).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
     /// Queue one `k=v` override (applied last, CLI semantics).
     pub fn set(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
         self.overrides.push((key.into(), value.into()));
@@ -416,6 +453,9 @@ impl BaselineConfigBuilder {
         if let Some(v) = self.gumbel_scale {
             cfg.gumbel_scale = v;
         }
+        if let Some(v) = self.threads {
+            cfg.threads = normalize_threads(v);
+        }
         for (k, v) in &self.overrides {
             cfg.set(k, v)
                 .with_context(|| format!("invalid override '{k}={v}'"))?;
@@ -447,6 +487,28 @@ mod tests {
         assert_eq!(c.shuffle, ShuffleStrategy::Random);
         assert!(c.set("nope", "1").is_err());
         assert!(c.set("shuffle", "nope").is_err());
+    }
+
+    #[test]
+    fn threads_override_parses_and_zero_resets() {
+        let mut c = ShuffleSoftSortConfig::for_grid(8, 8);
+        assert_eq!(c.threads, None);
+        c.set("threads", "4").unwrap();
+        assert_eq!(c.threads, Some(4));
+        c.set("threads", "0").unwrap();
+        assert_eq!(c.threads, None);
+        assert!(c.set("threads", "many").is_err());
+        let b = BaselineConfig::builder().grid(8, 8).threads(2).build().unwrap();
+        assert_eq!(b.threads, Some(2));
+        let b = BaselineConfig::builder()
+            .grid(8, 8)
+            .threads(2)
+            .set("threads", "0")
+            .build()
+            .unwrap();
+        assert_eq!(b.threads, None);
+        let s = ShuffleSoftSortConfig::builder().grid(8, 8).threads(3).build().unwrap();
+        assert_eq!(s.threads, Some(3));
     }
 
     #[test]

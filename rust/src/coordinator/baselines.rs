@@ -1,16 +1,18 @@
 //! Baseline drivers: plain SoftSort [14], Gumbel-Sinkhorn [11] and
 //! Kissing-to-Find-a-Match [4] — the comparison set of the paper's Table 2.
 //!
-//! All parameters live in Rust; the per-step compute functions are
-//! stateless (see `python/compile/model.py`) and execute on whichever
-//! [`StepBackend`] the driver holds — PJRT artifacts or the pure-Rust
-//! native backend. Every driver returns the same `SortOutcome` shape so
-//! the benches treat methods uniformly.
+//! All parameters live in Rust; the per-step compute functions execute on
+//! whichever [`StepBackend`] the driver holds — PJRT artifacts or the
+//! pure-Rust native backend. Like the ShuffleSoftSort driver, every
+//! baseline opens ONE `StepSession` per run and drives all of its Adam
+//! steps through it (reused scratch + out buffers, `cfg.threads` pool
+//! sizing). Every driver returns the same `SortOutcome` shape so the
+//! benches treat methods uniformly.
 
 use anyhow::Result;
 
 use crate::assignment::jv;
-use crate::backend::{StepBackend, StepShape};
+use crate::backend::{GsStep, KissStep, SssStep, StepBackend, StepSession, StepShape};
 use crate::config::{BaselineConfig, ShuffleSoftSortConfig};
 use crate::data::Dataset;
 use crate::metrics::dpq16;
@@ -59,6 +61,10 @@ impl<'b> SoftSortDriver<'b> {
         let norm = mean_pairwise_distance(&data.rows, n, d, 20_000, &mut rng);
         let identity_inv: Vec<i32> = (0..n as i32).collect();
 
+        // One session for the whole run (reused scratch, pool, out bufs).
+        let mut session = self.backend.session(shape, self.cfg.threads)?;
+        let mut step = SssStep::new_for(shape);
+
         // Unit-spacing descending ramp — same bandwidth rationale as the
         // ShuffleSoftSort driver (coordinator/mod.rs).
         let mut w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
@@ -66,13 +72,13 @@ impl<'b> SoftSortDriver<'b> {
         let mut idx = vec![0u32; n];
         for s in 0..self.cfg.steps {
             let tau = self.cfg.tau.phase_tau(s, self.cfg.steps);
-            let out = report.sections.time("execute", || {
-                self.backend.sss_step(shape, &w, &data.rows, &identity_inv, tau, norm)
+            report.sections.time("execute", || {
+                session.sss_step(&w, &data.rows, &identity_inv, tau, norm, &mut step)
             })?;
-            adam.step(&mut w, &out.grad);
-            report.record(0, s, tau, out.loss as f64);
+            adam.step(&mut w, &step.grad);
+            report.record(0, s, tau, step.loss as f64);
             if s + 1 == self.cfg.steps {
-                for (dst, &v) in idx.iter_mut().zip(&out.sort_idx) {
+                for (dst, &v) in idx.iter_mut().zip(&step.sort_idx) {
                     *dst = v as u32;
                 }
             }
@@ -126,6 +132,12 @@ impl<'b> GumbelSinkhornDriver<'b> {
         // missing probe artifact before the optimization loop, not after.
         self.backend.gs_probe_ready(n)?;
 
+        // One session per run. Its Sinkhorn state slab (2·iters N²
+        // log-matrices) is allocated once and reused by every step — the
+        // pre-session code re-allocated that stack per step.
+        let mut session = self.backend.session(shape, self.cfg.threads)?;
+        let mut step = GsStep::new_for(n);
+
         let mut logits = vec![0.0f32; n * n];
         // Small random init breaks the uniform-P symmetry.
         for v in logits.iter_mut() {
@@ -143,19 +155,20 @@ impl<'b> GumbelSinkhornDriver<'b> {
                     *v = rng.gumbel() * scale;
                 }
             });
-            let out = report.sections.time("execute", || {
-                self.backend.gs_step(shape, &logits, &data.rows, &gumbel, tau, norm)
+            report.sections.time("execute", || {
+                session.gs_step(&logits, &data.rows, &gumbel, tau, norm, &mut step)
             })?;
             report.sections.time("adam", || {
-                adam.step(&mut logits, &out.grad);
+                adam.step(&mut logits, &step.grad);
             });
-            report.record(0, s, tau, out.loss as f64);
+            report.record(0, s, tau, step.loss as f64);
         }
 
         // Final hard extraction: P from the probe (noise-free, sharp τ),
         // then the optimal assignment via Jonker–Volgenant on -P.
-        let p = report.sections.time("execute", || {
-            self.backend.gs_probe(n, &logits, self.cfg.tau.tau_end)
+        let mut p = Vec::new();
+        report.sections.time("execute", || {
+            session.gs_probe(&logits, self.cfg.tau.tau_end, &mut p)
         })?;
         let perm = report.sections.time("extract", || {
             let mut cost = vec![0.0f64; n * n];
@@ -208,6 +221,10 @@ impl<'b> KissingDriver<'b> {
         };
         let norm = mean_pairwise_distance(&data.rows, n, d, 20_000, &mut rng);
 
+        // One session per run (reused factor/normalization scratch).
+        let mut session = self.backend.session(shape, self.cfg.threads)?;
+        let mut step = KissStep::new_for(n, m);
+
         let mut v: Vec<f32> = (0..n * m).map(|_| rng.gaussian()).collect();
         let mut wf: Vec<f32> = (0..n * m).map(|_| rng.gaussian()).collect();
         let mut adam_v = Adam::new(self.cfg.adam.clone(), n * m);
@@ -216,16 +233,16 @@ impl<'b> KissingDriver<'b> {
 
         for s in 0..self.cfg.steps {
             let tau = self.cfg.tau.phase_tau(s, self.cfg.steps);
-            let out = report.sections.time("execute", || {
-                self.backend.kiss_step(shape, m, &v, &wf, &data.rows, tau, norm)
+            report.sections.time("execute", || {
+                session.kiss_step(m, &v, &wf, &data.rows, tau, norm, &mut step)
             })?;
             report.sections.time("adam", || {
-                adam_v.step(&mut v, &out.grad_v);
-                adam_w.step(&mut wf, &out.grad_w);
+                adam_v.step(&mut v, &step.grad_v);
+                adam_w.step(&mut wf, &step.grad_w);
             });
-            report.record(0, s, tau, out.loss as f64);
+            report.record(0, s, tau, step.loss as f64);
             if s + 1 == self.cfg.steps {
-                for (dst, &x) in idx.iter_mut().zip(&out.sort_idx) {
+                for (dst, &x) in idx.iter_mut().zip(&step.sort_idx) {
                     *dst = x as u32;
                 }
             }
@@ -257,6 +274,7 @@ pub fn softsort_budget_of(cfg: &ShuffleSoftSortConfig) -> BaselineConfig {
         adam: cfg.adam.clone(),
         seed: cfg.seed,
         gumbel_scale: 0.0,
+        threads: cfg.threads,
     }
 }
 

@@ -17,7 +17,11 @@
 //!
 //! The original data never moves; the tracker owns the arrangement. The
 //! drivers never touch the runtime or artifacts directly — all compute
-//! dispatches through `&dyn StepBackend` (see `crate::backend`).
+//! dispatches through `&dyn StepBackend` (see `crate::backend`). Each run
+//! opens ONE `StepSession` up front and drives every Adam step through it:
+//! scratch buffers and the native worker pool are allocated once, the
+//! inner step loop is allocation-free (results land in a reusable
+//! `SssStep`), and `cfg.threads` sizes the session pool.
 
 pub mod baselines;
 pub mod events;
@@ -27,7 +31,7 @@ pub mod shuffle;
 
 use anyhow::Result;
 
-use crate::backend::{StepBackend, StepShape};
+use crate::backend::{SssStep, StepBackend, StepSession, StepShape};
 use crate::config::ShuffleSoftSortConfig;
 use crate::data::Dataset;
 use crate::metrics::dpq16;
@@ -98,6 +102,12 @@ pub(crate) fn run_shuffle_softsort(
     // Loss normalizer: dataset mean pairwise distance (DESIGN §7).
     let norm = mean_pairwise_distance(&data.rows, n, d, 20_000, &mut rng);
 
+    // One session for the whole run: scratch + worker pool allocated here,
+    // every step below reuses them (zero steady-state allocations).
+    let mut session = backend.session(shape, cfg.threads)?;
+    let mut step = SssStep::new_for(shape);
+    let mut last_sort_idx = vec![0i32; n];
+
     let mut tracker = Tracker::new(n);
     let mut adam_cfg = cfg.adam.clone();
     adam_cfg.lr = cfg.effective_lr(d);
@@ -131,16 +141,16 @@ pub(crate) fn run_shuffle_softsort(
             *dst = v as i32;
         }
 
-        // Inner SoftSort iterations with the τ_i ramp.
-        let mut last_sort_idx: Vec<i32> = Vec::new();
+        // Inner SoftSort iterations with the τ_i ramp. The step loop is
+        // allocation-free: the session owns all scratch, `step` is reused.
         for i in 0..cfg.inner_iters {
             let tau_i = cfg.tau.inner_tau(tau, i, cfg.inner_iters);
-            let out = report.sections.time("execute", || {
-                backend.sss_step(shape, &w, &x_shuf, &inv_idx_i32, tau_i, norm)
+            report.sections.time("execute", || {
+                session.sss_step(&w, &x_shuf, &inv_idx_i32, tau_i, norm, &mut step)
             })?;
-            let loss = out.loss as f64;
+            let loss = step.loss as f64;
             report.sections.time("adam", || {
-                adam.step(&mut w, &out.grad);
+                adam.step(&mut w, &step.grad);
             });
             if cfg.record_curve {
                 report.record(r, i, tau_i, loss);
@@ -149,20 +159,20 @@ pub(crate) fn run_shuffle_softsort(
                 report.steps += 1;
             }
             if i + 1 == cfg.inner_iters {
-                last_sort_idx = out.sort_idx;
+                last_sort_idx.copy_from_slice(&step.sort_idx);
             }
         }
 
         // Hard extraction with the paper's extension rule.
         let sort_perm = extract_valid(
-            backend,
-            shape,
+            session.as_mut(),
+            &mut step,
             &w,
             &x_shuf,
             &inv_idx_i32,
             tau,
             norm,
-            last_sort_idx,
+            &last_sort_idx,
             cfg.max_extensions,
             &mut adam,
             &mut report,
@@ -211,22 +221,24 @@ pub(crate) fn run_shuffle_softsort(
 }
 
 /// Argmax → validity check → extension iterations at sharpened τ → repair.
+/// Extensions run through the same run-level session (`step` is the run's
+/// reusable out buffer).
 #[allow(clippy::too_many_arguments)]
 fn extract_valid(
-    backend: &dyn StepBackend,
-    shape: StepShape,
+    session: &mut dyn StepSession,
+    step: &mut SssStep,
     w: &[f32],
     x_shuf: &[f32],
     inv_idx: &[i32],
     tau: f32,
     norm: f32,
-    first_idx: Vec<i32>,
+    first_idx: &[i32],
     max_extensions: usize,
     adam: &mut Adam,
     report: &mut RunReport,
 ) -> Result<Permutation> {
     let to_u32 = |v: &[i32]| v.iter().map(|&x| x as u32).collect::<Vec<u32>>();
-    let mut idx = to_u32(&first_idx);
+    let mut idx = to_u32(first_idx);
     if Permutation::count_duplicates(&idx) == 0 {
         return Ok(Permutation::from_vec(idx).expect("checked"));
     }
@@ -237,11 +249,12 @@ fn extract_valid(
     for _ in 0..max_extensions {
         report.extensions += 1;
         tau_ext *= 0.6;
-        let out = report.sections.time("execute", || {
-            backend.sss_step(shape, &w, x_shuf, inv_idx, tau_ext, norm)
+        report.sections.time("execute", || {
+            session.sss_step(&w, x_shuf, inv_idx, tau_ext, norm, step)
         })?;
-        adam.step(&mut w, &out.grad);
-        idx = to_u32(&out.sort_idx);
+        adam.step(&mut w, &step.grad);
+        idx.clear();
+        idx.extend(step.sort_idx.iter().map(|&x| x as u32));
         if Permutation::count_duplicates(&idx) == 0 {
             return Ok(Permutation::from_vec(idx).expect("checked"));
         }

@@ -49,6 +49,10 @@ fn engine_for(args: &ParsedArgs) -> Result<Engine> {
     if let Some(b) = args.opt("backend") {
         builder = builder.backend(BackendChoice::parse(b)?);
     }
+    if let Some(t) = args.opt("threads") {
+        let t: usize = t.parse().map_err(|_| anyhow!("--threads must be an integer"))?;
+        builder = builder.threads(t);
+    }
     Ok(builder.build())
 }
 

@@ -198,6 +198,83 @@ fn sort_batch_native_shares_one_backend_and_is_bit_identical_to_sequential() {
 }
 
 #[test]
+fn threads_override_and_engine_default_are_accepted_and_invariant() {
+    use shufflesort::backend::NativeBackend;
+
+    let engine = Engine::builder("/definitely/not/artifacts").build();
+    let g = GridShape::new(4, 4);
+    let ds = random_colors(16, 12);
+    let ov_base = overrides(&[("phases", "32"), ("record_curve", "false")]);
+    let base = engine.sort("shuffle-softsort", &ds, g, &ov_base).unwrap();
+
+    // `threads=` flows through the registry like any config key and never
+    // changes results (the native reduction is pool-size-invariant).
+    let ov = overrides(&[("phases", "32"), ("record_curve", "false"), ("threads", "3")]);
+    let out = engine.sort("shuffle-softsort", &ds, g, &ov).unwrap();
+    assert_eq!(out.perm, base.perm);
+    assert_eq!(out.arranged, base.arranged);
+
+    // The engine-level default (the --threads flag) composes the same way
+    // and loses to an explicit per-call pair (last-wins).
+    let engine_t = Engine::builder("/definitely/not/artifacts").threads(2).build();
+    let out = engine_t.sort("shuffle-softsort", &ds, g, &ov_base).unwrap();
+    assert_eq!(out.perm, base.perm);
+    let out = engine_t.sort("shuffle-softsort", &ds, g, &ov).unwrap();
+    assert_eq!(out.perm, base.perm);
+
+    // Baselines take the key too, and bad values error helpfully.
+    let out = engine
+        .sort("softsort", &ds, g, &overrides(&[("steps", "32"), ("threads", "2")]))
+        .unwrap();
+    assert_valid_perm(&out.perm, 16, "softsort threads=2");
+    let err = engine
+        .sort("shuffle-softsort", &ds, g, &overrides(&[("threads", "lots")]))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("threads"), "{err:#}");
+
+    // The backend default is what sessions inherit when unset.
+    assert_eq!(NativeBackend::new(3).threads(), 3);
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn engine_is_send_on_pure_rust_builds() {
+    // The session cache must not cost the pure-Rust build the ability to
+    // move an Engine into a worker thread (native sessions are Send).
+    fn assert_send<T: Send>() {}
+    assert_send::<Engine>();
+}
+
+#[test]
+fn engine_step_session_is_memoized_and_runs_native_steps() {
+    use shufflesort::backend::{NativeBackend, SssStep, StepBackend, StepSession};
+
+    // auto + bogus artifacts dir → native; step sessions need no drivers.
+    let engine = Engine::builder("/definitely/not/artifacts").build();
+    let ds = random_colors(64, 9);
+    let w: Vec<f32> = (0..64).map(|i| (64 - i) as f32).collect();
+    let inv: Vec<i32> = (0..64).collect();
+    {
+        let mut sess = engine.step_session(64, 3, 8).unwrap();
+        assert_eq!(sess.backend_name(), "native");
+        assert_eq!((sess.shape().n, sess.shape().d, sess.shape().h), (64, 3, 8));
+        let mut out = SssStep::new_for(sess.shape());
+        sess.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut out).unwrap();
+        let direct = NativeBackend::default()
+            .sss_step(sess.shape(), &w, &ds.rows, &inv, 0.3, 0.5)
+            .unwrap();
+        assert_eq!(out.loss.to_bits(), direct.loss.to_bits());
+        assert_eq!(out.sort_idx, direct.sort_idx);
+    }
+    // Second lookup of the same key reuses the memoized session.
+    let sess = engine.step_session(64, 3, 8).unwrap();
+    assert_eq!(sess.shape().n, 64);
+    drop(sess);
+    // Ill-formed grids are rejected up front.
+    assert!(engine.step_session(63, 3, 8).is_err());
+}
+
+#[test]
 fn sort_batch_reports_per_item_errors_for_pjrt_without_artifacts() {
     // A learned method pinned to the pjrt backend with a bogus artifacts
     // dir must fail per item (not panic), keeping positional alignment —

@@ -66,6 +66,40 @@ fn native_shuffle_softsort_is_deterministic_per_seed() {
 }
 
 #[test]
+fn native_session_pool_sizes_do_not_change_results_end_to_end() {
+    // N = 640 ≥ PAR_MIN_N, so multi-thread sessions really engage the
+    // worker pool. The chunk-ordered reductions must make every pool size
+    // — via `cfg.threads` or the backend default — bit-identical through a
+    // full ShuffleSoftSort run (perm, arrangement, DPQ).
+    let ds = random_colors(640, 5);
+    let base_cfg = {
+        let mut cfg = ShuffleSoftSortConfig::for_grid(20, 32);
+        cfg.phases = 3;
+        cfg.record_curve = false;
+        cfg
+    };
+    let run = |threads: Option<usize>, backend_threads: usize| {
+        let backend = NativeBackend::new(backend_threads);
+        let mut cfg = base_cfg.clone();
+        cfg.threads = threads;
+        ShuffleSoftSort::new(&backend, cfg).unwrap().sort(&ds).unwrap()
+    };
+    let base = run(None, 1);
+    for (threads, bt) in [(Some(2), 1), (Some(8), 1), (None, 4)] {
+        let out = run(threads, bt);
+        assert_eq!(out.perm, base.perm, "threads={threads:?} backend_threads={bt}");
+        for (a, b) in out.arranged.iter().zip(&base.arranged) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={threads:?} backend_threads={bt}");
+        }
+        assert_eq!(
+            out.report.final_dpq.to_bits(),
+            base.report.final_dpq.to_bits(),
+            "threads={threads:?} backend_threads={bt}"
+        );
+    }
+}
+
+#[test]
 fn native_baseline_drivers_run_end_to_end() {
     let ds = random_colors(64, 42);
     let g = GridShape::new(8, 8);
