@@ -1,10 +1,15 @@
 //! §Perf harness: measure per-step execute time of the sss_step variants
 //! lowered by `python -m compile.perf_variants` (Pallas row-block B ×
 //! backward chunk C) and print the ranking. Drives the L1/L2 rows of
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf. Samples land in the same machine-readable report
+//! scheme as the bench targets (`target/bench_reports/perf_sweep.json`,
+//! written through the `serve::json` serializer), so the CI perf artifact
+//! format covers every bench in the repo.
 
-use shufflesort::bench::bench;
+use shufflesort::bench::{bench, write_json_report, Sample};
 use shufflesort::runtime::{Arg, Runtime};
+
+const REPORT_PATH: &str = "target/bench_reports/perf_sweep.json";
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts_perf".into());
@@ -12,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     let names = rt.artifact_names();
     println!("{} variants in {dir}", names.len());
 
-    let mut results: Vec<(String, f64)> = Vec::new();
+    let mut samples: Vec<Sample> = Vec::new();
     for name in names {
         let exe = rt.load(&name)?;
         let n = exe.meta.n;
@@ -31,12 +36,20 @@ fn main() -> anyhow::Result<()> {
             .unwrap()
         });
         println!("{}", s.line());
-        results.push((s.name, s.min_s));
+        samples.push(s);
     }
-    results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+
+    let mut ranking: Vec<(&str, f64)> =
+        samples.iter().map(|s| (s.name.as_str(), s.min_s)).collect();
+    ranking.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
     println!("\nranking (min step time):");
-    for (name, t) in &results {
+    for (name, t) in &ranking {
         println!("  {:<34} {:.2} ms", name, t * 1e3);
+    }
+
+    match write_json_report(REPORT_PATH, "perf_sweep", &samples) {
+        Ok(()) => println!("\nwrote {REPORT_PATH}"),
+        Err(e) => eprintln!("\ncould not write {REPORT_PATH}: {e}"),
     }
     Ok(())
 }

@@ -9,7 +9,7 @@
 mod common;
 
 use shufflesort::api::{overrides, MethodKind};
-use shufflesort::bench::{banner, Table};
+use shufflesort::bench::{banner, write_table_report, Table};
 use shufflesort::data::random_colors;
 use shufflesort::grid::GridShape;
 use shufflesort::metrics::dpq16;
@@ -47,6 +47,11 @@ fn main() {
         ]);
     }
     table.print();
+    const REPORT_PATH: &str = "target/bench_reports/heuristics.json";
+    match write_table_report(REPORT_PATH, "heuristics", &table) {
+        Ok(()) => println!("\nwrote {REPORT_PATH}"),
+        Err(e) => eprintln!("\ncould not write {REPORT_PATH}: {e}"),
+    }
     println!(
         "\nexpected shape: LAS/FLAS/SOM strong; SSM/DR+LAP weaker; ShuffleSoftSort in the\n\
          strong band and far above plain SoftSort."

@@ -141,6 +141,7 @@ impl Engine {
             backend: None,
             threads: None,
             workers: None,
+            registry: None,
         }
     }
 
@@ -469,12 +470,22 @@ pub struct EngineBuilder {
     backend: Option<BackendChoice>,
     threads: Option<usize>,
     workers: Option<usize>,
+    registry: Option<MethodRegistry>,
 }
 
 impl EngineBuilder {
     /// Default backend choice for the session (default: `auto`).
     pub fn backend(mut self, choice: BackendChoice) -> Self {
         self.backend = Some(choice);
+        self
+    }
+
+    /// Method registry for the session (default: the built-in set). Pass
+    /// `MethodRegistry::with_methods(..)` to serve plugin methods through
+    /// this engine — `sort`, `sort_batch` and `registry()` (and therefore
+    /// the serve layer's `GET /v1/methods`) all reflect it.
+    pub fn registry(mut self, registry: MethodRegistry) -> Self {
+        self.registry = Some(registry);
         self
     }
 
@@ -500,7 +511,7 @@ impl EngineBuilder {
         });
         Engine {
             artifacts_dir: self.artifacts_dir,
-            registry: MethodRegistry::new(),
+            registry: self.registry.unwrap_or_default(),
             choice: self.backend.unwrap_or_default(),
             native: OnceCell::new(),
             #[cfg(feature = "pjrt")]

@@ -27,7 +27,7 @@ pub mod registry;
 pub mod sorter;
 
 pub use engine::{Engine, EngineBuilder};
-pub use registry::{MethodKind, MethodRegistry, MethodSpec};
+pub use registry::{MethodCtor, MethodKind, MethodRegistry, MethodSpec};
 pub use sorter::{HeuristicSorter, LearnedSorter, Sorter};
 
 // Backend selection is part of the public sorting API surface.

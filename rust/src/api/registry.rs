@@ -24,6 +24,17 @@ pub enum MethodKind {
     Heuristic,
 }
 
+/// Constructor signature for externally registered (plugin) methods.
+///
+/// `backend` is `Some` for [`MethodKind::Learned`] specs (the `Engine`
+/// resolves one) and `None` for heuristics; `overrides` are the CLI's
+/// `k=v` pairs. Implementations should validate overrides eagerly and
+/// return errors naming the offending key, like the built-ins do.
+pub type MethodCtor = for<'b> fn(
+    Option<&'b dyn StepBackend>,
+    &[(String, String)],
+) -> Result<Box<dyn Sorter + 'b>>;
+
 /// Static description of one registered method.
 #[derive(Clone, Copy, Debug)]
 pub struct MethodSpec {
@@ -34,6 +45,10 @@ pub struct MethodSpec {
     pub kind: MethodKind,
     /// One-line summary for `sssort help`.
     pub summary: &'static str,
+    /// Constructor for plugin methods registered via
+    /// [`MethodRegistry::with_methods`]; `None` for the built-in set
+    /// (which the registry constructs itself).
+    pub ctor: Option<MethodCtor>,
 }
 
 const SPECS: &[MethodSpec] = &[
@@ -42,89 +57,119 @@ const SPECS: &[MethodSpec] = &[
         aliases: &["sss", "shufflesoftsort"],
         kind: MethodKind::Learned,
         summary: "the paper's Algorithm 1: N params, shuffled SoftSort phases",
+        ctor: None,
     },
     MethodSpec {
         name: "softsort",
         aliases: &[],
         kind: MethodKind::Learned,
         summary: "plain SoftSort baseline (Prillo & Eisenschlos), N params",
+        ctor: None,
     },
     MethodSpec {
         name: "gumbel-sinkhorn",
         aliases: &["gs"],
         kind: MethodKind::Learned,
         summary: "Gumbel-Sinkhorn baseline (Mena et al.), N^2 params",
+        ctor: None,
     },
     MethodSpec {
         name: "kissing",
         aliases: &["kiss"],
         kind: MethodKind::Learned,
         summary: "low-rank Kissing baseline (Droege et al.), 2NM params",
+        ctor: None,
     },
     MethodSpec {
         name: "flas",
         aliases: &[],
         kind: MethodKind::Heuristic,
         summary: "Fast Linear Assignment Sorting (subset LAPs per epoch)",
+        ctor: None,
     },
     MethodSpec {
         name: "las",
         aliases: &[],
         kind: MethodKind::Heuristic,
         summary: "Linear Assignment Sorting (full-grid LAP per epoch)",
+        ctor: None,
     },
     MethodSpec {
         name: "som",
         aliases: &[],
         kind: MethodKind::Heuristic,
         summary: "Self-Organizing Map layout (Kohonen)",
+        ctor: None,
     },
     MethodSpec {
         name: "ssm",
         aliases: &[],
         kind: MethodKind::Heuristic,
         summary: "Self-Sorting Map (hierarchical quad swaps)",
+        ctor: None,
     },
     MethodSpec {
         name: "pca-lap",
         aliases: &["pca"],
         kind: MethodKind::Heuristic,
         summary: "PCA projection to 2-D + Jonker-Volgenant grid assignment",
+        ctor: None,
     },
     MethodSpec {
         name: "tsne-lap",
         aliases: &["tsne"],
         kind: MethodKind::Heuristic,
         summary: "t-SNE projection to 2-D + Jonker-Volgenant grid assignment",
+        ctor: None,
     },
 ];
 
-/// The built-in method set. Zero-sized and `Copy`: the registry is a
-/// namespace over the crate's drivers, safe to share across threads.
+/// The method set: the crate's built-in drivers plus, optionally, a
+/// `'static` slice of externally registered plugin specs (see
+/// [`MethodRegistry::with_methods`]). Two words and `Copy`, so it is still
+/// cheap to hand around and safe to share across threads.
 #[derive(Clone, Copy, Debug, Default)]
-pub struct MethodRegistry;
+pub struct MethodRegistry {
+    /// Externally registered methods; built-ins take precedence on
+    /// name/alias collisions.
+    extra: &'static [MethodSpec],
+}
 
 impl MethodRegistry {
+    /// The built-in method set only.
     pub fn new() -> Self {
-        MethodRegistry
+        MethodRegistry { extra: &[] }
     }
 
-    /// All method specs, canonical order.
-    pub fn specs(&self) -> &'static [MethodSpec] {
-        SPECS
+    /// The built-in set extended with plugin methods. `extra` specs must
+    /// carry a `ctor` (the registry has no driver of its own for them);
+    /// building a ctor-less extra method is an error at `build` time.
+    /// Everything downstream — `Engine::sort`, the CLI `--method` lookup,
+    /// `GET /v1/methods` on the serve layer — sees the extended set when
+    /// handed this registry (e.g. via `Engine::builder(..).registry(..)`).
+    pub fn with_methods(extra: &'static [MethodSpec]) -> Self {
+        MethodRegistry { extra }
+    }
+
+    /// All method specs: built-ins in canonical order, then extras.
+    pub fn specs(&self) -> Vec<&'static MethodSpec> {
+        let extra: &'static [MethodSpec] = self.extra;
+        SPECS.iter().chain(extra.iter()).collect()
     }
 
     /// Canonical names of every registered method.
     pub fn names(&self) -> Vec<&'static str> {
-        SPECS.iter().map(|s| s.name).collect()
+        self.specs().iter().map(|s| s.name).collect()
     }
 
     /// Resolve a name or alias to its spec. Case-insensitive, and `_` is
     /// accepted for `-` (so `shuffle_softsort` hits `shuffle-softsort`).
     pub fn resolve(&self, name: &str) -> Option<&'static MethodSpec> {
         let lower = name.to_ascii_lowercase().replace('_', "-");
+        let extra: &'static [MethodSpec] = self.extra;
         SPECS
             .iter()
+            .chain(extra.iter())
             .find(|s| s.name == lower || s.aliases.contains(&lower.as_str()))
     }
 
@@ -151,6 +196,11 @@ impl MethodRegistry {
         overrides: &[(String, String)],
     ) -> Result<Box<dyn Sorter + 'b>> {
         let spec = self.resolve_or_err(name)?;
+        // Plugin methods construct through their registered ctor; the
+        // backend contract matches the built-ins (Some for learned specs).
+        if let Some(ctor) = spec.ctor {
+            return ctor(backend, overrides);
+        }
         match spec.kind {
             MethodKind::Learned => {
                 let kind = match spec.name {
@@ -158,7 +208,10 @@ impl MethodRegistry {
                     "softsort" => LearnedKind::SoftSort,
                     "gumbel-sinkhorn" => LearnedKind::GumbelSinkhorn,
                     "kissing" => LearnedKind::Kissing,
-                    other => unreachable!("unmapped learned method {other}"),
+                    other => bail!(
+                        "method '{other}' has no built-in driver and no registered \
+                         constructor (plugin MethodSpecs need `ctor: Some(..)`)"
+                    ),
                 };
                 validate_learned_overrides(kind, overrides)?;
                 let backend = backend.ok_or_else(|| {
@@ -265,7 +318,10 @@ fn build_heuristic(name: &'static str, overrides: &[(String, String)]) -> Result
             }
             Box::new(DrLap { use_tsne: name == "tsne-lap" })
         }
-        other => unreachable!("unmapped heuristic method {other}"),
+        other => bail!(
+            "heuristic '{other}' has no built-in driver and no registered \
+             constructor (plugin MethodSpecs need `ctor: Some(..)`)"
+        ),
     };
     Ok(HeuristicSorter::new(name, inner, seed))
 }
@@ -394,6 +450,70 @@ mod tests {
             assert_eq!(out.report.method, spec.name);
             assert!(out.report.sections.count("sort") > 0, "{}", spec.name);
         }
+    }
+
+    /// A toy plugin method for the `with_methods` tests: lays items out in
+    /// their input order (the identity permutation).
+    struct IdentityLayout;
+
+    impl crate::heuristics::GridSorter for IdentityLayout {
+        fn name(&self) -> &'static str {
+            "identity"
+        }
+
+        fn sort(
+            &self,
+            _data: &[f32],
+            _d: usize,
+            g: crate::grid::GridShape,
+            _seed: u64,
+        ) -> crate::perm::Permutation {
+            crate::perm::Permutation::identity(g.n())
+        }
+    }
+
+    fn build_identity<'b>(
+        _backend: Option<&'b dyn StepBackend>,
+        overrides: &[(String, String)],
+    ) -> Result<Box<dyn Sorter + 'b>> {
+        let mut seed = 0u64;
+        for (k, v) in overrides {
+            match k.as_str() {
+                "seed" => seed = parse_val(k, v)?,
+                _ => bail!("unknown config key '{k}' for identity (allowed: seed)"),
+            }
+        }
+        Ok(Box::new(HeuristicSorter::new("identity", Box::new(IdentityLayout), seed)))
+    }
+
+    static PLUGIN_SPECS: &[MethodSpec] = &[MethodSpec {
+        name: "identity",
+        aliases: &["noop"],
+        kind: MethodKind::Heuristic,
+        summary: "test plugin: identity layout",
+        ctor: Some(build_identity),
+    }];
+
+    #[test]
+    fn with_methods_registers_buildable_plugin_specs() {
+        let reg = MethodRegistry::with_methods(PLUGIN_SPECS);
+        // Listed after the built-ins, resolvable by name and alias.
+        assert!(reg.names().contains(&"identity"));
+        assert!(reg.names().contains(&"shuffle-softsort"));
+        assert_eq!(reg.resolve("noop").unwrap().name, "identity");
+        assert_eq!(reg.specs().len(), SPECS.len() + 1);
+        // Builds and sorts through the ctor.
+        let g = GridShape::new(4, 4);
+        let ds = random_colors(16, 5);
+        let out = reg.build("identity", None, &[]).unwrap().sort(&ds, g).unwrap();
+        assert_eq!(out.perm.as_slice(), (0..16).collect::<Vec<u32>>().as_slice());
+        assert_eq!(out.report.method, "identity");
+        // Ctor-level override validation still names the offending key.
+        let bad = crate::api::overrides(&[("frobnicate", "1")]);
+        let err = reg.build("identity", None, &bad).unwrap_err();
+        assert!(format!("{err:#}").contains("frobnicate"));
+        // The default registry does not know the plugin.
+        assert!(MethodRegistry::new().resolve("identity").is_none());
     }
 
     #[test]

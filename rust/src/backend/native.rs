@@ -44,7 +44,7 @@ use anyhow::{bail, ensure, Result};
 
 use crate::util::stats::std_f32;
 
-use super::pool::WorkerPool;
+use super::pool::{PoolError, WorkerPool};
 use super::{GsStep, KissStep, SssStep, StepBackend, StepSession, StepShape};
 
 /// Loss weights and epsilons — must match `python/compile/losses.py`.
@@ -146,11 +146,20 @@ unsafe impl Send for SendPtrI32 {}
 unsafe impl Sync for SendPtrI32 {}
 
 /// Run `job(worker)` for workers `0..active` — on the pool when one
-/// exists and parallelism is requested, inline otherwise.
-fn dispatch(pool: Option<&WorkerPool>, active: usize, job: &(dyn Fn(usize) + Sync)) {
+/// exists and parallelism is requested, inline otherwise. Pool-worker
+/// panics surface as a typed [`PoolError`] (and poison the session's
+/// pool) instead of unwinding into — and aborting — the caller's thread.
+fn dispatch(
+    pool: Option<&WorkerPool>,
+    active: usize,
+    job: &(dyn Fn(usize) + Sync),
+) -> Result<(), PoolError> {
     match pool {
         Some(p) if active > 1 => p.dispatch(active, job),
-        _ => job(0),
+        _ => {
+            job(0);
+            Ok(())
+        }
     }
 }
 
@@ -394,7 +403,7 @@ fn sss_forward(
     chunk_cs: &mut [f32],
     row_scratch: &mut [f32],
     out: &mut SssStep,
-) {
+) -> Result<(), PoolError> {
     let n_chunks = n.div_ceil(ROW_CHUNK);
     let active = threads.min(n_chunks).max(1);
     let y_ptr = SendPtrF32(out.y.as_mut_ptr());
@@ -471,7 +480,7 @@ fn sss_forward(
             c += active;
         }
     };
-    dispatch(pool, active, &job);
+    dispatch(pool, active, &job)?;
 
     // Deterministic reduction: fold per-chunk column partials in chunk
     // index order — bit-identical for any pool size.
@@ -481,6 +490,7 @@ fn sss_forward(
             *dst += s;
         }
     }
+    Ok(())
 }
 
 /// Row-block backward: recompute each P row, pull the loss cotangents
@@ -504,7 +514,7 @@ fn sss_backward(
     row_scratch: &mut [f32],
     g_scratch: &mut [f32],
     grad: &mut [f32],
-) {
+) -> Result<(), PoolError> {
     let n_chunks = n.div_ceil(ROW_CHUNK);
     let active = threads.min(n_chunks).max(1);
     let gw_ptr = SendPtrF32(chunk_gw.as_mut_ptr());
@@ -578,7 +588,7 @@ fn sss_backward(
             c += active;
         }
     };
-    dispatch(pool, active, &job);
+    dispatch(pool, active, &job)?;
 
     // Deterministic reduction: chunk-ordered column partials, then the
     // sorted-side scatter through σ in ascending row order (identical to
@@ -592,6 +602,7 @@ fn sss_backward(
     for (i, &gv) in gws.iter().enumerate() {
         grad[sigma[i] as usize] += gv;
     }
+    Ok(())
 }
 
 // --------------------------------------------------------------------------
@@ -928,7 +939,7 @@ impl StepSession for NativeSession {
             &mut sss.chunk_cs,
             &mut sss.row_scratch,
             out,
-        );
+        )?;
         out.loss =
             grid_loss_into(shape, x_shuf, &out.y, Some(inv_idx), Some(&out.colsum), norm, lws);
         sss_backward(
@@ -948,7 +959,7 @@ impl StepSession for NativeSession {
             &mut sss.row_scratch,
             &mut sss.g_scratch,
             &mut out.grad,
-        );
+        )?;
         Ok(())
     }
 

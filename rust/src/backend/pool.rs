@@ -23,10 +23,52 @@
 //! epoch: the wait lives in a drop guard, and workers acknowledge each
 //! published epoch exactly once (wrapping their job call in
 //! `catch_unwind`). The borrow therefore strictly outlives every use.
+//!
+//! # Failure model
+//!
+//! A panicking job does **not** abort the process (the old behavior was to
+//! re-raise in the dispatcher, which would take down a long-running server
+//! thread). Instead `dispatch` returns a typed [`PoolError::JobPanicked`]
+//! and the pool marks itself **poisoned**: a panic may have left the
+//! caller's chunk slabs half-written, so every later dispatch on the same
+//! pool fails fast with [`PoolError::Poisoned`]. Sessions own their pool,
+//! so recovery is "open a fresh session" — exactly what every driver run
+//! does anyway.
 
+use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+/// Typed dispatch failure: the pool never panics across `dispatch`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolError {
+    /// The job closure panicked on at least one worker (or on the
+    /// dispatching thread itself) during this dispatch. The epoch still
+    /// completed — every worker acknowledged — but results are suspect and
+    /// the pool is now poisoned.
+    JobPanicked,
+    /// A previous dispatch on this pool panicked; the scratch state it was
+    /// filling cannot be trusted. Open a fresh session (which spawns a
+    /// fresh pool) to recover.
+    Poisoned,
+}
+
+impl fmt::Display for PoolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PoolError::JobPanicked => {
+                write!(f, "native step worker panicked while executing a row sweep")
+            }
+            PoolError::Poisoned => write!(
+                f,
+                "worker pool is poisoned by an earlier panic — open a fresh step session"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
 
 /// Lifetime-erased fat pointer to the current job closure. Only ever
 /// dereferenced between an epoch's publication and its acknowledgement,
@@ -49,6 +91,8 @@ struct State {
     remaining: usize,
     shutdown: bool,
     panicked: bool,
+    /// Sticky: set once any epoch panicked; later dispatches fail fast.
+    poisoned: bool,
 }
 
 struct Control {
@@ -78,6 +122,7 @@ impl WorkerPool {
                 remaining: 0,
                 shutdown: false,
                 panicked: false,
+                poisoned: false,
             }),
             work: Condvar::new(),
             done: Condvar::new(),
@@ -102,8 +147,14 @@ impl WorkerPool {
     /// Run `job(i)` once for every logical worker index `i < active`,
     /// index 0 on the calling thread. Blocks until all workers (active or
     /// not — every spawned worker acknowledges every epoch) are done.
-    /// Panics in any worker are re-raised here after the epoch completes.
-    pub fn dispatch(&self, active: usize, job: &(dyn Fn(usize) + Sync)) {
+    /// A panic in any worker (or in the dispatcher's own `job(0)` call) is
+    /// caught, reported as [`PoolError::JobPanicked`], and poisons the
+    /// pool; it never unwinds out of `dispatch` or aborts the process.
+    pub fn dispatch(
+        &self,
+        active: usize,
+        job: &(dyn Fn(usize) + Sync),
+    ) -> Result<(), PoolError> {
         // Hard invariant, checked in release too: an over-wide dispatch
         // would silently skip the chunks of the never-spawned workers and
         // let the chunk-ordered folds sum stale slab contents.
@@ -113,9 +164,17 @@ impl WorkerPool {
             active,
             self.handles.len() + 1
         );
+        if self.ctl.state.lock().expect("pool mutex poisoned").poisoned {
+            return Err(PoolError::Poisoned);
+        }
         if active <= 1 || self.handles.is_empty() {
-            job(0);
-            return;
+            return match catch_unwind(AssertUnwindSafe(|| job(0))) {
+                Ok(()) => Ok(()),
+                Err(_) => {
+                    self.ctl.state.lock().expect("pool mutex poisoned").poisoned = true;
+                    Err(PoolError::JobPanicked)
+                }
+            };
         }
         // Erase the borrow's lifetime; see the module-level safety model.
         let ptr = JobPtr(unsafe {
@@ -133,11 +192,14 @@ impl WorkerPool {
         // The wait lives in a guard so it runs even if `job(0)` unwinds:
         // workers may still be reading the borrowed job.
         let guard = WaitGuard { ctl: &self.ctl };
-        job(0);
+        let local_ok = catch_unwind(AssertUnwindSafe(|| job(0))).is_ok();
         drop(guard);
-        if self.ctl.state.lock().expect("pool mutex poisoned").panicked {
-            panic!("native step worker panicked");
+        let mut st = self.ctl.state.lock().expect("pool mutex poisoned");
+        if st.panicked || !local_ok {
+            st.poisoned = true;
+            return Err(PoolError::JobPanicked);
         }
+        Ok(())
     }
 }
 
@@ -214,7 +276,8 @@ mod tests {
         for _ in 0..50 {
             pool.dispatch(4, &|wk| {
                 hits[wk].fetch_add(1, Ordering::Relaxed);
-            });
+            })
+            .unwrap();
         }
         for (wk, h) in hits.iter().enumerate() {
             assert_eq!(h.load(Ordering::Relaxed), 50, "worker {wk}");
@@ -227,7 +290,8 @@ mod tests {
         let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
         pool.dispatch(2, &|wk| {
             hits[wk].fetch_add(1, Ordering::Relaxed);
-        });
+        })
+        .unwrap();
         assert_eq!(hits[0].load(Ordering::Relaxed), 1);
         assert_eq!(hits[1].load(Ordering::Relaxed), 1);
         assert_eq!(hits[2].load(Ordering::Relaxed), 0);
@@ -246,27 +310,57 @@ mod tests {
                 // Safety: stripes are disjoint across worker indices.
                 unsafe { *(base as *mut u32).add(c) = (10 + wk) as u32 };
             }
-        });
+        })
+        .unwrap();
         assert_eq!(out, vec![10, 11, 10, 11, 10, 11, 10, 11]);
     }
 
     #[test]
-    fn worker_panic_propagates_to_the_dispatcher() {
+    fn worker_panic_is_a_typed_error_and_poisons_the_pool() {
+        // Regression for the server path: a panicking job must surface as
+        // an `Err` the caller can turn into a failed request — never as a
+        // panic that unwinds through (and aborts) a long-running process.
         let pool = WorkerPool::new(1);
         let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
             pool.dispatch(2, &|wk| {
                 if wk == 1 {
                     panic!("boom");
                 }
-            });
+            })
         }));
-        assert!(caught.is_err());
-        // The pool must still be usable after a worker panic.
+        assert_eq!(caught.expect("dispatch must not panic"), Err(PoolError::JobPanicked));
+        // The panic may have left caller scratch half-written: the pool is
+        // poisoned and every later dispatch fails fast (recovery = fresh
+        // session = fresh pool).
         let hits = AtomicUsize::new(0);
-        pool.dispatch(2, &|_| {
+        let again = pool.dispatch(2, &|_| {
             hits.fetch_add(1, Ordering::Relaxed);
         });
-        assert_eq!(hits.load(Ordering::Relaxed), 2);
+        assert_eq!(again, Err(PoolError::Poisoned));
+        assert_eq!(hits.load(Ordering::Relaxed), 0, "poisoned pool must not run jobs");
+    }
+
+    #[test]
+    fn dispatcher_thread_panic_is_also_caught() {
+        // Index 0 runs on the dispatching thread; its panic takes the same
+        // typed-error path as a pool worker's.
+        let pool = WorkerPool::new(1);
+        let r = pool.dispatch(2, &|wk| {
+            if wk == 0 {
+                panic!("boom on the dispatcher");
+            }
+        });
+        assert_eq!(r, Err(PoolError::JobPanicked));
+        assert_eq!(pool.dispatch(2, &|_| {}), Err(PoolError::Poisoned));
+    }
+
+    #[test]
+    fn inline_dispatch_panic_poisons_too() {
+        // With no spawned workers the job runs inline — same failure model.
+        let pool = WorkerPool::new(0);
+        let r = pool.dispatch(1, &|_| panic!("inline boom"));
+        assert_eq!(r, Err(PoolError::JobPanicked));
+        assert_eq!(pool.dispatch(1, &|_| {}), Err(PoolError::Poisoned));
     }
 
     #[test]
@@ -276,7 +370,8 @@ mod tests {
         let hits = AtomicUsize::new(0);
         pool.dispatch(1, &|wk| {
             hits.fetch_add(wk + 1, Ordering::Relaxed);
-        });
+        })
+        .unwrap();
         assert_eq!(hits.load(Ordering::Relaxed), 1);
     }
 }

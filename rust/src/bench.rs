@@ -7,6 +7,7 @@
 
 use std::time::Instant;
 
+use crate::serve::json::{self, Json};
 use crate::util::stats::{mean, std_dev};
 
 /// Timing summary of one benchmark case.
@@ -27,42 +28,60 @@ impl Sample {
         )
     }
 
-    /// One JSON object for the machine-readable bench report.
+    /// This sample as a JSON value (built through `serve::json`, the one
+    /// serializer in the crate — no ad-hoc string assembly).
+    pub fn to_json(&self) -> Json {
+        json::obj([
+            ("name", Json::from(self.name.as_str())),
+            ("reps", Json::from(self.reps)),
+            ("mean_s", json::num(self.mean_s)),
+            ("std_s", json::num(self.std_s)),
+            ("min_s", json::num(self.min_s)),
+        ])
+    }
+
+    /// One compact JSON object for the machine-readable bench report.
     pub fn json(&self) -> String {
-        format!(
-            r#"{{"name": "{}", "reps": {}, "mean_s": {}, "std_s": {}, "min_s": {}}}"#,
-            json_escape(&self.name),
-            self.reps,
-            self.mean_s,
-            self.std_s,
-            self.min_s
-        )
+        self.to_json().to_string_compact()
     }
 }
 
-fn json_escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
-}
-
 /// Write a bench report as a JSON document: `{"bench": title, "samples":
-/// [...]}`. Parent directories are created; used by `runtime_micro` to
-/// record the native-vs-pjrt per-step numbers.
+/// [...]}`. Parent directories are created; used by `runtime_micro`,
+/// `scaling` and `examples/perf_sweep` to record per-step numbers under
+/// `target/bench_reports/` (uploaded as a CI artifact).
 pub fn write_json_report(
     path: impl AsRef<std::path::Path>,
     title: &str,
     samples: &[Sample],
 ) -> std::io::Result<()> {
+    let doc = json::obj([
+        ("bench", Json::from(title)),
+        ("samples", json::arr(samples.iter().map(Sample::to_json))),
+    ]);
+    write_report_doc(path, &doc)
+}
+
+/// Write a table-shaped bench report: `{"bench": title, "rows": [{header:
+/// cell, ...}]}` — the machine-readable twin of `Table::print` for the
+/// paper-table benches.
+pub fn write_table_report(
+    path: impl AsRef<std::path::Path>,
+    title: &str,
+    table: &Table,
+) -> std::io::Result<()> {
+    let doc = json::obj([("bench", Json::from(title)), ("rows", table.to_json())]);
+    write_report_doc(path, &doc)
+}
+
+fn write_report_doc(path: impl AsRef<std::path::Path>, doc: &Json) -> std::io::Result<()> {
     let path = path.as_ref();
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let body: Vec<String> = samples.iter().map(|s| format!("    {}", s.json())).collect();
-    let doc = format!(
-        "{{\n  \"bench\": \"{}\",\n  \"samples\": [\n{}\n  ]\n}}\n",
-        json_escape(title),
-        body.join(",\n")
-    );
-    std::fs::write(path, doc)
+    let mut text = json::to_string_pretty(doc);
+    text.push('\n');
+    std::fs::write(path, text)
 }
 
 /// Run `f` `warmup` + `reps` times, timing the reps.
@@ -94,6 +113,18 @@ pub struct Table {
 impl Table {
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Machine-readable form: one object per row, keyed by header.
+    pub fn to_json(&self) -> Json {
+        json::arr(self.rows.iter().map(|row| {
+            json::obj(
+                self.headers
+                    .iter()
+                    .cloned()
+                    .zip(row.iter().map(|c| Json::from(c.as_str()))),
+            )
+        }))
     }
 
     pub fn row(&mut self, cells: &[String]) {
@@ -161,6 +192,11 @@ mod tests {
         let mut t = Table::new(&["Method", "Memory", "Quality"]);
         t.row(&["ours".into(), "1024".into(), "0.89".into()]);
         t.print();
+        let j = t.to_json();
+        assert_eq!(
+            j.to_string_compact(),
+            r#"[{"Memory":"1024","Method":"ours","Quality":"0.89"}]"#
+        );
     }
 
     #[test]

@@ -73,7 +73,7 @@ impl ParsedArgs {
 const KNOWN_VALUE_OPTS: &[&str] = &[
     "n", "grid", "method", "out", "seed", "config", "artifacts", "dataset",
     "bits", "entropy", "scene-seed", "clusters", "dims", "batch", "workers",
-    "backend", "threads",
+    "backend", "threads", "addr", "cache-mb",
 ];
 
 pub const USAGE: &str = "\
@@ -84,6 +84,10 @@ USAGE:
                  [--backend auto|native|pjrt] [--threads T] [--seed S]
                  [--batch K] [--workers W] [--out dir] [k=v overrides]
                  sort dataset(s), report DPQ (batch >1 fans out across threads)
+  sssort serve   [--addr HOST:PORT] [--workers W] [--cache-mb MB]
+                 [--backend B] [--threads T] [--artifacts dir] [k=v overrides]
+                 HTTP service over the engine: POST /v1/sort, /v1/sort_batch,
+                 GET /v1/methods, /healthz, /metrics (see README \u{a7}Serving)
   sssort sog     [--n N] [--grid HxW] [--bits B] [--backend B] [--out dir]
                  run the Self-Organizing-Gaussians pipeline (Fig. 6)
   sssort inspect [--artifacts dir]                        list AOT artifacts
@@ -94,7 +98,8 @@ Config overrides are bare k=v pairs, e.g. `phases=300 lr=0.3 shuffle=random`;
 `auto`: use the AOT artifacts when artifacts/manifest.json exists, else run
 the learned methods on the pure-Rust native backend (no artifacts needed).
 `--threads T` (or a `threads=T` pair) sizes the native step session's
-worker pool; 0 = backend default. Results never depend on it.
+worker pool; 0 = backend default. Results never depend on it. For `serve`,
+k=v pairs configure the service (queue_depth, max_body_bytes, ...).
 ";
 
 /// Full usage text: the static grammar plus the live method list from the
@@ -193,6 +198,21 @@ mod tests {
         assert_eq!(a.opt_usize("threads", 0).unwrap(), 4);
         assert!(a.positional.is_empty());
         assert!(usage().contains("--threads"));
+    }
+
+    #[test]
+    fn serve_options_take_values() {
+        let a = parse(&[
+            "serve", "--addr", "127.0.0.1:0", "--workers", "2", "--cache-mb", "16",
+            "queue_depth=8",
+        ]);
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.opt("addr"), Some("127.0.0.1:0"));
+        assert_eq!(a.opt_usize("workers", 0).unwrap(), 2);
+        assert_eq!(a.opt_usize("cache-mb", 0).unwrap(), 16);
+        assert_eq!(a.overrides, vec![("queue_depth".into(), "8".into())]);
+        assert!(a.positional.is_empty());
+        assert!(usage().contains("sssort serve"));
     }
 
     #[test]

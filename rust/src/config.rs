@@ -291,6 +291,63 @@ impl ShuffleSoftSortConfigBuilder {
     }
 }
 
+/// Configuration of the `serve` HTTP service layer (`sssort serve`).
+/// Engine-side knobs (`--backend`, `--threads`, `--artifacts`) live in
+/// `serve::EngineSpec`; this struct is the HTTP/queue/cache side. Bare
+/// `k=v` pairs on the `serve` command line map onto [`ServeConfig::set`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Bind address (`host:port`; port 0 picks a free port).
+    pub addr: String,
+    /// HTTP worker threads (each accepts and handles connections).
+    pub workers: usize,
+    /// Result-cache byte budget in MiB.
+    pub cache_mb: usize,
+    /// Bounded job-queue depth; a full queue answers 503, not a stall.
+    /// Each HTTP worker submits at most one job at a time, so the 503
+    /// path only engages when `workers` exceeds this depth — the bound is
+    /// a safety net for small-depth/many-worker configurations.
+    pub queue_depth: usize,
+    /// Largest accepted request body (413 above this, before reading it).
+    pub max_body_bytes: usize,
+    /// Keep-alive idle budget per connection, seconds.
+    pub keep_alive_secs: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let workers =
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(8);
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            workers,
+            cache_mb: 64,
+            queue_depth: 256,
+            max_body_bytes: 8 << 20,
+            keep_alive_secs: 5,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply a `key=value` override (CLI syntax).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "addr" => self.addr = value.to_string(),
+            "workers" => self.workers = value.parse()?,
+            "cache_mb" => self.cache_mb = value.parse()?,
+            "queue_depth" => self.queue_depth = value.parse()?,
+            "max_body_bytes" => self.max_body_bytes = value.parse()?,
+            "keep_alive_secs" => self.keep_alive_secs = value.parse()?,
+            _ => bail!(
+                "unknown serve config key '{key}' (allowed: addr, workers, cache_mb, \
+                 queue_depth, max_body_bytes, keep_alive_secs)"
+            ),
+        }
+        Ok(())
+    }
+}
+
 /// Configuration shared by the baseline drivers.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BaselineConfig {
@@ -509,6 +566,25 @@ mod tests {
         assert_eq!(b.threads, None);
         let s = ShuffleSoftSortConfig::builder().grid(8, 8).threads(3).build().unwrap();
         assert_eq!(s.threads, Some(3));
+    }
+
+    #[test]
+    fn serve_config_overrides_and_unknown_keys() {
+        let mut c = ServeConfig::default();
+        assert!(c.workers >= 1);
+        c.set("addr", "0.0.0.0:8080").unwrap();
+        c.set("workers", "4").unwrap();
+        c.set("cache_mb", "16").unwrap();
+        c.set("queue_depth", "32").unwrap();
+        c.set("keep_alive_secs", "2").unwrap();
+        assert_eq!(c.addr, "0.0.0.0:8080");
+        assert_eq!(c.workers, 4);
+        assert_eq!(c.cache_mb, 16);
+        assert_eq!(c.queue_depth, 32);
+        assert_eq!(c.keep_alive_secs, 2);
+        assert!(c.set("workers", "many").is_err());
+        let err = c.set("frobnicate", "1").unwrap_err();
+        assert!(format!("{err:#}").contains("frobnicate"));
     }
 
     #[test]

@@ -75,6 +75,7 @@ pub mod metrics;
 pub mod perm;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod serve;
 pub mod sog;
 pub mod util;
 

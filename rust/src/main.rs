@@ -4,12 +4,14 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use shufflesort::api::{BackendChoice, Engine, MethodKind};
+use shufflesort::api::{BackendChoice, Engine, MethodKind, MethodRegistry};
 use shufflesort::cli::{parse_grid, usage, ParsedArgs};
+use shufflesort::config::{normalize_threads, ServeConfig};
 use shufflesort::coordinator::SortOutcome;
 use shufflesort::data::{self, Dataset};
 use shufflesort::grid::GridShape;
 use shufflesort::metrics::{dpq16, mean_neighbor_distance};
+use shufflesort::serve::{self, EngineSpec};
 use shufflesort::sog::codec::CodecConfig;
 use shufflesort::sog::scene::{GaussianScene, SceneConfig};
 use shufflesort::sog::{run_pipeline, SorterKind};
@@ -26,6 +28,7 @@ fn run() -> Result<()> {
     let args = ParsedArgs::parse(std::env::args().skip(1))?;
     match args.command.as_str() {
         "sort" => cmd_sort(&args),
+        "serve" => cmd_serve(&args),
         "sog" => cmd_sog(&args),
         "inspect" => cmd_inspect(&args),
         "help" | "--help" | "-h" => {
@@ -162,6 +165,39 @@ fn write_outputs(
         println!("wrote {}", curve_path.display());
     }
     Ok(())
+}
+
+/// `sssort serve` — put the engine on a socket (see `shufflesort::serve`).
+/// `--addr/--workers/--cache-mb` + bare `k=v` pairs configure the HTTP
+/// side; `--backend/--threads/--artifacts` configure the engine host.
+fn cmd_serve(args: &ParsedArgs) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    if let Some(addr) = args.opt("addr") {
+        cfg.addr = addr.to_string();
+    }
+    cfg.workers = args.opt_usize("workers", cfg.workers)?;
+    cfg.cache_mb = args.opt_usize("cache-mb", cfg.cache_mb)?;
+    for (k, v) in &args.overrides {
+        cfg.set(k, v)?;
+    }
+    let backend = match args.opt("backend") {
+        Some(b) => BackendChoice::parse(b)?,
+        None => BackendChoice::default(),
+    };
+    let threads = match args.opt("threads") {
+        Some(t) => normalize_threads(
+            t.parse().map_err(|_| anyhow!("--threads must be an integer"))?,
+        ),
+        None => None,
+    };
+    let spec = EngineSpec {
+        artifacts_dir: artifacts_dir(args),
+        backend,
+        threads,
+        batch_workers: None,
+        registry: MethodRegistry::new(),
+    };
+    serve::run(cfg, spec)
 }
 
 fn cmd_sog(args: &ParsedArgs) -> Result<()> {

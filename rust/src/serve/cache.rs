@@ -1,0 +1,258 @@
+//! Byte-budgeted LRU cache for finished sort responses.
+//!
+//! Sorts are pure functions of `(method, canonicalized overrides, data,
+//! grid)` — the whole crate is built around that determinism (batch
+//! results are bit-identical to sequential ones, pool size never changes
+//! bits). That makes caching trivial to get *right*: a hit replays the
+//! exact serialized response body of the first computation, byte for
+//! byte, with zero extra Engine steps.
+//!
+//! Keys carry an FNV-1a hash of the dataset's f32 bit patterns rather than
+//! the data itself, plus the canonical (sorted-key JSON) override string
+//! the handler builds — so two requests that differ only in JSON key order
+//! or whitespace share an entry.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+/// Identity of one sort computation.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Canonical method name (registry-resolved, not the request alias).
+    pub method: String,
+    /// Canonical serialization of the effective overrides + backend.
+    pub config: String,
+    pub grid: (usize, usize),
+    /// FNV-1a over the dataset rows' f32 bit patterns.
+    pub data_hash: u64,
+    pub n: usize,
+    pub d: usize,
+}
+
+struct Entry {
+    body: Arc<String>,
+    tick: u64,
+    cost: usize,
+}
+
+struct State {
+    map: HashMap<CacheKey, Entry>,
+    /// LRU order: tick → key (ticks are unique; smallest = oldest).
+    lru: BTreeMap<u64, CacheKey>,
+    tick: u64,
+    bytes: usize,
+}
+
+/// Thread-safe LRU over serialized response bodies, bounded by an
+/// approximate byte budget (entry cost = body + key strings + overhead).
+pub struct ResultCache {
+    state: Mutex<State>,
+    capacity: usize,
+}
+
+/// Fixed per-entry overhead charged on top of the string payloads
+/// (hash-map slot, LRU node, counters).
+const ENTRY_OVERHEAD: usize = 128;
+
+impl ResultCache {
+    pub fn new(capacity_bytes: usize) -> Self {
+        ResultCache {
+            state: Mutex::new(State {
+                map: HashMap::new(),
+                lru: BTreeMap::new(),
+                tick: 0,
+                bytes: 0,
+            }),
+            capacity: capacity_bytes,
+        }
+    }
+
+    fn cost(key: &CacheKey, body: &str) -> usize {
+        body.len() + key.method.len() + key.config.len() + ENTRY_OVERHEAD
+    }
+
+    /// Look up a finished response; a hit refreshes the entry's LRU slot.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<String>> {
+        let mut guard = self.state.lock().expect("cache mutex poisoned");
+        let st = &mut *guard;
+        st.tick += 1;
+        let fresh = st.tick;
+        let entry = st.map.get_mut(key)?;
+        let stale = std::mem::replace(&mut entry.tick, fresh);
+        let body = entry.body.clone();
+        st.lru.remove(&stale);
+        st.lru.insert(fresh, key.clone());
+        Some(body)
+    }
+
+    /// Insert (or refresh) a finished response, evicting least-recently
+    /// used entries until the byte budget holds. Bodies larger than the
+    /// whole budget are simply not cached.
+    pub fn put(&self, key: CacheKey, body: Arc<String>) {
+        let cost = Self::cost(&key, &body);
+        if cost > self.capacity {
+            return;
+        }
+        let mut guard = self.state.lock().expect("cache mutex poisoned");
+        let st = &mut *guard;
+        if let Some(old) = st.map.remove(&key) {
+            st.lru.remove(&old.tick);
+            st.bytes -= old.cost;
+        }
+        while st.bytes + cost > self.capacity {
+            let Some((&oldest, _)) = st.lru.iter().next() else { break };
+            let victim = st.lru.remove(&oldest).expect("lru key just observed");
+            if let Some(e) = st.map.remove(&victim) {
+                st.bytes -= e.cost;
+            }
+        }
+        st.tick += 1;
+        let tick = st.tick;
+        st.lru.insert(tick, key.clone());
+        st.map.insert(key, Entry { body, tick, cost });
+        st.bytes += cost;
+    }
+
+    /// Atomic "insert unless present": returns the body every response
+    /// for this key should use. First writer wins — when two identical
+    /// requests miss concurrently and both compute (their bodies can
+    /// differ in fields like `wall_secs`), all responses from the first
+    /// insert onward serve the same bytes, preserving the byte-identical
+    /// replay contract.
+    pub fn get_or_put(&self, key: CacheKey, body: Arc<String>) -> Arc<String> {
+        let cost = Self::cost(&key, &body);
+        let mut guard = self.state.lock().expect("cache mutex poisoned");
+        let st = &mut *guard;
+        st.tick += 1;
+        let fresh = st.tick;
+        if let Some(entry) = st.map.get_mut(&key) {
+            let stale = std::mem::replace(&mut entry.tick, fresh);
+            let existing = entry.body.clone();
+            st.lru.remove(&stale);
+            st.lru.insert(fresh, key);
+            return existing;
+        }
+        if cost > self.capacity {
+            return body; // not cacheable; still serve the computed result
+        }
+        while st.bytes + cost > self.capacity {
+            let Some((&oldest, _)) = st.lru.iter().next() else { break };
+            let victim = st.lru.remove(&oldest).expect("lru key just observed");
+            if let Some(e) = st.map.remove(&victim) {
+                st.bytes -= e.cost;
+            }
+        }
+        st.lru.insert(fresh, key.clone());
+        st.map.insert(key, Entry { body: body.clone(), tick: fresh, cost });
+        st.bytes += cost;
+        body
+    }
+
+    /// (entries, approximate bytes) currently held.
+    pub fn stats(&self) -> (usize, usize) {
+        let st = self.state.lock().expect("cache mutex poisoned");
+        (st.map.len(), st.bytes)
+    }
+}
+
+/// FNV-1a 64-bit.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hash a dataset's rows by exact f32 bit pattern (NaN-safe, -0.0 ≠ 0.0 —
+/// bit-identity is the contract, not numeric equality).
+pub fn hash_rows(rows: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for v in rows {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(tag: &str) -> CacheKey {
+        CacheKey {
+            method: "softsort".into(),
+            config: tag.into(),
+            grid: (4, 4),
+            data_hash: fnv1a(tag.as_bytes()),
+            n: 16,
+            d: 3,
+        }
+    }
+
+    #[test]
+    fn hit_returns_the_exact_stored_body() {
+        let cache = ResultCache::new(64 * 1024);
+        assert!(cache.get(&key("a")).is_none());
+        cache.put(key("a"), Arc::new("{\"perm\":[1,0]}".to_string()));
+        assert_eq!(cache.get(&key("a")).unwrap().as_str(), "{\"perm\":[1,0]}");
+        assert_eq!(cache.stats().0, 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_under_byte_pressure() {
+        // Budget fits exactly two entries.
+        let body = "x".repeat(100);
+        let one = ResultCache::cost(&key("a"), &body);
+        let cache = ResultCache::new(2 * one);
+        cache.put(key("a"), Arc::new(body.clone()));
+        cache.put(key("b"), Arc::new(body.clone()));
+        // Touch "a" so "b" is the LRU victim.
+        assert!(cache.get(&key("a")).is_some());
+        cache.put(key("c"), Arc::new(body.clone()));
+        assert!(cache.get(&key("a")).is_some(), "recently used survives");
+        assert!(cache.get(&key("b")).is_none(), "LRU evicted");
+        assert!(cache.get(&key("c")).is_some());
+        let (entries, bytes) = cache.stats();
+        assert_eq!(entries, 2);
+        assert!(bytes <= 2 * one);
+    }
+
+    #[test]
+    fn oversized_bodies_are_not_cached_and_reinsert_replaces() {
+        let cache = ResultCache::new(256);
+        cache.put(key("huge"), Arc::new("y".repeat(10_000)));
+        assert!(cache.get(&key("huge")).is_none());
+        cache.put(key("a"), Arc::new("v1".to_string()));
+        cache.put(key("a"), Arc::new("v2".to_string()));
+        assert_eq!(cache.get(&key("a")).unwrap().as_str(), "v2");
+        assert_eq!(cache.stats().0, 1);
+    }
+
+    #[test]
+    fn get_or_put_is_first_writer_wins() {
+        let cache = ResultCache::new(64 * 1024);
+        let first = cache.get_or_put(key("a"), Arc::new("body-A".to_string()));
+        assert_eq!(first.as_str(), "body-A");
+        // A concurrent identical computation must converge on the stored
+        // body, not overwrite it.
+        let second = cache.get_or_put(key("a"), Arc::new("body-B".to_string()));
+        assert_eq!(second.as_str(), "body-A");
+        assert_eq!(cache.get(&key("a")).unwrap().as_str(), "body-A");
+        assert_eq!(cache.stats().0, 1);
+        // Uncacheably large bodies are still returned to the caller.
+        let huge = cache.get_or_put(key("huge"), Arc::new("z".repeat(100_000)));
+        assert_eq!(huge.len(), 100_000);
+        assert!(cache.get(&key("huge")).is_none());
+    }
+
+    #[test]
+    fn row_hash_is_bit_exact() {
+        assert_eq!(hash_rows(&[1.0, 2.0]), hash_rows(&[1.0, 2.0]));
+        assert_ne!(hash_rows(&[1.0, 2.0]), hash_rows(&[2.0, 1.0]));
+        assert_ne!(hash_rows(&[0.0]), hash_rows(&[-0.0]));
+    }
+}

@@ -1,0 +1,453 @@
+//! Minimal HTTP/1.1 request/response handling over `std::net` — just
+//! enough protocol for the serve layer: request-line + header parsing,
+//! `Content-Length` bodies (with a hard cap enforced *before* the body is
+//! read), `Expect: 100-continue`, keep-alive, and always-`Content-Length`
+//! responses. No chunked transfer coding, no TLS, no HTTP/2 — clients that
+//! need those sit behind a real reverse proxy; this listener's job is to
+//! put the Engine on a socket with zero dependencies.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Cap on the request head (request line + all headers).
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+const MAX_HEADERS: usize = 64;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Raw query string (after `?`), when present.
+    pub query: Option<String>,
+    /// `HTTP/1.1` / `HTTP/1.0`.
+    pub version: String,
+    /// Header pairs; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (first match).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client asked to keep the connection open (HTTP/1.1
+    /// defaults to keep-alive, 1.0 to close).
+    pub fn keep_alive(&self) -> bool {
+        let conn = self.header("connection").unwrap_or("").to_ascii_lowercase();
+        if self.version == "HTTP/1.0" {
+            conn.contains("keep-alive")
+        } else {
+            !conn.contains("close")
+        }
+    }
+
+    /// Value of `key` in the query string, if present.
+    pub fn query_param(&self, key: &str) -> Option<&str> {
+        self.query.as_deref()?.split('&').find_map(|kv| {
+            let (k, v) = kv.split_once('=')?;
+            (k == key).then_some(v)
+        })
+    }
+}
+
+/// Outcome of waiting for a request on a keep-alive connection.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    Request(Request),
+    /// Clean EOF before any request byte: the peer closed the connection.
+    Closed,
+    /// Read timeout before any request byte: the connection is idle (the
+    /// caller decides when idleness exceeds the keep-alive budget).
+    Idle,
+}
+
+/// Request-reading failure, mapped to a response (or a hangup) by the
+/// connection loop.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Connection-level failure (peer vanished or timed out mid-request).
+    Io(std::io::Error),
+    /// Protocol violation → 400.
+    Malformed(String),
+    /// Declared body exceeds the configured cap → 413, before reading it.
+    BodyTooLarge { declared: usize, limit: usize },
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Io(e) => write!(f, "i/o error: {e}"),
+            HttpError::Malformed(m) => write!(f, "malformed request: {m}"),
+            HttpError::BodyTooLarge { declared, limit } => {
+                write!(f, "request body of {declared} bytes exceeds the {limit}-byte limit")
+            }
+        }
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read one `\n`-terminated line, stripping the trailing `\r\n`/`\n`.
+/// Returns `(raw bytes consumed, saw a newline)`; 0 bytes = EOF. Reads at
+/// most `cap` bytes — a longer line stops there instead of buffering an
+/// attacker-controlled amount of memory, reported as unterminated.
+fn read_line(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    cap: usize,
+) -> std::io::Result<(usize, bool)> {
+    buf.clear();
+    let mut limited = (&mut *reader).take(cap as u64);
+    let n = limited.read_until(b'\n', buf)?;
+    let terminated = buf.last() == Some(&b'\n');
+    while matches!(buf.last(), Some(b'\n') | Some(b'\r')) {
+        buf.pop();
+    }
+    Ok((n, terminated))
+}
+
+/// Restores a socket's previous read timeout on drop, so the caller's
+/// short idle-poll timeout survives every `read_request` exit path.
+struct RestoreTimeout<'a> {
+    sock: &'a TcpStream,
+    prev: Option<Duration>,
+}
+
+impl Drop for RestoreTimeout<'_> {
+    fn drop(&mut self) {
+        let _ = self.sock.set_read_timeout(self.prev);
+    }
+}
+
+/// Read the next request off a connection. `stream` is the same socket the
+/// reader wraps (a `try_clone`, sharing the underlying fd): it sends the
+/// `100 Continue` interim response some clients (curl) wait for before
+/// uploading a body, and carries the read-timeout switch — the caller's
+/// short idle-poll timeout applies while waiting for a request to *start*,
+/// then `busy_timeout` governs the header/body reads so a slow client is
+/// not dropped mid-upload by the idle poll.
+pub fn read_request(
+    reader: &mut BufReader<TcpStream>,
+    stream: &TcpStream,
+    max_body: usize,
+    busy_timeout: Duration,
+) -> Result<ReadOutcome, HttpError> {
+    // -- request line ------------------------------------------------------
+    let mut line = Vec::new();
+    match read_line(reader, &mut line, MAX_HEAD_BYTES) {
+        Ok((0, _)) => return Ok(ReadOutcome::Closed),
+        Ok((n, terminated)) => {
+            if !terminated && n >= MAX_HEAD_BYTES {
+                return Err(HttpError::Malformed("request head too large".into()));
+            }
+        }
+        // A timeout with nothing buffered is plain idleness; with partial
+        // bytes it is a peer that stalled mid-request.
+        Err(e) if is_timeout(&e) && line.is_empty() => return Ok(ReadOutcome::Idle),
+        Err(e) => return Err(HttpError::Io(e)),
+    }
+    // A request is in flight: switch to the (longer) busy timeout until
+    // this request is fully read, whatever exit path is taken.
+    let _restore = RestoreTimeout {
+        sock: stream,
+        prev: stream.read_timeout().ok().flatten(),
+    };
+    let _ = stream.set_read_timeout(Some(busy_timeout));
+    let mut head_bytes = line.len();
+    let text = String::from_utf8_lossy(&line).into_owned();
+    let mut parts = text.split_whitespace();
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| HttpError::Malformed("empty request line".into()))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| HttpError::Malformed("request line has no path".into()))?;
+    let version = parts.next().unwrap_or("HTTP/1.1").to_string();
+    if !version.starts_with("HTTP/") {
+        return Err(HttpError::Malformed(format!("bad HTTP version '{version}'")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+
+    // -- headers -----------------------------------------------------------
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let remaining = MAX_HEAD_BYTES.saturating_sub(head_bytes).max(1);
+        match read_line(reader, &mut line, remaining) {
+            Ok((0, _)) => return Err(HttpError::Malformed("eof inside headers".into())),
+            Ok((n, terminated)) => {
+                head_bytes += n;
+                if !terminated {
+                    return Err(HttpError::Malformed(if n >= remaining {
+                        "request head too large".into()
+                    } else {
+                        "eof inside headers".into()
+                    }));
+                }
+            }
+            Err(e) => return Err(HttpError::Io(e)),
+        }
+        if line.is_empty() {
+            break;
+        }
+        if head_bytes > MAX_HEAD_BYTES || headers.len() >= MAX_HEADERS {
+            return Err(HttpError::Malformed("request head too large".into()));
+        }
+        let text = String::from_utf8_lossy(&line);
+        let (name, value) = text
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("header without ':': '{text}'")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let mut req =
+        Request { method, path, query, version, headers, body: Vec::new() };
+
+    // -- body --------------------------------------------------------------
+    if let Some(te) = req.header("transfer-encoding") {
+        if !te.eq_ignore_ascii_case("identity") {
+            return Err(HttpError::Malformed(format!(
+                "transfer-encoding '{te}' is not supported (send Content-Length)"
+            )));
+        }
+    }
+    let declared = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .trim()
+            .parse::<usize>()
+            .map_err(|_| HttpError::Malformed(format!("bad Content-Length '{v}'")))?,
+    };
+    if declared > max_body {
+        return Err(HttpError::BodyTooLarge { declared, limit: max_body });
+    }
+    if declared > 0 {
+        if req
+            .header("expect")
+            .is_some_and(|e| e.to_ascii_lowercase().contains("100-continue"))
+        {
+            let mut writer = stream;
+            writer
+                .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                .and_then(|()| writer.flush())
+                .map_err(HttpError::Io)?;
+        }
+        let mut body = vec![0u8; declared];
+        reader.read_exact(&mut body).map_err(HttpError::Io)?;
+        req.body = body;
+    }
+    Ok(ReadOutcome::Request(req))
+}
+
+/// An HTTP response; always carries an explicit `Content-Length`.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Extra headers (e.g. `X-Cache`).
+    pub extra_headers: Vec<(String, String)>,
+    /// When set, the connection closes after this response.
+    pub close: bool,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            extra_headers: Vec::new(),
+            close: false,
+        }
+    }
+
+    pub fn text(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into_bytes(),
+            extra_headers: Vec::new(),
+            close: false,
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: impl Into<String>) -> Response {
+        self.extra_headers.push((name.to_string(), value.into()));
+        self
+    }
+
+    pub fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len(),
+            if self.close { "close" } else { "keep-alive" },
+        );
+        for (k, v) in &self.extra_headers {
+            head.push_str(k);
+            head.push_str(": ");
+            head.push_str(v);
+            head.push_str("\r\n");
+        }
+        head.push_str("\r\n");
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+/// Reason phrase for the status codes the serve layer emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Feed raw bytes through a real loopback socket and parse them.
+    fn parse_raw(raw: impl Into<Vec<u8>>) -> Result<ReadOutcome, HttpError> {
+        let raw: Vec<u8> = raw.into();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let _ = s.write_all(&raw);
+            // Dropping the stream closes it, so EOF-sensitive cases (empty
+            // input) terminate instead of waiting for more bytes. The
+            // write result is ignored: the server may hang up mid-write
+            // (e.g. the oversized-head rejection).
+        });
+        let (server, _) = listener.accept().unwrap();
+        let control = server.try_clone().unwrap();
+        let mut reader = BufReader::new(server);
+        let out = read_request(&mut reader, &control, 1024, Duration::from_secs(5));
+        client.join().unwrap();
+        out
+    }
+
+    #[test]
+    fn parses_a_post_with_body_and_query() {
+        let out = parse_raw(
+            b"POST /v1/sort?format=x HTTP/1.1\r\nHost: t\r\nContent-Length: 4\r\n\
+              X-Custom: Hi\r\n\r\nabcd",
+        )
+        .unwrap();
+        let req = match out {
+            ReadOutcome::Request(r) => r,
+            other => panic!("expected a request, got {other:?}"),
+        };
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/sort");
+        assert_eq!(req.query_param("format"), Some("x"));
+        assert_eq!(req.header("x-custom"), Some("Hi"));
+        assert_eq!(req.body, b"abcd");
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn connection_close_and_http10_default() {
+        let out =
+            parse_raw(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        if let ReadOutcome::Request(r) = out {
+            assert!(!r.keep_alive());
+        } else {
+            panic!("expected request");
+        }
+        let out = parse_raw(b"GET / HTTP/1.0\r\n\r\n").unwrap();
+        if let ReadOutcome::Request(r) = out {
+            assert!(!r.keep_alive());
+        } else {
+            panic!("expected request");
+        }
+    }
+
+    #[test]
+    fn oversized_declared_body_is_rejected_before_reading() {
+        let err = parse_raw(b"POST / HTTP/1.1\r\nContent-Length: 999999\r\n\r\n")
+            .unwrap_err();
+        assert!(matches!(err, HttpError::BodyTooLarge { declared: 999999, limit: 1024 }));
+    }
+
+    #[test]
+    fn malformed_requests_are_typed_errors() {
+        for raw in [
+            b"GARBAGE\r\n\r\n".as_slice(),
+            b"POST / HTTP/1.1\r\nNoColonHere\r\n\r\n".as_slice(),
+            b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n".as_slice(),
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".as_slice(),
+        ] {
+            assert!(
+                matches!(parse_raw(raw), Err(HttpError::Malformed(_))),
+                "should reject {:?}",
+                String::from_utf8_lossy(raw)
+            );
+        }
+    }
+
+    #[test]
+    fn clean_eof_reads_as_closed() {
+        assert!(matches!(parse_raw(b"".as_slice()), Ok(ReadOutcome::Closed)));
+    }
+
+    #[test]
+    fn endless_head_line_is_capped_not_buffered() {
+        // A newline-free request line (or header) must be rejected at the
+        // head cap, not accumulated without bound.
+        let raw = vec![b'A'; MAX_HEAD_BYTES + 4096];
+        assert!(matches!(parse_raw(raw), Err(HttpError::Malformed(_))));
+        let mut raw = b"GET / HTTP/1.1\r\nX-Pad: ".to_vec();
+        raw.extend(std::iter::repeat(b'b').take(MAX_HEAD_BYTES + 4096));
+        assert!(matches!(parse_raw(raw), Err(HttpError::Malformed(_))));
+    }
+
+    #[test]
+    fn response_serializes_with_content_length() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut buf = Vec::new();
+            s.read_to_end(&mut buf).unwrap();
+            String::from_utf8(buf).unwrap()
+        });
+        let (mut server, _) = listener.accept().unwrap();
+        let mut resp = Response::json(200, "{\"ok\":true}".to_string())
+            .with_header("X-Cache", "hit");
+        resp.close = true;
+        resp.write_to(&mut server).unwrap();
+        drop(server);
+        let text = client.join().unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 11\r\n"), "{text}");
+        assert!(text.contains("X-Cache: hit\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with("{\"ok\":true}"), "{text}");
+    }
+}

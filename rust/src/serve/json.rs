@@ -1,0 +1,211 @@
+//! JSON construction and serialization ergonomics for the serve layer —
+//! and for every other emitter of machine-readable output in the crate.
+//!
+//! The crate already owns a full JSON value type and parser
+//! ([`crate::util::json::Json`], in the spirit of the `smoljson`
+//! exemplar); what was missing was the *writing* side: before this module,
+//! `bench::write_json_report` (used by the `runtime_micro`/`scaling`
+//! benches) hand-assembled JSON with `format!` and ad-hoc escaping. This
+//! module is the one way to build and serialize JSON documents:
+//!
+//! * [`obj`]/[`arr`]/[`num`] builders plus `From` impls for the common
+//!   scalar types, so handler code reads as data, not string plumbing;
+//! * a stable, parser-round-tripping compact form (via
+//!   [`Json::to_string_compact`]) for HTTP bodies and cache entries — the
+//!   `Obj` variant is a `BTreeMap`, so serialization order is canonical,
+//!   which is what lets the result cache compare and replay bodies
+//!   byte-for-byte;
+//! * [`to_string_pretty`] for human-facing documents (bench reports, the
+//!   `/metrics` JSON view).
+
+pub use crate::util::json::{Json, JsonError};
+
+use std::collections::BTreeMap;
+
+/// Build a JSON object from key/value pairs. Keys are deduplicated
+/// last-wins and serialized in sorted order (the `Obj` variant is a
+/// `BTreeMap`), so two objects with the same contents always serialize to
+/// the same bytes.
+pub fn obj<K, I>(pairs: I) -> Json
+where
+    K: Into<String>,
+    I: IntoIterator<Item = (K, Json)>,
+{
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Build a JSON array from any iterator of values.
+pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+    Json::Arr(items.into_iter().collect())
+}
+
+/// A number that is always valid JSON: non-finite values (which raw JSON
+/// cannot express) map to `null`.
+pub fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        num(v)
+    }
+}
+
+impl From<f32> for Json {
+    fn from(v: f32) -> Json {
+        num(v as f64)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<u32> for Json {
+    fn from(v: u32) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<u16> for Json {
+    fn from(v: u16) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<i64> for Json {
+    fn from(v: i64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<i32> for Json {
+    fn from(v: i32) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Json {
+        Json::Arr(v)
+    }
+}
+
+/// Two-space-indented serialization (round-trips through [`Json::parse`]
+/// exactly like the compact form; scalars and empty containers are
+/// delegated to it).
+pub fn to_string_pretty(j: &Json) -> String {
+    let mut out = String::new();
+    write_pretty(j, 0, &mut out);
+    out
+}
+
+fn write_pretty(j: &Json, depth: usize, out: &mut String) {
+    const INDENT: &str = "  ";
+    match j {
+        Json::Arr(a) if !a.is_empty() => {
+            out.push('[');
+            for (i, v) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                out.push_str(&INDENT.repeat(depth + 1));
+                write_pretty(v, depth + 1, out);
+            }
+            out.push('\n');
+            out.push_str(&INDENT.repeat(depth));
+            out.push(']');
+        }
+        Json::Obj(m) if !m.is_empty() => {
+            out.push('{');
+            for (i, (k, v)) in m.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push('\n');
+                out.push_str(&INDENT.repeat(depth + 1));
+                out.push_str(&Json::Str(k.clone()).to_string_compact());
+                out.push_str(": ");
+                write_pretty(v, depth + 1, out);
+            }
+            out.push('\n');
+            out.push_str(&INDENT.repeat(depth));
+            out.push('}');
+        }
+        scalar => out.push_str(&scalar.to_string_compact()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_compose_and_serialize_canonically() {
+        let doc = obj([
+            ("name", Json::from("sort")),
+            ("count", Json::from(3usize)),
+            ("ok", Json::from(true)),
+            ("items", arr((0..3).map(Json::from))),
+            ("nan", num(f64::NAN)),
+        ]);
+        let s = doc.to_string_compact();
+        // BTreeMap ⇒ sorted keys ⇒ byte-stable output.
+        assert_eq!(
+            s,
+            r#"{"count":3,"items":[0,1,2],"name":"sort","nan":null,"ok":true}"#
+        );
+        assert_eq!(Json::parse(&s).unwrap(), doc);
+    }
+
+    #[test]
+    fn duplicate_keys_are_last_wins() {
+        let doc = obj([("k", Json::from(1i64)), ("k", Json::from(2i64))]);
+        assert_eq!(doc.to_string_compact(), r#"{"k":2}"#);
+    }
+
+    #[test]
+    fn pretty_round_trips_through_the_parser() {
+        let doc = obj([
+            ("a", arr([Json::from(1i64), obj([("b", Json::Null)])])),
+            ("empty_arr", arr([])),
+            ("empty_obj", obj::<String, _>([])),
+            ("s", Json::from("line\nbreak")),
+        ]);
+        let pretty = to_string_pretty(&doc);
+        assert!(pretty.contains('\n'));
+        assert_eq!(Json::parse(&pretty).unwrap(), doc);
+        assert_eq!(to_string_pretty(&Json::from(7i64)), "7");
+    }
+}

@@ -1,0 +1,298 @@
+//! Live service metrics: lock-free atomic counters plus per-method latency
+//! histograms, exported two ways from `GET /metrics` — a JSON document for
+//! humans/tests and the Prometheus text exposition format for scrapers.
+//!
+//! Counter updates sit on the request hot path, so they are plain relaxed
+//! atomics; the only lock is the method-name → histogram map, taken just
+//! long enough to clone an `Arc` (bucket increments happen outside it).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::json::{arr, num, obj, Json};
+
+/// Histogram bucket upper bounds, in seconds (plus an implicit +Inf).
+pub const BUCKET_BOUNDS: [f64; 12] =
+    [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0];
+
+/// One latency histogram (fixed log-spaced buckets + overflow).
+#[derive(Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKET_BOUNDS.len() + 1],
+    sum_micros: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Index of the +Inf overflow bucket.
+const OVERFLOW_IDX: usize = BUCKET_BOUNDS.len();
+
+impl Histogram {
+    pub fn observe(&self, secs: f64) {
+        let idx = BUCKET_BOUNDS.iter().position(|&b| secs <= b).unwrap_or(OVERFLOW_IDX);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add((secs * 1e6).max(0.0) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> (Vec<u64>, f64, u64) {
+        let buckets: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let sum = self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6;
+        let count = self.count.load(Ordering::Relaxed);
+        (buckets, sum, count)
+    }
+
+    /// Upper bound of the bucket where the `q`-quantile falls (`None` when
+    /// it lands in the overflow bucket or the histogram is empty).
+    fn quantile_bound(buckets: &[u64], count: u64, q: f64) -> Option<f64> {
+        if count == 0 {
+            return None;
+        }
+        let target = (q * count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &b) in buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return BUCKET_BOUNDS.get(i).copied();
+            }
+        }
+        None
+    }
+}
+
+/// All live counters for one server instance.
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses_2xx: AtomicU64,
+    pub responses_4xx: AtomicU64,
+    pub responses_5xx: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub cache_misses: AtomicU64,
+    /// Jobs actually executed by the engine host (cache hits never reach
+    /// it — the "zero extra Engine steps on a repeat request" check).
+    pub engine_jobs: AtomicU64,
+    pub queue_rejections: AtomicU64,
+    latency: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    started: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            responses_2xx: AtomicU64::new(0),
+            responses_4xx: AtomicU64::new(0),
+            responses_5xx: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            engine_jobs: AtomicU64::new(0),
+            queue_rejections: AtomicU64::new(0),
+            latency: Mutex::new(BTreeMap::new()),
+            started: Instant::now(),
+        }
+    }
+
+    /// Count a response by status class.
+    pub fn status(&self, code: u16) {
+        let counter = match code {
+            200..=299 => &self.responses_2xx,
+            400..=499 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        };
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one engine-executed sort's wall time under its method name.
+    pub fn observe(&self, method: &str, secs: f64) {
+        let hist = {
+            let mut map = self.latency.lock().expect("metrics mutex poisoned");
+            map.entry(method.to_string()).or_default().clone()
+        };
+        hist.observe(secs);
+    }
+
+    fn load(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    /// JSON view (served by default from `GET /metrics`).
+    pub fn to_json(&self, cache_entries: usize, cache_bytes: usize, queue_depth: usize) -> Json {
+        let latency = {
+            let map = self.latency.lock().expect("metrics mutex poisoned");
+            let per_method: Vec<(String, Json)> = map
+                .iter()
+                .map(|(name, h)| {
+                    let (buckets, sum, count) = h.snapshot();
+                    let mean = if count > 0 { sum / count as f64 } else { 0.0 };
+                    let quant = |q| {
+                        Histogram::quantile_bound(&buckets, count, q)
+                            .map(|b| num(b * 1e3))
+                            .unwrap_or(Json::Null)
+                    };
+                    (
+                        name.clone(),
+                        obj([
+                            ("count", Json::from(count)),
+                            ("mean_ms", num(mean * 1e3)),
+                            ("p50_le_ms", quant(0.5)),
+                            ("p99_le_ms", quant(0.99)),
+                            ("buckets", arr(buckets.into_iter().map(Json::from))),
+                        ]),
+                    )
+                })
+                .collect();
+            obj(per_method)
+        };
+        obj([
+            ("uptime_secs", num(self.started.elapsed().as_secs_f64())),
+            ("requests_total", Json::from(Self::load(&self.requests))),
+            (
+                "responses",
+                obj([
+                    ("2xx", Json::from(Self::load(&self.responses_2xx))),
+                    ("4xx", Json::from(Self::load(&self.responses_4xx))),
+                    ("5xx", Json::from(Self::load(&self.responses_5xx))),
+                ]),
+            ),
+            (
+                "cache",
+                obj([
+                    ("hits", Json::from(Self::load(&self.cache_hits))),
+                    ("misses", Json::from(Self::load(&self.cache_misses))),
+                    ("entries", Json::from(cache_entries)),
+                    ("bytes", Json::from(cache_bytes)),
+                ]),
+            ),
+            (
+                "engine",
+                obj([
+                    ("jobs", Json::from(Self::load(&self.engine_jobs))),
+                    ("queue_depth", Json::from(queue_depth)),
+                    ("queue_rejections", Json::from(Self::load(&self.queue_rejections))),
+                ]),
+            ),
+            ("latency_seconds_bucket_bounds", arr(BUCKET_BOUNDS.iter().map(|&b| num(b)))),
+            ("latency", latency),
+        ])
+    }
+
+    /// Prometheus text exposition (`GET /metrics?format=prometheus`, or an
+    /// `Accept: text/plain` header).
+    pub fn to_prometheus(
+        &self,
+        cache_entries: usize,
+        cache_bytes: usize,
+        queue_depth: usize,
+    ) -> String {
+        let mut out = String::new();
+        let mut metric = |name: &str, kind: &str, value: u64| {
+            out.push_str(&format!("# TYPE sssort_{name} {kind}\nsssort_{name} {value}\n"));
+        };
+        metric("requests_total", "counter", Self::load(&self.requests));
+        metric("cache_hits_total", "counter", Self::load(&self.cache_hits));
+        metric("cache_misses_total", "counter", Self::load(&self.cache_misses));
+        metric("engine_jobs_total", "counter", Self::load(&self.engine_jobs));
+        metric("queue_rejections_total", "counter", Self::load(&self.queue_rejections));
+        metric("cache_entries", "gauge", cache_entries as u64);
+        metric("cache_bytes", "gauge", cache_bytes as u64);
+        metric("queue_depth", "gauge", queue_depth as u64);
+        out.push_str("# TYPE sssort_responses_total counter\n");
+        for (class, counter) in [
+            ("2xx", &self.responses_2xx),
+            ("4xx", &self.responses_4xx),
+            ("5xx", &self.responses_5xx),
+        ] {
+            out.push_str(&format!(
+                "sssort_responses_total{{class=\"{class}\"}} {}\n",
+                Self::load(counter)
+            ));
+        }
+        out.push_str(&format!(
+            "# TYPE sssort_uptime_seconds gauge\nsssort_uptime_seconds {}\n",
+            self.started.elapsed().as_secs_f64()
+        ));
+        out.push_str("# TYPE sssort_sort_duration_seconds histogram\n");
+        let map = self.latency.lock().expect("metrics mutex poisoned");
+        for (name, h) in map.iter() {
+            let (buckets, sum, count) = h.snapshot();
+            let mut cum = 0u64;
+            for (i, &b) in buckets.iter().enumerate() {
+                cum += b;
+                let le = BUCKET_BOUNDS
+                    .get(i)
+                    .map(|b| b.to_string())
+                    .unwrap_or_else(|| "+Inf".to_string());
+                out.push_str(&format!(
+                    "sssort_sort_duration_seconds_bucket{{method=\"{name}\",le=\"{le}\"}} {cum}\n"
+                ));
+            }
+            out.push_str(&format!(
+                "sssort_sort_duration_seconds_sum{{method=\"{name}\"}} {sum}\n"
+            ));
+            out.push_str(&format!(
+                "sssort_sort_duration_seconds_count{{method=\"{name}\"}} {count}\n"
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::default();
+        h.observe(0.0009); // ≤ 1 ms
+        h.observe(0.003); // ≤ 5 ms
+        h.observe(0.003);
+        h.observe(100.0); // overflow
+        let (buckets, sum, count) = h.snapshot();
+        assert_eq!(count, 4);
+        assert_eq!(buckets[0], 1);
+        assert_eq!(buckets[2], 2);
+        assert_eq!(*buckets.last().unwrap(), 1);
+        assert!(sum > 100.0);
+        assert_eq!(Histogram::quantile_bound(&buckets, count, 0.5), Some(0.005));
+        assert_eq!(Histogram::quantile_bound(&buckets, count, 0.99), None); // +Inf
+        assert_eq!(Histogram::quantile_bound(&[0; 13], 0, 0.5), None);
+    }
+
+    #[test]
+    fn json_and_prometheus_views_agree_on_counters() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.cache_hits.fetch_add(1, Ordering::Relaxed);
+        m.engine_jobs.fetch_add(2, Ordering::Relaxed);
+        m.status(200);
+        m.status(404);
+        m.observe("softsort", 0.002);
+
+        let j = m.to_json(5, 1234, 0);
+        assert_eq!(j.get("requests_total").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("cache").unwrap().get("hits").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("engine").unwrap().get("jobs").unwrap().as_usize(), Some(2));
+        assert_eq!(
+            j.get("latency").unwrap().get("softsort").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+
+        let text = m.to_prometheus(5, 1234, 0);
+        assert!(text.contains("sssort_requests_total 3"), "{text}");
+        assert!(text.contains("sssort_cache_hits_total 1"), "{text}");
+        assert!(text.contains("sssort_responses_total{class=\"2xx\"} 1"), "{text}");
+        assert!(
+            text.contains("sssort_sort_duration_seconds_bucket{method=\"softsort\",le=\"+Inf\"} 1"),
+            "{text}"
+        );
+    }
+}

@@ -1,0 +1,922 @@
+//! `serve` — a dependency-free HTTP service layer over the [`Engine`].
+//!
+//! The compute spine (Sorter/registry → Engine → StepBackend →
+//! StepSession/WorkerPool) was reachable only through one-shot CLI
+//! invocations; this subsystem puts it on a socket so expensive learned
+//! sorts (Gumbel-Sinkhorn, Kissing, ShuffleSoftSort at scale) amortize
+//! across clients. Everything is `std`-only: no tokio, no hyper, no serde.
+//!
+//! Architecture (one [`Server`]):
+//!
+//! ```text
+//!   N http worker threads ──► parse → LRU result cache ──hit──► reply
+//!        (http.rs)                        (cache.rs)
+//!                                            │ miss
+//!                                            ▼
+//!                                   bounded job queue (queue.rs)
+//!                                            │
+//!                                            ▼
+//!                              1 engine host thread, 1 shared Engine
+//!                     (step-session memoization + `--threads` row budget)
+//! ```
+//!
+//! * Sorts are pure functions of `(method, canonical overrides, data,
+//!   grid)`, so the cache replays the exact serialized body of the first
+//!   computation — bit-identical, zero extra Engine steps (observable on
+//!   `/metrics` as `cache.hits` vs `engine.jobs`).
+//! * Concurrency comes from the HTTP workers and in-sort row parallelism,
+//!   not from racing sorts against each other: the single engine host
+//!   keeps results bit-identical to sequential `Engine::sort` and keeps
+//!   `workers × threads` from oversubscribing the machine.
+//! * Shutdown is graceful: SIGINT (or [`Server::shutdown`]) flips a flag;
+//!   workers stop accepting, in-flight requests finish, the queue drains,
+//!   the engine host exits.
+//!
+//! Endpoints: `POST /v1/sort`, `POST /v1/sort_batch`, `GET /v1/methods`
+//! (registry-driven, reflects plugin methods), `GET /healthz`,
+//! `GET /metrics` (JSON, or Prometheus text via `?format=prometheus` /
+//! `Accept: text/plain`). Errors are JSON bodies with matching 4xx/5xx
+//! statuses. See README §Serving for `curl` examples.
+
+pub mod cache;
+pub mod http;
+pub mod json;
+pub mod metrics;
+pub mod queue;
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::api::{BackendChoice, Engine, MethodKind, MethodRegistry, MethodSpec};
+use crate::config::ServeConfig;
+use crate::coordinator::SortOutcome;
+use crate::data::{self, Dataset};
+use crate::grid::GridShape;
+
+use cache::{hash_rows, CacheKey, ResultCache};
+use http::{HttpError, ReadOutcome, Request, Response};
+use json::{arr, num, obj, Json};
+use metrics::Metrics;
+use queue::{BatchJob, Bounded, EngineError, Job, PushError, SortJob};
+
+/// Largest grid the service will sort (memory guard: a Gumbel-Sinkhorn
+/// request is O(N²) state).
+pub const MAX_N: usize = 16_384;
+/// Most datasets accepted in one `/v1/sort_batch` request.
+pub const MAX_BATCH: usize = 64;
+
+/// How the engine host builds its [`Engine`] (the serve-side mirror of the
+/// CLI's `--artifacts/--backend/--threads/--workers` flags).
+#[derive(Clone, Debug)]
+pub struct EngineSpec {
+    pub artifacts_dir: String,
+    pub backend: BackendChoice,
+    /// Row-thread budget for step sessions (`None` = backend default).
+    pub threads: Option<usize>,
+    /// `sort_batch` worker cap inside the engine host.
+    pub batch_workers: Option<usize>,
+    /// Method set; pass `MethodRegistry::with_methods(..)` to serve
+    /// plugins — `GET /v1/methods` reflects exactly this registry.
+    pub registry: MethodRegistry,
+}
+
+impl Default for EngineSpec {
+    fn default() -> Self {
+        EngineSpec {
+            artifacts_dir: "artifacts".to_string(),
+            backend: BackendChoice::Auto,
+            threads: None,
+            batch_workers: None,
+            registry: MethodRegistry::new(),
+        }
+    }
+}
+
+impl EngineSpec {
+    pub(crate) fn build_engine(&self) -> Engine {
+        let mut b = Engine::builder(&self.artifacts_dir)
+            .backend(self.backend)
+            .registry(self.registry);
+        if let Some(t) = self.threads {
+            b = b.threads(t);
+        }
+        if let Some(w) = self.batch_workers {
+            b = b.workers(w);
+        }
+        b.build()
+    }
+}
+
+/// A client-visible failure with its HTTP status.
+#[derive(Debug)]
+struct ApiError {
+    status: u16,
+    message: String,
+}
+
+impl ApiError {
+    fn bad_request(message: impl Into<String>) -> Self {
+        ApiError { status: 400, message: message.into() }
+    }
+
+    fn not_found(message: impl Into<String>) -> Self {
+        ApiError { status: 404, message: message.into() }
+    }
+
+    fn unavailable(message: impl Into<String>) -> Self {
+        ApiError { status: 503, message: message.into() }
+    }
+
+    fn internal(message: impl Into<String>) -> Self {
+        ApiError { status: 500, message: message.into() }
+    }
+
+    fn from_engine(e: EngineError) -> Self {
+        if e.internal {
+            ApiError::internal(e.message)
+        } else {
+            ApiError::bad_request(format!("sort failed: {}", e.message))
+        }
+    }
+
+    fn response(&self) -> Response {
+        Response::json(self.status, error_body(self.status, &self.message))
+    }
+}
+
+fn error_body(status: u16, message: &str) -> String {
+    obj([(
+        "error",
+        obj([("status", Json::from(status)), ("message", Json::from(message))]),
+    )])
+    .to_string_compact()
+}
+
+/// Shared request-handling context.
+struct Ctx {
+    cfg: ServeConfig,
+    registry: MethodRegistry,
+    backend: BackendChoice,
+    metrics: Arc<Metrics>,
+    cache: Arc<ResultCache>,
+    queue: Arc<Bounded<Job>>,
+}
+
+/// A running server; dropping it shuts it down.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    workers: Vec<JoinHandle<()>>,
+    engine: Option<JoinHandle<()>>,
+    queue: Arc<Bounded<Job>>,
+}
+
+impl Server {
+    /// The bound address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful stop: stop accepting, finish in-flight requests, drain the
+    /// queue, join every thread.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Workers are gone: nothing can enqueue anymore; let the engine
+        // host drain what is left, then exit.
+        self.queue.close();
+        if let Some(e) = self.engine.take() {
+            let _ = e.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Bind, spawn the engine host + HTTP workers, return immediately.
+pub fn start(cfg: ServeConfig, spec: EngineSpec) -> Result<Server> {
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding serve address {}", cfg.addr))?;
+    // Non-blocking accept so workers can observe the shutdown flag.
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let metrics = Arc::new(Metrics::new());
+    let cache = Arc::new(ResultCache::new(
+        cfg.cache_mb.saturating_mul(1024 * 1024).max(64 * 1024),
+    ));
+    let queue: Arc<Bounded<Job>> = Arc::new(Bounded::new(cfg.queue_depth));
+
+    let registry = spec.registry;
+    let backend = spec.backend;
+    let engine = queue::spawn_engine_host(spec, queue.clone(), metrics.clone());
+
+    let ctx = Arc::new(Ctx {
+        cfg: cfg.clone(),
+        registry,
+        backend,
+        metrics,
+        cache,
+        queue: queue.clone(),
+    });
+    let mut workers = Vec::with_capacity(cfg.workers.max(1));
+    for i in 0..cfg.workers.max(1) {
+        let listener = listener.try_clone().context("cloning serve listener")?;
+        let ctx = ctx.clone();
+        let shutdown = shutdown.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("sssort-http-{i}"))
+                .spawn(move || worker_loop(listener, ctx, shutdown))
+                .context("spawning http worker")?,
+        );
+    }
+    Ok(Server { addr, shutdown, workers, engine: Some(engine), queue })
+}
+
+/// CLI entry point: start, print where we listen, block until SIGINT,
+/// shut down gracefully.
+pub fn run(cfg: ServeConfig, spec: EngineSpec) -> Result<()> {
+    let workers = cfg.workers.max(1);
+    let backend = spec.backend;
+    let server = start(cfg, spec)?;
+    println!(
+        "serving on http://{} ({} http workers, backend {}, ctrl-c to stop)",
+        server.addr(),
+        workers,
+        backend
+    );
+    sigint::install();
+    while !sigint::fired() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    eprintln!("SIGINT: draining and shutting down");
+    server.shutdown();
+    Ok(())
+}
+
+/// SIGINT → shutdown-flag plumbing, with no libc crate: `signal(2)` is
+/// already linked into every unix process, so declare it ourselves. The
+/// handler only stores to a static atomic (async-signal-safe).
+mod sigint {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static FIRED: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(unix)]
+    extern "C" fn on_sigint(_signum: i32) {
+        FIRED.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        #[cfg(unix)]
+        unsafe {
+            extern "C" {
+                fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+            }
+            // 2 = SIGINT on every unix.
+            let _ = signal(2, on_sigint);
+        }
+    }
+
+    pub fn fired() -> bool {
+        FIRED.load(Ordering::SeqCst)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling.
+// ---------------------------------------------------------------------------
+
+fn worker_loop(listener: TcpListener, ctx: Arc<Ctx>, shutdown: Arc<AtomicBool>) {
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = handle_connection(stream, &ctx, &shutdown);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(15));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(15)),
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    ctx: &Ctx,
+    shutdown: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    let _ = stream.set_nodelay(true);
+    // Short idle-poll read timeout so the keep-alive budget and the
+    // shutdown flag are observed promptly between requests;
+    // `read_request` switches to the longer busy timeout once a request
+    // starts arriving (and restores this one when it is done).
+    stream.set_read_timeout(Some(Duration::from_millis(250)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    let busy_timeout = Duration::from_secs(10);
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let idle_budget = Duration::from_secs(ctx.cfg.keep_alive_secs.max(1));
+    let mut idle_since = Instant::now();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match http::read_request(&mut reader, &writer, ctx.cfg.max_body_bytes, busy_timeout) {
+            Ok(ReadOutcome::Closed) => return Ok(()),
+            Ok(ReadOutcome::Idle) => {
+                if idle_since.elapsed() > idle_budget {
+                    return Ok(());
+                }
+            }
+            Ok(ReadOutcome::Request(req)) => {
+                idle_since = Instant::now();
+                let mut resp = handle(ctx, &req);
+                if !req.keep_alive() || shutdown.load(Ordering::SeqCst) {
+                    resp.close = true;
+                }
+                resp.write_to(&mut writer)?;
+                if resp.close {
+                    return Ok(());
+                }
+            }
+            Err(HttpError::Malformed(m)) => {
+                // Count protocol-level failures as requests too, so
+                // responses never outnumber requests_total on /metrics.
+                ctx.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                ctx.metrics.status(400);
+                let mut resp =
+                    Response::json(400, error_body(400, &format!("malformed request: {m}")));
+                resp.close = true;
+                let _ = resp.write_to(&mut writer);
+                return Ok(());
+            }
+            Err(HttpError::BodyTooLarge { declared, limit }) => {
+                ctx.metrics.requests.fetch_add(1, Ordering::Relaxed);
+                ctx.metrics.status(413);
+                let mut resp = Response::json(
+                    413,
+                    error_body(
+                        413,
+                        &format!("request body of {declared} bytes exceeds the {limit}-byte limit"),
+                    ),
+                );
+                resp.close = true;
+                let _ = resp.write_to(&mut writer);
+                return Ok(());
+            }
+            Err(HttpError::Io(_)) => return Ok(()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routing + endpoints.
+// ---------------------------------------------------------------------------
+
+fn handle(ctx: &Ctx, req: &Request) -> Response {
+    ctx.metrics.requests.fetch_add(1, Ordering::Relaxed);
+    let resp = route(ctx, req).unwrap_or_else(|e| e.response());
+    ctx.metrics.status(resp.status);
+    resp
+}
+
+fn route(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
+    const ROUTES: &[(&str, &str)] = &[
+        ("GET", "/healthz"),
+        ("GET", "/v1/methods"),
+        ("GET", "/metrics"),
+        ("POST", "/v1/sort"),
+        ("POST", "/v1/sort_batch"),
+    ];
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Ok(healthz(ctx)),
+        ("GET", "/v1/methods") => Ok(methods(ctx)),
+        ("GET", "/metrics") => Ok(metrics_view(ctx, req)),
+        ("POST", "/v1/sort") => sort_single(ctx, req),
+        ("POST", "/v1/sort_batch") => sort_batch(ctx, req),
+        (_, path) if ROUTES.iter().any(|(_, p)| *p == path) => {
+            let allowed: Vec<&str> = ROUTES
+                .iter()
+                .filter(|(_, p)| *p == path)
+                .map(|(m, _)| *m)
+                .collect();
+            Err(ApiError {
+                status: 405,
+                message: format!(
+                    "method {} not allowed for {path} (allowed: {})",
+                    req.method,
+                    allowed.join(", ")
+                ),
+            })
+        }
+        (_, path) => Err(ApiError::not_found(format!("no route for {path}"))),
+    }
+}
+
+fn healthz(ctx: &Ctx) -> Response {
+    Response::json(
+        200,
+        obj([
+            ("status", Json::from("ok")),
+            ("backend", Json::from(ctx.backend.name())),
+            ("queue_depth", Json::from(ctx.queue.len())),
+        ])
+        .to_string_compact(),
+    )
+}
+
+fn methods(ctx: &Ctx) -> Response {
+    let list = arr(ctx.registry.specs().into_iter().map(spec_json));
+    Response::json(
+        200,
+        obj([("default_backend", Json::from(ctx.backend.name())), ("methods", list)])
+            .to_string_compact(),
+    )
+}
+
+fn spec_json(s: &'static MethodSpec) -> Json {
+    obj([
+        ("name", Json::from(s.name)),
+        ("aliases", arr(s.aliases.iter().map(|&a| Json::from(a)))),
+        (
+            "kind",
+            Json::from(match s.kind {
+                MethodKind::Learned => "learned",
+                MethodKind::Heuristic => "heuristic",
+            }),
+        ),
+        ("summary", Json::from(s.summary)),
+    ])
+}
+
+fn metrics_view(ctx: &Ctx, req: &Request) -> Response {
+    let (entries, bytes) = ctx.cache.stats();
+    let depth = ctx.queue.len();
+    let prometheus = req.query_param("format") == Some("prometheus")
+        || req.header("accept").is_some_and(|a| a.contains("text/plain"));
+    if prometheus {
+        Response::text(200, ctx.metrics.to_prometheus(entries, bytes, depth))
+    } else {
+        Response::json(200, json::to_string_pretty(&ctx.metrics.to_json(entries, bytes, depth)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sort request parsing.
+// ---------------------------------------------------------------------------
+
+/// A validated sort request: everything the engine host needs, plus the
+/// canonical cache-key material.
+struct SortRequest {
+    method: &'static str,
+    grid: GridShape,
+    overrides: Vec<(String, String)>,
+    /// Canonical serialization of overrides + backend (cache-key part).
+    config: String,
+    datasets: Vec<Dataset>,
+}
+
+impl SortRequest {
+    fn cache_key(&self, ds: &Dataset) -> CacheKey {
+        CacheKey {
+            method: self.method.to_string(),
+            config: self.config.clone(),
+            grid: (self.grid.h, self.grid.w),
+            data_hash: hash_rows(&ds.rows),
+            n: ds.n,
+            d: ds.d,
+        }
+    }
+}
+
+fn parse_body(body: &[u8]) -> Result<Json, ApiError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| ApiError::bad_request("request body is not UTF-8"))?;
+    if text.trim().is_empty() {
+        return Err(ApiError::bad_request("empty body; expected a JSON object"));
+    }
+    Json::parse(text).map_err(|e| ApiError::bad_request(format!("malformed JSON: {e}")))
+}
+
+fn parse_grid_field(v: Option<&Json>) -> Result<GridShape, ApiError> {
+    let v = v.ok_or_else(|| {
+        ApiError::bad_request("missing 'grid' (either \"HxW\" or {\"h\":..,\"w\":..})")
+    })?;
+    let (h, w) = match v {
+        Json::Str(s) => crate::cli::parse_grid(s)
+            .map_err(|e| ApiError::bad_request(format!("bad grid '{s}': {e:#}")))?,
+        Json::Obj(_) => {
+            let h = v.get("h").and_then(Json::as_usize);
+            let w = v.get("w").and_then(Json::as_usize);
+            match (h, w) {
+                (Some(h), Some(w)) => (h, w),
+                _ => {
+                    return Err(ApiError::bad_request(
+                        "grid object needs integer 'h' and 'w'",
+                    ))
+                }
+            }
+        }
+        _ => return Err(ApiError::bad_request("grid must be \"HxW\" or {\"h\":..,\"w\":..}")),
+    };
+    if h == 0 || w == 0 {
+        return Err(ApiError::bad_request("grid sides must be >= 1"));
+    }
+    // checked_mul: a wrap here (h, w near usize::MAX pass the per-side
+    // checks) would sail through the cap and wedge the engine host.
+    match h.checked_mul(w) {
+        Some(n) if n <= MAX_N => Ok(GridShape::new(h, w)),
+        _ => Err(ApiError::bad_request(format!(
+            "grid {h}x{w} exceeds the serve cap of {MAX_N} items"
+        ))),
+    }
+}
+
+/// Stringify one scalar override value with the CLI's `k=v` conventions.
+fn override_value(k: &str, v: &Json) -> Result<String, ApiError> {
+    match v {
+        Json::Str(s) => Ok(s.clone()),
+        Json::Bool(b) => Ok(b.to_string()),
+        Json::Num(_) => Ok(v.to_string_compact()),
+        _ => Err(ApiError::bad_request(format!(
+            "override '{k}' must be a scalar (string, number or bool)"
+        ))),
+    }
+}
+
+fn parse_sort_request(ctx: &Ctx, body: &[u8], batch: bool) -> Result<SortRequest, ApiError> {
+    let j = parse_body(body)?;
+    if !matches!(j, Json::Obj(_)) {
+        return Err(ApiError::bad_request("request body must be a JSON object"));
+    }
+
+    let method_name = j
+        .get("method")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ApiError::bad_request("missing 'method' (string)"))?;
+    let spec = ctx.registry.resolve(method_name).ok_or_else(|| {
+        ApiError::not_found(format!(
+            "unknown method '{method_name}' — available: {}",
+            ctx.registry.names().join(", ")
+        ))
+    })?;
+
+    let grid = parse_grid_field(j.get("grid"))?;
+
+    // Overrides arrive as a JSON object: unique keys, canonical (sorted)
+    // order — exactly what the cache key needs.
+    let mut overrides: Vec<(String, String)> = Vec::new();
+    if let Some(ov) = j.get("overrides") {
+        let Json::Obj(m) = ov else {
+            return Err(ApiError::bad_request("'overrides' must be an object of scalars"));
+        };
+        for (k, v) in m {
+            overrides.push((k.clone(), override_value(k, v)?));
+        }
+    }
+    if let Some(b) = j.get("backend") {
+        let s = b
+            .as_str()
+            .ok_or_else(|| ApiError::bad_request("'backend' must be a string"))?;
+        BackendChoice::parse(s)
+            .map_err(|e| ApiError::bad_request(format!("{e:#}")))?;
+        overrides.push(("backend".to_string(), s.to_ascii_lowercase()));
+    }
+    let config = obj(overrides
+        .iter()
+        .map(|(k, v)| (k.clone(), Json::from(v.as_str()))))
+    .to_string_compact();
+
+    // Datasets.
+    let mut datasets = Vec::new();
+    if batch {
+        let items = j
+            .get("datasets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| ApiError::bad_request("missing 'datasets' (array) for sort_batch"))?;
+        if items.is_empty() {
+            return Err(ApiError::bad_request("'datasets' must not be empty"));
+        }
+        if items.len() > MAX_BATCH {
+            return Err(ApiError::bad_request(format!(
+                "'datasets' has {} items; the serve cap is {MAX_BATCH}",
+                items.len()
+            )));
+        }
+        for (i, item) in items.iter().enumerate() {
+            datasets.push(dataset_from_json(item, grid).map_err(|e| ApiError {
+                status: e.status,
+                message: format!("datasets[{i}]: {}", e.message),
+            })?);
+        }
+    } else {
+        datasets.push(dataset_from_json(&j, grid)?);
+    }
+
+    Ok(SortRequest { method: spec.name, grid, overrides, config, datasets })
+}
+
+/// An optional non-negative-integer field of a dataset spec: absent is
+/// fine (the caller defaults it), present-but-wrong-typed is a 400 — a
+/// silent default would compute (and cache) a different dataset than the
+/// client asked for.
+fn spec_usize(spec: &Json, key: &str) -> Result<Option<usize>, ApiError> {
+    match spec.get(key) {
+        None => Ok(None),
+        Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+            ApiError::bad_request(format!(
+                "dataset field '{key}' must be a non-negative integer"
+            ))
+        }),
+    }
+}
+
+/// Build the dataset for one request item: either inline `data` or a
+/// server-side generated `dataset` spec (hashable either way).
+fn dataset_from_json(item: &Json, grid: GridShape) -> Result<Dataset, ApiError> {
+    let n = grid.n();
+    if let Some(spec) = item.get("dataset") {
+        let kind = spec
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ApiError::bad_request("dataset spec needs 'kind' (colors|features)"))?;
+        let seed = spec_usize(spec, "seed")?.unwrap_or(42) as u64;
+        let spec_n = spec_usize(spec, "n")?.unwrap_or(n);
+        if spec_n != n {
+            return Err(ApiError::bad_request(format!(
+                "dataset n={spec_n} does not match grid {}x{} (= {n} items)",
+                grid.h, grid.w
+            )));
+        }
+        match kind {
+            "colors" => Ok(data::random_colors(n, seed)),
+            "features" => {
+                let d = spec_usize(spec, "d")?.unwrap_or(50);
+                let clusters = spec_usize(spec, "clusters")?.unwrap_or(16);
+                let spread = match spec.get("spread") {
+                    None => 0.06f32,
+                    Some(v) => {
+                        let f = v.as_f64().filter(|f| f.is_finite() && *f >= 0.0).ok_or_else(
+                            || {
+                                ApiError::bad_request(
+                                    "dataset field 'spread' must be a non-negative number",
+                                )
+                            },
+                        )?;
+                        f as f32
+                    }
+                };
+                if d == 0 || d > 1024 || clusters == 0 {
+                    return Err(ApiError::bad_request(
+                        "features spec needs 1 <= d <= 1024 and clusters >= 1",
+                    ));
+                }
+                Ok(data::clustered_features(n, d, clusters, spread, seed))
+            }
+            other => Err(ApiError::bad_request(format!(
+                "unknown dataset kind '{other}' (expected colors or features)"
+            ))),
+        }
+    } else if let Some(d) = item.get("data") {
+        let (rows, dim) = match d {
+            // Nested rows: [[r,g,b], ...] — d inferred from the first row.
+            Json::Arr(rows_json) => {
+                let first = rows_json
+                    .first()
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| ApiError::bad_request("'data' rows must be number arrays"))?;
+                let dim = first.len();
+                if dim == 0 {
+                    return Err(ApiError::bad_request("'data' rows must not be empty"));
+                }
+                let mut rows = Vec::with_capacity(rows_json.len() * dim);
+                for (i, row) in rows_json.iter().enumerate() {
+                    let row = row.as_arr().ok_or_else(|| {
+                        ApiError::bad_request(format!("data[{i}] is not an array"))
+                    })?;
+                    if row.len() != dim {
+                        return Err(ApiError::bad_request(format!(
+                            "data[{i}] has {} values, expected {dim}",
+                            row.len()
+                        )));
+                    }
+                    for v in row {
+                        rows.push(json_f32(v, i)?);
+                    }
+                }
+                (rows, dim)
+            }
+            // Flat object: {"rows": [..], "d": 3}.
+            Json::Obj(_) => {
+                let dim = d
+                    .get("d")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| ApiError::bad_request("flat 'data' needs integer 'd'"))?;
+                let flat = d
+                    .get("rows")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| ApiError::bad_request("flat 'data' needs 'rows' (array)"))?;
+                if dim == 0 {
+                    return Err(ApiError::bad_request("'d' must be >= 1"));
+                }
+                let mut rows = Vec::with_capacity(flat.len());
+                for (i, v) in flat.iter().enumerate() {
+                    rows.push(json_f32(v, i / dim)?);
+                }
+                (rows, dim)
+            }
+            _ => {
+                return Err(ApiError::bad_request(
+                    "'data' must be an array of rows or {\"rows\":[..],\"d\":..}",
+                ))
+            }
+        };
+        if rows.len() != n * dim {
+            return Err(ApiError::bad_request(format!(
+                "data has {} values ({} rows of d={dim}); grid {}x{} needs {n} rows",
+                rows.len(),
+                rows.len() / dim.max(1),
+                grid.h,
+                grid.w
+            )));
+        }
+        Ok(Dataset { name: format!("inline{n}x{dim}"), n, d: dim, rows, labels: None })
+    } else {
+        Err(ApiError::bad_request(
+            "missing 'data' (inline rows) or 'dataset' (generator spec)",
+        ))
+    }
+}
+
+fn json_f32(v: &Json, row: usize) -> Result<f32, ApiError> {
+    let f = v
+        .as_f64()
+        .ok_or_else(|| ApiError::bad_request(format!("data row {row} has a non-number value")))?;
+    // Check finiteness *after* the cast: a finite f64 beyond f32 range
+    // (1e300) would otherwise smuggle an infinity into the kernels.
+    let v = f as f32;
+    if !v.is_finite() {
+        return Err(ApiError::bad_request(format!(
+            "data row {row} has a value outside the finite f32 range"
+        )));
+    }
+    Ok(v)
+}
+
+// ---------------------------------------------------------------------------
+// Sort endpoints.
+// ---------------------------------------------------------------------------
+
+/// Serialize one finished sort. The body is the cache payload, so it must
+/// be a pure function of the computation (no timestamps beyond the run's
+/// own wall time, no cache status — that goes in the `X-Cache` header).
+fn render_outcome(method: &str, g: GridShape, ds: &Dataset, out: &SortOutcome) -> String {
+    obj([
+        ("method", Json::from(method)),
+        ("grid", obj([("h", Json::from(g.h)), ("w", Json::from(g.w))])),
+        ("n", Json::from(ds.n)),
+        ("d", Json::from(ds.d)),
+        ("perm", arr(out.perm.as_slice().iter().map(|&i| Json::from(i)))),
+        ("dpq16", num(out.report.final_dpq)),
+        ("loss", num(out.report.final_loss)),
+        ("steps", Json::from(out.report.steps)),
+        ("repaired", Json::from(out.report.repaired)),
+        ("wall_secs", num(out.report.wall_secs)),
+    ])
+    .to_string_compact()
+}
+
+fn enqueue(ctx: &Ctx, job: Job) -> Result<(), ApiError> {
+    ctx.queue.try_push(job).map_err(|e| match e {
+        PushError::Full(_) => {
+            ctx.metrics.queue_rejections.fetch_add(1, Ordering::Relaxed);
+            ApiError::unavailable("job queue is full — retry shortly")
+        }
+        PushError::Closed(_) => ApiError::unavailable("server is shutting down"),
+    })
+}
+
+fn sort_single(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
+    let parsed = parse_sort_request(ctx, &req.body, false)?;
+    let ds = &parsed.datasets[0];
+    let key = parsed.cache_key(ds);
+    if let Some(body) = ctx.cache.get(&key) {
+        ctx.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+        return Ok(Response::json(200, (*body).clone()).with_header("X-Cache", "hit"));
+    }
+    ctx.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+
+    let (tx, rx) = mpsc::channel();
+    enqueue(
+        ctx,
+        Job::Sort(SortJob {
+            method: parsed.method.to_string(),
+            dataset: ds.clone(),
+            grid: parsed.grid,
+            overrides: parsed.overrides.clone(),
+            reply: tx,
+        }),
+    )?;
+    let outcome = rx
+        .recv()
+        .map_err(|_| ApiError::internal("engine host exited before replying"))?
+        .map_err(ApiError::from_engine)?;
+    // get_or_put: if an identical concurrent miss beat us to the insert,
+    // serve its body so every response for this key is byte-identical.
+    let body = ctx
+        .cache
+        .get_or_put(key, Arc::new(render_outcome(parsed.method, parsed.grid, ds, &outcome)));
+    Ok(Response::json(200, (*body).clone()).with_header("X-Cache", "miss"))
+}
+
+fn sort_batch(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
+    let parsed = parse_sort_request(ctx, &req.body, true)?;
+    let m = parsed.datasets.len();
+
+    // Per-item cache check; only the misses travel to the engine host
+    // (as ONE batch job, so `Engine::sort_batch` can fan them out).
+    let keys: Vec<CacheKey> = parsed.datasets.iter().map(|ds| parsed.cache_key(ds)).collect();
+    let mut bodies: Vec<Option<Arc<String>>> = Vec::with_capacity(m);
+    let mut miss_idx: Vec<usize> = Vec::new();
+    for (i, key) in keys.iter().enumerate() {
+        match ctx.cache.get(key) {
+            Some(body) => {
+                ctx.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                bodies.push(Some(body));
+            }
+            None => {
+                ctx.metrics.cache_misses.fetch_add(1, Ordering::Relaxed);
+                bodies.push(None);
+                miss_idx.push(i);
+            }
+        }
+    }
+    let hits = m - miss_idx.len();
+
+    if !miss_idx.is_empty() {
+        let (tx, rx) = mpsc::channel();
+        enqueue(
+            ctx,
+            Job::Batch(BatchJob {
+                method: parsed.method.to_string(),
+                datasets: miss_idx.iter().map(|&i| parsed.datasets[i].clone()).collect(),
+                grid: parsed.grid,
+                overrides: parsed.overrides.clone(),
+                reply: tx,
+            }),
+        )?;
+        let results = rx
+            .recv()
+            .map_err(|_| ApiError::internal("engine host exited before replying"))?;
+        for (&i, result) in miss_idx.iter().zip(results) {
+            let outcome = result.map_err(ApiError::from_engine)?;
+            let rendered = Arc::new(render_outcome(
+                parsed.method,
+                parsed.grid,
+                &parsed.datasets[i],
+                &outcome,
+            ));
+            bodies[i] = Some(ctx.cache.get_or_put(keys[i].clone(), rendered));
+        }
+    }
+
+    // Splice the per-item bodies (known-valid compact JSON, and the cache
+    // payloads themselves) into the envelope verbatim — no re-parse.
+    let mut results = String::with_capacity(
+        bodies.iter().map(|b| b.as_ref().map_or(0, |s| s.len() + 1)).sum::<usize>() + 2,
+    );
+    results.push('[');
+    for (i, b) in bodies.iter().enumerate() {
+        if i > 0 {
+            results.push(',');
+        }
+        results.push_str(b.as_ref().expect("every batch slot is a hit or a completed miss"));
+    }
+    results.push(']');
+    let body = format!(
+        "{{\"count\":{m},\"method\":\"{}\",\"results\":{results}}}",
+        parsed.method
+    );
+    Ok(Response::json(200, body)
+        .with_header("X-Cache", format!("hits={hits} misses={}", miss_idx.len())))
+}

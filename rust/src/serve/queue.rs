@@ -1,0 +1,248 @@
+//! Bounded job queue and the engine host thread.
+//!
+//! The HTTP worker threads never touch the [`Engine`] directly — the
+//! engine's caches are deliberately single-threaded (`RefCell`/`Rc`), and
+//! running K sorts truly concurrently would oversubscribe the machine
+//! anyway (each sort is already row-parallel through its step session's
+//! worker pool, sized by the `--threads` budget). Instead the workers fan
+//! every compute request into one bounded MPMC queue consumed by a single
+//! **engine host** thread that owns the one shared `Engine` for the whole
+//! server lifetime: backend construction, PJRT executable caches and
+//! `(n, d, h)` step-session memoization all amortize across requests, and
+//! cross-request ordering is the queue order, so results are bit-identical
+//! to sequential `Engine::sort` calls by construction.
+//!
+//! Backpressure is explicit: `try_push` never blocks an accepted client on
+//! a full queue — the handler turns `Full` into `503` and the client
+//! retries. A panicking job (a bug, not a bad request) is caught in the
+//! host and reported as an internal error; the host thread survives.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::backend::pool::PoolError;
+use crate::coordinator::SortOutcome;
+use crate::data::Dataset;
+use crate::grid::GridShape;
+
+use super::metrics::Metrics;
+use super::EngineSpec;
+
+/// Classify an engine failure: a `PoolError` anywhere in the chain means a
+/// row job panicked server-side (our bug, → 500); everything else is a
+/// request problem (bad overrides, mismatched shapes, → 400).
+fn engine_error(e: anyhow::Error) -> EngineError {
+    let internal = e.downcast_ref::<PoolError>().is_some();
+    EngineError { message: format!("{e:#}"), internal }
+}
+
+/// A bounded MPMC queue: blocking `pop`, non-blocking `try_push`.
+pub struct Bounded<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// Why a `try_push` was refused (the item is handed back).
+pub enum PushError<T> {
+    Full(T),
+    Closed(T),
+}
+
+impl<T> Bounded<T> {
+    pub fn new(cap: usize) -> Self {
+        Bounded {
+            inner: Mutex::new(Inner { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue without blocking; a full or closed queue refuses the item.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.inner.lock().expect("queue mutex poisoned");
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.q.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        st.q.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking until an item arrives. Returns `None` once the
+    /// queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().expect("queue mutex poisoned");
+        loop {
+            if let Some(item) = st.q.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).expect("queue mutex poisoned");
+        }
+    }
+
+    /// Close the queue: pending items still drain, new pushes fail, and
+    /// blocked `pop`s wake up.
+    pub fn close(&self) {
+        self.inner.lock().expect("queue mutex poisoned").closed = true;
+        self.not_empty.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("queue mutex poisoned").q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A compute failure, split so the HTTP layer can pick the status class:
+/// request problems (bad overrides, mismatched grid) are the client's
+/// fault; panics are ours.
+#[derive(Debug)]
+pub struct EngineError {
+    pub message: String,
+    pub internal: bool,
+}
+
+/// One unit of engine work.
+pub enum Job {
+    Sort(SortJob),
+    Batch(BatchJob),
+}
+
+pub struct SortJob {
+    pub method: String,
+    pub dataset: Dataset,
+    pub grid: GridShape,
+    pub overrides: Vec<(String, String)>,
+    pub reply: mpsc::Sender<Result<SortOutcome, EngineError>>,
+}
+
+pub struct BatchJob {
+    pub method: String,
+    pub datasets: Vec<Dataset>,
+    pub grid: GridShape,
+    pub overrides: Vec<(String, String)>,
+    pub reply: mpsc::Sender<Vec<Result<SortOutcome, EngineError>>>,
+}
+
+/// Spawn the engine host: one thread, one `Engine`, jobs in queue order.
+pub fn spawn_engine_host(
+    spec: EngineSpec,
+    queue: Arc<Bounded<Job>>,
+    metrics: Arc<Metrics>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("sssort-engine".to_string())
+        .spawn(move || {
+            let engine = spec.build_engine();
+            while let Some(job) = queue.pop() {
+                metrics.engine_jobs.fetch_add(1, Ordering::Relaxed);
+                match job {
+                    Job::Sort(j) => {
+                        let started = Instant::now();
+                        let result = catch_unwind(AssertUnwindSafe(|| {
+                            engine.sort(&j.method, &j.dataset, j.grid, &j.overrides)
+                        }));
+                        let result = match result {
+                            Ok(Ok(out)) => {
+                                metrics.observe(&j.method, started.elapsed().as_secs_f64());
+                                Ok(out)
+                            }
+                            Ok(Err(e)) => Err(engine_error(e)),
+                            Err(_) => Err(EngineError {
+                                message: "sort panicked in the engine host".to_string(),
+                                internal: true,
+                            }),
+                        };
+                        let _ = j.reply.send(result);
+                    }
+                    Job::Batch(j) => {
+                        let started = Instant::now();
+                        let results = catch_unwind(AssertUnwindSafe(|| {
+                            engine.sort_batch(&j.method, &j.datasets, j.grid, &j.overrides)
+                        }));
+                        let results = match results {
+                            Ok(rs) => {
+                                // Amortize the batch wall time over its items
+                                // so the histogram stays per-sort, comparable
+                                // with the single-sort path.
+                                let per_item = started.elapsed().as_secs_f64()
+                                    / j.datasets.len().max(1) as f64;
+                                for _ in 0..j.datasets.len() {
+                                    metrics.observe(&j.method, per_item);
+                                }
+                                rs.into_iter().map(|r| r.map_err(engine_error)).collect()
+                            }
+                            Err(_) => (0..j.datasets.len())
+                                .map(|_| {
+                                    Err(EngineError {
+                                        message: "batch sort panicked in the engine host"
+                                            .to_string(),
+                                        internal: true,
+                                    })
+                                })
+                                .collect(),
+                        };
+                        let _ = j.reply.send(results);
+                    }
+                }
+            }
+        })
+        .expect("spawn engine host thread")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_queue_pushes_pops_and_refuses_when_full() {
+        let q: Bounded<u32> = Bounded::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert!(matches!(q.try_push(3), Err(PushError::Full(3))));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_drains_then_wakes_blocked_pops() {
+        let q: Arc<Bounded<u32>> = Arc::new(Bounded::new(4));
+        q.try_push(7).ok().unwrap();
+        q.close();
+        assert!(matches!(q.try_push(8), Err(PushError::Closed(8))));
+        assert_eq!(q.pop(), Some(7), "pending items drain after close");
+        assert_eq!(q.pop(), None);
+        // A pop blocked *before* close must wake up too.
+        let q2: Arc<Bounded<u32>> = Arc::new(Bounded::new(4));
+        let waiter = {
+            let q2 = q2.clone();
+            std::thread::spawn(move || q2.pop())
+        };
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        q2.close();
+        assert_eq!(waiter.join().unwrap(), None);
+    }
+}

@@ -1,0 +1,395 @@
+//! End-to-end tests for the serve layer, over real loopback sockets: boot
+//! a `Server` on port 0, speak raw HTTP/1.1 from client threads, and check
+//! the contract the ISSUE pins down — JSON 4xx bodies for malformed
+//! input, bit-identical cache replays with zero extra Engine work, and
+//! concurrent-client results identical to sequential `Engine::sort`.
+//!
+//! Everything runs on the native backend: no artifacts, no `pjrt` feature
+//! needed.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use shufflesort::api::{BackendChoice, Engine, MethodRegistry};
+use shufflesort::config::ServeConfig;
+use shufflesort::data::random_colors;
+use shufflesort::grid::GridShape;
+use shufflesort::serve::{self, json::Json, EngineSpec, Server};
+
+fn start_server() -> Server {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 8,
+        cache_mb: 8,
+        queue_depth: 64,
+        max_body_bytes: 1 << 20,
+        keep_alive_secs: 2,
+    };
+    let spec = EngineSpec {
+        artifacts_dir: "artifacts".to_string(),
+        backend: BackendChoice::Native,
+        threads: Some(1),
+        batch_workers: Some(2),
+        registry: MethodRegistry::new(),
+    };
+    serve::start(cfg, spec).expect("server boots on a free port")
+}
+
+struct Resp {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Resp {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Json {
+        Json::parse(&self.body)
+            .unwrap_or_else(|e| panic!("body is not JSON ({e}): {}", self.body))
+    }
+}
+
+/// Tiny raw-HTTP client; keeps the connection (and its read buffer) so
+/// keep-alive tests can pipeline requests.
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let s = TcpStream::connect(addr).expect("connect to serve");
+        s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+        Client { writer: s.try_clone().unwrap(), reader: BufReader::new(s) }
+    }
+
+    fn request(&mut self, method: &str, path: &str, body: &str, close: bool) -> Resp {
+        let conn = if close { "close" } else { "keep-alive" };
+        let raw = format!(
+            "{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: {conn}\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        self.writer.write_all(raw.as_bytes()).unwrap();
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> Resp {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .unwrap_or_else(|| panic!("bad status line: {line:?}"))
+            .parse()
+            .unwrap();
+        let mut headers = Vec::new();
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).unwrap();
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            let (k, v) = h.split_once(':').unwrap();
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+        let len: usize = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .map(|(_, v)| v.parse().unwrap())
+            .unwrap_or(0);
+        let mut body = vec![0u8; len];
+        self.reader.read_exact(&mut body).unwrap();
+        Resp { status, headers, body: String::from_utf8(body).unwrap() }
+    }
+}
+
+fn get(addr: SocketAddr, path: &str) -> Resp {
+    Client::connect(addr).request("GET", path, "", true)
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> Resp {
+    Client::connect(addr).request("POST", path, body, true)
+}
+
+fn perm_of(body: &Json) -> Vec<u32> {
+    body.get("perm")
+        .expect("response has perm")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u32)
+        .collect()
+}
+
+/// A local engine configured exactly like the server's engine host.
+fn local_engine() -> Engine {
+    Engine::builder("artifacts").backend(BackendChoice::Native).threads(1).build()
+}
+
+fn sort_body(seed: u64, steps: usize) -> String {
+    format!(
+        r#"{{"method":"softsort","grid":"4x4","dataset":{{"kind":"colors","n":16,"seed":{seed}}},"overrides":{{"seed":{seed},"steps":{steps}}}}}"#
+    )
+}
+
+/// Overrides in the server's canonical (sorted-key) order.
+fn sort_overrides(seed: u64, steps: usize) -> Vec<(String, String)> {
+    vec![("seed".into(), seed.to_string()), ("steps".into(), steps.to_string())]
+}
+
+#[test]
+fn healthz_methods_and_metrics_render() {
+    let server = start_server();
+    let addr = server.addr();
+
+    let r = get(addr, "/healthz");
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().get("status").unwrap().as_str(), Some("ok"));
+
+    let r = get(addr, "/v1/methods");
+    assert_eq!(r.status, 200);
+    let j = r.json();
+    let names: Vec<&str> = j
+        .get("methods")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| m.get("name").unwrap().as_str().unwrap())
+        .collect();
+    assert!(names.contains(&"shuffle-softsort"), "{names:?}");
+    assert!(names.contains(&"flas"), "{names:?}");
+    assert_eq!(j.get("default_backend").unwrap().as_str(), Some("native"));
+
+    let r = get(addr, "/metrics");
+    assert_eq!(r.status, 200);
+    assert!(r.json().get("requests_total").is_some());
+    let r = get(addr, "/metrics?format=prometheus");
+    assert_eq!(r.status, 200);
+    assert!(r.body.contains("sssort_requests_total"), "{}", r.body);
+
+    server.shutdown();
+}
+
+#[test]
+fn sort_roundtrip_is_bit_identical_to_engine_sort() {
+    let server = start_server();
+    let addr = server.addr();
+
+    let r = post(addr, "/v1/sort", &sort_body(5, 24));
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(r.header("x-cache"), Some("miss"));
+    let j = r.json();
+
+    let expected = local_engine()
+        .sort("softsort", &random_colors(16, 5), GridShape::new(4, 4), &sort_overrides(5, 24))
+        .unwrap();
+    assert_eq!(perm_of(&j), expected.perm.as_slice().to_vec());
+    // f64s survive the JSON round-trip exactly (shortest-roundtrip repr).
+    assert_eq!(j.get("dpq16").unwrap().as_f64(), Some(expected.report.final_dpq));
+    assert_eq!(j.get("steps").unwrap().as_usize(), Some(expected.report.steps));
+    assert_eq!(j.get("n").unwrap().as_usize(), Some(16));
+
+    // Inline data sorts too, and matches the generated-dataset request
+    // when the bytes are the same dataset.
+    let ds = random_colors(16, 5);
+    let rows: Vec<String> = ds.rows.iter().map(|v| format!("{v}")).collect();
+    let body = format!(
+        r#"{{"method":"softsort","grid":"4x4","data":{{"rows":[{}],"d":3}},"overrides":{{"seed":5,"steps":24}}}}"#,
+        rows.join(",")
+    );
+    let r2 = post(addr, "/v1/sort", &body);
+    assert_eq!(r2.status, 200, "{}", r2.body);
+    assert_eq!(perm_of(&r2.json()), expected.perm.as_slice().to_vec());
+
+    server.shutdown();
+}
+
+#[test]
+fn bad_requests_get_json_4xx_bodies() {
+    let server = start_server();
+    let addr = server.addr();
+
+    // Malformed JSON → 400 with a JSON error body.
+    let r = post(addr, "/v1/sort", "{nope");
+    assert_eq!(r.status, 400, "{}", r.body);
+    let msg = r.json().get("error").unwrap().get("message").unwrap().as_str().unwrap().to_string();
+    assert!(msg.contains("malformed JSON"), "{msg}");
+
+    // Unknown method → 404 listing what exists.
+    let r = post(
+        addr,
+        "/v1/sort",
+        r#"{"method":"bogus","grid":"4x4","dataset":{"kind":"colors","n":16}}"#,
+    );
+    assert_eq!(r.status, 404, "{}", r.body);
+    assert!(r.body.contains("shuffle-softsort"), "{}", r.body);
+
+    // Grid/dataset mismatch → 400.
+    let r = post(
+        addr,
+        "/v1/sort",
+        r#"{"method":"softsort","grid":"4x4","dataset":{"kind":"colors","n":64}}"#,
+    );
+    assert_eq!(r.status, 400, "{}", r.body);
+
+    // Bad override value → 400 naming the key.
+    let r = post(
+        addr,
+        "/v1/sort",
+        r#"{"method":"softsort","grid":"4x4","dataset":{"kind":"colors","n":16},"overrides":{"steps":"nope"}}"#,
+    );
+    assert_eq!(r.status, 400, "{}", r.body);
+    assert!(r.body.contains("steps"), "{}", r.body);
+
+    // Unknown route → 404; wrong verb on a real route → 405.
+    assert_eq!(get(addr, "/nope").status, 404);
+    assert_eq!(get(addr, "/v1/sort").status, 405);
+
+    // Oversized declared body → 413 before the body is read.
+    let mut c = Client::connect(addr);
+    c.writer
+        .write_all(b"POST /v1/sort HTTP/1.1\r\nHost: t\r\nContent-Length: 99999999\r\n\r\n")
+        .unwrap();
+    let r = c.read_response();
+    assert_eq!(r.status, 413, "{}", r.body);
+    assert!(r.json().get("error").is_some());
+
+    server.shutdown();
+}
+
+#[test]
+fn cache_hit_replays_identical_bytes_with_zero_extra_engine_jobs() {
+    let server = start_server();
+    let addr = server.addr();
+
+    let first = post(addr, "/v1/sort", &sort_body(9, 24));
+    assert_eq!(first.status, 200, "{}", first.body);
+    assert_eq!(first.header("x-cache"), Some("miss"));
+
+    let jobs_after_first = get(addr, "/metrics")
+        .json()
+        .get("engine")
+        .unwrap()
+        .get("jobs")
+        .unwrap()
+        .as_usize()
+        .unwrap();
+    assert_eq!(jobs_after_first, 1);
+
+    // Same request, different JSON key order and whitespace: still a hit.
+    let reordered = r#"{ "overrides": {"steps": 24, "seed": 9}, "grid": "4x4", "dataset": {"seed": 9, "n": 16, "kind": "colors"}, "method": "softsort" }"#;
+    let second = post(addr, "/v1/sort", reordered);
+    assert_eq!(second.status, 200, "{}", second.body);
+    assert_eq!(second.header("x-cache"), Some("hit"));
+    assert_eq!(second.body, first.body, "cache replay must be byte-identical");
+
+    let metrics = get(addr, "/metrics").json();
+    assert_eq!(metrics.get("cache").unwrap().get("hits").unwrap().as_usize(), Some(1));
+    assert_eq!(
+        metrics.get("engine").unwrap().get("jobs").unwrap().as_usize(),
+        Some(jobs_after_first),
+        "a cache hit must not reach the engine"
+    );
+
+    server.shutdown();
+}
+
+#[test]
+fn eight_concurrent_clients_match_sequential_engine_sort() {
+    let server = start_server();
+    let addr = server.addr();
+
+    let handles: Vec<_> = (0..8u64)
+        .map(|seed| {
+            std::thread::spawn(move || {
+                let r = post(addr, "/v1/sort", &sort_body(seed, 16));
+                assert_eq!(r.status, 200, "{}", r.body);
+                (seed, perm_of(&r.json()))
+            })
+        })
+        .collect();
+    let results: Vec<(u64, Vec<u32>)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let engine = local_engine();
+    let g = GridShape::new(4, 4);
+    for (seed, perm) in results {
+        let expected = engine
+            .sort("softsort", &random_colors(16, seed), g, &sort_overrides(seed, 16))
+            .unwrap();
+        assert_eq!(
+            perm,
+            expected.perm.as_slice().to_vec(),
+            "seed {seed}: concurrent serve result must equal sequential Engine::sort"
+        );
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn keep_alive_serves_multiple_requests_on_one_connection() {
+    let server = start_server();
+    let addr = server.addr();
+
+    let mut c = Client::connect(addr);
+    let r1 = c.request("GET", "/healthz", "", false);
+    assert_eq!(r1.status, 200);
+    assert_eq!(r1.header("connection"), Some("keep-alive"));
+    let r2 = c.request("POST", "/v1/sort", &sort_body(3, 16), false);
+    assert_eq!(r2.status, 200, "{}", r2.body);
+    let r3 = c.request("GET", "/metrics", "", true);
+    assert_eq!(r3.status, 200);
+    assert_eq!(r3.header("connection"), Some("close"));
+
+    server.shutdown();
+}
+
+#[test]
+fn sort_batch_fans_out_and_shares_the_cache_with_single_sorts() {
+    let server = start_server();
+    let addr = server.addr();
+
+    // Warm one of the two items through the single-sort path.
+    let warm = post(addr, "/v1/sort", &sort_body(100, 16));
+    assert_eq!(warm.status, 200, "{}", warm.body);
+
+    let batch_body = r#"{"method":"softsort","grid":"4x4","overrides":{"seed":100,"steps":16},"datasets":[{"dataset":{"kind":"colors","n":16,"seed":100}},{"dataset":{"kind":"colors","n":16,"seed":101}}]}"#;
+    // Item 0 is the warmed request — but its overrides there included
+    // seed=100 too, so the canonical config matches and it must hit.
+    let first = post(addr, "/v1/sort_batch", batch_body);
+    assert_eq!(first.status, 200, "{}", first.body);
+    assert_eq!(first.header("x-cache"), Some("hits=1 misses=1"));
+    let j = first.json();
+    assert_eq!(j.get("count").unwrap().as_usize(), Some(2));
+    let results = j.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 2);
+
+    // Batch results equal sequential engine sorts, item by item.
+    let engine = local_engine();
+    let g = GridShape::new(4, 4);
+    for (i, seed) in [100u64, 101].iter().enumerate() {
+        let expected = engine
+            .sort("softsort", &random_colors(16, *seed), g, &sort_overrides(100, 16))
+            .unwrap();
+        assert_eq!(
+            perm_of(&results[i]),
+            expected.perm.as_slice().to_vec(),
+            "batch item {i}"
+        );
+    }
+
+    // Re-running the whole batch is now pure cache replay.
+    let second = post(addr, "/v1/sort_batch", batch_body);
+    assert_eq!(second.header("x-cache"), Some("hits=2 misses=0"));
+    assert_eq!(second.body, first.body);
+
+    server.shutdown();
+}
