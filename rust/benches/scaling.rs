@@ -99,6 +99,67 @@ fn main() {
     }
     table.print();
 
+    // Tiled-vs-full per-phase cost: a `Tiled { tile_n }` phase runs B
+    // independent tile steps of O(tile_n²) work instead of one O(N²) full
+    // step, so the phase-equivalent cost is B × the tile step. Full-shape
+    // rows stop at 4096 in quick mode (the O(N²) sweep is what tiling
+    // exists to avoid); tiled rows run at every size.
+    println!();
+    let tile_n = 512usize;
+    let mut tiled_table = Table::new(&[
+        "N",
+        "tile_n",
+        "tiles",
+        "full ms/step",
+        "tiled ms/phase-equiv",
+    ]);
+    for (n, side) in [(4096usize, 64usize), (16384, 128)] {
+        let ds = random_colors(n, 3);
+        let full_ms = if n <= 4096 || !quick_mode() {
+            let shape = StepShape::new(GridShape::new(side, n / side), 3);
+            let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+            let inv: Vec<i32> = (0..n as i32).collect();
+            let mut session = native.session(shape, None).unwrap();
+            let mut step = SssStep::new_for(shape);
+            let s = bench(&format!("native sss n{n} full (per step)"), 1, reps.min(3), || {
+                session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
+                step.loss
+            });
+            println!("{}", s.line());
+            let ms = format!("{:.2}", s.mean_s * 1e3);
+            samples.push(s);
+            ms
+        } else {
+            "O(N^2)-scale (skipped)".to_string()
+        };
+
+        // One tile: `tile_n` items as a (tile_n/w)×w band of the grid —
+        // exactly the sub-problem shape the tiled executor opens.
+        let w_grid = n / side;
+        let rows = (tile_n / w_grid).max(1);
+        let nb = rows * w_grid;
+        let tiles = n.div_ceil(nb);
+        let tshape = StepShape::new(GridShape::new(rows, w_grid), 3);
+        let tw: Vec<f32> = (0..nb).map(|i| (nb - i) as f32).collect();
+        let tinv: Vec<i32> = (0..nb as i32).collect();
+        let mut tsession = native.session(tshape, None).unwrap();
+        let mut tstep = SssStep::new_for(tshape);
+        let ts = bench(&format!("native sss n{n} tiled{nb} (per tile step)"), 1, reps, || {
+            tsession.sss_step(&tw, &ds.rows[..nb * 3], &tinv, 0.3, 0.5, &mut tstep).unwrap();
+            tstep.loss
+        });
+        println!("{}", ts.line());
+        tiled_table.row(&[
+            n.to_string(),
+            nb.to_string(),
+            tiles.to_string(),
+            full_ms,
+            format!("{:.2}", ts.mean_s * 1e3 * tiles as f64),
+        ]);
+        samples.push(ts);
+    }
+    tiled_table.print();
+
     // PJRT comparison rows when the AOT artifacts are around.
     #[cfg(feature = "pjrt")]
     if let Some(backend) = common::try_pjrt() {

@@ -231,6 +231,29 @@ pub trait StepBackend {
     /// Results never depend on the pool size.
     fn session(&self, shape: StepShape, threads: Option<usize>) -> Result<Box<dyn StepSession>>;
 
+    /// Like [`StepBackend::session`], but the returned session may move
+    /// across threads — what executors that dispatch independent
+    /// sub-problems in parallel (the coordinator's tiled phase executor)
+    /// need. Backends whose sessions are inherently thread-bound (PJRT:
+    /// `Rc` caches) return `Ok(None)` and callers fall back to sequential
+    /// dispatch; results are identical either way.
+    fn session_sendable(
+        &self,
+        shape: StepShape,
+        threads: Option<usize>,
+    ) -> Result<Option<Box<dyn StepSession + Send>>> {
+        let _ = (shape, threads);
+        Ok(None)
+    }
+
+    /// What `threads: None` means to [`StepBackend::session`]: the
+    /// backend's configured pool width. Executors that spread their own
+    /// parallelism (tile dispatch) budget against this, so an engine that
+    /// capped the backend for batching caps them too.
+    fn default_threads(&self) -> usize {
+        1
+    }
+
     /// Fail fast if the GS probe would be unavailable for this `n` (e.g. a
     /// missing probe artifact). Called by the Gumbel-Sinkhorn driver
     /// *before* its optimization loop so a broken extraction path does not

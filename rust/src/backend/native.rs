@@ -1168,6 +1168,18 @@ impl StepBackend for NativeBackend {
         Ok(self.session_send(shape, threads)?)
     }
 
+    fn session_sendable(
+        &self,
+        shape: StepShape,
+        threads: Option<usize>,
+    ) -> Result<Option<Box<dyn StepSession + Send>>> {
+        Ok(Some(self.session_send(shape, threads)?))
+    }
+
+    fn default_threads(&self) -> usize {
+        self.threads
+    }
+
     fn kiss_rank(&self, n: usize, _d: usize) -> Result<usize> {
         for &(max_n, m) in KISSING_TABLE {
             if n <= max_n {
@@ -1188,6 +1200,30 @@ mod tests {
     #[test]
     fn native_backend_is_send_sync() {
         assert_send_sync::<NativeBackend>();
+    }
+
+    #[test]
+    fn sendable_sessions_match_plain_sessions_and_report_the_pool_width() {
+        // The tiled executor's contract: native sessions may cross threads
+        // and compute exactly what a plain session computes, and the
+        // backend reports its configured width for budgeting.
+        let backend = NativeBackend::new(3);
+        assert_eq!(backend.default_threads(), 3);
+        let shape = StepShape::new(GridShape::new(4, 4), 3);
+        let x = pattern(16 * 3, 1);
+        let w = ramp_w(16);
+        let inv: Vec<i32> = (0..16).collect();
+        let mut sendable = backend.session_sendable(shape, Some(1)).unwrap().expect("native");
+        let plain = backend.sss_step(shape, &w, &x, &inv, 0.3, 0.5).unwrap();
+        let mut out = SssStep::new_for(shape);
+        std::thread::scope(|scope| {
+            scope
+                .spawn(|| sendable.sss_step(&w, &x, &inv, 0.3, 0.5, &mut out).unwrap())
+                .join()
+                .unwrap();
+        });
+        assert_eq!(out.loss.to_bits(), plain.loss.to_bits());
+        assert_eq!(out.sort_idx, plain.sort_idx);
     }
 
     /// Deterministic pseudo-data in [0, 1) without pulling in the RNG.

@@ -73,7 +73,7 @@ impl ParsedArgs {
 const KNOWN_VALUE_OPTS: &[&str] = &[
     "n", "grid", "method", "out", "seed", "config", "artifacts", "dataset",
     "bits", "entropy", "scene-seed", "clusters", "dims", "batch", "workers",
-    "backend", "threads", "addr", "cache-mb",
+    "backend", "threads", "addr", "cache-mb", "tile-n",
 ];
 
 pub const USAGE: &str = "\
@@ -81,8 +81,8 @@ sssort — ShuffleSoftSort permutation-learning coordinator
 
 USAGE:
   sssort sort    [--method NAME] [--grid HxW] [--dataset colors|features]
-                 [--backend auto|native|pjrt] [--threads T] [--seed S]
-                 [--batch K] [--workers W] [--out dir] [k=v overrides]
+                 [--backend auto|native|pjrt] [--threads T] [--tile-n T]
+                 [--seed S] [--batch K] [--workers W] [--out dir] [k=v ...]
                  sort dataset(s), report DPQ (batch >1 fans out across threads)
   sssort serve   [--addr HOST:PORT] [--workers W] [--cache-mb MB]
                  [--backend B] [--threads T] [--artifacts dir] [k=v overrides]
@@ -98,8 +98,12 @@ Config overrides are bare k=v pairs, e.g. `phases=300 lr=0.3 shuffle=random`;
 `auto`: use the AOT artifacts when artifacts/manifest.json exists, else run
 the learned methods on the pure-Rust native backend (no artifacts needed).
 `--threads T` (or a `threads=T` pair) sizes the native step session's
-worker pool; 0 = backend default. Results never depend on it. For `serve`,
-k=v pairs configure the service (queue_depth, max_body_bytes, ...).
+worker pool; 0 = backend default. Results never depend on it.
+`--tile-n T` (or `tile_n=T` / `tiles=B`) enables tiled phase execution for
+shuffle-softsort: independent per-tile SoftSort solves of ~T cells keep
+per-step cost and memory at O(tile_n^2) instead of O(N^2) — use it for
+large grids (README section Scaling). For `serve`, k=v pairs configure the
+service (queue_depth, max_body_bytes, arranged_max_n, ...).
 ";
 
 /// Full usage text: the static grammar plus the live method list from the
@@ -198,6 +202,14 @@ mod tests {
         assert_eq!(a.opt_usize("threads", 0).unwrap(), 4);
         assert!(a.positional.is_empty());
         assert!(usage().contains("--threads"));
+    }
+
+    #[test]
+    fn tile_n_takes_a_value() {
+        let a = parse(&["sort", "--tile-n", "512", "--method", "sss"]);
+        assert_eq!(a.opt_usize("tile-n", 0).unwrap(), 512);
+        assert!(a.positional.is_empty());
+        assert!(usage().contains("--tile-n"));
     }
 
     #[test]

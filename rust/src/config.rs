@@ -16,6 +16,18 @@ pub fn normalize_threads(threads: usize) -> Option<usize> {
     (threads > 0).then_some(threads)
 }
 
+/// Convert a requested tile *count* into the per-tile cell count the
+/// executor's plan will honor: the plan splits 2-D grids into whole-row
+/// bands, so `tiles=B` maps to ⌈h/B⌉ rows per tile (≈B bands; never more),
+/// and 1-D grids to ⌈N/B⌉ cells. Shared by `tiles=` and the builder.
+fn tiles_to_tile_n(grid: GridShape, tiles: usize) -> usize {
+    if grid.h == 1 {
+        grid.n().div_ceil(tiles)
+    } else {
+        grid.h.div_ceil(tiles) * grid.w
+    }
+}
+
 /// Configuration of the ShuffleSoftSort driver (Algorithm 1).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShuffleSoftSortConfig {
@@ -46,6 +58,14 @@ pub struct ShuffleSoftSortConfig {
     /// backend's default; `threads=0` resets to the default). Never
     /// changes results — the native reduction is pool-size-invariant.
     pub threads: Option<usize>,
+    /// Tiled phase execution: `Some(t)` splits every phase into contiguous
+    /// grid bands of ≈`t` cells and runs an independent SoftSort inner
+    /// loop per tile — O(Σ n_b²) per step instead of O(N²), the knob that
+    /// makes native sorts practical far beyond N≈4k. `None` (or
+    /// `tile_n=0`) is the classic full-problem executor; `t >= N` yields
+    /// one tile and is bit-identical to it. The `tiles=B` override is the
+    /// same knob phrased as a tile count.
+    pub tile_n: Option<usize>,
 }
 
 impl ShuffleSoftSortConfig {
@@ -78,6 +98,7 @@ impl ShuffleSoftSortConfig {
             greedy_accept: true,
             lr_auto_scale: true,
             threads: None,
+            tile_n: None,
         }
     }
 
@@ -111,6 +132,18 @@ impl ShuffleSoftSortConfig {
             "record_curve" => self.record_curve = value.parse()?,
             "greedy_accept" | "accept" => self.greedy_accept = value.parse()?,
             "threads" => self.threads = normalize_threads(value.parse()?),
+            "tile_n" => {
+                let t: usize = value.parse()?;
+                self.tile_n = (t > 0).then_some(t);
+            }
+            "tiles" => {
+                // A tile count is tile_n phrased per-grid, quantized the
+                // way the executor's plan quantizes (whole grid rows on
+                // 2-D grids) so B tiles really come out as B bands.
+                // 0 resets to the full executor.
+                let b: usize = value.parse()?;
+                self.tile_n = (b > 0).then(|| tiles_to_tile_n(self.grid, b));
+            }
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -155,6 +188,8 @@ pub struct ShuffleSoftSortConfigBuilder {
     record_curve: Option<bool>,
     greedy_accept: Option<bool>,
     threads: Option<usize>,
+    tile_n: Option<usize>,
+    tiles: Option<usize>,
     overrides: Vec<(String, String)>,
 }
 
@@ -229,6 +264,22 @@ impl ShuffleSoftSortConfigBuilder {
         self
     }
 
+    /// Tiled phase execution with ≈`tile_n` cells per tile (like the
+    /// `tile_n=` override / the `--tile-n` CLI flag; 0 keeps the full
+    /// executor).
+    pub fn tile_n(mut self, tile_n: usize) -> Self {
+        self.tile_n = Some(tile_n);
+        self
+    }
+
+    /// Tiled phase execution phrased as a tile count (like the `tiles=`
+    /// override; 0 keeps the full executor). Wins over [`Self::tile_n`]
+    /// when both typed setters are used.
+    pub fn tiles(mut self, tiles: usize) -> Self {
+        self.tiles = Some(tiles);
+        self
+    }
+
     /// Queue one `k=v` override (applied last, CLI semantics).
     pub fn set(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
         self.overrides.push((key.into(), value.into()));
@@ -283,6 +334,12 @@ impl ShuffleSoftSortConfigBuilder {
         if let Some(v) = self.threads {
             cfg.threads = normalize_threads(v);
         }
+        if let Some(v) = self.tile_n {
+            cfg.tile_n = (v > 0).then_some(v);
+        }
+        if let Some(v) = self.tiles {
+            cfg.tile_n = (v > 0).then(|| tiles_to_tile_n(cfg.grid, v));
+        }
         for (k, v) in &self.overrides {
             cfg.set(k, v)
                 .with_context(|| format!("invalid override '{k}={v}'"))?;
@@ -312,6 +369,11 @@ pub struct ServeConfig {
     pub max_body_bytes: usize,
     /// Keep-alive idle budget per connection, seconds.
     pub keep_alive_secs: u64,
+    /// Largest N whose sort responses include the `arranged` rows by
+    /// default. Above it the (potentially multi-megabyte) payload is
+    /// omitted unless the request asks with `"include_arranged": true`;
+    /// an explicit `false` strips it at any size.
+    pub arranged_max_n: usize,
 }
 
 impl Default for ServeConfig {
@@ -325,6 +387,7 @@ impl Default for ServeConfig {
             queue_depth: 256,
             max_body_bytes: 8 << 20,
             keep_alive_secs: 5,
+            arranged_max_n: 4096,
         }
     }
 }
@@ -339,9 +402,10 @@ impl ServeConfig {
             "queue_depth" => self.queue_depth = value.parse()?,
             "max_body_bytes" => self.max_body_bytes = value.parse()?,
             "keep_alive_secs" => self.keep_alive_secs = value.parse()?,
+            "arranged_max_n" => self.arranged_max_n = value.parse()?,
             _ => bail!(
                 "unknown serve config key '{key}' (allowed: addr, workers, cache_mb, \
-                 queue_depth, max_body_bytes, keep_alive_secs)"
+                 queue_depth, max_body_bytes, keep_alive_secs, arranged_max_n)"
             ),
         }
         Ok(())
@@ -569,6 +633,50 @@ mod tests {
     }
 
     #[test]
+    fn tile_overrides_parse_and_zero_resets() {
+        let mut c = ShuffleSoftSortConfig::for_grid(8, 8);
+        assert_eq!(c.tile_n, None);
+        c.set("tile_n", "16").unwrap();
+        assert_eq!(c.tile_n, Some(16));
+        c.set("tile_n", "0").unwrap();
+        assert_eq!(c.tile_n, None);
+        // `tiles=B` converts to row-quantized cells per tile, so the
+        // executor's whole-row bands really come out as B tiles: on 8x8,
+        // tiles=3 → ⌈8/3⌉ = 3 rows = 24 cells → bands of 24, 24, 16.
+        c.set("tiles", "4").unwrap();
+        assert_eq!(c.tile_n, Some(16));
+        c.set("tiles", "3").unwrap();
+        assert_eq!(c.tile_n, Some(24));
+        c.set("tiles", "0").unwrap();
+        assert_eq!(c.tile_n, None);
+        // 1-D grids quantize by cells.
+        let mut line = ShuffleSoftSortConfig::for_grid(1, 13);
+        line.set("tiles", "3").unwrap();
+        assert_eq!(line.tile_n, Some(5));
+        assert!(c.set("tile_n", "many").is_err());
+        assert!(c.set("tiles", "-1").is_err());
+
+        // Builder paths mirror the string overrides; `tiles` wins over
+        // `tile_n` among typed setters, and `k=v` pairs win over both.
+        let b = ShuffleSoftSortConfig::builder().grid(8, 8).tile_n(12).build().unwrap();
+        assert_eq!(b.tile_n, Some(12));
+        let b = ShuffleSoftSortConfig::builder()
+            .grid(8, 8)
+            .tile_n(12)
+            .tiles(4)
+            .build()
+            .unwrap();
+        assert_eq!(b.tile_n, Some(16));
+        let b = ShuffleSoftSortConfig::builder()
+            .grid(8, 8)
+            .tiles(4)
+            .set("tile_n", "0")
+            .build()
+            .unwrap();
+        assert_eq!(b.tile_n, None);
+    }
+
+    #[test]
     fn serve_config_overrides_and_unknown_keys() {
         let mut c = ServeConfig::default();
         assert!(c.workers >= 1);
@@ -577,11 +685,14 @@ mod tests {
         c.set("cache_mb", "16").unwrap();
         c.set("queue_depth", "32").unwrap();
         c.set("keep_alive_secs", "2").unwrap();
+        assert_eq!(c.arranged_max_n, 4096);
+        c.set("arranged_max_n", "256").unwrap();
         assert_eq!(c.addr, "0.0.0.0:8080");
         assert_eq!(c.workers, 4);
         assert_eq!(c.cache_mb, 16);
         assert_eq!(c.queue_depth, 32);
         assert_eq!(c.keep_alive_secs, 2);
+        assert_eq!(c.arranged_max_n, 256);
         assert!(c.set("workers", "many").is_err());
         let err = c.set("frobnicate", "1").unwrap_err();
         assert!(format!("{err:#}").contains("frobnicate"));

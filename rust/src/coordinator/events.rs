@@ -28,6 +28,9 @@ pub struct RunReport {
     pub rejected_phases: usize,
     /// Entries rewritten by greedy repair (0 in healthy runs).
     pub repaired: usize,
+    /// Tiles per phase under the tiled phase executor (1 = the full
+    /// executor; 0 for methods without a phase executor at all).
+    pub tiles: usize,
     /// Whether the final permutation came out valid without repair.
     pub valid_without_repair: bool,
     pub wall_secs: f64,

@@ -1,0 +1,794 @@
+//! Phase executors — the per-phase inner-optimization strategy of the
+//! ShuffleSoftSort driver.
+//!
+//! `run_shuffle_softsort` owns the outer policy loop (τ schedule, shuffle,
+//! greedy acceptance, permutation tracking); everything *inside* a phase —
+//! the I Adam steps on `sss_step`, argmax extraction, the paper's
+//! extension rule, greedy repair — is delegated to a [`PhaseExecutor`]:
+//!
+//! * [`FullExecutor`] — the classic loop: one `StepSession` for the whole
+//!   `(N, d, h, w)` problem, every phase optimizes all N weights against
+//!   the full grid loss. Per-step cost and scratch are O(N²) (the SoftSort
+//!   matrix row sweep), which stops being payable around N ≈ 4k.
+//! * [`TiledExecutor`] — the scaling path. Each phase partitions the grid
+//!   into contiguous bands of ≈`tile_n` cells (whole grid rows — every
+//!   band an `h_b × w` sub-grid — or 1-row column segments when the grid
+//!   is wider than a tile, so the tile_n² bound holds on any shape),
+//!   pulls each band's shuffled items into a tile-local sub-problem, and
+//!   runs an *independent* SoftSort inner loop + extraction per tile:
+//!   O(Σ n_b²) work and O(tile_n²)-bounded step scratch per phase instead
+//!   of O(N²). The per-tile permutations compose block-diagonally (in
+//!   tile-local coordinates) into one always-valid phase permutation, and
+//!   the *next* phase's shuffle moves items across tile boundaries — the
+//!   same mechanism by which shuffling restores global mobility between
+//!   cheap local solves in the paper's 1-D story. Tiles are dispatched in
+//!   parallel over a [`WorkerPool`] when the backend's sessions can move
+//!   across threads (native); composition folds per-tile results in tile
+//!   index order, so results never depend on dispatch interleaving.
+//!
+//! Degeneracy contract (tested at driver and Engine level): a tile plan
+//! with **one** tile reproduces the full executor **bit-identically** —
+//! the single band is the whole grid, the tile-local gather is the
+//! identity, and both executors drive the same [`run_inner_loop`] helper,
+//! so every f32 rounding matches.
+
+use std::sync::Mutex;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::backend::pool::WorkerPool;
+use crate::backend::{SssStep, StepBackend, StepSession, StepShape};
+use crate::config::ShuffleSoftSortConfig;
+use crate::grid::GridShape;
+use crate::perm::{repair, Permutation};
+
+use super::events::RunReport;
+use super::optimizer::Adam;
+
+/// One phase's inner optimization: turn the shuffled arrangement into the
+/// phase sort permutation (over shuffled slots). Implementations own all
+/// per-phase compute state (sessions, optimizer, scratch).
+pub(crate) trait PhaseExecutor {
+    /// Tiles per phase (1 for the full executor).
+    fn tiles(&self) -> usize;
+
+    /// Run phase `r` at temperature `tau` over `x_shuf` (the shuffled
+    /// arrangement) and return the sort permutation in shuffled-slot
+    /// coordinates. `shuf`/`inv` are the phase shuffle and its inverse
+    /// (`inv_idx` is `inv` pre-widened to the step's i32 argument).
+    #[allow(clippy::too_many_arguments)]
+    fn run_phase(
+        &mut self,
+        r: usize,
+        tau: f32,
+        x_shuf: &[f32],
+        shuf: &Permutation,
+        inv: &Permutation,
+        inv_idx: &[i32],
+        report: &mut RunReport,
+    ) -> Result<Permutation>;
+}
+
+/// Build the executor the config asks for: `tile_n = None` → full,
+/// `Some(t)` → tiled with ≈t items per tile.
+pub(crate) fn executor_for(
+    backend: &dyn StepBackend,
+    cfg: &ShuffleSoftSortConfig,
+    d: usize,
+    norm: f32,
+) -> Result<Box<dyn PhaseExecutor>> {
+    let exec: Box<dyn PhaseExecutor> = match cfg.tile_n {
+        None => Box::new(FullExecutor::new(backend, cfg, d, norm)?),
+        Some(tile_n) => Box::new(TiledExecutor::new(backend, cfg, d, norm, tile_n)?),
+    };
+    Ok(exec)
+}
+
+// ---------------------------------------------------------------------------
+// The shared inner loop.
+// ---------------------------------------------------------------------------
+
+/// Run-level reusable buffers for one inner-loop consumer: weights, loss
+/// trace, last hard draft, and the extraction scratch (`idx`/`w_ext`) that
+/// used to be reallocated per `extract_valid` call — hoisted here so the
+/// extension iterations are as allocation-free as the step loop.
+#[derive(Default)]
+struct LoopBufs {
+    w: Vec<f32>,
+    losses: Vec<f64>,
+    last_idx: Vec<i32>,
+    idx: Vec<u32>,
+    w_ext: Vec<f32>,
+}
+
+/// Validity bookkeeping of one inner loop (per phase or per tile).
+#[derive(Clone, Copy, Default)]
+struct LoopStats {
+    extensions: usize,
+    repaired: usize,
+}
+
+/// The phase kernel both executors share: fresh order-preserving weights,
+/// I Adam steps on `sss_step` with the τ_i ramp, then argmax extraction
+/// with the paper's extension rule and greedy repair as the last resort.
+/// Arithmetic (and therefore every f32 rounding) is identical to the
+/// pre-executor driver loop; this function's steady state allocates
+/// nothing — only the returned `Permutation` owns fresh memory. (The tiled
+/// executor's per-tile bookkeeping around it — the losses clone, the
+/// composed sort vector — allocates O(I) and O(N) per phase, the same
+/// order the pre-executor extraction already paid.)
+#[allow(clippy::too_many_arguments)]
+fn run_inner_loop<S: StepSession + ?Sized>(
+    session: &mut S,
+    step: &mut SssStep,
+    adam: &mut Adam,
+    bufs: &mut LoopBufs,
+    x: &[f32],
+    inv_idx: &[i32],
+    tau: f32,
+    norm: f32,
+    cfg: &ShuffleSoftSortConfig,
+) -> Result<(Permutation, LoopStats)> {
+    let n = inv_idx.len();
+    // Fresh order-preserving weights + fresh optimizer moments. The ramp
+    // has unit spacing, so τ directly reads as the softmax bandwidth in
+    // *positions* (see EXPERIMENTS.md §Tuning).
+    bufs.w.clear();
+    bufs.w.extend((0..n).map(|i| (n - i) as f32));
+    adam.reset();
+    bufs.losses.clear();
+    // Seed the hard draft with zeros (matching the pre-executor driver's
+    // `vec![0i32; n]`), so a degenerate `inner_iters=0` config still
+    // reaches the extension/repair path instead of returning an empty
+    // permutation.
+    bufs.last_idx.clear();
+    bufs.last_idx.resize(n, 0);
+
+    for i in 0..cfg.inner_iters {
+        let tau_i = cfg.tau.inner_tau(tau, i, cfg.inner_iters);
+        session.sss_step(&bufs.w, x, inv_idx, tau_i, norm, step)?;
+        bufs.losses.push(step.loss as f64);
+        adam.step(&mut bufs.w, &step.grad);
+        if i + 1 == cfg.inner_iters {
+            bufs.last_idx.clear();
+            bufs.last_idx.extend_from_slice(&step.sort_idx);
+        }
+    }
+
+    // Hard extraction with the paper's extension rule.
+    let mut stats = LoopStats::default();
+    bufs.idx.clear();
+    bufs.idx.extend(bufs.last_idx.iter().map(|&v| v as u32));
+    if Permutation::count_duplicates(&bufs.idx) == 0 {
+        return Ok((Permutation::from_vec(bufs.idx.clone()).expect("checked"), stats));
+    }
+
+    // Extend: keep optimizing a weight copy at a sharpening temperature
+    // (same Adam moments) until valid.
+    bufs.w_ext.clear();
+    bufs.w_ext.extend_from_slice(&bufs.w);
+    let mut tau_ext = tau;
+    for _ in 0..cfg.max_extensions {
+        stats.extensions += 1;
+        tau_ext *= 0.6;
+        session.sss_step(&bufs.w_ext, x, inv_idx, tau_ext, norm, step)?;
+        adam.step(&mut bufs.w_ext, &step.grad);
+        bufs.idx.clear();
+        bufs.idx.extend(step.sort_idx.iter().map(|&v| v as u32));
+        if Permutation::count_duplicates(&bufs.idx) == 0 {
+            return Ok((Permutation::from_vec(bufs.idx.clone()).expect("checked"), stats));
+        }
+    }
+
+    // Rare fallback: deterministic greedy repair (counted in the report —
+    // this is what the paper's "Stability" row measures).
+    let (perm, fixed) = repair(&bufs.idx);
+    stats.repaired = fixed;
+    Ok((perm, stats))
+}
+
+/// Replay one phase's losses and validity stats into the report. Shared by
+/// both executors so the report shape is executor-independent (tiled
+/// phases record the per-iteration mean across tiles — identical to the
+/// full trace when there is one tile).
+fn record_phase(
+    report: &mut RunReport,
+    cfg: &ShuffleSoftSortConfig,
+    r: usize,
+    tau: f32,
+    losses: &[f64],
+    stats: LoopStats,
+) {
+    for (i, &loss) in losses.iter().enumerate() {
+        let tau_i = cfg.tau.inner_tau(tau, i, cfg.inner_iters);
+        if cfg.record_curve {
+            report.record(r, i, tau_i, loss);
+        } else {
+            report.final_loss = loss;
+            report.steps += 1;
+        }
+    }
+    report.extensions += stats.extensions;
+    if stats.repaired > 0 {
+        report.repaired += stats.repaired;
+        report.valid_without_repair = false;
+    }
+}
+
+/// Effective Adam config for a d-dimensional run (the lr auto-scale).
+fn adam_for(cfg: &ShuffleSoftSortConfig, d: usize, n: usize) -> Adam {
+    let mut adam_cfg = cfg.adam.clone();
+    adam_cfg.lr = cfg.effective_lr(d);
+    Adam::new(adam_cfg, n)
+}
+
+// ---------------------------------------------------------------------------
+// Full executor: one session, the whole problem per phase.
+// ---------------------------------------------------------------------------
+
+pub(crate) struct FullExecutor {
+    cfg: ShuffleSoftSortConfig,
+    norm: f32,
+    session: Box<dyn StepSession>,
+    step: SssStep,
+    adam: Adam,
+    bufs: LoopBufs,
+}
+
+impl FullExecutor {
+    pub fn new(
+        backend: &dyn StepBackend,
+        cfg: &ShuffleSoftSortConfig,
+        d: usize,
+        norm: f32,
+    ) -> Result<Self> {
+        let shape = StepShape::new(cfg.grid, d);
+        // One session for the whole run: scratch + worker pool allocated
+        // here, every phase reuses them (zero steady-state allocations).
+        let session = backend.session(shape, cfg.threads)?;
+        Ok(FullExecutor {
+            cfg: cfg.clone(),
+            norm,
+            session,
+            step: SssStep::new_for(shape),
+            adam: adam_for(cfg, d, shape.n),
+            bufs: LoopBufs::default(),
+        })
+    }
+}
+
+impl PhaseExecutor for FullExecutor {
+    fn tiles(&self) -> usize {
+        1
+    }
+
+    fn run_phase(
+        &mut self,
+        r: usize,
+        tau: f32,
+        x_shuf: &[f32],
+        _shuf: &Permutation,
+        _inv: &Permutation,
+        inv_idx: &[i32],
+        report: &mut RunReport,
+    ) -> Result<Permutation> {
+        // The "execute" section now covers the whole inner loop — steps,
+        // optimizer and extraction — where the pre-executor driver split
+        // out a separate "adam" section (the baselines still do).
+        let (perm, stats) = report.sections.time("execute", || {
+            run_inner_loop(
+                self.session.as_mut(),
+                &mut self.step,
+                &mut self.adam,
+                &mut self.bufs,
+                x_shuf,
+                inv_idx,
+                tau,
+                self.norm,
+                &self.cfg,
+            )
+        })?;
+        record_phase(report, &self.cfg, r, tau, &self.bufs.losses, stats);
+        Ok(perm)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tile plan: contiguous grid bands, each a sub-grid.
+// ---------------------------------------------------------------------------
+
+/// One tile: a contiguous row-major grid-position band `[pos0,
+/// pos0 + shape.n)` that is itself a valid sub-grid, plus the index of its
+/// shape in the plan's deduplicated shape list (ragged splits have at most
+/// two distinct shapes, so sessions/scratch memoize per shape).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct TileSpec {
+    pub pos0: usize,
+    pub shape: StepShape,
+    pub shape_idx: usize,
+}
+
+/// How a grid splits into tiles for a requested per-tile item count.
+#[derive(Debug)]
+pub(crate) struct TilePlan {
+    pub tiles: Vec<TileSpec>,
+    /// Deduplicated tile shapes (`TileSpec::shape_idx` indexes this).
+    pub shapes: Vec<StepShape>,
+    /// Grid position → tile index.
+    pub tile_of: Vec<u32>,
+}
+
+impl TilePlan {
+    /// Split `g` into contiguous position bands of ≈`tile_n` cells, each a
+    /// valid sub-grid: whole grid rows (`h_b × w` bands) when `tile_n >=
+    /// w`, column segments of single rows (`1 × n_b` chains — contiguous
+    /// in row-major order, so still position bands) when the grid is wider
+    /// than a tile. The latter keeps the O(tile_n²) per-step work/scratch
+    /// contract on wide grids instead of silently rounding a tile up to a
+    /// full `w`-cell row. A trailing remainder of a single row/cell is
+    /// absorbed into the previous tile so every tile holds ≥ 2 items (a
+    /// 1-item SoftSort is degenerate). `tile_n >= n` yields exactly one
+    /// tile of the full grid shape.
+    pub fn new(g: GridShape, d: usize, tile_n: usize) -> Self {
+        let (h, w) = (g.h, g.w);
+        let mut tiles: Vec<TileSpec> = Vec::new();
+        let mut shapes: Vec<StepShape> = Vec::new();
+        let mut push = |pos0: usize, shape: StepShape| {
+            let shape_idx = match shapes.iter().position(|s| *s == shape) {
+                Some(i) => i,
+                None => {
+                    shapes.push(shape);
+                    shapes.len() - 1
+                }
+            };
+            tiles.push(TileSpec { pos0, shape, shape_idx });
+        };
+        // 1-D chunking of `count` cells starting at `base`, ≈`per` each,
+        // ≥ 2 each (trailing singleton absorbed into the last chunk).
+        fn chunk_row(
+            base: usize,
+            count: usize,
+            per: usize,
+            d: usize,
+            push: &mut dyn FnMut(usize, StepShape),
+        ) {
+            let per = per.clamp(2, count.max(2));
+            let mut c0 = 0usize;
+            while c0 < count {
+                let mut take = per.min(count - c0);
+                if count - c0 - take == 1 {
+                    take += 1;
+                }
+                push(base + c0, StepShape { n: take, d, h: 1, w: take });
+                c0 += take;
+            }
+        }
+
+        if h > 1 && tile_n.max(1) >= w {
+            // Whole-row bands of ≈tile_n/w rows.
+            let rows = (tile_n.max(1) / w).max(1).max(2usize.div_ceil(w));
+            let mut r0 = 0usize;
+            while r0 < h {
+                let mut take = rows.min(h - r0);
+                if (h - r0 - take) * w == 1 {
+                    take += 1;
+                }
+                push(r0 * w, StepShape { n: take * w, d, h: take, w });
+                r0 += take;
+            }
+        } else if h == 1 {
+            chunk_row(0, w, tile_n.max(1), d, &mut push);
+        } else {
+            // Wide grid, tile_n < w: column segments, one row at a time.
+            for r in 0..h {
+                chunk_row(r * w, w, tile_n.max(1), d, &mut push);
+            }
+        }
+
+        let mut tile_of = vec![0u32; g.n()];
+        for (b, t) in tiles.iter().enumerate() {
+            for p in t.pos0..t.pos0 + t.shape.n {
+                tile_of[p] = b as u32;
+            }
+        }
+        TilePlan { tiles, shapes, tile_of }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiled executor.
+// ---------------------------------------------------------------------------
+
+/// Per-shape compute state of one tile worker (session kept separately —
+/// its `Send`-ness differs between the parallel and sequential paths).
+struct ShapeSlot {
+    shape: StepShape,
+    step: SssStep,
+    adam: Adam,
+}
+
+impl ShapeSlot {
+    fn new(cfg: &ShuffleSoftSortConfig, shape: StepShape) -> Self {
+        ShapeSlot { shape, step: SssStep::new_for(shape), adam: adam_for(cfg, shape.d, shape.n) }
+    }
+}
+
+/// One tile worker's compute state: per-shape sessions + scratch, and the
+/// gather buffers for the tile currently being solved. `S` is the session
+/// payload type — `dyn StepSession + Send` for pool-dispatched workers
+/// (each locked only by the one pool thread its index maps to), plain
+/// `dyn StepSession` for the sequential fallback — so both dispatch paths
+/// share this struct and [`TileWorker::run_tile`].
+struct TileWorker<S: ?Sized> {
+    sessions: Vec<Box<S>>,
+    slots: Vec<ShapeSlot>,
+    bufs: LoopBufs,
+    x_tile: Vec<f32>,
+    inv_tile: Vec<i32>,
+}
+
+impl<S: StepSession + ?Sized> TileWorker<S> {
+    fn new(cfg: &ShuffleSoftSortConfig, shapes: &[StepShape], sessions: Vec<Box<S>>) -> Self {
+        TileWorker {
+            sessions,
+            slots: shapes.iter().map(|&s| ShapeSlot::new(cfg, s)).collect(),
+            bufs: LoopBufs::default(),
+            x_tile: Vec::new(),
+            inv_tile: Vec::new(),
+        }
+    }
+
+    /// Gather + solve one tile. `members` are the tile's shuffled slots in
+    /// ascending order; `rank` maps a shuffled slot to its tile-local
+    /// index; `inv_perm` is the phase's global inverse shuffle, so
+    /// `rank[inv_perm[pos]]` is the tile-local slot shown at grid position
+    /// `pos` — the restriction of the full step's `inv_idx` to the band.
+    #[allow(clippy::too_many_arguments)]
+    fn run_tile(
+        &mut self,
+        spec: &TileSpec,
+        x_shuf: &[f32],
+        inv_perm: &[u32],
+        members: &[u32],
+        rank: &[u32],
+        cfg: &ShuffleSoftSortConfig,
+        tau: f32,
+        norm: f32,
+        d: usize,
+    ) -> Result<TileOutcome> {
+        let slot = &mut self.slots[spec.shape_idx];
+        let n_b = members.len();
+        debug_assert_eq!(n_b, slot.shape.n);
+        self.x_tile.clear();
+        for &j in members {
+            let s = j as usize * d;
+            self.x_tile.extend_from_slice(&x_shuf[s..s + d]);
+        }
+        self.inv_tile.clear();
+        self.inv_tile
+            .extend((0..n_b).map(|q| rank[inv_perm[spec.pos0 + q] as usize] as i32));
+        let (perm, stats) = run_inner_loop(
+            self.sessions[spec.shape_idx].as_mut(),
+            &mut slot.step,
+            &mut slot.adam,
+            &mut self.bufs,
+            &self.x_tile,
+            &self.inv_tile,
+            tau,
+            norm,
+            cfg,
+        )?;
+        Ok(TileOutcome { perm, losses: self.bufs.losses.clone(), stats })
+    }
+}
+
+/// Everything one finished tile hands back to the fold.
+struct TileOutcome {
+    perm: Permutation,
+    losses: Vec<f64>,
+    stats: LoopStats,
+}
+
+/// A tile's result slot: written once by whichever worker ran the tile,
+/// taken by the tile-index-ordered fold.
+type TileSlot = Mutex<Option<Result<TileOutcome>>>;
+
+pub(crate) struct TiledExecutor {
+    cfg: ShuffleSoftSortConfig,
+    d: usize,
+    norm: f32,
+    plan: TilePlan,
+    /// Tile → its shuffled slots this phase, ascending (rebuilt per phase).
+    members: Vec<Vec<u32>>,
+    /// Shuffled slot → tile-local rank (companion to `members`).
+    rank: Vec<u32>,
+    /// Per-tile result slots; disjoint writes, folded in tile order.
+    results: Vec<TileSlot>,
+    /// Parallel workers + their pool (`None` → `seq` is used instead).
+    par_workers: Vec<Mutex<TileWorker<dyn StepSession + Send>>>,
+    pool: Option<WorkerPool>,
+    seq: Option<TileWorker<dyn StepSession>>,
+    agg_losses: Vec<f64>,
+}
+
+impl TiledExecutor {
+    pub fn new(
+        backend: &dyn StepBackend,
+        cfg: &ShuffleSoftSortConfig,
+        d: usize,
+        norm: f32,
+        tile_n: usize,
+    ) -> Result<Self> {
+        let plan = TilePlan::new(cfg.grid, d, tile_n);
+        let b = plan.tiles.len();
+        // Parallelism budget: the explicit `threads` knob, else what the
+        // backend would give one full-problem session — so a backend the
+        // engine capped for batching caps tile dispatch identically.
+        let budget = cfg.threads.unwrap_or_else(|| backend.default_threads()).max(1);
+        let wanted = budget.clamp(1, b);
+
+        // Parallel tile dispatch needs sessions that may cross threads;
+        // back off to the sequential path when the backend cannot provide
+        // them (results are identical either way — the fold is
+        // tile-index-ordered and tiles are independent).
+        let mut par_workers = Vec::new();
+        if wanted > 1 {
+            // Split the row-thread budget across tile workers so tile
+            // parallelism × in-tile row parallelism ≈ the budget.
+            let per_tile_threads = (budget / wanted).max(1);
+            'build: for _ in 0..wanted {
+                let mut sessions = Vec::with_capacity(plan.shapes.len());
+                for &shape in &plan.shapes {
+                    match backend.session_sendable(shape, Some(per_tile_threads))? {
+                        Some(s) => sessions.push(s),
+                        None => {
+                            par_workers.clear();
+                            break 'build;
+                        }
+                    }
+                }
+                par_workers.push(Mutex::new(TileWorker::new(cfg, &plan.shapes, sessions)));
+            }
+        }
+        let (pool, seq) = if par_workers.is_empty() {
+            let mut sessions = Vec::with_capacity(plan.shapes.len());
+            for &shape in &plan.shapes {
+                sessions.push(backend.session(shape, cfg.threads)?);
+            }
+            (None, Some(TileWorker::new(cfg, &plan.shapes, sessions)))
+        } else {
+            (Some(WorkerPool::new(par_workers.len() - 1)), None)
+        };
+
+        Ok(TiledExecutor {
+            cfg: cfg.clone(),
+            d,
+            norm,
+            members: (0..b).map(|_| Vec::new()).collect(),
+            rank: vec![0; cfg.grid.n()],
+            results: (0..b).map(|_| Mutex::new(None)).collect(),
+            plan,
+            par_workers,
+            pool,
+            seq,
+            agg_losses: Vec::new(),
+        })
+    }
+
+    /// Dispatch every tile (parallel when a pool exists) and leave each
+    /// outcome in its `results` slot.
+    fn dispatch_tiles(&mut self, tau: f32, x_shuf: &[f32], inv: &Permutation) -> Result<()> {
+        let plan = &self.plan;
+        let members = &self.members;
+        let rank = &self.rank;
+        let results = &self.results;
+        let cfg = &self.cfg;
+        let (norm, d) = (self.norm, self.d);
+        let inv_perm = inv.as_slice();
+        let b_total = plan.tiles.len();
+
+        if let Some(pool) = &self.pool {
+            let workers = &self.par_workers;
+            let active = workers.len();
+            pool.dispatch(active, &|wk| {
+                let mut w = workers[wk].lock().expect("tile worker mutex poisoned");
+                let mut b = wk;
+                while b < b_total {
+                    let out = w.run_tile(
+                        &plan.tiles[b],
+                        x_shuf,
+                        inv_perm,
+                        &members[b],
+                        rank,
+                        cfg,
+                        tau,
+                        norm,
+                        d,
+                    );
+                    *results[b].lock().expect("tile result mutex poisoned") = Some(out);
+                    b += active;
+                }
+            })
+            .context("dispatching tile workers")?;
+        } else {
+            let w = self.seq.as_mut().expect("tiled executor has a sequential worker");
+            for (b, spec) in plan.tiles.iter().enumerate() {
+                let out =
+                    w.run_tile(spec, x_shuf, inv_perm, &members[b], rank, cfg, tau, norm, d);
+                *results[b].lock().expect("tile result mutex poisoned") = Some(out);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl PhaseExecutor for TiledExecutor {
+    fn tiles(&self) -> usize {
+        self.plan.tiles.len()
+    }
+
+    fn run_phase(
+        &mut self,
+        r: usize,
+        tau: f32,
+        x_shuf: &[f32],
+        shuf: &Permutation,
+        inv: &Permutation,
+        _inv_idx: &[i32],
+        report: &mut RunReport,
+    ) -> Result<Permutation> {
+        let started = std::time::Instant::now();
+        let n = shuf.len();
+        let b_total = self.plan.tiles.len();
+
+        // Tile membership for this phase: shuffled slot j belongs to the
+        // tile owning grid position shuf[j]; slots stay in ascending order
+        // within a tile, so a one-tile plan gathers the identity.
+        for m in &mut self.members {
+            m.clear();
+        }
+        let shuf_s = shuf.as_slice();
+        for (j, &pos) in shuf_s.iter().enumerate() {
+            let t = self.plan.tile_of[pos as usize] as usize;
+            self.rank[j] = self.members[t].len() as u32;
+            self.members[t].push(j as u32);
+        }
+
+        self.dispatch_tiles(tau, x_shuf, inv)?;
+
+        // Fold in tile-index order: deterministic no matter how the
+        // dispatch interleaved. The per-tile permutations compose into one
+        // block-diagonal (in tile-local coordinates) phase permutation —
+        // valid whenever every tile's is, since the member sets partition
+        // the shuffled slots.
+        self.agg_losses.clear();
+        self.agg_losses.resize(self.cfg.inner_iters, 0.0);
+        let mut stats = LoopStats::default();
+        let mut sort_vec = vec![0u32; n];
+        for b in 0..b_total {
+            let out = self.results[b]
+                .lock()
+                .expect("tile result mutex poisoned")
+                .take()
+                .ok_or_else(|| anyhow!("tile {b} produced no result"))?
+                .with_context(|| format!("tile {b} of phase {r}"))?;
+            let mem = &self.members[b];
+            // Item-weighted loss mean: ragged plans would otherwise give a
+            // 7-item tile the same weight as a 14-item one. A single tile
+            // has weight exactly 1.0, so `l * 1.0` keeps the one-tile
+            // curve bit-identical to the full executor's.
+            let wgt = mem.len() as f64 / n as f64;
+            for (i, &l) in out.losses.iter().enumerate() {
+                self.agg_losses[i] += l * wgt;
+            }
+            stats.extensions += out.stats.extensions;
+            stats.repaired += out.stats.repaired;
+            ensure!(
+                out.perm.len() == mem.len(),
+                "tile {b}: permutation over {} slots, expected {}",
+                out.perm.len(),
+                mem.len()
+            );
+            for (t, &p) in out.perm.as_slice().iter().enumerate() {
+                sort_vec[mem[t] as usize] = mem[p as usize];
+            }
+        }
+        report.sections.add("execute", started.elapsed());
+        record_phase(report, &self.cfg, r, tau, &self.agg_losses, stats);
+        Permutation::from_vec(sort_vec)
+            .map_err(|e| anyhow!("tiled phase composition is not a bijection: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sizes(plan: &TilePlan) -> Vec<usize> {
+        plan.tiles.iter().map(|t| t.shape.n).collect()
+    }
+
+    #[test]
+    fn plan_splits_rows_and_absorbs_ragged_remainders() {
+        // 8x8, tile_n=16 → 2 rows per tile → 4 tiles of 16.
+        let p = TilePlan::new(GridShape::new(8, 8), 3, 16);
+        assert_eq!(sizes(&p), vec![16, 16, 16, 16]);
+        assert_eq!(p.shapes.len(), 1);
+        assert_eq!((p.shapes[0].h, p.shapes[0].w), (2, 8));
+
+        // Ragged: 5 rows of 7 with 2-row tiles → 14, 14, 7.
+        let p = TilePlan::new(GridShape::new(5, 7), 3, 14);
+        assert_eq!(sizes(&p), vec![14, 14, 7]);
+        assert_eq!(p.shapes.len(), 2);
+
+        // 1-D grid splits by cells; a trailing single cell is absorbed.
+        let p = TilePlan::new(GridShape::new(1, 13), 3, 4);
+        assert_eq!(sizes(&p), vec![4, 4, 5]);
+        for t in &p.tiles {
+            assert_eq!(t.shape.h, 1);
+            assert!(t.shape.n >= 2);
+        }
+
+        // Tall-and-thin (w=1): whole rows but never a 1-item tile.
+        let p = TilePlan::new(GridShape::new(9, 1), 2, 1);
+        assert!(sizes(&p).iter().all(|&s| s >= 2), "{:?}", sizes(&p));
+        assert_eq!(sizes(&p).iter().sum::<usize>(), 9);
+    }
+
+    #[test]
+    fn plan_splits_wide_rows_into_column_segments() {
+        // tile_n smaller than the grid width must NOT round up to full
+        // w-cell rows (that would break the O(tile_n²) scratch contract on
+        // wide grids) — each row splits into 1-D column segments instead.
+        let p = TilePlan::new(GridShape::new(4, 16), 3, 4);
+        assert_eq!(p.tiles.len(), 16);
+        for t in &p.tiles {
+            assert_eq!((t.shape.n, t.shape.h, t.shape.w), (4, 1, 4));
+        }
+        // Ragged segment split, trailing singleton absorbed per row.
+        let p = TilePlan::new(GridShape::new(3, 13), 3, 4);
+        assert_eq!(sizes(&p), vec![4, 4, 5, 4, 4, 5, 4, 4, 5]);
+        assert!(p.tiles.iter().all(|t| t.shape.h == 1));
+        // Coverage still exact.
+        let g = GridShape::new(3, 13);
+        let mut covered = vec![false; g.n()];
+        for (b, spec) in p.tiles.iter().enumerate() {
+            for pos in spec.pos0..spec.pos0 + spec.shape.n {
+                assert!(!covered[pos]);
+                covered[pos] = true;
+                assert_eq!(p.tile_of[pos], b as u32);
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn plan_with_tile_n_at_least_n_is_one_full_tile() {
+        for (h, w) in [(8usize, 8usize), (1, 16), (5, 3)] {
+            let g = GridShape::new(h, w);
+            for tile_n in [g.n(), g.n() + 1, 10 * g.n()] {
+                let p = TilePlan::new(g, 3, tile_n);
+                assert_eq!(p.tiles.len(), 1, "{h}x{w} tile_n={tile_n}");
+                let s = p.tiles[0].shape;
+                assert_eq!((s.n, s.h, s.w), (g.n(), h, w));
+            }
+        }
+    }
+
+    #[test]
+    fn plan_positions_cover_the_grid_exactly_once() {
+        for (h, w, t) in [(8usize, 8usize, 16usize), (5, 7, 10), (1, 40, 7), (9, 4, 13)] {
+            let g = GridShape::new(h, w);
+            let p = TilePlan::new(g, 3, t);
+            let mut covered = vec![false; g.n()];
+            for (b, spec) in p.tiles.iter().enumerate() {
+                for pos in spec.pos0..spec.pos0 + spec.shape.n {
+                    assert!(!covered[pos], "{h}x{w} t={t}: position {pos} covered twice");
+                    covered[pos] = true;
+                    assert_eq!(p.tile_of[pos], b as u32);
+                }
+            }
+            assert!(covered.iter().all(|&c| c), "{h}x{w} t={t}: gap in coverage");
+        }
+    }
+}

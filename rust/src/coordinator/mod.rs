@@ -4,44 +4,46 @@
 //!
 //! Per phase r of R:
 //!   1. τ ← geometric decay (schedule::TauSchedule),
-//!   2. w ← order-preserving linear ramp (descending — see
-//!      `python/tests/test_kernel.py::test_linear_init_conventions`),
-//!   3. shuffle the current arrangement (shuffle::ShuffleStrategy),
-//!   4. I Adam steps on the `sss_step` compute function (L2+L1), executed
-//!      by whichever [`StepBackend`] the driver was built with — the AOT
-//!      PJRT artifact or the pure-Rust native implementation — with the
-//!      inner τ_i ramp 0.2τ → τ,
-//!   5. argmax extraction; if duplicated, extend iterations at sharpened τ
-//!      (paper's rule), finally greedy `perm::repair` (counted),
-//!   6. compose the phase permutation into `perm::Tracker`.
+//!   2. shuffle the current arrangement (shuffle::ShuffleStrategy),
+//!   3. hand the shuffled arrangement to the run's
+//!      [`executor::PhaseExecutor`], which owns everything inside a phase:
+//!      the fresh order-preserving weight ramp, I Adam steps on the
+//!      `sss_step` compute function (L2+L1) with the inner τ_i ramp,
+//!      argmax extraction, the paper's extension rule, and greedy
+//!      `perm::repair` (counted). Two executors exist: `Full` (one
+//!      `StepSession` over the whole N — today's classic loop) and
+//!      `Tiled { tile_n }` (independent per-tile SoftSort solves over
+//!      contiguous grid bands, O(Σ n_b²) per step instead of O(N²); see
+//!      `executor.rs` and `cfg.tile_n`),
+//!   4. compose the phase permutation into `perm::Tracker` (optionally
+//!      gated by greedy acceptance on the hard neighbor metric).
 //!
 //! The original data never moves; the tracker owns the arrangement. The
 //! drivers never touch the runtime or artifacts directly — all compute
 //! dispatches through `&dyn StepBackend` (see `crate::backend`). Each run
-//! opens ONE `StepSession` up front and drives every Adam step through it:
-//! scratch buffers and the native worker pool are allocated once, the
-//! inner step loop is allocation-free (results land in a reusable
-//! `SssStep`), and `cfg.threads` sizes the session pool.
+//! opens its sessions once up front (one per problem shape), the inner
+//! step loop is allocation-free, and `cfg.threads` sizes the session
+//! pool(s).
 
 pub mod baselines;
 pub mod events;
+pub(crate) mod executor;
 pub mod optimizer;
 pub mod schedule;
 pub mod shuffle;
 
 use anyhow::Result;
 
-use crate::backend::{SssStep, StepBackend, StepSession, StepShape};
+use crate::backend::StepBackend;
 use crate::config::ShuffleSoftSortConfig;
 use crate::data::Dataset;
 use crate::metrics::dpq16;
-use crate::perm::{repair, Permutation, Tracker};
+use crate::perm::{Permutation, Tracker};
 use crate::util::rng::Pcg32;
 use crate::util::stats::mean_pairwise_distance;
 use crate::util::timer::Stopwatch;
 
 use events::RunReport;
-use optimizer::Adam;
 
 /// Result of a sorting run: the learned permutation (grid position →
 /// original item index), the arranged data, and the run report.
@@ -85,7 +87,6 @@ pub(crate) fn run_shuffle_softsort(
 ) -> Result<SortOutcome> {
     let g = cfg.grid;
     let (n, d) = (data.n, data.d);
-    let shape = StepShape::new(g, d);
     let watch = Stopwatch::start();
     let mut rng = Pcg32::new(cfg.seed);
 
@@ -102,17 +103,12 @@ pub(crate) fn run_shuffle_softsort(
     // Loss normalizer: dataset mean pairwise distance (DESIGN §7).
     let norm = mean_pairwise_distance(&data.rows, n, d, 20_000, &mut rng);
 
-    // One session for the whole run: scratch + worker pool allocated here,
-    // every step below reuses them (zero steady-state allocations).
-    let mut session = backend.session(shape, cfg.threads)?;
-    let mut step = SssStep::new_for(shape);
-    let mut last_sort_idx = vec![0i32; n];
+    // The phase executor owns all inner-loop compute state — sessions,
+    // optimizer, step scratch — allocated once here and reused per phase.
+    let mut exec = executor::executor_for(backend, cfg, d, norm)?;
+    report.tiles = exec.tiles();
 
     let mut tracker = Tracker::new(n);
-    let mut adam_cfg = cfg.adam.clone();
-    adam_cfg.lr = cfg.effective_lr(d);
-    let mut adam = Adam::new(adam_cfg, n);
-    let mut w = vec![0.0f32; n];
     let mut x_cur = data.rows.clone();
     let mut x_shuf: Vec<f32> = Vec::with_capacity(n * d);
     let mut x_trial: Vec<f32> = Vec::with_capacity(n * d);
@@ -124,16 +120,6 @@ pub(crate) fn run_shuffle_softsort(
     for r in 0..cfg.phases {
         let tau = cfg.tau.phase_tau(r, cfg.phases);
 
-        // Fresh order-preserving weights + fresh optimizer moments. The
-        // ramp has unit spacing, so τ directly reads as the softmax
-        // bandwidth in *positions*: τ=8 blends ≈8 grid neighbors, τ<1 is
-        // effectively hard. The schedule anneals that bandwidth (see
-        // EXPERIMENTS.md §Tuning for the sweep that pinned this down).
-        for (i, wi) in w.iter_mut().enumerate() {
-            *wi = (n - i) as f32;
-        }
-        adam.reset();
-
         let shuf = cfg.shuffle.shuffle_for_phase(r, g, &mut rng);
         shuf.apply_rows_into(&x_cur, d, &mut x_shuf);
         let inv = shuf.inverse();
@@ -141,42 +127,9 @@ pub(crate) fn run_shuffle_softsort(
             *dst = v as i32;
         }
 
-        // Inner SoftSort iterations with the τ_i ramp. The step loop is
-        // allocation-free: the session owns all scratch, `step` is reused.
-        for i in 0..cfg.inner_iters {
-            let tau_i = cfg.tau.inner_tau(tau, i, cfg.inner_iters);
-            report.sections.time("execute", || {
-                session.sss_step(&w, &x_shuf, &inv_idx_i32, tau_i, norm, &mut step)
-            })?;
-            let loss = step.loss as f64;
-            report.sections.time("adam", || {
-                adam.step(&mut w, &step.grad);
-            });
-            if cfg.record_curve {
-                report.record(r, i, tau_i, loss);
-            } else {
-                report.final_loss = loss;
-                report.steps += 1;
-            }
-            if i + 1 == cfg.inner_iters {
-                last_sort_idx.copy_from_slice(&step.sort_idx);
-            }
-        }
-
-        // Hard extraction with the paper's extension rule.
-        let sort_perm = extract_valid(
-            session.as_mut(),
-            &mut step,
-            &w,
-            &x_shuf,
-            &inv_idx_i32,
-            tau,
-            norm,
-            &last_sort_idx,
-            cfg.max_extensions,
-            &mut adam,
-            &mut report,
-        )?;
+        // Inner optimization + hard extraction, executor-specific.
+        let sort_perm =
+            exec.run_phase(r, tau, &x_shuf, &shuf, &inv, &inv_idx_i32, &mut report)?;
 
         // Greedy acceptance: adopt the phase only if the *hard* neighbor
         // metric does not regress. The trial arrangement is the phase
@@ -218,52 +171,4 @@ pub(crate) fn run_shuffle_softsort(
         .time("dpq", || dpq16(&arranged, d, g));
     report.wall_secs = watch.secs();
     Ok(SortOutcome { perm: tracker.perm().clone(), arranged, report })
-}
-
-/// Argmax → validity check → extension iterations at sharpened τ → repair.
-/// Extensions run through the same run-level session (`step` is the run's
-/// reusable out buffer).
-#[allow(clippy::too_many_arguments)]
-fn extract_valid(
-    session: &mut dyn StepSession,
-    step: &mut SssStep,
-    w: &[f32],
-    x_shuf: &[f32],
-    inv_idx: &[i32],
-    tau: f32,
-    norm: f32,
-    first_idx: &[i32],
-    max_extensions: usize,
-    adam: &mut Adam,
-    report: &mut RunReport,
-) -> Result<Permutation> {
-    let to_u32 = |v: &[i32]| v.iter().map(|&x| x as u32).collect::<Vec<u32>>();
-    let mut idx = to_u32(first_idx);
-    if Permutation::count_duplicates(&idx) == 0 {
-        return Ok(Permutation::from_vec(idx).expect("checked"));
-    }
-
-    // Extend: keep optimizing at a sharpening temperature until valid.
-    let mut w = w.to_vec();
-    let mut tau_ext = tau;
-    for _ in 0..max_extensions {
-        report.extensions += 1;
-        tau_ext *= 0.6;
-        report.sections.time("execute", || {
-            session.sss_step(&w, x_shuf, inv_idx, tau_ext, norm, step)
-        })?;
-        adam.step(&mut w, &step.grad);
-        idx.clear();
-        idx.extend(step.sort_idx.iter().map(|&x| x as u32));
-        if Permutation::count_duplicates(&idx) == 0 {
-            return Ok(Permutation::from_vec(idx).expect("checked"));
-        }
-    }
-
-    // Rare fallback: deterministic greedy repair (counted in the report —
-    // this is what the paper's "Stability" row measures).
-    let (perm, fixed) = repair(&idx);
-    report.repaired += fixed;
-    report.valid_without_repair = false;
-    Ok(perm)
 }

@@ -70,9 +70,13 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
     let method = args.opt("method").unwrap_or("sss");
     let spec = engine.registry().resolve_or_err(method)?;
 
-    // `--seed` participates as the first override so an explicit `seed=...`
-    // pair still wins (last-wins semantics).
+    // `--seed` / `--tile-n` participate as leading overrides so explicit
+    // `seed=...` / `tile_n=...` pairs still win (last-wins semantics).
     let mut overrides: Vec<(String, String)> = vec![("seed".into(), seed.to_string())];
+    if let Some(t) = args.opt("tile-n") {
+        t.parse::<usize>().map_err(|_| anyhow!("--tile-n must be an integer"))?;
+        overrides.push(("tile_n".into(), t.to_string()));
+    }
     overrides.extend(args.overrides.iter().cloned());
 
     let make_dataset = |seed: u64| -> Result<Dataset> {

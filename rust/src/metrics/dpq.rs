@@ -31,6 +31,21 @@ fn default_k_max(n: usize) -> usize {
     ((n as f64).sqrt() as usize).clamp(1, n - 1)
 }
 
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+/// Anchor cells beyond this count are subsampled with a deterministic
+/// stride: the exact metric is O(N²(d + log N)) — fine to N ≈ 4096, not at
+/// the sizes the tiled phase executor now reaches (16k–100k). Runs with
+/// n ≤ `DPQ_MAX_ANCHORS` are **bit-identical** to the exact computation
+/// (stride 1); above it DPQ becomes a strided estimate over ⌈n/stride⌉
+/// anchor cells, with every cell still participating as a neighbor.
+pub const DPQ_MAX_ANCHORS: usize = 4096;
+
 /// DPQ_16 — the paper's reported variant.
 pub fn dpq16(data: &[f32], d: usize, g: GridShape) -> f64 {
     dpq(data, d, g, 16.0, default_k_max(g.n()))
@@ -39,16 +54,39 @@ pub fn dpq16(data: &[f32], d: usize, g: GridShape) -> f64 {
 /// General DPQ_p with explicit neighborhood cap.
 ///
 /// `data` is row-major `[n, d]`, already arranged on the grid (cell i holds
-/// the vector at rows `i*d..`). O(N² (d + log N)) — fine for N ≤ 4096.
+/// the vector at rows `i*d..`). Exact up to [`DPQ_MAX_ANCHORS`] cells,
+/// anchor-strided above.
 pub fn dpq(data: &[f32], d: usize, g: GridShape, p: f64, k_max: usize) -> f64 {
+    dpq_with_anchor_cap(data, d, g, p, k_max, DPQ_MAX_ANCHORS)
+}
+
+fn dpq_with_anchor_cap(
+    data: &[f32],
+    d: usize,
+    g: GridShape,
+    p: f64,
+    k_max: usize,
+    max_anchors: usize,
+) -> f64 {
     let n = g.n();
     assert_eq!(data.len(), n * d);
     assert!(n >= 2);
     let k_max = k_max.clamp(1, n - 1);
+    // Deterministic anchor stride, bumped to be coprime with the grid
+    // width: a stride sharing a factor with `w` would sample anchors from
+    // a fixed subset of columns (stride 4 on a 128-wide grid hits only
+    // every 4th column), biasing the estimate on layouts whose quality
+    // varies by column. Coprime strides cycle through all columns.
+    // n ≤ max_anchors keeps stride = 1 — the exact, bit-identical path.
+    let mut stride = n.div_ceil(max_anchors.max(1)).max(1);
+    while stride > 1 && gcd(stride, g.w) != 1 {
+        stride += 1;
+    }
+    let mut anchors = 0usize;
 
-    // Per-cell: feature distances to everyone, ranked once by grid distance
-    // and once by feature distance.
-    let mut d_grid_acc = vec![0.0f64; k_max]; // Σ over cells of mean-to-k-grid-nearest
+    // Per anchor cell: feature distances to everyone, ranked once by grid
+    // distance and once by feature distance.
+    let mut d_grid_acc = vec![0.0f64; k_max]; // Σ over anchors of mean-to-k-grid-nearest
     let mut d_opt_acc = vec![0.0f64; k_max];
     let mut d_rand_sum = 0.0f64;
 
@@ -56,7 +94,8 @@ pub fn dpq(data: &[f32], d: usize, g: GridShape, p: f64, k_max: usize) -> f64 {
     let mut order_grid: Vec<u32> = Vec::with_capacity(n);
     let mut order_feat: Vec<u32> = Vec::with_capacity(n);
 
-    for i in 0..n {
+    for i in (0..n).step_by(stride) {
+        anchors += 1;
         let xi = &data[i * d..(i + 1) * d];
         for j in 0..n {
             feat[j] = l2(xi, &data[j * d..(j + 1) * d]);
@@ -87,12 +126,12 @@ pub fn dpq(data: &[f32], d: usize, g: GridShape, p: f64, k_max: usize) -> f64 {
         d_rand_sum += feat.iter().map(|&v| v as f64).sum::<f64>() / (n - 1) as f64;
     }
 
-    let d_rand = d_rand_sum / n as f64;
+    let d_rand = d_rand_sum / anchors as f64;
     let mut num = 0.0f64;
     let mut den = 0.0f64;
     for k in 0..k_max {
-        let d_grid = d_grid_acc[k] / n as f64;
-        let d_opt = d_opt_acc[k] / n as f64;
+        let d_grid = d_grid_acc[k] / anchors as f64;
+        let d_opt = d_opt_acc[k] / anchors as f64;
         let gap = d_rand - d_opt;
         let q = if gap <= 1e-12 {
             1.0 // degenerate data: every layout is optimal
@@ -169,6 +208,35 @@ mod tests {
         let g = GridShape::new(4, 4);
         let data = vec![0.7f32; 16 * 2];
         assert_eq!(dpq16(&data, 2, g), 1.0);
+    }
+
+    #[test]
+    fn anchor_stride_estimates_the_exact_metric() {
+        // Strided anchors (the large-N path) must stay close to the exact
+        // value and keep the sorted-vs-shuffled ordering.
+        let mut rng = Pcg32::new(13);
+        let g = GridShape::new(16, 16);
+        let mut sorted = Vec::with_capacity(g.n() * 2);
+        for r in 0..16 {
+            for c in 0..16 {
+                sorted.push(r as f32 / 16.0);
+                sorted.push(c as f32 / 16.0);
+            }
+        }
+        let random: Vec<f32> = (0..g.n() * 2).map(|_| rng.f32()).collect();
+        for data in [&sorted, &random] {
+            let exact = dpq_with_anchor_cap(data, 2, g, 16.0, 16, usize::MAX);
+            let strided = dpq_with_anchor_cap(data, 2, g, 16.0, 16, 128);
+            assert!((exact - strided).abs() < 0.1, "exact {exact} vs strided {strided}");
+        }
+        let qs = dpq_with_anchor_cap(&sorted, 2, g, 16.0, 16, 128);
+        let qr = dpq_with_anchor_cap(&random, 2, g, 16.0, 16, 128);
+        assert!(qs > qr + 0.3, "sorted {qs} vs random {qr}");
+        // At or below the cap the strided path IS the exact path.
+        assert_eq!(
+            dpq16(&sorted, 2, g).to_bits(),
+            dpq_with_anchor_cap(&sorted, 2, g, 16.0, default_k_max(g.n()), g.n()).to_bits()
+        );
     }
 
     #[test]

@@ -73,6 +73,11 @@ pub struct Metrics {
     /// Jobs actually executed by the engine host (cache hits never reach
     /// it — the "zero extra Engine steps on a repeat request" check).
     pub engine_jobs: AtomicU64,
+    /// Sum over engine-executed sorts of their per-phase tile count
+    /// (`RunReport::tiles`: B for a tiled ShuffleSoftSort run, 1 for the
+    /// full executor, 0 for methods without a phase executor) — the
+    /// observable that tiled requests really ran tiled.
+    pub phase_tiles: AtomicU64,
     pub queue_rejections: AtomicU64,
     latency: Mutex<BTreeMap<String, Arc<Histogram>>>,
     started: Instant,
@@ -94,6 +99,7 @@ impl Metrics {
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             engine_jobs: AtomicU64::new(0),
+            phase_tiles: AtomicU64::new(0),
             queue_rejections: AtomicU64::new(0),
             latency: Mutex::new(BTreeMap::new()),
             started: Instant::now(),
@@ -175,6 +181,7 @@ impl Metrics {
                 "engine",
                 obj([
                     ("jobs", Json::from(Self::load(&self.engine_jobs))),
+                    ("phase_tiles", Json::from(Self::load(&self.phase_tiles))),
                     ("queue_depth", Json::from(queue_depth)),
                     ("queue_rejections", Json::from(Self::load(&self.queue_rejections))),
                 ]),
@@ -200,6 +207,7 @@ impl Metrics {
         metric("cache_hits_total", "counter", Self::load(&self.cache_hits));
         metric("cache_misses_total", "counter", Self::load(&self.cache_misses));
         metric("engine_jobs_total", "counter", Self::load(&self.engine_jobs));
+        metric("phase_tiles_total", "counter", Self::load(&self.phase_tiles));
         metric("queue_rejections_total", "counter", Self::load(&self.queue_rejections));
         metric("cache_entries", "gauge", cache_entries as u64);
         metric("cache_bytes", "gauge", cache_bytes as u64);
@@ -273,6 +281,7 @@ mod tests {
         m.requests.fetch_add(3, Ordering::Relaxed);
         m.cache_hits.fetch_add(1, Ordering::Relaxed);
         m.engine_jobs.fetch_add(2, Ordering::Relaxed);
+        m.phase_tiles.fetch_add(9, Ordering::Relaxed);
         m.status(200);
         m.status(404);
         m.observe("softsort", 0.002);
@@ -281,6 +290,7 @@ mod tests {
         assert_eq!(j.get("requests_total").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("cache").unwrap().get("hits").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("engine").unwrap().get("jobs").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("engine").unwrap().get("phase_tiles").unwrap().as_usize(), Some(9));
         assert_eq!(
             j.get("latency").unwrap().get("softsort").unwrap().get("count").unwrap().as_usize(),
             Some(1)
@@ -289,6 +299,7 @@ mod tests {
         let text = m.to_prometheus(5, 1234, 0);
         assert!(text.contains("sssort_requests_total 3"), "{text}");
         assert!(text.contains("sssort_cache_hits_total 1"), "{text}");
+        assert!(text.contains("sssort_phase_tiles_total 9"), "{text}");
         assert!(text.contains("sssort_responses_total{class=\"2xx\"} 1"), "{text}");
         assert!(
             text.contains("sssort_sort_duration_seconds_bucket{method=\"softsort\",le=\"+Inf\"} 1"),

@@ -491,9 +491,16 @@ struct SortRequest {
     method: &'static str,
     grid: GridShape,
     overrides: Vec<(String, String)>,
-    /// Canonical serialization of overrides + backend (cache-key part).
+    /// Canonical serialization of overrides + backend + response shape
+    /// (cache-key part — bodies with and without `arranged` must cache
+    /// separately).
     config: String,
     datasets: Vec<Dataset>,
+    /// Whether response bodies carry the arranged rows. Resolved here:
+    /// explicit `"include_arranged"` wins, otherwise on iff
+    /// `n <= cfg.arranged_max_n` (large-N responses stay lightweight by
+    /// default — ROADMAP "streaming/chunked responses", cheap half).
+    include_arranged: bool,
 }
 
 impl SortRequest {
@@ -602,9 +609,18 @@ fn parse_sort_request(ctx: &Ctx, body: &[u8], batch: bool) -> Result<SortRequest
             .map_err(|e| ApiError::bad_request(format!("{e:#}")))?;
         overrides.push(("backend".to_string(), s.to_ascii_lowercase()));
     }
+    let include_arranged = match j.get("include_arranged") {
+        None => grid.n() <= ctx.cfg.arranged_max_n,
+        Some(v) => v.as_bool().ok_or_else(|| {
+            ApiError::bad_request("'include_arranged' must be a boolean")
+        })?,
+    };
+    // The resolved flag joins the canonical config so the cache never
+    // replays a body of the wrong shape for this request.
     let config = obj(overrides
         .iter()
-        .map(|(k, v)| (k.clone(), Json::from(v.as_str()))))
+        .map(|(k, v)| (k.clone(), Json::from(v.as_str())))
+        .chain([("include_arranged".to_string(), Json::from(include_arranged))]))
     .to_string_compact();
 
     // Datasets.
@@ -633,7 +649,7 @@ fn parse_sort_request(ctx: &Ctx, body: &[u8], batch: bool) -> Result<SortRequest
         datasets.push(dataset_from_json(&j, grid)?);
     }
 
-    Ok(SortRequest { method: spec.name, grid, overrides, config, datasets })
+    Ok(SortRequest { method: spec.name, grid, overrides, config, datasets, include_arranged })
 }
 
 /// An optional non-negative-integer field of a dataset spec: absent is
@@ -788,10 +804,18 @@ fn json_f32(v: &Json, row: usize) -> Result<f32, ApiError> {
 // ---------------------------------------------------------------------------
 
 /// Serialize one finished sort. The body is the cache payload, so it must
-/// be a pure function of the computation (no timestamps beyond the run's
-/// own wall time, no cache status — that goes in the `X-Cache` header).
-fn render_outcome(method: &str, g: GridShape, ds: &Dataset, out: &SortOutcome) -> String {
-    obj([
+/// be a pure function of the computation *and the request's resolved
+/// response shape* (no timestamps beyond the run's own wall time, no cache
+/// status — that goes in the `X-Cache` header). `include_arranged` gates
+/// the N·d arranged rows, the heavyweight part of large-N bodies.
+fn render_outcome(
+    method: &str,
+    g: GridShape,
+    ds: &Dataset,
+    out: &SortOutcome,
+    include_arranged: bool,
+) -> String {
+    let mut fields = vec![
         ("method", Json::from(method)),
         ("grid", obj([("h", Json::from(g.h)), ("w", Json::from(g.w))])),
         ("n", Json::from(ds.n)),
@@ -801,9 +825,16 @@ fn render_outcome(method: &str, g: GridShape, ds: &Dataset, out: &SortOutcome) -
         ("loss", num(out.report.final_loss)),
         ("steps", Json::from(out.report.steps)),
         ("repaired", Json::from(out.report.repaired)),
+        ("tiles", Json::from(out.report.tiles)),
         ("wall_secs", num(out.report.wall_secs)),
-    ])
-    .to_string_compact()
+    ];
+    if include_arranged {
+        fields.push((
+            "arranged",
+            arr(out.arranged.iter().map(|&v| num(v as f64))),
+        ));
+    }
+    obj(fields).to_string_compact()
 }
 
 fn enqueue(ctx: &Ctx, job: Job) -> Result<(), ApiError> {
@@ -843,9 +874,9 @@ fn sort_single(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
         .map_err(ApiError::from_engine)?;
     // get_or_put: if an identical concurrent miss beat us to the insert,
     // serve its body so every response for this key is byte-identical.
-    let body = ctx
-        .cache
-        .get_or_put(key, Arc::new(render_outcome(parsed.method, parsed.grid, ds, &outcome)));
+    let rendered =
+        render_outcome(parsed.method, parsed.grid, ds, &outcome, parsed.include_arranged);
+    let body = ctx.cache.get_or_put(key, Arc::new(rendered));
     Ok(Response::json(200, (*body).clone()).with_header("X-Cache", "miss"))
 }
 
@@ -895,6 +926,7 @@ fn sort_batch(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
                 parsed.grid,
                 &parsed.datasets[i],
                 &outcome,
+                parsed.include_arranged,
             ));
             bodies[i] = Some(ctx.cache.get_or_put(keys[i].clone(), rendered));
         }

@@ -164,6 +164,9 @@ pub fn spawn_engine_host(
                         let result = match result {
                             Ok(Ok(out)) => {
                                 metrics.observe(&j.method, started.elapsed().as_secs_f64());
+                                metrics
+                                    .phase_tiles
+                                    .fetch_add(out.report.tiles as u64, Ordering::Relaxed);
                                 Ok(out)
                             }
                             Ok(Err(e)) => Err(engine_error(e)),
@@ -188,6 +191,11 @@ pub fn spawn_engine_host(
                                     / j.datasets.len().max(1) as f64;
                                 for _ in 0..j.datasets.len() {
                                     metrics.observe(&j.method, per_item);
+                                }
+                                for out in rs.iter().flatten() {
+                                    metrics
+                                        .phase_tiles
+                                        .fetch_add(out.report.tiles as u64, Ordering::Relaxed);
                                 }
                                 rs.into_iter().map(|r| r.map_err(engine_error)).collect()
                             }

@@ -236,6 +236,70 @@ fn threads_override_and_engine_default_are_accepted_and_invariant() {
     assert_eq!(NativeBackend::new(3).threads(), 3);
 }
 
+#[test]
+fn tile_overrides_flow_through_engine_and_registry() {
+    let engine = Engine::builder("/definitely/not/artifacts").build();
+    let g = GridShape::new(8, 8);
+    let ds = random_colors(64, 21);
+    let base_ov = overrides(&[("phases", "48"), ("record_curve", "false")]);
+    let base = engine.sort("shuffle-softsort", &ds, g, &base_ov).unwrap();
+    assert_eq!(base.report.tiles, 1);
+
+    // Engine-level degeneracy: one tile (tile_n >= n) is bit-identical to
+    // the full executor.
+    let one_tile =
+        overrides(&[("phases", "48"), ("record_curve", "false"), ("tile_n", "64")]);
+    let out = engine.sort("shuffle-softsort", &ds, g, &one_tile).unwrap();
+    assert_eq!(out.report.tiles, 1);
+    assert_eq!(out.perm, base.perm);
+    for (a, b) in out.arranged.iter().zip(&base.arranged) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(out.report.final_dpq.to_bits(), base.report.final_dpq.to_bits());
+
+    // A real split sorts validly and reports its tile count; `tiles=B`
+    // spells the same knob as a count.
+    let split = overrides(&[("phases", "48"), ("record_curve", "false"), ("tile_n", "16")]);
+    let out = engine.sort("shuffle-softsort", &ds, g, &split).unwrap();
+    assert_valid_perm(&out.perm, 64, "tiled sss");
+    assert_eq!(out.report.tiles, 4);
+    let by_count = overrides(&[("phases", "48"), ("record_curve", "false"), ("tiles", "4")]);
+    let out2 = engine.sort("shuffle-softsort", &ds, g, &by_count).unwrap();
+    assert_eq!(out2.perm, out.perm, "tiles=4 must equal tile_n=16 on 8x8");
+
+    // Validation is eager and names the key, at the registry layer too.
+    let err = engine
+        .sort("shuffle-softsort", &ds, g, &overrides(&[("tile_n", "lots")]))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("tile_n"), "{err:#}");
+    let err = MethodRegistry::new()
+        .build("shuffle-softsort", None, &overrides(&[("tiles", "x")]))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("tiles"), "{err:#}");
+    // Baselines do not take the key (it is a ShuffleSoftSort knob).
+    let err = engine
+        .sort("softsort", &ds, g, &overrides(&[("tile_n", "16")]))
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("tile_n"), "{err:#}");
+}
+
+#[test]
+fn engine_step_session_covers_tile_shapes() {
+    use shufflesort::backend::{SssStep, StepSession};
+
+    // The memoized (n, d, h) session cache must serve the sub-grid shapes
+    // the tiled executor opens — e.g. a 4-row band of a 128-wide grid.
+    let engine = Engine::builder("/definitely/not/artifacts").build();
+    let mut sess = engine.step_session(512, 3, 4).unwrap();
+    assert_eq!((sess.shape().n, sess.shape().h, sess.shape().w), (512, 4, 128));
+    let ds = random_colors(512, 2);
+    let w: Vec<f32> = (0..512).map(|i| (512 - i) as f32).collect();
+    let inv: Vec<i32> = (0..512).collect();
+    let mut out = SssStep::new_for(sess.shape());
+    sess.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut out).unwrap();
+    assert!(out.loss.is_finite());
+}
+
 #[cfg(not(feature = "pjrt"))]
 #[test]
 fn engine_is_send_on_pure_rust_builds() {

@@ -196,6 +196,144 @@ fn native_sog_pipeline_beats_shuffled_compression() {
     assert!((learned.mean_psnr_db - shuffled.mean_psnr_db).abs() < 3.0);
 }
 
+// --------------------------------------------------------------------------
+// Tiled phase execution (native tier).
+// --------------------------------------------------------------------------
+
+#[test]
+fn tiled_with_one_tile_is_bit_identical_to_full() {
+    // The degeneracy contract: `tile_n >= n` puts the whole grid in one
+    // tile, the tile-local gather is the identity, and the tiled executor
+    // must reproduce the full executor bit for bit — permutation,
+    // arrangement, DPQ, loss trace, everything.
+    let ds = random_colors(64, 31);
+    let backend = NativeBackend::default();
+    let mut full_cfg = ShuffleSoftSortConfig::for_grid(8, 8);
+    full_cfg.phases = 96;
+    let mut tiled_cfg = full_cfg.clone();
+    for tile_n in [64usize, 65, 100_000] {
+        tiled_cfg.tile_n = Some(tile_n);
+        let full = ShuffleSoftSort::new(&backend, full_cfg.clone()).unwrap().sort(&ds).unwrap();
+        let tiled =
+            ShuffleSoftSort::new(&backend, tiled_cfg.clone()).unwrap().sort(&ds).unwrap();
+        assert_eq!(tiled.report.tiles, 1, "tile_n={tile_n}");
+        assert_eq!(full.report.tiles, 1);
+        assert_eq!(tiled.perm, full.perm, "tile_n={tile_n}");
+        for (a, b) in tiled.arranged.iter().zip(&full.arranged) {
+            assert_eq!(a.to_bits(), b.to_bits(), "tile_n={tile_n}");
+        }
+        assert_eq!(
+            tiled.report.final_dpq.to_bits(),
+            full.report.final_dpq.to_bits(),
+            "tile_n={tile_n}"
+        );
+        assert_eq!(tiled.report.steps, full.report.steps);
+        assert_eq!(tiled.report.extensions, full.report.extensions);
+        for (a, b) in tiled.report.curve.iter().zip(&full.report.curve) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "tile_n={tile_n}");
+        }
+    }
+}
+
+#[test]
+fn tiled_block_diagonal_composition_is_valid_for_ragged_splits() {
+    // Ragged grids and tile sizes that do not divide N: the per-tile
+    // permutations must still compose into a valid bijection on every
+    // phase, and the driver invariant perm→arranged must hold.
+    let backend = NativeBackend::default();
+    for (h, w, tile_n) in [(8usize, 8usize, 24usize), (5, 7, 10), (1, 40, 7), (9, 4, 13)] {
+        let n = h * w;
+        let ds = random_colors(n, 7 + (h * 31 + w) as u64);
+        let mut cfg = ShuffleSoftSortConfig::for_grid(h, w);
+        cfg.phases = 24;
+        cfg.record_curve = false;
+        cfg.tile_n = Some(tile_n);
+        let out = ShuffleSoftSort::new(&backend, cfg).unwrap().sort(&ds).unwrap();
+        assert_eq!(out.perm.len(), n, "{h}x{w} tile_n={tile_n}");
+        assert!(out.report.tiles > 1, "{h}x{w} tile_n={tile_n}: expected a real split");
+        assert!(out.report.final_dpq.is_finite());
+        assert_eq!(out.perm.apply_rows(&ds.rows, 3), out.arranged, "{h}x{w} tile_n={tile_n}");
+    }
+}
+
+#[test]
+fn tiled_results_are_dispatch_order_invariant() {
+    // N = 640 with 4-row tiles → 5 tiles; threads=1 forces the sequential
+    // tile loop, larger budgets dispatch tiles over the worker pool. The
+    // tile-index-ordered fold must make every configuration bit-identical.
+    let ds = random_colors(640, 17);
+    let backend = NativeBackend::default();
+    let base_cfg = {
+        let mut cfg = ShuffleSoftSortConfig::for_grid(20, 32);
+        cfg.phases = 6;
+        cfg.record_curve = false;
+        cfg.tile_n = Some(128);
+        cfg
+    };
+    let run = |threads: Option<usize>| {
+        let mut cfg = base_cfg.clone();
+        cfg.threads = threads;
+        ShuffleSoftSort::new(&backend, cfg).unwrap().sort(&ds).unwrap()
+    };
+    let base = run(Some(1));
+    assert_eq!(base.report.tiles, 5);
+    for threads in [Some(2), Some(4), Some(8), None] {
+        let out = run(threads);
+        assert_eq!(out.perm, base.perm, "threads={threads:?}");
+        for (a, b) in out.arranged.iter().zip(&base.arranged) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={threads:?}");
+        }
+        assert_eq!(
+            out.report.final_dpq.to_bits(),
+            base.report.final_dpq.to_bits(),
+            "threads={threads:?}"
+        );
+    }
+}
+
+#[test]
+fn zero_inner_iters_still_yields_valid_permutations() {
+    // Degenerate `inner_iters=0` (accepted by the config) must reach the
+    // extension/repair path — not return an empty permutation — on both
+    // executors (regression: the executor refactor must keep the old
+    // zero-seeded hard draft).
+    let ds = random_colors(64, 3);
+    let backend = NativeBackend::default();
+    for tile_n in [None, Some(16usize)] {
+        let mut cfg = ShuffleSoftSortConfig::for_grid(8, 8);
+        cfg.phases = 4;
+        cfg.inner_iters = 0;
+        cfg.record_curve = false;
+        cfg.tile_n = tile_n;
+        let out = ShuffleSoftSort::new(&backend, cfg).unwrap().sort(&ds).unwrap();
+        assert_eq!(out.perm.len(), 64, "tile_n={tile_n:?}");
+        assert_eq!(out.perm.apply_rows(&ds.rows, 3), out.arranged, "tile_n={tile_n:?}");
+    }
+}
+
+#[test]
+fn tiled_shuffle_softsort_improves_dpq_end_to_end() {
+    // Tiling is a performance knob, not a quality escape hatch: with the
+    // standard shuffles + greedy acceptance a tiled run must still clearly
+    // improve DPQ over the identity arrangement.
+    let ds = random_colors(256, 42);
+    let g = GridShape::new(16, 16);
+    let before = dpq16(&ds.rows, 3, g);
+    let backend = NativeBackend::default();
+    let mut cfg = ShuffleSoftSortConfig::for_grid(16, 16);
+    cfg.phases = 1024;
+    cfg.record_curve = false;
+    cfg.tile_n = Some(64);
+    let out = ShuffleSoftSort::new(&backend, cfg).unwrap().sort(&ds).unwrap();
+    assert_eq!(out.report.tiles, 4);
+    assert!(
+        out.report.final_dpq > before + 0.15,
+        "tiled sss {} vs unsorted {before}",
+        out.report.final_dpq
+    );
+    assert_eq!(out.perm.apply_rows(&ds.rows, 3), out.arranged);
+}
+
 // ==========================================================================
 // PJRT tier: needs the `pjrt` feature and the AOT artifacts.
 // ==========================================================================

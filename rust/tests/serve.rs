@@ -17,15 +17,19 @@ use shufflesort::data::random_colors;
 use shufflesort::grid::GridShape;
 use shufflesort::serve::{self, json::Json, EngineSpec, Server};
 
-fn start_server() -> Server {
-    let cfg = ServeConfig {
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
         addr: "127.0.0.1:0".to_string(),
         workers: 8,
         cache_mb: 8,
         queue_depth: 64,
         max_body_bytes: 1 << 20,
         keep_alive_secs: 2,
-    };
+        ..Default::default()
+    }
+}
+
+fn start_server_with(cfg: ServeConfig) -> Server {
     let spec = EngineSpec {
         artifacts_dir: "artifacts".to_string(),
         backend: BackendChoice::Native,
@@ -34,6 +38,10 @@ fn start_server() -> Server {
         registry: MethodRegistry::new(),
     };
     serve::start(cfg, spec).expect("server boots on a free port")
+}
+
+fn start_server() -> Server {
+    start_server_with(serve_cfg())
 }
 
 struct Resp {
@@ -330,6 +338,101 @@ fn eight_concurrent_clients_match_sequential_engine_sort() {
             "seed {seed}: concurrent serve result must equal sequential Engine::sort"
         );
     }
+
+    server.shutdown();
+}
+
+#[test]
+fn arranged_payload_is_opt_in_with_a_size_threshold() {
+    let server = start_server();
+    let addr = server.addr();
+
+    // Below the default threshold (4096) the arranged rows ship by default
+    // and equal perm-applied input rows.
+    let r = post(addr, "/v1/sort", &sort_body(40, 16));
+    assert_eq!(r.status, 200, "{}", r.body);
+    let j = r.json();
+    let arranged = j.get("arranged").expect("default includes arranged").as_arr().unwrap();
+    assert_eq!(arranged.len(), 16 * 3);
+    let expected = local_engine()
+        .sort("softsort", &random_colors(16, 40), GridShape::new(4, 4), &sort_overrides(40, 16))
+        .unwrap();
+    for (v, want) in arranged.iter().zip(&expected.arranged) {
+        assert_eq!(v.as_f64().unwrap() as f32, *want);
+    }
+
+    // Explicit false strips it — and caches separately from the default
+    // body (the response shape is part of the cache key).
+    let body = r#"{"method":"softsort","grid":"4x4","dataset":{"kind":"colors","n":16,"seed":40},"overrides":{"seed":40,"steps":16},"include_arranged":false}"#;
+    let slim = post(addr, "/v1/sort", body);
+    assert_eq!(slim.status, 200, "{}", slim.body);
+    assert_eq!(slim.header("x-cache"), Some("miss"), "different response shape, new entry");
+    assert!(slim.json().get("arranged").is_none(), "{}", slim.body);
+    assert!(slim.body.len() < r.body.len());
+    // Repeat of each shape replays its own bytes.
+    let again = post(addr, "/v1/sort", body);
+    assert_eq!(again.header("x-cache"), Some("hit"));
+    assert_eq!(again.body, slim.body);
+
+    // A non-boolean flag is a 400 naming the field.
+    let bad = post(
+        addr,
+        "/v1/sort",
+        r#"{"method":"softsort","grid":"4x4","dataset":{"kind":"colors","n":16},"include_arranged":"yes"}"#,
+    );
+    assert_eq!(bad.status, 400, "{}", bad.body);
+    assert!(bad.body.contains("include_arranged"), "{}", bad.body);
+    server.shutdown();
+
+    // A server configured with a tiny threshold defaults the payload off
+    // (the large-N posture), while an explicit true still opts in.
+    let mut cfg = serve_cfg();
+    cfg.arranged_max_n = 4;
+    let server = start_server_with(cfg);
+    let addr = server.addr();
+    let r = post(addr, "/v1/sort", &sort_body(41, 16));
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert!(r.json().get("arranged").is_none(), "{}", r.body);
+    let body = r#"{"method":"softsort","grid":"4x4","dataset":{"kind":"colors","n":16,"seed":41},"overrides":{"seed":41,"steps":16},"include_arranged":true}"#;
+    let fat = post(addr, "/v1/sort", body);
+    assert_eq!(fat.status, 200, "{}", fat.body);
+    assert_eq!(fat.json().get("arranged").unwrap().as_arr().unwrap().len(), 16 * 3);
+    server.shutdown();
+}
+
+#[test]
+fn tile_n_override_sorts_tiled_and_caches_separately_from_full() {
+    let server = start_server();
+    let addr = server.addr();
+
+    // 8x8 shuffle-softsort with 2-row tiles → 4 tiles per phase.
+    let tiled_body = r#"{"method":"shuffle-softsort","grid":"8x8","dataset":{"kind":"colors","n":64,"seed":3},"overrides":{"phases":16,"record_curve":false,"tile_n":16},"include_arranged":false}"#;
+    let r = post(addr, "/v1/sort", tiled_body);
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(r.header("x-cache"), Some("miss"));
+    let j = r.json();
+    assert_eq!(j.get("tiles").unwrap().as_usize(), Some(4));
+    let perm = perm_of(&j);
+    assert_eq!(perm.len(), 64);
+
+    // The same request without the tile override is a distinct cache entry
+    // (the canonical overrides differ), served by the full executor.
+    let full_body = r#"{"method":"shuffle-softsort","grid":"8x8","dataset":{"kind":"colors","n":64,"seed":3},"overrides":{"phases":16,"record_curve":false},"include_arranged":false}"#;
+    let full = post(addr, "/v1/sort", full_body);
+    assert_eq!(full.status, 200, "{}", full.body);
+    assert_eq!(full.header("x-cache"), Some("miss"));
+    assert_eq!(full.json().get("tiles").unwrap().as_usize(), Some(1));
+
+    // Replaying the tiled request is a pure cache hit.
+    let again = post(addr, "/v1/sort", tiled_body);
+    assert_eq!(again.header("x-cache"), Some("hit"));
+    assert_eq!(again.body, r.body);
+
+    // metrics: 2 engine jobs (hit never reached it), 4 + 1 phase tiles.
+    let metrics = get(addr, "/metrics").json();
+    let engine = metrics.get("engine").unwrap();
+    assert_eq!(engine.get("jobs").unwrap().as_usize(), Some(2));
+    assert_eq!(engine.get("phase_tiles").unwrap().as_usize(), Some(5));
 
     server.shutdown();
 }
