@@ -232,6 +232,13 @@ impl Engine {
         }))
     }
 
+    /// Number of `(n, d, h)` step sessions currently memoized — the serve
+    /// layer's per-shard warmth gauge (hashed job affinity exists to keep
+    /// this cache hot on each shard's home shapes).
+    pub fn session_memo_entries(&self) -> usize {
+        self.sessions.borrow().len()
+    }
+
     /// Prepend the engine-level `--threads` default for learned methods
     /// (explicit `threads=` override pairs still win: last-wins).
     fn with_default_threads(

@@ -73,7 +73,8 @@ impl ParsedArgs {
 const KNOWN_VALUE_OPTS: &[&str] = &[
     "n", "grid", "method", "out", "seed", "config", "artifacts", "dataset",
     "bits", "entropy", "scene-seed", "clusters", "dims", "batch", "workers",
-    "backend", "threads", "addr", "cache-mb", "tile-n",
+    "backend", "threads", "addr", "cache-mb", "tile-n", "shards",
+    "cache-file", "rate-limit", "auth-token",
 ];
 
 pub const USAGE: &str = "\
@@ -85,9 +86,15 @@ USAGE:
                  [--seed S] [--batch K] [--workers W] [--out dir] [k=v ...]
                  sort dataset(s), report DPQ (batch >1 fans out across threads)
   sssort serve   [--addr HOST:PORT] [--workers W] [--cache-mb MB]
-                 [--backend B] [--threads T] [--artifacts dir] [k=v overrides]
+                 [--shards K] [--cache-file PATH] [--rate-limit R]
+                 [--auth-token TOKEN] [--backend B] [--threads T]
+                 [--artifacts dir] [k=v overrides]
                  HTTP service over the engine: POST /v1/sort, /v1/sort_batch,
-                 GET /v1/methods, /healthz, /metrics (see README \u{a7}Serving)
+                 GET /v1/methods, /healthz, /metrics (see README \u{a7}Serving).
+                 --shards K runs K engine hosts with hashed job affinity;
+                 --cache-file persists the result cache across restarts;
+                 --rate-limit R throttles each client to R req/s (2x burst);
+                 --auth-token requires `Authorization: Bearer TOKEN`.
   sssort sog     [--n N] [--grid HxW] [--bits B] [--backend B] [--out dir]
                  run the Self-Organizing-Gaussians pipeline (Fig. 6)
   sssort inspect [--artifacts dir]                        list AOT artifacts
@@ -225,6 +232,22 @@ mod tests {
         assert_eq!(a.overrides, vec![("queue_depth".into(), "8".into())]);
         assert!(a.positional.is_empty());
         assert!(usage().contains("sssort serve"));
+    }
+
+    #[test]
+    fn serve_shard_and_persistence_options_take_values() {
+        let a = parse(&[
+            "serve", "--shards", "4", "--cache-file", "/tmp/spill", "--rate-limit",
+            "25", "--auth-token", "s3cret",
+        ]);
+        assert_eq!(a.opt_usize("shards", 1).unwrap(), 4);
+        assert_eq!(a.opt("cache-file"), Some("/tmp/spill"));
+        assert_eq!(a.opt_usize("rate-limit", 0).unwrap(), 25);
+        assert_eq!(a.opt("auth-token"), Some("s3cret"));
+        assert!(a.positional.is_empty());
+        for flag in ["--shards", "--cache-file", "--rate-limit", "--auth-token"] {
+            assert!(usage().contains(flag), "usage() missing {flag}");
+        }
     }
 
     #[test]

@@ -374,6 +374,24 @@ pub struct ServeConfig {
     /// omitted unless the request asks with `"include_arranged": true`;
     /// an explicit `false` strips it at any size.
     pub arranged_max_n: usize,
+    /// Engine-host shard count (`--shards`). Jobs route by an affinity
+    /// hash of (method, config, grid shape) so repeat shapes land on the
+    /// same host's warm step sessions; 1 keeps the single-host layout.
+    pub shards: usize,
+    /// Result-cache spill file (`--cache-file`): append-only, checksummed,
+    /// replayed on boot so cached results survive restarts. `None` keeps
+    /// the cache memory-only.
+    pub cache_file: Option<String>,
+    /// Per-client steady request rate in requests/second (`--rate-limit`;
+    /// burst 2x). 0 disables rate limiting.
+    pub rate_limit: u64,
+    /// Static bearer token (`--auth-token`); when set, every endpoint but
+    /// `/healthz` requires `Authorization: Bearer <token>`.
+    pub auth_token: Option<String>,
+    /// Smallest N whose `include_arranged` responses stream as chunked
+    /// transfer coding (and bypass the result cache) instead of buffering
+    /// the full body.
+    pub stream_min_n: usize,
 }
 
 impl Default for ServeConfig {
@@ -388,6 +406,11 @@ impl Default for ServeConfig {
             max_body_bytes: 8 << 20,
             keep_alive_secs: 5,
             arranged_max_n: 4096,
+            shards: 1,
+            cache_file: None,
+            rate_limit: 0,
+            auth_token: None,
+            stream_min_n: 4096,
         }
     }
 }
@@ -403,9 +426,19 @@ impl ServeConfig {
             "max_body_bytes" => self.max_body_bytes = value.parse()?,
             "keep_alive_secs" => self.keep_alive_secs = value.parse()?,
             "arranged_max_n" => self.arranged_max_n = value.parse()?,
+            "shards" => self.shards = value.parse::<usize>()?.max(1),
+            "cache_file" => {
+                self.cache_file = (!value.is_empty()).then(|| value.to_string());
+            }
+            "rate_limit" => self.rate_limit = value.parse()?,
+            "auth_token" => {
+                self.auth_token = (!value.is_empty()).then(|| value.to_string());
+            }
+            "stream_min_n" => self.stream_min_n = value.parse()?,
             _ => bail!(
                 "unknown serve config key '{key}' (allowed: addr, workers, cache_mb, \
-                 queue_depth, max_body_bytes, keep_alive_secs, arranged_max_n)"
+                 queue_depth, max_body_bytes, keep_alive_secs, arranged_max_n, shards, \
+                 cache_file, rate_limit, auth_token, stream_min_n)"
             ),
         }
         Ok(())
@@ -696,6 +729,35 @@ mod tests {
         assert!(c.set("workers", "many").is_err());
         let err = c.set("frobnicate", "1").unwrap_err();
         assert!(format!("{err:#}").contains("frobnicate"));
+    }
+
+    #[test]
+    fn serve_config_shard_and_persistence_keys() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.shards, 1);
+        assert_eq!(c.cache_file, None);
+        assert_eq!(c.rate_limit, 0);
+        assert_eq!(c.auth_token, None);
+        assert_eq!(c.stream_min_n, 4096);
+        c.set("shards", "4").unwrap();
+        assert_eq!(c.shards, 4);
+        // 0 shards would mean no engine hosts; clamp to 1 instead.
+        c.set("shards", "0").unwrap();
+        assert_eq!(c.shards, 1);
+        c.set("cache_file", "/tmp/sssort.spill").unwrap();
+        assert_eq!(c.cache_file.as_deref(), Some("/tmp/sssort.spill"));
+        c.set("cache_file", "").unwrap();
+        assert_eq!(c.cache_file, None);
+        c.set("rate_limit", "25").unwrap();
+        assert_eq!(c.rate_limit, 25);
+        c.set("auth_token", "s3cret").unwrap();
+        assert_eq!(c.auth_token.as_deref(), Some("s3cret"));
+        c.set("auth_token", "").unwrap();
+        assert_eq!(c.auth_token, None);
+        c.set("stream_min_n", "8").unwrap();
+        assert_eq!(c.stream_min_n, 8);
+        assert!(c.set("shards", "many").is_err());
+        assert!(c.set("rate_limit", "-2").is_err());
     }
 
     #[test]

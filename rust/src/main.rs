@@ -172,8 +172,9 @@ fn write_outputs(
 }
 
 /// `sssort serve` — put the engine on a socket (see `shufflesort::serve`).
-/// `--addr/--workers/--cache-mb` + bare `k=v` pairs configure the HTTP
-/// side; `--backend/--threads/--artifacts` configure the engine host.
+/// `--addr/--workers/--cache-mb/--shards/--cache-file/--rate-limit/
+/// --auth-token` + bare `k=v` pairs configure the HTTP side;
+/// `--backend/--threads/--artifacts` configure the engine hosts.
 fn cmd_serve(args: &ParsedArgs) -> Result<()> {
     let mut cfg = ServeConfig::default();
     if let Some(addr) = args.opt("addr") {
@@ -181,6 +182,15 @@ fn cmd_serve(args: &ParsedArgs) -> Result<()> {
     }
     cfg.workers = args.opt_usize("workers", cfg.workers)?;
     cfg.cache_mb = args.opt_usize("cache-mb", cfg.cache_mb)?;
+    cfg.shards = args.opt_usize("shards", cfg.shards)?.max(1);
+    if let Some(path) = args.opt("cache-file") {
+        cfg.cache_file = (!path.is_empty()).then(|| path.to_string());
+    }
+    cfg.rate_limit = args.opt_usize("rate-limit", cfg.rate_limit as usize)? as u64;
+    if let Some(token) = args.opt("auth-token") {
+        cfg.auth_token = (!token.is_empty()).then(|| token.to_string());
+    }
+    // Dedicated flags first, bare `k=v` pairs after: overrides win.
     for (k, v) in &args.overrides {
         cfg.set(k, v)?;
     }

@@ -11,9 +11,24 @@
 //! the data itself, plus the canonical (sorted-key JSON) override string
 //! the handler builds — so two requests that differ only in JSON key order
 //! or whitespace share an entry.
+//!
+//! Two robustness properties layered on top:
+//!
+//! - **Poison recovery**: nothing inside the state lock is supposed to
+//!   panic, but if a writer ever does, the next locker recovers the mutex
+//!   (`into_inner` + `clear_poison`) and resets to a *cold* cache rather
+//!   than crashing every subsequent request. A lost cache costs recompute;
+//!   a poisoned `expect` costs the whole serve plane.
+//! - **Persistence** (optional): with a [`Store`] attached, every insert
+//!   is appended to the spill file, so the cache survives restarts. The
+//!   cache tracks the on-disk byte size of its *live* entries
+//!   (`spill_live`) and asks the store to compact once dead bytes (from
+//!   overwrites and evictions) exceed the store's budget.
 
 use std::collections::{BTreeMap, HashMap};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::store::Store;
 
 /// Identity of one sort computation.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -33,6 +48,9 @@ struct Entry {
     body: Arc<String>,
     tick: u64,
     cost: usize,
+    /// On-disk record size for this entry (tracked even without a store,
+    /// so attaching one after replay starts with correct accounting).
+    spill: u64,
 }
 
 struct State {
@@ -41,6 +59,20 @@ struct State {
     lru: BTreeMap<u64, CacheKey>,
     tick: u64,
     bytes: usize,
+    /// Sum of `Entry::spill` over live entries.
+    spill_live: u64,
+}
+
+impl State {
+    fn cold() -> State {
+        State {
+            map: HashMap::new(),
+            lru: BTreeMap::new(),
+            tick: 0,
+            bytes: 0,
+            spill_live: 0,
+        }
+    }
 }
 
 /// Thread-safe LRU over serialized response bodies, bounded by an
@@ -48,6 +80,7 @@ struct State {
 pub struct ResultCache {
     state: Mutex<State>,
     capacity: usize,
+    store: Option<Arc<Store>>,
 }
 
 /// Fixed per-entry overhead charged on top of the string payloads
@@ -57,13 +90,33 @@ const ENTRY_OVERHEAD: usize = 128;
 impl ResultCache {
     pub fn new(capacity_bytes: usize) -> Self {
         ResultCache {
-            state: Mutex::new(State {
-                map: HashMap::new(),
-                lru: BTreeMap::new(),
-                tick: 0,
-                bytes: 0,
-            }),
+            state: Mutex::new(State::cold()),
             capacity: capacity_bytes,
+            store: None,
+        }
+    }
+
+    /// Attach the persistence layer. Call *after* replaying the store's
+    /// boot records into the cache (replaying through an attached store
+    /// would re-append every record it just read).
+    pub fn attach_store(&mut self, store: Arc<Store>) {
+        self.store = Some(store);
+    }
+
+    /// Lock the state, recovering from a poisoned mutex by degrading to a
+    /// cold cache: correctness never depended on the contents (misses just
+    /// recompute), so dropping a possibly half-updated state is strictly
+    /// safer than trusting it — and strictly better than panicking on
+    /// every request forever.
+    fn lock_state(&self) -> MutexGuard<'_, State> {
+        match self.state.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                let mut guard = poisoned.into_inner();
+                *guard = State::cold();
+                self.state.clear_poison();
+                guard
+            }
         }
     }
 
@@ -73,7 +126,7 @@ impl ResultCache {
 
     /// Look up a finished response; a hit refreshes the entry's LRU slot.
     pub fn get(&self, key: &CacheKey) -> Option<Arc<String>> {
-        let mut guard = self.state.lock().expect("cache mutex poisoned");
+        let mut guard = self.lock_state();
         let st = &mut *guard;
         st.tick += 1;
         let fresh = st.tick;
@@ -85,6 +138,43 @@ impl ResultCache {
         Some(body)
     }
 
+    /// Drop `key`'s current entry (if any) from the live maps.
+    fn remove_entry(st: &mut State, key: &CacheKey) {
+        if let Some(old) = st.map.remove(key) {
+            st.lru.remove(&old.tick);
+            st.bytes -= old.cost;
+            st.spill_live -= old.spill;
+        }
+    }
+
+    /// Evict least-recently-used entries until `cost` more bytes fit.
+    fn evict_for(&self, st: &mut State, cost: usize) {
+        while st.bytes + cost > self.capacity {
+            let Some((&oldest, _)) = st.lru.iter().next() else { break };
+            let victim = st.lru.remove(&oldest).expect("lru key just observed");
+            if let Some(e) = st.map.remove(&victim) {
+                st.bytes -= e.cost;
+                st.spill_live -= e.spill;
+            }
+        }
+    }
+
+    /// Record a fresh insert on disk, compacting the spill file when the
+    /// dead bytes left behind by overwrites/evictions exceed its budget.
+    fn persist(&self, st: &mut State, key: &CacheKey, body: &str) {
+        let Some(store) = &self.store else { return };
+        store.append(key, body);
+        if store.needs_compaction(st.spill_live) {
+            // Oldest-first, so a future replay reconstructs LRU recency.
+            let live: Vec<(CacheKey, Arc<String>)> = st
+                .lru
+                .values()
+                .filter_map(|k| st.map.get(k).map(|e| (k.clone(), e.body.clone())))
+                .collect();
+            store.compact(&live);
+        }
+    }
+
     /// Insert (or refresh) a finished response, evicting least-recently
     /// used entries until the byte budget holds. Bodies larger than the
     /// whole budget are simply not cached.
@@ -93,24 +183,20 @@ impl ResultCache {
         if cost > self.capacity {
             return;
         }
-        let mut guard = self.state.lock().expect("cache mutex poisoned");
+        let spill = super::store::record_len(&key, &body);
+        let mut guard = self.lock_state();
         let st = &mut *guard;
-        if let Some(old) = st.map.remove(&key) {
-            st.lru.remove(&old.tick);
-            st.bytes -= old.cost;
-        }
-        while st.bytes + cost > self.capacity {
-            let Some((&oldest, _)) = st.lru.iter().next() else { break };
-            let victim = st.lru.remove(&oldest).expect("lru key just observed");
-            if let Some(e) = st.map.remove(&victim) {
-                st.bytes -= e.cost;
-            }
-        }
+        Self::remove_entry(st, &key);
+        self.evict_for(st, cost);
         st.tick += 1;
         let tick = st.tick;
         st.lru.insert(tick, key.clone());
-        st.map.insert(key, Entry { body, tick, cost });
+        st.spill_live += spill;
         st.bytes += cost;
+        st.map.insert(key.clone(), Entry { body: body.clone(), tick, cost, spill });
+        // Persist after the live maps are updated: a compaction triggered
+        // by this insert must see the entry it just appended.
+        self.persist(st, &key, &body);
     }
 
     /// Atomic "insert unless present": returns the body every response
@@ -121,7 +207,7 @@ impl ResultCache {
     /// replay contract.
     pub fn get_or_put(&self, key: CacheKey, body: Arc<String>) -> Arc<String> {
         let cost = Self::cost(&key, &body);
-        let mut guard = self.state.lock().expect("cache mutex poisoned");
+        let mut guard = self.lock_state();
         let st = &mut *guard;
         st.tick += 1;
         let fresh = st.tick;
@@ -135,22 +221,19 @@ impl ResultCache {
         if cost > self.capacity {
             return body; // not cacheable; still serve the computed result
         }
-        while st.bytes + cost > self.capacity {
-            let Some((&oldest, _)) = st.lru.iter().next() else { break };
-            let victim = st.lru.remove(&oldest).expect("lru key just observed");
-            if let Some(e) = st.map.remove(&victim) {
-                st.bytes -= e.cost;
-            }
-        }
+        self.evict_for(st, cost);
+        let spill = super::store::record_len(&key, &body);
         st.lru.insert(fresh, key.clone());
-        st.map.insert(key, Entry { body: body.clone(), tick: fresh, cost });
+        st.spill_live += spill;
         st.bytes += cost;
+        st.map.insert(key.clone(), Entry { body: body.clone(), tick: fresh, cost, spill });
+        self.persist(st, &key, &body);
         body
     }
 
     /// (entries, approximate bytes) currently held.
     pub fn stats(&self) -> (usize, usize) {
-        let st = self.state.lock().expect("cache mutex poisoned");
+        let st = self.lock_state();
         (st.map.len(), st.bytes)
     }
 }
@@ -250,9 +333,59 @@ mod tests {
     }
 
     #[test]
-    fn row_hash_is_bit_exact() {
-        assert_eq!(hash_rows(&[1.0, 2.0]), hash_rows(&[1.0, 2.0]));
-        assert_ne!(hash_rows(&[1.0, 2.0]), hash_rows(&[2.0, 1.0]));
-        assert_ne!(hash_rows(&[0.0]), hash_rows(&[-0.0]));
+    fn poisoned_mutex_degrades_to_a_cold_cache_instead_of_panicking() {
+        let cache = Arc::new(ResultCache::new(64 * 1024));
+        cache.put(key("warm"), Arc::new("before".to_string()));
+        // Poison the lock the way a buggy writer would: panic while held.
+        let c2 = cache.clone();
+        let poisoner = std::thread::spawn(move || {
+            let _guard = c2.state.lock().unwrap();
+            panic!("deliberate poison for test");
+        });
+        assert!(poisoner.join().is_err());
+        // Every operation keeps working; the cache simply went cold.
+        assert!(cache.get(&key("warm")).is_none(), "cold after recovery");
+        cache.put(key("again"), Arc::new("after".to_string()));
+        assert_eq!(cache.get(&key("again")).unwrap().as_str(), "after");
+        assert_eq!(cache.stats().0, 1);
+    }
+
+    #[test]
+    fn attached_store_persists_inserts_and_compacts_dead_bytes() {
+        let path = std::env::temp_dir().join(format!(
+            "sssort-cache-persist-{}.spill",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        {
+            let (store, replayed) = Store::open(&path).unwrap();
+            assert!(replayed.is_empty());
+            let store = Arc::new(store);
+            let mut cache = ResultCache::new(64 * 1024);
+            cache.attach_store(store.clone());
+            // Overwrite one key enough times that dead bytes blow the
+            // 64 KiB compaction slack; live stays at a single entry.
+            for i in 0..80 {
+                cache.put(key("hot"), Arc::new(format!("{:<2048}", i)));
+            }
+            cache.put(key("side"), Arc::new("kept".to_string()));
+            let v = store.view();
+            assert!(v.compactions >= 1, "overwrites trigger compaction");
+            // ~170 KiB of appends without compaction; well under 64 KiB with.
+            assert!(v.file_bytes < 64 * 1024, "dead bytes reclaimed");
+        }
+        // Boot replay: the file still holds some dead overwrites appended
+        // since the last compaction; replaying through a cache (last write
+        // wins) reconstructs exactly the live state.
+        let (store, replayed) = Store::open(&path).unwrap();
+        assert!(store.view().replayed >= 2);
+        let boot = ResultCache::new(64 * 1024);
+        for (k, b) in replayed {
+            boot.put(k, Arc::new(b));
+        }
+        assert_eq!(boot.stats().0, 2, "live entries survive restart");
+        assert!(boot.get(&key("hot")).unwrap().starts_with("79"));
+        assert_eq!(boot.get(&key("side")).unwrap().as_str(), "kept");
+        let _ = std::fs::remove_file(&path);
     }
 }

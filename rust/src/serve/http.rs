@@ -251,8 +251,14 @@ pub fn read_request(
     Ok(ReadOutcome::Request(req))
 }
 
-/// An HTTP response; always carries an explicit `Content-Length`.
-#[derive(Debug)]
+/// A body producer for streamed responses: called once with the chunk
+/// sink, writes the payload incrementally.
+pub type StreamProducer = Box<dyn FnOnce(&mut dyn Write) -> std::io::Result<()> + Send>;
+
+/// An HTTP response. Buffered responses carry an explicit
+/// `Content-Length`; a response with a [`StreamProducer`] attached is sent
+/// with `Transfer-Encoding: chunked` instead, its body produced
+/// incrementally (large `arranged` payloads never materialize in memory).
 pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
@@ -261,6 +267,20 @@ pub struct Response {
     pub extra_headers: Vec<(String, String)>,
     /// When set, the connection closes after this response.
     pub close: bool,
+    /// When set, `body` is ignored and the producer streams the payload.
+    stream: Option<StreamProducer>,
+}
+
+impl std::fmt::Debug for Response {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Response")
+            .field("status", &self.status)
+            .field("content_type", &self.content_type)
+            .field("body_len", &self.body.len())
+            .field("streamed", &self.stream.is_some())
+            .field("close", &self.close)
+            .finish()
+    }
 }
 
 impl Response {
@@ -271,6 +291,7 @@ impl Response {
             body: body.into_bytes(),
             extra_headers: Vec::new(),
             close: false,
+            stream: None,
         }
     }
 
@@ -281,6 +302,23 @@ impl Response {
             body: body.into_bytes(),
             extra_headers: Vec::new(),
             close: false,
+            stream: None,
+        }
+    }
+
+    /// A chunked-transfer response whose body comes from `producer`.
+    pub fn streamed(
+        status: u16,
+        content_type: &'static str,
+        producer: StreamProducer,
+    ) -> Response {
+        Response {
+            status,
+            content_type,
+            body: Vec::new(),
+            extra_headers: Vec::new(),
+            close: false,
+            stream: Some(producer),
         }
     }
 
@@ -289,15 +327,28 @@ impl Response {
         self
     }
 
-    pub fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+    /// Detach the stream producer (used by `write_to`, and by tests that
+    /// drive the producer against an in-memory sink).
+    pub fn take_stream(&mut self) -> Option<StreamProducer> {
+        self.stream.take()
+    }
+
+    pub fn write_to(&mut self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let producer = self.stream.take();
         let mut head = format!(
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\n",
             self.status,
             reason(self.status),
             self.content_type,
-            self.body.len(),
-            if self.close { "close" } else { "keep-alive" },
         );
+        match &producer {
+            None => head.push_str(&format!("Content-Length: {}\r\n", self.body.len())),
+            Some(_) => head.push_str("Transfer-Encoding: chunked\r\n"),
+        }
+        head.push_str(&format!(
+            "Connection: {}\r\n",
+            if self.close { "close" } else { "keep-alive" },
+        ));
         for (k, v) in &self.extra_headers {
             head.push_str(k);
             head.push_str(": ");
@@ -306,7 +357,14 @@ impl Response {
         }
         head.push_str("\r\n");
         stream.write_all(head.as_bytes())?;
-        stream.write_all(&self.body)?;
+        match producer {
+            None => stream.write_all(&self.body)?,
+            Some(p) => {
+                let mut sink = super::stream::ChunkSink::new(stream);
+                p(&mut sink)?;
+                sink.finish()?;
+            }
+        }
         stream.flush()
     }
 }
@@ -316,10 +374,12 @@ pub fn reason(status: u16) -> &'static str {
     match status {
         200 => "OK",
         400 => "Bad Request",
+        401 => "Unauthorized",
         404 => "Not Found",
         405 => "Method Not Allowed",
         408 => "Request Timeout",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         _ => "",
@@ -449,5 +509,37 @@ mod tests {
         assert!(text.contains("X-Cache: hit\r\n"), "{text}");
         assert!(text.contains("Connection: close\r\n"), "{text}");
         assert!(text.ends_with("{\"ok\":true}"), "{text}");
+    }
+
+    #[test]
+    fn streamed_response_serializes_with_chunked_framing() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut buf = Vec::new();
+            s.read_to_end(&mut buf).unwrap();
+            String::from_utf8(buf).unwrap()
+        });
+        let (mut server, _) = listener.accept().unwrap();
+        let mut resp = Response::streamed(
+            200,
+            "application/json",
+            Box::new(|w| {
+                w.write_all(b"hello ")?;
+                w.write_all(b"world")
+            }),
+        )
+        .with_header("X-Cache", "bypass");
+        resp.close = true;
+        resp.write_to(&mut server).unwrap();
+        drop(server);
+        let text = client.join().unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Transfer-Encoding: chunked\r\n"), "{text}");
+        assert!(!text.contains("Content-Length"), "{text}");
+        assert!(text.contains("X-Cache: bypass\r\n"), "{text}");
+        // 11 bytes buffered into one chunk (0xb), then the terminator.
+        assert!(text.ends_with("\r\n\r\nb\r\nhello world\r\n0\r\n\r\n"), "{text}");
     }
 }

@@ -1,0 +1,122 @@
+//! Per-client token-bucket rate limiting for the serve listener.
+//!
+//! One bucket per peer IP: capacity `burst = max(2·rate, 1)` tokens,
+//! refilled continuously at `rate` tokens/second. Each request spends one
+//! token; an empty bucket answers `429 Too Many Requests`. The shape is
+//! deliberately forgiving — a client may burst to twice its steady rate
+//! after a quiet spell, and a single misbehaving client never starves the
+//! others (its bucket, its problem).
+//!
+//! `/healthz` is exempt at the call site: load-balancer probes must never
+//! be throttled into marking a healthy instance down.
+
+use std::collections::HashMap;
+use std::net::IpAddr;
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Stop tracking peers beyond this many buckets; on overflow, buckets idle
+/// for a minute are dropped first (a refilled-idle bucket reconstructs
+/// identically, so forgetting one is harmless).
+const MAX_CLIENTS: usize = 4096;
+const IDLE_EVICT_SECS: u64 = 60;
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+pub struct RateLimiter {
+    rate: f64,
+    burst: f64,
+    buckets: Mutex<HashMap<IpAddr, Bucket>>,
+}
+
+impl RateLimiter {
+    /// `rate_per_sec` is the steady-state allowance (an integer so the
+    /// config stays `Eq`); callers gate on `rate_limit > 0` before
+    /// constructing one.
+    pub fn new(rate_per_sec: u64) -> Self {
+        let rate = rate_per_sec as f64;
+        RateLimiter { rate, burst: (2.0 * rate).max(1.0), buckets: Mutex::new(HashMap::new()) }
+    }
+
+    fn lock_buckets(&self) -> MutexGuard<'_, HashMap<IpAddr, Bucket>> {
+        // Bucket math can't panic, but recover rather than propagate: rate
+        // limiting must never be the thing that takes the listener down.
+        self.buckets.lock().unwrap_or_else(|poisoned| {
+            self.buckets.clear_poison();
+            poisoned.into_inner()
+        })
+    }
+
+    /// Spend one token from `peer`'s bucket at time `now` (injected for
+    /// testability). `true` = admit, `false` = throttle.
+    pub fn allow(&self, peer: IpAddr, now: Instant) -> bool {
+        let mut buckets = self.lock_buckets();
+        if buckets.len() >= MAX_CLIENTS && !buckets.contains_key(&peer) {
+            let idle = std::time::Duration::from_secs(IDLE_EVICT_SECS);
+            buckets.retain(|_, b| now.saturating_duration_since(b.last) < idle);
+        }
+        let bucket = buckets
+            .entry(peer)
+            .or_insert(Bucket { tokens: self.burst, last: now });
+        let dt = now.saturating_duration_since(bucket.last).as_secs_f64();
+        bucket.tokens = (bucket.tokens + dt * self.rate).min(self.burst);
+        bucket.last = now;
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::Ipv4Addr;
+    use std::time::Duration;
+
+    fn ip(last: u8) -> IpAddr {
+        IpAddr::V4(Ipv4Addr::new(10, 0, 0, last))
+    }
+
+    #[test]
+    fn burst_then_throttle_then_refill() {
+        let limiter = RateLimiter::new(2); // burst 4
+        let t0 = Instant::now();
+        for i in 0..4 {
+            assert!(limiter.allow(ip(1), t0), "burst request {i} admitted");
+        }
+        assert!(!limiter.allow(ip(1), t0), "empty bucket throttles");
+        // 1 second at rate 2 → two tokens back.
+        let t1 = t0 + Duration::from_secs(1);
+        assert!(limiter.allow(ip(1), t1));
+        assert!(limiter.allow(ip(1), t1));
+        assert!(!limiter.allow(ip(1), t1));
+    }
+
+    #[test]
+    fn buckets_are_per_client() {
+        let limiter = RateLimiter::new(1); // burst 2
+        let t0 = Instant::now();
+        assert!(limiter.allow(ip(1), t0));
+        assert!(limiter.allow(ip(1), t0));
+        assert!(!limiter.allow(ip(1), t0), "client 1 exhausted");
+        assert!(limiter.allow(ip(2), t0), "client 2 unaffected");
+    }
+
+    #[test]
+    fn refill_caps_at_burst() {
+        let limiter = RateLimiter::new(1); // burst 2
+        let t0 = Instant::now();
+        assert!(limiter.allow(ip(1), t0));
+        // A long quiet spell refills to burst (2), not unbounded.
+        let t1 = t0 + Duration::from_secs(3600);
+        assert!(limiter.allow(ip(1), t1));
+        assert!(limiter.allow(ip(1), t1));
+        assert!(!limiter.allow(ip(1), t1));
+    }
+}

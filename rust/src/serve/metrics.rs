@@ -5,6 +5,11 @@
 //! Counter updates sit on the request hot path, so they are plain relaxed
 //! atomics; the only lock is the method-name → histogram map, taken just
 //! long enough to clone an `Arc` (bucket increments happen outside it).
+//!
+//! Gauge-style state (cache size, per-shard queue depth/warmth, spill-file
+//! counters) lives in the subsystems that own it; the handler snapshots it
+//! into a [`ServeView`] per scrape and passes that in, keeping `Metrics`
+//! free of references into the rest of the server.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -12,6 +17,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::json::{arr, num, obj, Json};
+use super::store::PersistView;
 
 /// Histogram bucket upper bounds, in seconds (plus an implicit +Inf).
 pub const BUCKET_BOUNDS: [f64; 12] =
@@ -62,6 +68,30 @@ impl Histogram {
     }
 }
 
+/// Point-in-time state of one shard, snapshotted per `/metrics` scrape.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardView {
+    pub id: usize,
+    pub alive: bool,
+    pub queue_depth: usize,
+    pub jobs: u64,
+    /// `(n, d, h)` step sessions memoized on the shard's engine — the
+    /// warmth the affinity hash exists to preserve.
+    pub memo_entries: u64,
+}
+
+/// Everything gauge-like the handler snapshots for one scrape.
+#[derive(Default)]
+pub struct ServeView {
+    pub cache_entries: usize,
+    pub cache_bytes: usize,
+    /// Jobs queued (not yet popped) across every shard.
+    pub queue_depth: usize,
+    pub shards: Vec<ShardView>,
+    /// `None` when the server runs without `--cache-file`.
+    pub persist: Option<PersistView>,
+}
+
 /// All live counters for one server instance.
 pub struct Metrics {
     pub requests: AtomicU64,
@@ -70,8 +100,8 @@ pub struct Metrics {
     pub responses_5xx: AtomicU64,
     pub cache_hits: AtomicU64,
     pub cache_misses: AtomicU64,
-    /// Jobs actually executed by the engine host (cache hits never reach
-    /// it — the "zero extra Engine steps on a repeat request" check).
+    /// Jobs actually executed by the engine hosts (cache hits never reach
+    /// them — the "zero extra Engine steps on a repeat request" check).
     pub engine_jobs: AtomicU64,
     /// Sum over engine-executed sorts of their per-phase tile count
     /// (`RunReport::tiles`: B for a tiled ShuffleSoftSort run, 1 for the
@@ -79,6 +109,12 @@ pub struct Metrics {
     /// observable that tiled requests really ran tiled.
     pub phase_tiles: AtomicU64,
     pub queue_rejections: AtomicU64,
+    /// Jobs that landed on a non-home shard (home saturated or dead).
+    pub shard_steals: AtomicU64,
+    /// Requests refused with 429 by the token-bucket limiter.
+    pub rate_limited: AtomicU64,
+    /// Requests refused with 401 (missing or wrong bearer token).
+    pub auth_failures: AtomicU64,
     latency: Mutex<BTreeMap<String, Arc<Histogram>>>,
     started: Instant,
 }
@@ -101,6 +137,9 @@ impl Metrics {
             engine_jobs: AtomicU64::new(0),
             phase_tiles: AtomicU64::new(0),
             queue_rejections: AtomicU64::new(0),
+            shard_steals: AtomicU64::new(0),
+            rate_limited: AtomicU64::new(0),
+            auth_failures: AtomicU64::new(0),
             latency: Mutex::new(BTreeMap::new()),
             started: Instant::now(),
         }
@@ -119,20 +158,50 @@ impl Metrics {
     /// Record one engine-executed sort's wall time under its method name.
     pub fn observe(&self, method: &str, secs: f64) {
         let hist = {
-            let mut map = self.latency.lock().expect("metrics mutex poisoned");
+            let mut map = self.lock_latency();
             map.entry(method.to_string()).or_default().clone()
         };
         hist.observe(secs);
+    }
+
+    /// Latency-map lock with poison recovery: the map's invariants are a
+    /// `BTreeMap` of `Arc`s, valid whatever a panicking holder was doing.
+    fn lock_latency(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Arc<Histogram>>> {
+        self.latency.lock().unwrap_or_else(|poisoned| {
+            self.latency.clear_poison();
+            poisoned.into_inner()
+        })
     }
 
     fn load(counter: &AtomicU64) -> u64 {
         counter.load(Ordering::Relaxed)
     }
 
+    fn shard_json(s: &ShardView) -> Json {
+        obj([
+            ("id", Json::from(s.id)),
+            ("alive", Json::from(s.alive)),
+            ("queue_depth", Json::from(s.queue_depth)),
+            ("jobs", Json::from(s.jobs)),
+            ("session_memo_entries", Json::from(s.memo_entries)),
+        ])
+    }
+
+    fn persist_json(p: &PersistView) -> Json {
+        obj([
+            ("appends", Json::from(p.appends)),
+            ("replayed", Json::from(p.replayed)),
+            ("compactions", Json::from(p.compactions)),
+            ("corrupt_dropped", Json::from(p.corrupt_dropped)),
+            ("errors", Json::from(p.errors)),
+            ("file_bytes", Json::from(p.file_bytes)),
+        ])
+    }
+
     /// JSON view (served by default from `GET /metrics`).
-    pub fn to_json(&self, cache_entries: usize, cache_bytes: usize, queue_depth: usize) -> Json {
+    pub fn to_json(&self, view: &ServeView) -> Json {
         let latency = {
-            let map = self.latency.lock().expect("metrics mutex poisoned");
+            let map = self.lock_latency();
             let per_method: Vec<(String, Json)> = map
                 .iter()
                 .map(|(name, h)| {
@@ -169,23 +238,36 @@ impl Metrics {
                 ]),
             ),
             (
+                "listener",
+                obj([
+                    ("rate_limited", Json::from(Self::load(&self.rate_limited))),
+                    ("auth_failures", Json::from(Self::load(&self.auth_failures))),
+                ]),
+            ),
+            (
                 "cache",
                 obj([
                     ("hits", Json::from(Self::load(&self.cache_hits))),
                     ("misses", Json::from(Self::load(&self.cache_misses))),
-                    ("entries", Json::from(cache_entries)),
-                    ("bytes", Json::from(cache_bytes)),
+                    ("entries", Json::from(view.cache_entries)),
+                    ("bytes", Json::from(view.cache_bytes)),
                 ]),
+            ),
+            (
+                "cache_persist",
+                view.persist.as_ref().map(Self::persist_json).unwrap_or(Json::Null),
             ),
             (
                 "engine",
                 obj([
                     ("jobs", Json::from(Self::load(&self.engine_jobs))),
                     ("phase_tiles", Json::from(Self::load(&self.phase_tiles))),
-                    ("queue_depth", Json::from(queue_depth)),
+                    ("queue_depth", Json::from(view.queue_depth)),
                     ("queue_rejections", Json::from(Self::load(&self.queue_rejections))),
+                    ("shard_steals", Json::from(Self::load(&self.shard_steals))),
                 ]),
             ),
+            ("shards", arr(view.shards.iter().map(Self::shard_json))),
             ("latency_seconds_bucket_bounds", arr(BUCKET_BOUNDS.iter().map(|&b| num(b)))),
             ("latency", latency),
         ])
@@ -193,12 +275,7 @@ impl Metrics {
 
     /// Prometheus text exposition (`GET /metrics?format=prometheus`, or an
     /// `Accept: text/plain` header).
-    pub fn to_prometheus(
-        &self,
-        cache_entries: usize,
-        cache_bytes: usize,
-        queue_depth: usize,
-    ) -> String {
+    pub fn to_prometheus(&self, view: &ServeView) -> String {
         let mut out = String::new();
         let mut metric = |name: &str, kind: &str, value: u64| {
             out.push_str(&format!("# TYPE sssort_{name} {kind}\nsssort_{name} {value}\n"));
@@ -209,9 +286,38 @@ impl Metrics {
         metric("engine_jobs_total", "counter", Self::load(&self.engine_jobs));
         metric("phase_tiles_total", "counter", Self::load(&self.phase_tiles));
         metric("queue_rejections_total", "counter", Self::load(&self.queue_rejections));
-        metric("cache_entries", "gauge", cache_entries as u64);
-        metric("cache_bytes", "gauge", cache_bytes as u64);
-        metric("queue_depth", "gauge", queue_depth as u64);
+        metric("shard_steals_total", "counter", Self::load(&self.shard_steals));
+        metric("rate_limited_total", "counter", Self::load(&self.rate_limited));
+        metric("auth_failures_total", "counter", Self::load(&self.auth_failures));
+        metric("cache_entries", "gauge", view.cache_entries as u64);
+        metric("cache_bytes", "gauge", view.cache_bytes as u64);
+        metric("queue_depth", "gauge", view.queue_depth as u64);
+        if let Some(p) = &view.persist {
+            metric("cache_persist_appends_total", "counter", p.appends);
+            metric("cache_persist_replayed_total", "counter", p.replayed);
+            metric("cache_persist_compactions_total", "counter", p.compactions);
+            metric("cache_persist_corrupt_dropped_total", "counter", p.corrupt_dropped);
+            metric("cache_persist_errors_total", "counter", p.errors);
+            metric("cache_persist_file_bytes", "gauge", p.file_bytes);
+        }
+        if !view.shards.is_empty() {
+            let families: [(&str, &str, fn(&ShardView) -> u64); 4] = [
+                ("shard_jobs_total", "counter", |s: &ShardView| s.jobs),
+                ("shard_queue_depth", "gauge", |s: &ShardView| s.queue_depth as u64),
+                ("shard_session_memo_entries", "gauge", |s: &ShardView| s.memo_entries),
+                ("shard_alive", "gauge", |s: &ShardView| s.alive as u64),
+            ];
+            for (name, kind, value) in families {
+                out.push_str(&format!("# TYPE sssort_{name} {kind}\n"));
+                for s in &view.shards {
+                    out.push_str(&format!(
+                        "sssort_{name}{{shard=\"{}\"}} {}\n",
+                        s.id,
+                        value(s)
+                    ));
+                }
+            }
+        }
         out.push_str("# TYPE sssort_responses_total counter\n");
         for (class, counter) in [
             ("2xx", &self.responses_2xx),
@@ -228,7 +334,7 @@ impl Metrics {
             self.started.elapsed().as_secs_f64()
         ));
         out.push_str("# TYPE sssort_sort_duration_seconds histogram\n");
-        let map = self.latency.lock().expect("metrics mutex poisoned");
+        let map = self.lock_latency();
         for (name, h) in map.iter() {
             let (buckets, sum, count) = h.snapshot();
             let mut cum = 0u64;
@@ -275,6 +381,26 @@ mod tests {
         assert_eq!(Histogram::quantile_bound(&[0; 13], 0, 0.5), None);
     }
 
+    fn view_with_shards() -> ServeView {
+        ServeView {
+            cache_entries: 5,
+            cache_bytes: 1234,
+            queue_depth: 0,
+            shards: vec![
+                ShardView { id: 0, alive: true, queue_depth: 0, jobs: 7, memo_entries: 2 },
+                ShardView { id: 1, alive: false, queue_depth: 3, jobs: 4, memo_entries: 1 },
+            ],
+            persist: Some(PersistView {
+                appends: 11,
+                replayed: 6,
+                compactions: 1,
+                corrupt_dropped: 0,
+                errors: 0,
+                file_bytes: 4096,
+            }),
+        }
+    }
+
     #[test]
     fn json_and_prometheus_views_agree_on_counters() {
         let m = Metrics::new();
@@ -286,7 +412,8 @@ mod tests {
         m.status(404);
         m.observe("softsort", 0.002);
 
-        let j = m.to_json(5, 1234, 0);
+        let view = view_with_shards();
+        let j = m.to_json(&view);
         assert_eq!(j.get("requests_total").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("cache").unwrap().get("hits").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("engine").unwrap().get("jobs").unwrap().as_usize(), Some(2));
@@ -296,7 +423,7 @@ mod tests {
             Some(1)
         );
 
-        let text = m.to_prometheus(5, 1234, 0);
+        let text = m.to_prometheus(&view);
         assert!(text.contains("sssort_requests_total 3"), "{text}");
         assert!(text.contains("sssort_cache_hits_total 1"), "{text}");
         assert!(text.contains("sssort_phase_tiles_total 9"), "{text}");
@@ -305,5 +432,49 @@ mod tests {
             text.contains("sssort_sort_duration_seconds_bucket{method=\"softsort\",le=\"+Inf\"} 1"),
             "{text}"
         );
+    }
+
+    #[test]
+    fn shard_gauges_and_persist_counters_appear_in_both_views() {
+        let m = Metrics::new();
+        m.shard_steals.fetch_add(2, Ordering::Relaxed);
+        m.rate_limited.fetch_add(5, Ordering::Relaxed);
+        m.auth_failures.fetch_add(1, Ordering::Relaxed);
+        let view = view_with_shards();
+
+        let j = m.to_json(&view);
+        let shards = j.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].get("jobs").unwrap().as_usize(), Some(7));
+        assert_eq!(shards[0].get("session_memo_entries").unwrap().as_usize(), Some(2));
+        assert_eq!(shards[1].get("alive").unwrap().as_bool(), Some(false));
+        assert_eq!(shards[1].get("queue_depth").unwrap().as_usize(), Some(3));
+        let persist = j.get("cache_persist").unwrap();
+        assert_eq!(persist.get("appends").unwrap().as_usize(), Some(11));
+        assert_eq!(persist.get("replayed").unwrap().as_usize(), Some(6));
+        assert_eq!(persist.get("compactions").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("engine").unwrap().get("shard_steals").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("listener").unwrap().get("rate_limited").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("listener").unwrap().get("auth_failures").unwrap().as_usize(), Some(1));
+
+        let text = m.to_prometheus(&view);
+        assert!(text.contains("sssort_shard_jobs_total{shard=\"0\"} 7"), "{text}");
+        assert!(text.contains("sssort_shard_jobs_total{shard=\"1\"} 4"), "{text}");
+        assert!(text.contains("sssort_shard_queue_depth{shard=\"1\"} 3"), "{text}");
+        assert!(text.contains("sssort_shard_session_memo_entries{shard=\"0\"} 2"), "{text}");
+        assert!(text.contains("sssort_shard_alive{shard=\"1\"} 0"), "{text}");
+        assert!(text.contains("sssort_cache_persist_appends_total 11"), "{text}");
+        assert!(text.contains("sssort_cache_persist_replayed_total 6"), "{text}");
+        assert!(text.contains("sssort_cache_persist_file_bytes 4096"), "{text}");
+        assert!(text.contains("sssort_shard_steals_total 2"), "{text}");
+        assert!(text.contains("sssort_rate_limited_total 5"), "{text}");
+        assert!(text.contains("sssort_auth_failures_total 1"), "{text}");
+
+        // Without persistence the JSON slot is null and the Prometheus
+        // family is absent entirely.
+        let bare = ServeView { persist: None, ..view_with_shards() };
+        let j = m.to_json(&bare);
+        assert!(matches!(j.get("cache_persist"), Some(Json::Null)));
+        assert!(!m.to_prometheus(&bare).contains("cache_persist"), "no spurious family");
     }
 }

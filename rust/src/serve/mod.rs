@@ -9,43 +9,64 @@
 //! Architecture (one [`Server`]):
 //!
 //! ```text
-//!   N http worker threads ──► parse → LRU result cache ──hit──► reply
-//!        (http.rs)                        (cache.rs)
-//!                                            │ miss
-//!                                            ▼
-//!                                   bounded job queue (queue.rs)
-//!                                            │
-//!                                            ▼
-//!                              1 engine host thread, 1 shared Engine
-//!                     (step-session memoization + `--threads` row budget)
+//!   N http worker threads ──► auth + rate limit (limit.rs)
+//!        (http.rs)                   │
+//!                                    ▼
+//!                          parse → LRU result cache ──hit──► reply
+//!                                     (cache.rs ⇄ store.rs spill file)
+//!                                         │ miss
+//!                                         ▼
+//!                        affinity hash → shard router (shard.rs)
+//!                            │ home shard (steal on saturation)
+//!                  ┌─────────┼─────────┐
+//!                  ▼         ▼         ▼
+//!              sub-queue  sub-queue  sub-queue     (queue.rs)
+//!                  │         │         │
+//!                  ▼         ▼         ▼
+//!               host 0    host 1    host K-1   — one Engine each, warm
+//!             (step-session memoization + `--threads` row budget)
 //! ```
 //!
 //! * Sorts are pure functions of `(method, canonical overrides, data,
 //!   grid)`, so the cache replays the exact serialized body of the first
 //!   computation — bit-identical, zero extra Engine steps (observable on
-//!   `/metrics` as `cache.hits` vs `engine.jobs`).
-//! * Concurrency comes from the HTTP workers and in-sort row parallelism,
-//!   not from racing sorts against each other: the single engine host
-//!   keeps results bit-identical to sequential `Engine::sort` and keeps
-//!   `workers × threads` from oversubscribing the machine.
+//!   `/metrics` as `cache.hits` vs `engine.jobs`). With `--cache-file`
+//!   the cache spills to an append-only checksummed file and survives
+//!   restarts (store.rs).
+//! * Concurrency comes from the HTTP workers, in-sort row parallelism,
+//!   and the `--shards` engine-host pool. Determinism is unaffected:
+//!   sorts are pure, so *which* host computes a result never changes its
+//!   bytes. Jobs route by a hash of (method, canonical overrides, grid)
+//!   so repeat shapes land on their home shard's warm step sessions;
+//!   saturation work-steals to a sibling, and a dead shard only degrades
+//!   capacity (shard.rs).
+//! * Large `arranged` payloads (above `stream_min_n`) stream as chunked
+//!   transfer coding instead of materializing in memory (stream.rs).
 //! * Shutdown is graceful: SIGINT (or [`Server::shutdown`]) flips a flag;
-//!   workers stop accepting, in-flight requests finish, the queue drains,
-//!   the engine host exits.
+//!   workers stop accepting, in-flight requests finish, the sub-queues
+//!   drain, the engine hosts exit.
 //!
 //! Endpoints: `POST /v1/sort`, `POST /v1/sort_batch`, `GET /v1/methods`
 //! (registry-driven, reflects plugin methods), `GET /healthz`,
 //! `GET /metrics` (JSON, or Prometheus text via `?format=prometheus` /
 //! `Accept: text/plain`). Errors are JSON bodies with matching 4xx/5xx
-//! statuses. See README §Serving for `curl` examples.
+//! statuses. With `--auth-token` every endpoint except `/healthz`
+//! requires `Authorization: Bearer <token>`; `--rate-limit` adds a
+//! per-client token bucket. See README §Serving for `curl` examples.
 
 pub mod cache;
 pub mod http;
 pub mod json;
+pub mod limit;
 pub mod metrics;
 pub mod queue;
+pub mod shard;
+pub mod store;
+pub mod stream;
 
 use std::io::BufReader;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
@@ -62,8 +83,11 @@ use crate::grid::GridShape;
 use cache::{hash_rows, CacheKey, ResultCache};
 use http::{HttpError, ReadOutcome, Request, Response};
 use json::{arr, num, obj, Json};
-use metrics::Metrics;
-use queue::{BatchJob, Bounded, EngineError, Job, PushError, SortJob};
+use limit::RateLimiter;
+use metrics::{Metrics, ServeView};
+use queue::{BatchJob, EngineError, Job, PushError, SortJob};
+use shard::ShardPool;
+use store::Store;
 
 /// Largest grid the service will sort (memory guard: a Gumbel-Sinkhorn
 /// request is O(N²) state).
@@ -146,7 +170,13 @@ impl ApiError {
     }
 
     fn response(&self) -> Response {
-        Response::json(self.status, error_body(self.status, &self.message))
+        let resp = Response::json(self.status, error_body(self.status, &self.message));
+        if self.status == 401 {
+            // RFC 7235: a 401 must name the expected scheme.
+            resp.with_header("WWW-Authenticate", "Bearer")
+        } else {
+            resp
+        }
     }
 }
 
@@ -165,7 +195,9 @@ struct Ctx {
     backend: BackendChoice,
     metrics: Arc<Metrics>,
     cache: Arc<ResultCache>,
-    queue: Arc<Bounded<Job>>,
+    pool: Arc<ShardPool>,
+    store: Option<Arc<Store>>,
+    limiter: Option<RateLimiter>,
 }
 
 /// A running server; dropping it shuts it down.
@@ -173,8 +205,8 @@ pub struct Server {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
     workers: Vec<JoinHandle<()>>,
-    engine: Option<JoinHandle<()>>,
-    queue: Arc<Bounded<Job>>,
+    pool: Arc<ShardPool>,
+    hosts: Vec<JoinHandle<()>>,
 }
 
 impl Server {
@@ -183,8 +215,20 @@ impl Server {
         self.addr
     }
 
+    /// Number of engine shards this server was started with.
+    pub fn shard_count(&self) -> usize {
+        self.pool.shard_count()
+    }
+
+    /// Chaos/test hook: mark shard `idx` dead and close its sub-queue, as
+    /// a shard panic would. Traffic homed there steals to siblings; the
+    /// server keeps answering at reduced capacity.
+    pub fn kill_shard(&self, idx: usize) {
+        self.pool.kill(idx);
+    }
+
     /// Graceful stop: stop accepting, finish in-flight requests, drain the
-    /// queue, join every thread.
+    /// sub-queues, join every thread.
     pub fn shutdown(mut self) {
         self.stop();
     }
@@ -194,11 +238,11 @@ impl Server {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        // Workers are gone: nothing can enqueue anymore; let the engine
+        // Workers are gone: nothing can enqueue anymore; let each engine
         // host drain what is left, then exit.
-        self.queue.close();
-        if let Some(e) = self.engine.take() {
-            let _ = e.join();
+        self.pool.close_all();
+        for h in self.hosts.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -209,7 +253,7 @@ impl Drop for Server {
     }
 }
 
-/// Bind, spawn the engine host + HTTP workers, return immediately.
+/// Bind, spawn the engine-shard pool + HTTP workers, return immediately.
 pub fn start(cfg: ServeConfig, spec: EngineSpec) -> Result<Server> {
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("binding serve address {}", cfg.addr))?;
@@ -219,14 +263,28 @@ pub fn start(cfg: ServeConfig, spec: EngineSpec) -> Result<Server> {
 
     let shutdown = Arc::new(AtomicBool::new(false));
     let metrics = Arc::new(Metrics::new());
-    let cache = Arc::new(ResultCache::new(
+    let mut cache = ResultCache::new(
         cfg.cache_mb.saturating_mul(1024 * 1024).max(64 * 1024),
-    ));
-    let queue: Arc<Bounded<Job>> = Arc::new(Bounded::new(cfg.queue_depth));
+    );
+    let mut store = None;
+    if let Some(path) = &cfg.cache_file {
+        let (s, replayed) = Store::open(Path::new(path))
+            .with_context(|| format!("opening cache spill file {path}"))?;
+        let s = Arc::new(s);
+        // Replay BEFORE attaching: boot records must not be re-appended.
+        for (key, body) in replayed {
+            cache.put(key, Arc::new(body));
+        }
+        cache.attach_store(s.clone());
+        store = Some(s);
+    }
+    let cache = Arc::new(cache);
 
     let registry = spec.registry;
     let backend = spec.backend;
-    let engine = queue::spawn_engine_host(spec, queue.clone(), metrics.clone());
+    let (pool, hosts) =
+        ShardPool::start(spec, cfg.shards, cfg.queue_depth, metrics.clone());
+    let limiter = (cfg.rate_limit > 0).then(|| RateLimiter::new(cfg.rate_limit));
 
     let ctx = Arc::new(Ctx {
         cfg: cfg.clone(),
@@ -234,7 +292,9 @@ pub fn start(cfg: ServeConfig, spec: EngineSpec) -> Result<Server> {
         backend,
         metrics,
         cache,
-        queue: queue.clone(),
+        pool: pool.clone(),
+        store,
+        limiter,
     });
     let mut workers = Vec::with_capacity(cfg.workers.max(1));
     for i in 0..cfg.workers.max(1) {
@@ -248,7 +308,7 @@ pub fn start(cfg: ServeConfig, spec: EngineSpec) -> Result<Server> {
                 .context("spawning http worker")?,
         );
     }
-    Ok(Server { addr, shutdown, workers, engine: Some(engine), queue })
+    Ok(Server { addr, shutdown, workers, pool, hosts })
 }
 
 /// CLI entry point: start, print where we listen, block until SIGINT,
@@ -258,9 +318,10 @@ pub fn run(cfg: ServeConfig, spec: EngineSpec) -> Result<()> {
     let backend = spec.backend;
     let server = start(cfg, spec)?;
     println!(
-        "serving on http://{} ({} http workers, backend {}, ctrl-c to stop)",
+        "serving on http://{} ({} http workers, {} engine shard(s), backend {}, ctrl-c to stop)",
         server.addr(),
         workers,
+        server.shard_count(),
         backend
     );
     sigint::install();
@@ -308,8 +369,8 @@ mod sigint {
 fn worker_loop(listener: TcpListener, ctx: Arc<Ctx>, shutdown: Arc<AtomicBool>) {
     while !shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
-            Ok((stream, _peer)) => {
-                let _ = handle_connection(stream, &ctx, &shutdown);
+            Ok((stream, peer)) => {
+                let _ = handle_connection(stream, peer.ip(), &ctx, &shutdown);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(15));
@@ -321,6 +382,7 @@ fn worker_loop(listener: TcpListener, ctx: Arc<Ctx>, shutdown: Arc<AtomicBool>) 
 
 fn handle_connection(
     stream: TcpStream,
+    peer: IpAddr,
     ctx: &Ctx,
     shutdown: &AtomicBool,
 ) -> std::io::Result<()> {
@@ -350,7 +412,7 @@ fn handle_connection(
             }
             Ok(ReadOutcome::Request(req)) => {
                 idle_since = Instant::now();
-                let mut resp = handle(ctx, &req);
+                let mut resp = handle(ctx, &req, peer);
                 if !req.keep_alive() || shutdown.load(Ordering::SeqCst) {
                     resp.close = true;
                 }
@@ -393,11 +455,49 @@ fn handle_connection(
 // Routing + endpoints.
 // ---------------------------------------------------------------------------
 
-fn handle(ctx: &Ctx, req: &Request) -> Response {
+fn handle(ctx: &Ctx, req: &Request, peer: IpAddr) -> Response {
     ctx.metrics.requests.fetch_add(1, Ordering::Relaxed);
-    let resp = route(ctx, req).unwrap_or_else(|e| e.response());
+    let resp = gate(ctx, req, peer)
+        .and_then(|()| route(ctx, req))
+        .unwrap_or_else(|e| e.response());
     ctx.metrics.status(resp.status);
     resp
+}
+
+/// Listener-level admission: per-client rate limit, then bearer auth.
+/// `/healthz` is exempt from both — load-balancer and orchestrator probes
+/// must keep working with no credentials and at any poll frequency.
+fn gate(ctx: &Ctx, req: &Request, peer: IpAddr) -> Result<(), ApiError> {
+    if req.path == "/healthz" {
+        return Ok(());
+    }
+    if let Some(limiter) = &ctx.limiter {
+        if !limiter.allow(peer, Instant::now()) {
+            ctx.metrics.rate_limited.fetch_add(1, Ordering::Relaxed);
+            return Err(ApiError {
+                status: 429,
+                message: format!(
+                    "rate limit exceeded ({}/s steady, 2x burst) — retry later",
+                    ctx.cfg.rate_limit
+                ),
+            });
+        }
+    }
+    if let Some(token) = &ctx.cfg.auth_token {
+        let ok = req.header("authorization").is_some_and(|v| {
+            v.trim().split_once(' ').is_some_and(|(scheme, rest)| {
+                scheme.eq_ignore_ascii_case("bearer") && rest.trim() == token
+            })
+        });
+        if !ok {
+            ctx.metrics.auth_failures.fetch_add(1, Ordering::Relaxed);
+            return Err(ApiError {
+                status: 401,
+                message: "missing or invalid bearer token".to_string(),
+            });
+        }
+    }
+    Ok(())
 }
 
 fn route(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
@@ -434,12 +534,16 @@ fn route(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
 }
 
 fn healthz(ctx: &Ctx) -> Response {
+    let shards = ctx.pool.shard_count();
+    let alive = ctx.pool.alive_count();
     Response::json(
         200,
         obj([
-            ("status", Json::from("ok")),
+            ("status", Json::from(if alive == shards { "ok" } else { "degraded" })),
             ("backend", Json::from(ctx.backend.name())),
-            ("queue_depth", Json::from(ctx.queue.len())),
+            ("queue_depth", Json::from(ctx.pool.total_depth())),
+            ("shards", Json::from(shards)),
+            ("shards_alive", Json::from(alive)),
         ])
         .to_string_compact(),
     )
@@ -471,13 +575,19 @@ fn spec_json(s: &'static MethodSpec) -> Json {
 
 fn metrics_view(ctx: &Ctx, req: &Request) -> Response {
     let (entries, bytes) = ctx.cache.stats();
-    let depth = ctx.queue.len();
+    let view = ServeView {
+        cache_entries: entries,
+        cache_bytes: bytes,
+        queue_depth: ctx.pool.total_depth(),
+        shards: ctx.pool.snapshots(),
+        persist: ctx.store.as_ref().map(|s| s.view()),
+    };
     let prometheus = req.query_param("format") == Some("prometheus")
         || req.header("accept").is_some_and(|a| a.contains("text/plain"));
     if prometheus {
-        Response::text(200, ctx.metrics.to_prometheus(entries, bytes, depth))
+        Response::text(200, ctx.metrics.to_prometheus(&view))
     } else {
-        Response::json(200, json::to_string_pretty(&ctx.metrics.to_json(entries, bytes, depth)))
+        Response::json(200, json::to_string_pretty(&ctx.metrics.to_json(&view)))
     }
 }
 
@@ -504,6 +614,13 @@ struct SortRequest {
 }
 
 impl SortRequest {
+    /// Home-shard routing hash: method + canonical config + grid shape,
+    /// deliberately *excluding* dataset bytes — two sorts of the same
+    /// shape want the same shard's warm step session regardless of data.
+    fn shard_hash(&self) -> u64 {
+        shard::affinity_hash(self.method, &self.config, (self.grid.h, self.grid.w))
+    }
+
     fn cache_key(&self, ds: &Dataset) -> CacheKey {
         CacheKey {
             method: self.method.to_string(),
@@ -837,19 +954,49 @@ fn render_outcome(
     obj(fields).to_string_compact()
 }
 
-fn enqueue(ctx: &Ctx, job: Job) -> Result<(), ApiError> {
-    ctx.queue.try_push(job).map_err(|e| match e {
+fn enqueue(ctx: &Ctx, hash: u64, job: Job) -> Result<(), ApiError> {
+    ctx.pool.dispatch(hash, job, &ctx.metrics).map(|_| ()).map_err(|e| match e {
         PushError::Full(_) => {
+            // dispatch already walked every alive shard; all are saturated.
             ctx.metrics.queue_rejections.fetch_add(1, Ordering::Relaxed);
-            ApiError::unavailable("job queue is full — retry shortly")
+            ApiError::unavailable("every engine shard queue is full — retry shortly")
         }
-        PushError::Closed(_) => ApiError::unavailable("server is shutting down"),
+        PushError::Closed(_) => {
+            ApiError::unavailable("no engine shard is available (shutting down)")
+        }
     })
 }
 
 fn sort_single(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
     let parsed = parse_sort_request(ctx, &req.body, false)?;
     let ds = &parsed.datasets[0];
+
+    // Large arranged payloads stream as chunked transfer coding instead of
+    // materializing (and caching) a multi-megabyte body. The streamed
+    // bytes equal the buffered rendering (see stream.rs), but the cache
+    // never sees them — hence X-Cache: bypass.
+    if parsed.include_arranged && ds.n > ctx.cfg.stream_min_n {
+        let (tx, rx) = mpsc::channel();
+        enqueue(
+            ctx,
+            parsed.shard_hash(),
+            Job::Sort(SortJob {
+                method: parsed.method.to_string(),
+                dataset: ds.clone(),
+                grid: parsed.grid,
+                overrides: parsed.overrides.clone(),
+                reply: tx,
+            }),
+        )?;
+        let outcome = rx
+            .recv()
+            .map_err(|_| ApiError::internal("engine host exited before replying"))?
+            .map_err(ApiError::from_engine)?;
+        let rest = render_outcome(parsed.method, parsed.grid, ds, &outcome, false);
+        return Ok(stream::chunked_sort_response(rest, outcome.arranged)
+            .with_header("X-Cache", "bypass"));
+    }
+
     let key = parsed.cache_key(ds);
     if let Some(body) = ctx.cache.get(&key) {
         ctx.metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -860,6 +1007,7 @@ fn sort_single(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
     let (tx, rx) = mpsc::channel();
     enqueue(
         ctx,
+        parsed.shard_hash(),
         Job::Sort(SortJob {
             method: parsed.method.to_string(),
             dataset: ds.clone(),
@@ -908,6 +1056,7 @@ fn sort_batch(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
         let (tx, rx) = mpsc::channel();
         enqueue(
             ctx,
+            parsed.shard_hash(),
             Job::Batch(BatchJob {
                 method: parsed.method.to_string(),
                 datasets: miss_idx.iter().map(|&i| parsed.datasets[i].clone()).collect(),

@@ -1,44 +1,30 @@
-//! Bounded job queue and the engine host thread.
+//! Bounded job queue and the engine job types.
 //!
 //! The HTTP worker threads never touch the [`Engine`] directly — the
 //! engine's caches are deliberately single-threaded (`RefCell`/`Rc`), and
 //! running K sorts truly concurrently would oversubscribe the machine
 //! anyway (each sort is already row-parallel through its step session's
 //! worker pool, sized by the `--threads` budget). Instead the workers fan
-//! every compute request into one bounded MPMC queue consumed by a single
-//! **engine host** thread that owns the one shared `Engine` for the whole
-//! server lifetime: backend construction, PJRT executable caches and
-//! `(n, d, h)` step-session memoization all amortize across requests, and
-//! cross-request ordering is the queue order, so results are bit-identical
-//! to sequential `Engine::sort` calls by construction.
+//! every compute request into bounded MPMC sub-queues consumed by the
+//! engine-host threads in [`super::shard`], one `Engine` per host:
+//! backend construction, executable caches and `(n, d, h)` step-session
+//! memoization all amortize across requests, and per-shard ordering is the
+//! sub-queue order, so results are bit-identical to sequential
+//! `Engine::sort` calls by construction.
 //!
 //! Backpressure is explicit: `try_push` never blocks an accepted client on
-//! a full queue — the handler turns `Full` into `503` and the client
-//! retries. A panicking job (a bug, not a bad request) is caught in the
-//! host and reported as an internal error; the host thread survives.
+//! a full queue — the router work-steals to a sibling shard first, and
+//! only when every alive shard is saturated does the handler turn `Full`
+//! into `503`.
+//!
+//! [`Engine`]: crate::api::Engine
 
 use std::collections::VecDeque;
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::Ordering;
-use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
-use std::time::Instant;
+use std::sync::{mpsc, Condvar, Mutex, MutexGuard};
 
-use crate::backend::pool::PoolError;
 use crate::coordinator::SortOutcome;
 use crate::data::Dataset;
 use crate::grid::GridShape;
-
-use super::metrics::Metrics;
-use super::EngineSpec;
-
-/// Classify an engine failure: a `PoolError` anywhere in the chain means a
-/// row job panicked server-side (our bug, → 500); everything else is a
-/// request problem (bad overrides, mismatched shapes, → 400).
-fn engine_error(e: anyhow::Error) -> EngineError {
-    let internal = e.downcast_ref::<PoolError>().is_some();
-    EngineError { message: format!("{e:#}"), internal }
-}
 
 /// A bounded MPMC queue: blocking `pop`, non-blocking `try_push`.
 pub struct Bounded<T> {
@@ -67,9 +53,20 @@ impl<T> Bounded<T> {
         }
     }
 
+    /// Lock the queue state, recovering a poisoned mutex instead of
+    /// propagating the panic to every later caller. The queue's invariants
+    /// are a `VecDeque` and a flag — both valid whatever a panicking
+    /// holder was doing — so the state is usable as-is.
+    fn lock_inner(&self) -> MutexGuard<'_, Inner<T>> {
+        self.inner.lock().unwrap_or_else(|poisoned| {
+            self.inner.clear_poison();
+            poisoned.into_inner()
+        })
+    }
+
     /// Enqueue without blocking; a full or closed queue refuses the item.
     pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
-        let mut st = self.inner.lock().expect("queue mutex poisoned");
+        let mut st = self.lock_inner();
         if st.closed {
             return Err(PushError::Closed(item));
         }
@@ -84,7 +81,7 @@ impl<T> Bounded<T> {
     /// Dequeue, blocking until an item arrives. Returns `None` once the
     /// queue is closed *and* drained.
     pub fn pop(&self) -> Option<T> {
-        let mut st = self.inner.lock().expect("queue mutex poisoned");
+        let mut st = self.lock_inner();
         loop {
             if let Some(item) = st.q.pop_front() {
                 return Some(item);
@@ -92,19 +89,22 @@ impl<T> Bounded<T> {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).expect("queue mutex poisoned");
+            st = self.not_empty.wait(st).unwrap_or_else(|poisoned| {
+                self.inner.clear_poison();
+                poisoned.into_inner()
+            });
         }
     }
 
     /// Close the queue: pending items still drain, new pushes fail, and
     /// blocked `pop`s wake up.
     pub fn close(&self) {
-        self.inner.lock().expect("queue mutex poisoned").closed = true;
+        self.lock_inner().closed = true;
         self.not_empty.notify_all();
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("queue mutex poisoned").q.len()
+        self.lock_inner().q.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -143,83 +143,10 @@ pub struct BatchJob {
     pub reply: mpsc::Sender<Vec<Result<SortOutcome, EngineError>>>,
 }
 
-/// Spawn the engine host: one thread, one `Engine`, jobs in queue order.
-pub fn spawn_engine_host(
-    spec: EngineSpec,
-    queue: Arc<Bounded<Job>>,
-    metrics: Arc<Metrics>,
-) -> JoinHandle<()> {
-    std::thread::Builder::new()
-        .name("sssort-engine".to_string())
-        .spawn(move || {
-            let engine = spec.build_engine();
-            while let Some(job) = queue.pop() {
-                metrics.engine_jobs.fetch_add(1, Ordering::Relaxed);
-                match job {
-                    Job::Sort(j) => {
-                        let started = Instant::now();
-                        let result = catch_unwind(AssertUnwindSafe(|| {
-                            engine.sort(&j.method, &j.dataset, j.grid, &j.overrides)
-                        }));
-                        let result = match result {
-                            Ok(Ok(out)) => {
-                                metrics.observe(&j.method, started.elapsed().as_secs_f64());
-                                metrics
-                                    .phase_tiles
-                                    .fetch_add(out.report.tiles as u64, Ordering::Relaxed);
-                                Ok(out)
-                            }
-                            Ok(Err(e)) => Err(engine_error(e)),
-                            Err(_) => Err(EngineError {
-                                message: "sort panicked in the engine host".to_string(),
-                                internal: true,
-                            }),
-                        };
-                        let _ = j.reply.send(result);
-                    }
-                    Job::Batch(j) => {
-                        let started = Instant::now();
-                        let results = catch_unwind(AssertUnwindSafe(|| {
-                            engine.sort_batch(&j.method, &j.datasets, j.grid, &j.overrides)
-                        }));
-                        let results = match results {
-                            Ok(rs) => {
-                                // Amortize the batch wall time over its items
-                                // so the histogram stays per-sort, comparable
-                                // with the single-sort path.
-                                let per_item = started.elapsed().as_secs_f64()
-                                    / j.datasets.len().max(1) as f64;
-                                for _ in 0..j.datasets.len() {
-                                    metrics.observe(&j.method, per_item);
-                                }
-                                for out in rs.iter().flatten() {
-                                    metrics
-                                        .phase_tiles
-                                        .fetch_add(out.report.tiles as u64, Ordering::Relaxed);
-                                }
-                                rs.into_iter().map(|r| r.map_err(engine_error)).collect()
-                            }
-                            Err(_) => (0..j.datasets.len())
-                                .map(|_| {
-                                    Err(EngineError {
-                                        message: "batch sort panicked in the engine host"
-                                            .to_string(),
-                                        internal: true,
-                                    })
-                                })
-                                .collect(),
-                        };
-                        let _ = j.reply.send(results);
-                    }
-                }
-            }
-        })
-        .expect("spawn engine host thread")
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn bounded_queue_pushes_pops_and_refuses_when_full() {
@@ -252,5 +179,22 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(50));
         q2.close();
         assert_eq!(waiter.join().unwrap(), None);
+    }
+
+    #[test]
+    fn poisoned_queue_mutex_recovers_and_keeps_serving() {
+        let q: Arc<Bounded<u32>> = Arc::new(Bounded::new(4));
+        q.try_push(7).ok().unwrap();
+        // Poison the lock the way a buggy holder would: panic while held.
+        let q2 = q.clone();
+        let poisoner = std::thread::spawn(move || {
+            let _guard = q2.inner.lock().unwrap();
+            panic!("deliberate poison for test");
+        });
+        assert!(poisoner.join().is_err());
+        // The queue still works: the pending item drains, pushes succeed.
+        assert_eq!(q.pop(), Some(7));
+        assert!(q.try_push(8).is_ok());
+        assert_eq!(q.len(), 1);
     }
 }

@@ -1,0 +1,443 @@
+//! Sharded engine-host pool: hashed job affinity over K single-threaded
+//! engine hosts.
+//!
+//! The single engine-host design (one thread, one `Engine`) is what keeps
+//! serve results bit-identical to sequential `Engine::sort` — but one host
+//! is also the throughput ceiling. Sorts are deterministic pure functions,
+//! so running K hosts changes *which thread* computes a result, never its
+//! bytes: the pool scales compute without touching the byte-identity
+//! contract.
+//!
+//! What sharding buys beyond raw parallelism is **cache locality**. The
+//! paper's N-parameter formulation keeps per-shape state tiny (an N-vector
+//! of scores, not an N×N transport plan), so an `Engine` can afford to
+//! keep step sessions and compiled executables memoized per `(n, d, h)`
+//! shape. Routing each job by a hash of its *shape identity* — (method,
+//! canonical overrides, grid) — sends repeat shapes to the same home
+//! shard, whose warm `StepSession` (scratch buffers + parked worker pool)
+//! and executable cache serve them without rebuild. Dataset bytes are
+//! deliberately excluded from the hash: different data on the same shape
+//! wants the same warm session.
+//!
+//! Two failure-containment mechanisms round out the pool:
+//!
+//! - **Work stealing** (sender side): when a job's home sub-queue is full
+//!   or closed, `dispatch` walks to the next alive shard instead of
+//!   failing the request — a hot shape degrades to cold-cache latency on a
+//!   neighbor shard, not to a 503.
+//! - **Panic isolation**: each host catches per-job panics (the job gets a
+//!   500, the host survives); a host-level panic (engine construction, a
+//!   bug outside the per-job guard) marks only that shard dead and closes
+//!   its queue, so the router skips it — one poisoned shard degrades
+//!   capacity, never kills the server.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::api::{Engine, MethodKind, MethodRegistry};
+use crate::backend::pool::PoolError;
+use crate::grid::GridShape;
+
+use super::cache::fnv1a;
+use super::metrics::{Metrics, ShardView};
+use super::queue::{Bounded, EngineError, Job, PushError};
+use super::EngineSpec;
+
+/// Most `(n, d, h)` step sessions a shard keeps warm. Each native session
+/// parks a worker pool, so warming is capped rather than unbounded; the
+/// affinity hash concentrates each shape on one shard, so a small cap
+/// covers a shard's working set.
+const WARM_SHAPES_MAX: usize = 4;
+
+/// Route a job to its home shard: FNV-1a over the *shape identity* —
+/// method, canonical (sorted-key JSON) overrides, and grid — the exact
+/// inputs that determine which memoized session/executable can serve it.
+/// Dataset bytes are excluded on purpose: same shape + different data
+/// should land on the same warm session.
+pub fn affinity_hash(method: &str, config: &str, grid: (usize, usize)) -> u64 {
+    let mut buf = Vec::with_capacity(method.len() + config.len() + 18);
+    buf.extend_from_slice(method.as_bytes());
+    buf.push(0x1f);
+    buf.extend_from_slice(config.as_bytes());
+    buf.push(0x1f);
+    buf.extend_from_slice(&(grid.0 as u64).to_le_bytes());
+    buf.extend_from_slice(&(grid.1 as u64).to_le_bytes());
+    fnv1a(&buf)
+}
+
+/// Live per-shard counters, shared between the host thread (writer) and
+/// the metrics/routing readers.
+pub struct ShardStats {
+    pub jobs: AtomicU64,
+    pub memo_entries: AtomicU64,
+    pub alive: AtomicBool,
+}
+
+impl ShardStats {
+    fn new() -> Self {
+        ShardStats {
+            jobs: AtomicU64::new(0),
+            memo_entries: AtomicU64::new(0),
+            alive: AtomicBool::new(true),
+        }
+    }
+}
+
+struct Shard {
+    queue: Arc<Bounded<Job>>,
+    stats: Arc<ShardStats>,
+}
+
+/// The routing fabric: K shards, each a bounded sub-queue consumed by one
+/// engine-host thread owning one `Engine`.
+pub struct ShardPool {
+    shards: Vec<Shard>,
+}
+
+impl ShardPool {
+    /// Spawn `k` engine hosts (≥ 1). The configured total queue depth is
+    /// split evenly across sub-queues so `--queue-depth` keeps meaning
+    /// "jobs admitted before 503", independent of the shard count.
+    pub fn start(
+        spec: EngineSpec,
+        k: usize,
+        total_depth: usize,
+        metrics: Arc<Metrics>,
+    ) -> (Arc<ShardPool>, Vec<JoinHandle<()>>) {
+        let k = k.max(1);
+        let per_shard_depth = (total_depth / k).max(1);
+        let mut shards = Vec::with_capacity(k);
+        let mut hosts = Vec::with_capacity(k);
+        for id in 0..k {
+            let queue: Arc<Bounded<Job>> = Arc::new(Bounded::new(per_shard_depth));
+            let stats = Arc::new(ShardStats::new());
+            hosts.push(spawn_engine_host(
+                id,
+                spec.clone(),
+                queue.clone(),
+                metrics.clone(),
+                stats.clone(),
+            ));
+            shards.push(Shard { queue, stats });
+        }
+        (Arc::new(ShardPool { shards }), hosts)
+    }
+
+    /// Enqueue a job at its home shard (`hash % k`), stealing forward to
+    /// the next alive shard when the home sub-queue is full or its host is
+    /// dead. Returns the shard index that accepted the job. `Full` means
+    /// every alive shard was saturated; `Closed` means no shard is alive.
+    pub fn dispatch(
+        &self,
+        hash: u64,
+        job: Job,
+        metrics: &Metrics,
+    ) -> Result<usize, PushError<Job>> {
+        let k = self.shards.len();
+        let home = (hash % k as u64) as usize;
+        let mut job = job;
+        let mut any_alive = false;
+        for step in 0..k {
+            let idx = (home + step) % k;
+            let shard = &self.shards[idx];
+            if !shard.stats.alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            any_alive = true;
+            match shard.queue.try_push(job) {
+                Ok(()) => {
+                    if idx != home {
+                        metrics.shard_steals.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Ok(idx);
+                }
+                // The item comes back on refusal; offer it to the next
+                // shard (Closed here = this host died between the alive
+                // check and the push — treat like dead, keep walking).
+                Err(PushError::Full(j)) | Err(PushError::Closed(j)) => job = j,
+            }
+        }
+        if any_alive {
+            Err(PushError::Full(job))
+        } else {
+            Err(PushError::Closed(job))
+        }
+    }
+
+    /// Simulate (or react to) a shard loss: mark it dead and close its
+    /// queue so the host drains in-flight jobs and exits. Routing skips it
+    /// from the next `dispatch` on.
+    pub fn kill(&self, idx: usize) {
+        if let Some(shard) = self.shards.get(idx) {
+            shard.stats.alive.store(false, Ordering::SeqCst);
+            shard.queue.close();
+        }
+    }
+
+    /// Close every sub-queue (graceful shutdown: pending jobs drain).
+    pub fn close_all(&self) {
+        for shard in &self.shards {
+            shard.queue.close();
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.shards.iter().filter(|s| s.stats.alive.load(Ordering::SeqCst)).count()
+    }
+
+    /// Sum of queued (not yet popped) jobs across shards.
+    pub fn total_depth(&self) -> usize {
+        self.shards.iter().map(|s| s.queue.len()).sum()
+    }
+
+    pub fn snapshots(&self) -> Vec<ShardView> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(id, s)| ShardView {
+                id,
+                alive: s.stats.alive.load(Ordering::SeqCst),
+                queue_depth: s.queue.len(),
+                jobs: s.stats.jobs.load(Ordering::Relaxed),
+                memo_entries: s.stats.memo_entries.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+/// Classify an engine failure: a `PoolError` anywhere in the chain means a
+/// row job panicked server-side (our bug, → 500); everything else is a
+/// request problem (bad overrides, mismatched shapes, → 400).
+fn engine_error(e: anyhow::Error) -> EngineError {
+    let internal = e.downcast_ref::<PoolError>().is_some();
+    EngineError { message: format!("{e:#}"), internal }
+}
+
+/// Keep this shard's home shapes warm: after serving a learned-method job,
+/// memoize its `(n, d, h)` step session (up to [`WARM_SHAPES_MAX`]) so the
+/// next job on the shape hits warm scratch and a parked worker pool. Done
+/// *before* the reply is sent so the memo gauge is deterministic by the
+/// time the client sees the response.
+fn warm_session(
+    engine: &Engine,
+    registry: &MethodRegistry,
+    method: &str,
+    grid: GridShape,
+    d: usize,
+    stats: &ShardStats,
+) {
+    let learned = registry
+        .resolve(method)
+        .is_some_and(|s| matches!(s.kind, MethodKind::Learned));
+    if learned && engine.session_memo_entries() < WARM_SHAPES_MAX {
+        let _ = engine.step_session(grid.n(), d, grid.h);
+    }
+    stats.memo_entries.store(engine.session_memo_entries() as u64, Ordering::Relaxed);
+}
+
+/// Spawn one engine host: one thread, one `Engine`, jobs in sub-queue
+/// order. Per-job panics are caught and answered with a 500; a host-level
+/// panic marks the shard dead and closes its queue so the router stops
+/// sending work here (senders whose jobs were dropped see their reply
+/// channel hang up → 500).
+fn spawn_engine_host(
+    id: usize,
+    spec: EngineSpec,
+    queue: Arc<Bounded<Job>>,
+    metrics: Arc<Metrics>,
+    stats: Arc<ShardStats>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("sssort-engine-{id}"))
+        .spawn(move || {
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                host_loop(&spec, &queue, &metrics, &stats)
+            }));
+            stats.alive.store(false, Ordering::SeqCst);
+            if run.is_err() {
+                queue.close();
+                eprintln!(
+                    "serve: engine shard {id} died on a host-level panic; \
+                     continuing with the remaining shards"
+                );
+            }
+        })
+        .expect("spawn engine host thread")
+}
+
+fn host_loop(
+    spec: &EngineSpec,
+    queue: &Bounded<Job>,
+    metrics: &Metrics,
+    stats: &ShardStats,
+) {
+    let registry = spec.registry;
+    let engine = spec.build_engine();
+    while let Some(job) = queue.pop() {
+        metrics.engine_jobs.fetch_add(1, Ordering::Relaxed);
+        stats.jobs.fetch_add(1, Ordering::Relaxed);
+        match job {
+            Job::Sort(j) => {
+                let started = Instant::now();
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    engine.sort(&j.method, &j.dataset, j.grid, &j.overrides)
+                }));
+                let result = match result {
+                    Ok(Ok(out)) => {
+                        metrics.observe(&j.method, started.elapsed().as_secs_f64());
+                        metrics
+                            .phase_tiles
+                            .fetch_add(out.report.tiles as u64, Ordering::Relaxed);
+                        warm_session(&engine, &registry, &j.method, j.grid, j.dataset.d, stats);
+                        Ok(out)
+                    }
+                    Ok(Err(e)) => Err(engine_error(e)),
+                    Err(_) => Err(EngineError {
+                        message: "sort panicked in the engine host".to_string(),
+                        internal: true,
+                    }),
+                };
+                let _ = j.reply.send(result);
+            }
+            Job::Batch(j) => {
+                let started = Instant::now();
+                let results = catch_unwind(AssertUnwindSafe(|| {
+                    engine.sort_batch(&j.method, &j.datasets, j.grid, &j.overrides)
+                }));
+                let results = match results {
+                    Ok(rs) => {
+                        // Amortize the batch wall time over its items
+                        // so the histogram stays per-sort, comparable
+                        // with the single-sort path.
+                        let per_item = started.elapsed().as_secs_f64()
+                            / j.datasets.len().max(1) as f64;
+                        for _ in 0..j.datasets.len() {
+                            metrics.observe(&j.method, per_item);
+                        }
+                        for out in rs.iter().flatten() {
+                            metrics
+                                .phase_tiles
+                                .fetch_add(out.report.tiles as u64, Ordering::Relaxed);
+                        }
+                        if let Some(d) = j.datasets.first().map(|ds| ds.d) {
+                            warm_session(&engine, &registry, &j.method, j.grid, d, stats);
+                        }
+                        rs.into_iter().map(|r| r.map_err(engine_error)).collect()
+                    }
+                    Err(_) => (0..j.datasets.len())
+                        .map(|_| {
+                            Err(EngineError {
+                                message: "batch sort panicked in the engine host"
+                                    .to_string(),
+                                internal: true,
+                            })
+                        })
+                        .collect(),
+                };
+                let _ = j.reply.send(results);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affinity_hash_is_stable_and_shape_sensitive() {
+        let h = affinity_hash("softsort", "{\"steps\":\"16\"}", (4, 4));
+        assert_eq!(h, affinity_hash("softsort", "{\"steps\":\"16\"}", (4, 4)));
+        assert_ne!(h, affinity_hash("softsort", "{\"steps\":\"32\"}", (4, 4)));
+        assert_ne!(h, affinity_hash("softsort", "{\"steps\":\"16\"}", (2, 8)));
+        assert_ne!(h, affinity_hash("sinkhorn", "{\"steps\":\"16\"}", (4, 4)));
+    }
+
+    #[test]
+    fn affinity_hash_matches_the_documented_fnv_construction() {
+        // Same bytes, hashed through the shared FNV-1a: the hash is a
+        // wire-stable routing contract (README documents it), not an
+        // implementation detail.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"softsort");
+        buf.push(0x1f);
+        buf.extend_from_slice(b"{}");
+        buf.push(0x1f);
+        buf.extend_from_slice(&3u64.to_le_bytes());
+        buf.extend_from_slice(&5u64.to_le_bytes());
+        assert_eq!(affinity_hash("softsort", "{}", (3, 5)), fnv1a(&buf));
+    }
+
+    /// A pool whose hosts are plain echo threads (no Engine): exercises
+    /// routing, stealing and kill logic without compute.
+    fn echo_pool(k: usize, depth_per_shard: usize) -> (Arc<ShardPool>, Vec<JoinHandle<()>>) {
+        let mut shards = Vec::new();
+        let mut hosts = Vec::new();
+        for _ in 0..k {
+            let queue: Arc<Bounded<Job>> = Arc::new(Bounded::new(depth_per_shard));
+            let stats = Arc::new(ShardStats::new());
+            let (q2, s2) = (queue.clone(), stats.clone());
+            hosts.push(std::thread::spawn(move || {
+                while let Some(job) = q2.pop() {
+                    s2.jobs.fetch_add(1, Ordering::Relaxed);
+                    match job {
+                        Job::Sort(j) => drop(j.reply),
+                        Job::Batch(j) => drop(j.reply),
+                    }
+                }
+                s2.alive.store(false, Ordering::SeqCst);
+            }));
+            shards.push(Shard { queue, stats });
+        }
+        (Arc::new(ShardPool { shards }), hosts)
+    }
+
+    fn sort_job() -> Job {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        Job::Sort(super::super::queue::SortJob {
+            method: "softsort".to_string(),
+            dataset: crate::data::random_colors(16, 1),
+            grid: GridShape::new(4, 4),
+            overrides: Vec::new(),
+            reply: tx,
+        })
+    }
+
+    #[test]
+    fn dispatch_steals_to_the_next_alive_shard_when_home_is_dead() {
+        let metrics = Metrics::new();
+        let (pool, hosts) = echo_pool(3, 4);
+        let hash = 0u64; // home = shard 0
+        pool.kill(0);
+        let accepted = pool.dispatch(hash, sort_job(), &metrics).ok().unwrap();
+        assert_eq!(accepted, 1, "steal walks forward from the dead home");
+        assert_eq!(metrics.shard_steals.load(Ordering::Relaxed), 1);
+        assert_eq!(pool.alive_count(), 2);
+        pool.close_all();
+        for h in hosts {
+            let _ = h.join();
+        }
+    }
+
+    #[test]
+    fn dispatch_reports_closed_only_when_no_shard_is_alive() {
+        let metrics = Metrics::new();
+        let (pool, hosts) = echo_pool(2, 4);
+        pool.kill(0);
+        pool.kill(1);
+        assert!(matches!(
+            pool.dispatch(0, sort_job(), &metrics),
+            Err(PushError::Closed(_))
+        ));
+        for h in hosts {
+            let _ = h.join();
+        }
+    }
+}

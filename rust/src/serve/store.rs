@@ -1,0 +1,429 @@
+//! Persistent spill file for the result cache: the content-addressed LRU
+//! ([`super::cache::ResultCache`]) survives restarts.
+//!
+//! The cache key already names the computation exactly (method, canonical
+//! overrides, grid, FNV-of-f32-bits), and a cached body is a pure function
+//! of its key — so persistence is just "write every (key, body) insert to
+//! an append-only file, replay it on boot". Format:
+//!
+//! ```text
+//!   SSSPILL1                                  8-byte magic
+//!   repeat:
+//!     u32 LE  key length                      ┐
+//!     u32 LE  body length                     │ 16-byte record header
+//!     u64 LE  FNV-1a over key ++ body bytes   ┘
+//!     key bytes (fields joined by 0x1f)
+//!     body bytes (the exact serialized response)
+//! ```
+//!
+//! Robustness contract (exercised by the tests below): a truncated or
+//! corrupted file NEVER panics and never poisons the cache — read-back
+//! stops at the first bad record (everything after an append-only tear is
+//! untrusted), keeps the valid prefix, and truncates the tear so new
+//! appends extend a clean file. Overwritten and evicted entries leave dead
+//! bytes behind; when dead bytes exceed the budget
+//! ([`Store::needs_compaction`]) the cache triggers [`Store::compact`],
+//! which rewrites the live entries (in LRU order, so replay restores
+//! recency) to a temp file and renames it into place.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::cache::{fnv1a, CacheKey};
+
+/// File magic: identifies a spill file and its format version.
+pub const MAGIC: &[u8; 8] = b"SSSPILL1";
+
+/// Fixed bytes per record before the payloads (klen + blen + checksum).
+const HEADER_LEN: usize = 16;
+
+/// Sanity caps on declared record sizes: anything larger is corruption,
+/// not data (keys are short; bodies are bounded by the cache byte budget).
+const MAX_KEY_LEN: usize = 1 << 20;
+const MAX_BODY_LEN: usize = 1 << 28;
+
+/// Compaction policy: rewrite once the file holds more than
+/// `2 × live + slack` bytes, i.e. dead bytes exceed live + slack.
+const COMPACT_SLACK: u64 = 64 * 1024;
+
+/// Counter snapshot for `/metrics` (`cache_persist_*` family).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PersistView {
+    pub appends: u64,
+    pub replayed: u64,
+    pub compactions: u64,
+    pub corrupt_dropped: u64,
+    pub errors: u64,
+    pub file_bytes: u64,
+}
+
+/// Append-only persistence for the result cache. All mutating calls are
+/// made under the cache's state lock, so the inner file mutex is
+/// uncontended; it exists so `&self` methods can write.
+pub struct Store {
+    file: Mutex<File>,
+    path: PathBuf,
+    appends: AtomicU64,
+    replayed: AtomicU64,
+    compactions: AtomicU64,
+    corrupt_dropped: AtomicU64,
+    errors: AtomicU64,
+    file_bytes: AtomicU64,
+}
+
+/// Serialize a key as its fields joined by the 0x1f unit separator. None
+/// of the fields can contain 0x1f: method names are identifiers and the
+/// config string is compact JSON (control characters are `\u`-escaped).
+fn encode_key(key: &CacheKey) -> String {
+    format!(
+        "{}\x1f{}\x1f{}\x1f{}\x1f{}\x1f{}\x1f{}",
+        key.method, key.config, key.grid.0, key.grid.1, key.data_hash, key.n, key.d
+    )
+}
+
+fn decode_key(bytes: &[u8]) -> Option<CacheKey> {
+    let text = std::str::from_utf8(bytes).ok()?;
+    let mut parts = text.split('\x1f');
+    let method = parts.next()?.to_string();
+    let config = parts.next()?.to_string();
+    let h = parts.next()?.parse().ok()?;
+    let w = parts.next()?.parse().ok()?;
+    let data_hash = parts.next()?.parse().ok()?;
+    let n = parts.next()?.parse().ok()?;
+    let d = parts.next()?.parse().ok()?;
+    if parts.next().is_some() {
+        return None;
+    }
+    Some(CacheKey { method, config, grid: (h, w), data_hash, n, d })
+}
+
+/// On-disk size of one record for (key, body) — the cache tracks the sum
+/// over its live entries to decide when compaction pays.
+pub fn record_len(key: &CacheKey, body: &str) -> u64 {
+    (HEADER_LEN + encode_key(key).len() + body.len()) as u64
+}
+
+fn checksum(key: &[u8], body: &[u8]) -> u64 {
+    let mut buf = Vec::with_capacity(key.len() + body.len());
+    buf.extend_from_slice(key);
+    buf.extend_from_slice(body);
+    fnv1a(&buf)
+}
+
+fn push_record(out: &mut Vec<u8>, key: &CacheKey, body: &str) {
+    let kb = encode_key(key).into_bytes();
+    let bb = body.as_bytes();
+    out.extend_from_slice(&(kb.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(bb.len() as u32).to_le_bytes());
+    out.extend_from_slice(&checksum(&kb, bb).to_le_bytes());
+    out.extend_from_slice(&kb);
+    out.extend_from_slice(bb);
+}
+
+impl Store {
+    /// Open (or create) the spill file at `path`, replaying every valid
+    /// record in file order. Read-back is total: a missing file starts
+    /// empty, garbage or a torn tail yields the valid prefix, and the file
+    /// is truncated to that prefix so appends extend clean state.
+    pub fn open(path: &Path) -> std::io::Result<(Store, Vec<(CacheKey, String)>)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut corrupt = 0u64;
+        let mut replayed = Vec::new();
+        let mut valid_end = MAGIC.len() as u64;
+        match std::fs::read(path) {
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                std::fs::write(path, MAGIC)?;
+            }
+            Err(e) => return Err(e),
+            Ok(bytes) => {
+                if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+                    // Not a spill file (or a torn header): start over.
+                    corrupt += 1;
+                    std::fs::write(path, MAGIC)?;
+                } else {
+                    let mut at = MAGIC.len();
+                    loop {
+                        if at == bytes.len() {
+                            break; // clean end
+                        }
+                        let Some((key, body, next)) = read_record(&bytes, at) else {
+                            corrupt += 1;
+                            break; // torn/corrupt tail: untrusted from here
+                        };
+                        replayed.push((key, body));
+                        at = next;
+                        valid_end = at as u64;
+                    }
+                }
+            }
+        }
+
+        let file = OpenOptions::new().append(true).open(path)?;
+        file.set_len(valid_end)?;
+        let store = Store {
+            file: Mutex::new(file),
+            path: path.to_path_buf(),
+            appends: AtomicU64::new(0),
+            replayed: AtomicU64::new(replayed.len() as u64),
+            compactions: AtomicU64::new(0),
+            corrupt_dropped: AtomicU64::new(corrupt),
+            errors: AtomicU64::new(0),
+            file_bytes: AtomicU64::new(valid_end),
+        };
+        Ok((store, replayed))
+    }
+
+    fn lock_file(&self) -> MutexGuard<'_, File> {
+        // Nothing here panics while holding the lock; recover anyway.
+        self.file.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Append one (key, body) record. I/O failures degrade (counted,
+    /// logged) rather than fail the request — the in-memory cache still
+    /// serves; only durability is lost.
+    pub fn append(&self, key: &CacheKey, body: &str) {
+        let mut rec = Vec::with_capacity(HEADER_LEN + body.len() + 64);
+        push_record(&mut rec, key, body);
+        let mut file = self.lock_file();
+        match file.write_all(&rec).and_then(|()| file.flush()) {
+            Ok(()) => {
+                self.appends.fetch_add(1, Ordering::Relaxed);
+                self.file_bytes.fetch_add(rec.len() as u64, Ordering::Relaxed);
+            }
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                eprintln!("serve: cache spill append failed: {e}");
+            }
+        }
+    }
+
+    /// Whether dead bytes warrant a rewrite, given the live-record byte
+    /// total the cache tracks.
+    pub fn needs_compaction(&self, live_bytes: u64) -> bool {
+        self.file_bytes.load(Ordering::Relaxed)
+            > 2u64.saturating_mul(live_bytes).saturating_add(COMPACT_SLACK)
+    }
+
+    /// Rewrite the file to exactly `live` (LRU order: oldest first, so a
+    /// future replay reconstructs recency), then atomically swap it in.
+    pub fn compact(&self, live: &[(CacheKey, Arc<String>)]) {
+        let mut out = Vec::with_capacity(MAGIC.len() + 1024);
+        out.extend_from_slice(MAGIC);
+        for (key, body) in live {
+            push_record(&mut out, key, body);
+        }
+        let tmp = self.path.with_extension("spill-tmp");
+        let mut file = self.lock_file();
+        let swap = (|| -> std::io::Result<File> {
+            {
+                let mut t = File::create(&tmp)?;
+                t.write_all(&out)?;
+                t.sync_all()?;
+            }
+            std::fs::rename(&tmp, &self.path)?;
+            OpenOptions::new().append(true).open(&self.path)
+        })();
+        match swap {
+            Ok(fresh) => {
+                *file = fresh;
+                self.file_bytes.store(out.len() as u64, Ordering::Relaxed);
+                self.compactions.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = std::fs::remove_file(&tmp);
+                eprintln!("serve: cache spill compaction failed: {e}");
+            }
+        }
+    }
+
+    pub fn view(&self) -> PersistView {
+        PersistView {
+            appends: self.appends.load(Ordering::Relaxed),
+            replayed: self.replayed.load(Ordering::Relaxed),
+            compactions: self.compactions.load(Ordering::Relaxed),
+            corrupt_dropped: self.corrupt_dropped.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            file_bytes: self.file_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Parse the record starting at `at`; `None` on any inconsistency
+/// (truncation, oversized lengths, checksum or key-format mismatch).
+fn read_record(bytes: &[u8], at: usize) -> Option<(CacheKey, String, usize)> {
+    let header = bytes.get(at..at + HEADER_LEN)?;
+    let klen = u32::from_le_bytes(header[0..4].try_into().ok()?) as usize;
+    let blen = u32::from_le_bytes(header[4..8].try_into().ok()?) as usize;
+    let want = u64::from_le_bytes(header[8..16].try_into().ok()?);
+    if klen > MAX_KEY_LEN || blen > MAX_BODY_LEN {
+        return None;
+    }
+    let kstart = at + HEADER_LEN;
+    let kb = bytes.get(kstart..kstart + klen)?;
+    let bb = bytes.get(kstart + klen..kstart + klen + blen)?;
+    if checksum(kb, bb) != want {
+        return None;
+    }
+    let key = decode_key(kb)?;
+    let body = String::from_utf8(bb.to_vec()).ok()?;
+    Some((key, body, kstart + klen + blen))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        static C: AtomicU64 = AtomicU64::new(0);
+        std::env::temp_dir().join(format!(
+            "sssort-store-{}-{tag}-{}",
+            std::process::id(),
+            C.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    fn key(tag: &str, seed: u64) -> CacheKey {
+        CacheKey {
+            method: "softsort".into(),
+            config: format!("{{\"seed\":\"{tag}\"}}"),
+            grid: (4, 4),
+            data_hash: seed,
+            n: 16,
+            d: 3,
+        }
+    }
+
+    #[test]
+    fn key_encoding_round_trips() {
+        let k = key("a", 0xdead_beef_0042);
+        assert_eq!(decode_key(encode_key(&k).as_bytes()).unwrap(), k);
+        assert!(decode_key(b"too\x1ffew\x1ffields").is_none());
+        assert!(decode_key(b"m\x1fc\x1f4\x1f4\x1fnope\x1f16\x1f3").is_none());
+    }
+
+    #[test]
+    fn round_trip_replays_bodies_byte_identically() {
+        let path = temp_path("roundtrip");
+        let bodies = [r#"{"perm":[1,0]}"#, r#"{"perm":[0,1],"loss":0.125}"#, "x"];
+        {
+            let (store, replayed) = Store::open(&path).unwrap();
+            assert!(replayed.is_empty());
+            for (i, b) in bodies.iter().enumerate() {
+                store.append(&key("k", i as u64), b);
+            }
+            assert_eq!(store.view().appends, 3);
+        }
+        let (store, replayed) = Store::open(&path).unwrap();
+        assert_eq!(replayed.len(), 3);
+        for (i, b) in bodies.iter().enumerate() {
+            assert_eq!(replayed[i].0, key("k", i as u64));
+            assert_eq!(replayed[i].1.as_str(), *b, "body {i} must replay byte-identically");
+        }
+        let v = store.view();
+        assert_eq!((v.replayed, v.corrupt_dropped), (3, 0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_tail_recovers_prefix_and_keeps_appending() {
+        let path = temp_path("trunc");
+        {
+            let (store, _) = Store::open(&path).unwrap();
+            store.append(&key("a", 1), "first");
+            store.append(&key("b", 2), "second");
+        }
+        // Tear the last record mid-body.
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 3).unwrap();
+        drop(f);
+
+        let (store, replayed) = Store::open(&path).unwrap();
+        assert_eq!(replayed.len(), 1, "only the intact prefix survives");
+        assert_eq!(replayed[0].1, "first");
+        assert_eq!(store.view().corrupt_dropped, 1);
+        // The tear was truncated away; appends extend a clean file.
+        store.append(&key("c", 3), "third");
+        drop(store);
+        let (_, replayed) = Store::open(&path).unwrap();
+        let bodies: Vec<&str> = replayed.iter().map(|(_, b)| b.as_str()).collect();
+        assert_eq!(bodies, ["first", "third"]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn garbage_file_opens_empty_without_panicking() {
+        let path = temp_path("garbage");
+        std::fs::write(&path, b"this is not a spill file, just bytes").unwrap();
+        let (store, replayed) = Store::open(&path).unwrap();
+        assert!(replayed.is_empty());
+        assert_eq!(store.view().corrupt_dropped, 1);
+        store.append(&key("a", 9), "fresh");
+        drop(store);
+        let (_, replayed) = Store::open(&path).unwrap();
+        assert_eq!(replayed.len(), 1);
+        assert_eq!(replayed[0].1, "fresh");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_checksum_stops_replay_at_the_bad_record() {
+        let path = temp_path("checksum");
+        {
+            let (store, _) = Store::open(&path).unwrap();
+            store.append(&key("a", 1), "alpha");
+            store.append(&key("b", 2), "beta");
+            store.append(&key("c", 3), "gamma");
+        }
+        // Flip one byte inside the second record's body ("beta" is the
+        // last 4 bytes of record 2).
+        let mut bytes = std::fs::read(&path).unwrap();
+        let rec1_end = MAGIC.len() as u64 + record_len(&key("a", 1), "alpha");
+        let in_rec2 = rec1_end as usize + HEADER_LEN + 2;
+        bytes[in_rec2] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (store, replayed) = Store::open(&path).unwrap();
+        // Everything after the first bad record is untrusted by design.
+        assert_eq!(replayed.len(), 1);
+        assert_eq!(replayed[0].1, "alpha");
+        assert_eq!(store.view().corrupt_dropped, 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compaction_rewrites_to_live_entries_only() {
+        let path = temp_path("compact");
+        let live: Vec<(CacheKey, Arc<String>)> = vec![
+            (key("x", 10), Arc::new("ten".to_string())),
+            (key("y", 11), Arc::new("eleven".to_string())),
+        ];
+        {
+            let (store, _) = Store::open(&path).unwrap();
+            for i in 0..50 {
+                store.append(&key("dead", i), &"d".repeat(2048));
+            }
+            let before = store.view().file_bytes;
+            assert!(store.needs_compaction(0));
+            store.compact(&live);
+            let v = store.view();
+            assert_eq!(v.compactions, 1);
+            assert!(v.file_bytes < before / 10, "dead bytes reclaimed");
+            // Appends keep working on the swapped-in file.
+            store.append(&key("z", 12), "twelve");
+        }
+        let (_, replayed) = Store::open(&path).unwrap();
+        let bodies: Vec<&str> = replayed.iter().map(|(_, b)| b.as_str()).collect();
+        assert_eq!(bodies, ["ten", "eleven", "twelve"]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

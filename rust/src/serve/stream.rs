@@ -1,0 +1,205 @@
+//! Chunked-transfer streaming for large sort responses.
+//!
+//! The heavyweight part of a sort response is `arranged` — the N·d
+//! rearranged rows. Buffering it means a multi-megabyte `String` per
+//! in-flight large-N request *and* a multi-megabyte cache entry; before
+//! this module the serve layer simply defaulted `arranged` off above
+//! `arranged_max_n`. Streaming closes that gap: above `stream_min_n` the
+//! body is produced incrementally into HTTP/1.1 chunked transfer coding,
+//! so peak memory per response is one chunk, not one body.
+//!
+//! The streamed bytes must equal what the buffered path would have
+//! produced (the serve layer's byte-identity contract does not bend for
+//! transport framing). Two facts make that cheap to guarantee:
+//!
+//! - `Json::Obj` is a `BTreeMap`, so object keys serialize sorted — and
+//!   `"arranged"` sorts before every other response field. The streamed
+//!   body is therefore `{"arranged":[...],` + the compact serialization
+//!   of the remaining fields minus its leading `{`.
+//! - [`write_json_num`] mirrors `Json::write`'s number formatting
+//!   exactly, so each element is rendered as the buffered path would.
+//!
+//! Streamed responses bypass the result cache (the cache stores complete
+//! bodies; a body produced incrementally is never materialized) — the
+//! `X-Cache: bypass` header makes that visible.
+
+use std::io::Write;
+
+use super::http::{Response, StreamProducer};
+
+/// Flush threshold: one TCP-friendly chunk per ~16 KiB of payload.
+const CHUNK_BYTES: usize = 16 * 1024;
+
+/// A `Write` adapter that frames bytes as HTTP/1.1 chunks: hex size line,
+/// payload, CRLF — ending with the zero-length terminator chunk on
+/// [`ChunkSink::finish`].
+pub struct ChunkSink<'a, W: Write> {
+    out: &'a mut W,
+    buf: Vec<u8>,
+}
+
+impl<'a, W: Write> ChunkSink<'a, W> {
+    pub fn new(out: &'a mut W) -> Self {
+        ChunkSink { out, buf: Vec::with_capacity(CHUNK_BYTES) }
+    }
+
+    fn flush_chunk(&mut self) -> std::io::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        write!(self.out, "{:x}\r\n", self.buf.len())?;
+        self.out.write_all(&self.buf)?;
+        self.out.write_all(b"\r\n")?;
+        self.buf.clear();
+        Ok(())
+    }
+
+    /// Flush the tail chunk and write the terminator. Consumes the sink:
+    /// nothing can be written after the terminator.
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.flush_chunk()?;
+        self.out.write_all(b"0\r\n\r\n")
+    }
+}
+
+impl<W: Write> Write for ChunkSink<'_, W> {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        self.buf.extend_from_slice(data);
+        if self.buf.len() >= CHUNK_BYTES {
+            self.flush_chunk()?;
+        }
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.flush_chunk()?;
+        self.out.flush()
+    }
+}
+
+/// Render one JSON number exactly as `Json::write` would (integral values
+/// in f64-exact range print as integers; everything else as shortest
+/// round-trip; non-finite as `null`, mirroring `json::num`). Any drift
+/// here breaks the byte-identity between streamed and buffered bodies.
+pub fn write_json_num(out: &mut dyn Write, n: f64) -> std::io::Result<()> {
+    if !n.is_finite() {
+        return out.write_all(b"null");
+    }
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        write!(out, "{}", n as i64)
+    } else {
+        write!(out, "{n}")
+    }
+}
+
+/// Build the streaming response for a finished sort: `rest` is the
+/// buffered serialization of every field *except* `arranged` (a compact
+/// JSON object), `arranged` the rows to stream. Produces bytes identical
+/// to rendering the outcome with `arranged` included, because `"arranged"`
+/// is the first key in sorted order.
+pub fn chunked_sort_response(rest: String, arranged: Vec<f32>) -> Response {
+    debug_assert!(rest.starts_with('{') && rest.len() > 2, "rest must be a non-empty object");
+    let producer: StreamProducer = Box::new(move |w| {
+        w.write_all(b"{\"arranged\":[")?;
+        for (i, &v) in arranged.iter().enumerate() {
+            if i > 0 {
+                w.write_all(b",")?;
+            }
+            write_json_num(w, v as f64)?;
+        }
+        w.write_all(b"],")?;
+        w.write_all(rest[1..].as_bytes())
+    });
+    Response::streamed(200, "application/json", producer)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    /// Decode HTTP/1.1 chunked framing back to the payload bytes.
+    fn dechunk(mut raw: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        loop {
+            let pos = raw.windows(2).position(|w| w == b"\r\n").expect("size line");
+            let size = usize::from_str_radix(
+                std::str::from_utf8(&raw[..pos]).expect("hex size"),
+                16,
+            )
+            .expect("hex size");
+            raw = &raw[pos + 2..];
+            if size == 0 {
+                assert_eq!(raw, b"\r\n", "terminator chunk ends the stream");
+                return out;
+            }
+            out.extend_from_slice(&raw[..size]);
+            assert_eq!(&raw[size..size + 2], b"\r\n");
+            raw = &raw[size + 2..];
+        }
+    }
+
+    #[test]
+    fn chunk_framing_round_trips_across_flush_boundaries() {
+        let payload: Vec<u8> = (0..60_000u32).map(|i| (i % 251) as u8).collect();
+        let mut wire = Vec::new();
+        {
+            let mut sink = ChunkSink::new(&mut wire);
+            // Uneven writes to cross the 16 KiB chunk boundary mid-write.
+            for part in payload.chunks(7_001) {
+                sink.write_all(part).unwrap();
+            }
+            sink.finish().unwrap();
+        }
+        assert_eq!(dechunk(&wire), payload);
+        // An empty body is just the terminator.
+        let mut wire = Vec::new();
+        ChunkSink::new(&mut wire).finish().unwrap();
+        assert_eq!(wire, b"0\r\n\r\n");
+    }
+
+    #[test]
+    fn number_rendering_matches_the_buffered_json_writer() {
+        let cases: Vec<f32> = vec![
+            0.0, -0.0, 1.0, -1.0, 0.5, -0.125, 1.5e-8, 3.25e7, 16384.0, 0.1,
+            f32::MIN_POSITIVE, f32::MAX,
+        ];
+        for v in cases {
+            let mut streamed = Vec::new();
+            write_json_num(&mut streamed, v as f64).unwrap();
+            let buffered = Json::Num(v as f64).to_string_compact();
+            assert_eq!(
+                String::from_utf8(streamed).unwrap(),
+                buffered,
+                "value {v:?} must render identically on both paths"
+            );
+        }
+        let mut streamed = Vec::new();
+        write_json_num(&mut streamed, f64::NAN).unwrap();
+        assert_eq!(streamed, b"null");
+    }
+
+    #[test]
+    fn streamed_sort_body_equals_the_buffered_rendering() {
+        // `rest` = the response minus `arranged`; the streamed result must
+        // equal the full object with `arranged` present (BTreeMap order
+        // puts it first).
+        let arranged = vec![0.5f32, 2.0, -0.25];
+        let rest = r#"{"method":"softsort","n":3,"perm":[2,0,1]}"#.to_string();
+        let mut resp = chunked_sort_response(rest, arranged);
+        let mut wire = Vec::new();
+        {
+            let mut sink = ChunkSink::new(&mut wire);
+            let producer = resp.take_stream().expect("streamed response");
+            producer(&mut sink).unwrap();
+            sink.finish().unwrap();
+        }
+        let body = String::from_utf8(dechunk(&wire)).unwrap();
+        assert_eq!(
+            body,
+            r#"{"arranged":[0.5,2,-0.25],"method":"softsort","n":3,"perm":[2,0,1]}"#
+        );
+        // And it parses back to the object the buffered path would build.
+        assert!(Json::parse(&body).is_ok());
+    }
+}

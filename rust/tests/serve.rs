@@ -76,12 +76,23 @@ impl Client {
     }
 
     fn request(&mut self, method: &str, path: &str, body: &str, close: bool) -> Resp {
+        self.request_with_headers(method, path, body, close, &[])
+    }
+
+    fn request_with_headers(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: &str,
+        close: bool,
+        extra: &[(&str, &str)],
+    ) -> Resp {
         let conn = if close { "close" } else { "keep-alive" };
-        let raw = format!(
-            "{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: {conn}\r\n\
-             Content-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
+        let mut raw = format!("{method} {path} HTTP/1.1\r\nHost: test\r\nConnection: {conn}\r\n");
+        for (k, v) in extra {
+            raw.push_str(&format!("{k}: {v}\r\n"));
+        }
+        raw.push_str(&format!("Content-Length: {}\r\n\r\n{body}", body.len()));
         self.writer.write_all(raw.as_bytes()).unwrap();
         self.read_response()
     }
@@ -106,13 +117,41 @@ impl Client {
             let (k, v) = h.split_once(':').unwrap();
             headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
         }
-        let len: usize = headers
+        let chunked = headers
             .iter()
-            .find(|(k, _)| k == "content-length")
-            .map(|(_, v)| v.parse().unwrap())
-            .unwrap_or(0);
-        let mut body = vec![0u8; len];
-        self.reader.read_exact(&mut body).unwrap();
+            .any(|(k, v)| k == "transfer-encoding" && v.eq_ignore_ascii_case("chunked"));
+        let body = if chunked {
+            // Dechunk: hex size line, payload, CRLF — until the 0 chunk.
+            let mut out = Vec::new();
+            loop {
+                let mut size_line = String::new();
+                self.reader.read_line(&mut size_line).unwrap();
+                let size = usize::from_str_radix(size_line.trim(), 16)
+                    .unwrap_or_else(|_| panic!("bad chunk size line: {size_line:?}"));
+                if size == 0 {
+                    let mut crlf = [0u8; 2];
+                    self.reader.read_exact(&mut crlf).unwrap();
+                    assert_eq!(&crlf, b"\r\n", "terminator chunk ends with CRLF");
+                    break;
+                }
+                let mut chunk = vec![0u8; size];
+                self.reader.read_exact(&mut chunk).unwrap();
+                out.extend_from_slice(&chunk);
+                let mut crlf = [0u8; 2];
+                self.reader.read_exact(&mut crlf).unwrap();
+                assert_eq!(&crlf, b"\r\n", "chunk payload ends with CRLF");
+            }
+            out
+        } else {
+            let len: usize = headers
+                .iter()
+                .find(|(k, _)| k == "content-length")
+                .map(|(_, v)| v.parse().unwrap())
+                .unwrap_or(0);
+            let mut body = vec![0u8; len];
+            self.reader.read_exact(&mut body).unwrap();
+            body
+        };
         Resp { status, headers, body: String::from_utf8(body).unwrap() }
     }
 }
@@ -493,6 +532,281 @@ fn sort_batch_fans_out_and_shares_the_cache_with_single_sorts() {
     let second = post(addr, "/v1/sort_batch", batch_body);
     assert_eq!(second.header("x-cache"), Some("hits=2 misses=0"));
     assert_eq!(second.body, first.body);
+
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Sharded serve plane: affinity routing, panic isolation, persistence,
+// streaming, rate limiting, auth.
+// ---------------------------------------------------------------------------
+
+/// A unique temp path per test invocation (std-only; no tempfile crate).
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "sssort-e2e-{tag}-{}-{}.spill",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+#[test]
+fn two_shards_split_concurrent_clients_and_stay_bit_identical() {
+    let mut cfg = serve_cfg();
+    cfg.shards = 2;
+    let server = start_server_with(cfg);
+    let addr = server.addr();
+    assert_eq!(server.shard_count(), 2);
+
+    let handles: Vec<_> = (0..8u64)
+        .map(|seed| {
+            std::thread::spawn(move || {
+                let r = post(addr, "/v1/sort", &sort_body(seed, 16));
+                assert_eq!(r.status, 200, "{}", r.body);
+                (seed, perm_of(&r.json()))
+            })
+        })
+        .collect();
+    let results: Vec<(u64, Vec<u32>)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // Sharding never changes bytes: every result equals sequential
+    // Engine::sort.
+    let engine = local_engine();
+    let g = GridShape::new(4, 4);
+    for (seed, perm) in results {
+        let expected = engine
+            .sort("softsort", &random_colors(16, seed), g, &sort_overrides(seed, 16))
+            .unwrap();
+        assert_eq!(perm, expected.perm.as_slice().to_vec(), "seed {seed}");
+    }
+
+    // The affinity hash spreads these 8 request shapes 4/4 across the two
+    // shards (deterministic: hash of method + canonical config + grid),
+    // and each shard warmed at least one step session.
+    let metrics = get(addr, "/metrics").json();
+    assert_eq!(
+        metrics.get("engine").unwrap().get("jobs").unwrap().as_usize(),
+        Some(8),
+        "all 8 sorts were engine-executed"
+    );
+    let shards = metrics.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards.len(), 2);
+    for s in shards {
+        assert_eq!(s.get("alive").unwrap().as_bool(), Some(true));
+        assert_eq!(
+            s.get("jobs").unwrap().as_usize(),
+            Some(4),
+            "affinity hash splits seeds 0..8 evenly on 2 shards"
+        );
+        assert!(
+            s.get("session_memo_entries").unwrap().as_usize().unwrap() >= 1,
+            "each shard keeps a warm step session"
+        );
+    }
+    // Uncontended sub-queues: nothing needed to steal.
+    assert_eq!(
+        metrics.get("engine").unwrap().get("shard_steals").unwrap().as_usize(),
+        Some(0)
+    );
+
+    server.shutdown();
+}
+
+#[test]
+fn killing_a_shard_degrades_capacity_but_not_availability() {
+    let mut cfg = serve_cfg();
+    cfg.shards = 2;
+    let server = start_server_with(cfg);
+    let addr = server.addr();
+
+    // Warm both shards (seed 1 homes to shard 0, seed 0 to shard 1).
+    assert_eq!(post(addr, "/v1/sort", &sort_body(1, 16)).status, 200);
+    assert_eq!(post(addr, "/v1/sort", &sort_body(0, 16)).status, 200);
+
+    server.kill_shard(0);
+
+    // Seed 3 homes to the dead shard 0 → steals to shard 1; seed 2 homes
+    // to shard 1 directly. Both still answer, bit-identical to the engine.
+    let engine = local_engine();
+    let g = GridShape::new(4, 4);
+    for seed in [3u64, 2] {
+        let r = post(addr, "/v1/sort", &sort_body(seed, 16));
+        assert_eq!(r.status, 200, "seed {seed} after shard kill: {}", r.body);
+        let expected = engine
+            .sort("softsort", &random_colors(16, seed), g, &sort_overrides(seed, 16))
+            .unwrap();
+        assert_eq!(perm_of(&r.json()), expected.perm.as_slice().to_vec(), "seed {seed}");
+    }
+
+    let health = get(addr, "/healthz").json();
+    assert_eq!(health.get("status").unwrap().as_str(), Some("degraded"));
+    assert_eq!(health.get("shards").unwrap().as_usize(), Some(2));
+    assert_eq!(health.get("shards_alive").unwrap().as_usize(), Some(1));
+
+    let metrics = get(addr, "/metrics").json();
+    let shards = metrics.get("shards").unwrap().as_arr().unwrap();
+    assert_eq!(shards[0].get("alive").unwrap().as_bool(), Some(false));
+    assert_eq!(shards[1].get("alive").unwrap().as_bool(), Some(true));
+    assert!(
+        metrics.get("engine").unwrap().get("shard_steals").unwrap().as_usize().unwrap() >= 1,
+        "the dead shard's traffic was stolen"
+    );
+
+    server.shutdown();
+}
+
+#[test]
+fn cache_file_survives_a_restart_and_replays_identical_bytes() {
+    let spill = temp_path("restart");
+    let mut cfg = serve_cfg();
+    cfg.cache_file = Some(spill.to_string_lossy().into_owned());
+
+    // First server: a miss computes and spills.
+    let server = start_server_with(cfg.clone());
+    let addr = server.addr();
+    let first = post(addr, "/v1/sort", &sort_body(9, 24));
+    assert_eq!(first.status, 200, "{}", first.body);
+    assert_eq!(first.header("x-cache"), Some("miss"));
+    let persisted = get(addr, "/metrics").json();
+    assert!(
+        persisted.get("cache_persist").unwrap().get("appends").unwrap().as_usize().unwrap() >= 1,
+        "the miss was appended to the spill file"
+    );
+    server.shutdown();
+
+    // Second server, same spill file: the very first request is a hit with
+    // byte-identical body and zero engine work.
+    let server = start_server_with(cfg);
+    let addr = server.addr();
+    let replayed = post(addr, "/v1/sort", &sort_body(9, 24));
+    assert_eq!(replayed.status, 200, "{}", replayed.body);
+    assert_eq!(replayed.header("x-cache"), Some("hit"), "first post-restart request hits");
+    assert_eq!(replayed.body, first.body, "replayed body is byte-identical");
+
+    let metrics = get(addr, "/metrics").json();
+    assert_eq!(
+        metrics.get("engine").unwrap().get("jobs").unwrap().as_usize(),
+        Some(0),
+        "the restarted server never touched its engine"
+    );
+    assert!(
+        metrics.get("cache_persist").unwrap().get("replayed").unwrap().as_usize().unwrap() >= 1,
+        "boot replayed the spill file"
+    );
+    server.shutdown();
+    let _ = std::fs::remove_file(&spill);
+}
+
+#[test]
+fn large_arranged_responses_stream_chunked_and_match_buffered_bytes() {
+    // stream_min_n below this grid's N=16 → the arranged response streams.
+    let mut cfg = serve_cfg();
+    cfg.stream_min_n = 8;
+    let streaming = start_server_with(cfg);
+    let r = post(streaming.addr(), "/v1/sort", &sort_body(7, 16));
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(r.header("transfer-encoding"), Some("chunked"));
+    assert_eq!(r.header("content-length"), None, "streamed responses have no length");
+    assert_eq!(r.header("x-cache"), Some("bypass"), "streamed bodies skip the cache");
+    streaming.shutdown();
+
+    // A default server buffers the same request; the bytes must match.
+    let buffered_server = start_server();
+    let buffered = post(buffered_server.addr(), "/v1/sort", &sort_body(7, 16));
+    assert_eq!(buffered.status, 200, "{}", buffered.body);
+    assert_eq!(buffered.header("transfer-encoding"), None);
+    assert_eq!(
+        r.body, buffered.body,
+        "chunked and buffered paths must produce identical JSON bytes"
+    );
+    assert!(r.json().get("arranged").is_some());
+    buffered_server.shutdown();
+}
+
+#[test]
+fn rate_limit_answers_429_but_spares_healthz() {
+    let mut cfg = serve_cfg();
+    cfg.rate_limit = 1; // burst 2
+    let server = start_server_with(cfg);
+    let addr = server.addr();
+
+    let mut ok = 0usize;
+    let mut throttled = 0usize;
+    for _ in 0..5 {
+        let r = get(addr, "/v1/methods");
+        match r.status {
+            200 => ok += 1,
+            429 => {
+                throttled += 1;
+                let msg = r.json().get("error").unwrap().get("message").unwrap()
+                    .as_str().unwrap().to_string();
+                assert!(msg.contains("rate limit"), "{msg}");
+            }
+            other => panic!("unexpected status {other}: {}", r.body),
+        }
+    }
+    assert!(ok >= 1, "the burst admits the first requests");
+    assert!(throttled >= 1, "5 rapid requests at 1/s must trip the limiter");
+
+    // /healthz is exempt — probes keep working mid-throttle.
+    assert_eq!(get(addr, "/healthz").status, 200);
+
+    // After a refill interval the same client is admitted again, so the
+    // metrics scrape itself is not throttled.
+    std::thread::sleep(Duration::from_millis(2600));
+    let r = get(addr, "/metrics");
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert!(
+        r.json().get("listener").unwrap().get("rate_limited").unwrap().as_usize().unwrap()
+            >= throttled,
+        "throttles are counted"
+    );
+
+    server.shutdown();
+}
+
+#[test]
+fn bearer_auth_guards_everything_but_healthz() {
+    let mut cfg = serve_cfg();
+    cfg.auth_token = Some("secret-tok".to_string());
+    let server = start_server_with(cfg);
+    let addr = server.addr();
+
+    // Probes stay open.
+    assert_eq!(get(addr, "/healthz").status, 200);
+
+    // No header → 401 with the expected scheme advertised.
+    let r = get(addr, "/v1/methods");
+    assert_eq!(r.status, 401, "{}", r.body);
+    assert_eq!(r.header("www-authenticate"), Some("Bearer"));
+    assert!(r.json().get("error").is_some());
+
+    // Wrong token → 401; right token → 200.
+    let r = Client::connect(addr).request_with_headers(
+        "GET", "/v1/methods", "", true, &[("Authorization", "Bearer wrong")],
+    );
+    assert_eq!(r.status, 401, "{}", r.body);
+    let r = Client::connect(addr).request_with_headers(
+        "GET", "/v1/methods", "", true, &[("Authorization", "Bearer secret-tok")],
+    );
+    assert_eq!(r.status, 200, "{}", r.body);
+
+    // Sorts work with credentials too, and the failures were counted.
+    let r = Client::connect(addr).request_with_headers(
+        "POST", "/v1/sort", &sort_body(2, 16), true,
+        &[("Authorization", "Bearer secret-tok")],
+    );
+    assert_eq!(r.status, 200, "{}", r.body);
+    let m = Client::connect(addr).request_with_headers(
+        "GET", "/metrics", "", true, &[("Authorization", "Bearer secret-tok")],
+    );
+    assert_eq!(
+        m.json().get("listener").unwrap().get("auth_failures").unwrap().as_usize(),
+        Some(2)
+    );
 
     server.shutdown();
 }
