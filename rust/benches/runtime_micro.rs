@@ -151,6 +151,59 @@ fn main() {
         samples.push(s);
     }
 
+    // ---- tracing overhead: disabled vs enabled around the step kernel ----
+    // The PR-3 invariant says a disabled tracing spine costs one relaxed
+    // atomic load per gate; the enabled cost (two clock reads + a ring
+    // write per span) must stay small against a real step. Measured here
+    // on the n=1024 session-reuse hot path, same shape as above. The
+    // bench owns this process, so toggling the global flag is safe.
+    {
+        let n = 1024usize;
+        let ds = random_colors(n, 1);
+        let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let inv: Vec<i32> = (0..n as i32).collect();
+        let shape = StepShape::new(GridShape::new(32, n / 32), 3);
+        let mut session = native.session(shape, None).unwrap();
+        let mut step = SssStep::new_for(shape);
+
+        shufflesort::trace::set_enabled(false);
+        let off = bench("sss_step n=1024 tracing disabled", 2, reps, || {
+            let mut clock = shufflesort::trace::StepClock::start(shufflesort::trace::current());
+            let loss = clock.time(shufflesort::trace::FAM_SSS, || {
+                session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
+                step.loss
+            });
+            clock.emit();
+            loss
+        });
+        println!("{}", off.line());
+
+        shufflesort::trace::set_enabled(true);
+        let root = shufflesort::trace::Span::root("bench");
+        let _cur = root.make_current();
+        let on = bench("sss_step n=1024 tracing enabled", 2, reps, || {
+            let mut clock = shufflesort::trace::StepClock::start(shufflesort::trace::current());
+            let loss = clock.time(shufflesort::trace::FAM_SSS, || {
+                session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
+                step.loss
+            });
+            clock.emit();
+            loss
+        });
+        drop(_cur);
+        root.end();
+        shufflesort::trace::set_enabled(false);
+        println!("{}", on.line());
+        println!(
+            "    tracing overhead at n=1024: {:+.2}% (enabled {:.3} ms vs disabled {:.3} ms per step)",
+            100.0 * (on.mean_s / off.mean_s.max(1e-12) - 1.0),
+            on.mean_s * 1e3,
+            off.mean_s * 1e3
+        );
+        samples.push(off);
+        samples.push(on);
+    }
+
     // ---- pure-Rust substrate costs on the same scale ---------------------
     let mut rng = Pcg32::new(3);
     let cost: Vec<f64> = (0..256 * 256).map(|_| rng.f64()).collect();

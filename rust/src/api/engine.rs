@@ -39,6 +39,7 @@ use crate::backend::PjrtBackend;
 use crate::coordinator::SortOutcome;
 use crate::data::Dataset;
 use crate::grid::GridShape;
+use crate::trace;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Executable, Runtime};
 
@@ -414,6 +415,9 @@ impl Engine {
         let registry = self.registry;
         let dir = &self.artifacts_dir;
         let rest = &rest;
+        // Trace context crosses the thread boundary by value: each worker
+        // re-parents per-item spans under the caller's current span.
+        let batch_ctx = trace::current();
         let mut out: Vec<Option<Result<SortOutcome>>> = (0..m).map(|_| None).collect();
 
         std::thread::scope(|scope| {
@@ -454,7 +458,12 @@ impl Engine {
                         Err(e) => return fail(e, idxs),
                     };
                     idxs.into_iter()
-                        .map(|i| (i, sorter.sort(&datasets[i], g)))
+                        .map(|i| {
+                            let mut span = trace::Span::child_of(batch_ctx, "batch_item");
+                            span.attr_u64("item", i as u64);
+                            let _cur = span.make_current();
+                            (i, sorter.sort(&datasets[i], g))
+                        })
                         .collect::<Vec<_>>()
                 }));
             }

@@ -112,6 +112,10 @@ impl NativeBackend {
         } else {
             requested.min(shape.n.div_ceil(ROW_CHUNK))
         };
+        let mut span = crate::trace::Span::child("session_build");
+        span.attr_u64("n", shape.n as u64);
+        span.attr_u64("d", shape.d as u64);
+        span.attr_u64("threads", effective as u64);
         Ok(Box::new(NativeSession::new(shape, effective)?))
     }
 }

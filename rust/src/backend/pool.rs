@@ -114,6 +114,8 @@ impl WorkerPool {
     /// (index 0 is the dispatching thread itself, so a pool for T-way
     /// parallelism spawns T−1 threads).
     pub fn new(spawned: usize) -> Self {
+        let mut span = crate::trace::Span::child("pool_spawn");
+        span.attr_u64("threads", spawned as u64);
         let ctl = Arc::new(Control {
             state: Mutex::new(State {
                 epoch: 0,

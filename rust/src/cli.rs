@@ -74,7 +74,7 @@ const KNOWN_VALUE_OPTS: &[&str] = &[
     "n", "grid", "method", "out", "seed", "config", "artifacts", "dataset",
     "bits", "entropy", "scene-seed", "clusters", "dims", "batch", "workers",
     "backend", "threads", "addr", "cache-mb", "tile-n", "shards",
-    "cache-file", "rate-limit", "auth-token",
+    "cache-file", "rate-limit", "auth-token", "trace-file",
 ];
 
 pub const USAGE: &str = "\
@@ -83,7 +83,8 @@ sssort — ShuffleSoftSort permutation-learning coordinator
 USAGE:
   sssort sort    [--method NAME] [--grid HxW] [--dataset colors|features]
                  [--backend auto|native|pjrt] [--threads T] [--tile-n T]
-                 [--seed S] [--batch K] [--workers W] [--out dir] [k=v ...]
+                 [--seed S] [--batch K] [--workers W] [--out dir]
+                 [--trace-file PATH] [k=v ...]
                  sort dataset(s), report DPQ (batch >1 fans out across threads)
   sssort serve   [--addr HOST:PORT] [--workers W] [--cache-mb MB]
                  [--shards K] [--cache-file PATH] [--rate-limit R]
@@ -110,7 +111,9 @@ worker pool; 0 = backend default. Results never depend on it.
 shuffle-softsort: independent per-tile SoftSort solves of ~T cells keep
 per-step cost and memory at O(tile_n^2) instead of O(N^2) — use it for
 large grids (README section Scaling). For `serve`, k=v pairs configure the
-service (queue_depth, max_body_bytes, arranged_max_n, ...).
+service (queue_depth, max_body_bytes, arranged_max_n, trace, ...).
+`--trace-file PATH` (sort) records the run's span tree — phases, tiles,
+step kernels — as Chrome trace-event JSON; open it in chrome://tracing.
 ";
 
 /// Full usage text: the static grammar plus the live method list from the
@@ -248,6 +251,14 @@ mod tests {
         for flag in ["--shards", "--cache-file", "--rate-limit", "--auth-token"] {
             assert!(usage().contains(flag), "usage() missing {flag}");
         }
+    }
+
+    #[test]
+    fn trace_file_takes_a_value() {
+        let a = parse(&["sort", "--trace-file", "/tmp/trace.json", "--method", "sss"]);
+        assert_eq!(a.opt("trace-file"), Some("/tmp/trace.json"));
+        assert!(a.positional.is_empty());
+        assert!(usage().contains("--trace-file"));
     }
 
     #[test]

@@ -392,6 +392,12 @@ pub struct ServeConfig {
     /// transfer coding (and bypass the result cache) instead of buffering
     /// the full body.
     pub stream_min_n: usize,
+    /// Request tracing (`trace=false` disables): each request gets a span
+    /// tree (routing, queue wait, engine phases/tiles) retrievable at
+    /// `GET /v1/trace/<id>` via the `X-Trace-Id` header, and convergence
+    /// telemetry feeds the `/metrics` histograms. On by default — the
+    /// per-step cost when a request is untraced is a relaxed atomic load.
+    pub trace: bool,
 }
 
 impl Default for ServeConfig {
@@ -411,6 +417,7 @@ impl Default for ServeConfig {
             rate_limit: 0,
             auth_token: None,
             stream_min_n: 4096,
+            trace: true,
         }
     }
 }
@@ -435,10 +442,11 @@ impl ServeConfig {
                 self.auth_token = (!value.is_empty()).then(|| value.to_string());
             }
             "stream_min_n" => self.stream_min_n = value.parse()?,
+            "trace" => self.trace = value.parse()?,
             _ => bail!(
                 "unknown serve config key '{key}' (allowed: addr, workers, cache_mb, \
                  queue_depth, max_body_bytes, keep_alive_secs, arranged_max_n, shards, \
-                 cache_file, rate_limit, auth_token, stream_min_n)"
+                 cache_file, rate_limit, auth_token, stream_min_n, trace)"
             ),
         }
         Ok(())
@@ -758,6 +766,17 @@ mod tests {
         assert_eq!(c.stream_min_n, 8);
         assert!(c.set("shards", "many").is_err());
         assert!(c.set("rate_limit", "-2").is_err());
+    }
+
+    #[test]
+    fn serve_config_trace_key() {
+        let mut c = ServeConfig::default();
+        assert!(c.trace, "tracing is on by default");
+        c.set("trace", "false").unwrap();
+        assert!(!c.trace);
+        c.set("trace", "true").unwrap();
+        assert!(c.trace);
+        assert!(c.set("trace", "sometimes").is_err());
     }
 
     #[test]

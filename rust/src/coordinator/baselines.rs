@@ -17,6 +17,7 @@ use crate::config::{BaselineConfig, ShuffleSoftSortConfig};
 use crate::data::Dataset;
 use crate::metrics::dpq16;
 use crate::perm::{repair, Permutation};
+use crate::trace;
 use crate::util::rng::Pcg32;
 use crate::util::stats::mean_pairwise_distance;
 use crate::util::timer::Stopwatch;
@@ -70,12 +71,15 @@ impl<'b> SoftSortDriver<'b> {
         let mut w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
         let mut adam = Adam::new(self.cfg.adam.clone(), n);
         let mut idx = vec![0u32; n];
+        let mut clock = trace::StepClock::start(trace::current());
         for s in 0..self.cfg.steps {
             let tau = self.cfg.tau.phase_tau(s, self.cfg.steps);
             report.sections.time("execute", || {
-                session.sss_step(&w, &data.rows, &identity_inv, tau, norm, &mut step)
+                clock.time(trace::FAM_SSS, || {
+                    session.sss_step(&w, &data.rows, &identity_inv, tau, norm, &mut step)
+                })
             })?;
-            adam.step(&mut w, &step.grad);
+            clock.time(trace::FAM_ADAM, || adam.step(&mut w, &step.grad));
             report.record(0, s, tau, step.loss as f64);
             if s + 1 == self.cfg.steps {
                 for (dst, &v) in idx.iter_mut().zip(&step.sort_idx) {
@@ -83,6 +87,7 @@ impl<'b> SoftSortDriver<'b> {
                 }
             }
         }
+        clock.emit();
 
         let perm = if Permutation::count_duplicates(&idx) == 0 {
             Permutation::from_vec(idx).expect("checked")
@@ -146,6 +151,7 @@ impl<'b> GumbelSinkhornDriver<'b> {
         let mut adam = Adam::new(self.cfg.adam.clone(), n * n);
         let mut gumbel = vec![0.0f32; n * n];
 
+        let mut clock = trace::StepClock::start(trace::current());
         for s in 0..self.cfg.steps {
             let tau = self.cfg.tau.phase_tau(s, self.cfg.steps);
             // Fresh noise each step, annealed with the temperature.
@@ -156,10 +162,12 @@ impl<'b> GumbelSinkhornDriver<'b> {
                 }
             });
             report.sections.time("execute", || {
-                session.gs_step(&logits, &data.rows, &gumbel, tau, norm, &mut step)
+                clock.time(trace::FAM_GS, || {
+                    session.gs_step(&logits, &data.rows, &gumbel, tau, norm, &mut step)
+                })
             })?;
             report.sections.time("adam", || {
-                adam.step(&mut logits, &step.grad);
+                clock.time(trace::FAM_ADAM, || adam.step(&mut logits, &step.grad));
             });
             report.record(0, s, tau, step.loss as f64);
         }
@@ -168,8 +176,11 @@ impl<'b> GumbelSinkhornDriver<'b> {
         // then the optimal assignment via Jonker–Volgenant on -P.
         let mut p = Vec::new();
         report.sections.time("execute", || {
-            session.gs_probe(&logits, self.cfg.tau.tau_end, &mut p)
+            clock.time(trace::FAM_GS, || {
+                session.gs_probe(&logits, self.cfg.tau.tau_end, &mut p)
+            })
         })?;
+        clock.emit();
         let perm = report.sections.time("extract", || {
             let mut cost = vec![0.0f64; n * n];
             for (c, &v) in cost.iter_mut().zip(&p) {
@@ -231,14 +242,19 @@ impl<'b> KissingDriver<'b> {
         let mut adam_w = Adam::new(self.cfg.adam.clone(), n * m);
         let mut idx = vec![0u32; n];
 
+        let mut clock = trace::StepClock::start(trace::current());
         for s in 0..self.cfg.steps {
             let tau = self.cfg.tau.phase_tau(s, self.cfg.steps);
             report.sections.time("execute", || {
-                session.kiss_step(m, &v, &wf, &data.rows, tau, norm, &mut step)
+                clock.time(trace::FAM_KISS, || {
+                    session.kiss_step(m, &v, &wf, &data.rows, tau, norm, &mut step)
+                })
             })?;
             report.sections.time("adam", || {
-                adam_v.step(&mut v, &step.grad_v);
-                adam_w.step(&mut wf, &step.grad_w);
+                clock.time(trace::FAM_ADAM, || {
+                    adam_v.step(&mut v, &step.grad_v);
+                    adam_w.step(&mut wf, &step.grad_w);
+                });
             });
             report.record(0, s, tau, step.loss as f64);
             if s + 1 == self.cfg.steps {
@@ -247,6 +263,7 @@ impl<'b> KissingDriver<'b> {
                 }
             }
         }
+        clock.emit();
 
         let dups = Permutation::count_duplicates(&idx);
         let perm = if dups == 0 {

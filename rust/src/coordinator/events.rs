@@ -1,6 +1,7 @@
 //! Run reporting: loss curves, validity statistics and section timings —
 //! everything EXPERIMENTS.md records per run.
 
+use crate::trace;
 use crate::util::timer::Sections;
 
 /// One recorded optimization event (per inner iteration or per phase).
@@ -45,6 +46,22 @@ impl RunReport {
         self.curve.push(CurvePoint { phase, iter, tau, loss });
         self.final_loss = loss;
         self.steps += 1;
+    }
+
+    /// Attach the run's convergence summary to a trace span — the bridge
+    /// between `RunReport` and the observability layer. No-op when the
+    /// span is not recording.
+    pub fn trace_attrs(&self, span: &mut trace::Span) {
+        if !span.is_recording() {
+            return;
+        }
+        span.attr_u64("steps", self.steps as u64);
+        span.attr_u64("extensions", self.extensions as u64);
+        span.attr_u64("rejected_phases", self.rejected_phases as u64);
+        span.attr_u64("tiles", self.tiles as u64);
+        span.attr_f64("final_loss", self.final_loss);
+        span.attr_f64("final_dpq", self.final_dpq);
+        span.attr_f64("wall_secs", self.wall_secs);
     }
 
     /// Loss of the first/last recorded step — convergence summary.

@@ -41,6 +41,8 @@ use crate::backend::{SssStep, StepBackend, StepSession, StepShape};
 use crate::config::ShuffleSoftSortConfig;
 use crate::grid::GridShape;
 use crate::perm::{repair, Permutation};
+use crate::trace;
+use crate::util::timer::Sections;
 
 use super::events::RunReport;
 use super::optimizer::Adam;
@@ -56,6 +58,9 @@ pub(crate) trait PhaseExecutor {
     /// arrangement) and return the sort permutation in shuffled-slot
     /// coordinates. `shuf`/`inv` are the phase shuffle and its inverse
     /// (`inv_idx` is `inv` pre-widened to the step's i32 argument).
+    /// `trace_ctx` is the phase span the executor's tile spans hang under
+    /// (`None` — the usual case — records nothing; sampling decisions made
+    /// by the driver flow through it).
     #[allow(clippy::too_many_arguments)]
     fn run_phase(
         &mut self,
@@ -66,6 +71,7 @@ pub(crate) trait PhaseExecutor {
         inv: &Permutation,
         inv_idx: &[i32],
         report: &mut RunReport,
+        trace_ctx: Option<trace::SpanContext>,
     ) -> Result<Permutation>;
 }
 
@@ -128,7 +134,12 @@ fn run_inner_loop<S: StepSession + ?Sized>(
     tau: f32,
     norm: f32,
     cfg: &ShuffleSoftSortConfig,
+    trace_ctx: Option<trace::SpanContext>,
 ) -> Result<(Permutation, LoopStats)> {
+    // Step-family telemetry: aggregated per family and emitted as one
+    // span per family at loop end — inert (no clock reads, no records)
+    // unless tracing is on AND this loop was handed a parent span.
+    let mut clock = trace::StepClock::start(trace_ctx);
     let n = inv_idx.len();
     // Fresh order-preserving weights + fresh optimizer moments. The ramp
     // has unit spacing, so τ directly reads as the softmax bandwidth in
@@ -146,9 +157,9 @@ fn run_inner_loop<S: StepSession + ?Sized>(
 
     for i in 0..cfg.inner_iters {
         let tau_i = cfg.tau.inner_tau(tau, i, cfg.inner_iters);
-        session.sss_step(&bufs.w, x, inv_idx, tau_i, norm, step)?;
+        clock.time(trace::FAM_SSS, || session.sss_step(&bufs.w, x, inv_idx, tau_i, norm, step))?;
         bufs.losses.push(step.loss as f64);
-        adam.step(&mut bufs.w, &step.grad);
+        clock.time(trace::FAM_ADAM, || adam.step(&mut bufs.w, &step.grad));
         if i + 1 == cfg.inner_iters {
             bufs.last_idx.clear();
             bufs.last_idx.extend_from_slice(&step.sort_idx);
@@ -160,6 +171,7 @@ fn run_inner_loop<S: StepSession + ?Sized>(
     bufs.idx.clear();
     bufs.idx.extend(bufs.last_idx.iter().map(|&v| v as u32));
     if Permutation::count_duplicates(&bufs.idx) == 0 {
+        clock.emit();
         return Ok((Permutation::from_vec(bufs.idx.clone()).expect("checked"), stats));
     }
 
@@ -171,14 +183,17 @@ fn run_inner_loop<S: StepSession + ?Sized>(
     for _ in 0..cfg.max_extensions {
         stats.extensions += 1;
         tau_ext *= 0.6;
-        session.sss_step(&bufs.w_ext, x, inv_idx, tau_ext, norm, step)?;
-        adam.step(&mut bufs.w_ext, &step.grad);
+        clock
+            .time(trace::FAM_SSS, || session.sss_step(&bufs.w_ext, x, inv_idx, tau_ext, norm, step))?;
+        clock.time(trace::FAM_ADAM, || adam.step(&mut bufs.w_ext, &step.grad));
         bufs.idx.clear();
         bufs.idx.extend(step.sort_idx.iter().map(|&v| v as u32));
         if Permutation::count_duplicates(&bufs.idx) == 0 {
+            clock.emit();
             return Ok((Permutation::from_vec(bufs.idx.clone()).expect("checked"), stats));
         }
     }
+    clock.emit();
 
     // Rare fallback: deterministic greedy repair (counted in the report —
     // this is what the paper's "Stability" row measures).
@@ -271,7 +286,14 @@ impl PhaseExecutor for FullExecutor {
         _inv: &Permutation,
         inv_idx: &[i32],
         report: &mut RunReport,
+        trace_ctx: Option<trace::SpanContext>,
     ) -> Result<Permutation> {
+        // The full executor is one whole-problem tile, and traces as one:
+        // sampled phases get a single `tile` span covering the inner loop.
+        let mut tspan = trace::Span::child_of(trace_ctx, "tile");
+        tspan.attr_u64("tile", 0);
+        tspan.attr_u64("n", inv_idx.len() as u64);
+        let tile_ctx = tspan.ctx();
         // The "execute" section now covers the whole inner loop — steps,
         // optimizer and extraction — where the pre-executor driver split
         // out a separate "adam" section (the baselines still do).
@@ -286,8 +308,10 @@ impl PhaseExecutor for FullExecutor {
                 tau,
                 self.norm,
                 &self.cfg,
+                tile_ctx,
             )
         })?;
+        tspan.end();
         record_phase(report, &self.cfg, r, tau, &self.bufs.losses, stats);
         Ok(perm)
     }
@@ -446,6 +470,7 @@ impl<S: StepSession + ?Sized> TileWorker<S> {
     #[allow(clippy::too_many_arguments)]
     fn run_tile(
         &mut self,
+        tile: usize,
         spec: &TileSpec,
         x_shuf: &[f32],
         inv_perm: &[u32],
@@ -455,7 +480,11 @@ impl<S: StepSession + ?Sized> TileWorker<S> {
         tau: f32,
         norm: f32,
         d: usize,
+        phase_ctx: Option<trace::SpanContext>,
     ) -> Result<TileOutcome> {
+        let mut span = trace::Span::child_of(phase_ctx, "tile");
+        span.attr_u64("tile", tile as u64);
+        span.attr_u64("n", members.len() as u64);
         let slot = &mut self.slots[spec.shape_idx];
         let n_b = members.len();
         debug_assert_eq!(n_b, slot.shape.n);
@@ -467,18 +496,27 @@ impl<S: StepSession + ?Sized> TileWorker<S> {
         self.inv_tile.clear();
         self.inv_tile
             .extend((0..n_b).map(|q| rank[inv_perm[spec.pos0 + q] as usize] as i32));
-        let (perm, stats) = run_inner_loop(
-            self.sessions[spec.shape_idx].as_mut(),
-            &mut slot.step,
-            &mut slot.adam,
-            &mut self.bufs,
-            &self.x_tile,
-            &self.inv_tile,
-            tau,
-            norm,
-            cfg,
-        )?;
-        Ok(TileOutcome { perm, losses: self.bufs.losses.clone(), stats })
+        // Per-tile sections, folded into `RunReport.sections` in
+        // tile-index order by the fold — the tile timings used to be
+        // dropped on the floor here, leaving tiled runs with a bare
+        // wall-clock "execute" entry.
+        let mut sections = Sections::new();
+        let (perm, stats) = sections.time("execute", || {
+            run_inner_loop(
+                self.sessions[spec.shape_idx].as_mut(),
+                &mut slot.step,
+                &mut slot.adam,
+                &mut self.bufs,
+                &self.x_tile,
+                &self.inv_tile,
+                tau,
+                norm,
+                cfg,
+                span.ctx(),
+            )
+        })?;
+        span.end();
+        Ok(TileOutcome { perm, losses: self.bufs.losses.clone(), stats, sections })
     }
 }
 
@@ -487,6 +525,7 @@ struct TileOutcome {
     perm: Permutation,
     losses: Vec<f64>,
     stats: LoopStats,
+    sections: Sections,
 }
 
 /// A tile's result slot: written once by whichever worker ran the tile,
@@ -577,7 +616,13 @@ impl TiledExecutor {
 
     /// Dispatch every tile (parallel when a pool exists) and leave each
     /// outcome in its `results` slot.
-    fn dispatch_tiles(&mut self, tau: f32, x_shuf: &[f32], inv: &Permutation) -> Result<()> {
+    fn dispatch_tiles(
+        &mut self,
+        tau: f32,
+        x_shuf: &[f32],
+        inv: &Permutation,
+        phase_ctx: Option<trace::SpanContext>,
+    ) -> Result<()> {
         let plan = &self.plan;
         let members = &self.members;
         let rank = &self.rank;
@@ -595,6 +640,7 @@ impl TiledExecutor {
                 let mut b = wk;
                 while b < b_total {
                     let out = w.run_tile(
+                        b,
                         &plan.tiles[b],
                         x_shuf,
                         inv_perm,
@@ -604,6 +650,7 @@ impl TiledExecutor {
                         tau,
                         norm,
                         d,
+                        phase_ctx,
                     );
                     *results[b].lock().expect("tile result mutex poisoned") = Some(out);
                     b += active;
@@ -613,8 +660,9 @@ impl TiledExecutor {
         } else {
             let w = self.seq.as_mut().expect("tiled executor has a sequential worker");
             for (b, spec) in plan.tiles.iter().enumerate() {
-                let out =
-                    w.run_tile(spec, x_shuf, inv_perm, &members[b], rank, cfg, tau, norm, d);
+                let out = w.run_tile(
+                    b, spec, x_shuf, inv_perm, &members[b], rank, cfg, tau, norm, d, phase_ctx,
+                );
                 *results[b].lock().expect("tile result mutex poisoned") = Some(out);
             }
         }
@@ -636,6 +684,7 @@ impl PhaseExecutor for TiledExecutor {
         inv: &Permutation,
         _inv_idx: &[i32],
         report: &mut RunReport,
+        trace_ctx: Option<trace::SpanContext>,
     ) -> Result<Permutation> {
         let started = std::time::Instant::now();
         let n = shuf.len();
@@ -654,7 +703,7 @@ impl PhaseExecutor for TiledExecutor {
             self.members[t].push(j as u32);
         }
 
-        self.dispatch_tiles(tau, x_shuf, inv)?;
+        self.dispatch_tiles(tau, x_shuf, inv, trace_ctx)?;
 
         // Fold in tile-index order: deterministic no matter how the
         // dispatch interleaved. The per-tile permutations compose into one
@@ -683,6 +732,10 @@ impl PhaseExecutor for TiledExecutor {
             }
             stats.extensions += out.stats.extensions;
             stats.repaired += out.stats.repaired;
+            // Per-tile timings fold in tile-index order — "execute" now
+            // sums the tiles' compute (it can exceed the phase wall time
+            // under parallel dispatch; "dispatch" below is the wall).
+            report.sections.merge(&out.sections);
             ensure!(
                 out.perm.len() == mem.len(),
                 "tile {b}: permutation over {} slots, expected {}",
@@ -693,7 +746,7 @@ impl PhaseExecutor for TiledExecutor {
                 sort_vec[mem[t] as usize] = mem[p as usize];
             }
         }
-        report.sections.add("execute", started.elapsed());
+        report.sections.add("dispatch", started.elapsed());
         record_phase(report, &self.cfg, r, tau, &self.agg_losses, stats);
         Permutation::from_vec(sort_vec)
             .map_err(|e| anyhow!("tiled phase composition is not a bijection: {e}"))

@@ -39,6 +39,7 @@ use crate::config::ShuffleSoftSortConfig;
 use crate::data::Dataset;
 use crate::metrics::dpq16;
 use crate::perm::{Permutation, Tracker};
+use crate::trace;
 use crate::util::rng::Pcg32;
 use crate::util::stats::mean_pairwise_distance;
 use crate::util::timer::Stopwatch;
@@ -117,8 +118,21 @@ pub(crate) fn run_shuffle_softsort(
     // acceptance recomputes only the trial side — §Perf L3 optimization).
     let mut nbr_cur = crate::metrics::mean_neighbor_distance(&x_cur, d, g);
 
+    // Phase spans are sampled so long runs (phases in the tens of
+    // thousands) keep at most ~64 of them per trace — the step-family
+    // clocks inside the executor aggregate the rest regardless.
+    let trace_parent = trace::current();
+    let trace_stride = (cfg.phases / 64).max(1);
+
     for r in 0..cfg.phases {
         let tau = cfg.tau.phase_tau(r, cfg.phases);
+        let mut pspan = trace::Span::child_of(
+            trace_parent.filter(|_| r % trace_stride == 0),
+            "phase",
+        );
+        pspan.attr_u64("phase", r as u64);
+        pspan.attr_f64("tau", tau as f64);
+        let rejected_before = report.rejected_phases;
 
         let shuf = cfg.shuffle.shuffle_for_phase(r, g, &mut rng);
         shuf.apply_rows_into(&x_cur, d, &mut x_shuf);
@@ -128,8 +142,16 @@ pub(crate) fn run_shuffle_softsort(
         }
 
         // Inner optimization + hard extraction, executor-specific.
-        let sort_perm =
-            exec.run_phase(r, tau, &x_shuf, &shuf, &inv, &inv_idx_i32, &mut report)?;
+        let sort_perm = exec.run_phase(
+            r,
+            tau,
+            &x_shuf,
+            &shuf,
+            &inv,
+            &inv_idx_i32,
+            &mut report,
+            pspan.ctx(),
+        )?;
 
         // Greedy acceptance: adopt the phase only if the *hard* neighbor
         // metric does not regress. The trial arrangement is the phase
@@ -163,6 +185,17 @@ pub(crate) fn run_shuffle_softsort(
             });
             std::mem::swap(&mut x_cur, &mut x_trial);
         }
+
+        if pspan.is_recording() {
+            if let Some(p) = report.curve.last() {
+                pspan.attr_f64("loss", p.loss);
+            }
+            pspan.attr_u64(
+                "accepted",
+                (report.rejected_phases == rejected_before) as u64,
+            );
+        }
+        pspan.end();
     }
 
     let arranged = x_cur;

@@ -77,6 +77,7 @@ pub mod perm;
 pub mod runtime;
 pub mod serve;
 pub mod sog;
+pub mod trace;
 pub mod util;
 
 /// Convenience re-exports for the common entry points.

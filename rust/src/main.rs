@@ -12,9 +12,11 @@ use shufflesort::data::{self, Dataset};
 use shufflesort::grid::GridShape;
 use shufflesort::metrics::{dpq16, mean_neighbor_distance};
 use shufflesort::serve::{self, EngineSpec};
+use shufflesort::serve::json;
 use shufflesort::sog::codec::CodecConfig;
 use shufflesort::sog::scene::{GaussianScene, SceneConfig};
 use shufflesort::sog::{run_pipeline, SorterKind};
+use shufflesort::trace;
 use shufflesort::util::ppm;
 
 fn main() {
@@ -87,6 +89,13 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
         }
     };
 
+    // `--trace-file PATH`: record the run's span tree (phases, tiles,
+    // step kernels) and write it as Chrome trace-event JSON.
+    let trace_file = args.opt("trace-file");
+    if trace_file.is_some() {
+        trace::enable();
+    }
+
     if batch > 1 {
         let datasets: Vec<Dataset> =
             (0..batch).map(|i| make_dataset(seed + i as u64)).collect::<Result<_>>()?;
@@ -96,8 +105,16 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
             spec.name,
             engine.workers().min(batch)
         );
+        let root =
+            if trace_file.is_some() { trace::Span::root("sort_batch") } else { trace::Span::off() };
+        let results = {
+            let _cur = root.make_current();
+            engine.sort_batch(spec.name, &datasets, g, &overrides)
+        };
+        let trace_id = root.ctx().map(|c| c.trace_id);
+        root.end();
         let mut failed = 0usize;
-        for (i, result) in engine.sort_batch(spec.name, &datasets, g, &overrides).iter().enumerate() {
+        for (i, result) in results.iter().enumerate() {
             match result {
                 Ok(out) => {
                     println!("[{i}] {}", out.report.summary());
@@ -110,6 +127,9 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
                     println!("[{i}] error: {e:#}");
                 }
             }
+        }
+        if let (Some(path), Some(id)) = (trace_file, trace_id) {
+            write_trace_file(path, id)?;
         }
         if failed > 0 {
             bail!("{failed}/{batch} batch items failed");
@@ -125,7 +145,14 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
     let base_dpq = dpq16(&dataset.rows, dataset.d, g);
     println!("unsorted: nbr={base_nbr:.4} dpq16={base_dpq:.3}");
 
-    let outcome = engine.sort(spec.name, &dataset, g, &overrides)?;
+    let mut root = if trace_file.is_some() { trace::Span::root("sort") } else { trace::Span::off() };
+    let outcome = {
+        let _cur = root.make_current();
+        engine.sort(spec.name, &dataset, g, &overrides)?
+    };
+    outcome.report.trace_attrs(&mut root);
+    let trace_id = root.ctx().map(|c| c.trace_id);
+    root.end();
 
     println!("{}", outcome.report.summary());
     println!("sections: {}", outcome.report.sections.report());
@@ -138,6 +165,27 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
     if let Some(dir) = args.opt("out") {
         write_outputs(dir, spec.name, g, "", &outcome, dataset.d)?;
     }
+    if let (Some(path), Some(id)) = (trace_file, trace_id) {
+        write_trace_file(path, id)?;
+    }
+    Ok(())
+}
+
+/// Assemble the finished trace and write it in Chrome trace-event form.
+fn write_trace_file(path: &str, trace_id: u64) -> Result<()> {
+    let t = trace::finish(trace_id).ok_or_else(|| {
+        anyhow!("trace {} recorded no spans", trace::format_trace_id(trace_id))
+    })?;
+    std::fs::write(path, json::to_string_pretty(&trace::chrome_trace_json(&t)))?;
+    let dropped = if t.dropped > 0 {
+        format!(", {} dropped", t.dropped)
+    } else {
+        String::new()
+    };
+    println!(
+        "wrote {path} ({} spans{dropped}; open in chrome://tracing or Perfetto)",
+        t.spans.len()
+    );
     Ok(())
 }
 

@@ -18,6 +18,7 @@ use std::time::Instant;
 
 use super::json::{arr, num, obj, Json};
 use super::store::PersistView;
+use crate::trace;
 
 /// Histogram bucket upper bounds, in seconds (plus an implicit +Inf).
 pub const BUCKET_BOUNDS: [f64; 12] =
@@ -115,6 +116,18 @@ pub struct Metrics {
     pub rate_limited: AtomicU64,
     /// Requests refused with 401 (missing or wrong bearer token).
     pub auth_failures: AtomicU64,
+    /// Time jobs spent in a shard sub-queue before an engine host popped
+    /// them. Observed for every engine job, traced or not.
+    pub queue_wait: Histogram,
+    /// Driver-phase wall time, fed from finished traces' sampled `phase`
+    /// spans ([`Metrics::observe_trace`]).
+    pub phase_exec: Histogram,
+    /// Executor-tile wall time, fed from finished traces' `tile` spans.
+    pub tile_exec: Histogram,
+    /// Cumulative per-step-family kernel time (µs) and step counts,
+    /// index-aligned with [`trace::FAMILY_NAMES`].
+    step_family_micros: [AtomicU64; trace::FAMILY_NAMES.len()],
+    step_family_steps: [AtomicU64; trace::FAMILY_NAMES.len()],
     latency: Mutex<BTreeMap<String, Arc<Histogram>>>,
     started: Instant,
 }
@@ -140,8 +153,45 @@ impl Metrics {
             shard_steals: AtomicU64::new(0),
             rate_limited: AtomicU64::new(0),
             auth_failures: AtomicU64::new(0),
+            queue_wait: Histogram::default(),
+            phase_exec: Histogram::default(),
+            tile_exec: Histogram::default(),
+            step_family_micros: Default::default(),
+            step_family_steps: Default::default(),
             latency: Mutex::new(BTreeMap::new()),
             started: Instant::now(),
+        }
+    }
+
+    /// Fold a finished trace into the convergence-telemetry aggregates:
+    /// sampled `phase` spans and `tile` spans feed their histograms,
+    /// step-family spans feed the per-family time/step totals. Queue wait
+    /// is deliberately NOT re-observed here — the engine host already
+    /// observed it for every job, traced or not.
+    pub fn observe_trace(&self, t: &trace::FinishedTrace) {
+        for s in &t.spans {
+            let secs = s.dur_us as f64 / 1e6;
+            match s.name {
+                "phase" => self.phase_exec.observe(secs),
+                "tile" => self.tile_exec.observe(secs),
+                name => {
+                    let Some(i) = trace::FAMILY_NAMES.iter().position(|f| *f == name)
+                    else {
+                        continue;
+                    };
+                    self.step_family_micros[i].fetch_add(s.dur_us, Ordering::Relaxed);
+                    let steps = s
+                        .attrs
+                        .iter()
+                        .flatten()
+                        .find_map(|(k, v)| match v {
+                            trace::AttrValue::U64(c) if *k == "steps" => Some(*c),
+                            _ => None,
+                        })
+                        .unwrap_or(1);
+                    self.step_family_steps[i].fetch_add(steps, Ordering::Relaxed);
+                }
+            }
         }
     }
 
@@ -198,34 +248,45 @@ impl Metrics {
         ])
     }
 
+    /// Summary object for one histogram (shared by the per-method latency
+    /// map and the span-derived histograms).
+    fn hist_json(h: &Histogram) -> Json {
+        let (buckets, sum, count) = h.snapshot();
+        let mean = if count > 0 { sum / count as f64 } else { 0.0 };
+        let quant = |q| {
+            Histogram::quantile_bound(&buckets, count, q)
+                .map(|b| num(b * 1e3))
+                .unwrap_or(Json::Null)
+        };
+        obj([
+            ("count", Json::from(count)),
+            ("mean_ms", num(mean * 1e3)),
+            ("p50_le_ms", quant(0.5)),
+            ("p99_le_ms", quant(0.99)),
+            ("buckets", arr(buckets.into_iter().map(Json::from))),
+        ])
+    }
+
     /// JSON view (served by default from `GET /metrics`).
     pub fn to_json(&self, view: &ServeView) -> Json {
         let latency = {
             let map = self.lock_latency();
-            let per_method: Vec<(String, Json)> = map
-                .iter()
-                .map(|(name, h)| {
-                    let (buckets, sum, count) = h.snapshot();
-                    let mean = if count > 0 { sum / count as f64 } else { 0.0 };
-                    let quant = |q| {
-                        Histogram::quantile_bound(&buckets, count, q)
-                            .map(|b| num(b * 1e3))
-                            .unwrap_or(Json::Null)
-                    };
-                    (
-                        name.clone(),
-                        obj([
-                            ("count", Json::from(count)),
-                            ("mean_ms", num(mean * 1e3)),
-                            ("p50_le_ms", quant(0.5)),
-                            ("p99_le_ms", quant(0.99)),
-                            ("buckets", arr(buckets.into_iter().map(Json::from))),
-                        ]),
-                    )
-                })
-                .collect();
+            let per_method: Vec<(String, Json)> =
+                map.iter().map(|(name, h)| (name.clone(), Self::hist_json(h))).collect();
             obj(per_method)
         };
+        let step_families = obj(trace::FAMILY_NAMES.iter().enumerate().map(|(i, name)| {
+            (
+                *name,
+                obj([
+                    (
+                        "seconds",
+                        num(Self::load(&self.step_family_micros[i]) as f64 / 1e6),
+                    ),
+                    ("steps", Json::from(Self::load(&self.step_family_steps[i]))),
+                ]),
+            )
+        }));
         obj([
             ("uptime_secs", num(self.started.elapsed().as_secs_f64())),
             ("requests_total", Json::from(Self::load(&self.requests))),
@@ -268,6 +329,15 @@ impl Metrics {
                 ]),
             ),
             ("shards", arr(view.shards.iter().map(Self::shard_json))),
+            (
+                "spans",
+                obj([
+                    ("queue_wait", Self::hist_json(&self.queue_wait)),
+                    ("phase_exec", Self::hist_json(&self.phase_exec)),
+                    ("tile_exec", Self::hist_json(&self.tile_exec)),
+                ]),
+            ),
+            ("step_families", step_families),
             ("latency_seconds_bucket_bounds", arr(BUCKET_BOUNDS.iter().map(|&b| num(b)))),
             ("latency", latency),
         ])
@@ -355,8 +425,48 @@ impl Metrics {
                 "sssort_sort_duration_seconds_count{{method=\"{name}\"}} {count}\n"
             ));
         }
+        drop(map);
+        for (name, h) in [
+            ("queue_wait_seconds", &self.queue_wait),
+            ("phase_exec_seconds", &self.phase_exec),
+            ("tile_exec_seconds", &self.tile_exec),
+        ] {
+            push_histogram(&mut out, name, h);
+        }
+        out.push_str("# TYPE sssort_step_family_seconds_total counter\n");
+        for (i, fam) in trace::FAMILY_NAMES.iter().enumerate() {
+            out.push_str(&format!(
+                "sssort_step_family_seconds_total{{family=\"{fam}\"}} {}\n",
+                Self::load(&self.step_family_micros[i]) as f64 / 1e6
+            ));
+        }
+        out.push_str("# TYPE sssort_step_family_steps_total counter\n");
+        for (i, fam) in trace::FAMILY_NAMES.iter().enumerate() {
+            out.push_str(&format!(
+                "sssort_step_family_steps_total{{family=\"{fam}\"}} {}\n",
+                Self::load(&self.step_family_steps[i])
+            ));
+        }
         out
     }
+}
+
+/// Unlabeled Prometheus histogram exposition (the per-method latency map
+/// has its own labeled loop above).
+fn push_histogram(out: &mut String, name: &str, h: &Histogram) {
+    let (buckets, sum, count) = h.snapshot();
+    out.push_str(&format!("# TYPE sssort_{name} histogram\n"));
+    let mut cum = 0u64;
+    for (i, &b) in buckets.iter().enumerate() {
+        cum += b;
+        let le = BUCKET_BOUNDS
+            .get(i)
+            .map(|b| b.to_string())
+            .unwrap_or_else(|| "+Inf".to_string());
+        out.push_str(&format!("sssort_{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+    }
+    out.push_str(&format!("sssort_{name}_sum {sum}\n"));
+    out.push_str(&format!("sssort_{name}_count {count}\n"));
 }
 
 #[cfg(test)]
@@ -476,5 +586,66 @@ mod tests {
         let j = m.to_json(&bare);
         assert!(matches!(j.get("cache_persist"), Some(Json::Null)));
         assert!(!m.to_prometheus(&bare).contains("cache_persist"), "no spurious family");
+    }
+
+    fn span_rec(name: &'static str, dur_us: u64, steps: Option<u64>) -> trace::SpanRecord {
+        let mut attrs: trace::Attrs = [None; trace::MAX_ATTRS];
+        if let Some(s) = steps {
+            attrs[0] = Some(("steps", trace::AttrValue::U64(s)));
+        }
+        trace::SpanRecord {
+            trace_id: 1,
+            span_id: 2,
+            parent_id: 0,
+            name,
+            start_us: 0,
+            dur_us,
+            tid: 1,
+            attrs,
+        }
+    }
+
+    #[test]
+    fn span_histograms_and_family_totals_export() {
+        let m = Metrics::new();
+        m.queue_wait.observe(0.002);
+        m.phase_exec.observe(0.01);
+        // Trace-derived telemetry: one phase, one tile, two step families,
+        // and a request span the walker must ignore.
+        let t = trace::FinishedTrace {
+            trace_id: 1,
+            spans: vec![
+                span_rec("phase", 10_000, None),
+                span_rec("tile", 4_000, None),
+                span_rec("sss_step", 2_000, Some(32)),
+                span_rec("adam_step", 1_000, Some(32)),
+                span_rec("request", 20_000, None),
+            ],
+            dropped: 0,
+        };
+        m.observe_trace(&t);
+
+        let view = ServeView::default();
+        let j = m.to_json(&view);
+        let spans = j.get("spans").unwrap();
+        assert_eq!(spans.get("queue_wait").unwrap().get("count").unwrap().as_usize(), Some(1));
+        assert_eq!(spans.get("phase_exec").unwrap().get("count").unwrap().as_usize(), Some(2));
+        assert_eq!(spans.get("tile_exec").unwrap().get("count").unwrap().as_usize(), Some(1));
+        let fam = j.get("step_families").unwrap().get("sss_step").unwrap();
+        assert_eq!(fam.get("steps").unwrap().as_usize(), Some(32));
+        assert!(fam.get("seconds").unwrap().as_f64().unwrap() > 0.0);
+
+        let text = m.to_prometheus(&view);
+        assert!(text.contains("sssort_queue_wait_seconds_count 1"), "{text}");
+        assert!(text.contains("sssort_phase_exec_seconds_count 2"), "{text}");
+        assert!(text.contains("sssort_tile_exec_seconds_bucket{le=\"+Inf\"} 1"), "{text}");
+        assert!(
+            text.contains("sssort_step_family_steps_total{family=\"sss_step\"} 32"),
+            "{text}"
+        );
+        assert!(
+            text.contains("sssort_step_family_seconds_total{family=\"adam_step\"} 0.001"),
+            "{text}"
+        );
     }
 }

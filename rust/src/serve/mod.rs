@@ -49,7 +49,8 @@
 //! Endpoints: `POST /v1/sort`, `POST /v1/sort_batch`, `GET /v1/methods`
 //! (registry-driven, reflects plugin methods), `GET /healthz`,
 //! `GET /metrics` (JSON, or Prometheus text via `?format=prometheus` /
-//! `Accept: text/plain`). Errors are JSON bodies with matching 4xx/5xx
+//! `Accept: text/plain`), `GET /v1/trace/<id>` (span tree of a recent
+//! traced request; `?format=chrome` for chrome://tracing). Errors are JSON bodies with matching 4xx/5xx
 //! statuses. With `--auth-token` every endpoint except `/healthz`
 //! requires `Authorization: Bearer <token>`; `--rate-limit` adds a
 //! per-client token bucket. See README §Serving for `curl` examples.
@@ -79,6 +80,7 @@ use crate::config::ServeConfig;
 use crate::coordinator::SortOutcome;
 use crate::data::{self, Dataset};
 use crate::grid::GridShape;
+use crate::trace;
 
 use cache::{hash_rows, CacheKey, ResultCache};
 use http::{HttpError, ReadOutcome, Request, Response};
@@ -262,6 +264,12 @@ pub fn start(cfg: ServeConfig, spec: EngineSpec) -> Result<Server> {
     let addr = listener.local_addr()?;
 
     let shutdown = Arc::new(AtomicBool::new(false));
+    // The flag is process-global and serve only ever *enables* it (there
+    // may be other traced work in-process); per-request gating stays on
+    // `cfg.trace`. Disabled-path cost elsewhere: one relaxed load.
+    if cfg.trace {
+        trace::enable();
+    }
     let metrics = Arc::new(Metrics::new());
     let mut cache = ResultCache::new(
         cfg.cache_mb.saturating_mul(1024 * 1024).max(64 * 1024),
@@ -457,11 +465,38 @@ fn handle_connection(
 
 fn handle(ctx: &Ctx, req: &Request, peer: IpAddr) -> Response {
     ctx.metrics.requests.fetch_add(1, Ordering::Relaxed);
-    let resp = gate(ctx, req, peer)
-        .and_then(|()| route(ctx, req))
-        .unwrap_or_else(|e| e.response());
+    // Root span of the request's trace. A client-supplied `X-Trace-Id`
+    // names the trace (so the client can fetch `/v1/trace/<id>` after);
+    // otherwise a fresh id is minted. `trace=off` servers skip all of it.
+    let mut root = if !ctx.cfg.trace {
+        trace::Span::off()
+    } else {
+        match req.header("x-trace-id").and_then(trace::parse_trace_id) {
+            Some(id) => trace::Span::root_with("request", id),
+            None => trace::Span::root("request"),
+        }
+    };
+    let trace_id = root.ctx().map(|c| c.trace_id);
+    let resp = {
+        let _cur = root.make_current();
+        gate(ctx, req, peer)
+            .and_then(|()| route(ctx, req))
+            .unwrap_or_else(|e| e.response())
+    };
     ctx.metrics.status(resp.status);
-    resp
+    root.attr_u64("status", resp.status as u64);
+    root.end();
+    match trace_id {
+        Some(id) => {
+            // Assemble now — every span of this request has ended — and
+            // fold the convergence telemetry into /metrics.
+            if let Some(t) = trace::finish(id) {
+                ctx.metrics.observe_trace(&t);
+            }
+            resp.with_header("X-Trace-Id", trace::format_trace_id(id))
+        }
+        None => resp,
+    }
 }
 
 /// Listener-level admission: per-client rate limit, then bearer auth.
@@ -514,6 +549,16 @@ fn route(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
         ("GET", "/metrics") => Ok(metrics_view(ctx, req)),
         ("POST", "/v1/sort") => sort_single(ctx, req),
         ("POST", "/v1/sort_batch") => sort_batch(ctx, req),
+        (m, path) if path.starts_with("/v1/trace/") => {
+            if m == "GET" {
+                trace_view(ctx, req)
+            } else {
+                Err(ApiError {
+                    status: 405,
+                    message: format!("method {m} not allowed for {path} (allowed: GET)"),
+                })
+            }
+        }
         (_, path) if ROUTES.iter().any(|(_, p)| *p == path) => {
             let allowed: Vec<&str> = ROUTES
                 .iter()
@@ -573,6 +618,37 @@ fn spec_json(s: &'static MethodSpec) -> Json {
     ])
 }
 
+/// `GET /v1/trace/<id>` — the finished span tree of a recent traced
+/// request, looked up in the collector's bounded LRU. Default shape is
+/// the flat span list; `?format=chrome` returns Chrome trace-event JSON
+/// (load in `chrome://tracing` / Perfetto).
+fn trace_view(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
+    if !ctx.cfg.trace {
+        return Err(ApiError::not_found(
+            "tracing is disabled on this server (start with trace=on)",
+        ));
+    }
+    let rest = req.path.strip_prefix("/v1/trace/").unwrap_or("");
+    let id = trace::parse_trace_id(rest).ok_or_else(|| {
+        ApiError::bad_request(format!(
+            "bad trace id '{rest}' (expected 1-16 hex digits, e.g. the X-Trace-Id echo)"
+        ))
+    })?;
+    let t = trace::get(id).ok_or_else(|| {
+        ApiError::not_found(format!(
+            "no finished trace {} — traces live in a bounded LRU; re-send the request \
+             with that X-Trace-Id and fetch again",
+            trace::format_trace_id(id)
+        ))
+    })?;
+    let doc = if req.query_param("format") == Some("chrome") {
+        trace::chrome_trace_json(&t)
+    } else {
+        trace::trace_json(&t)
+    };
+    Ok(Response::json(200, json::to_string_pretty(&doc)))
+}
+
 fn metrics_view(ctx: &Ctx, req: &Request) -> Response {
     let (entries, bytes) = ctx.cache.stats();
     let view = ServeView {
@@ -611,6 +687,10 @@ struct SortRequest {
     /// `n <= cfg.arranged_max_n` (large-N responses stay lightweight by
     /// default — ROADMAP "streaming/chunked responses", cheap half).
     include_arranged: bool,
+    /// Opt-in convergence report (`"include_report": true`): wall time,
+    /// rejected phases, extension count and tile count ride along in the
+    /// body. Off by default — it is run telemetry, not sort output.
+    include_report: bool,
 }
 
 impl SortRequest {
@@ -732,12 +812,21 @@ fn parse_sort_request(ctx: &Ctx, body: &[u8], batch: bool) -> Result<SortRequest
             ApiError::bad_request("'include_arranged' must be a boolean")
         })?,
     };
-    // The resolved flag joins the canonical config so the cache never
+    let include_report = match j.get("include_report") {
+        None => false,
+        Some(v) => v.as_bool().ok_or_else(|| {
+            ApiError::bad_request("'include_report' must be a boolean")
+        })?,
+    };
+    // The resolved flags join the canonical config so the cache never
     // replays a body of the wrong shape for this request.
     let config = obj(overrides
         .iter()
         .map(|(k, v)| (k.clone(), Json::from(v.as_str())))
-        .chain([("include_arranged".to_string(), Json::from(include_arranged))]))
+        .chain([
+            ("include_arranged".to_string(), Json::from(include_arranged)),
+            ("include_report".to_string(), Json::from(include_report)),
+        ]))
     .to_string_compact();
 
     // Datasets.
@@ -766,7 +855,15 @@ fn parse_sort_request(ctx: &Ctx, body: &[u8], batch: bool) -> Result<SortRequest
         datasets.push(dataset_from_json(&j, grid)?);
     }
 
-    Ok(SortRequest { method: spec.name, grid, overrides, config, datasets, include_arranged })
+    Ok(SortRequest {
+        method: spec.name,
+        grid,
+        overrides,
+        config,
+        datasets,
+        include_arranged,
+        include_report,
+    })
 }
 
 /// An optional non-negative-integer field of a dataset spec: absent is
@@ -931,6 +1028,7 @@ fn render_outcome(
     ds: &Dataset,
     out: &SortOutcome,
     include_arranged: bool,
+    include_report: bool,
 ) -> String {
     let mut fields = vec![
         ("method", Json::from(method)),
@@ -945,6 +1043,17 @@ fn render_outcome(
         ("tiles", Json::from(out.report.tiles)),
         ("wall_secs", num(out.report.wall_secs)),
     ];
+    if include_report {
+        fields.push((
+            "report",
+            obj([
+                ("wall_secs", num(out.report.wall_secs)),
+                ("rejected_phases", Json::from(out.report.rejected_phases)),
+                ("extensions", Json::from(out.report.extensions)),
+                ("tiles", Json::from(out.report.tiles)),
+            ]),
+        ));
+    }
     if include_arranged {
         fields.push((
             "arranged",
@@ -955,16 +1064,33 @@ fn render_outcome(
 }
 
 fn enqueue(ctx: &Ctx, hash: u64, job: Job) -> Result<(), ApiError> {
-    ctx.pool.dispatch(hash, job, &ctx.metrics).map(|_| ()).map_err(|e| match e {
-        PushError::Full(_) => {
-            // dispatch already walked every alive shard; all are saturated.
-            ctx.metrics.queue_rejections.fetch_add(1, Ordering::Relaxed);
-            ApiError::unavailable("every engine shard queue is full — retry shortly")
+    // shard_route span: where the affinity hash homed the job, which
+    // shard actually accepted it, and whether that was a steal.
+    let mut span = trace::Span::child("shard_route");
+    if span.is_recording() {
+        let k = ctx.pool.shard_count().max(1) as u64;
+        span.attr_u64("home", hash % k);
+    }
+    match ctx.pool.dispatch(hash, job, &ctx.metrics) {
+        Ok(idx) => {
+            if span.is_recording() {
+                let k = ctx.pool.shard_count().max(1) as u64;
+                span.attr_u64("shard", idx as u64);
+                span.attr_u64("stolen", (idx as u64 != hash % k) as u64);
+            }
+            Ok(())
         }
-        PushError::Closed(_) => {
-            ApiError::unavailable("no engine shard is available (shutting down)")
-        }
-    })
+        Err(e) => Err(match e {
+            PushError::Full(_) => {
+                // dispatch already walked every alive shard; all are saturated.
+                ctx.metrics.queue_rejections.fetch_add(1, Ordering::Relaxed);
+                ApiError::unavailable("every engine shard queue is full — retry shortly")
+            }
+            PushError::Closed(_) => {
+                ApiError::unavailable("no engine shard is available (shutting down)")
+            }
+        }),
+    }
 }
 
 fn sort_single(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
@@ -985,6 +1111,8 @@ fn sort_single(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
                 dataset: ds.clone(),
                 grid: parsed.grid,
                 overrides: parsed.overrides.clone(),
+                trace: trace::current(),
+                enqueued_at: Instant::now(),
                 reply: tx,
             }),
         )?;
@@ -992,7 +1120,14 @@ fn sort_single(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
             .recv()
             .map_err(|_| ApiError::internal("engine host exited before replying"))?
             .map_err(ApiError::from_engine)?;
-        let rest = render_outcome(parsed.method, parsed.grid, ds, &outcome, false);
+        let rest = render_outcome(
+            parsed.method,
+            parsed.grid,
+            ds,
+            &outcome,
+            false,
+            parsed.include_report,
+        );
         return Ok(stream::chunked_sort_response(rest, outcome.arranged)
             .with_header("X-Cache", "bypass"));
     }
@@ -1013,6 +1148,8 @@ fn sort_single(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
             dataset: ds.clone(),
             grid: parsed.grid,
             overrides: parsed.overrides.clone(),
+            trace: trace::current(),
+            enqueued_at: Instant::now(),
             reply: tx,
         }),
     )?;
@@ -1022,8 +1159,14 @@ fn sort_single(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
         .map_err(ApiError::from_engine)?;
     // get_or_put: if an identical concurrent miss beat us to the insert,
     // serve its body so every response for this key is byte-identical.
-    let rendered =
-        render_outcome(parsed.method, parsed.grid, ds, &outcome, parsed.include_arranged);
+    let rendered = render_outcome(
+        parsed.method,
+        parsed.grid,
+        ds,
+        &outcome,
+        parsed.include_arranged,
+        parsed.include_report,
+    );
     let body = ctx.cache.get_or_put(key, Arc::new(rendered));
     Ok(Response::json(200, (*body).clone()).with_header("X-Cache", "miss"))
 }
@@ -1062,6 +1205,8 @@ fn sort_batch(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
                 datasets: miss_idx.iter().map(|&i| parsed.datasets[i].clone()).collect(),
                 grid: parsed.grid,
                 overrides: parsed.overrides.clone(),
+                trace: trace::current(),
+                enqueued_at: Instant::now(),
                 reply: tx,
             }),
         )?;
@@ -1076,6 +1221,7 @@ fn sort_batch(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
                 &parsed.datasets[i],
                 &outcome,
                 parsed.include_arranged,
+                parsed.include_report,
             ));
             bodies[i] = Some(ctx.cache.get_or_put(keys[i].clone(), rendered));
         }

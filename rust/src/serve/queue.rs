@@ -21,10 +21,12 @@
 
 use std::collections::VecDeque;
 use std::sync::{mpsc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
 
 use crate::coordinator::SortOutcome;
 use crate::data::Dataset;
 use crate::grid::GridShape;
+use crate::trace;
 
 /// A bounded MPMC queue: blocking `pop`, non-blocking `try_push`.
 pub struct Bounded<T> {
@@ -132,6 +134,12 @@ pub struct SortJob {
     pub dataset: Dataset,
     pub grid: GridShape,
     pub overrides: Vec<(String, String)>,
+    /// Request span the engine host re-parents its spans under (`None`
+    /// when the request is untraced).
+    pub trace: Option<trace::SpanContext>,
+    /// When the job entered the shard queue — the host measures queue
+    /// wait from it (always, for `/metrics`; as a span when traced).
+    pub enqueued_at: Instant,
     pub reply: mpsc::Sender<Result<SortOutcome, EngineError>>,
 }
 
@@ -140,6 +148,8 @@ pub struct BatchJob {
     pub datasets: Vec<Dataset>,
     pub grid: GridShape,
     pub overrides: Vec<(String, String)>,
+    pub trace: Option<trace::SpanContext>,
+    pub enqueued_at: Instant,
     pub reply: mpsc::Sender<Vec<Result<SortOutcome, EngineError>>>,
 }
 

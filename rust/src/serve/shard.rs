@@ -40,6 +40,7 @@ use std::time::Instant;
 use crate::api::{Engine, MethodKind, MethodRegistry};
 use crate::backend::pool::PoolError;
 use crate::grid::GridShape;
+use crate::trace;
 
 use super::cache::fnv1a;
 use super::metrics::{Metrics, ShardView};
@@ -258,7 +259,7 @@ fn spawn_engine_host(
         .name(format!("sssort-engine-{id}"))
         .spawn(move || {
             let run = catch_unwind(AssertUnwindSafe(|| {
-                host_loop(&spec, &queue, &metrics, &stats)
+                host_loop(id, &spec, &queue, &metrics, &stats)
             }));
             stats.alive.store(false, Ordering::SeqCst);
             if run.is_err() {
@@ -272,7 +273,24 @@ fn spawn_engine_host(
         .expect("spawn engine host thread")
 }
 
+/// Observe a popped job's queue wait: always into the histogram, and as a
+/// `queue_wait` span when the request is traced. Returns the pop instant.
+fn note_queue_wait(
+    metrics: &Metrics,
+    enqueued_at: Instant,
+    trace_ctx: Option<trace::SpanContext>,
+) -> Instant {
+    let popped = Instant::now();
+    let wait = popped.duration_since(enqueued_at);
+    metrics.queue_wait.observe(wait.as_secs_f64());
+    if let Some(parent) = trace_ctx {
+        trace::record_span(parent, "queue_wait", enqueued_at, wait, &[]);
+    }
+    popped
+}
+
 fn host_loop(
+    id: usize,
     spec: &EngineSpec,
     queue: &Bounded<Job>,
     metrics: &Metrics,
@@ -285,7 +303,13 @@ fn host_loop(
         stats.jobs.fetch_add(1, Ordering::Relaxed);
         match job {
             Job::Sort(j) => {
-                let started = Instant::now();
+                let started = note_queue_wait(metrics, j.enqueued_at, j.trace);
+                // Everything the engine records (phases, tiles, step
+                // families) parents under this span; it must end before
+                // the reply so the handler's `trace::finish` sees it.
+                let mut jspan = trace::Span::child_of(j.trace, "engine_job");
+                jspan.attr_u64("shard", id as u64);
+                let cur = jspan.make_current();
                 let result = catch_unwind(AssertUnwindSafe(|| {
                     engine.sort(&j.method, &j.dataset, j.grid, &j.overrides)
                 }));
@@ -296,6 +320,7 @@ fn host_loop(
                             .phase_tiles
                             .fetch_add(out.report.tiles as u64, Ordering::Relaxed);
                         warm_session(&engine, &registry, &j.method, j.grid, j.dataset.d, stats);
+                        out.report.trace_attrs(&mut jspan);
                         Ok(out)
                     }
                     Ok(Err(e)) => Err(engine_error(e)),
@@ -304,10 +329,16 @@ fn host_loop(
                         internal: true,
                     }),
                 };
+                drop(cur);
+                jspan.end();
                 let _ = j.reply.send(result);
             }
             Job::Batch(j) => {
-                let started = Instant::now();
+                let started = note_queue_wait(metrics, j.enqueued_at, j.trace);
+                let mut jspan = trace::Span::child_of(j.trace, "engine_job");
+                jspan.attr_u64("shard", id as u64);
+                jspan.attr_u64("batch", j.datasets.len() as u64);
+                let cur = jspan.make_current();
                 let results = catch_unwind(AssertUnwindSafe(|| {
                     engine.sort_batch(&j.method, &j.datasets, j.grid, &j.overrides)
                 }));
@@ -341,6 +372,8 @@ fn host_loop(
                         })
                         .collect(),
                 };
+                drop(cur);
+                jspan.end();
                 let _ = j.reply.send(results);
             }
         }
@@ -406,6 +439,8 @@ mod tests {
             dataset: crate::data::random_colors(16, 1),
             grid: GridShape::new(4, 4),
             overrides: Vec::new(),
+            trace: None,
+            enqueued_at: Instant::now(),
             reply: tx,
         })
     }

@@ -1,0 +1,840 @@
+//! End-to-end tracing spine: one span tree per request (or CLI run),
+//! threaded from the serve accept loop through shard routing, queue wait,
+//! the engine job, driver phases, executor tiles and down to the backend
+//! step-family kernels.
+//!
+//! Disabled-path contract (the PR 3 invariant): every instrumentation
+//! point starts with a single relaxed [`AtomicBool`] load and a branch —
+//! no clock reads, no allocation, and bit-identical results whether
+//! tracing is on or off. The enabled path reads clocks but still never
+//! allocates per record: spans end as fixed-size `Copy` [`SpanRecord`]s
+//! pushed into a preallocated per-thread ring buffer ([`RING_CAP`] slots,
+//! wraparound counted in `dropped`), under a per-thread mutex that is
+//! uncontended except while a collector drains it.
+//!
+//! Assembly is pull-based — there is no background thread. Ending a root
+//! span and calling [`finish`] drains every registered ring, routes the
+//! records to their traces, and files the finished trace in a bounded LRU
+//! that [`get`] (the `GET /v1/trace/<id>` endpoint) serves from. Two JSON
+//! projections exist: [`trace_json`] (the span-tree document) and
+//! [`chrome_trace_json`] (`chrome://tracing` trace-event format, what
+//! `--trace-file` writes).
+//!
+//! Span identity is process-local: `trace_id` is a `RandomState` hash of a
+//! global counter (no system entropy needed), `span_id` a plain counter,
+//! `parent_id == 0` marks a root. Cross-thread parenting is explicit —
+//! pass a [`SpanContext`] (`Copy`) into the worker and open spans with
+//! [`Span::child_of`]; same-thread nesting can use the thread-local
+//! current stack ([`Span::make_current`] / [`Span::child`]).
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::serve::json::{self as json, Json};
+
+/// Per-thread ring capacity in records (~2048 × ~200 B per thread that
+/// records at least once).
+pub const RING_CAP: usize = 2048;
+/// Finished traces kept for `GET /v1/trace/<id>` (LRU eviction).
+const FINISHED_CAP: usize = 128;
+/// Distinct unfinished traces the pending map will hold between drains;
+/// records for further trace ids are dropped rather than accumulated.
+const PENDING_CAP: usize = 64;
+/// Spans kept per trace; the excess is counted in `FinishedTrace::dropped`.
+pub const MAX_SPANS_PER_TRACE: usize = 4096;
+/// Attribute slots per span (fixed array — no allocation on the record path).
+pub const MAX_ATTRS: usize = 8;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Whether tracing is globally enabled (one relaxed load).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Enable tracing for the process (idempotent; also pins the time epoch).
+pub fn enable() {
+    set_enabled(true);
+}
+
+/// Toggle tracing. Production code only ever *enables* (serve at boot, the
+/// CLI under `--trace-file`); disabling exists for tests and benches,
+/// which must hold [`exclusive_test_lock`] while toggling.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Process-wide timestamp origin for `start_us` (pinned on first use).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn micros_since_epoch(t: Instant) -> u64 {
+    t.checked_duration_since(epoch()).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn next_span_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Fresh trace id: a `RandomState` hash of a global counter — well-spread
+/// and unique per process without system entropy, never 0.
+pub fn new_trace_id() -> u64 {
+    use std::collections::hash_map::RandomState;
+    use std::hash::{BuildHasher, Hash, Hasher};
+    static STATE: OnceLock<RandomState> = OnceLock::new();
+    let mut h = STATE.get_or_init(RandomState::new).build_hasher();
+    NEXT_ID.fetch_add(1, Ordering::Relaxed).hash(&mut h);
+    h.finish() | 1
+}
+
+/// Wire form of a trace id (16 lowercase hex digits, `X-Trace-Id` /
+/// `/v1/trace/<id>`).
+pub fn format_trace_id(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+/// Parse the wire form (1–16 hex digits; 0 and non-hex are rejected).
+pub fn parse_trace_id(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if s.is_empty() || s.len() > 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().filter(|id| *id != 0)
+}
+
+/// A typed span attribute. `Str` is `&'static` on purpose: attribute
+/// recording may not allocate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AttrValue {
+    U64(u64),
+    F64(f64),
+    Str(&'static str),
+}
+
+impl AttrValue {
+    fn to_json(self) -> Json {
+        match self {
+            AttrValue::U64(v) => Json::Num(v as f64),
+            AttrValue::F64(v) => json::num(v),
+            AttrValue::Str(s) => Json::from(s),
+        }
+    }
+}
+
+/// The `Copy` handle that crosses thread and queue boundaries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanContext {
+    pub trace_id: u64,
+    pub span_id: u64,
+}
+
+pub type Attrs = [Option<(&'static str, AttrValue)>; MAX_ATTRS];
+
+/// One ended span, as stored in the rings and in finished traces.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    pub span_id: u64,
+    /// 0 = root.
+    pub parent_id: u64,
+    pub name: &'static str,
+    /// Microseconds since the process trace epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Recording-thread index (1-based registration order).
+    pub tid: u64,
+    pub attrs: Attrs,
+}
+
+// -- per-thread rings + collector registry ---------------------------------
+
+struct Ring {
+    buf: Vec<SpanRecord>,
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, rec: SpanRecord) {
+        if self.buf.len() < RING_CAP {
+            self.buf.push(rec);
+        } else {
+            self.buf[self.next] = rec;
+            self.dropped += 1;
+        }
+        self.next = (self.next + 1) % RING_CAP;
+    }
+
+    fn drain(&mut self) -> (Vec<SpanRecord>, u64) {
+        self.next = 0;
+        // `drain(..)` keeps the ring's capacity, so the record path stays
+        // allocation-free after the first fill.
+        (self.buf.drain(..).collect(), std::mem::take(&mut self.dropped))
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL_RING: RefCell<Option<(u64, Arc<Mutex<Ring>>)>> =
+        const { RefCell::new(None) };
+    static CURRENT: RefCell<Vec<SpanContext>> = const { RefCell::new(Vec::new()) };
+}
+
+fn record(mut rec: SpanRecord) {
+    LOCAL_RING.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if slot.is_none() {
+            let ring = Arc::new(Mutex::new(Ring {
+                buf: Vec::with_capacity(RING_CAP),
+                next: 0,
+                dropped: 0,
+            }));
+            let mut reg = lock(registry());
+            let tid = reg.len() as u64 + 1;
+            reg.push(ring.clone());
+            *slot = Some((tid, ring));
+        }
+        let (tid, ring) = slot.as_ref().expect("just initialized");
+        rec.tid = *tid;
+        lock(ring).push(rec);
+    });
+}
+
+/// The innermost span this thread made current, if any.
+pub fn current() -> Option<SpanContext> {
+    CURRENT.with(|c| c.borrow().last().copied())
+}
+
+// -- spans ------------------------------------------------------------------
+
+/// An in-flight span. A disabled span (`None` inner) is free to hold and
+/// drop: constructors return it after the one-load gate, so call sites
+/// need no `if enabled()` of their own. The record is written when the
+/// span drops (or [`Span::end`] consumes it).
+pub struct Span {
+    inner: Option<ActiveSpan>,
+}
+
+struct ActiveSpan {
+    ctx: SpanContext,
+    parent_id: u64,
+    name: &'static str,
+    start: Instant,
+    attrs: Attrs,
+}
+
+impl Span {
+    /// The always-disabled span (records nothing).
+    pub fn off() -> Span {
+        Span { inner: None }
+    }
+
+    fn open(trace_id: u64, parent_id: u64, name: &'static str) -> Span {
+        Span {
+            inner: Some(ActiveSpan {
+                ctx: SpanContext { trace_id, span_id: next_span_id() },
+                parent_id,
+                name,
+                start: Instant::now(),
+                attrs: [None; MAX_ATTRS],
+            }),
+        }
+    }
+
+    /// Root span with a fresh trace id.
+    pub fn root(name: &'static str) -> Span {
+        if !enabled() {
+            return Span::off();
+        }
+        Span::open(new_trace_id(), 0, name)
+    }
+
+    /// Root span under a caller-supplied trace id (`X-Trace-Id`).
+    pub fn root_with(name: &'static str, trace_id: u64) -> Span {
+        if !enabled() || trace_id == 0 {
+            return Span::off();
+        }
+        Span::open(trace_id, 0, name)
+    }
+
+    /// Child of this thread's current span (disabled when there is none).
+    pub fn child(name: &'static str) -> Span {
+        if !enabled() {
+            return Span::off();
+        }
+        match current() {
+            Some(p) => Span::open(p.trace_id, p.span_id, name),
+            None => Span::off(),
+        }
+    }
+
+    /// Child of an explicit parent — the cross-thread form (disabled when
+    /// the parent is `None`, which lets sampling decisions flow through).
+    pub fn child_of(parent: Option<SpanContext>, name: &'static str) -> Span {
+        if !enabled() {
+            return Span::off();
+        }
+        match parent {
+            Some(p) => Span::open(p.trace_id, p.span_id, name),
+            None => Span::off(),
+        }
+    }
+
+    pub fn is_recording(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn ctx(&self) -> Option<SpanContext> {
+        self.inner.as_ref().map(|a| a.ctx)
+    }
+
+    /// Set an attribute (first [`MAX_ATTRS`] stick; the rest are ignored).
+    pub fn attr(&mut self, key: &'static str, value: AttrValue) {
+        if let Some(a) = &mut self.inner {
+            if let Some(slot) = a.attrs.iter_mut().find(|s| s.is_none()) {
+                *slot = Some((key, value));
+            }
+        }
+    }
+
+    pub fn attr_u64(&mut self, key: &'static str, v: u64) {
+        self.attr(key, AttrValue::U64(v));
+    }
+
+    pub fn attr_f64(&mut self, key: &'static str, v: f64) {
+        self.attr(key, AttrValue::F64(v));
+    }
+
+    pub fn attr_str(&mut self, key: &'static str, v: &'static str) {
+        self.attr(key, AttrValue::Str(v));
+    }
+
+    /// Push this span onto the thread's current stack; the guard pops it.
+    /// No-op for disabled spans.
+    pub fn make_current(&self) -> CurrentGuard {
+        match self.ctx() {
+            Some(ctx) => {
+                CURRENT.with(|c| c.borrow_mut().push(ctx));
+                CurrentGuard { active: true }
+            }
+            None => CurrentGuard { active: false },
+        }
+    }
+
+    /// End the span now (identical to dropping it; reads better at call
+    /// sites that also hold a `make_current` guard).
+    pub fn end(self) {}
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(a) = self.inner.take() {
+            record(SpanRecord {
+                trace_id: a.ctx.trace_id,
+                span_id: a.ctx.span_id,
+                parent_id: a.parent_id,
+                name: a.name,
+                start_us: micros_since_epoch(a.start),
+                dur_us: a.start.elapsed().as_micros() as u64,
+                tid: 0, // filled by `record`
+                attrs: a.attrs,
+            });
+        }
+    }
+}
+
+/// Pops the thread-current span on drop (see [`Span::make_current`]).
+pub struct CurrentGuard {
+    active: bool,
+}
+
+impl Drop for CurrentGuard {
+    fn drop(&mut self) {
+        if self.active {
+            CURRENT.with(|c| {
+                c.borrow_mut().pop();
+            });
+        }
+    }
+}
+
+/// Record a span whose interval was measured externally (e.g. queue wait,
+/// timed from the enqueue instant in the dequeuing thread).
+pub fn record_span(
+    parent: SpanContext,
+    name: &'static str,
+    start: Instant,
+    dur: Duration,
+    attrs: &[(&'static str, AttrValue)],
+) {
+    if !enabled() {
+        return;
+    }
+    let mut a: Attrs = [None; MAX_ATTRS];
+    for (slot, kv) in a.iter_mut().zip(attrs) {
+        *slot = Some(*kv);
+    }
+    record(SpanRecord {
+        trace_id: parent.trace_id,
+        span_id: next_span_id(),
+        parent_id: parent.span_id,
+        name,
+        start_us: micros_since_epoch(start),
+        dur_us: dur.as_micros() as u64,
+        tid: 0,
+        attrs: a,
+    });
+}
+
+// -- step-family clocks -----------------------------------------------------
+
+/// Step-family span names, index-aligned with the `FAM_*` constants (and
+/// with the per-family totals in `serve::metrics`).
+pub const FAMILY_NAMES: [&str; 4] = ["sss_step", "gs_step", "kiss_step", "adam_step"];
+pub const FAM_SSS: usize = 0;
+pub const FAM_GS: usize = 1;
+pub const FAM_KISS: usize = 2;
+pub const FAM_ADAM: usize = 3;
+
+/// Aggregating timer for the per-step backend kernels. Per-step spans
+/// would swamp the rings (R·I records per family), so the inner loops
+/// accumulate per-family totals and [`StepClock::emit`] writes ONE span
+/// per family at loop end, with the call count as a `steps` attribute.
+/// Inert — no clock reads — when tracing is off or `parent` is `None`.
+pub struct StepClock {
+    parent: Option<SpanContext>,
+    acc: [(Duration, u64); FAMILY_NAMES.len()],
+}
+
+impl StepClock {
+    /// Families will be emitted under `parent` (typically the tile or
+    /// engine-job span the loop runs in).
+    pub fn start(parent: Option<SpanContext>) -> StepClock {
+        StepClock {
+            parent: if enabled() { parent } else { None },
+            acc: [(Duration::ZERO, 0); FAMILY_NAMES.len()],
+        }
+    }
+
+    #[inline]
+    pub fn time<T>(&mut self, family: usize, f: impl FnOnce() -> T) -> T {
+        if self.parent.is_none() {
+            return f();
+        }
+        let t = Instant::now();
+        let out = f();
+        self.acc[family].0 += t.elapsed();
+        self.acc[family].1 += 1;
+        out
+    }
+
+    /// Emit one aggregate span per family that ran (synthetic start: the
+    /// family's total duration back from now).
+    pub fn emit(self) {
+        let Some(p) = self.parent else { return };
+        let now = Instant::now();
+        for (i, (total, count)) in self.acc.iter().enumerate() {
+            if *count == 0 {
+                continue;
+            }
+            let start = now.checked_sub(*total).unwrap_or(now);
+            record_span(p, FAMILY_NAMES[i], start, *total, &[("steps", AttrValue::U64(*count))]);
+        }
+    }
+}
+
+// -- finished-trace store ---------------------------------------------------
+
+/// An assembled trace: records sorted by `(start_us, span_id)`.
+#[derive(Debug)]
+pub struct FinishedTrace {
+    pub trace_id: u64,
+    pub spans: Vec<SpanRecord>,
+    /// Records lost to ring wraparound or per-trace caps. Ring overwrites
+    /// cannot be attributed to a trace, so they are charged to whichever
+    /// trace finishes next — an upper bound, never an undercount.
+    pub dropped: u64,
+}
+
+struct Store {
+    /// Drained records for traces not yet finished, keyed by trace id.
+    pending: HashMap<u64, (Vec<SpanRecord>, u64)>,
+    finished: HashMap<u64, Arc<FinishedTrace>>,
+    /// LRU order of `finished` (front = oldest).
+    order: VecDeque<u64>,
+}
+
+fn store() -> &'static Mutex<Store> {
+    static STORE: OnceLock<Mutex<Store>> = OnceLock::new();
+    STORE.get_or_init(|| {
+        Mutex::new(Store {
+            pending: HashMap::new(),
+            finished: HashMap::new(),
+            order: VecDeque::new(),
+        })
+    })
+}
+
+/// Drain every thread's ring, route records to their traces, and file
+/// `trace_id` as finished. Returns `None` when tracing is off or nothing
+/// was recorded for the id. Call *after* all of the trace's spans have
+/// ended (e.g. the engine reply has been received and the root dropped).
+pub fn finish(trace_id: u64) -> Option<Arc<FinishedTrace>> {
+    if !enabled() {
+        return None;
+    }
+    let rings: Vec<Arc<Mutex<Ring>>> = lock(registry()).clone();
+    let mut st = lock(store());
+    let mut unattributed = 0u64;
+    for ring in &rings {
+        let (recs, dropped) = lock(ring).drain();
+        unattributed += dropped;
+        for r in recs {
+            match st.pending.get_mut(&r.trace_id) {
+                Some(e) => {
+                    if e.0.len() < MAX_SPANS_PER_TRACE {
+                        e.0.push(r);
+                    } else {
+                        e.1 += 1;
+                    }
+                }
+                None => {
+                    if st.pending.len() < PENDING_CAP || r.trace_id == trace_id {
+                        st.pending.insert(r.trace_id, (vec![r], 0));
+                    }
+                }
+            }
+        }
+    }
+    let (mut spans, mut dropped) = st.pending.remove(&trace_id).unwrap_or_default();
+    dropped += unattributed;
+    if spans.is_empty() {
+        return None;
+    }
+    spans.sort_by_key(|s| (s.start_us, s.span_id));
+    let t = Arc::new(FinishedTrace { trace_id, spans, dropped });
+    st.order.retain(|id| *id != trace_id);
+    st.finished.insert(trace_id, t.clone());
+    st.order.push_back(trace_id);
+    while st.order.len() > FINISHED_CAP {
+        if let Some(old) = st.order.pop_front() {
+            st.finished.remove(&old);
+        }
+    }
+    Some(t)
+}
+
+/// Look up a finished trace (`GET /v1/trace/<id>`).
+pub fn get(trace_id: u64) -> Option<Arc<FinishedTrace>> {
+    lock(store()).finished.get(&trace_id).cloned()
+}
+
+// -- JSON projections -------------------------------------------------------
+
+/// The span-tree document `/v1/trace/<id>` serves: a flat span list with
+/// parent links (`parent == 0` marks the root).
+pub fn trace_json(t: &FinishedTrace) -> Json {
+    let spans = t.spans.iter().map(|s| {
+        let attrs = s.attrs.iter().flatten().map(|(k, v)| (*k, v.to_json()));
+        json::obj([
+            ("id", Json::from(s.span_id)),
+            ("parent", Json::from(s.parent_id)),
+            ("name", Json::from(s.name)),
+            ("start_us", Json::from(s.start_us)),
+            ("dur_us", Json::from(s.dur_us)),
+            ("tid", Json::from(s.tid)),
+            ("attrs", json::obj(attrs)),
+        ])
+    });
+    json::obj([
+        ("trace_id", Json::from(format_trace_id(t.trace_id))),
+        ("span_count", Json::from(t.spans.len())),
+        ("dropped", Json::from(t.dropped)),
+        ("spans", json::arr(spans)),
+    ])
+}
+
+/// `chrome://tracing` trace-event form (`ph:"X"` complete events, µs
+/// timestamps) — what `--trace-file` writes and `?format=chrome` serves.
+pub fn chrome_trace_json(t: &FinishedTrace) -> Json {
+    let events = t.spans.iter().map(|s| {
+        let args = s
+            .attrs
+            .iter()
+            .flatten()
+            .map(|(k, v)| (*k, v.to_json()))
+            .chain([
+                ("span_id", Json::from(s.span_id)),
+                ("parent_id", Json::from(s.parent_id)),
+            ]);
+        json::obj([
+            ("name", Json::from(s.name)),
+            ("cat", Json::from("sssort")),
+            ("ph", Json::from("X")),
+            ("ts", Json::from(s.start_us)),
+            ("dur", Json::from(s.dur_us)),
+            ("pid", Json::from(1u64)),
+            ("tid", Json::from(s.tid)),
+            ("args", json::obj(args)),
+        ])
+    });
+    json::obj([
+        ("traceEvents", json::arr(events)),
+        ("displayTimeUnit", Json::from("ms")),
+    ])
+}
+
+/// Serializes tests (and benches) that toggle the global flag or assert
+/// on trace presence — the flag is process-wide, so such tests must not
+/// interleave. Production code never calls this.
+#[doc(hidden)]
+pub fn exclusive_test_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Restores the enabled flag on drop so a panicking test cannot leak
+    /// tracing into its neighbors.
+    struct Enabled {
+        _guard: MutexGuard<'static, ()>,
+        prev: bool,
+    }
+
+    impl Enabled {
+        fn new() -> Enabled {
+            let guard = exclusive_test_lock();
+            let prev = enabled();
+            set_enabled(true);
+            Enabled { _guard: guard, prev }
+        }
+    }
+
+    impl Drop for Enabled {
+        fn drop(&mut self) {
+            set_enabled(self.prev);
+        }
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _t = exclusive_test_lock();
+        let prev = enabled();
+        set_enabled(false);
+        let mut s = Span::root("x");
+        assert!(!s.is_recording());
+        assert_eq!(s.ctx(), None);
+        s.attr_u64("k", 1);
+        let g = s.make_current();
+        assert_eq!(current(), None);
+        drop(g);
+        s.end();
+        assert!(Span::child("y").ctx().is_none());
+        assert!(finish(123).is_none());
+        set_enabled(prev);
+    }
+
+    #[test]
+    fn ids_parse_and_format_round_trip() {
+        let id = new_trace_id();
+        assert_ne!(id, 0);
+        let s = format_trace_id(id);
+        assert_eq!(s.len(), 16);
+        assert_eq!(parse_trace_id(&s), Some(id));
+        assert_eq!(parse_trace_id("deadbeef"), Some(0xdeadbeef));
+        assert_eq!(parse_trace_id(""), None);
+        assert_eq!(parse_trace_id("0"), None);
+        assert_eq!(parse_trace_id("xyz"), None);
+        assert_eq!(parse_trace_id("11112222333344445"), None);
+    }
+
+    #[test]
+    fn span_tree_assembles_with_parent_links() {
+        let _e = Enabled::new();
+        let mut root = Span::root("request");
+        root.attr_str("kind", "test");
+        let root_ctx = root.ctx().expect("enabled root records");
+        {
+            let _g = root.make_current();
+            assert_eq!(current(), Some(root_ctx));
+            let child = Span::child("phase");
+            let child_ctx = child.ctx().unwrap();
+            assert_eq!(child_ctx.trace_id, root_ctx.trace_id);
+            let grand = Span::child_of(child.ctx(), "tile");
+            assert_eq!(grand.ctx().unwrap().trace_id, root_ctx.trace_id);
+            grand.end();
+            child.end();
+        }
+        assert_eq!(current(), None);
+        root.end();
+        let t = finish(root_ctx.trace_id).expect("trace finished");
+        assert_eq!(t.spans.len(), 3);
+        let by_name = |n: &str| t.spans.iter().find(|s| s.name == n).unwrap();
+        let (r, p, tl) = (by_name("request"), by_name("phase"), by_name("tile"));
+        assert_eq!(r.parent_id, 0);
+        assert_eq!(p.parent_id, r.span_id);
+        assert_eq!(tl.parent_id, p.span_id);
+        assert!(r.attrs.iter().flatten().any(|(k, v)| *k == "kind"
+            && *v == AttrValue::Str("test")));
+        // Retained in the LRU for later lookup.
+        assert!(get(root_ctx.trace_id).is_some());
+        assert!(get(root_ctx.trace_id ^ 0x5555).is_none());
+    }
+
+    #[test]
+    fn ring_wraparound_counts_drops() {
+        let _e = Enabled::new();
+        let root = Span::root("burst");
+        let ctx = root.ctx().unwrap();
+        let n = RING_CAP + 300;
+        let now = Instant::now();
+        for _ in 0..n {
+            record_span(ctx, "tick", now, Duration::from_micros(1), &[]);
+        }
+        root.end();
+        let t = finish(ctx.trace_id).expect("trace finished");
+        // This thread's ring holds RING_CAP records; everything older was
+        // overwritten and counted.
+        assert!(t.spans.len() <= RING_CAP);
+        assert!(t.dropped >= 300, "dropped={}", t.dropped);
+    }
+
+    #[test]
+    fn cross_thread_children_link_under_threads_1_to_8() {
+        let _e = Enabled::new();
+        for threads in 1..=8usize {
+            let root = Span::root("run");
+            let ctx = root.ctx().unwrap();
+            std::thread::scope(|scope| {
+                for w in 0..threads {
+                    scope.spawn(move || {
+                        let mut s = Span::child_of(Some(ctx), "tile");
+                        s.attr_u64("worker", w as u64);
+                        let inner = Span::child_of(s.ctx(), "sss_step");
+                        inner.end();
+                        s.end();
+                    });
+                }
+            });
+            root.end();
+            let t = finish(ctx.trace_id).expect("trace finished");
+            assert_eq!(t.spans.len(), 1 + 2 * threads);
+            let ids: std::collections::HashSet<u64> =
+                t.spans.iter().map(|s| s.span_id).collect();
+            assert_eq!(ids.len(), t.spans.len(), "span ids unique");
+            let tiles: Vec<_> = t.spans.iter().filter(|s| s.name == "tile").collect();
+            assert_eq!(tiles.len(), threads);
+            for s in &t.spans {
+                match s.name {
+                    "run" => assert_eq!(s.parent_id, 0),
+                    "tile" => assert_eq!(
+                        s.parent_id,
+                        t.spans.iter().find(|r| r.name == "run").unwrap().span_id
+                    ),
+                    "sss_step" => assert!(
+                        tiles.iter().any(|tl| tl.span_id == s.parent_id),
+                        "step span parents a tile"
+                    ),
+                    other => panic!("unexpected span {other}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_clock_aggregates_families() {
+        let _e = Enabled::new();
+        let root = Span::root("loop");
+        let ctx = root.ctx().unwrap();
+        let mut clock = StepClock::start(ctx.into());
+        let mut acc = 0u64;
+        for i in 0..10u64 {
+            acc += clock.time(FAM_SSS, || i * i);
+            clock.time(FAM_ADAM, || acc += 1);
+        }
+        clock.emit();
+        root.end();
+        let t = finish(ctx.trace_id).expect("trace finished");
+        let fam = |n: &str| t.spans.iter().find(|s| s.name == n).unwrap();
+        for name in ["sss_step", "adam_step"] {
+            let s = fam(name);
+            assert_eq!(s.parent_id, ctx.span_id);
+            assert!(s
+                .attrs
+                .iter()
+                .flatten()
+                .any(|(k, v)| *k == "steps" && *v == AttrValue::U64(10)));
+        }
+        assert!(t.spans.iter().all(|s| s.name != "gs_step"));
+        // Inert without a parent: no records, closure still runs.
+        let mut off = StepClock::start(None);
+        assert_eq!(off.time(FAM_GS, || 7), 7);
+        off.emit();
+    }
+
+    #[test]
+    fn json_projections_parse_and_carry_span_names() {
+        let _e = Enabled::new();
+        let mut root = Span::root("request");
+        root.attr_f64("loss", 0.25);
+        let ctx = root.ctx().unwrap();
+        Span::child_of(Some(ctx), "queue_wait").end();
+        root.end();
+        let t = finish(ctx.trace_id).unwrap();
+
+        let doc = trace_json(&t);
+        let text = doc.to_string_compact();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("trace_id").and_then(Json::as_str), Some(format_trace_id(ctx.trace_id)).as_deref());
+        let spans = parsed.get("spans").and_then(Json::as_arr).unwrap();
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().any(|s| s.get("name").and_then(Json::as_str) == Some("queue_wait")));
+
+        let chrome = chrome_trace_json(&t);
+        let parsed = Json::parse(&chrome.to_string_compact()).unwrap();
+        let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+            assert!(e.get("ts").and_then(Json::as_f64).is_some());
+            assert!(e.get("dur").and_then(Json::as_f64).is_some());
+        }
+    }
+
+    #[test]
+    fn lru_evicts_oldest_finished_trace() {
+        let _e = Enabled::new();
+        let mut first = 0u64;
+        for i in 0..(super::FINISHED_CAP + 4) {
+            let root = Span::root("r");
+            let ctx = root.ctx().unwrap();
+            if i == 0 {
+                first = ctx.trace_id;
+            }
+            root.end();
+            finish(ctx.trace_id).unwrap();
+        }
+        assert!(get(first).is_none(), "oldest trace evicted");
+    }
+}

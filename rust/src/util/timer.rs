@@ -48,6 +48,19 @@ impl Sections {
         e.1 += 1;
     }
 
+    /// Fold another accumulator into this one (summing durations and call
+    /// counts per section) — how the tiled executor's per-tile `Sections`
+    /// reach the run's `RunReport.sections`. Merging is commutative, but
+    /// callers fold in deterministic tile-index order anyway so reports
+    /// are reproducible byte-for-byte.
+    pub fn merge(&mut self, other: &Sections) {
+        for (name, (dur, n)) in &other.acc {
+            let e = self.acc.entry(name).or_insert((Duration::ZERO, 0));
+            e.0 += *dur;
+            e.1 += *n;
+        }
+    }
+
     pub fn total(&self, name: &str) -> Duration {
         self.acc.get(name).map(|e| e.0).unwrap_or(Duration::ZERO)
     }
@@ -88,5 +101,22 @@ mod tests {
         assert!(s.total("work") >= Duration::from_millis(6));
         assert!(s.report().contains("work"));
         assert_eq!(s.count("missing"), 0);
+    }
+
+    #[test]
+    fn merge_sums_durations_and_counts() {
+        let mut a = Sections::new();
+        a.add("execute", Duration::from_millis(10));
+        a.add("adam", Duration::from_millis(1));
+        let mut b = Sections::new();
+        b.add("execute", Duration::from_millis(5));
+        b.add("execute", Duration::from_millis(5));
+        b.add("shuffle", Duration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.total("execute"), Duration::from_millis(20));
+        assert_eq!(a.count("execute"), 3);
+        assert_eq!(a.total("adam"), Duration::from_millis(1));
+        assert_eq!(a.total("shuffle"), Duration::from_millis(2));
+        assert_eq!(a.count("shuffle"), 1);
     }
 }

@@ -477,6 +477,154 @@ fn tile_n_override_sorts_tiled_and_caches_separately_from_full() {
 }
 
 #[test]
+fn traced_sort_exposes_the_full_span_tree_and_chrome_export() {
+    let server = start_server();
+    let addr = server.addr();
+
+    // A tiled shuffle-softsort exercises every layer of the spine:
+    // routing, queue, engine job, phases, tiles, step families.
+    let body = r#"{"method":"shuffle-softsort","grid":"8x8","dataset":{"kind":"colors","n":64,"seed":11},"overrides":{"phases":8,"record_curve":false,"tile_n":16},"include_arranged":false}"#;
+    let r = Client::connect(addr).request_with_headers(
+        "POST", "/v1/sort", body, true, &[("X-Trace-Id", "00000000deadbeef")],
+    );
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(r.header("x-trace-id"), Some("00000000deadbeef"), "the id echoes back");
+
+    let t = get(addr, "/v1/trace/00000000deadbeef");
+    assert_eq!(t.status, 200, "{}", t.body);
+    let j = t.json();
+    assert_eq!(j.get("trace_id").unwrap().as_str(), Some("00000000deadbeef"));
+    let spans = j.get("spans").unwrap().as_arr().unwrap();
+    let names: Vec<&str> =
+        spans.iter().map(|s| s.get("name").unwrap().as_str().unwrap()).collect();
+    for want in
+        ["request", "shard_route", "queue_wait", "engine_job", "phase", "tile", "sss_step", "adam_step"]
+    {
+        assert!(names.contains(&want), "span tree misses '{want}': {names:?}");
+    }
+    // Parent links are internally consistent: exactly one root, and every
+    // child's parent id is a span of this same trace.
+    let ids: Vec<f64> =
+        spans.iter().map(|s| s.get("id").unwrap().as_f64().unwrap()).collect();
+    let mut roots = 0usize;
+    for s in spans {
+        let parent = s.get("parent").unwrap().as_f64().unwrap();
+        if parent == 0.0 {
+            roots += 1;
+        } else {
+            assert!(
+                ids.contains(&parent),
+                "span {:?} has a dangling parent {parent}",
+                s.get("name")
+            );
+        }
+    }
+    assert_eq!(roots, 1, "exactly one root (the request span)");
+
+    // The same trace renders as Chrome trace-event JSON for
+    // chrome://tracing / Perfetto.
+    let c = get(addr, "/v1/trace/00000000deadbeef?format=chrome");
+    assert_eq!(c.status, 200, "{}", c.body);
+    let events = c.json().get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), spans.len());
+    assert!(events.iter().all(|e| e.get("ph").unwrap().as_str() == Some("X")));
+
+    // Convergence telemetry landed on /metrics: span histograms observed
+    // phases and tiles, and the step-family totals counted sss steps.
+    let m = get(addr, "/metrics").json();
+    let span_hists = m.get("spans").expect("metrics carry span histograms");
+    assert!(
+        span_hists.get("phase_exec").unwrap().get("count").unwrap().as_usize().unwrap() >= 1
+    );
+    assert!(
+        span_hists.get("tile_exec").unwrap().get("count").unwrap().as_usize().unwrap() >= 1
+    );
+    assert!(
+        span_hists.get("queue_wait").unwrap().get("count").unwrap().as_usize().unwrap() >= 1
+    );
+    let fams = m.get("step_families").unwrap();
+    assert!(fams.get("sss_step").unwrap().get("steps").unwrap().as_usize().unwrap() >= 1);
+
+    // Endpoint error contract: bad hex → 400, unknown id → 404, wrong
+    // verb → 405.
+    assert_eq!(get(addr, "/v1/trace/zzzz").status, 400);
+    assert_eq!(get(addr, "/v1/trace/123abc").status, 404);
+    assert_eq!(post(addr, "/v1/trace/123abc", "").status, 405);
+
+    server.shutdown();
+}
+
+#[test]
+fn trace_off_server_matches_traced_bodies_and_hides_the_endpoint() {
+    // Same request on a traced and an untraced server: the bodies must be
+    // byte-identical (tracing is observability, never behavior).
+    let server_on = start_server();
+    let traced = Client::connect(server_on.addr()).request_with_headers(
+        "POST", "/v1/sort", &sort_body(21, 24), true, &[("X-Trace-Id", "feedc0de")],
+    );
+    assert_eq!(traced.status, 200, "{}", traced.body);
+    // Short ids are zero-padded to the canonical 16-hex-digit form.
+    assert_eq!(traced.header("x-trace-id"), Some("00000000feedc0de"));
+    server_on.shutdown();
+
+    let mut cfg = serve_cfg();
+    cfg.trace = false;
+    let server_off = start_server_with(cfg);
+    let addr = server_off.addr();
+    let plain = Client::connect(addr).request_with_headers(
+        "POST", "/v1/sort", &sort_body(21, 24), true, &[("X-Trace-Id", "feedc0de")],
+    );
+    assert_eq!(plain.status, 200, "{}", plain.body);
+    assert_eq!(plain.header("x-trace-id"), None, "untraced servers do not echo the id");
+    assert_eq!(plain.body, traced.body, "tracing never changes response bytes");
+    assert_eq!(get(addr, "/v1/trace/feedc0de").status, 404, "endpoint is off with trace=off");
+    server_off.shutdown();
+}
+
+#[test]
+fn include_report_adds_run_telemetry_and_caches_separately() {
+    let server = start_server();
+    let addr = server.addr();
+
+    let plain_body = r#"{"method":"shuffle-softsort","grid":"4x4","dataset":{"kind":"colors","n":16,"seed":6},"overrides":{"phases":8,"record_curve":false},"include_arranged":false}"#;
+    let with_report = r#"{"method":"shuffle-softsort","grid":"4x4","dataset":{"kind":"colors","n":16,"seed":6},"overrides":{"phases":8,"record_curve":false},"include_arranged":false,"include_report":true}"#;
+
+    let plain = post(addr, "/v1/sort", plain_body);
+    assert_eq!(plain.status, 200, "{}", plain.body);
+    assert!(plain.json().get("report").is_none(), "report is opt-in: {}", plain.body);
+
+    // Same sort with the report: a distinct cache entry (response shape is
+    // part of the key) carrying the convergence counters.
+    let r = post(addr, "/v1/sort", with_report);
+    assert_eq!(r.status, 200, "{}", r.body);
+    assert_eq!(r.header("x-cache"), Some("miss"));
+    let j = r.json();
+    let report = j.get("report").expect("include_report adds the report object");
+    assert!(report.get("wall_secs").unwrap().as_f64().unwrap() >= 0.0);
+    assert!(report.get("rejected_phases").unwrap().as_usize().is_some());
+    assert!(report.get("extensions").unwrap().as_usize().is_some());
+    assert_eq!(report.get("tiles").unwrap().as_usize(), Some(1));
+    // The rest of the body is unchanged by the rider.
+    assert_eq!(perm_of(&j), perm_of(&plain.json()));
+
+    // Replay is a byte-identical cache hit.
+    let again = post(addr, "/v1/sort", with_report);
+    assert_eq!(again.header("x-cache"), Some("hit"));
+    assert_eq!(again.body, r.body);
+
+    // Non-boolean flag → 400 naming the field.
+    let bad = post(
+        addr,
+        "/v1/sort",
+        r#"{"method":"softsort","grid":"4x4","dataset":{"kind":"colors","n":16},"include_report":"yes"}"#,
+    );
+    assert_eq!(bad.status, 400, "{}", bad.body);
+    assert!(bad.body.contains("include_report"), "{}", bad.body);
+
+    server.shutdown();
+}
+
+#[test]
 fn keep_alive_serves_multiple_requests_on_one_connection() {
     let server = start_server();
     let addr = server.addr();

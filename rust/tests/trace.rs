@@ -1,0 +1,125 @@
+//! Trace neutrality and spine coverage, at the `Engine` level: the
+//! tracing subsystem is pure observability, so enabling it must never
+//! change a single result bit, and a traced sort must actually produce
+//! the span tree the serve/CLI exposures rely on.
+//!
+//! Collector internals (ring wraparound, multi-thread parent/child
+//! integrity) are unit-tested inside `src/trace/mod.rs`; this file covers
+//! the driver-facing contract on the native backend.
+
+use shufflesort::api::{BackendChoice, Engine};
+use shufflesort::data::random_colors;
+use shufflesort::grid::GridShape;
+use shufflesort::trace;
+
+fn engine() -> Engine {
+    Engine::builder("artifacts").backend(BackendChoice::Native).threads(1).build()
+}
+
+/// Sort once with tracing in the given state; returns the outcome and
+/// (when traced) the finished trace.
+fn sort_with_tracing(
+    traced: bool,
+    method: &str,
+    overrides: &[(String, String)],
+) -> (shufflesort::coordinator::SortOutcome, Option<std::sync::Arc<trace::FinishedTrace>>) {
+    let ds = random_colors(64, 9);
+    let g = GridShape::new(8, 8);
+    trace::set_enabled(traced);
+    let root = if traced { trace::Span::root("test_sort") } else { trace::Span::off() };
+    let id = root.ctx().map(|c| c.trace_id);
+    let out = {
+        let _cur = root.make_current();
+        engine().sort(method, &ds, g, overrides).expect("sort succeeds")
+    };
+    root.end();
+    let finished = id.and_then(trace::finish);
+    trace::set_enabled(false);
+    (out, finished)
+}
+
+fn ov(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+#[test]
+fn engine_sort_is_bit_identical_with_tracing_on_and_off() {
+    let _x = trace::exclusive_test_lock();
+    // Tiled shuffle-softsort covers phases, tiles and both step families.
+    for (method, overrides) in [
+        ("shuffle-softsort", ov(&[("phases", "12"), ("tile_n", "16"), ("record_curve", "false")])),
+        ("softsort", ov(&[("steps", "24")])),
+    ] {
+        let (off, none) = sort_with_tracing(false, method, &overrides);
+        assert!(none.is_none(), "untraced sorts record nothing");
+        let (on, finished) = sort_with_tracing(true, method, &overrides);
+
+        assert_eq!(
+            off.perm.as_slice(),
+            on.perm.as_slice(),
+            "{method}: permutation must not depend on tracing"
+        );
+        let off_bits: Vec<u32> = off.arranged.iter().map(|v| v.to_bits()).collect();
+        let on_bits: Vec<u32> = on.arranged.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(off_bits, on_bits, "{method}: arranged rows must be bit-identical");
+        assert_eq!(off.report.final_loss.to_bits(), on.report.final_loss.to_bits(), "{method}");
+        assert_eq!(off.report.final_dpq.to_bits(), on.report.final_dpq.to_bits(), "{method}");
+        assert_eq!(off.report.steps, on.report.steps, "{method}");
+        assert_eq!(off.report.rejected_phases, on.report.rejected_phases, "{method}");
+
+        let t = finished.expect("traced sort produced a finished trace");
+        assert!(t.spans.len() > 1, "{method}: trace has spans beyond the root");
+    }
+}
+
+#[test]
+fn traced_tiled_sort_produces_phase_tile_and_step_spans() {
+    let _x = trace::exclusive_test_lock();
+    // record_curve stays on (the default): the per-phase `loss` attr is
+    // read off the curve, so the telemetry assertions below need it.
+    let (_, finished) = sort_with_tracing(
+        true,
+        "shuffle-softsort",
+        &ov(&[("phases", "8"), ("tile_n", "16")]),
+    );
+    let t = finished.expect("finished trace");
+    let names: Vec<&str> = t.spans.iter().map(|s| s.name).collect();
+    for want in ["test_sort", "phase", "tile", "sss_step", "adam_step", "session_build"] {
+        assert!(names.contains(&want), "missing '{want}' span: {names:?}");
+    }
+    // Every phase span carries the convergence attrs the telemetry uses.
+    let phases: Vec<_> = t.spans.iter().filter(|s| s.name == "phase").collect();
+    assert_eq!(phases.len(), 8, "stride 1 at 8 phases samples all of them");
+    for p in phases {
+        let keys: Vec<&str> = p.attrs.iter().flatten().map(|(k, _)| *k).collect();
+        for want in ["phase", "tau", "loss", "accepted"] {
+            assert!(keys.contains(&want), "phase span misses attr '{want}': {keys:?}");
+        }
+    }
+    // Parent links all resolve within the trace, with one root.
+    let ids: Vec<u64> = t.spans.iter().map(|s| s.span_id).collect();
+    let mut roots = 0usize;
+    for s in &t.spans {
+        assert_eq!(s.trace_id, t.trace_id);
+        if s.parent_id == 0 {
+            roots += 1;
+        } else {
+            assert!(ids.contains(&s.parent_id), "dangling parent for '{}'", s.name);
+        }
+    }
+    assert_eq!(roots, 1);
+    // 4 tiles per phase × 8 phases, each timing both step families.
+    assert_eq!(t.spans.iter().filter(|s| s.name == "tile").count(), 32);
+    let sss_steps: u64 = t
+        .spans
+        .iter()
+        .filter(|s| s.name == "sss_step")
+        .filter_map(|s| {
+            s.attrs.iter().flatten().find(|(k, _)| *k == "steps").and_then(|(_, v)| match v {
+                trace::AttrValue::U64(n) => Some(*n),
+                _ => None,
+            })
+        })
+        .sum();
+    assert!(sss_steps > 0, "sss_step spans count their steps");
+}
