@@ -465,17 +465,23 @@ fn handle_connection(
 
 fn handle(ctx: &Ctx, req: &Request, peer: IpAddr) -> Response {
     ctx.metrics.requests.fetch_add(1, Ordering::Relaxed);
-    // Root span of the request's trace. A client-supplied `X-Trace-Id`
-    // names the trace (so the client can fetch `/v1/trace/<id>` after);
-    // otherwise a fresh id is minted. `trace=off` servers skip all of it.
-    let mut root = if !ctx.cfg.trace {
-        trace::Span::off()
+    // Root span of the request's trace. The trace id is always minted
+    // server-side and echoed in the response's `X-Trace-Id` — sharing the
+    // id namespace with clients would let two concurrent requests sending
+    // the same header merge their spans into one trace (or deliberately
+    // overwrite another request's finished entry). A client-supplied
+    // `X-Trace-Id` rides along as a correlation attribute instead.
+    // `trace=off` servers skip all of it.
+    let mut root = if ctx.cfg.trace {
+        trace::Span::root("request")
     } else {
-        match req.header("x-trace-id").and_then(trace::parse_trace_id) {
-            Some(id) => trace::Span::root_with("request", id),
-            None => trace::Span::root("request"),
-        }
+        trace::Span::off()
     };
+    if root.is_recording() {
+        if let Some(cid) = req.header("x-trace-id").and_then(trace::parse_trace_id) {
+            root.attr_u64("client_trace_id", cid);
+        }
+    }
     let trace_id = root.ctx().map(|c| c.trace_id);
     let resp = {
         let _cur = root.make_current();
@@ -637,7 +643,7 @@ fn trace_view(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
     let t = trace::get(id).ok_or_else(|| {
         ApiError::not_found(format!(
             "no finished trace {} — traces live in a bounded LRU; re-send the request \
-             with that X-Trace-Id and fetch again",
+             and fetch the id echoed in its X-Trace-Id response header",
             trace::format_trace_id(id)
         ))
     })?;

@@ -10,7 +10,10 @@
 //! allocates per record: spans end as fixed-size `Copy` [`SpanRecord`]s
 //! pushed into a preallocated per-thread ring buffer ([`RING_CAP`] slots,
 //! wraparound counted in `dropped`), under a per-thread mutex that is
-//! uncontended except while a collector drains it.
+//! uncontended except while a collector drains it. A ring lives exactly
+//! as long as its thread: exit flushes residual records into the pending
+//! store and deregisters the ring, so short-lived worker threads (scoped
+//! sort workers, per-sort pools) never accumulate rings process-wide.
 //!
 //! Assembly is pull-based — there is no background thread. Ending a root
 //! span and calling [`finish`] drains every registered ring, routes the
@@ -41,7 +44,8 @@ pub const RING_CAP: usize = 2048;
 /// Finished traces kept for `GET /v1/trace/<id>` (LRU eviction).
 const FINISHED_CAP: usize = 128;
 /// Distinct unfinished traces the pending map will hold between drains;
-/// records for further trace ids are dropped rather than accumulated.
+/// inserting beyond this evicts the oldest pending trace (its span count
+/// lands in the next finished trace's `dropped`).
 const PENDING_CAP: usize = 64;
 /// Spans kept per trace; the excess is counted in `FinishedTrace::dropped`.
 pub const MAX_SPANS_PER_TRACE: usize = 4096;
@@ -192,29 +196,54 @@ fn registry() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
     REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
 }
 
+/// 1-based display tids; a global counter (not the registry length) so
+/// they stay unique across ring deregistrations.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// The thread-local owner of a registered ring. Its `Drop` runs at thread
+/// exit: residual records are flushed into the pending store (so an
+/// in-flight trace keeps spans recorded by a worker that exits before
+/// `finish`), and the ring is removed from the registry — short-lived
+/// recording threads (scoped sort workers, per-sort pools) must not leak
+/// a ring per thread for the life of the process.
+struct ThreadRing {
+    tid: u64,
+    ring: Arc<Mutex<Ring>>,
+}
+
+impl Drop for ThreadRing {
+    fn drop(&mut self) {
+        let (recs, dropped) = lock(&self.ring).drain();
+        {
+            let mut st = lock(store());
+            st.orphan_dropped += dropped;
+            for r in recs {
+                park(&mut st, r, 0);
+            }
+        }
+        lock(registry()).retain(|r| !Arc::ptr_eq(r, &self.ring));
+    }
+}
+
 thread_local! {
-    static LOCAL_RING: RefCell<Option<(u64, Arc<Mutex<Ring>>)>> =
-        const { RefCell::new(None) };
+    static LOCAL_RING: RefCell<Option<ThreadRing>> = const { RefCell::new(None) };
     static CURRENT: RefCell<Vec<SpanContext>> = const { RefCell::new(Vec::new()) };
 }
 
 fn record(mut rec: SpanRecord) {
     LOCAL_RING.with(|cell| {
         let mut slot = cell.borrow_mut();
-        if slot.is_none() {
+        let tr = slot.get_or_insert_with(|| {
             let ring = Arc::new(Mutex::new(Ring {
                 buf: Vec::with_capacity(RING_CAP),
                 next: 0,
                 dropped: 0,
             }));
-            let mut reg = lock(registry());
-            let tid = reg.len() as u64 + 1;
-            reg.push(ring.clone());
-            *slot = Some((tid, ring));
-        }
-        let (tid, ring) = slot.as_ref().expect("just initialized");
-        rec.tid = *tid;
-        lock(ring).push(rec);
+            lock(registry()).push(ring.clone());
+            ThreadRing { tid: NEXT_TID.fetch_add(1, Ordering::Relaxed), ring }
+        });
+        rec.tid = tr.tid;
+        lock(&tr.ring).push(rec);
     });
 }
 
@@ -265,14 +294,6 @@ impl Span {
             return Span::off();
         }
         Span::open(new_trace_id(), 0, name)
-    }
-
-    /// Root span under a caller-supplied trace id (`X-Trace-Id`).
-    pub fn root_with(name: &'static str, trace_id: u64) -> Span {
-        if !enabled() || trace_id == 0 {
-            return Span::off();
-        }
-        Span::open(trace_id, 0, name)
     }
 
     /// Child of this thread's current span (disabled when there is none).
@@ -468,17 +489,27 @@ impl StepClock {
 pub struct FinishedTrace {
     pub trace_id: u64,
     pub spans: Vec<SpanRecord>,
-    /// Records lost to ring wraparound or per-trace caps. Ring overwrites
-    /// cannot be attributed to a trace, so they are charged to whichever
-    /// trace finishes next — an upper bound, never an undercount.
+    /// Records lost to ring wraparound, per-trace caps, or pending-map
+    /// eviction. Losses that cannot be attributed to a trace are charged
+    /// to whichever trace finishes next — an upper bound, never an
+    /// undercount.
     pub dropped: u64,
 }
 
 struct Store {
     /// Drained records for traces not yet finished, keyed by trace id.
     pending: HashMap<u64, (Vec<SpanRecord>, u64)>,
+    /// Insertion order of `pending` ids (front = oldest) — the eviction
+    /// order when the map is full, so stale ids (traces whose `finish`
+    /// already ran, late-arriving records) age out instead of occupying
+    /// slots forever.
+    pending_order: VecDeque<u64>,
+    /// Records lost outside any live pending entry: ring overwrites, ring
+    /// flushes from exited threads, and pending entries evicted at
+    /// [`PENDING_CAP`]. Charged to the next trace that finishes.
+    orphan_dropped: u64,
     finished: HashMap<u64, Arc<FinishedTrace>>,
-    /// LRU order of `finished` (front = oldest).
+    /// LRU order of `finished` (front = oldest; [`get`] bumps recency).
     order: VecDeque<u64>,
 }
 
@@ -487,10 +518,42 @@ fn store() -> &'static Mutex<Store> {
     STORE.get_or_init(|| {
         Mutex::new(Store {
             pending: HashMap::new(),
+            pending_order: VecDeque::new(),
+            orphan_dropped: 0,
             finished: HashMap::new(),
             order: VecDeque::new(),
         })
     })
+}
+
+/// Route one drained record into the pending map. A full map evicts its
+/// oldest entries — never `protect`, the trace currently being finished
+/// (0 = protect nothing) — and counts the evicted spans into
+/// `orphan_dropped` rather than silently refusing the new record.
+fn park(st: &mut Store, r: SpanRecord, protect: u64) {
+    if let Some(e) = st.pending.get_mut(&r.trace_id) {
+        if e.0.len() < MAX_SPANS_PER_TRACE {
+            e.0.push(r);
+        } else {
+            e.1 += 1;
+        }
+        return;
+    }
+    while st.pending.len() >= PENDING_CAP {
+        let Some(old) = st.pending_order.pop_front() else { break };
+        if old == protect {
+            st.pending_order.push_back(old);
+            if st.pending_order.len() <= 1 {
+                break;
+            }
+            continue;
+        }
+        if let Some((spans, dropped)) = st.pending.remove(&old) {
+            st.orphan_dropped += spans.len() as u64 + dropped;
+        }
+    }
+    st.pending.insert(r.trace_id, (vec![r], 0));
+    st.pending_order.push_back(r.trace_id);
 }
 
 /// Drain every thread's ring, route records to their traces, and file
@@ -501,34 +564,33 @@ pub fn finish(trace_id: u64) -> Option<Arc<FinishedTrace>> {
     if !enabled() {
         return None;
     }
+    // Drain the rings before taking the store lock: rings are locked one
+    // at a time and never nested inside the store's (the thread-exit
+    // flush takes them in the same ring-then-store order).
     let rings: Vec<Arc<Mutex<Ring>>> = lock(registry()).clone();
-    let mut st = lock(store());
+    let mut drained: Vec<SpanRecord> = Vec::new();
     let mut unattributed = 0u64;
     for ring in &rings {
         let (recs, dropped) = lock(ring).drain();
         unattributed += dropped;
-        for r in recs {
-            match st.pending.get_mut(&r.trace_id) {
-                Some(e) => {
-                    if e.0.len() < MAX_SPANS_PER_TRACE {
-                        e.0.push(r);
-                    } else {
-                        e.1 += 1;
-                    }
-                }
-                None => {
-                    if st.pending.len() < PENDING_CAP || r.trace_id == trace_id {
-                        st.pending.insert(r.trace_id, (vec![r], 0));
-                    }
-                }
-            }
-        }
+        drained.extend(recs);
+    }
+    drop(rings);
+    // Backstop for threads whose TLS destructor never ran (abnormal
+    // exit): a ring referenced only by the registry can no longer receive
+    // records, so it is dead weight — prune it.
+    lock(registry()).retain(|r| Arc::strong_count(r) > 1);
+    let mut st = lock(store());
+    st.orphan_dropped += unattributed;
+    for r in drained {
+        park(&mut st, r, trace_id);
     }
     let (mut spans, mut dropped) = st.pending.remove(&trace_id).unwrap_or_default();
-    dropped += unattributed;
+    st.pending_order.retain(|id| *id != trace_id);
     if spans.is_empty() {
         return None;
     }
+    dropped += std::mem::take(&mut st.orphan_dropped);
     spans.sort_by_key(|s| (s.start_us, s.span_id));
     let t = Arc::new(FinishedTrace { trace_id, spans, dropped });
     st.order.retain(|id| *id != trace_id);
@@ -542,9 +604,15 @@ pub fn finish(trace_id: u64) -> Option<Arc<FinishedTrace>> {
     Some(t)
 }
 
-/// Look up a finished trace (`GET /v1/trace/<id>`).
+/// Look up a finished trace (`GET /v1/trace/<id>`) and bump its LRU
+/// recency — a trace a client is actively polling must not be the
+/// eviction victim while never-read traces survive.
 pub fn get(trace_id: u64) -> Option<Arc<FinishedTrace>> {
-    lock(store()).finished.get(&trace_id).cloned()
+    let mut st = lock(store());
+    let t = st.finished.get(&trace_id).cloned()?;
+    st.order.retain(|id| *id != trace_id);
+    st.order.push_back(trace_id);
+    Some(t)
 }
 
 // -- JSON projections -------------------------------------------------------
@@ -820,6 +888,91 @@ mod tests {
             assert!(e.get("ts").and_then(Json::as_f64).is_some());
             assert!(e.get("dur").and_then(Json::as_f64).is_some());
         }
+    }
+
+    #[test]
+    fn thread_exit_flushes_and_deregisters_its_ring() {
+        let _e = Enabled::new();
+        let root = Span::root("run");
+        let ctx = root.ctx().unwrap();
+        let before = lock(registry()).len();
+        const WORKERS: usize = 4;
+        for w in 0..WORKERS {
+            std::thread::spawn(move || {
+                let mut s = Span::child_of(Some(ctx), "tile");
+                s.attr_u64("worker", w as u64);
+                s.end();
+            })
+            .join()
+            .unwrap();
+        }
+        // Every worker deregistered at exit. Slack of 1 tolerates a
+        // neighboring test thread's own exit racing this window; a leak
+        // would grow the registry by WORKERS.
+        assert!(
+            lock(registry()).len() <= before + 1,
+            "exited threads' rings are deregistered, not leaked"
+        );
+        root.end();
+        // The exiting threads' spans were flushed to pending, not lost.
+        let t = finish(ctx.trace_id).expect("trace finished");
+        assert_eq!(
+            t.spans.iter().filter(|s| s.name == "tile").count(),
+            WORKERS,
+            "flushed spans survive"
+        );
+        assert!(t.spans.iter().any(|s| s.name == "run"));
+    }
+
+    #[test]
+    fn pending_overflow_evicts_oldest_and_counts_drops() {
+        let _e = Enabled::new();
+        // Park PENDING_CAP + 5 distinct never-finished traces in this
+        // thread's ring, then finish one more: routing overflows the
+        // pending map, which must evict the oldest entries and count
+        // their spans rather than refuse the newest.
+        let orphans: Vec<u64> = (0..PENDING_CAP + 5)
+            .map(|_| {
+                let s = Span::root("orphan");
+                let id = s.ctx().unwrap().trace_id;
+                s.end();
+                id
+            })
+            .collect();
+        let root = Span::root("target");
+        let ctx = root.ctx().unwrap();
+        root.end();
+        let t = finish(ctx.trace_id).expect("target trace finished");
+        assert!(
+            t.dropped >= 6,
+            "evicted orphan spans are counted, got dropped={}",
+            t.dropped
+        );
+        // The oldest orphans were evicted; their finish finds nothing and
+        // the map is back under its cap.
+        assert!(finish(orphans[0]).is_none(), "evicted trace is gone");
+        assert!(lock(store()).pending.len() <= PENDING_CAP);
+    }
+
+    #[test]
+    fn polled_traces_survive_lru_pressure() {
+        let _e = Enabled::new();
+        let mk = || {
+            let root = Span::root("r");
+            let id = root.ctx().unwrap().trace_id;
+            root.end();
+            finish(id).unwrap();
+            id
+        };
+        let polled = mk();
+        let idle = mk();
+        for _ in 0..(super::FINISHED_CAP - 1) {
+            mk();
+            // Polling bumps recency, so the polled trace outlives the
+            // idle one filed after it.
+            assert!(get(polled).is_some(), "actively polled trace survives");
+        }
+        assert!(get(idle).is_none(), "never-read trace is the eviction victim");
     }
 
     #[test]

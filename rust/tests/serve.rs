@@ -488,12 +488,22 @@ fn traced_sort_exposes_the_full_span_tree_and_chrome_export() {
         "POST", "/v1/sort", body, true, &[("X-Trace-Id", "00000000deadbeef")],
     );
     assert_eq!(r.status, 200, "{}", r.body);
-    assert_eq!(r.header("x-trace-id"), Some("00000000deadbeef"), "the id echoes back");
+    // The trace id is minted server-side: the echoed header is canonical
+    // 16-hex but never the client's value, which rides along as a
+    // correlation attribute on the request span instead.
+    let tid = r.header("x-trace-id").expect("traced server echoes a minted id").to_string();
+    assert_eq!(tid.len(), 16, "canonical id form: {tid}");
+    assert_ne!(tid, "00000000deadbeef", "client ids never name the trace");
+    assert_eq!(
+        get(addr, "/v1/trace/00000000deadbeef").status,
+        404,
+        "the raw client id addresses no trace"
+    );
 
-    let t = get(addr, "/v1/trace/00000000deadbeef");
+    let t = get(addr, &format!("/v1/trace/{tid}"));
     assert_eq!(t.status, 200, "{}", t.body);
     let j = t.json();
-    assert_eq!(j.get("trace_id").unwrap().as_str(), Some("00000000deadbeef"));
+    assert_eq!(j.get("trace_id").unwrap().as_str(), Some(tid.as_str()));
     let spans = j.get("spans").unwrap().as_arr().unwrap();
     let names: Vec<&str> =
         spans.iter().map(|s| s.get("name").unwrap().as_str().unwrap()).collect();
@@ -502,6 +512,16 @@ fn traced_sort_exposes_the_full_span_tree_and_chrome_export() {
     {
         assert!(names.contains(&want), "span tree misses '{want}': {names:?}");
     }
+    // The client's X-Trace-Id landed as the correlation attribute.
+    let request_span = spans
+        .iter()
+        .find(|s| s.get("name").unwrap().as_str() == Some("request"))
+        .unwrap();
+    assert_eq!(
+        request_span.get("attrs").unwrap().get("client_trace_id").unwrap().as_f64(),
+        Some(0x00000000deadbeefu64 as f64),
+        "client id recorded as an attribute"
+    );
     // Parent links are internally consistent: exactly one root, and every
     // child's parent id is a span of this same trace.
     let ids: Vec<f64> =
@@ -523,7 +543,7 @@ fn traced_sort_exposes_the_full_span_tree_and_chrome_export() {
 
     // The same trace renders as Chrome trace-event JSON for
     // chrome://tracing / Perfetto.
-    let c = get(addr, "/v1/trace/00000000deadbeef?format=chrome");
+    let c = get(addr, &format!("/v1/trace/{tid}?format=chrome"));
     assert_eq!(c.status, 200, "{}", c.body);
     let events = c.json().get("traceEvents").unwrap().as_arr().unwrap();
     assert_eq!(events.len(), spans.len());
@@ -563,8 +583,10 @@ fn trace_off_server_matches_traced_bodies_and_hides_the_endpoint() {
         "POST", "/v1/sort", &sort_body(21, 24), true, &[("X-Trace-Id", "feedc0de")],
     );
     assert_eq!(traced.status, 200, "{}", traced.body);
-    // Short ids are zero-padded to the canonical 16-hex-digit form.
-    assert_eq!(traced.header("x-trace-id"), Some("00000000feedc0de"));
+    // The echo is a server-minted canonical 16-hex id, never the client's.
+    let minted = traced.header("x-trace-id").expect("traced servers echo an id");
+    assert_eq!(minted.len(), 16, "canonical id form: {minted}");
+    assert_ne!(minted, "00000000feedc0de");
     server_on.shutdown();
 
     let mut cfg = serve_cfg();
@@ -579,6 +601,40 @@ fn trace_off_server_matches_traced_bodies_and_hides_the_endpoint() {
     assert_eq!(plain.body, traced.body, "tracing never changes response bytes");
     assert_eq!(get(addr, "/v1/trace/feedc0de").status, 404, "endpoint is off with trace=off");
     server_off.shutdown();
+}
+
+#[test]
+fn reused_client_trace_ids_get_distinct_traces() {
+    // Two requests sending the SAME X-Trace-Id must land in two distinct
+    // traces: the server mints per-request ids, so one request can never
+    // merge into (or overwrite) another's span tree.
+    let server = start_server();
+    let addr = server.addr();
+    let headers = &[("X-Trace-Id", "cafe")];
+    let a = Client::connect(addr).request_with_headers(
+        "POST", "/v1/sort", &sort_body(31, 16), true, headers,
+    );
+    let b = Client::connect(addr).request_with_headers(
+        "POST", "/v1/sort", &sort_body(32, 16), true, headers,
+    );
+    assert_eq!(a.status, 200, "{}", a.body);
+    assert_eq!(b.status, 200, "{}", b.body);
+    let ta = a.header("x-trace-id").unwrap().to_string();
+    let tb = b.header("x-trace-id").unwrap().to_string();
+    assert_ne!(ta, tb, "each request gets its own trace id");
+    for tid in [&ta, &tb] {
+        let t = get(addr, &format!("/v1/trace/{tid}"));
+        assert_eq!(t.status, 200, "{}", t.body);
+        let j = t.json();
+        let spans = j.get("spans").unwrap().as_arr().unwrap();
+        let roots = spans
+            .iter()
+            .filter(|s| s.get("parent").unwrap().as_f64() == Some(0.0))
+            .count();
+        assert_eq!(roots, 1, "one request span per trace, never merged");
+    }
+    assert_eq!(get(addr, "/v1/trace/cafe").status, 404);
+    server.shutdown();
 }
 
 #[test]
