@@ -11,7 +11,9 @@
 mod common;
 
 use shufflesort::assignment::jv;
-use shufflesort::backend::{NativeBackend, SssStep, StepBackend, StepSession, StepShape};
+use shufflesort::backend::{
+    simd, NativeBackend, SessionOpts, SimdChoice, SssStep, StepBackend, StepSession, StepShape,
+};
 use shufflesort::bench::{banner, bench, quick_mode, write_json_report, Sample};
 use shufflesort::data::random_colors;
 use shufflesort::grid::GridShape;
@@ -41,7 +43,7 @@ fn main() {
         let inv: Vec<i32> = (0..n as i32).collect();
         let shape = StepShape::new(GridShape::new(h, n / h), d);
 
-        let mut session = native.session(shape, None).unwrap();
+        let mut session = native.session(shape, SessionOpts::default()).unwrap();
         let mut step = SssStep::new_for(shape);
         let reuse = bench(
             &format!("native sss_step n={n} d={d} h={h} (session reuse)"),
@@ -77,6 +79,48 @@ fn main() {
             });
             println!("{}", s.line());
             samples.push(s);
+        }
+    }
+
+    // ---- scalar vs SIMD step kernels (session reuse, d=3 and d=64) -------
+    // Row pairs differing only in the session's `simd` knob: `auto` is the
+    // best instruction set detected at runtime, `off` the scalar oracle.
+    // The pair delta is the ISSUE-8 tentpole win, tracked per commit in
+    // BENCH_runtime.json (CI's regression guard keys on the d=3 auto row).
+    {
+        println!("    simd detected: {}", simd::detected().name());
+        let n = 1024usize;
+        let h = 32usize;
+        for d in [3usize, 64] {
+            let mut rng = Pcg32::new(7 + d as u64);
+            let x: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+            let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+            let inv: Vec<i32> = (0..n as i32).collect();
+            let shape = StepShape::new(GridShape::new(h, n / h), d);
+            let mut pair = Vec::with_capacity(2);
+            for choice in [SimdChoice::Off, SimdChoice::Auto] {
+                let opts = SessionOpts { threads: None, simd: choice };
+                let mut session = native.session(shape, opts).unwrap();
+                let mut step = SssStep::new_for(shape);
+                let s = bench(
+                    &format!("native sss_step n={n} d={d} h={h} simd={choice} (session reuse)"),
+                    2,
+                    reps,
+                    || {
+                        session.sss_step(&w, &x, &inv, 0.3, 0.5, &mut step).unwrap();
+                        step.loss
+                    },
+                );
+                println!("{}", s.line());
+                pair.push(s);
+            }
+            println!(
+                "    simd speedup at n={n} d={d}: {:.2}x (off {:.3} ms vs auto {:.3} ms per step)",
+                pair[0].mean_s / pair[1].mean_s.max(1e-12),
+                pair[0].mean_s * 1e3,
+                pair[1].mean_s * 1e3
+            );
+            samples.extend(pair);
         }
     }
 
@@ -163,7 +207,7 @@ fn main() {
         let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
         let inv: Vec<i32> = (0..n as i32).collect();
         let shape = StepShape::new(GridShape::new(32, n / 32), 3);
-        let mut session = native.session(shape, None).unwrap();
+        let mut session = native.session(shape, SessionOpts::default()).unwrap();
         let mut step = SssStep::new_for(shape);
 
         shufflesort::trace::set_enabled(false);
@@ -202,6 +246,63 @@ fn main() {
         );
         samples.push(off);
         samples.push(on);
+    }
+
+    // ---- trace-derived per-kernel time (StepClock units) -----------------
+    // The serve plane reports kernel time as the step_family_seconds_total
+    // counter: StepClock totals folded out of finished traces. Deriving a
+    // bench row from the same spans puts the SIMD win in the units
+    // `/metrics` reports, not just wall-clock around the call.
+    {
+        let n = 1024usize;
+        let ds = random_colors(n, 1);
+        let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let inv: Vec<i32> = (0..n as i32).collect();
+        let shape = StepShape::new(GridShape::new(32, n / 32), 3);
+        let mut session = native.session(shape, SessionOpts::default()).unwrap();
+        let mut step = SssStep::new_for(shape);
+
+        shufflesort::trace::set_enabled(true);
+        let root = shufflesort::trace::Span::root("bench");
+        let trace_id = root.ctx().map(|c| c.trace_id).unwrap_or(0);
+        {
+            let _cur = root.make_current();
+            let mut clock = shufflesort::trace::StepClock::start(shufflesort::trace::current());
+            for _ in 0..reps {
+                clock.time(shufflesort::trace::FAM_SSS, || {
+                    session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
+                });
+            }
+            clock.emit();
+        }
+        root.end();
+        let finished = shufflesort::trace::finish(trace_id);
+        shufflesort::trace::set_enabled(false);
+        if let Some(t) = finished {
+            let fam = shufflesort::trace::FAMILY_NAMES[shufflesort::trace::FAM_SSS];
+            if let Some(span) = t.spans.iter().find(|s| s.name == fam) {
+                let steps = span
+                    .attrs
+                    .iter()
+                    .flatten()
+                    .find_map(|(k, v)| match v {
+                        shufflesort::trace::AttrValue::U64(c) if *k == "steps" => Some(*c),
+                        _ => None,
+                    })
+                    .unwrap_or(1)
+                    .max(1);
+                let total_s = span.dur_us as f64 / 1e6;
+                let s = Sample {
+                    name: format!("step_family_seconds_total {fam} n={n} d=3 (per step)"),
+                    reps: steps as usize,
+                    mean_s: total_s / steps as f64,
+                    std_s: 0.0,
+                    min_s: total_s / steps as f64,
+                };
+                println!("{}", s.line());
+                samples.push(s);
+            }
+        }
     }
 
     // ---- pure-Rust substrate costs on the same scale ---------------------

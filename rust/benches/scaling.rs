@@ -11,7 +11,9 @@
 
 mod common;
 
-use shufflesort::backend::{GsStep, NativeBackend, SssStep, StepBackend, StepSession, StepShape};
+use shufflesort::backend::{
+    GsStep, NativeBackend, SessionOpts, SssStep, StepBackend, StepSession, StepShape,
+};
 use shufflesort::bench::{banner, bench, quick_mode, write_json_report, Sample, Table};
 use shufflesort::data::random_colors;
 use shufflesort::grid::GridShape;
@@ -47,7 +49,7 @@ fn main() {
 
         // ShuffleSoftSort step: steady-state session path vs fresh session
         // per step (≈ the legacy scoped-thread per-step overhead).
-        let mut session = native.session(shape, None).unwrap();
+        let mut session = native.session(shape, SessionOpts::default()).unwrap();
         let mut step = SssStep::new_for(shape);
         let sess = bench(&format!("native sss n{n} (session reuse)"), 1, r, || {
             session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
@@ -119,7 +121,7 @@ fn main() {
             let shape = StepShape::new(GridShape::new(side, n / side), 3);
             let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
             let inv: Vec<i32> = (0..n as i32).collect();
-            let mut session = native.session(shape, None).unwrap();
+            let mut session = native.session(shape, SessionOpts::default()).unwrap();
             let mut step = SssStep::new_for(shape);
             let s = bench(&format!("native sss n{n} full (per step)"), 1, reps.min(3), || {
                 session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
@@ -142,7 +144,7 @@ fn main() {
         let tshape = StepShape::new(GridShape::new(rows, w_grid), 3);
         let tw: Vec<f32> = (0..nb).map(|i| (nb - i) as f32).collect();
         let tinv: Vec<i32> = (0..nb as i32).collect();
-        let mut tsession = native.session(tshape, None).unwrap();
+        let mut tsession = native.session(tshape, SessionOpts::default()).unwrap();
         let mut tstep = SssStep::new_for(tshape);
         let ts = bench(&format!("native sss n{n} tiled{nb} (per tile step)"), 1, reps, || {
             tsession.sss_step(&tw, &ds.rows[..nb * 3], &tinv, 0.3, 0.5, &mut tstep).unwrap();
@@ -168,7 +170,7 @@ fn main() {
             let shape = StepShape::new(GridShape::new(side, n / side), 3);
             let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
             let inv: Vec<i32> = (0..n as i32).collect();
-            let mut session = match backend.session(shape, None) {
+            let mut session = match backend.session(shape, SessionOpts::default()) {
                 Ok(s) => s,
                 Err(e) => {
                     println!("pjrt n{n}: {e:#}");

@@ -33,7 +33,9 @@ use anyhow::{anyhow, ensure, Result};
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
-use crate::backend::{BackendChoice, NativeBackend, StepBackend, StepSession, StepShape};
+use crate::backend::{
+    BackendChoice, NativeBackend, SessionOpts, SimdChoice, StepBackend, StepSession, StepShape,
+};
 #[cfg(feature = "pjrt")]
 use crate::backend::PjrtBackend;
 use crate::coordinator::SortOutcome;
@@ -123,6 +125,10 @@ pub struct Engine {
     /// per-call pairs win); for `sort_batch` it is the *total* row-thread
     /// budget divided across workers.
     threads: Option<usize>,
+    /// Default step-kernel level for learned methods (`--simd`). Injected
+    /// as a leading `simd=` override for sorts (per-call pairs win) and
+    /// passed to memoized step sessions directly.
+    simd: SimdChoice,
     workers: usize,
 }
 
@@ -141,9 +147,15 @@ impl Engine {
             artifacts_dir: dir.as_ref().to_path_buf(),
             backend: None,
             threads: None,
+            simd: None,
             workers: None,
             registry: None,
         }
+    }
+
+    /// The session knobs memoized step sessions are opened with.
+    fn session_opts(&self) -> SessionOpts {
+        SessionOpts { threads: self.threads, simd: self.simd }
     }
 
     pub fn registry(&self) -> &MethodRegistry {
@@ -219,11 +231,11 @@ impl Engine {
             let shape = StepShape { n, d, h, w: n / h };
             let session = match self.resolve_choice(self.choice)? {
                 Resolved::Native => CachedSession::Native(
-                    self.native_backend().session_send(shape, self.threads)?,
+                    self.native_backend().session_send(shape, self.session_opts())?,
                 ),
                 #[cfg(feature = "pjrt")]
                 Resolved::Pjrt => CachedSession::Pjrt(
-                    self.pjrt_backend()?.session(shape, self.threads)?,
+                    self.pjrt_backend()?.session(shape, self.session_opts())?,
                 ),
             };
             self.sessions.borrow_mut().insert(key, session);
@@ -251,6 +263,26 @@ impl Engine {
             Some(t) if kind == MethodKind::Learned => {
                 let mut out = Vec::with_capacity(rest.len() + 1);
                 out.push(("threads".to_string(), t.to_string()));
+                out.extend(rest);
+                out
+            }
+            _ => rest,
+        }
+    }
+
+    /// Prepend the engine-level `--simd` default for learned methods
+    /// (explicit `simd=` override pairs still win: last-wins). Unlike the
+    /// threads default this applies to batches too — the SIMD level is a
+    /// per-session knob, not a shared budget.
+    fn with_default_simd(
+        &self,
+        kind: MethodKind,
+        rest: Vec<(String, String)>,
+    ) -> Vec<(String, String)> {
+        match self.simd {
+            choice if choice != SimdChoice::Auto && kind == MethodKind::Learned => {
+                let mut out = Vec::with_capacity(rest.len() + 1);
+                out.push(("simd".to_string(), choice.name().to_string()));
                 out.extend(rest);
                 out
             }
@@ -320,6 +352,7 @@ impl Engine {
         let spec = self.registry.resolve_or_err(method)?;
         let (choice, rest) = split_backend_override(self.choice, overrides)?;
         let rest = self.with_default_threads(spec.kind, rest);
+        let rest = self.with_default_simd(spec.kind, rest);
         let backend: Option<&dyn StepBackend> = match spec.kind {
             MethodKind::Learned => Some(self.backend_for(choice)?),
             MethodKind::Heuristic => None,
@@ -392,6 +425,7 @@ impl Engine {
             Ok(split) => split,
             Err(e) => return all_err(e),
         };
+        let rest = self.with_default_simd(spec.kind, rest);
         // Shared native backend for this batch, with row-parallelism capped
         // so workers × row-threads ≈ machine parallelism instead of
         // workers² (results are unaffected: the chunk reduction is
@@ -485,6 +519,7 @@ pub struct EngineBuilder {
     artifacts_dir: PathBuf,
     backend: Option<BackendChoice>,
     threads: Option<usize>,
+    simd: Option<SimdChoice>,
     workers: Option<usize>,
     registry: Option<MethodRegistry>,
 }
@@ -514,6 +549,14 @@ impl EngineBuilder {
         self
     }
 
+    /// Default step-kernel level for learned methods (the `--simd` CLI
+    /// flag; `Auto` = runtime detection). Per-call `simd=` override pairs
+    /// still win.
+    pub fn simd(mut self, simd: SimdChoice) -> Self {
+        self.simd = Some(simd);
+        self
+    }
+
     /// Cap the number of `sort_batch` worker threads (default: the
     /// machine's available parallelism).
     pub fn workers(mut self, workers: usize) -> Self {
@@ -536,6 +579,7 @@ impl EngineBuilder {
             step_cache: RefCell::new(HashMap::new()),
             sessions: RefCell::new(HashMap::new()),
             threads: self.threads,
+            simd: self.simd.unwrap_or_default(),
             workers,
         }
     }

@@ -30,8 +30,9 @@ pub use engine::{Engine, EngineBuilder};
 pub use registry::{MethodCtor, MethodKind, MethodRegistry, MethodSpec};
 pub use sorter::{HeuristicSorter, LearnedSorter, Sorter};
 
-// Backend selection is part of the public sorting API surface.
-pub use crate::backend::BackendChoice;
+// Backend selection is part of the public sorting API surface, as is the
+// step-kernel level knob (`--simd` / `simd=`).
+pub use crate::backend::{BackendChoice, SimdChoice};
 
 /// Convenience: turn `&[("k", "v"), ...]` literals into the owned override
 /// pairs the registry and config builders consume.

@@ -56,14 +56,38 @@ pub mod native;
 pub(crate) mod pool;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod simd;
 
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
+pub use simd::{SimdChoice, SimdLevel};
 
 use anyhow::{anyhow, Result};
 
 use crate::grid::GridShape;
+
+/// Per-session construction knobs, passed to [`StepBackend::session`].
+///
+/// `Default` means "the backend's configured defaults": pool width from
+/// the backend, SIMD level from runtime feature detection.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SessionOpts {
+    /// Row-parallel worker pool width for the native session (`None` =
+    /// the backend's configured default; ignored by pjrt). Results never
+    /// depend on the pool size.
+    pub threads: Option<usize>,
+    /// Which step-kernel implementation to use (`Auto` = best detected at
+    /// runtime; `Off` = the scalar bit-exactness oracle; ignored by pjrt).
+    pub simd: SimdChoice,
+}
+
+impl SessionOpts {
+    /// Shorthand for a default-SIMD session with an explicit pool width.
+    pub fn threads(t: usize) -> Self {
+        SessionOpts { threads: Some(t), ..Default::default() }
+    }
+}
 
 /// Static problem shape of one step: N items of dimension d on an h×w grid.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -226,10 +250,11 @@ pub trait StepBackend {
     /// Open a step session for `shape`: all per-shape scratch is allocated
     /// up front (per step family, on first use) and reused across steps.
     ///
-    /// `threads` sizes the native session's row-parallel worker pool
-    /// (`None` = the backend's configured default; ignored by pjrt).
-    /// Results never depend on the pool size.
-    fn session(&self, shape: StepShape, threads: Option<usize>) -> Result<Box<dyn StepSession>>;
+    /// `opts` carries the per-session knobs — pool width and SIMD level;
+    /// `SessionOpts::default()` means the backend's configured defaults.
+    /// Results never depend on either knob beyond the documented
+    /// scalar-vs-SIMD tolerance (and never on the pool size at all).
+    fn session(&self, shape: StepShape, opts: SessionOpts) -> Result<Box<dyn StepSession>>;
 
     /// Like [`StepBackend::session`], but the returned session may move
     /// across threads — what executors that dispatch independent
@@ -240,13 +265,13 @@ pub trait StepBackend {
     fn session_sendable(
         &self,
         shape: StepShape,
-        threads: Option<usize>,
+        opts: SessionOpts,
     ) -> Result<Option<Box<dyn StepSession + Send>>> {
-        let _ = (shape, threads);
+        let _ = (shape, opts);
         Ok(None)
     }
 
-    /// What `threads: None` means to [`StepBackend::session`]: the
+    /// What `opts.threads: None` means to [`StepBackend::session`]: the
     /// backend's configured pool width. Executors that spread their own
     /// parallelism (tile dispatch) budget against this, so an engine that
     /// capped the backend for batching caps them too.
@@ -284,7 +309,7 @@ pub trait StepBackend {
         tau: f32,
         norm: f32,
     ) -> Result<SssStep> {
-        let mut session = self.session(shape, None)?;
+        let mut session = self.session(shape, SessionOpts::default())?;
         let mut out = SssStep::new_for(shape);
         session.sss_step(w, x_shuf, inv_idx, tau, norm, &mut out)?;
         Ok(out)
@@ -302,7 +327,7 @@ pub trait StepBackend {
         tau: f32,
         norm: f32,
     ) -> Result<GsStep> {
-        let mut session = self.session(shape, None)?;
+        let mut session = self.session(shape, SessionOpts::default())?;
         let mut out = GsStep::new_for(shape.n);
         session.gs_step(logits, x, gumbel, tau, norm, &mut out)?;
         Ok(out)
@@ -313,7 +338,7 @@ pub trait StepBackend {
     fn gs_probe(&self, n: usize, logits: &[f32], tau: f32) -> Result<Vec<f32>> {
         // A probe needs no data/grid buffers: a degenerate 1×n shape keeps
         // the session's lazy per-family workspaces untouched.
-        let mut session = self.session(StepShape { n, d: 0, h: 1, w: n }, None)?;
+        let mut session = self.session(StepShape { n, d: 0, h: 1, w: n }, SessionOpts::default())?;
         let mut out = Vec::new();
         session.gs_probe(logits, tau, &mut out)?;
         Ok(out)
@@ -332,7 +357,7 @@ pub trait StepBackend {
         tau: f32,
         norm: f32,
     ) -> Result<KissStep> {
-        let mut session = self.session(shape, None)?;
+        let mut session = self.session(shape, SessionOpts::default())?;
         let mut out = KissStep::new_for(shape.n, m);
         session.kiss_step(m, v, wf, x, tau, norm, &mut out)?;
         Ok(out)

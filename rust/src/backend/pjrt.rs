@@ -24,7 +24,7 @@ use anyhow::{Context, Result};
 
 use crate::runtime::{Arg, Executable, Runtime};
 
-use super::{GsStep, KissStep, SssStep, StepBackend, StepSession, StepShape};
+use super::{GsStep, KissStep, SessionOpts, SssStep, StepBackend, StepSession, StepShape};
 
 /// Backend executing AOT artifacts via the PJRT runtime.
 pub struct PjrtBackend {
@@ -207,7 +207,7 @@ impl StepBackend for PjrtBackend {
         "pjrt"
     }
 
-    fn session(&self, shape: StepShape, _threads: Option<usize>) -> Result<Box<dyn StepSession>> {
+    fn session(&self, shape: StepShape, _opts: SessionOpts) -> Result<Box<dyn StepSession>> {
         Ok(Box::new(PjrtSession {
             rt: Rc::clone(&self.rt),
             shape,

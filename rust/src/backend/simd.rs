@@ -1,0 +1,1582 @@
+//! Explicit SIMD kernels for the native backend's hottest inner loops.
+//!
+//! Every kernel takes a [`SimdLevel`] and dispatches between the scalar
+//! oracle (a verbatim copy of the pre-SIMD loop, preserving every f32
+//! rounding) and hand-written `core::arch` x86-64 paths. The level is
+//! resolved once per session from a [`SimdChoice`] (the `simd=` config
+//! key / `--simd` CLI flag) capped at what the CPU reports at runtime, so
+//! a binary built on an AVX2 machine still runs — on the scalar or SSE2
+//! path — anywhere.
+//!
+//! Exactness contract (asserted by the tests below and by the step-level
+//! scalar-vs-SIMD sweep in `backend/native.rs`):
+//!
+//! * **Bit-exact at every level:** `logits_row`, `max_scan`/`max_argmax`
+//!   (same first-maximum tie resolution as the scalar `>` scan), `scale`,
+//!   `scale_colsum`, the d = 3 `fold_y_d3`/`gbuf_dot_d3` element math,
+//!   `fold_y`, `scatter_pair`, `axpy_mean`, and the per-element `dl_pass`
+//!   column gradient — each output element's dependency chain is the same
+//!   op sequence as the scalar loop.
+//! * **Tolerance (documented ~1e-6 relative):** anything flowing through
+//!   the vector `exp` (a Cephes polynomial, not libm) or a lane-reordered
+//!   horizontal reduction — softmax denominators, dot products, the
+//!   log-sum-exp normalizations, and the f64 loss accumulators.
+//!
+//! NaN inputs are outside the kernel contract (the session layer
+//! validates scalars; weights/data are caller-supplied finite floats).
+//! No FMA is used anywhere: fused contractions would change roundings
+//! across otherwise-identical CPUs.
+
+use anyhow::{bail, Result};
+
+/// User-facing SIMD selection — what the config/CLI asks for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimdChoice {
+    /// Highest level the CPU supports (the default).
+    #[default]
+    Auto,
+    /// Force the scalar oracle (`simd=off`).
+    Off,
+    /// Cap at SSE2 (always available on x86-64).
+    Sse2,
+    /// Cap at AVX2.
+    Avx2,
+}
+
+impl SimdChoice {
+    /// Parse a config/CLI value. `scalar` is accepted as an alias of
+    /// `off`.
+    pub fn parse(s: &str) -> Result<SimdChoice> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(SimdChoice::Auto),
+            "off" | "scalar" => Ok(SimdChoice::Off),
+            "sse2" => Ok(SimdChoice::Sse2),
+            "avx2" => Ok(SimdChoice::Avx2),
+            other => bail!("unknown simd level '{other}' (expected auto|off|sse2|avx2)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdChoice::Auto => "auto",
+            SimdChoice::Off => "off",
+            SimdChoice::Sse2 => "sse2",
+            SimdChoice::Avx2 => "avx2",
+        }
+    }
+
+    /// Resolve the request against runtime CPU detection. Requests above
+    /// what the CPU offers degrade silently (never an error): `auto`
+    /// semantics for portability, and CI can pin `avx2` in a matrix
+    /// without gating on runner hardware.
+    pub fn resolve(self) -> SimdLevel {
+        let top = detected();
+        match self {
+            SimdChoice::Auto => top,
+            SimdChoice::Off => SimdLevel::Scalar,
+            SimdChoice::Sse2 => top.min(SimdLevel::Sse2),
+            SimdChoice::Avx2 => top.min(SimdLevel::Avx2),
+        }
+    }
+}
+
+impl std::fmt::Display for SimdChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A resolved, runtime-supported instruction level. Ordered so `min`
+/// against the detected level caps a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    Scalar,
+    Sse2,
+    Avx2,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Highest level this CPU supports. `is_x86_64_feature_detected!` caches
+/// internally, so calling per session is free.
+#[cfg(target_arch = "x86_64")]
+pub fn detected() -> SimdLevel {
+    if std::arch::is_x86_64_feature_detected!("avx2") {
+        SimdLevel::Avx2
+    } else {
+        // SSE2 is part of the x86-64 baseline.
+        SimdLevel::Sse2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn detected() -> SimdLevel {
+    SimdLevel::Scalar
+}
+
+// --------------------------------------------------------------------------
+// Forward row kernels (softmax row of the SoftSort matrix).
+// --------------------------------------------------------------------------
+
+/// `row[j] = -|wsi - w[j]| / tau` — bit-exact at every level.
+pub fn logits_row(level: SimdLevel, row: &mut [f32], w: &[f32], wsi: f32, tau: f32) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::logits_row_sse2(row, w, wsi, tau) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::logits_row_avx2(row, w, wsi, tau) },
+        _ => logits_row_scalar(row, w, wsi, tau),
+    }
+}
+
+fn logits_row_scalar(row: &mut [f32], w: &[f32], wsi: f32, tau: f32) {
+    for (rj, &wj) in row.iter_mut().zip(w) {
+        *rj = -(wsi - wj).abs() / tau;
+    }
+}
+
+/// Maximum of `row` — bit-exact (f32 max is order-independent for
+/// non-NaN inputs).
+pub fn max_scan(level: SimdLevel, row: &[f32]) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::max_scan_sse2(row) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::max_scan_avx2(row) },
+        _ => max_scan_scalar(row),
+    }
+}
+
+fn max_scan_scalar(row: &[f32]) -> f32 {
+    let mut mx = f32::NEG_INFINITY;
+    for &pj in row.iter() {
+        if pj > mx {
+            mx = pj;
+        }
+    }
+    mx
+}
+
+/// Maximum and the index of its **first** occurrence — the same tie
+/// resolution as the scalar `>` scan, so `sort_idx` is exactly equal on
+/// every level.
+pub fn max_argmax(level: SimdLevel, row: &[f32]) -> (f32, usize) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => {
+            let mx = unsafe { x86::max_scan_sse2(row) };
+            (mx, unsafe { x86::find_first_eq_sse2(row, mx) })
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            let mx = unsafe { x86::max_scan_avx2(row) };
+            (mx, unsafe { x86::find_first_eq_avx2(row, mx) })
+        }
+        _ => max_argmax_scalar(row),
+    }
+}
+
+fn max_argmax_scalar(row: &[f32]) -> (f32, usize) {
+    let mut mx = f32::NEG_INFINITY;
+    let mut arg = 0usize;
+    for (j, &rj) in row.iter().enumerate() {
+        if rj > mx {
+            mx = rj;
+            arg = j;
+        }
+    }
+    (mx, arg)
+}
+
+/// `row[j] = exp(row[j] - mx)`, returns the sum. The vector path uses a
+/// Cephes polynomial `exp` and lane-reordered summation — tolerance, not
+/// bit-exact (`exp(0) = 1` exactly on both paths, so the row maximum
+/// stays exact).
+pub fn exp_pass(level: SimdLevel, row: &mut [f32], mx: f32) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::exp_pass_sse2(row, mx) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::exp_pass_avx2(row, mx) },
+        _ => exp_pass_scalar(row, mx),
+    }
+}
+
+fn exp_pass_scalar(row: &mut [f32], mx: f32) -> f32 {
+    let mut denom = 0.0f32;
+    for rj in row.iter_mut() {
+        *rj = (*rj - mx).exp();
+        denom += *rj;
+    }
+    denom
+}
+
+/// `row[j] *= inv` — bit-exact.
+pub fn scale(level: SimdLevel, row: &mut [f32], inv: f32) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::scale_sse2(row, inv) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::scale_avx2(row, inv) },
+        _ => scale_scalar(row, inv),
+    }
+}
+
+fn scale_scalar(row: &mut [f32], inv: f32) {
+    for rj in row.iter_mut() {
+        *rj *= inv;
+    }
+}
+
+/// `row[j] *= inv; cs[j] += row[j]` — bit-exact (element-wise only).
+pub fn scale_colsum(level: SimdLevel, row: &mut [f32], cs: &mut [f32], inv: f32) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::scale_colsum_sse2(row, cs, inv) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::scale_colsum_avx2(row, cs, inv) },
+        _ => scale_colsum_scalar(row, cs, inv),
+    }
+}
+
+fn scale_colsum_scalar(row: &mut [f32], cs: &mut [f32], inv: f32) {
+    for (rj, cj) in row.iter_mut().zip(cs.iter_mut()) {
+        *rj *= inv;
+        *cj += *rj;
+    }
+}
+
+/// d = 3 output fold: `y[t] = Σ_j row[j]·x[3j+t]`. The vector path keeps
+/// each component in its own lane accumulating in j order — bit-exact.
+/// (The last j is handled scalar so the 4-float load never reads past
+/// `x`.)
+pub fn fold_y_d3(level: SimdLevel, row: &[f32], x: &[f32]) -> [f32; 3] {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 | SimdLevel::Avx2 => unsafe { x86::fold_y_d3_sse2(row, x) },
+        _ => fold_y_d3_scalar(row, x),
+    }
+}
+
+fn fold_y_d3_scalar(row: &[f32], x: &[f32]) -> [f32; 3] {
+    let (mut y0, mut y1, mut y2) = (0.0f32, 0.0f32, 0.0f32);
+    for (j, &p) in row.iter().enumerate() {
+        let b = j * 3;
+        y0 += p * x[b];
+        y1 += p * x[b + 1];
+        y2 += p * x[b + 2];
+    }
+    [y0, y1, y2]
+}
+
+/// Generic output fold: `yi[t] += Σ_j row[j]·x[jd+t]`, vectorized over t
+/// when d ≥ 8 (each `yi[t]` still accumulates in j order — bit-exact).
+pub fn fold_y(level: SimdLevel, row: &[f32], x: &[f32], yi: &mut [f32], d: usize) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if d >= 8 => unsafe { x86::fold_y_avx2(row, x, yi, d) },
+        _ => fold_y_scalar(row, x, yi, d),
+    }
+}
+
+fn fold_y_scalar(row: &[f32], x: &[f32], yi: &mut [f32], d: usize) {
+    for (j, &p) in row.iter().enumerate() {
+        let xj = &x[j * d..(j + 1) * d];
+        for (yc, &xc) in yi.iter_mut().zip(xj) {
+            *yc += p * xc;
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Backward row kernels (dL/dP through the softmax row).
+// --------------------------------------------------------------------------
+
+/// d = 3 cotangent row: `gbuf[j] = ((ct_cs[j] + c0·x[3j]) + c1·x[3j+1])
+/// + c2·x[3j+2]` (bit-exact element math via AVX2 gathers), returns
+/// `Σ_j gbuf[j]·prob[j]` (lane-reordered — tolerance). SSE2 falls back
+/// to the scalar oracle (no gather instruction).
+pub fn gbuf_dot_d3(
+    level: SimdLevel,
+    ct_cs: &[f32],
+    x: &[f32],
+    cti: [f32; 3],
+    prob: &[f32],
+    gbuf: &mut [f32],
+) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::gbuf_dot_d3_avx2(ct_cs, x, cti, prob, gbuf) },
+        _ => gbuf_dot_d3_scalar(ct_cs, x, cti, prob, gbuf),
+    }
+}
+
+fn gbuf_dot_d3_scalar(
+    ct_cs: &[f32],
+    x: &[f32],
+    cti: [f32; 3],
+    prob: &[f32],
+    gbuf: &mut [f32],
+) -> f32 {
+    let (c0, c1, c2) = (cti[0], cti[1], cti[2]);
+    let mut dot = 0.0f32;
+    for (j, gj) in gbuf.iter_mut().enumerate() {
+        let b = j * 3;
+        let g = ((ct_cs[j] + c0 * x[b]) + c1 * x[b + 1]) + c2 * x[b + 2];
+        *gj = g;
+        dot += g * prob[j];
+    }
+    dot
+}
+
+/// Generic cotangent row, vectorized over t when d ≥ 8 (the per-j dot is
+/// a lane-reordered reduction — tolerance); returns `Σ_j gbuf[j]·prob[j]`
+/// accumulated in j order.
+pub fn gbuf_dot(
+    level: SimdLevel,
+    ct_cs: &[f32],
+    x: &[f32],
+    cti: &[f32],
+    d: usize,
+    prob: &[f32],
+    gbuf: &mut [f32],
+) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if d >= 8 => unsafe { x86::gbuf_dot_avx2(ct_cs, x, cti, d, prob, gbuf) },
+        _ => gbuf_dot_scalar(ct_cs, x, cti, d, prob, gbuf),
+    }
+}
+
+fn gbuf_dot_scalar(
+    ct_cs: &[f32],
+    x: &[f32],
+    cti: &[f32],
+    d: usize,
+    prob: &[f32],
+    gbuf: &mut [f32],
+) -> f32 {
+    let mut dot = 0.0f32;
+    for (j, gj) in gbuf.iter_mut().enumerate() {
+        let mut g = ct_cs[j];
+        let xj = &x[j * d..(j + 1) * d];
+        for (ct, &xc) in cti.iter().zip(xj) {
+            g += ct * xc;
+        }
+        *gj = g;
+        dot += g * prob[j];
+    }
+    dot
+}
+
+/// Softmax backward + |·| kernel: per j, `dl = prob[j]·(gbuf[j] − dot)`,
+/// `s = sgn(wsi − w[j])`, `gw[j] += dl·s/τ` (bit-exact element math);
+/// returns `gws_i = −Σ_j dl·s/τ` (lane-reordered — tolerance).
+#[allow(clippy::too_many_arguments)]
+pub fn dl_pass(
+    level: SimdLevel,
+    prob: &[f32],
+    gbuf: &[f32],
+    dot: f32,
+    wsi: f32,
+    w: &[f32],
+    tau: f32,
+    gw: &mut [f32],
+) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Sse2 => unsafe { x86::dl_pass_sse2(prob, gbuf, dot, wsi, w, tau, gw) },
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::dl_pass_avx2(prob, gbuf, dot, wsi, w, tau, gw) },
+        _ => dl_pass_scalar(prob, gbuf, dot, wsi, w, tau, gw),
+    }
+}
+
+#[inline]
+fn sgn(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+fn dl_pass_scalar(
+    prob: &[f32],
+    gbuf: &[f32],
+    dot: f32,
+    wsi: f32,
+    w: &[f32],
+    tau: f32,
+    gw: &mut [f32],
+) -> f32 {
+    let mut gws_i = 0.0f32;
+    for (j, gwj) in gw.iter_mut().enumerate() {
+        let dl = prob[j] * (gbuf[j] - dot);
+        let s = sgn(wsi - w[j]);
+        gws_i -= dl * s / tau;
+        *gwj += dl * s / tau;
+    }
+    gws_i
+}
+
+// --------------------------------------------------------------------------
+// Eq. 2-4 loss reduction kernels.
+// --------------------------------------------------------------------------
+
+/// Pair displacement + squared norm: `diff[t] = a[t] − b[t]` (bit-exact),
+/// returns `Σ diff²` (lane-reordered when d ≥ 8 — tolerance; d < 8, e.g.
+/// the d = 3 hot case, stays on the scalar oracle).
+pub fn diff_normsq(level: SimdLevel, a: &[f32], b: &[f32], diff: &mut [f32]) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if diff.len() >= 8 => unsafe { x86::diff_normsq_avx2(a, b, diff) },
+        _ => diff_normsq_scalar(a, b, diff),
+    }
+}
+
+fn diff_normsq_scalar(a: &[f32], b: &[f32], diff: &mut [f32]) -> f32 {
+    let mut s = 0.0f32;
+    for ((dt, &av), &bv) in diff.iter_mut().zip(a).zip(b) {
+        let dd = av - bv;
+        *dt = dd;
+        s += dd * dd;
+    }
+    s
+}
+
+/// Scatter a pair gradient: `d1[t] += diff[t]·g; d2[t] -= diff[t]·g` —
+/// bit-exact.
+pub fn scatter_pair(level: SimdLevel, d1: &mut [f32], d2: &mut [f32], diff: &[f32], g: f32) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 if diff.len() >= 8 => unsafe { x86::scatter_pair_avx2(d1, d2, diff, g) },
+        _ => scatter_pair_scalar(d1, d2, diff, g),
+    }
+}
+
+fn scatter_pair_scalar(d1: &mut [f32], d2: &mut [f32], diff: &[f32], g: f32) {
+    for ((&dt, e1), e2) in diff.iter().zip(d1.iter_mut()).zip(d2.iter_mut()) {
+        *e1 += dt * g;
+        *e2 -= dt * g;
+    }
+}
+
+/// Eq. 3 column-sum deviation: `ct_cs[j] = λ2·dev/n` (bit-exact), returns
+/// `Σ dev²` accumulated in f64 (lane-reordered — tolerance).
+pub fn colsum_loss(level: SimdLevel, cs: &[f32], lambda2: f32, ct_cs: &mut [f32]) -> f64 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::colsum_loss_avx2(cs, lambda2, ct_cs) },
+        _ => colsum_loss_scalar(cs, lambda2, ct_cs),
+    }
+}
+
+fn colsum_loss_scalar(cs: &[f32], lambda2: f32, ct_cs: &mut [f32]) -> f64 {
+    let n = cs.len();
+    let mut acc = 0.0f64;
+    for (ct, &c) in ct_cs.iter_mut().zip(cs) {
+        let dev = c - 1.0;
+        acc += (dev * dev) as f64;
+        *ct = lambda2 * dev / n as f32;
+    }
+    acc
+}
+
+/// `Σ y[k]` widened to f64 per element (lane-reordered — tolerance).
+pub fn sum_f64(level: SimdLevel, y: &[f32]) -> f64 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::sum_f64_avx2(y) },
+        _ => sum_f64_scalar(y),
+    }
+}
+
+fn sum_f64_scalar(y: &[f32]) -> f64 {
+    y.iter().map(|&v| v as f64).sum::<f64>()
+}
+
+/// Eq. 4 cotangent: `ct[k] += a·(y[k] − mu)` — bit-exact.
+pub fn axpy_mean(level: SimdLevel, ct_y: &mut [f32], y: &[f32], a: f32, mu: f32) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::axpy_mean_avx2(ct_y, y, a, mu) },
+        _ => axpy_mean_scalar(ct_y, y, a, mu),
+    }
+}
+
+fn axpy_mean_scalar(ct_y: &mut [f32], y: &[f32], a: f32, mu: f32) {
+    for (ct, &v) in ct_y.iter_mut().zip(y) {
+        *ct += a * (v - mu);
+    }
+}
+
+// --------------------------------------------------------------------------
+// Sinkhorn log-space normalization kernels.
+// --------------------------------------------------------------------------
+
+/// Subtract the log-sum-exp from every row of the n×n matrix `la`.
+pub fn row_lse_normalize(level: SimdLevel, la: &mut [f32], n: usize) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => {
+            for i in 0..n {
+                unsafe { x86::row_lse_one_avx2(&mut la[i * n..(i + 1) * n]) };
+            }
+        }
+        _ => {
+            for i in 0..n {
+                row_lse_one_scalar(&mut la[i * n..(i + 1) * n]);
+            }
+        }
+    }
+}
+
+fn row_lse_one_scalar(row: &mut [f32]) {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut s = 0.0f32;
+    for &v in row.iter() {
+        s += (v - mx).exp();
+    }
+    let lse = mx + s.ln();
+    for v in row.iter_mut() {
+        *v -= lse;
+    }
+}
+
+/// Subtract the log-sum-exp from every column of the n×n matrix `la`.
+/// The vector path walks 8 columns at a time down the rows, keeping each
+/// column's accumulation in row order.
+pub fn col_lse_normalize(level: SimdLevel, la: &mut [f32], n: usize) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::col_lse_normalize_avx2(la, n) },
+        _ => {
+            for j in 0..n {
+                col_lse_one_scalar(la, n, j);
+            }
+        }
+    }
+}
+
+fn col_lse_one_scalar(la: &mut [f32], n: usize, j: usize) {
+    let mut mx = f32::NEG_INFINITY;
+    for i in 0..n {
+        mx = mx.max(la[i * n + j]);
+    }
+    let mut s = 0.0f32;
+    for i in 0..n {
+        s += (la[i * n + j] - mx).exp();
+    }
+    let lse = mx + s.ln();
+    for i in 0..n {
+        la[i * n + j] -= lse;
+    }
+}
+
+/// `buf[k] = exp(buf[k])` (Cephes on the vector path — tolerance).
+pub fn exp_in_place(level: SimdLevel, buf: &mut [f32]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::exp_in_place_avx2(buf) },
+        _ => {
+            for v in buf.iter_mut() {
+                *v = v.exp();
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// x86-64 implementations.
+// --------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::excessive_precision)]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    // Cephes single-precision exp (the sse_mathfun/avx_mathfun
+    // constants): range-reduce by log2(e), Cody-Waite subtract the two
+    // halves of ln(2), degree-5 polynomial, scale by 2^n through the
+    // exponent bits. Max observed error ~2 ulp; exp(0) = 1 exactly.
+    const EXP_HI: f32 = 88.3762626647949;
+    const EXP_LO: f32 = -88.3762626647949;
+    const LN2_HI: f32 = 0.693359375;
+    const LN2_LO: f32 = -2.12194440e-4;
+    const P0: f32 = 1.9875691500e-4;
+    const P1: f32 = 1.3981999507e-3;
+    const P2: f32 = 8.3334519073e-3;
+    const P3: f32 = 4.1665795894e-2;
+    const P4: f32 = 1.6666665459e-1;
+    const P5: f32 = 5.0000001201e-1;
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn exp128(v: __m128) -> __m128 {
+        let x = _mm_min_ps(_mm_set1_ps(EXP_HI), _mm_max_ps(_mm_set1_ps(EXP_LO), v));
+        let log2e = _mm_set1_ps(std::f32::consts::LOG2_E);
+        let fx = _mm_add_ps(_mm_mul_ps(x, log2e), _mm_set1_ps(0.5));
+        // floor(fx) without SSE4.1: truncate toward zero, then subtract 1
+        // where truncation rounded up (negative non-integers).
+        let t = _mm_cvtepi32_ps(_mm_cvttps_epi32(fx));
+        let fl = _mm_sub_ps(t, _mm_and_ps(_mm_cmpgt_ps(t, fx), _mm_set1_ps(1.0)));
+        let x = _mm_sub_ps(x, _mm_mul_ps(fl, _mm_set1_ps(LN2_HI)));
+        let x = _mm_sub_ps(x, _mm_mul_ps(fl, _mm_set1_ps(LN2_LO)));
+        let mut y = _mm_set1_ps(P0);
+        y = _mm_add_ps(_mm_mul_ps(y, x), _mm_set1_ps(P1));
+        y = _mm_add_ps(_mm_mul_ps(y, x), _mm_set1_ps(P2));
+        y = _mm_add_ps(_mm_mul_ps(y, x), _mm_set1_ps(P3));
+        y = _mm_add_ps(_mm_mul_ps(y, x), _mm_set1_ps(P4));
+        y = _mm_add_ps(_mm_mul_ps(y, x), _mm_set1_ps(P5));
+        let x2 = _mm_mul_ps(x, x);
+        let y = _mm_add_ps(_mm_add_ps(_mm_mul_ps(y, x2), x), _mm_set1_ps(1.0));
+        let e = _mm_add_epi32(_mm_cvtps_epi32(fl), _mm_set1_epi32(127));
+        _mm_mul_ps(y, _mm_castsi128_ps(_mm_slli_epi32::<23>(e)))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn exp256(v: __m256) -> __m256 {
+        let x = _mm256_min_ps(_mm256_set1_ps(EXP_HI), _mm256_max_ps(_mm256_set1_ps(EXP_LO), v));
+        let log2e = _mm256_set1_ps(std::f32::consts::LOG2_E);
+        let fx = _mm256_add_ps(_mm256_mul_ps(x, log2e), _mm256_set1_ps(0.5));
+        let fl = _mm256_floor_ps(fx);
+        let x = _mm256_sub_ps(x, _mm256_mul_ps(fl, _mm256_set1_ps(LN2_HI)));
+        let x = _mm256_sub_ps(x, _mm256_mul_ps(fl, _mm256_set1_ps(LN2_LO)));
+        let mut y = _mm256_set1_ps(P0);
+        y = _mm256_add_ps(_mm256_mul_ps(y, x), _mm256_set1_ps(P1));
+        y = _mm256_add_ps(_mm256_mul_ps(y, x), _mm256_set1_ps(P2));
+        y = _mm256_add_ps(_mm256_mul_ps(y, x), _mm256_set1_ps(P3));
+        y = _mm256_add_ps(_mm256_mul_ps(y, x), _mm256_set1_ps(P4));
+        y = _mm256_add_ps(_mm256_mul_ps(y, x), _mm256_set1_ps(P5));
+        let x2 = _mm256_mul_ps(x, x);
+        let y = _mm256_add_ps(_mm256_add_ps(_mm256_mul_ps(y, x2), x), _mm256_set1_ps(1.0));
+        let e = _mm256_add_epi32(_mm256_cvtps_epi32(fl), _mm256_set1_epi32(127));
+        _mm256_mul_ps(y, _mm256_castsi256_ps(_mm256_slli_epi32::<23>(e)))
+    }
+
+    // Fixed-shape horizontal reductions (deterministic lane fold order).
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn hsum128(v: __m128) -> f32 {
+        let s = _mm_add_ps(v, _mm_movehl_ps(v, v));
+        let s1 = _mm_shuffle_ps::<0b01>(s, s);
+        _mm_cvtss_f32(_mm_add_ss(s, s1))
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn hmax128(v: __m128) -> f32 {
+        let s = _mm_max_ps(v, _mm_movehl_ps(v, v));
+        let s1 = _mm_shuffle_ps::<0b01>(s, s);
+        _mm_cvtss_f32(_mm_max_ss(s, s1))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s1 = _mm_shuffle_ps::<0b01>(s, s);
+        _mm_cvtss_f32(_mm_add_ss(s, s1))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn hmax256(v: __m256) -> f32 {
+        let s = _mm_max_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+        let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
+        let s1 = _mm_shuffle_ps::<0b01>(s, s);
+        _mm_cvtss_f32(_mm_max_ss(s, s1))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum256d(v: __m256d) -> f64 {
+        let s = _mm_add_pd(_mm256_castpd256_pd128(v), _mm256_extractf128_pd::<1>(v));
+        _mm_cvtsd_f64(_mm_add_sd(s, _mm_unpackhi_pd(s, s)))
+    }
+
+    // ---- forward row kernels ----
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn logits_row_sse2(row: &mut [f32], w: &[f32], wsi: f32, tau: f32) {
+        let n = row.len();
+        let wsi_v = _mm_set1_ps(wsi);
+        let tau_v = _mm_set1_ps(tau);
+        // |x| = andnot(signbit, x); negate by xor with the sign bit.
+        let sign = _mm_set1_ps(-0.0);
+        let mut j = 0;
+        while j + 4 <= n {
+            let wv = _mm_loadu_ps(w.as_ptr().add(j));
+            let a = _mm_andnot_ps(sign, _mm_sub_ps(wsi_v, wv));
+            let r = _mm_div_ps(_mm_xor_ps(a, sign), tau_v);
+            _mm_storeu_ps(row.as_mut_ptr().add(j), r);
+            j += 4;
+        }
+        while j < n {
+            row[j] = -(wsi - w[j]).abs() / tau;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn logits_row_avx2(row: &mut [f32], w: &[f32], wsi: f32, tau: f32) {
+        let n = row.len();
+        let wsi_v = _mm256_set1_ps(wsi);
+        let tau_v = _mm256_set1_ps(tau);
+        let sign = _mm256_set1_ps(-0.0);
+        let mut j = 0;
+        while j + 8 <= n {
+            let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+            let a = _mm256_andnot_ps(sign, _mm256_sub_ps(wsi_v, wv));
+            let r = _mm256_div_ps(_mm256_xor_ps(a, sign), tau_v);
+            _mm256_storeu_ps(row.as_mut_ptr().add(j), r);
+            j += 8;
+        }
+        while j < n {
+            row[j] = -(wsi - w[j]).abs() / tau;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn max_scan_sse2(row: &[f32]) -> f32 {
+        let n = row.len();
+        let mut mx = f32::NEG_INFINITY;
+        let mut j = 0;
+        if n >= 4 {
+            let mut acc = _mm_set1_ps(f32::NEG_INFINITY);
+            while j + 4 <= n {
+                acc = _mm_max_ps(acc, _mm_loadu_ps(row.as_ptr().add(j)));
+                j += 4;
+            }
+            mx = hmax128(acc);
+        }
+        while j < n {
+            mx = mx.max(row[j]);
+            j += 1;
+        }
+        mx
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max_scan_avx2(row: &[f32]) -> f32 {
+        let n = row.len();
+        let mut mx = f32::NEG_INFINITY;
+        let mut j = 0;
+        if n >= 8 {
+            let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+            while j + 8 <= n {
+                acc = _mm256_max_ps(acc, _mm256_loadu_ps(row.as_ptr().add(j)));
+                j += 8;
+            }
+            mx = hmax256(acc);
+        }
+        while j < n {
+            mx = mx.max(row[j]);
+            j += 1;
+        }
+        mx
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn find_first_eq_sse2(row: &[f32], mx: f32) -> usize {
+        let n = row.len();
+        let target = _mm_set1_ps(mx);
+        let mut j = 0;
+        while j + 4 <= n {
+            let v = _mm_loadu_ps(row.as_ptr().add(j));
+            let m = _mm_movemask_ps(_mm_cmpeq_ps(v, target));
+            if m != 0 {
+                return j + m.trailing_zeros() as usize;
+            }
+            j += 4;
+        }
+        while j < n {
+            if row[j] == mx {
+                return j;
+            }
+            j += 1;
+        }
+        0
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn find_first_eq_avx2(row: &[f32], mx: f32) -> usize {
+        let n = row.len();
+        let target = _mm256_set1_ps(mx);
+        let mut j = 0;
+        while j + 8 <= n {
+            let v = _mm256_loadu_ps(row.as_ptr().add(j));
+            let m = _mm256_movemask_ps(_mm256_cmp_ps::<_CMP_EQ_OQ>(v, target));
+            if m != 0 {
+                return j + m.trailing_zeros() as usize;
+            }
+            j += 8;
+        }
+        while j < n {
+            if row[j] == mx {
+                return j;
+            }
+            j += 1;
+        }
+        0
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn exp_pass_sse2(row: &mut [f32], mx: f32) -> f32 {
+        let n = row.len();
+        let mxv = _mm_set1_ps(mx);
+        let mut acc = _mm_setzero_ps();
+        let mut j = 0;
+        while j + 4 <= n {
+            let p = row.as_mut_ptr().add(j);
+            let e = exp128(_mm_sub_ps(_mm_loadu_ps(p), mxv));
+            _mm_storeu_ps(p, e);
+            acc = _mm_add_ps(acc, e);
+            j += 4;
+        }
+        let mut denom = hsum128(acc);
+        while j < n {
+            row[j] = (row[j] - mx).exp();
+            denom += row[j];
+            j += 1;
+        }
+        denom
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn exp_pass_avx2(row: &mut [f32], mx: f32) -> f32 {
+        let n = row.len();
+        let mxv = _mm256_set1_ps(mx);
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= n {
+            let p = row.as_mut_ptr().add(j);
+            let e = exp256(_mm256_sub_ps(_mm256_loadu_ps(p), mxv));
+            _mm256_storeu_ps(p, e);
+            acc = _mm256_add_ps(acc, e);
+            j += 8;
+        }
+        let mut denom = hsum256(acc);
+        while j < n {
+            row[j] = (row[j] - mx).exp();
+            denom += row[j];
+            j += 1;
+        }
+        denom
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn scale_sse2(row: &mut [f32], inv: f32) {
+        let n = row.len();
+        let iv = _mm_set1_ps(inv);
+        let mut j = 0;
+        while j + 4 <= n {
+            let p = row.as_mut_ptr().add(j);
+            _mm_storeu_ps(p, _mm_mul_ps(_mm_loadu_ps(p), iv));
+            j += 4;
+        }
+        while j < n {
+            row[j] *= inv;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_avx2(row: &mut [f32], inv: f32) {
+        let n = row.len();
+        let iv = _mm256_set1_ps(inv);
+        let mut j = 0;
+        while j + 8 <= n {
+            let p = row.as_mut_ptr().add(j);
+            _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), iv));
+            j += 8;
+        }
+        while j < n {
+            row[j] *= inv;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn scale_colsum_sse2(row: &mut [f32], cs: &mut [f32], inv: f32) {
+        let n = row.len();
+        let iv = _mm_set1_ps(inv);
+        let mut j = 0;
+        while j + 4 <= n {
+            let rp = row.as_mut_ptr().add(j);
+            let cp = cs.as_mut_ptr().add(j);
+            let p = _mm_mul_ps(_mm_loadu_ps(rp), iv);
+            _mm_storeu_ps(rp, p);
+            _mm_storeu_ps(cp, _mm_add_ps(_mm_loadu_ps(cp), p));
+            j += 4;
+        }
+        while j < n {
+            row[j] *= inv;
+            cs[j] += row[j];
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale_colsum_avx2(row: &mut [f32], cs: &mut [f32], inv: f32) {
+        let n = row.len();
+        let iv = _mm256_set1_ps(inv);
+        let mut j = 0;
+        while j + 8 <= n {
+            let rp = row.as_mut_ptr().add(j);
+            let cp = cs.as_mut_ptr().add(j);
+            let p = _mm256_mul_ps(_mm256_loadu_ps(rp), iv);
+            _mm256_storeu_ps(rp, p);
+            _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), p));
+            j += 8;
+        }
+        while j < n {
+            row[j] *= inv;
+            cs[j] += row[j];
+            j += 1;
+        }
+    }
+
+    /// d = 3 fold; 4-lane (SSE2-wide) on purpose: lanes are [y0 y1 y2 _],
+    /// each accumulating its component in j order — bit-exact vs the
+    /// scalar registers. The last j is scalar so the 4-float load stays
+    /// inside `x`.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn fold_y_d3_sse2(row: &[f32], x: &[f32]) -> [f32; 3] {
+        let n = row.len();
+        let mut acc = _mm_setzero_ps();
+        for j in 0..n.saturating_sub(1) {
+            let p = _mm_set1_ps(row[j]);
+            let xv = _mm_loadu_ps(x.as_ptr().add(3 * j));
+            acc = _mm_add_ps(acc, _mm_mul_ps(p, xv));
+        }
+        let mut out = [0.0f32; 4];
+        _mm_storeu_ps(out.as_mut_ptr(), acc);
+        if n > 0 {
+            let j = n - 1;
+            let p = row[j];
+            out[0] += p * x[3 * j];
+            out[1] += p * x[3 * j + 1];
+            out[2] += p * x[3 * j + 2];
+        }
+        [out[0], out[1], out[2]]
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fold_y_avx2(row: &[f32], x: &[f32], yi: &mut [f32], d: usize) {
+        for (j, &p) in row.iter().enumerate() {
+            let pv = _mm256_set1_ps(p);
+            let xj = x.as_ptr().add(j * d);
+            let mut t = 0;
+            while t + 8 <= d {
+                let yp = yi.as_mut_ptr().add(t);
+                let prod = _mm256_mul_ps(pv, _mm256_loadu_ps(xj.add(t)));
+                _mm256_storeu_ps(yp, _mm256_add_ps(_mm256_loadu_ps(yp), prod));
+                t += 8;
+            }
+            while t < d {
+                yi[t] += p * *xj.add(t);
+                t += 1;
+            }
+        }
+    }
+
+    // ---- backward row kernels ----
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gbuf_dot_d3_avx2(
+        ct_cs: &[f32],
+        x: &[f32],
+        cti: [f32; 3],
+        prob: &[f32],
+        gbuf: &mut [f32],
+    ) -> f32 {
+        let n = gbuf.len();
+        let c0 = _mm256_set1_ps(cti[0]);
+        let c1 = _mm256_set1_ps(cti[1]);
+        let c2 = _mm256_set1_ps(cti[2]);
+        // Strided component loads: lanes j..j+8 of x[3j+t] via gathers.
+        let idx = _mm256_setr_epi32(0, 3, 6, 9, 12, 15, 18, 21);
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= n {
+            let base = x.as_ptr().add(3 * j);
+            let x0 = _mm256_i32gather_ps::<4>(base, idx);
+            let x1 = _mm256_i32gather_ps::<4>(base.add(1), idx);
+            let x2 = _mm256_i32gather_ps::<4>(base.add(2), idx);
+            let ct = _mm256_loadu_ps(ct_cs.as_ptr().add(j));
+            let g0 = _mm256_add_ps(ct, _mm256_mul_ps(c0, x0));
+            let g1 = _mm256_add_ps(g0, _mm256_mul_ps(c1, x1));
+            let g = _mm256_add_ps(g1, _mm256_mul_ps(c2, x2));
+            _mm256_storeu_ps(gbuf.as_mut_ptr().add(j), g);
+            let p = _mm256_loadu_ps(prob.as_ptr().add(j));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(g, p));
+            j += 8;
+        }
+        let mut dot = hsum256(acc);
+        while j < n {
+            let b = j * 3;
+            let g = ((ct_cs[j] + cti[0] * x[b]) + cti[1] * x[b + 1]) + cti[2] * x[b + 2];
+            gbuf[j] = g;
+            dot += g * prob[j];
+            j += 1;
+        }
+        dot
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gbuf_dot_avx2(
+        ct_cs: &[f32],
+        x: &[f32],
+        cti: &[f32],
+        d: usize,
+        prob: &[f32],
+        gbuf: &mut [f32],
+    ) -> f32 {
+        let mut dot = 0.0f32;
+        for (j, gj) in gbuf.iter_mut().enumerate() {
+            let xj = x.as_ptr().add(j * d);
+            let mut acc = _mm256_setzero_ps();
+            let mut t = 0;
+            while t + 8 <= d {
+                let cv = _mm256_loadu_ps(cti.as_ptr().add(t));
+                acc = _mm256_add_ps(acc, _mm256_mul_ps(cv, _mm256_loadu_ps(xj.add(t))));
+                t += 8;
+            }
+            let mut g = ct_cs[j] + hsum256(acc);
+            while t < d {
+                g += cti[t] * *xj.add(t);
+                t += 1;
+            }
+            *gj = g;
+            dot += g * prob[j];
+        }
+        dot
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn dl_pass_sse2(
+        prob: &[f32],
+        gbuf: &[f32],
+        dot: f32,
+        wsi: f32,
+        w: &[f32],
+        tau: f32,
+        gw: &mut [f32],
+    ) -> f32 {
+        let n = gw.len();
+        let dotv = _mm_set1_ps(dot);
+        let wsi_v = _mm_set1_ps(wsi);
+        let tau_v = _mm_set1_ps(tau);
+        let zero = _mm_setzero_ps();
+        let one = _mm_set1_ps(1.0);
+        let mone = _mm_set1_ps(-1.0);
+        let mut acc = _mm_setzero_ps();
+        let mut j = 0;
+        while j + 4 <= n {
+            let p = _mm_loadu_ps(prob.as_ptr().add(j));
+            let g = _mm_loadu_ps(gbuf.as_ptr().add(j));
+            let dl = _mm_mul_ps(p, _mm_sub_ps(g, dotv));
+            let dw = _mm_sub_ps(wsi_v, _mm_loadu_ps(w.as_ptr().add(j)));
+            let pos = _mm_and_ps(_mm_cmpgt_ps(dw, zero), one);
+            let neg = _mm_and_ps(_mm_cmplt_ps(dw, zero), mone);
+            let s = _mm_or_ps(pos, neg);
+            let term = _mm_div_ps(_mm_mul_ps(dl, s), tau_v);
+            let gp = gw.as_mut_ptr().add(j);
+            _mm_storeu_ps(gp, _mm_add_ps(_mm_loadu_ps(gp), term));
+            acc = _mm_add_ps(acc, term);
+            j += 4;
+        }
+        let mut gws_i = -hsum128(acc);
+        while j < n {
+            let dl = prob[j] * (gbuf[j] - dot);
+            let s = super::sgn(wsi - w[j]);
+            gws_i -= dl * s / tau;
+            gw[j] += dl * s / tau;
+            j += 1;
+        }
+        gws_i
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dl_pass_avx2(
+        prob: &[f32],
+        gbuf: &[f32],
+        dot: f32,
+        wsi: f32,
+        w: &[f32],
+        tau: f32,
+        gw: &mut [f32],
+    ) -> f32 {
+        let n = gw.len();
+        let dotv = _mm256_set1_ps(dot);
+        let wsi_v = _mm256_set1_ps(wsi);
+        let tau_v = _mm256_set1_ps(tau);
+        let zero = _mm256_setzero_ps();
+        let one = _mm256_set1_ps(1.0);
+        let mone = _mm256_set1_ps(-1.0);
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= n {
+            let p = _mm256_loadu_ps(prob.as_ptr().add(j));
+            let g = _mm256_loadu_ps(gbuf.as_ptr().add(j));
+            let dl = _mm256_mul_ps(p, _mm256_sub_ps(g, dotv));
+            let dw = _mm256_sub_ps(wsi_v, _mm256_loadu_ps(w.as_ptr().add(j)));
+            let pos = _mm256_and_ps(_mm256_cmp_ps::<_CMP_GT_OQ>(dw, zero), one);
+            let neg = _mm256_and_ps(_mm256_cmp_ps::<_CMP_LT_OQ>(dw, zero), mone);
+            let s = _mm256_or_ps(pos, neg);
+            let term = _mm256_div_ps(_mm256_mul_ps(dl, s), tau_v);
+            let gp = gw.as_mut_ptr().add(j);
+            _mm256_storeu_ps(gp, _mm256_add_ps(_mm256_loadu_ps(gp), term));
+            acc = _mm256_add_ps(acc, term);
+            j += 8;
+        }
+        let mut gws_i = -hsum256(acc);
+        while j < n {
+            let dl = prob[j] * (gbuf[j] - dot);
+            let s = super::sgn(wsi - w[j]);
+            gws_i -= dl * s / tau;
+            gw[j] += dl * s / tau;
+            j += 1;
+        }
+        gws_i
+    }
+
+    // ---- loss reduction kernels ----
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn diff_normsq_avx2(a: &[f32], b: &[f32], diff: &mut [f32]) -> f32 {
+        let d = diff.len();
+        let mut acc = _mm256_setzero_ps();
+        let mut t = 0;
+        while t + 8 <= d {
+            let av = _mm256_loadu_ps(a.as_ptr().add(t));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(t));
+            let dd = _mm256_sub_ps(av, bv);
+            _mm256_storeu_ps(diff.as_mut_ptr().add(t), dd);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(dd, dd));
+            t += 8;
+        }
+        let mut s = hsum256(acc);
+        while t < d {
+            let dd = a[t] - b[t];
+            diff[t] = dd;
+            s += dd * dd;
+            t += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scatter_pair_avx2(d1: &mut [f32], d2: &mut [f32], diff: &[f32], g: f32) {
+        let d = diff.len();
+        let gv = _mm256_set1_ps(g);
+        let mut t = 0;
+        while t + 8 <= d {
+            let dd = _mm256_mul_ps(_mm256_loadu_ps(diff.as_ptr().add(t)), gv);
+            let p1 = d1.as_mut_ptr().add(t);
+            let p2 = d2.as_mut_ptr().add(t);
+            _mm256_storeu_ps(p1, _mm256_add_ps(_mm256_loadu_ps(p1), dd));
+            _mm256_storeu_ps(p2, _mm256_sub_ps(_mm256_loadu_ps(p2), dd));
+            t += 8;
+        }
+        while t < d {
+            d1[t] += diff[t] * g;
+            d2[t] -= diff[t] * g;
+            t += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn colsum_loss_avx2(cs: &[f32], lambda2: f32, ct_cs: &mut [f32]) -> f64 {
+        let n = cs.len();
+        let nf = _mm256_set1_ps(n as f32);
+        let l2 = _mm256_set1_ps(lambda2);
+        let one = _mm256_set1_ps(1.0);
+        let mut acc_lo = _mm256_setzero_pd();
+        let mut acc_hi = _mm256_setzero_pd();
+        let mut j = 0;
+        while j + 8 <= n {
+            let dev = _mm256_sub_ps(_mm256_loadu_ps(cs.as_ptr().add(j)), one);
+            let sq = _mm256_mul_ps(dev, dev);
+            acc_lo = _mm256_add_pd(acc_lo, _mm256_cvtps_pd(_mm256_castps256_ps128(sq)));
+            acc_hi = _mm256_add_pd(acc_hi, _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(sq)));
+            let ct = _mm256_div_ps(_mm256_mul_ps(l2, dev), nf);
+            _mm256_storeu_ps(ct_cs.as_mut_ptr().add(j), ct);
+            j += 8;
+        }
+        let mut acc = hsum256d(acc_lo) + hsum256d(acc_hi);
+        while j < n {
+            let dev = cs[j] - 1.0;
+            acc += (dev * dev) as f64;
+            ct_cs[j] = lambda2 * dev / n as f32;
+            j += 1;
+        }
+        acc
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum_f64_avx2(y: &[f32]) -> f64 {
+        let n = y.len();
+        let mut acc = _mm256_setzero_pd();
+        let mut k = 0;
+        while k + 4 <= n {
+            acc = _mm256_add_pd(acc, _mm256_cvtps_pd(_mm_loadu_ps(y.as_ptr().add(k))));
+            k += 4;
+        }
+        let mut s = hsum256d(acc);
+        while k < n {
+            s += y[k] as f64;
+            k += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_mean_avx2(ct_y: &mut [f32], y: &[f32], a: f32, mu: f32) {
+        let n = ct_y.len();
+        let av = _mm256_set1_ps(a);
+        let muv = _mm256_set1_ps(mu);
+        let mut k = 0;
+        while k + 8 <= n {
+            let yv = _mm256_sub_ps(_mm256_loadu_ps(y.as_ptr().add(k)), muv);
+            let cp = ct_y.as_mut_ptr().add(k);
+            _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), _mm256_mul_ps(av, yv)));
+            k += 8;
+        }
+        while k < n {
+            ct_y[k] += a * (y[k] - mu);
+            k += 1;
+        }
+    }
+
+    // ---- Sinkhorn normalization kernels ----
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_lse_one_avx2(row: &mut [f32]) {
+        let n = row.len();
+        let mx = max_scan_avx2(row);
+        let mxv = _mm256_set1_ps(mx);
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j + 8 <= n {
+            let v = _mm256_sub_ps(_mm256_loadu_ps(row.as_ptr().add(j)), mxv);
+            acc = _mm256_add_ps(acc, exp256(v));
+            j += 8;
+        }
+        let mut s = hsum256(acc);
+        while j < n {
+            s += (row[j] - mx).exp();
+            j += 1;
+        }
+        let lse = mx + s.ln();
+        let lv = _mm256_set1_ps(lse);
+        let mut j = 0;
+        while j + 8 <= n {
+            let p = row.as_mut_ptr().add(j);
+            _mm256_storeu_ps(p, _mm256_sub_ps(_mm256_loadu_ps(p), lv));
+            j += 8;
+        }
+        while j < n {
+            row[j] -= lse;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn col_lse_normalize_avx2(la: &mut [f32], n: usize) {
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut mxv = _mm256_set1_ps(f32::NEG_INFINITY);
+            for i in 0..n {
+                mxv = _mm256_max_ps(mxv, _mm256_loadu_ps(la.as_ptr().add(i * n + j)));
+            }
+            let mut sv = _mm256_setzero_ps();
+            for i in 0..n {
+                let v = _mm256_sub_ps(_mm256_loadu_ps(la.as_ptr().add(i * n + j)), mxv);
+                sv = _mm256_add_ps(sv, exp256(v));
+            }
+            let mut mxa = [0.0f32; 8];
+            let mut sa = [0.0f32; 8];
+            _mm256_storeu_ps(mxa.as_mut_ptr(), mxv);
+            _mm256_storeu_ps(sa.as_mut_ptr(), sv);
+            let mut lse = [0.0f32; 8];
+            for k in 0..8 {
+                lse[k] = mxa[k] + sa[k].ln();
+            }
+            let lv = _mm256_loadu_ps(lse.as_ptr());
+            for i in 0..n {
+                let p = la.as_mut_ptr().add(i * n + j);
+                _mm256_storeu_ps(p, _mm256_sub_ps(_mm256_loadu_ps(p), lv));
+            }
+            j += 8;
+        }
+        while j < n {
+            super::col_lse_one_scalar(la, n, j);
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn exp_in_place_avx2(buf: &mut [f32]) {
+        let n = buf.len();
+        let mut k = 0;
+        while k + 8 <= n {
+            let p = buf.as_mut_ptr().add(k);
+            _mm256_storeu_ps(p, exp256(_mm256_loadu_ps(p)));
+            k += 8;
+        }
+        while k < n {
+            buf[k] = buf[k].exp();
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-data (same idiom as the native backend
+    /// tests), shifted to a mixed-sign range.
+    fn pattern(len: usize, salt: u32) -> Vec<f32> {
+        (0..len)
+            .map(|i| {
+                let h = (i as u32).wrapping_mul(2654435761).wrapping_add(salt);
+                (h % 10_000) as f32 / 10_000.0 - 0.5
+            })
+            .collect()
+    }
+
+    /// Levels with a vector path on this machine (empty on non-x86-64:
+    /// the sweep degenerates to scalar-vs-scalar, which is fine).
+    fn vector_levels() -> Vec<SimdLevel> {
+        let mut v = Vec::new();
+        if detected() >= SimdLevel::Sse2 {
+            v.push(SimdLevel::Sse2);
+        }
+        if detected() >= SimdLevel::Avx2 {
+            v.push(SimdLevel::Avx2);
+        }
+        v
+    }
+
+    fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: len");
+        for (k, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}[{k}]: {x} vs {y}");
+        }
+    }
+
+    fn assert_close(a: f32, b: f32, tol: f32, what: &str) {
+        assert!((a - b).abs() <= tol * (1.0 + b.abs()), "{what}: {a} vs {b}");
+    }
+
+    /// The remainder-tail sizes the satellite asks for: below one lane,
+    /// straddling lane multiples, and a large O(n) size.
+    const NS: &[usize] = &[1, 2, 3, 127, 128, 129, 4096];
+
+    #[test]
+    fn choice_parses_resolves_and_displays() {
+        assert_eq!(SimdChoice::parse("auto").unwrap(), SimdChoice::Auto);
+        assert_eq!(SimdChoice::parse("OFF").unwrap(), SimdChoice::Off);
+        assert_eq!(SimdChoice::parse("scalar").unwrap(), SimdChoice::Off);
+        assert_eq!(SimdChoice::parse("sse2").unwrap(), SimdChoice::Sse2);
+        assert_eq!(SimdChoice::parse("avx2").unwrap(), SimdChoice::Avx2);
+        assert!(SimdChoice::parse("avx512").is_err());
+        assert_eq!(SimdChoice::default(), SimdChoice::Auto);
+        assert_eq!(SimdChoice::Off.to_string(), "off");
+        // Off always resolves scalar; requests never exceed detection.
+        assert_eq!(SimdChoice::Off.resolve(), SimdLevel::Scalar);
+        assert!(SimdChoice::Auto.resolve() <= detected());
+        assert!(SimdChoice::Avx2.resolve() <= detected());
+    }
+
+    #[test]
+    fn forward_row_kernels_match_the_scalar_oracle() {
+        for lv in vector_levels() {
+            for &n in NS {
+                let w = pattern(n, 3);
+                let x = pattern(n * 3, 5);
+                let (wsi, tau) = (0.21f32, 0.4f32);
+
+                let mut base = vec![0.0f32; n];
+                let mut got = vec![0.0f32; n];
+                logits_row(SimdLevel::Scalar, &mut base, &w, wsi, tau);
+                logits_row(lv, &mut got, &w, wsi, tau);
+                assert_bits(&got, &base, &format!("logits {lv:?} n={n}"));
+
+                let (mx_s, arg_s) = max_argmax(SimdLevel::Scalar, &base);
+                let (mx_v, arg_v) = max_argmax(lv, &base);
+                assert_eq!(mx_s.to_bits(), mx_v.to_bits(), "max {lv:?} n={n}");
+                assert_eq!(arg_s, arg_v, "argmax {lv:?} n={n}");
+
+                let mut exp_s = base.clone();
+                let mut exp_v = base.clone();
+                let den_s = exp_pass(SimdLevel::Scalar, &mut exp_s, mx_s);
+                let den_v = exp_pass(lv, &mut exp_v, mx_s);
+                assert_close(den_v, den_s, 1e-5, &format!("denom {lv:?} n={n}"));
+                for (a, b) in exp_v.iter().zip(&exp_s) {
+                    assert_close(*a, *b, 1e-5, &format!("exp {lv:?} n={n}"));
+                }
+
+                // Element-wise passes are bit-exact given the same input
+                // row (use the scalar exp row for both sides).
+                let inv = 1.0 / den_s;
+                let mut cs_s = pattern(n, 7);
+                let mut cs_v = cs_s.clone();
+                let mut row_s = exp_s.clone();
+                let mut row_v = exp_s.clone();
+                scale_colsum(SimdLevel::Scalar, &mut row_s, &mut cs_s, inv);
+                scale_colsum(lv, &mut row_v, &mut cs_v, inv);
+                assert_bits(&row_v, &row_s, &format!("scale_colsum row {lv:?} n={n}"));
+                assert_bits(&cs_v, &cs_s, &format!("scale_colsum cs {lv:?} n={n}"));
+
+                let mut p_s = exp_s.clone();
+                let mut p_v = exp_s.clone();
+                scale(SimdLevel::Scalar, &mut p_s, inv);
+                scale(lv, &mut p_v, inv);
+                assert_bits(&p_v, &p_s, &format!("scale {lv:?} n={n}"));
+
+                let y_s = fold_y_d3(SimdLevel::Scalar, &row_s, &x);
+                let y_v = fold_y_d3(lv, &row_s, &x);
+                assert_bits(&y_v, &y_s, &format!("fold_y_d3 {lv:?} n={n}"));
+
+                let d = 64usize;
+                let xw = pattern(n * d, 9);
+                let mut yi_s = vec![0.0f32; d];
+                let mut yi_v = vec![0.0f32; d];
+                fold_y(SimdLevel::Scalar, &row_s, &xw, &mut yi_s, d);
+                fold_y(lv, &row_s, &xw, &mut yi_v, d);
+                assert_bits(&yi_v, &yi_s, &format!("fold_y {lv:?} n={n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn backward_row_kernels_match_the_scalar_oracle() {
+        for lv in vector_levels() {
+            for &n in NS {
+                let w = pattern(n, 11);
+                let x = pattern(n * 3, 13);
+                let ct_cs = pattern(n, 15);
+                let prob: Vec<f32> = pattern(n, 17).iter().map(|v| v + 0.6).collect();
+                let cti = [0.3f32, -0.2, 0.7];
+                let (wsi, tau) = (0.11f32, 0.5f32);
+
+                let mut gb_s = vec![0.0f32; n];
+                let mut gb_v = vec![0.0f32; n];
+                let dot_s = gbuf_dot_d3(SimdLevel::Scalar, &ct_cs, &x, cti, &prob, &mut gb_s);
+                let dot_v = gbuf_dot_d3(lv, &ct_cs, &x, cti, &prob, &mut gb_v);
+                assert_bits(&gb_v, &gb_s, &format!("gbuf_d3 {lv:?} n={n}"));
+                assert_close(dot_v, dot_s, 1e-5, &format!("dot_d3 {lv:?} n={n}"));
+
+                let d = 64usize;
+                let xw = pattern(n * d, 19);
+                let ctw = pattern(d, 21);
+                let mut gw_s = vec![0.0f32; n];
+                let mut gw_v = vec![0.0f32; n];
+                let ds = gbuf_dot(SimdLevel::Scalar, &ct_cs, &xw, &ctw, d, &prob, &mut gw_s);
+                let dv = gbuf_dot(lv, &ct_cs, &xw, &ctw, d, &prob, &mut gw_v);
+                assert_close(dv, ds, 1e-4, &format!("dot {lv:?} n={n}"));
+                for (a, b) in gw_v.iter().zip(&gw_s) {
+                    assert_close(*a, *b, 1e-5, &format!("gbuf {lv:?} n={n}"));
+                }
+
+                // dl_pass: identical inputs → bit-exact column gradient.
+                let mut g1 = pattern(n, 23);
+                let mut g2 = g1.clone();
+                let a = dl_pass(SimdLevel::Scalar, &prob, &gb_s, dot_s, wsi, &w, tau, &mut g1);
+                let b = dl_pass(lv, &prob, &gb_s, dot_s, wsi, &w, tau, &mut g2);
+                assert_bits(&g2, &g1, &format!("dl gw {lv:?} n={n}"));
+                assert_close(b, a, 1e-4, &format!("dl gws {lv:?} n={n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn loss_kernels_match_the_scalar_oracle() {
+        for lv in vector_levels() {
+            for &d in &[1usize, 3, 64] {
+                let a = pattern(d, 25);
+                let b = pattern(d, 27);
+                let mut df_s = vec![0.0f32; d];
+                let mut df_v = vec![0.0f32; d];
+                let s_s = diff_normsq(SimdLevel::Scalar, &a, &b, &mut df_s);
+                let s_v = diff_normsq(lv, &a, &b, &mut df_v);
+                assert_bits(&df_v, &df_s, &format!("diff {lv:?} d={d}"));
+                assert_close(s_v, s_s, 1e-5, &format!("normsq {lv:?} d={d}"));
+
+                let mut p1_s = pattern(d, 29);
+                let mut p2_s = pattern(d, 31);
+                let mut p1_v = p1_s.clone();
+                let mut p2_v = p2_s.clone();
+                scatter_pair(SimdLevel::Scalar, &mut p1_s, &mut p2_s, &df_s, 0.37);
+                scatter_pair(lv, &mut p1_v, &mut p2_v, &df_s, 0.37);
+                assert_bits(&p1_v, &p1_s, &format!("scatter1 {lv:?} d={d}"));
+                assert_bits(&p2_v, &p2_s, &format!("scatter2 {lv:?} d={d}"));
+            }
+            for &n in NS {
+                let cs: Vec<f32> = pattern(n, 33).iter().map(|v| v + 1.0).collect();
+                let mut ct_s = vec![0.0f32; n];
+                let mut ct_v = vec![0.0f32; n];
+                let a_s = colsum_loss(SimdLevel::Scalar, &cs, 2.0, &mut ct_s);
+                let a_v = colsum_loss(lv, &cs, 2.0, &mut ct_v);
+                assert_bits(&ct_v, &ct_s, &format!("ct_cs {lv:?} n={n}"));
+                assert!((a_v - a_s).abs() <= 1e-6 * (1.0 + a_s.abs()), "acc {lv:?} n={n}");
+
+                let y = pattern(n, 35);
+                let m_s = sum_f64(SimdLevel::Scalar, &y);
+                let m_v = sum_f64(lv, &y);
+                assert!((m_v - m_s).abs() <= 1e-6 * (1.0 + m_s.abs()), "sum {lv:?} n={n}");
+
+                let mut c_s = pattern(n, 37);
+                let mut c_v = c_s.clone();
+                axpy_mean(SimdLevel::Scalar, &mut c_s, &y, 0.21, 0.05);
+                axpy_mean(lv, &mut c_v, &y, 0.21, 0.05);
+                assert_bits(&c_v, &c_s, &format!("axpy {lv:?} n={n}"));
+            }
+        }
+    }
+
+    #[test]
+    fn sinkhorn_kernels_match_the_scalar_oracle() {
+        for lv in vector_levels() {
+            for &n in &[1usize, 2, 3, 8, 9, 16, 33] {
+                let base: Vec<f32> = pattern(n * n, 39).iter().map(|v| v * 4.0).collect();
+
+                let mut la_s = base.clone();
+                let mut la_v = base.clone();
+                row_lse_normalize(SimdLevel::Scalar, &mut la_s, n);
+                row_lse_normalize(lv, &mut la_v, n);
+                for (a, b) in la_v.iter().zip(&la_s) {
+                    assert!((a - b).abs() < 1e-5, "row_lse {lv:?} n={n}: {a} vs {b}");
+                }
+
+                let mut lc_s = base.clone();
+                let mut lc_v = base.clone();
+                col_lse_normalize(SimdLevel::Scalar, &mut lc_s, n);
+                col_lse_normalize(lv, &mut lc_v, n);
+                for (a, b) in lc_v.iter().zip(&lc_s) {
+                    assert!((a - b).abs() < 1e-5, "col_lse {lv:?} n={n}: {a} vs {b}");
+                }
+
+                let mut e_s = la_s.clone();
+                let mut e_v = la_s.clone();
+                exp_in_place(SimdLevel::Scalar, &mut e_s);
+                exp_in_place(lv, &mut e_v);
+                for (a, b) in e_v.iter().zip(&e_s) {
+                    assert_close(*a, *b, 1e-5, &format!("exp_in_place {lv:?} n={n}"));
+                }
+            }
+        }
+    }
+}

@@ -73,7 +73,7 @@ impl ParsedArgs {
 const KNOWN_VALUE_OPTS: &[&str] = &[
     "n", "grid", "method", "out", "seed", "config", "artifacts", "dataset",
     "bits", "entropy", "scene-seed", "clusters", "dims", "batch", "workers",
-    "backend", "threads", "addr", "cache-mb", "tile-n", "shards",
+    "backend", "threads", "simd", "addr", "cache-mb", "tile-n", "shards",
     "cache-file", "rate-limit", "auth-token", "trace-file",
 ];
 
@@ -83,8 +83,8 @@ sssort — ShuffleSoftSort permutation-learning coordinator
 USAGE:
   sssort sort    [--method NAME] [--grid HxW] [--dataset colors|features]
                  [--backend auto|native|pjrt] [--threads T] [--tile-n T]
-                 [--seed S] [--batch K] [--workers W] [--out dir]
-                 [--trace-file PATH] [k=v ...]
+                 [--simd auto|off|sse2|avx2] [--seed S] [--batch K]
+                 [--workers W] [--out dir] [--trace-file PATH] [k=v ...]
                  sort dataset(s), report DPQ (batch >1 fans out across threads)
   sssort serve   [--addr HOST:PORT] [--workers W] [--cache-mb MB]
                  [--shards K] [--cache-file PATH] [--rate-limit R]
@@ -107,6 +107,9 @@ Config overrides are bare k=v pairs, e.g. `phases=300 lr=0.3 shuffle=random`;
 the learned methods on the pure-Rust native backend (no artifacts needed).
 `--threads T` (or a `threads=T` pair) sizes the native step session's
 worker pool; 0 = backend default. Results never depend on it.
+`--simd L` (or a `simd=L` pair) picks the native step-kernel level: `auto`
+(default) uses the best instruction set detected at runtime, `off` forces
+the scalar bit-exactness oracle (README section Performance).
 `--tile-n T` (or `tile_n=T` / `tiles=B`) enables tiled phase execution for
 shuffle-softsort: independent per-tile SoftSort solves of ~T cells keep
 per-step cost and memory at O(tile_n^2) instead of O(N^2) — use it for
@@ -212,6 +215,14 @@ mod tests {
         assert_eq!(a.opt_usize("threads", 0).unwrap(), 4);
         assert!(a.positional.is_empty());
         assert!(usage().contains("--threads"));
+    }
+
+    #[test]
+    fn simd_takes_a_value() {
+        let a = parse(&["sort", "--simd", "off", "--method", "sss"]);
+        assert_eq!(a.opt("simd"), Some("off"));
+        assert!(a.positional.is_empty());
+        assert!(usage().contains("--simd"));
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::backend::{SessionOpts, SimdChoice};
 use crate::coordinator::shuffle::ShuffleStrategy;
 use crate::coordinator::{optimizer::AdamConfig, schedule::TauSchedule};
 use crate::grid::GridShape;
@@ -58,6 +59,11 @@ pub struct ShuffleSoftSortConfig {
     /// backend's default; `threads=0` resets to the default). Never
     /// changes results — the native reduction is pool-size-invariant.
     pub threads: Option<usize>,
+    /// Step-kernel implementation for the native backend (`simd=` override:
+    /// `auto` picks the best detected at runtime, `off` forces the scalar
+    /// bit-exactness oracle). Results agree within the documented
+    /// scalar-vs-SIMD tolerance; ignored by pjrt.
+    pub simd: SimdChoice,
     /// Tiled phase execution: `Some(t)` splits every phase into contiguous
     /// grid bands of ≈`t` cells and runs an independent SoftSort inner
     /// loop per tile — O(Σ n_b²) per step instead of O(N²), the knob that
@@ -98,8 +104,17 @@ impl ShuffleSoftSortConfig {
             greedy_accept: true,
             lr_auto_scale: true,
             threads: None,
+            simd: SimdChoice::Auto,
             tile_n: None,
         }
+    }
+
+    /// The backend session knobs this config carries (pool width + SIMD
+    /// level), in the shape [`StepBackend::session`] wants.
+    ///
+    /// [`StepBackend::session`]: crate::backend::StepBackend::session
+    pub fn session_opts(&self) -> SessionOpts {
+        SessionOpts { threads: self.threads, simd: self.simd }
     }
 
     /// Effective Adam lr for a d-dimensional dataset.
@@ -132,6 +147,7 @@ impl ShuffleSoftSortConfig {
             "record_curve" => self.record_curve = value.parse()?,
             "greedy_accept" | "accept" => self.greedy_accept = value.parse()?,
             "threads" => self.threads = normalize_threads(value.parse()?),
+            "simd" => self.simd = SimdChoice::parse(value)?,
             "tile_n" => {
                 let t: usize = value.parse()?;
                 self.tile_n = (t > 0).then_some(t);
@@ -188,6 +204,7 @@ pub struct ShuffleSoftSortConfigBuilder {
     record_curve: Option<bool>,
     greedy_accept: Option<bool>,
     threads: Option<usize>,
+    simd: Option<SimdChoice>,
     tile_n: Option<usize>,
     tiles: Option<usize>,
     overrides: Vec<(String, String)>,
@@ -264,6 +281,13 @@ impl ShuffleSoftSortConfigBuilder {
         self
     }
 
+    /// Step-kernel implementation (like the `simd=` override / the
+    /// `--simd` CLI flag).
+    pub fn simd(mut self, simd: SimdChoice) -> Self {
+        self.simd = Some(simd);
+        self
+    }
+
     /// Tiled phase execution with ≈`tile_n` cells per tile (like the
     /// `tile_n=` override / the `--tile-n` CLI flag; 0 keeps the full
     /// executor).
@@ -333,6 +357,9 @@ impl ShuffleSoftSortConfigBuilder {
         }
         if let Some(v) = self.threads {
             cfg.threads = normalize_threads(v);
+        }
+        if let Some(v) = self.simd {
+            cfg.simd = v;
         }
         if let Some(v) = self.tile_n {
             cfg.tile_n = (v > 0).then_some(v);
@@ -466,6 +493,9 @@ pub struct BaselineConfig {
     /// Worker-pool size for the backend step session (`None` = backend
     /// default; `threads=0` resets). Never changes results.
     pub threads: Option<usize>,
+    /// Step-kernel implementation for the native backend (see
+    /// [`ShuffleSoftSortConfig::simd`]).
+    pub simd: SimdChoice,
 }
 
 impl BaselineConfig {
@@ -487,7 +517,14 @@ impl BaselineConfig {
             seed: 42,
             gumbel_scale: 0.2,
             threads: None,
+            simd: SimdChoice::Auto,
         }
+    }
+
+    /// The backend session knobs this config carries (see
+    /// [`ShuffleSoftSortConfig::session_opts`]).
+    pub fn session_opts(&self) -> SessionOpts {
+        SessionOpts { threads: self.threads, simd: self.simd }
     }
 
     /// Gumbel-Sinkhorn variant: the N² logits want a much smaller Adam step
@@ -507,6 +544,7 @@ impl BaselineConfig {
             "seed" => self.seed = value.parse()?,
             "gumbel_scale" => self.gumbel_scale = value.parse()?,
             "threads" => self.threads = normalize_threads(value.parse()?),
+            "simd" => self.simd = SimdChoice::parse(value)?,
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -526,6 +564,7 @@ pub struct BaselineConfigBuilder {
     seed: Option<u64>,
     gumbel_scale: Option<f32>,
     threads: Option<usize>,
+    simd: Option<SimdChoice>,
     overrides: Vec<(String, String)>,
 }
 
@@ -576,6 +615,13 @@ impl BaselineConfigBuilder {
         self
     }
 
+    /// Step-kernel implementation (like the `simd=` override / the
+    /// `--simd` CLI flag).
+    pub fn simd(mut self, simd: SimdChoice) -> Self {
+        self.simd = Some(simd);
+        self
+    }
+
     /// Queue one `k=v` override (applied last, CLI semantics).
     pub fn set(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
         self.overrides.push((key.into(), value.into()));
@@ -617,6 +663,9 @@ impl BaselineConfigBuilder {
         }
         if let Some(v) = self.threads {
             cfg.threads = normalize_threads(v);
+        }
+        if let Some(v) = self.simd {
+            cfg.simd = v;
         }
         for (k, v) in &self.overrides {
             cfg.set(k, v)
@@ -671,6 +720,30 @@ mod tests {
         assert_eq!(b.threads, None);
         let s = ShuffleSoftSortConfig::builder().grid(8, 8).threads(3).build().unwrap();
         assert_eq!(s.threads, Some(3));
+    }
+
+    #[test]
+    fn simd_override_parses_and_feeds_session_opts() {
+        let mut c = ShuffleSoftSortConfig::for_grid(8, 8);
+        assert_eq!(c.simd, SimdChoice::Auto);
+        c.set("simd", "off").unwrap();
+        assert_eq!(c.simd, SimdChoice::Off);
+        assert_eq!(c.session_opts(), SessionOpts { threads: None, simd: SimdChoice::Off });
+        c.set("simd", "auto").unwrap();
+        assert_eq!(c.simd, SimdChoice::Auto);
+        assert!(c.set("simd", "avx9000").is_err());
+        let b = ShuffleSoftSortConfig::builder()
+            .grid(8, 8)
+            .simd(SimdChoice::Off)
+            .build()
+            .unwrap();
+        assert_eq!(b.simd, SimdChoice::Off);
+        let mut base = BaselineConfig::for_grid(8, 8);
+        assert_eq!(base.simd, SimdChoice::Auto);
+        base.set("simd", "off").unwrap();
+        assert_eq!(base.session_opts().simd, SimdChoice::Off);
+        let bb = BaselineConfig::builder().grid(8, 8).simd(SimdChoice::Off).build().unwrap();
+        assert_eq!(bb.simd, SimdChoice::Off);
     }
 
     #[test]

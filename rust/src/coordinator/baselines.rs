@@ -63,7 +63,7 @@ impl<'b> SoftSortDriver<'b> {
         let identity_inv: Vec<i32> = (0..n as i32).collect();
 
         // One session for the whole run (reused scratch, pool, out bufs).
-        let mut session = self.backend.session(shape, self.cfg.threads)?;
+        let mut session = self.backend.session(shape, self.cfg.session_opts())?;
         let mut step = SssStep::new_for(shape);
 
         // Unit-spacing descending ramp — same bandwidth rationale as the
@@ -140,7 +140,7 @@ impl<'b> GumbelSinkhornDriver<'b> {
         // One session per run. Its Sinkhorn state slab (2·iters N²
         // log-matrices) is allocated once and reused by every step — the
         // pre-session code re-allocated that stack per step.
-        let mut session = self.backend.session(shape, self.cfg.threads)?;
+        let mut session = self.backend.session(shape, self.cfg.session_opts())?;
         let mut step = GsStep::new_for(n);
 
         let mut logits = vec![0.0f32; n * n];
@@ -233,7 +233,7 @@ impl<'b> KissingDriver<'b> {
         let norm = mean_pairwise_distance(&data.rows, n, d, 20_000, &mut rng);
 
         // One session per run (reused factor/normalization scratch).
-        let mut session = self.backend.session(shape, self.cfg.threads)?;
+        let mut session = self.backend.session(shape, self.cfg.session_opts())?;
         let mut step = KissStep::new_for(n, m);
 
         let mut v: Vec<f32> = (0..n * m).map(|_| rng.gaussian()).collect();
@@ -292,6 +292,7 @@ pub fn softsort_budget_of(cfg: &ShuffleSoftSortConfig) -> BaselineConfig {
         seed: cfg.seed,
         gumbel_scale: 0.0,
         threads: cfg.threads,
+        simd: cfg.simd,
     }
 }
 

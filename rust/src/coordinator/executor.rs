@@ -37,7 +37,7 @@ use std::sync::Mutex;
 use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::backend::pool::WorkerPool;
-use crate::backend::{SssStep, StepBackend, StepSession, StepShape};
+use crate::backend::{SessionOpts, SssStep, StepBackend, StepSession, StepShape};
 use crate::config::ShuffleSoftSortConfig;
 use crate::grid::GridShape;
 use crate::perm::{repair, Permutation};
@@ -260,7 +260,7 @@ impl FullExecutor {
         let shape = StepShape::new(cfg.grid, d);
         // One session for the whole run: scratch + worker pool allocated
         // here, every phase reuses them (zero steady-state allocations).
-        let session = backend.session(shape, cfg.threads)?;
+        let session = backend.session(shape, cfg.session_opts())?;
         Ok(FullExecutor {
             cfg: cfg.clone(),
             norm,
@@ -578,7 +578,8 @@ impl TiledExecutor {
             'build: for _ in 0..wanted {
                 let mut sessions = Vec::with_capacity(plan.shapes.len());
                 for &shape in &plan.shapes {
-                    match backend.session_sendable(shape, Some(per_tile_threads))? {
+                    let opts = SessionOpts { threads: Some(per_tile_threads), simd: cfg.simd };
+                    match backend.session_sendable(shape, opts)? {
                         Some(s) => sessions.push(s),
                         None => {
                             par_workers.clear();
@@ -592,7 +593,7 @@ impl TiledExecutor {
         let (pool, seq) = if par_workers.is_empty() {
             let mut sessions = Vec::with_capacity(plan.shapes.len());
             for &shape in &plan.shapes {
-                sessions.push(backend.session(shape, cfg.threads)?);
+                sessions.push(backend.session(shape, cfg.session_opts())?);
             }
             (None, Some(TileWorker::new(cfg, &plan.shapes, sessions)))
         } else {

@@ -83,7 +83,7 @@ pub mod util;
 /// Convenience re-exports for the common entry points.
 pub mod prelude {
     pub use crate::api::{BackendChoice, Engine, MethodKind, MethodRegistry, Sorter};
-    pub use crate::backend::{NativeBackend, StepBackend};
+    pub use crate::backend::{NativeBackend, SessionOpts, SimdChoice, StepBackend};
     pub use crate::config::{BaselineConfig, ShuffleSoftSortConfig};
     pub use crate::coordinator::{ShuffleSoftSort, SortOutcome};
     pub use crate::data::Dataset;

@@ -4,7 +4,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use shufflesort::api::{BackendChoice, Engine, MethodKind, MethodRegistry};
+use shufflesort::api::{BackendChoice, Engine, MethodKind, MethodRegistry, SimdChoice};
 use shufflesort::cli::{parse_grid, usage, ParsedArgs};
 use shufflesort::config::{normalize_threads, ServeConfig};
 use shufflesort::coordinator::SortOutcome;
@@ -57,6 +57,9 @@ fn engine_for(args: &ParsedArgs) -> Result<Engine> {
     if let Some(t) = args.opt("threads") {
         let t: usize = t.parse().map_err(|_| anyhow!("--threads must be an integer"))?;
         builder = builder.threads(t);
+    }
+    if let Some(s) = args.opt("simd") {
+        builder = builder.simd(SimdChoice::parse(s)?);
     }
     Ok(builder.build())
 }
@@ -252,10 +255,15 @@ fn cmd_serve(args: &ParsedArgs) -> Result<()> {
         ),
         None => None,
     };
+    let simd = match args.opt("simd") {
+        Some(s) => SimdChoice::parse(s)?,
+        None => SimdChoice::default(),
+    };
     let spec = EngineSpec {
         artifacts_dir: artifacts_dir(args),
         backend,
         threads,
+        simd,
         batch_workers: None,
         registry: MethodRegistry::new(),
     };

@@ -75,7 +75,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 
-use crate::api::{BackendChoice, Engine, MethodKind, MethodRegistry, MethodSpec};
+use crate::api::{BackendChoice, Engine, MethodKind, MethodRegistry, MethodSpec, SimdChoice};
 use crate::config::ServeConfig;
 use crate::coordinator::SortOutcome;
 use crate::data::{self, Dataset};
@@ -105,6 +105,8 @@ pub struct EngineSpec {
     pub backend: BackendChoice,
     /// Row-thread budget for step sessions (`None` = backend default).
     pub threads: Option<usize>,
+    /// Step-kernel level for native step sessions (the `--simd` flag).
+    pub simd: SimdChoice,
     /// `sort_batch` worker cap inside the engine host.
     pub batch_workers: Option<usize>,
     /// Method set; pass `MethodRegistry::with_methods(..)` to serve
@@ -118,6 +120,7 @@ impl Default for EngineSpec {
             artifacts_dir: "artifacts".to_string(),
             backend: BackendChoice::Auto,
             threads: None,
+            simd: SimdChoice::Auto,
             batch_workers: None,
             registry: MethodRegistry::new(),
         }
@@ -132,6 +135,7 @@ impl EngineSpec {
         if let Some(t) = self.threads {
             b = b.threads(t);
         }
+        b = b.simd(self.simd);
         if let Some(w) = self.batch_workers {
             b = b.workers(w);
         }

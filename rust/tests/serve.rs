@@ -11,7 +11,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
-use shufflesort::api::{BackendChoice, Engine, MethodRegistry};
+use shufflesort::api::{BackendChoice, Engine};
 use shufflesort::config::ServeConfig;
 use shufflesort::data::random_colors;
 use shufflesort::grid::GridShape;
@@ -35,7 +35,7 @@ fn start_server_with(cfg: ServeConfig) -> Server {
         backend: BackendChoice::Native,
         threads: Some(1),
         batch_workers: Some(2),
-        registry: MethodRegistry::new(),
+        ..Default::default()
     };
     serve::start(cfg, spec).expect("server boots on a free port")
 }
