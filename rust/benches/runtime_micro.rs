@@ -305,6 +305,123 @@ fn main() {
         }
     }
 
+    // ---- request sampling overhead: off vs 1-in-8 ------------------------
+    // The serve plane's head sampling (`--trace-sample K`) makes one
+    // counter-based decision per request; untraced requests must keep the
+    // inert-span path. This pair mirrors that decision around the same
+    // step kernel: "off" is trace_sample=0 (gate load + inert spans),
+    // "1-in-8" opens a real root on every 8th iteration and folds the
+    // finished trace away, amortizing the full sampled-request cost.
+    {
+        let n = 1024usize;
+        let ds = random_colors(n, 1);
+        let w: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let inv: Vec<i32> = (0..n as i32).collect();
+        let shape = StepShape::new(GridShape::new(32, n / 32), 3);
+        let mut session = native.session(shape, SessionOpts::default()).unwrap();
+        let mut step = SssStep::new_for(shape);
+
+        shufflesort::trace::set_enabled(false);
+        let off = bench("sss_step n=1024 request sampling off", 2, reps, || {
+            let root = shufflesort::trace::Span::off();
+            let _cur = root.make_current();
+            let mut clock = shufflesort::trace::StepClock::start(shufflesort::trace::current());
+            let loss = clock.time(shufflesort::trace::FAM_SSS, || {
+                session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
+                step.loss
+            });
+            clock.emit();
+            drop(_cur);
+            root.end();
+            loss
+        });
+        println!("{}", off.line());
+
+        shufflesort::trace::set_enabled(true);
+        let mut req = 0u64;
+        let sampled = bench("sss_step n=1024 request sampled 1-in-8", 2, reps, || {
+            let traced = req % 8 == 0;
+            req += 1;
+            let root = if traced {
+                shufflesort::trace::Span::root("request")
+            } else {
+                shufflesort::trace::Span::off()
+            };
+            let _cur = root.make_current();
+            let mut clock = shufflesort::trace::StepClock::start(shufflesort::trace::current());
+            let loss = clock.time(shufflesort::trace::FAM_SSS, || {
+                session.sss_step(&w, &ds.rows, &inv, 0.3, 0.5, &mut step).unwrap();
+                step.loss
+            });
+            clock.emit();
+            drop(_cur);
+            let id = root.ctx().map(|c| c.trace_id);
+            root.end();
+            if let Some(id) = id {
+                let _ = shufflesort::trace::finish(id);
+            }
+            loss
+        });
+        shufflesort::trace::set_enabled(false);
+        println!("{}", sampled.line());
+        println!(
+            "    sampling overhead at n=1024: {:+.2}% (1-in-8 {:.3} ms vs off {:.3} ms per step)",
+            100.0 * (sampled.mean_s / off.mean_s.max(1e-12) - 1.0),
+            sampled.mean_s * 1e3,
+            off.mean_s * 1e3
+        );
+        samples.push(off);
+        samples.push(sampled);
+    }
+
+    // ---- flamegraph artifact: fold one traced tiled sort -----------------
+    // The CI bench job publishes this next to sample_trace.json: a small
+    // traced shuffle-softsort run collapsed into Brendan Gregg folded
+    // stacks, paste-ready for flamegraph.pl / speedscope.
+    {
+        use shufflesort::trace;
+        let engine = shufflesort::api::Engine::builder("artifacts")
+            .backend(shufflesort::api::BackendChoice::Native)
+            .build();
+        let ds = random_colors(256, 9);
+        let g = GridShape::new(16, 16);
+        let overrides: Vec<(String, String)> = [
+            ("seed", "9"),
+            ("phases", "8"),
+            ("tile_n", "64"),
+            ("record_curve", "false"),
+        ]
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+        trace::set_enabled(true);
+        let mut root = trace::Span::root("sort");
+        let trace_id = root.ctx().map(|c| c.trace_id).unwrap_or(0);
+        let outcome = {
+            let _cur = root.make_current();
+            engine.sort("shuffle-softsort", &ds, g, &overrides)
+        };
+        if let Ok(out) = &outcome {
+            out.report.trace_attrs(&mut root);
+        }
+        root.end();
+        let finished = trace::finish(trace_id);
+        trace::set_enabled(false);
+        match (outcome, finished) {
+            (Ok(_), Some(t)) => {
+                let p = trace::profile::Profile::new();
+                p.observe(&t);
+                let path = "target/bench_reports/profile.folded";
+                let _ = std::fs::create_dir_all("target/bench_reports");
+                match std::fs::write(path, p.folded()) {
+                    Ok(()) => println!("wrote {path} ({} stacks)", p.len()),
+                    Err(e) => eprintln!("could not write {path}: {e}"),
+                }
+            }
+            _ => eprintln!("flamegraph artifact skipped (sort failed or trace empty)"),
+        }
+    }
+
     // ---- pure-Rust substrate costs on the same scale ---------------------
     let mut rng = Pcg32::new(3);
     let cost: Vec<f64> = (0..256 * 256).map(|_| rng.f64()).collect();

@@ -162,6 +162,49 @@ fn main() {
     }
     tiled_table.print();
 
+    // ---- where a tiled phase's wall time goes (folded self-time) ---------
+    // Fold one short traced tiled run into collapsed stacks and print the
+    // heaviest paths — the same view `/v1/profile` serves, here as a quick
+    // check that tile compute (not dispatch) dominates the phase.
+    {
+        use shufflesort::trace;
+        let engine = shufflesort::api::Engine::builder("artifacts")
+            .backend(shufflesort::api::BackendChoice::Native)
+            .build();
+        let ds = random_colors(1024, 5);
+        let g = GridShape::new(32, 32);
+        let overrides: Vec<(String, String)> = [
+            ("seed", "5"),
+            ("phases", "4"),
+            ("tile_n", "256"),
+            ("record_curve", "false"),
+        ]
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+        trace::set_enabled(true);
+        let root = trace::Span::root("sort");
+        let trace_id = root.ctx().map(|c| c.trace_id).unwrap_or(0);
+        let outcome = {
+            let _cur = root.make_current();
+            engine.sort("shuffle-softsort", &ds, g, &overrides)
+        };
+        root.end();
+        let finished = trace::finish(trace_id);
+        trace::set_enabled(false);
+        if let (Ok(_), Some(t)) = (outcome, finished) {
+            let p = trace::profile::Profile::new();
+            p.observe(&t);
+            println!("\nfolded self-time, tiled sss n=1024 tile_n=256 (top 5 paths):");
+            for (path, stat) in p.snapshot().into_iter().take(5) {
+                println!(
+                    "  {path} self={}us total={}us x{}",
+                    stat.self_us, stat.total_us, stat.count
+                );
+            }
+        }
+    }
+
     // PJRT comparison rows when the AOT artifacts are around.
     #[cfg(feature = "pjrt")]
     if let Some(backend) = common::try_pjrt() {

@@ -74,7 +74,8 @@ const KNOWN_VALUE_OPTS: &[&str] = &[
     "n", "grid", "method", "out", "seed", "config", "artifacts", "dataset",
     "bits", "entropy", "scene-seed", "clusters", "dims", "batch", "workers",
     "backend", "threads", "simd", "addr", "cache-mb", "tile-n", "shards",
-    "cache-file", "rate-limit", "auth-token", "trace-file",
+    "cache-file", "rate-limit", "auth-token", "trace-file", "profile-file",
+    "trace-sample", "trace-keep",
 ];
 
 pub const USAGE: &str = "\
@@ -84,11 +85,13 @@ USAGE:
   sssort sort    [--method NAME] [--grid HxW] [--dataset colors|features]
                  [--backend auto|native|pjrt] [--threads T] [--tile-n T]
                  [--simd auto|off|sse2|avx2] [--seed S] [--batch K]
-                 [--workers W] [--out dir] [--trace-file PATH] [k=v ...]
+                 [--workers W] [--out dir] [--trace-file PATH]
+                 [--profile-file PATH] [k=v ...]
                  sort dataset(s), report DPQ (batch >1 fans out across threads)
   sssort serve   [--addr HOST:PORT] [--workers W] [--cache-mb MB]
                  [--shards K] [--cache-file PATH] [--rate-limit R]
                  [--auth-token TOKEN] [--backend B] [--threads T]
+                 [--trace-sample K] [--trace-keep N]
                  [--artifacts dir] [k=v overrides]
                  HTTP service over the engine: POST /v1/sort, /v1/sort_batch,
                  GET /v1/methods, /healthz, /metrics (see README \u{a7}Serving).
@@ -117,6 +120,11 @@ large grids (README section Scaling). For `serve`, k=v pairs configure the
 service (queue_depth, max_body_bytes, arranged_max_n, trace, ...).
 `--trace-file PATH` (sort) records the run's span tree — phases, tiles,
 step kernels — as Chrome trace-event JSON; open it in chrome://tracing.
+`--profile-file PATH` (sort) folds the same span tree into collapsed
+stacks (`path;to;span self_us` per line) for flamegraph.pl / speedscope.
+For `serve`, `--trace-sample K` traces 1 in K requests (0 disables
+tracing, 1 traces everything — the default) and `--trace-keep N` sizes
+the finished-trace LRU behind GET /v1/trace/<id>.
 ";
 
 /// Full usage text: the static grammar plus the live method list from the
@@ -270,6 +278,25 @@ mod tests {
         assert_eq!(a.opt("trace-file"), Some("/tmp/trace.json"));
         assert!(a.positional.is_empty());
         assert!(usage().contains("--trace-file"));
+    }
+
+    #[test]
+    fn profile_file_takes_a_value() {
+        let a = parse(&["sort", "--profile-file", "/tmp/p.folded", "--method", "sss"]);
+        assert_eq!(a.opt("profile-file"), Some("/tmp/p.folded"));
+        assert!(a.positional.is_empty());
+        assert!(usage().contains("--profile-file"));
+    }
+
+    #[test]
+    fn serve_sampling_options_take_values() {
+        let a = parse(&["serve", "--trace-sample", "8", "--trace-keep", "256"]);
+        assert_eq!(a.opt_usize("trace-sample", 1).unwrap(), 8);
+        assert_eq!(a.opt_usize("trace-keep", 128).unwrap(), 256);
+        assert!(a.positional.is_empty());
+        for flag in ["--trace-sample", "--trace-keep"] {
+            assert!(usage().contains(flag), "usage() missing {flag}");
+        }
     }
 
     #[test]

@@ -425,6 +425,16 @@ pub struct ServeConfig {
     /// telemetry feeds the `/metrics` histograms. On by default — the
     /// per-step cost when a request is untraced is a relaxed atomic load.
     pub trace: bool,
+    /// Head-based trace sampling (`--trace-sample K`): a deterministic
+    /// counter at serve accept traces 1 in K requests. 0 disables tracing
+    /// entirely (like `trace=false`), 1 — the default — traces every
+    /// request. Untraced requests take the single load-and-branch path,
+    /// bit-identically; sampled ones also fold into `GET /v1/profile`.
+    pub trace_sample: u64,
+    /// Finished traces kept for `GET /v1/trace/<id>` lookup before LRU
+    /// eviction (`--trace-keep N`, minimum 1); evictions are counted in
+    /// `/metrics`.
+    pub trace_keep: usize,
 }
 
 impl Default for ServeConfig {
@@ -445,6 +455,8 @@ impl Default for ServeConfig {
             auth_token: None,
             stream_min_n: 4096,
             trace: true,
+            trace_sample: 1,
+            trace_keep: crate::trace::DEFAULT_FINISHED_CAP,
         }
     }
 }
@@ -470,10 +482,13 @@ impl ServeConfig {
             }
             "stream_min_n" => self.stream_min_n = value.parse()?,
             "trace" => self.trace = value.parse()?,
+            "trace_sample" => self.trace_sample = value.parse()?,
+            "trace_keep" => self.trace_keep = value.parse::<usize>()?.max(1),
             _ => bail!(
                 "unknown serve config key '{key}' (allowed: addr, workers, cache_mb, \
                  queue_depth, max_body_bytes, keep_alive_secs, arranged_max_n, shards, \
-                 cache_file, rate_limit, auth_token, stream_min_n, trace)"
+                 cache_file, rate_limit, auth_token, stream_min_n, trace, trace_sample, \
+                 trace_keep)"
             ),
         }
         Ok(())
@@ -850,6 +865,26 @@ mod tests {
         c.set("trace", "true").unwrap();
         assert!(c.trace);
         assert!(c.set("trace", "sometimes").is_err());
+    }
+
+    #[test]
+    fn serve_config_sampling_and_keep_keys() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.trace_sample, 1, "default samples every request");
+        assert_eq!(c.trace_keep, crate::trace::DEFAULT_FINISHED_CAP);
+        c.set("trace_sample", "8").unwrap();
+        assert_eq!(c.trace_sample, 8);
+        c.set("trace_sample", "0").unwrap();
+        assert_eq!(c.trace_sample, 0, "0 = tracing off");
+        assert!(c.set("trace_sample", "-1").is_err());
+        c.set("trace_keep", "512").unwrap();
+        assert_eq!(c.trace_keep, 512);
+        // 0 would make every finished trace immediately evictable.
+        c.set("trace_keep", "0").unwrap();
+        assert_eq!(c.trace_keep, 1);
+        let err = c.set("nope", "1").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("trace_sample") && msg.contains("trace_keep"));
     }
 
     #[test]

@@ -92,10 +92,13 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
         }
     };
 
-    // `--trace-file PATH`: record the run's span tree (phases, tiles,
-    // step kernels) and write it as Chrome trace-event JSON.
+    // `--trace-file PATH` / `--profile-file PATH`: record the run's span
+    // tree (phases, tiles, step kernels) once, then write it as Chrome
+    // trace-event JSON and/or a collapsed-stack folded profile.
     let trace_file = args.opt("trace-file");
-    if trace_file.is_some() {
+    let profile_file = args.opt("profile-file");
+    let tracing = trace_file.is_some() || profile_file.is_some();
+    if tracing {
         trace::enable();
     }
 
@@ -108,8 +111,7 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
             spec.name,
             engine.workers().min(batch)
         );
-        let root =
-            if trace_file.is_some() { trace::Span::root("sort_batch") } else { trace::Span::off() };
+        let root = if tracing { trace::Span::root("sort_batch") } else { trace::Span::off() };
         let results = {
             let _cur = root.make_current();
             engine.sort_batch(spec.name, &datasets, g, &overrides)
@@ -131,8 +133,8 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
                 }
             }
         }
-        if let (Some(path), Some(id)) = (trace_file, trace_id) {
-            write_trace_file(path, id)?;
+        if let Some(id) = trace_id {
+            write_trace_outputs(trace_file, profile_file, id)?;
         }
         if failed > 0 {
             bail!("{failed}/{batch} batch items failed");
@@ -148,7 +150,7 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
     let base_dpq = dpq16(&dataset.rows, dataset.d, g);
     println!("unsorted: nbr={base_nbr:.4} dpq16={base_dpq:.3}");
 
-    let mut root = if trace_file.is_some() { trace::Span::root("sort") } else { trace::Span::off() };
+    let mut root = if tracing { trace::Span::root("sort") } else { trace::Span::off() };
     let outcome = {
         let _cur = root.make_current();
         engine.sort(spec.name, &dataset, g, &overrides)?
@@ -168,27 +170,41 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
     if let Some(dir) = args.opt("out") {
         write_outputs(dir, spec.name, g, "", &outcome, dataset.d)?;
     }
-    if let (Some(path), Some(id)) = (trace_file, trace_id) {
-        write_trace_file(path, id)?;
+    if let Some(id) = trace_id {
+        write_trace_outputs(trace_file, profile_file, id)?;
     }
     Ok(())
 }
 
-/// Assemble the finished trace and write it in Chrome trace-event form.
-fn write_trace_file(path: &str, trace_id: u64) -> Result<()> {
+/// Assemble the finished trace once and write every requested artifact
+/// from it: Chrome trace-event JSON (`--trace-file`) and/or a
+/// collapsed-stack folded profile (`--profile-file`).
+fn write_trace_outputs(
+    trace_file: Option<&str>,
+    profile_file: Option<&str>,
+    trace_id: u64,
+) -> Result<()> {
     let t = trace::finish(trace_id).ok_or_else(|| {
         anyhow!("trace {} recorded no spans", trace::format_trace_id(trace_id))
     })?;
-    std::fs::write(path, json::to_string_pretty(&trace::chrome_trace_json(&t)))?;
-    let dropped = if t.dropped > 0 {
-        format!(", {} dropped", t.dropped)
-    } else {
-        String::new()
-    };
-    println!(
-        "wrote {path} ({} spans{dropped}; open in chrome://tracing or Perfetto)",
-        t.spans.len()
-    );
+    if let Some(path) = trace_file {
+        std::fs::write(path, json::to_string_pretty(&trace::chrome_trace_json(&t)))?;
+        let dropped = if t.dropped > 0 {
+            format!(", {} dropped", t.dropped)
+        } else {
+            String::new()
+        };
+        println!(
+            "wrote {path} ({} spans{dropped}; open in chrome://tracing or Perfetto)",
+            t.spans.len()
+        );
+    }
+    if let Some(path) = profile_file {
+        let p = trace::profile::Profile::new();
+        p.observe(&t);
+        std::fs::write(path, p.folded())?;
+        println!("wrote {path} ({} stacks; feed to flamegraph.pl or speedscope)", p.len());
+    }
     Ok(())
 }
 
@@ -241,6 +257,8 @@ fn cmd_serve(args: &ParsedArgs) -> Result<()> {
     if let Some(token) = args.opt("auth-token") {
         cfg.auth_token = (!token.is_empty()).then(|| token.to_string());
     }
+    cfg.trace_sample = args.opt_usize("trace-sample", cfg.trace_sample as usize)? as u64;
+    cfg.trace_keep = args.opt_usize("trace-keep", cfg.trace_keep)?.max(1);
     // Dedicated flags first, bare `k=v` pairs after: overrides win.
     for (k, v) in &args.overrides {
         cfg.set(k, v)?;

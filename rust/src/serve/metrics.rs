@@ -11,7 +11,7 @@
 //! into a [`ServeView`] per scrape and passes that in, keeping `Metrics`
 //! free of references into the rest of the server.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -24,12 +24,55 @@ use crate::trace;
 pub const BUCKET_BOUNDS: [f64; 12] =
     [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0];
 
-/// One latency histogram (fixed log-spaced buckets + overflow).
+/// Samples kept by each histogram's sliding-window quantile sketch. The
+/// memory is fixed (`WINDOW_CAP` f64s per histogram); quantiles are exact
+/// over the last `WINDOW_CAP` observations rather than bucket-rounded
+/// over all of them.
+pub const WINDOW_CAP: usize = 512;
+
+/// Fixed-memory ring of the most recent observations (the quantile
+/// sketch behind p50/p95/p99).
+#[derive(Default)]
+struct Window {
+    buf: Vec<f64>,
+    next: usize,
+}
+
+impl Window {
+    fn push(&mut self, v: f64) {
+        if self.buf.len() < WINDOW_CAP {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+        }
+        self.next = (self.next + 1) % WINDOW_CAP;
+    }
+
+    /// Exact quantiles over the window: `(p50, p95, p99)` in the sample
+    /// unit, `None` while empty.
+    fn quantiles(&self) -> Option<(f64, f64, f64)> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let mut sorted = self.buf.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let at = |q: f64| {
+            let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+            sorted[idx.min(sorted.len() - 1)]
+        };
+        Some((at(0.5), at(0.95), at(0.99)))
+    }
+}
+
+/// One latency histogram: fixed log-spaced buckets + overflow (the
+/// cumulative Prometheus exposition), plus a sliding [`Window`] for exact
+/// recent p50/p95/p99.
 #[derive(Default)]
 pub struct Histogram {
     buckets: [AtomicU64; BUCKET_BOUNDS.len() + 1],
     sum_micros: AtomicU64,
     count: AtomicU64,
+    window: Mutex<Window>,
 }
 
 /// Index of the +Inf overflow bucket.
@@ -41,6 +84,8 @@ impl Histogram {
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.sum_micros.fetch_add((secs * 1e6).max(0.0) as u64, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
+        let mut w = self.window.lock().unwrap_or_else(|e| e.into_inner());
+        w.push(secs);
     }
 
     fn snapshot(&self) -> (Vec<u64>, f64, u64) {
@@ -49,6 +94,11 @@ impl Histogram {
         let sum = self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6;
         let count = self.count.load(Ordering::Relaxed);
         (buckets, sum, count)
+    }
+
+    /// Sliding-window `(p50, p95, p99)` in seconds (`None` while empty).
+    pub fn window_quantiles(&self) -> Option<(f64, f64, f64)> {
+        self.window.lock().unwrap_or_else(|e| e.into_inner()).quantiles()
     }
 
     /// Upper bound of the bucket where the `q`-quantile falls (`None` when
@@ -66,6 +116,39 @@ impl Histogram {
             }
         }
         None
+    }
+}
+
+/// Sort runs kept per method in the convergence sliding window.
+pub const CONV_WINDOW: usize = 256;
+
+/// Sliding-window convergence aggregates for one method: sort *quality*
+/// telemetry, so a regression in loss or rejected-phase rate is as
+/// visible on `/metrics` as a latency regression.
+#[derive(Default)]
+struct ConvWindow {
+    /// Total runs folded in (beyond the window).
+    runs: u64,
+    loss: VecDeque<f64>,
+    rejected_rate: VecDeque<f64>,
+    /// Only runs that computed a DPQ land here (heuristics and
+    /// small-N paths may not).
+    dpq: VecDeque<f64>,
+}
+
+impl ConvWindow {
+    fn push(dq: &mut VecDeque<f64>, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        if dq.len() == CONV_WINDOW {
+            dq.pop_front();
+        }
+        dq.push_back(v);
+    }
+
+    fn mean(dq: &VecDeque<f64>) -> Option<f64> {
+        (!dq.is_empty()).then(|| dq.iter().sum::<f64>() / dq.len() as f64)
     }
 }
 
@@ -91,6 +174,10 @@ pub struct ServeView {
     pub shards: Vec<ShardView>,
     /// `None` when the server runs without `--cache-file`.
     pub persist: Option<PersistView>,
+    /// Finished-trace LRU capacity in effect (`--trace-keep`).
+    pub trace_keep: u64,
+    /// Finished traces evicted from the LRU since process start.
+    pub trace_evictions: u64,
 }
 
 /// All live counters for one server instance.
@@ -129,6 +216,9 @@ pub struct Metrics {
     step_family_micros: [AtomicU64; trace::FAMILY_NAMES.len()],
     step_family_steps: [AtomicU64; trace::FAMILY_NAMES.len()],
     latency: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    /// Per-method sliding-window convergence aggregates, fed by the engine
+    /// hosts after every completed sort ([`Metrics::observe_convergence`]).
+    convergence: Mutex<BTreeMap<String, ConvWindow>>,
     started: Instant,
 }
 
@@ -159,8 +249,33 @@ impl Metrics {
             step_family_micros: Default::default(),
             step_family_steps: Default::default(),
             latency: Mutex::new(BTreeMap::new()),
+            convergence: Mutex::new(BTreeMap::new()),
             started: Instant::now(),
         }
+    }
+
+    /// Seconds since this server's metrics were created (≈ boot).
+    pub fn uptime_seconds(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Fold one completed sort's quality telemetry into the per-method
+    /// convergence window. `dpq` may be non-finite (not computed for this
+    /// run) — it is skipped while loss/rejected-rate still count.
+    pub fn observe_convergence(&self, method: &str, loss: f64, rejected_rate: f64, dpq: f64) {
+        let mut map = self.lock_convergence();
+        let w = map.entry(method.to_string()).or_default();
+        w.runs += 1;
+        ConvWindow::push(&mut w.loss, loss);
+        ConvWindow::push(&mut w.rejected_rate, rejected_rate);
+        ConvWindow::push(&mut w.dpq, dpq);
+    }
+
+    fn lock_convergence(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, ConvWindow>> {
+        self.convergence.lock().unwrap_or_else(|poisoned| {
+            self.convergence.clear_poison();
+            poisoned.into_inner()
+        })
     }
 
     /// Fold a finished trace into the convergence-telemetry aggregates:
@@ -258,13 +373,44 @@ impl Metrics {
                 .map(|b| num(b * 1e3))
                 .unwrap_or(Json::Null)
         };
+        // Bucket-bound quantiles cover the full history; the window
+        // triple is exact over the last `WINDOW_CAP` observations.
+        let (p50, p95, p99) = match h.window_quantiles() {
+            Some((a, b, c)) => (num(a * 1e3), num(b * 1e3), num(c * 1e3)),
+            None => (Json::Null, Json::Null, Json::Null),
+        };
         obj([
             ("count", Json::from(count)),
             ("mean_ms", num(mean * 1e3)),
             ("p50_le_ms", quant(0.5)),
             ("p99_le_ms", quant(0.99)),
+            ("p50_ms", p50),
+            ("p95_ms", p95),
+            ("p99_ms", p99),
             ("buckets", arr(buckets.into_iter().map(Json::from))),
         ])
+    }
+
+    /// JSON object of the per-method convergence windows.
+    fn convergence_json(&self) -> Json {
+        let map = self.lock_convergence();
+        let items: Vec<(String, Json)> = map
+            .iter()
+            .map(|(name, w)| {
+                let field = |dq| ConvWindow::mean(dq).map(num).unwrap_or(Json::Null);
+                (
+                    name.clone(),
+                    obj([
+                        ("runs", Json::from(w.runs)),
+                        ("window", Json::from(w.loss.len())),
+                        ("mean_loss", field(&w.loss)),
+                        ("rejected_phase_rate", field(&w.rejected_rate)),
+                        ("mean_dpq", field(&w.dpq)),
+                    ]),
+                )
+            })
+            .collect();
+        obj(items)
     }
 
     /// JSON view (served by default from `GET /metrics`).
@@ -337,6 +483,14 @@ impl Metrics {
                     ("tile_exec", Self::hist_json(&self.tile_exec)),
                 ]),
             ),
+            (
+                "trace",
+                obj([
+                    ("keep", Json::from(view.trace_keep)),
+                    ("finished_evictions", Json::from(view.trace_evictions)),
+                ]),
+            ),
+            ("convergence", self.convergence_json()),
             ("step_families", step_families),
             ("latency_seconds_bucket_bounds", arr(BUCKET_BOUNDS.iter().map(|&b| num(b)))),
             ("latency", latency),
@@ -362,6 +516,8 @@ impl Metrics {
         metric("cache_entries", "gauge", view.cache_entries as u64);
         metric("cache_bytes", "gauge", view.cache_bytes as u64);
         metric("queue_depth", "gauge", view.queue_depth as u64);
+        metric("trace_keep", "gauge", view.trace_keep);
+        metric("trace_finished_evictions_total", "counter", view.trace_evictions);
         if let Some(p) = &view.persist {
             metric("cache_persist_appends_total", "counter", p.appends);
             metric("cache_persist_replayed_total", "counter", p.replayed);
@@ -425,6 +581,18 @@ impl Metrics {
                 "sssort_sort_duration_seconds_count{{method=\"{name}\"}} {count}\n"
             ));
         }
+        // Sliding-window quantiles as a separate gauge family (the
+        // histogram family above stays pure `_bucket/_sum/_count`).
+        out.push_str("# TYPE sssort_sort_duration_seconds_window gauge\n");
+        for (name, h) in map.iter() {
+            if let Some((p50, p95, p99)) = h.window_quantiles() {
+                for (q, v) in [("0.5", p50), ("0.95", p95), ("0.99", p99)] {
+                    out.push_str(&format!(
+                        "sssort_sort_duration_seconds_window{{method=\"{name}\",quantile=\"{q}\"}} {v}\n"
+                    ));
+                }
+            }
+        }
         drop(map);
         for (name, h) in [
             ("queue_wait_seconds", &self.queue_wait),
@@ -432,6 +600,36 @@ impl Metrics {
             ("tile_exec_seconds", &self.tile_exec),
         ] {
             push_histogram(&mut out, name, h);
+            if let Some((p50, p95, p99)) = h.window_quantiles() {
+                out.push_str(&format!("# TYPE sssort_{name}_window gauge\n"));
+                for (q, v) in [("0.5", p50), ("0.95", p95), ("0.99", p99)] {
+                    out.push_str(&format!(
+                        "sssort_{name}_window{{quantile=\"{q}\"}} {v}\n"
+                    ));
+                }
+            }
+        }
+        {
+            let conv = self.lock_convergence();
+            if !conv.is_empty() {
+                let families: [(&str, fn(&ConvWindow) -> Option<f64>); 3] = [
+                    ("convergence_mean_loss", |w: &ConvWindow| ConvWindow::mean(&w.loss)),
+                    ("convergence_rejected_phase_rate", |w: &ConvWindow| {
+                        ConvWindow::mean(&w.rejected_rate)
+                    }),
+                    ("convergence_mean_dpq", |w: &ConvWindow| ConvWindow::mean(&w.dpq)),
+                ];
+                for (name, value) in families {
+                    out.push_str(&format!("# TYPE sssort_{name} gauge\n"));
+                    for (method, w) in conv.iter() {
+                        if let Some(v) = value(w) {
+                            out.push_str(&format!(
+                                "sssort_{name}{{method=\"{method}\"}} {v}\n"
+                            ));
+                        }
+                    }
+                }
+            }
         }
         out.push_str("# TYPE sssort_step_family_seconds_total counter\n");
         for (i, fam) in trace::FAMILY_NAMES.iter().enumerate() {
@@ -508,6 +706,8 @@ mod tests {
                 errors: 0,
                 file_bytes: 4096,
             }),
+            trace_keep: 128,
+            trace_evictions: 3,
         }
     }
 
@@ -647,5 +847,105 @@ mod tests {
             text.contains("sssort_step_family_seconds_total{family=\"adam_step\"} 0.001"),
             "{text}"
         );
+    }
+
+    #[test]
+    fn window_quantiles_are_exact_over_recent_samples() {
+        let h = Histogram::default();
+        assert_eq!(h.window_quantiles(), None, "empty window has no quantiles");
+        for i in 1..=100 {
+            h.observe(i as f64 / 1000.0); // 1ms..100ms
+        }
+        let (p50, p95, p99) = h.window_quantiles().unwrap();
+        assert!((p50 - 0.0505).abs() < 0.002, "p50={p50}");
+        assert!((p95 - 0.095).abs() < 0.002, "p95={p95}");
+        assert!((p99 - 0.099).abs() < 0.002, "p99={p99}");
+        // The window slides: WINDOW_CAP large samples push the small ones
+        // out, so p50 tracks the recent distribution, not the lifetime one.
+        for _ in 0..WINDOW_CAP {
+            h.observe(2.0);
+        }
+        let (p50, _, p99) = h.window_quantiles().unwrap();
+        assert_eq!(p50, 2.0);
+        assert_eq!(p99, 2.0);
+    }
+
+    #[test]
+    fn percentiles_export_in_json_and_prometheus() {
+        let m = Metrics::new();
+        for i in 0..50 {
+            m.queue_wait.observe(0.001 + i as f64 * 0.0001);
+            m.observe("shuffle-softsort", 0.01 + i as f64 * 0.001);
+        }
+        let view = ServeView::default();
+        let j = m.to_json(&view);
+        let qw = j.get("spans").unwrap().get("queue_wait").unwrap();
+        for key in ["p50_ms", "p95_ms", "p99_ms"] {
+            assert!(qw.get(key).unwrap().as_f64().unwrap() > 0.0, "{key}");
+        }
+        let lat = j.get("latency").unwrap().get("shuffle-softsort").unwrap();
+        assert!(lat.get("p95_ms").unwrap().as_f64().unwrap() > 0.0);
+
+        let text = m.to_prometheus(&view);
+        assert!(text.contains("sssort_queue_wait_seconds_window{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("sssort_queue_wait_seconds_window{quantile=\"0.99\"}"), "{text}");
+        assert!(
+            text.contains(
+                "sssort_sort_duration_seconds_window{method=\"shuffle-softsort\",quantile=\"0.95\"}"
+            ),
+            "{text}"
+        );
+        // Untouched histograms export no quantile lines at all.
+        assert!(!text.contains("sssort_tile_exec_seconds_window"), "{text}");
+    }
+
+    #[test]
+    fn convergence_windows_aggregate_per_method() {
+        let m = Metrics::new();
+        m.observe_convergence("shuffle-softsort", 0.2, 0.125, 0.9);
+        m.observe_convergence("shuffle-softsort", 0.4, 0.375, 0.7);
+        // DPQ not computed for this run: loss still counts.
+        m.observe_convergence("softsort", 0.1, 0.0, f64::NAN);
+
+        let view = ServeView::default();
+        let j = m.to_json(&view);
+        let conv = j.get("convergence").unwrap();
+        let sss = conv.get("shuffle-softsort").unwrap();
+        assert_eq!(sss.get("runs").unwrap().as_usize(), Some(2));
+        assert!((sss.get("mean_loss").unwrap().as_f64().unwrap() - 0.3).abs() < 1e-9);
+        assert!((sss.get("rejected_phase_rate").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
+        assert!((sss.get("mean_dpq").unwrap().as_f64().unwrap() - 0.8).abs() < 1e-9);
+        let ss = conv.get("softsort").unwrap();
+        assert!(matches!(ss.get("mean_dpq"), Some(Json::Null)), "NaN DPQ is skipped");
+        assert!((ss.get("mean_loss").unwrap().as_f64().unwrap() - 0.1).abs() < 1e-9);
+
+        let text = m.to_prometheus(&view);
+        assert!(
+            text.contains("sssort_convergence_mean_loss{method=\"shuffle-softsort\"} 0.3"),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "sssort_convergence_rejected_phase_rate{method=\"shuffle-softsort\"} 0.25"
+            ),
+            "{text}"
+        );
+        assert!(
+            !text.contains("sssort_convergence_mean_dpq{method=\"softsort\"}"),
+            "no DPQ line for a method that never computed one: {text}"
+        );
+    }
+
+    #[test]
+    fn trace_lru_counters_export() {
+        let m = Metrics::new();
+        let view = view_with_shards();
+        let j = m.to_json(&view);
+        let tr = j.get("trace").unwrap();
+        assert_eq!(tr.get("keep").unwrap().as_usize(), Some(128));
+        assert_eq!(tr.get("finished_evictions").unwrap().as_usize(), Some(3));
+        let text = m.to_prometheus(&view);
+        assert!(text.contains("sssort_trace_keep 128"), "{text}");
+        assert!(text.contains("sssort_trace_finished_evictions_total 3"), "{text}");
     }
 }

@@ -50,7 +50,10 @@
 //! (registry-driven, reflects plugin methods), `GET /healthz`,
 //! `GET /metrics` (JSON, or Prometheus text via `?format=prometheus` /
 //! `Accept: text/plain`), `GET /v1/trace/<id>` (span tree of a recent
-//! traced request; `?format=chrome` for chrome://tracing). Errors are JSON bodies with matching 4xx/5xx
+//! traced request; `?format=chrome` for chrome://tracing), and
+//! `GET /v1/profile` (collapsed-stack profile of every head-sampled
+//! request — `--trace-sample K` traces 1 in K; `?format=folded` for
+//! flamegraph.pl/speedscope input). Errors are JSON bodies with matching 4xx/5xx
 //! statuses. With `--auth-token` every endpoint except `/healthz`
 //! requires `Authorization: Bearer <token>`; `--rate-limit` adds a
 //! per-client token bucket. See README §Serving for `curl` examples.
@@ -68,7 +71,7 @@ pub mod stream;
 use std::io::BufReader;
 use std::net::{IpAddr, SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -204,6 +207,34 @@ struct Ctx {
     pool: Arc<ShardPool>,
     store: Option<Arc<Store>>,
     limiter: Option<RateLimiter>,
+    /// Requests seen by the head-based sampler (only counted when
+    /// `1 < trace_sample`); request `i` is traced iff `i % K == 0`.
+    sample_counter: AtomicU64,
+    /// Folded-stack profile accumulated from every sampled request's
+    /// finished trace (`GET /v1/profile`).
+    profile: trace::profile::Profile,
+}
+
+impl Ctx {
+    /// Effective tracing switch: `trace=false` and `trace_sample=0` both
+    /// mean "never trace" (no root spans, `/v1/trace` + `/v1/profile` 404).
+    fn tracing_enabled(&self) -> bool {
+        self.cfg.trace && self.cfg.trace_sample > 0
+    }
+
+    /// The once-per-request head sampling decision, made at accept. A
+    /// deterministic counter (not randomness) so exactly ⌈R/K⌉ of R
+    /// requests trace, starting with the first.
+    fn sample_request(&self) -> bool {
+        if !self.cfg.trace {
+            return false;
+        }
+        match self.cfg.trace_sample {
+            0 => false,
+            1 => true,
+            k => self.sample_counter.fetch_add(1, Ordering::Relaxed) % k == 0,
+        }
+    }
 }
 
 /// A running server; dropping it shuts it down.
@@ -270,9 +301,12 @@ pub fn start(cfg: ServeConfig, spec: EngineSpec) -> Result<Server> {
     let shutdown = Arc::new(AtomicBool::new(false));
     // The flag is process-global and serve only ever *enables* it (there
     // may be other traced work in-process); per-request gating stays on
-    // `cfg.trace`. Disabled-path cost elsewhere: one relaxed load.
-    if cfg.trace {
+    // the sampling decision. Disabled-path cost elsewhere: one relaxed
+    // load. `trace_sample=0` keeps the flag untouched so every span
+    // constructor short-circuits on that single load.
+    if cfg.trace && cfg.trace_sample > 0 {
         trace::enable();
+        trace::set_finished_cap(cfg.trace_keep);
     }
     let metrics = Arc::new(Metrics::new());
     let mut cache = ResultCache::new(
@@ -307,6 +341,8 @@ pub fn start(cfg: ServeConfig, spec: EngineSpec) -> Result<Server> {
         pool: pool.clone(),
         store,
         limiter,
+        sample_counter: AtomicU64::new(0),
+        profile: trace::profile::Profile::new(),
     });
     let mut workers = Vec::with_capacity(cfg.workers.max(1));
     for i in 0..cfg.workers.max(1) {
@@ -475,8 +511,11 @@ fn handle(ctx: &Ctx, req: &Request, peer: IpAddr) -> Response {
     // the same header merge their spans into one trace (or deliberately
     // overwrite another request's finished entry). A client-supplied
     // `X-Trace-Id` rides along as a correlation attribute instead.
-    // `trace=off` servers skip all of it.
-    let mut root = if ctx.cfg.trace {
+    // Head-based sampling decides here, once per request: unsampled
+    // requests get the inert span, so every downstream instrumentation
+    // point (shard_route, queue_wait, engine_job, phases, tiles, step
+    // clocks) sees `None` and stays on the load-and-branch path.
+    let mut root = if ctx.sample_request() {
         trace::Span::root("request")
     } else {
         trace::Span::off()
@@ -498,10 +537,12 @@ fn handle(ctx: &Ctx, req: &Request, peer: IpAddr) -> Response {
     root.end();
     match trace_id {
         Some(id) => {
-            // Assemble now — every span of this request has ended — and
-            // fold the convergence telemetry into /metrics.
+            // Assemble now — every span of this request has ended — fold
+            // the span-derived telemetry into /metrics and the collapsed
+            // stacks into the continuous profile.
             if let Some(t) = trace::finish(id) {
                 ctx.metrics.observe_trace(&t);
+                ctx.profile.observe(&t);
             }
             resp.with_header("X-Trace-Id", trace::format_trace_id(id))
         }
@@ -550,6 +591,7 @@ fn route(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
         ("GET", "/healthz"),
         ("GET", "/v1/methods"),
         ("GET", "/metrics"),
+        ("GET", "/v1/profile"),
         ("POST", "/v1/sort"),
         ("POST", "/v1/sort_batch"),
     ];
@@ -557,6 +599,7 @@ fn route(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
         ("GET", "/healthz") => Ok(healthz(ctx)),
         ("GET", "/v1/methods") => Ok(methods(ctx)),
         ("GET", "/metrics") => Ok(metrics_view(ctx, req)),
+        ("GET", "/v1/profile") => profile_view(ctx, req),
         ("POST", "/v1/sort") => sort_single(ctx, req),
         ("POST", "/v1/sort_batch") => sort_batch(ctx, req),
         (m, path) if path.starts_with("/v1/trace/") => {
@@ -591,6 +634,8 @@ fn route(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
 fn healthz(ctx: &Ctx) -> Response {
     let shards = ctx.pool.shard_count();
     let alive = ctx.pool.alive_count();
+    // uptime + build info let probes tell a fresh restart from a
+    // long-running degraded host (and pin down *what* is running where).
     Response::json(
         200,
         obj([
@@ -599,6 +644,10 @@ fn healthz(ctx: &Ctx) -> Response {
             ("queue_depth", Json::from(ctx.pool.total_depth())),
             ("shards", Json::from(shards)),
             ("shards_alive", Json::from(alive)),
+            ("uptime_seconds", num(ctx.metrics.uptime_seconds())),
+            ("version", Json::from(env!("CARGO_PKG_VERSION"))),
+            ("simd", Json::from(crate::backend::simd::detected().name())),
+            ("trace_sample", Json::from(if ctx.cfg.trace { ctx.cfg.trace_sample } else { 0 })),
         ])
         .to_string_compact(),
     )
@@ -633,9 +682,9 @@ fn spec_json(s: &'static MethodSpec) -> Json {
 /// the flat span list; `?format=chrome` returns Chrome trace-event JSON
 /// (load in `chrome://tracing` / Perfetto).
 fn trace_view(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
-    if !ctx.cfg.trace {
+    if !ctx.tracing_enabled() {
         return Err(ApiError::not_found(
-            "tracing is disabled on this server (start with trace=on)",
+            "tracing is disabled on this server (start with trace=on and trace_sample>0)",
         ));
     }
     let rest = req.path.strip_prefix("/v1/trace/").unwrap_or("");
@@ -659,6 +708,35 @@ fn trace_view(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
     Ok(Response::json(200, json::to_string_pretty(&doc)))
 }
 
+/// `GET /v1/profile` — the continuous profile: collapsed stacks folded
+/// from every sampled request since boot (or the last `?reset=1`).
+/// `?format=folded` returns Brendan Gregg folded text (paste into
+/// `flamegraph.pl` or speedscope); the default is a JSON projection with
+/// per-path self/total time. `?reset=1` clears the accumulator *after*
+/// rendering, so a scrape-and-reset loop never loses a window.
+fn profile_view(ctx: &Ctx, req: &Request) -> Result<Response, ApiError> {
+    if !ctx.tracing_enabled() {
+        return Err(ApiError::not_found(
+            "profiling is disabled on this server (start with trace=on and trace_sample>0)",
+        ));
+    }
+    let resp = match req.query_param("format") {
+        Some("folded") => Response::text(200, ctx.profile.folded()),
+        None | Some("json") => {
+            Response::json(200, json::to_string_pretty(&ctx.profile.to_json()))
+        }
+        Some(other) => {
+            return Err(ApiError::bad_request(format!(
+                "unknown profile format '{other}' (expected folded or json)"
+            )))
+        }
+    };
+    if req.query_param("reset") == Some("1") {
+        ctx.profile.reset();
+    }
+    Ok(resp)
+}
+
 fn metrics_view(ctx: &Ctx, req: &Request) -> Response {
     let (entries, bytes) = ctx.cache.stats();
     let view = ServeView {
@@ -667,6 +745,8 @@ fn metrics_view(ctx: &Ctx, req: &Request) -> Response {
         queue_depth: ctx.pool.total_depth(),
         shards: ctx.pool.snapshots(),
         persist: ctx.store.as_ref().map(|s| s.view()),
+        trace_keep: ctx.cfg.trace_keep as u64,
+        trace_evictions: trace::finished_evictions(),
     };
     let prometheus = req.query_param("format") == Some("prometheus")
         || req.header("accept").is_some_and(|a| a.contains("text/plain"));

@@ -273,6 +273,19 @@ fn spawn_engine_host(
         .expect("spawn engine host thread")
 }
 
+/// Feed a finished sort's convergence summary into the sliding per-method
+/// windows behind `/metrics`: mean final loss, the fraction of phases the
+/// acceptance gate rejected, and DPQ when the method computes one (NaN is
+/// skipped inside the window).
+fn note_convergence(
+    metrics: &Metrics,
+    method: &str,
+    report: &crate::coordinator::events::RunReport,
+) {
+    let rejected_rate = report.rejected_phases as f64 / report.phases.max(1) as f64;
+    metrics.observe_convergence(method, report.final_loss, rejected_rate, report.final_dpq);
+}
+
 /// Observe a popped job's queue wait: always into the histogram, and as a
 /// `queue_wait` span when the request is traced. Returns the pop instant.
 fn note_queue_wait(
@@ -319,6 +332,7 @@ fn host_loop(
                         metrics
                             .phase_tiles
                             .fetch_add(out.report.tiles as u64, Ordering::Relaxed);
+                        note_convergence(metrics, &j.method, &out.report);
                         warm_session(&engine, &registry, &j.method, j.grid, j.dataset.d, stats);
                         out.report.trace_attrs(&mut jspan);
                         Ok(out)
@@ -356,6 +370,7 @@ fn host_loop(
                             metrics
                                 .phase_tiles
                                 .fetch_add(out.report.tiles as u64, Ordering::Relaxed);
+                            note_convergence(metrics, &j.method, &out.report);
                         }
                         if let Some(d) = j.datasets.first().map(|ds| ds.d) {
                             warm_session(&engine, &registry, &j.method, j.grid, d, stats);

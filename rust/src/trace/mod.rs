@@ -30,9 +30,11 @@
 //! [`Span::child_of`]; same-thread nesting can use the thread-local
 //! current stack ([`Span::make_current`] / [`Span::child`]).
 
+pub mod profile;
+
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::time::{Duration, Instant};
 
@@ -41,8 +43,8 @@ use crate::serve::json::{self as json, Json};
 /// Per-thread ring capacity in records (~2048 × ~200 B per thread that
 /// records at least once).
 pub const RING_CAP: usize = 2048;
-/// Finished traces kept for `GET /v1/trace/<id>` (LRU eviction).
-const FINISHED_CAP: usize = 128;
+/// Default finished-trace LRU capacity (`--trace-keep` overrides at boot).
+pub const DEFAULT_FINISHED_CAP: usize = 128;
 /// Distinct unfinished traces the pending map will hold between drains;
 /// inserting beyond this evicts the oldest pending trace (its span count
 /// lands in the next finished trace's `dropped`).
@@ -54,6 +56,28 @@ pub const MAX_ATTRS: usize = 8;
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
 static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+static FINISHED_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_FINISHED_CAP);
+static FINISHED_EVICTIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Finished traces kept for `GET /v1/trace/<id>` (LRU eviction). Runtime
+/// value of the `--trace-keep` serve knob; defaults to
+/// [`DEFAULT_FINISHED_CAP`].
+pub fn finished_cap() -> usize {
+    FINISHED_CAP.load(Ordering::Relaxed)
+}
+
+/// Set the finished-trace LRU capacity (clamped to ≥ 1). Called once at
+/// serve boot from `--trace-keep`; existing excess traces age out on the
+/// next [`finish`].
+pub fn set_finished_cap(n: usize) {
+    FINISHED_CAP.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Total finished traces evicted from the LRU since process start
+/// (monotonic; exported by `/metrics`).
+pub fn finished_evictions() -> u64 {
+    FINISHED_EVICTIONS.load(Ordering::Relaxed)
+}
 
 /// Whether tracing is globally enabled (one relaxed load).
 #[inline]
@@ -596,9 +620,10 @@ pub fn finish(trace_id: u64) -> Option<Arc<FinishedTrace>> {
     st.order.retain(|id| *id != trace_id);
     st.finished.insert(trace_id, t.clone());
     st.order.push_back(trace_id);
-    while st.order.len() > FINISHED_CAP {
+    while st.order.len() > finished_cap() {
         if let Some(old) = st.order.pop_front() {
             st.finished.remove(&old);
+            FINISHED_EVICTIONS.fetch_add(1, Ordering::Relaxed);
         }
     }
     Some(t)
@@ -966,7 +991,7 @@ mod tests {
         };
         let polled = mk();
         let idle = mk();
-        for _ in 0..(super::FINISHED_CAP - 1) {
+        for _ in 0..(finished_cap() - 1) {
             mk();
             // Polling bumps recency, so the polled trace outlives the
             // idle one filed after it.
@@ -979,7 +1004,7 @@ mod tests {
     fn lru_evicts_oldest_finished_trace() {
         let _e = Enabled::new();
         let mut first = 0u64;
-        for i in 0..(super::FINISHED_CAP + 4) {
+        for i in 0..(finished_cap() + 4) {
             let root = Span::root("r");
             let ctx = root.ctx().unwrap();
             if i == 0 {
@@ -989,5 +1014,34 @@ mod tests {
             finish(ctx.trace_id).unwrap();
         }
         assert!(get(first).is_none(), "oldest trace evicted");
+    }
+
+    #[test]
+    fn finished_cap_is_runtime_settable_and_evictions_are_counted() {
+        let _e = Enabled::new();
+        let prev_cap = finished_cap();
+        set_finished_cap(0); // clamps to 1
+        assert_eq!(finished_cap(), 1);
+        set_finished_cap(3);
+        let before = finished_evictions();
+        let ids: Vec<u64> = (0..5)
+            .map(|_| {
+                let root = Span::root("r");
+                let id = root.ctx().unwrap().trace_id;
+                root.end();
+                finish(id).unwrap();
+                id
+            })
+            .collect();
+        // Cap 3: the two oldest of the five are gone and counted.
+        assert!(get(ids[0]).is_none());
+        assert!(get(ids[1]).is_none());
+        assert!(get(ids[4]).is_some());
+        assert!(
+            finished_evictions() >= before + 2,
+            "evictions counted: before={before} after={}",
+            finished_evictions()
+        );
+        set_finished_cap(prev_cap);
     }
 }

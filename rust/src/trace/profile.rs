@@ -1,0 +1,284 @@
+//! Span-driven profile aggregator: folds finished span trees into
+//! collapsed-stack profiles (Brendan Gregg's folded format, one line per
+//! unique root→leaf path: `request;engine_job;phase;tile;sss_step 1234`).
+//!
+//! The weight of each line is the path's accumulated *self* time in
+//! microseconds — a span's duration minus the durations of its direct
+//! children (clamped at zero: parallel children, e.g. tiles fanned out
+//! under one phase, can sum past their parent's wall time). That makes the
+//! folded output directly consumable by `flamegraph.pl` or speedscope,
+//! where box width should show where wall-time is actually spent rather
+//! than double-counting every ancestor.
+//!
+//! A [`Profile`] is an ordinary value, not a process-global: the serve
+//! plane owns one per server (fed with every *sampled* request trace and
+//! served at `GET /v1/profile`), the CLI builds a throwaway one for
+//! `--profile-file`, and the bench suite folds its own runs into a
+//! `profile.folded` artifact. Folding runs once per finished trace — off
+//! the request fast path — so a `Mutex<BTreeMap>` is plenty.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::FinishedTrace;
+use crate::serve::json::{self as json, Json};
+
+/// Parent-chain walks stop here: deeper "trees" indicate a parent-id
+/// cycle from dropped records, not a real stack.
+const MAX_DEPTH: usize = 64;
+
+/// Aggregated timings for one unique span-name path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PathStat {
+    /// Spans folded into this path.
+    pub count: u64,
+    /// Sum of the spans' full durations (µs).
+    pub total_us: u64,
+    /// Sum of the spans' durations minus their direct children's (µs).
+    pub self_us: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    stacks: std::collections::BTreeMap<String, PathStat>,
+}
+
+/// Accumulator of folded stacks across many finished traces.
+#[derive(Default)]
+pub struct Profile {
+    inner: Mutex<Inner>,
+    traces: AtomicU64,
+}
+
+impl Profile {
+    pub fn new() -> Profile {
+        Profile::default()
+    }
+
+    /// Fold one finished trace into the profile. Spans whose parent was
+    /// dropped fold as a shorter chain starting at the first reachable
+    /// ancestor — still attributed, never silently skipped.
+    pub fn observe(&self, t: &FinishedTrace) {
+        let spans = &t.spans;
+        let mut index: HashMap<u64, usize> = HashMap::with_capacity(spans.len());
+        for (i, s) in spans.iter().enumerate() {
+            index.insert(s.span_id, i);
+        }
+        // Direct-children duration per span, for self-time.
+        let mut child_us = vec![0u64; spans.len()];
+        for s in spans {
+            if let Some(&p) = index.get(&s.parent_id) {
+                child_us[p] = child_us[p].saturating_add(s.dur_us);
+            }
+        }
+        let mut inner = lock(&self.inner);
+        let mut names: Vec<&str> = Vec::with_capacity(8);
+        for (i, s) in spans.iter().enumerate() {
+            names.clear();
+            names.push(s.name);
+            let mut up = s.parent_id;
+            while up != 0 && names.len() < MAX_DEPTH {
+                let Some(&pi) = index.get(&up) else { break };
+                names.push(spans[pi].name);
+                up = spans[pi].parent_id;
+            }
+            names.reverse();
+            let path = names.join(";");
+            let stat = inner.stacks.entry(path).or_default();
+            stat.count += 1;
+            stat.total_us = stat.total_us.saturating_add(s.dur_us);
+            stat.self_us = stat.self_us.saturating_add(s.dur_us.saturating_sub(child_us[i]));
+        }
+        self.traces.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Traces folded in since creation (or the last [`Profile::reset`]).
+    pub fn traces(&self) -> u64 {
+        self.traces.load(Ordering::Relaxed)
+    }
+
+    /// Unique paths currently held.
+    pub fn len(&self) -> usize {
+        lock(&self.inner).stacks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all accumulated stacks (`GET /v1/profile?reset=1`).
+    pub fn reset(&self) {
+        lock(&self.inner).stacks.clear();
+        self.traces.store(0, Ordering::Relaxed);
+    }
+
+    /// Snapshot as `(path, stat)` pairs, heaviest total time first (ties
+    /// break on the path for determinism).
+    pub fn snapshot(&self) -> Vec<(String, PathStat)> {
+        let mut v: Vec<(String, PathStat)> =
+            lock(&self.inner).stacks.iter().map(|(k, s)| (k.clone(), *s)).collect();
+        v.sort_by(|a, b| b.1.total_us.cmp(&a.1.total_us).then_with(|| a.0.cmp(&b.0)));
+        v
+    }
+
+    /// Brendan Gregg folded format: one `path self_us` line per unique
+    /// path, heaviest first. Paste-ready for `flamegraph.pl` / speedscope.
+    pub fn folded(&self) -> String {
+        let mut out = String::new();
+        for (path, stat) in self.snapshot() {
+            out.push_str(&path);
+            out.push(' ');
+            out.push_str(&stat.self_us.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// JSON projection (`GET /v1/profile?format=json`).
+    pub fn to_json(&self) -> Json {
+        let stacks = self.snapshot().into_iter().map(|(path, stat)| {
+            json::obj([
+                ("stack", Json::from(path)),
+                ("count", Json::from(stat.count)),
+                ("total_us", Json::from(stat.total_us)),
+                ("self_us", Json::from(stat.self_us)),
+            ])
+        });
+        json::obj([
+            ("traces", Json::from(self.traces())),
+            ("stacks", json::arr(stacks)),
+        ])
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{SpanRecord, MAX_ATTRS};
+
+    fn rec(
+        trace_id: u64,
+        span_id: u64,
+        parent_id: u64,
+        name: &'static str,
+        start_us: u64,
+        dur_us: u64,
+    ) -> SpanRecord {
+        SpanRecord {
+            trace_id,
+            span_id,
+            parent_id,
+            name,
+            start_us,
+            dur_us,
+            tid: 1,
+            attrs: [None; MAX_ATTRS],
+        }
+    }
+
+    fn sample_trace() -> FinishedTrace {
+        // request(100) -> engine_job(80) -> {phase(30) -> tile(20), phase#2(40)}
+        FinishedTrace {
+            trace_id: 7,
+            spans: vec![
+                rec(7, 1, 0, "request", 0, 100),
+                rec(7, 2, 1, "engine_job", 5, 80),
+                rec(7, 3, 2, "phase", 10, 30),
+                rec(7, 4, 3, "tile", 12, 20),
+                rec(7, 5, 2, "phase", 45, 40),
+            ],
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn folds_self_and_total_time_per_path() {
+        let p = Profile::new();
+        p.observe(&sample_trace());
+        let stacks: std::collections::HashMap<String, PathStat> =
+            p.snapshot().into_iter().collect();
+        assert_eq!(stacks["request"].total_us, 100);
+        assert_eq!(stacks["request"].self_us, 20); // 100 - 80
+        assert_eq!(stacks["request;engine_job"].self_us, 10); // 80 - 30 - 40
+        // Both phases fold into one path: count 2, total 70, self 70-20.
+        let phase = stacks["request;engine_job;phase"];
+        assert_eq!((phase.count, phase.total_us, phase.self_us), (2, 70, 50));
+        assert_eq!(stacks["request;engine_job;phase;tile"].self_us, 20);
+        assert_eq!(p.traces(), 1);
+    }
+
+    #[test]
+    fn parallel_children_clamp_self_time_at_zero() {
+        let p = Profile::new();
+        // Two 60µs tiles under a 100µs phase (parallel workers): the sum
+        // of children exceeds the parent — self clamps to 0.
+        let t = FinishedTrace {
+            trace_id: 9,
+            spans: vec![
+                rec(9, 1, 0, "phase", 0, 100),
+                rec(9, 2, 1, "tile", 0, 60),
+                rec(9, 3, 1, "tile", 0, 60),
+            ],
+            dropped: 0,
+        };
+        p.observe(&t);
+        let stacks: std::collections::HashMap<String, PathStat> =
+            p.snapshot().into_iter().collect();
+        assert_eq!(stacks["phase"].self_us, 0);
+        assert_eq!(stacks["phase;tile"].self_us, 120);
+    }
+
+    #[test]
+    fn orphan_spans_fold_from_first_reachable_ancestor() {
+        let p = Profile::new();
+        // Span 4's parent (99) was dropped from the ring: it folds as a
+        // root-level "tile" chain instead of vanishing.
+        let t = FinishedTrace {
+            trace_id: 3,
+            spans: vec![rec(3, 1, 0, "request", 0, 10), rec(3, 4, 99, "tile", 2, 5)],
+            dropped: 1,
+        };
+        p.observe(&t);
+        let stacks: std::collections::HashMap<String, PathStat> =
+            p.snapshot().into_iter().collect();
+        assert_eq!(stacks["tile"].count, 1);
+        assert_eq!(stacks["request"].self_us, 10);
+    }
+
+    #[test]
+    fn folded_lines_and_json_round_trip() {
+        let p = Profile::new();
+        p.observe(&sample_trace());
+        p.observe(&sample_trace());
+        let folded = p.folded();
+        let lines: Vec<&str> = folded.lines().collect();
+        assert_eq!(lines.len(), 4);
+        for line in &lines {
+            let (path, weight) = line.rsplit_once(' ').expect("`path weight` shape");
+            assert!(!path.is_empty());
+            weight.parse::<u64>().expect("integer weight");
+        }
+        // Heaviest total first: the request root leads.
+        assert!(lines[0].starts_with("request "));
+        assert!(folded.contains("request;engine_job;phase;tile 40\n"));
+
+        let parsed = Json::parse(&p.to_json().to_string_compact()).unwrap();
+        assert_eq!(parsed.get("traces").and_then(Json::as_f64), Some(2.0));
+        let stacks = parsed.get("stacks").and_then(Json::as_arr).unwrap();
+        assert_eq!(stacks.len(), 4);
+        assert!(stacks.iter().any(|s| {
+            s.get("stack").and_then(Json::as_str) == Some("request;engine_job;phase;tile")
+                && s.get("count").and_then(Json::as_f64) == Some(2.0)
+        }));
+
+        p.reset();
+        assert!(p.is_empty());
+        assert_eq!(p.traces(), 0);
+        assert_eq!(p.folded(), "");
+    }
+}

@@ -1014,3 +1014,212 @@ fn bearer_auth_guards_everything_but_healthz() {
 
     server.shutdown();
 }
+
+#[test]
+fn head_sampling_traces_exactly_one_in_k_requests() {
+    let mut cfg = serve_cfg();
+    cfg.trace_sample = 3;
+    let server = start_server_with(cfg);
+    let addr = server.addr();
+
+    // Six sequential sorts with distinct seeds (all engine jobs). The
+    // deterministic counter samples requests 0 and 3 — exactly ceil(6/3).
+    let mut trace_ids: Vec<Option<String>> = Vec::new();
+    for i in 0..6u64 {
+        let r = post(addr, "/v1/sort", &sort_body(60 + i, 16));
+        assert_eq!(r.status, 200, "{}", r.body);
+        trace_ids.push(r.header("x-trace-id").map(str::to_string));
+    }
+    let minted: Vec<(usize, String)> = trace_ids
+        .iter()
+        .enumerate()
+        .filter_map(|(i, t)| t.clone().map(|t| (i, t)))
+        .collect();
+    assert_eq!(
+        minted.iter().map(|(i, _)| *i).collect::<Vec<_>>(),
+        vec![0, 3],
+        "1-in-3 sampling traces requests 0 and 3 of 6: {trace_ids:?}"
+    );
+
+    // Each sampled request's trace is retrievable and complete.
+    for (_, tid) in &minted {
+        let t = get(addr, &format!("/v1/trace/{tid}"));
+        assert_eq!(t.status, 200, "{}", t.body);
+        let tj = t.json();
+        let names: Vec<String> = tj
+            .get("spans")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.get("name").unwrap().as_str().unwrap().to_string())
+            .collect();
+        for want in ["request", "engine_job"] {
+            assert!(names.iter().any(|n| n == want), "missing {want}: {names:?}");
+        }
+    }
+
+    // The profile accumulated exactly the two sampled sorts: sampled GETs
+    // fold bare `request` paths, only sorts reach `request;engine_job`.
+    let p = get(addr, "/v1/profile");
+    assert_eq!(p.status, 200, "{}", p.body);
+    let pj = p.json();
+    let stacks = pj.get("stacks").unwrap().as_arr().unwrap();
+    let engine_stack = stacks
+        .iter()
+        .find(|s| s.get("stack").and_then(Json::as_str) == Some("request;engine_job"))
+        .expect("sampled sorts folded into the profile");
+    assert_eq!(engine_stack.get("count").unwrap().as_usize(), Some(2));
+
+    server.shutdown();
+}
+
+#[test]
+fn sampling_is_results_neutral_and_gates_the_observability_routes() {
+    // The same sort body across sample rates 0 (off), 1 (always) and 3
+    // must produce byte-identical response bodies: sampling is pure
+    // observability.
+    let mut bodies: Vec<String> = Vec::new();
+    for k in [0u64, 1, 3] {
+        let mut cfg = serve_cfg();
+        cfg.trace_sample = k;
+        let server = start_server_with(cfg);
+        let addr = server.addr();
+        let r = post(addr, "/v1/sort", &sort_body(99, 16));
+        assert_eq!(r.status, 200, "{}", r.body);
+        if k == 0 {
+            assert_eq!(r.header("x-trace-id"), None, "sample=0 never traces");
+            assert_eq!(get(addr, "/v1/trace/123abc").status, 404, "trace route gated");
+            assert_eq!(get(addr, "/v1/profile").status, 404, "profile route gated");
+        } else {
+            assert!(r.header("x-trace-id").is_some(), "request 0 is always sampled");
+        }
+        bodies.push(r.body);
+        server.shutdown();
+    }
+    assert_eq!(bodies[0], bodies[1], "sample=0 vs sample=1");
+    assert_eq!(bodies[1], bodies[2], "sample=1 vs sample=3");
+
+    // trace=false gates the same routes regardless of the sample rate.
+    let mut cfg = serve_cfg();
+    cfg.trace = false;
+    let server = start_server_with(cfg);
+    assert_eq!(get(server.addr(), "/v1/profile").status, 404);
+    server.shutdown();
+}
+
+#[test]
+fn profile_endpoint_serves_folded_stacks_and_resets_on_demand() {
+    let server = start_server(); // trace_sample = 1: every request folds
+    let addr = server.addr();
+
+    // A tiled run exercises the full span chain down to the step kernels.
+    let body = r#"{"method":"shuffle-softsort","grid":"8x8","dataset":{"kind":"colors","n":64,"seed":13},"overrides":{"phases":8,"record_curve":false,"tile_n":16},"include_arranged":false}"#;
+    let r = post(addr, "/v1/sort", body);
+    assert_eq!(r.status, 200, "{}", r.body);
+
+    // Folded text: full path chain present, every line is `path weight`.
+    let folded = get(addr, "/v1/profile?format=folded");
+    assert_eq!(folded.status, 200);
+    assert!(
+        folded.body.lines().any(|l| l.starts_with("request;engine_job;phase;tile;sss_step ")),
+        "folded stacks miss the sampled span chain:\n{}",
+        folded.body
+    );
+    for line in folded.body.lines() {
+        let (path, weight) = line.rsplit_once(' ').expect("`path weight` lines");
+        assert!(!path.is_empty());
+        weight.parse::<u64>().expect("integer self-time weight");
+    }
+
+    // JSON projection: the sort plus the folded scrape have been folded.
+    let pj = get(addr, "/v1/profile?format=json").json();
+    assert!(pj.get("traces").unwrap().as_usize().unwrap() >= 2, "{pj:?}");
+    assert!(!pj.get("stacks").unwrap().as_arr().unwrap().is_empty());
+
+    // Unknown format → structured 400.
+    let bad = get(addr, "/v1/profile?format=svg");
+    assert_eq!(bad.status, 400, "{}", bad.body);
+    assert!(bad.body.contains("unknown profile format"), "{}", bad.body);
+
+    // reset=1 renders *before* clearing, so the wiping scrape still shows
+    // the stacks; afterwards only freshly-sampled bare GET paths remain.
+    let wiped = get(addr, "/v1/profile?format=folded&reset=1");
+    assert_eq!(wiped.status, 200);
+    assert!(wiped.body.contains("engine_job"), "reset renders before clearing");
+    let after = get(addr, "/v1/profile?format=folded");
+    assert!(
+        !after.body.contains("engine_job"),
+        "reset dropped the accumulated stacks:\n{}",
+        after.body
+    );
+
+    server.shutdown();
+}
+
+#[test]
+fn healthz_reports_uptime_and_build_info() {
+    let server = start_server();
+    let j = get(server.addr(), "/healthz").json();
+    assert!(j.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+    assert_eq!(j.get("version").unwrap().as_str(), Some(env!("CARGO_PKG_VERSION")));
+    let simd = j.get("simd").unwrap().as_str().unwrap();
+    assert!(["scalar", "sse2", "avx2"].contains(&simd), "unknown simd level {simd}");
+    assert_eq!(j.get("trace_sample").unwrap().as_usize(), Some(1), "default samples all");
+    assert_eq!(j.get("shards_alive").unwrap().as_usize(), Some(1));
+    server.shutdown();
+}
+
+#[test]
+fn metrics_expose_latency_percentiles_and_convergence_windows() {
+    let server = start_server();
+    let addr = server.addr();
+    for seed in [70u64, 71, 72] {
+        assert_eq!(post(addr, "/v1/sort", &sort_body(seed, 16)).status, 200);
+    }
+
+    let m = get(addr, "/metrics").json();
+    // Sliding-window percentiles: queue wait is observed per engine job.
+    let qw = m.get("spans").unwrap().get("queue_wait").unwrap();
+    for key in ["p50_ms", "p95_ms", "p99_ms"] {
+        assert!(qw.get(key).unwrap().as_f64().unwrap() >= 0.0, "{key} missing");
+    }
+    let lat = m.get("latency").unwrap().get("softsort").unwrap();
+    assert_eq!(lat.get("count").unwrap().as_usize(), Some(3));
+    assert!(lat.get("p95_ms").unwrap().as_f64().unwrap() > 0.0);
+    // Convergence window: the engine hosts fed all three runs.
+    let conv = m.get("convergence").unwrap().get("softsort").unwrap();
+    assert_eq!(conv.get("runs").unwrap().as_usize(), Some(3));
+    assert!(conv.get("mean_loss").unwrap().as_f64().unwrap().is_finite());
+    let rej = conv.get("rejected_phase_rate").unwrap().as_f64().unwrap();
+    assert!((0.0..=1.0).contains(&rej), "rejected rate {rej} out of range");
+
+    let prom = get(addr, "/metrics?format=prometheus").body;
+    assert!(prom.contains("sssort_queue_wait_seconds_window{quantile=\"0.99\"}"), "{prom}");
+    assert!(prom.contains("sssort_sort_duration_seconds_window{method=\"softsort\""), "{prom}");
+    assert!(prom.contains("sssort_convergence_mean_loss{method=\"softsort\"}"), "{prom}");
+    assert!(prom.contains("sssort_convergence_rejected_phase_rate{method=\"softsort\"}"), "{prom}");
+
+    server.shutdown();
+}
+
+#[test]
+fn trace_keep_knob_exports_capacity_and_eviction_counters() {
+    let mut cfg = serve_cfg();
+    // Enlarging the shared LRU is safe alongside concurrently-running
+    // servers; shrinking it could evict their still-awaited traces.
+    cfg.trace_keep = 200;
+    let server = start_server_with(cfg);
+    let addr = server.addr();
+
+    let m = get(addr, "/metrics").json();
+    let tr = m.get("trace").expect("metrics carry the trace LRU block");
+    assert_eq!(tr.get("keep").unwrap().as_usize(), Some(200));
+    assert!(tr.get("finished_evictions").unwrap().as_usize().is_some());
+
+    let prom = get(addr, "/metrics?format=prometheus").body;
+    assert!(prom.contains("sssort_trace_keep 200"), "{prom}");
+    assert!(prom.contains("sssort_trace_finished_evictions_total"), "{prom}");
+
+    server.shutdown();
+}

@@ -10,6 +10,7 @@
 use shufflesort::api::{BackendChoice, Engine};
 use shufflesort::data::random_colors;
 use shufflesort::grid::GridShape;
+use shufflesort::serve::json::Json;
 use shufflesort::trace;
 
 fn engine() -> Engine {
@@ -122,4 +123,91 @@ fn traced_tiled_sort_produces_phase_tile_and_step_spans() {
         })
         .sum();
     assert!(sss_steps > 0, "sss_step spans count their steps");
+}
+
+#[test]
+fn chrome_export_nests_events_with_monotonic_timestamps_and_stable_ids() {
+    let _x = trace::exclusive_test_lock();
+    let (_, finished) = sort_with_tracing(
+        true,
+        "shuffle-softsort",
+        &ov(&[("phases", "6"), ("tile_n", "16"), ("record_curve", "false")]),
+    );
+    let t = finished.expect("finished trace");
+    let parsed = Json::parse(&trace::chrome_trace_json(&t).to_string_compact()).unwrap();
+    let events = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert_eq!(events.len(), t.spans.len(), "one complete-event per span");
+
+    // First pass: per-event invariants + an id -> (ts, end, tid) index.
+    let mut by_id: std::collections::HashMap<u64, (f64, f64, f64, &str)> =
+        std::collections::HashMap::new();
+    let mut last_ts = f64::MIN;
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"), "complete events only");
+        assert_eq!(e.get("pid").and_then(Json::as_f64), Some(1.0), "single stable pid");
+        let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+        let dur = e.get("dur").and_then(Json::as_f64).unwrap();
+        let tid = e.get("tid").and_then(Json::as_f64).unwrap();
+        assert!(tid > 0.0, "tids are nonzero thread slots");
+        assert!(ts >= last_ts, "events sorted by start time");
+        last_ts = ts;
+        let name = e.get("name").and_then(Json::as_str).unwrap();
+        let args = e.get("args").unwrap();
+        let id = args.get("span_id").and_then(Json::as_f64).unwrap();
+        by_id.insert(id.to_bits(), (ts, ts + dur, tid, name));
+    }
+
+    // Second pass: every child interval nests inside its parent's, with
+    // ≤2µs slack for the µs truncation of start and duration.
+    for e in events {
+        let args = e.get("args").unwrap();
+        let parent = args.get("parent_id").and_then(Json::as_f64).unwrap();
+        if parent == 0.0 {
+            continue;
+        }
+        let id = args.get("span_id").and_then(Json::as_f64).unwrap();
+        let (ts, end, _, name) = by_id[&id.to_bits()];
+        let (pts, pend, ptid, pname) = by_id[&parent.to_bits()];
+        assert!(ts >= pts, "'{name}' starts before its parent '{pname}'");
+        assert!(end <= pend + 2.0, "'{name}' outlives its parent '{pname}'");
+        // The driver runs phases on the root's thread: tid is stable
+        // along that edge of the tree.
+        if name == "phase" && pname == "test_sort" {
+            let (_, _, tid, _) = by_id[&id.to_bits()];
+            assert_eq!(tid.to_bits(), ptid.to_bits(), "phase rides the driver thread");
+        }
+    }
+}
+
+#[test]
+fn folded_profile_from_a_traced_sort_matches_span_paths() {
+    let _x = trace::exclusive_test_lock();
+    let (_, finished) = sort_with_tracing(
+        true,
+        "shuffle-softsort",
+        &ov(&[("phases", "8"), ("tile_n", "16"), ("record_curve", "false")]),
+    );
+    let t = finished.expect("finished trace");
+    let p = trace::profile::Profile::new();
+    p.observe(&t);
+    assert_eq!(p.traces(), 1);
+    let folded = p.folded();
+    assert!(
+        folded.lines().any(|l| l.starts_with("test_sort ")),
+        "root path present:\n{folded}"
+    );
+    assert!(
+        folded.lines().any(|l| l.contains("phase;tile;sss_step ")),
+        "phase->tile->sss_step chain missing:\n{folded}"
+    );
+    // Folded weights are self time: their sum can never exceed the sum of
+    // raw span durations, and every line is `path weight`.
+    let mut total_self = 0u64;
+    for line in folded.lines() {
+        let (path, weight) = line.rsplit_once(' ').expect("`path weight` lines");
+        assert!(!path.is_empty());
+        total_self += weight.parse::<u64>().expect("integer weight");
+    }
+    let total_span: u64 = t.spans.iter().map(|s| s.dur_us).sum();
+    assert!(total_self <= total_span, "self time folded past total span time");
 }
