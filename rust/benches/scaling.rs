@@ -162,6 +162,64 @@ fn main() {
     }
     tiled_table.print();
 
+    // ---- pyramid vs tiled at N=65536: end-to-end wall time and DPQ -------
+    // The block-diagonal `banded` plan never moves an item across a tile
+    // seam, so its layout quality saturates no matter how many phases run;
+    // the `overlapped` plan alternates seam positions and the pyramid
+    // relocates whole tiles on a coarse grid first. Each config lands two
+    // rows in scaling.json: the end-to-end wall time, and a "(dpq)" twin
+    // whose mean_s field carries the final DPQ16 — the CI quality guard
+    // reads those rows and requires the exchange plans to beat banded.
+    {
+        use shufflesort::api::{BackendChoice, Engine};
+        let n = 65536usize;
+        let g = GridShape::new(256, 256);
+        let ds = random_colors(n, 9);
+        let phases = if quick_mode() { 16 } else { 64 };
+        let engine = Engine::builder("artifacts").backend(BackendChoice::Native).build();
+        let mut pvt_table =
+            Table::new(&["config", "tiles", "plan", "wall s", "final DPQ16"]);
+        let configs: [(&str, &[(&str, &str)]); 3] = [
+            ("banded tile512", &[("tile_n", "512"), ("tile_plan", "banded")]),
+            ("overlapped tile512", &[("tile_n", "512"), ("tile_plan", "overlapped")]),
+            ("pyramid tile512", &[("tile_n", "512"), ("pyramid", "true")]),
+        ];
+        for (label, extra) in configs {
+            let mut overrides: Vec<(String, String)> = vec![
+                ("seed".into(), "9".into()),
+                ("phases".into(), phases.to_string()),
+                ("record_curve".into(), "false".into()),
+            ];
+            overrides
+                .extend(extra.iter().map(|(k, v)| (k.to_string(), v.to_string())));
+            match engine.sort("shuffle-softsort", &ds, g, &overrides) {
+                Ok(out) => {
+                    let wall = out.report.wall_secs;
+                    let dpq = out.report.final_dpq;
+                    for (suffix, v) in [("", wall), (" (dpq)", dpq)] {
+                        samples.push(Sample {
+                            name: format!("e2e sss n{n} {label}{suffix}"),
+                            reps: 1,
+                            mean_s: v,
+                            std_s: 0.0,
+                            min_s: v,
+                        });
+                    }
+                    pvt_table.row(&[
+                        label.to_string(),
+                        out.report.tiles.to_string(),
+                        out.report.tile_plan.clone(),
+                        format!("{wall:.2}"),
+                        format!("{dpq:.4}"),
+                    ]);
+                }
+                Err(e) => println!("e2e sss n{n} {label}: {e:#}"),
+            }
+        }
+        println!();
+        pvt_table.print();
+    }
+
     // ---- where a tiled phase's wall time goes (folded self-time) ---------
     // Fold one short traced tiled run into collapsed stacks and print the
     // heaviest paths — the same view `/v1/profile` serves, here as a quick

@@ -75,7 +75,7 @@ const KNOWN_VALUE_OPTS: &[&str] = &[
     "bits", "entropy", "scene-seed", "clusters", "dims", "batch", "workers",
     "backend", "threads", "simd", "addr", "cache-mb", "tile-n", "shards",
     "cache-file", "rate-limit", "auth-token", "trace-file", "profile-file",
-    "trace-sample", "trace-keep",
+    "trace-sample", "trace-keep", "tile-plan", "trace-tail-ms",
 ];
 
 pub const USAGE: &str = "\
@@ -84,6 +84,7 @@ sssort — ShuffleSoftSort permutation-learning coordinator
 USAGE:
   sssort sort    [--method NAME] [--grid HxW] [--dataset colors|features]
                  [--backend auto|native|pjrt] [--threads T] [--tile-n T]
+                 [--tile-plan banded|snake|overlapped] [--pyramid]
                  [--simd auto|off|sse2|avx2] [--seed S] [--batch K]
                  [--workers W] [--out dir] [--trace-file PATH]
                  [--profile-file PATH] [k=v ...]
@@ -91,7 +92,7 @@ USAGE:
   sssort serve   [--addr HOST:PORT] [--workers W] [--cache-mb MB]
                  [--shards K] [--cache-file PATH] [--rate-limit R]
                  [--auth-token TOKEN] [--backend B] [--threads T]
-                 [--trace-sample K] [--trace-keep N]
+                 [--trace-sample K] [--trace-keep N] [--trace-tail-ms T]
                  [--artifacts dir] [k=v overrides]
                  HTTP service over the engine: POST /v1/sort, /v1/sort_batch,
                  GET /v1/methods, /healthz, /metrics (see README \u{a7}Serving).
@@ -116,7 +117,14 @@ the scalar bit-exactness oracle (README section Performance).
 `--tile-n T` (or `tile_n=T` / `tiles=B`) enables tiled phase execution for
 shuffle-softsort: independent per-tile SoftSort solves of ~T cells keep
 per-step cost and memory at O(tile_n^2) instead of O(N^2) — use it for
-large grids (README section Scaling). For `serve`, k=v pairs configure the
+large grids (README section Scaling). `--tile-plan P` (or `tile_plan=P`)
+picks how tiles cut the grid: `banded` (default, fixed row bands),
+`snake` (boustrophedon chains crossing row seams) or `overlapped`
+(phase-alternating half-tile-offset bands, so seams shift every phase).
+`--pyramid` (or `pyramid=true`) switches to the coarse-to-fine executor:
+sort tile centroids on a coarse grid, relocate whole tiles, refine
+recursively — the path for million-item grids (README section Scaling).
+For `serve`, k=v pairs configure the
 service (queue_depth, max_body_bytes, arranged_max_n, trace, ...).
 `--trace-file PATH` (sort) records the run's span tree — phases, tiles,
 step kernels — as Chrome trace-event JSON; open it in chrome://tracing.
@@ -124,7 +132,10 @@ step kernels — as Chrome trace-event JSON; open it in chrome://tracing.
 stacks (`path;to;span self_us` per line) for flamegraph.pl / speedscope.
 For `serve`, `--trace-sample K` traces 1 in K requests (0 disables
 tracing, 1 traces everything — the default) and `--trace-keep N` sizes
-the finished-trace LRU behind GET /v1/trace/<id>.
+the finished-trace LRU behind GET /v1/trace/<id>. `--trace-tail-ms T`
+adds tail-based sampling: a request the head sampler would drop is still
+traced speculatively and kept when it runs longer than T ms (0, the
+default, disables tail sampling).
 ";
 
 /// Full usage text: the static grammar plus the live method list from the
@@ -239,6 +250,24 @@ mod tests {
         assert_eq!(a.opt_usize("tile-n", 0).unwrap(), 512);
         assert!(a.positional.is_empty());
         assert!(usage().contains("--tile-n"));
+    }
+
+    #[test]
+    fn tile_plan_takes_a_value_and_pyramid_is_a_flag() {
+        let a = parse(&["sort", "--tile-plan", "snake", "--pyramid", "--method", "sss"]);
+        assert_eq!(a.opt("tile-plan"), Some("snake"));
+        assert!(a.flag("pyramid"));
+        assert!(a.positional.is_empty());
+        assert!(usage().contains("--tile-plan"));
+        assert!(usage().contains("--pyramid"));
+    }
+
+    #[test]
+    fn trace_tail_ms_takes_a_value() {
+        let a = parse(&["serve", "--trace-tail-ms", "250"]);
+        assert_eq!(a.opt_usize("trace-tail-ms", 0).unwrap(), 250);
+        assert!(a.positional.is_empty());
+        assert!(usage().contains("--trace-tail-ms"));
     }
 
     #[test]

@@ -20,12 +20,68 @@ pub fn normalize_threads(threads: usize) -> Option<usize> {
 /// Convert a requested tile *count* into the per-tile cell count the
 /// executor's plan will honor: the plan splits 2-D grids into whole-row
 /// bands, so `tiles=B` maps to ⌈h/B⌉ rows per tile (≈B bands; never more),
-/// and 1-D grids to ⌈N/B⌉ cells. Shared by `tiles=` and the builder.
-fn tiles_to_tile_n(grid: GridShape, tiles: usize) -> usize {
-    if grid.h == 1 {
-        grid.n().div_ceil(tiles)
+/// and 1-D grids to ⌈N/B⌉ cells. A request the grid cannot satisfy (more
+/// bands than rows, or bands that would drop below 2 cells) is clamped and
+/// the clamp reported in the returned note, so `tiles=B` never silently
+/// produces fewer bands than asked. Shared by `tiles=` and the builder.
+fn tiles_to_tile_n(grid: GridShape, tiles: usize) -> (usize, Option<String>) {
+    let max_b = if grid.h == 1 {
+        (grid.n() / 2).max(1)
+    } else if grid.w == 1 {
+        (grid.h / 2).max(1)
     } else {
-        grid.h.div_ceil(tiles) * grid.w
+        grid.h
+    };
+    let b = tiles.min(max_b).max(1);
+    let note = (b != tiles).then(|| {
+        format!(
+            "tiles={tiles} clamped to {b}: a {}x{} grid splits into at most {max_b} \
+             bands of >=2 cells",
+            grid.h, grid.w
+        )
+    });
+    let tile_n =
+        if grid.h == 1 { grid.n().div_ceil(b) } else { grid.h.div_ceil(b) * grid.w };
+    (tile_n, note)
+}
+
+/// Tile-plan family for the tiled phase executor (`tile_plan=` override /
+/// `--tile-plan` flag): how each phase's ≈`tile_n`-cell bands are laid
+/// out. Inert without `tile_n`.
+///
+/// * `banded` — the block-diagonal baseline: fixed whole-row bands
+///   (column segments on wide grids), identical every phase.
+/// * `snake` — 1-D chains along a boustrophedon path over the grid, with
+///   a phase-alternating half-tile offset: successive phases shift chain
+///   seams, and chains cross row boundaries, so items migrate across the
+///   whole grid over the run (the FLAS/SOM seam-escape trick).
+/// * `overlapped` — whole-row bands whose seams alternate between phases
+///   by half a band height, so every seam of one phase is interior to a
+///   tile of the next.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TilePlanKind {
+    #[default]
+    Banded,
+    Snake,
+    Overlapped,
+}
+
+impl TilePlanKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "banded" => Some(TilePlanKind::Banded),
+            "snake" => Some(TilePlanKind::Snake),
+            "overlapped" | "overlap" => Some(TilePlanKind::Overlapped),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TilePlanKind::Banded => "banded",
+            TilePlanKind::Snake => "snake",
+            TilePlanKind::Overlapped => "overlapped",
+        }
     }
 }
 
@@ -72,6 +128,21 @@ pub struct ShuffleSoftSortConfig {
     /// one tile and is bit-identical to it. The `tiles=B` override is the
     /// same knob phrased as a tile count.
     pub tile_n: Option<usize>,
+    /// Tile layout for the tiled executor (see [`TilePlanKind`]); inert
+    /// without `tile_n`.
+    pub tile_plan: TilePlanKind,
+    /// Coarse-to-fine pyramid execution (`pyramid=true` / `--pyramid`):
+    /// instead of independent block-diagonal tiles, each phase sorts tile
+    /// *centroids* on a coarse grid with the full path, relocates whole
+    /// tiles by the coarse permutation, then refines within tiles
+    /// recursively until a region fits the O(tile_n²) budget (`tile_n`,
+    /// default 512 when unset). Items exchange across the whole grid every
+    /// phase — the knob that makes N=1,000,000 sorts converge. Takes
+    /// precedence over `tile_plan`.
+    pub pyramid: bool,
+    /// Clamp note from `tiles=` parsing (surfaced in `RunReport.notes`);
+    /// `None` when the requested tile count was honored exactly.
+    pub tile_note: Option<String>,
 }
 
 impl ShuffleSoftSortConfig {
@@ -106,6 +177,9 @@ impl ShuffleSoftSortConfig {
             threads: None,
             simd: SimdChoice::Auto,
             tile_n: None,
+            tile_plan: TilePlanKind::Banded,
+            pyramid: false,
+            tile_note: None,
         }
     }
 
@@ -151,15 +225,31 @@ impl ShuffleSoftSortConfig {
             "tile_n" => {
                 let t: usize = value.parse()?;
                 self.tile_n = (t > 0).then_some(t);
+                self.tile_note = None;
             }
             "tiles" => {
                 // A tile count is tile_n phrased per-grid, quantized the
                 // way the executor's plan quantizes (whole grid rows on
-                // 2-D grids) so B tiles really come out as B bands.
-                // 0 resets to the full executor.
+                // 2-D grids) so B tiles really come out as B bands — an
+                // unsatisfiable count is clamped with a note instead of
+                // silently producing fewer bands. 0 resets to the full
+                // executor.
                 let b: usize = value.parse()?;
-                self.tile_n = (b > 0).then(|| tiles_to_tile_n(self.grid, b));
+                if b == 0 {
+                    self.tile_n = None;
+                    self.tile_note = None;
+                } else {
+                    let (t, note) = tiles_to_tile_n(self.grid, b);
+                    self.tile_n = Some(t);
+                    self.tile_note = note;
+                }
             }
+            "tile_plan" => {
+                self.tile_plan = TilePlanKind::parse(value).ok_or_else(|| {
+                    anyhow!("unknown tile plan '{value}' (banded, snake, overlapped)")
+                })?
+            }
+            "pyramid" => self.pyramid = value.parse()?,
             _ => bail!("unknown config key '{key}'"),
         }
         Ok(())
@@ -207,6 +297,8 @@ pub struct ShuffleSoftSortConfigBuilder {
     simd: Option<SimdChoice>,
     tile_n: Option<usize>,
     tiles: Option<usize>,
+    tile_plan: Option<TilePlanKind>,
+    pyramid: Option<bool>,
     overrides: Vec<(String, String)>,
 }
 
@@ -304,6 +396,20 @@ impl ShuffleSoftSortConfigBuilder {
         self
     }
 
+    /// Tile layout for the tiled executor (like the `tile_plan=` override
+    /// / the `--tile-plan` CLI flag).
+    pub fn tile_plan(mut self, tile_plan: TilePlanKind) -> Self {
+        self.tile_plan = Some(tile_plan);
+        self
+    }
+
+    /// Coarse-to-fine pyramid execution (like the `pyramid=` override /
+    /// the `--pyramid` CLI flag).
+    pub fn pyramid(mut self, pyramid: bool) -> Self {
+        self.pyramid = Some(pyramid);
+        self
+    }
+
     /// Queue one `k=v` override (applied last, CLI semantics).
     pub fn set(mut self, key: impl Into<String>, value: impl Into<String>) -> Self {
         self.overrides.push((key.into(), value.into()));
@@ -363,9 +469,23 @@ impl ShuffleSoftSortConfigBuilder {
         }
         if let Some(v) = self.tile_n {
             cfg.tile_n = (v > 0).then_some(v);
+            cfg.tile_note = None;
         }
         if let Some(v) = self.tiles {
-            cfg.tile_n = (v > 0).then(|| tiles_to_tile_n(cfg.grid, v));
+            if v == 0 {
+                cfg.tile_n = None;
+                cfg.tile_note = None;
+            } else {
+                let (t, note) = tiles_to_tile_n(cfg.grid, v);
+                cfg.tile_n = Some(t);
+                cfg.tile_note = note;
+            }
+        }
+        if let Some(v) = self.tile_plan {
+            cfg.tile_plan = v;
+        }
+        if let Some(v) = self.pyramid {
+            cfg.pyramid = v;
         }
         for (k, v) in &self.overrides {
             cfg.set(k, v)
@@ -435,6 +555,13 @@ pub struct ServeConfig {
     /// eviction (`--trace-keep N`, minimum 1); evictions are counted in
     /// `/metrics`.
     pub trace_keep: usize,
+    /// Tail-based trace sampling (`--trace-tail-ms T`, milliseconds): a
+    /// request the 1-in-K head sampler would drop is traced anyway and
+    /// *kept* iff its root span exceeds T ms (discarded otherwise), so
+    /// slow outliers stay visible under aggressive head sampling. 0 — the
+    /// default — disables the tail path; kept tails are counted in
+    /// `/metrics` as `trace_tail_kept`.
+    pub trace_tail_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -457,6 +584,7 @@ impl Default for ServeConfig {
             trace: true,
             trace_sample: 1,
             trace_keep: crate::trace::DEFAULT_FINISHED_CAP,
+            trace_tail_ms: 0,
         }
     }
 }
@@ -484,11 +612,12 @@ impl ServeConfig {
             "trace" => self.trace = value.parse()?,
             "trace_sample" => self.trace_sample = value.parse()?,
             "trace_keep" => self.trace_keep = value.parse::<usize>()?.max(1),
+            "trace_tail_ms" => self.trace_tail_ms = value.parse()?,
             _ => bail!(
                 "unknown serve config key '{key}' (allowed: addr, workers, cache_mb, \
                  queue_depth, max_body_bytes, keep_alive_secs, arranged_max_n, shards, \
                  cache_file, rate_limit, auth_token, stream_min_n, trace, trace_sample, \
-                 trace_keep)"
+                 trace_keep, trace_tail_ms)"
             ),
         }
         Ok(())
@@ -806,6 +935,84 @@ mod tests {
     }
 
     #[test]
+    fn tile_plan_and_pyramid_overrides_parse() {
+        let mut c = ShuffleSoftSortConfig::for_grid(8, 8);
+        assert_eq!(c.tile_plan, TilePlanKind::Banded);
+        assert!(!c.pyramid);
+        c.set("tile_plan", "snake").unwrap();
+        assert_eq!(c.tile_plan, TilePlanKind::Snake);
+        c.set("tile_plan", "overlapped").unwrap();
+        assert_eq!(c.tile_plan, TilePlanKind::Overlapped);
+        c.set("tile_plan", "banded").unwrap();
+        assert_eq!(c.tile_plan, TilePlanKind::Banded);
+        assert!(c.set("tile_plan", "spiral").is_err());
+        c.set("pyramid", "true").unwrap();
+        assert!(c.pyramid);
+        c.set("pyramid", "false").unwrap();
+        assert!(!c.pyramid);
+        assert!(c.set("pyramid", "maybe").is_err());
+        // Builder setters mirror the overrides, and k=v pairs still win.
+        let b = ShuffleSoftSortConfig::builder()
+            .grid(8, 8)
+            .tile_plan(TilePlanKind::Snake)
+            .pyramid(true)
+            .build()
+            .unwrap();
+        assert_eq!(b.tile_plan, TilePlanKind::Snake);
+        assert!(b.pyramid);
+        let b = ShuffleSoftSortConfig::builder()
+            .grid(8, 8)
+            .tile_plan(TilePlanKind::Snake)
+            .set("tile_plan", "banded")
+            .build()
+            .unwrap();
+        assert_eq!(b.tile_plan, TilePlanKind::Banded);
+        // Round-trip name <-> parse.
+        for k in [TilePlanKind::Banded, TilePlanKind::Snake, TilePlanKind::Overlapped] {
+            assert_eq!(TilePlanKind::parse(k.name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn tiles_requests_beyond_the_grid_are_clamped_with_a_note() {
+        // 8x8 supports at most 8 whole-row bands: tiles=100 clamps to 8.
+        let mut c = ShuffleSoftSortConfig::for_grid(8, 8);
+        c.set("tiles", "100").unwrap();
+        assert_eq!(c.tile_n, Some(8));
+        let note = c.tile_note.clone().expect("clamp emits a note");
+        assert!(note.contains("tiles=100") && note.contains("8"), "{note}");
+        // An exactly-satisfiable request leaves no note.
+        c.set("tiles", "4").unwrap();
+        assert_eq!(c.tile_n, Some(16));
+        assert_eq!(c.tile_note, None);
+        // tile_n= and tiles=0 clear a stale note.
+        c.set("tiles", "100").unwrap();
+        assert!(c.tile_note.is_some());
+        c.set("tile_n", "16").unwrap();
+        assert_eq!(c.tile_note, None);
+        c.set("tiles", "100").unwrap();
+        c.set("tiles", "0").unwrap();
+        assert_eq!(c.tile_note, None);
+        // 1-D grids cap at n/2 bands (every band needs >= 2 cells)...
+        let mut line = ShuffleSoftSortConfig::for_grid(1, 12);
+        line.set("tiles", "9").unwrap();
+        assert_eq!(line.tile_n, Some(2));
+        assert!(line.tile_note.is_some());
+        // ...and w=1 grids at h/2 (whole-row bands of >= 2 rows).
+        let mut thin = ShuffleSoftSortConfig::for_grid(9, 1);
+        thin.set("tiles", "9").unwrap();
+        assert_eq!(thin.tile_n, Some(3));
+        assert!(thin.tile_note.clone().unwrap().contains("tiles=9"));
+        // The builder path produces the identical clamp + note.
+        let b = ShuffleSoftSortConfig::builder().grid(8, 8).tiles(100).build().unwrap();
+        assert_eq!(b.tile_n, Some(8));
+        assert!(b.tile_note.is_some());
+        let mut by_set = ShuffleSoftSortConfig::for_grid(8, 8);
+        by_set.set("tiles", "100").unwrap();
+        assert_eq!(b, by_set);
+    }
+
+    #[test]
     fn serve_config_overrides_and_unknown_keys() {
         let mut c = ServeConfig::default();
         assert!(c.workers >= 1);
@@ -885,6 +1092,19 @@ mod tests {
         let err = c.set("nope", "1").unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("trace_sample") && msg.contains("trace_keep"));
+        assert!(msg.contains("trace_tail_ms"));
+    }
+
+    #[test]
+    fn serve_config_trace_tail_key() {
+        let mut c = ServeConfig::default();
+        assert_eq!(c.trace_tail_ms, 0, "tail sampling is off by default");
+        c.set("trace_tail_ms", "250").unwrap();
+        assert_eq!(c.trace_tail_ms, 250);
+        c.set("trace_tail_ms", "0").unwrap();
+        assert_eq!(c.trace_tail_ms, 0);
+        assert!(c.set("trace_tail_ms", "-5").is_err());
+        assert!(c.set("trace_tail_ms", "fast").is_err());
     }
 
     #[test]

@@ -32,6 +32,13 @@ pub struct RunReport {
     /// Tiles per phase under the tiled phase executor (1 = the full
     /// executor; 0 for methods without a phase executor at all).
     pub tiles: usize,
+    /// Which executor/plan laid out the phases: "full", "banded", "snake",
+    /// "overlapped", "pyramid" — empty for methods without one.
+    pub tile_plan: String,
+    /// Human-readable configuration notes surfaced to the caller: clamped
+    /// `tiles=` requests, pyramid fallbacks, and similar adjustments that
+    /// would otherwise happen silently.
+    pub notes: Vec<String>,
     /// Whether the final permutation came out valid without repair.
     pub valid_without_repair: bool,
     pub wall_secs: f64,

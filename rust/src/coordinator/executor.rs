@@ -38,7 +38,7 @@ use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::backend::pool::WorkerPool;
 use crate::backend::{SessionOpts, SssStep, StepBackend, StepSession, StepShape};
-use crate::config::ShuffleSoftSortConfig;
+use crate::config::{ShuffleSoftSortConfig, TilePlanKind};
 use crate::grid::GridShape;
 use crate::perm::{repair, Permutation};
 use crate::trace;
@@ -53,6 +53,11 @@ use super::optimizer::Adam;
 pub(crate) trait PhaseExecutor {
     /// Tiles per phase (1 for the full executor).
     fn tiles(&self) -> usize;
+
+    /// Stamp executor-specific identity onto the report before the run:
+    /// the plan name, plus any plan-construction notes (clamps,
+    /// fallbacks).
+    fn annotate(&self, _report: &mut RunReport) {}
 
     /// Run phase `r` at temperature `tau` over `x_shuf` (the shuffled
     /// arrangement) and return the sort permutation in shuffled-slot
@@ -75,17 +80,27 @@ pub(crate) trait PhaseExecutor {
     ) -> Result<Permutation>;
 }
 
-/// Build the executor the config asks for: `tile_n = None` → full,
-/// `Some(t)` → tiled with ≈t items per tile.
+/// Per-region item budget the pyramid assumes when `tile_n` is unset.
+pub(crate) const DEFAULT_PYRAMID_TILE_N: usize = 512;
+
+/// Build the executor the config asks for: `pyramid=true` → the
+/// coarse-to-fine pyramid (budgeted by `tile_n`, default
+/// [`DEFAULT_PYRAMID_TILE_N`]); else `tile_n = None` → full, `Some(t)` →
+/// tiled with ≈t items per tile laid out by `cfg.tile_plan`.
 pub(crate) fn executor_for(
     backend: &dyn StepBackend,
     cfg: &ShuffleSoftSortConfig,
     d: usize,
     norm: f32,
 ) -> Result<Box<dyn PhaseExecutor>> {
-    let exec: Box<dyn PhaseExecutor> = match cfg.tile_n {
-        None => Box::new(FullExecutor::new(backend, cfg, d, norm)?),
-        Some(tile_n) => Box::new(TiledExecutor::new(backend, cfg, d, norm, tile_n)?),
+    let exec: Box<dyn PhaseExecutor> = if cfg.pyramid {
+        let tile_n = cfg.tile_n.unwrap_or(DEFAULT_PYRAMID_TILE_N);
+        Box::new(PyramidExecutor::new(backend, cfg, d, norm, tile_n)?)
+    } else {
+        match cfg.tile_n {
+            None => Box::new(FullExecutor::new(backend, cfg, d, norm)?),
+            Some(tile_n) => Box::new(TiledExecutor::new(backend, cfg, d, norm, tile_n)?),
+        }
     };
     Ok(exec)
 }
@@ -277,6 +292,10 @@ impl PhaseExecutor for FullExecutor {
         1
     }
 
+    fn annotate(&self, report: &mut RunReport) {
+        report.tile_plan = "full".to_string();
+    }
+
     fn run_phase(
         &mut self,
         r: usize,
@@ -321,13 +340,16 @@ impl PhaseExecutor for FullExecutor {
 // Tile plan: contiguous grid bands, each a sub-grid.
 // ---------------------------------------------------------------------------
 
-/// One tile: a contiguous row-major grid-position band `[pos0,
-/// pos0 + shape.n)` that is itself a valid sub-grid, plus the index of its
-/// shape in the plan's deduplicated shape list (ragged splits have at most
-/// two distinct shapes, so sessions/scratch memoize per shape).
+/// One tile: `shape.n` grid positions at `[start, start + shape.n)` of the
+/// plan's flat position buffer, solved as a `shape.h × shape.w` sub-grid,
+/// plus the index of its shape in the plan's deduplicated shape list
+/// (ragged splits have a handful of distinct shapes, so sessions/scratch
+/// memoize per shape). Banded plans store contiguous row-major runs; snake
+/// plans store boustrophedon paths — the executor only ever sees the
+/// explicit position list.
 #[derive(Clone, Copy, Debug)]
 pub(crate) struct TileSpec {
-    pub pos0: usize,
+    pub start: usize,
     pub shape: StepShape,
     pub shape_idx: usize,
 }
@@ -336,13 +358,120 @@ pub(crate) struct TileSpec {
 #[derive(Debug)]
 pub(crate) struct TilePlan {
     pub tiles: Vec<TileSpec>,
-    /// Deduplicated tile shapes (`TileSpec::shape_idx` indexes this).
+    /// Deduplicated tile shapes (`TileSpec::shape_idx` indexes this). When
+    /// plans are built against a shared registry (the phase-alternating
+    /// pairs), this is the registry as of this plan's construction — a
+    /// superset of the shapes this plan uses, with stable indices.
     pub shapes: Vec<StepShape>,
     /// Grid position → tile index.
     pub tile_of: Vec<u32>,
+    /// Flat grid-position buffer; tile `b` owns
+    /// `pos[tiles[b].start .. tiles[b].start + tiles[b].shape.n]`, local
+    /// grid position `q` of the tile being `pos[start + q]`.
+    pub pos: Vec<u32>,
+}
+
+/// Plan construction state: tiles + positions accumulating against a
+/// shared (possibly cross-plan) shape registry.
+struct PlanBuilder<'a> {
+    n: usize,
+    d: usize,
+    shapes: &'a mut Vec<StepShape>,
+    tiles: Vec<TileSpec>,
+    pos: Vec<u32>,
+}
+
+impl<'a> PlanBuilder<'a> {
+    fn new(n: usize, d: usize, shapes: &'a mut Vec<StepShape>) -> Self {
+        PlanBuilder { n, d, shapes, tiles: Vec::new(), pos: Vec::with_capacity(n) }
+    }
+
+    fn shape_idx(&mut self, shape: StepShape) -> usize {
+        match self.shapes.iter().position(|s| *s == shape) {
+            Some(i) => i,
+            None => {
+                self.shapes.push(shape);
+                self.shapes.len() - 1
+            }
+        }
+    }
+
+    /// A contiguous row-major band `[pos0, pos0 + shape.n)`.
+    fn push_range(&mut self, pos0: usize, shape: StepShape) {
+        let start = self.pos.len();
+        self.pos.extend((pos0..pos0 + shape.n).map(|p| p as u32));
+        let shape_idx = self.shape_idx(shape);
+        self.tiles.push(TileSpec { start, shape, shape_idx });
+    }
+
+    /// An explicit position path, solved as a 1-D `1 × len` chain.
+    fn push_path(&mut self, path: &[u32]) {
+        let shape = StepShape { n: path.len(), d: self.d, h: 1, w: path.len() };
+        let start = self.pos.len();
+        self.pos.extend_from_slice(path);
+        let shape_idx = self.shape_idx(shape);
+        self.tiles.push(TileSpec { start, shape, shape_idx });
+    }
+
+    /// 1-D chunking of `count` contiguous cells starting at `base`, ≈`per`
+    /// each, ≥ 2 each (trailing singleton absorbed into the last chunk).
+    /// With `offset`, a half-length lead chunk shifts every seam by per/2.
+    fn chunk_span(&mut self, base: usize, count: usize, per: usize, offset: bool) {
+        let per = per.clamp(2, count.max(2));
+        let d = self.d;
+        let lead = if offset { per / 2 } else { 0 };
+        let mut c0 = 0usize;
+        if lead >= 2 && count >= lead + 2 {
+            self.push_range(base, StepShape { n: lead, d, h: 1, w: lead });
+            c0 = lead;
+        }
+        while c0 < count {
+            let mut take = per.min(count - c0);
+            if count - c0 - take == 1 {
+                take += 1;
+            }
+            self.push_range(base + c0, StepShape { n: take, d, h: 1, w: take });
+            c0 += take;
+        }
+    }
+
+    fn finish(self) -> TilePlan {
+        debug_assert_eq!(self.pos.len(), self.n, "plan must cover the grid");
+        let mut tile_of = vec![0u32; self.n];
+        for (b, t) in self.tiles.iter().enumerate() {
+            for &p in &self.pos[t.start..t.start + t.shape.n] {
+                tile_of[p as usize] = b as u32;
+            }
+        }
+        TilePlan { tiles: self.tiles, shapes: self.shapes.clone(), tile_of, pos: self.pos }
+    }
 }
 
 impl TilePlan {
+    /// The tile's grid positions, in tile-local grid order.
+    pub fn positions(&self, b: usize) -> &[u32] {
+        let t = &self.tiles[b];
+        &self.pos[t.start..t.start + t.shape.n]
+    }
+
+    /// Whether two plans cut the grid identically (used to collapse a
+    /// degenerate phase-alternating pair into one plan).
+    fn same_partition(&self, other: &TilePlan) -> bool {
+        self.pos == other.pos
+            && self.tiles.len() == other.tiles.len()
+            && self
+                .tiles
+                .iter()
+                .zip(&other.tiles)
+                .all(|(a, b)| a.start == b.start && a.shape == b.shape)
+    }
+
+    /// The block-diagonal baseline plan (`tile_plan=banded`, offset off).
+    pub fn new(g: GridShape, d: usize, tile_n: usize) -> Self {
+        let mut shapes = Vec::new();
+        Self::banded(g, d, tile_n, false, &mut shapes)
+    }
+
     /// Split `g` into contiguous position bands of ≈`tile_n` cells, each a
     /// valid sub-grid: whole grid rows (`h_b × w` bands) when `tile_n >=
     /// w`, column segments of single rows (`1 × n_b` chains — contiguous
@@ -352,70 +481,131 @@ impl TilePlan {
     /// full `w`-cell row. A trailing remainder of a single row/cell is
     /// absorbed into the previous tile so every tile holds ≥ 2 items (a
     /// 1-item SoftSort is degenerate). `tile_n >= n` yields exactly one
-    /// tile of the full grid shape.
-    pub fn new(g: GridShape, d: usize, tile_n: usize) -> Self {
+    /// tile of the full grid shape (the degeneracy contract; `offset` is
+    /// ignored there so the contract survives plan alternation).
+    ///
+    /// With `offset`, the first band is half-height (half-length for 1-D /
+    /// wide segment splits), shifting every seam by half a tile relative
+    /// to the unoffset variant — alternating the two between phases is the
+    /// `overlapped` plan: every seam of one phase lies mid-tile in the
+    /// next, so items migrate across band boundaries over the run.
+    pub fn banded(
+        g: GridShape,
+        d: usize,
+        tile_n: usize,
+        offset: bool,
+        shapes: &mut Vec<StepShape>,
+    ) -> Self {
         let (h, w) = (g.h, g.w);
-        let mut tiles: Vec<TileSpec> = Vec::new();
-        let mut shapes: Vec<StepShape> = Vec::new();
-        let mut push = |pos0: usize, shape: StepShape| {
-            let shape_idx = match shapes.iter().position(|s| *s == shape) {
-                Some(i) => i,
-                None => {
-                    shapes.push(shape);
-                    shapes.len() - 1
-                }
-            };
-            tiles.push(TileSpec { pos0, shape, shape_idx });
-        };
-        // 1-D chunking of `count` cells starting at `base`, ≈`per` each,
-        // ≥ 2 each (trailing singleton absorbed into the last chunk).
-        fn chunk_row(
-            base: usize,
-            count: usize,
-            per: usize,
-            d: usize,
-            push: &mut dyn FnMut(usize, StepShape),
-        ) {
-            let per = per.clamp(2, count.max(2));
-            let mut c0 = 0usize;
-            while c0 < count {
-                let mut take = per.min(count - c0);
-                if count - c0 - take == 1 {
-                    take += 1;
-                }
-                push(base + c0, StepShape { n: take, d, h: 1, w: take });
-                c0 += take;
-            }
-        }
+        let per = tile_n.max(1);
+        let offset = offset && per < g.n();
+        let mut b = PlanBuilder::new(g.n(), d, shapes);
 
-        if h > 1 && tile_n.max(1) >= w {
+        if h > 1 && per >= w {
             // Whole-row bands of ≈tile_n/w rows.
-            let rows = (tile_n.max(1) / w).max(1).max(2usize.div_ceil(w));
+            let rows = (per / w).max(1).max(2usize.div_ceil(w));
+            let lead = if offset { rows / 2 } else { 0 };
             let mut r0 = 0usize;
+            // Half-height lead band — skipped when degenerate (< 2 cells,
+            // taller than the grid, or leaving a single trailing cell).
+            if lead > 0 && lead < h && lead * w >= 2 && (h - lead) * w != 1 {
+                b.push_range(0, StepShape { n: lead * w, d, h: lead, w });
+                r0 = lead;
+            }
             while r0 < h {
                 let mut take = rows.min(h - r0);
                 if (h - r0 - take) * w == 1 {
                     take += 1;
                 }
-                push(r0 * w, StepShape { n: take * w, d, h: take, w });
+                b.push_range(r0 * w, StepShape { n: take * w, d, h: take, w });
                 r0 += take;
             }
         } else if h == 1 {
-            chunk_row(0, w, tile_n.max(1), d, &mut push);
+            b.chunk_span(0, w, per, offset);
         } else {
             // Wide grid, tile_n < w: column segments, one row at a time.
             for r in 0..h {
-                chunk_row(r * w, w, tile_n.max(1), d, &mut push);
+                b.chunk_span(r * w, w, per, offset);
             }
         }
+        b.finish()
+    }
 
-        let mut tile_of = vec![0u32; g.n()];
-        for (b, t) in tiles.iter().enumerate() {
-            for p in t.pos0..t.pos0 + t.shape.n {
-                tile_of[p] = b as u32;
+    /// Boustrophedon chains: walk the grid row-major with every odd row
+    /// reversed (so consecutive path cells are always grid neighbors) and
+    /// chunk the path into 1-D chains of ≈`tile_n` cells. Chains cross row
+    /// boundaries — the seams that block-diagonal bands never move — and
+    /// `offset` shifts every chain seam by half a tile, so alternating the
+    /// two variants lets items migrate along the whole path over phases
+    /// (the FLAS/SOM scan trick). Falls back to the banded split when the
+    /// path degenerates to it (single row, or one tile covering the grid —
+    /// preserving the one-tile degeneracy contract).
+    pub fn snake(
+        g: GridShape,
+        d: usize,
+        tile_n: usize,
+        offset: bool,
+        shapes: &mut Vec<StepShape>,
+    ) -> Self {
+        let (h, w) = (g.h, g.w);
+        let n = g.n();
+        let per = tile_n.max(1).clamp(2, n.max(2));
+        if per >= n || h == 1 {
+            return Self::banded(g, d, tile_n, offset, shapes);
+        }
+        let mut path = Vec::with_capacity(n);
+        for r in 0..h {
+            if r % 2 == 0 {
+                path.extend((0..w).map(|c| (r * w + c) as u32));
+            } else {
+                path.extend((0..w).rev().map(|c| (r * w + c) as u32));
             }
         }
-        TilePlan { tiles, shapes, tile_of }
+        let mut b = PlanBuilder::new(n, d, shapes);
+        let lead = if offset { per / 2 } else { 0 };
+        let mut c0 = 0usize;
+        if lead >= 2 && n >= lead + 2 {
+            b.push_path(&path[..lead]);
+            c0 = lead;
+        }
+        while c0 < n {
+            let mut take = per.min(n - c0);
+            if n - c0 - take == 1 {
+                take += 1;
+            }
+            b.push_path(&path[c0..c0 + take]);
+            c0 += take;
+        }
+        b.finish()
+    }
+
+    /// The phase-alternating plan set for a kind: one fixed plan for
+    /// `banded`, an (unoffset, half-offset) pair for `snake`/`overlapped`
+    /// — collapsed back to one plan when the offset variant degenerates to
+    /// the base cut. All plans register shapes in the shared `shapes`
+    /// registry so one session set covers every phase.
+    pub fn plan_set(
+        kind: TilePlanKind,
+        g: GridShape,
+        d: usize,
+        tile_n: usize,
+        shapes: &mut Vec<StepShape>,
+    ) -> Vec<TilePlan> {
+        let mut plans = match kind {
+            TilePlanKind::Banded => vec![Self::banded(g, d, tile_n, false, shapes)],
+            TilePlanKind::Overlapped => vec![
+                Self::banded(g, d, tile_n, false, shapes),
+                Self::banded(g, d, tile_n, true, shapes),
+            ],
+            TilePlanKind::Snake => vec![
+                Self::snake(g, d, tile_n, false, shapes),
+                Self::snake(g, d, tile_n, true, shapes),
+            ],
+        };
+        if plans.len() == 2 && plans[1].same_partition(&plans[0]) {
+            plans.truncate(1);
+        }
+        plans
     }
 }
 
@@ -464,14 +654,17 @@ impl<S: StepSession + ?Sized> TileWorker<S> {
 
     /// Gather + solve one tile. `members` are the tile's shuffled slots in
     /// ascending order; `rank` maps a shuffled slot to its tile-local
-    /// index; `inv_perm` is the phase's global inverse shuffle, so
-    /// `rank[inv_perm[pos]]` is the tile-local slot shown at grid position
-    /// `pos` — the restriction of the full step's `inv_idx` to the band.
+    /// index; `inv_perm` is the phase's global inverse shuffle and
+    /// `positions` the tile's grid positions in tile-local order, so
+    /// `rank[inv_perm[positions[q]]]` is the tile-local slot shown at the
+    /// tile's local position `q` — the restriction of the full step's
+    /// `inv_idx` to the tile.
     #[allow(clippy::too_many_arguments)]
     fn run_tile(
         &mut self,
         tile: usize,
         spec: &TileSpec,
+        positions: &[u32],
         x_shuf: &[f32],
         inv_perm: &[u32],
         members: &[u32],
@@ -495,7 +688,7 @@ impl<S: StepSession + ?Sized> TileWorker<S> {
         }
         self.inv_tile.clear();
         self.inv_tile
-            .extend((0..n_b).map(|q| rank[inv_perm[spec.pos0 + q] as usize] as i32));
+            .extend(positions.iter().map(|&p| rank[inv_perm[p as usize] as usize] as i32));
         // Per-tile sections, folded into `RunReport.sections` in
         // tile-index order by the fold — the tile timings used to be
         // dropped on the floor here, leaving tiled runs with a bare
@@ -536,8 +729,12 @@ pub(crate) struct TiledExecutor {
     cfg: ShuffleSoftSortConfig,
     d: usize,
     norm: f32,
-    plan: TilePlan,
-    /// Tile → its shuffled slots this phase, ascending (rebuilt per phase).
+    /// The phase-alternating plan set (phase `r` runs `plans[r % len]`);
+    /// one entry for `banded`, an (unoffset, half-offset) pair for
+    /// `snake`/`overlapped`.
+    plans: Vec<TilePlan>,
+    /// Tile → its shuffled slots this phase, ascending (rebuilt per phase;
+    /// sized to the largest plan in the set).
     members: Vec<Vec<u32>>,
     /// Shuffled slot → tile-local rank (companion to `members`).
     rank: Vec<u32>,
@@ -558,13 +755,17 @@ impl TiledExecutor {
         norm: f32,
         tile_n: usize,
     ) -> Result<Self> {
-        let plan = TilePlan::new(cfg.grid, d, tile_n);
-        let b = plan.tiles.len();
+        // The plan set shares one shape registry, so every worker's
+        // session vector covers every phase's tiles regardless of which
+        // plan a phase selects.
+        let mut shapes = Vec::new();
+        let plans = TilePlan::plan_set(cfg.tile_plan, cfg.grid, d, tile_n, &mut shapes);
+        let max_tiles = plans.iter().map(|p| p.tiles.len()).max().unwrap_or(1);
         // Parallelism budget: the explicit `threads` knob, else what the
         // backend would give one full-problem session — so a backend the
         // engine capped for batching caps tile dispatch identically.
         let budget = cfg.threads.unwrap_or_else(|| backend.default_threads()).max(1);
-        let wanted = budget.clamp(1, b);
+        let wanted = budget.clamp(1, max_tiles);
 
         // Parallel tile dispatch needs sessions that may cross threads;
         // back off to the sequential path when the backend cannot provide
@@ -576,8 +777,8 @@ impl TiledExecutor {
             // parallelism × in-tile row parallelism ≈ the budget.
             let per_tile_threads = (budget / wanted).max(1);
             'build: for _ in 0..wanted {
-                let mut sessions = Vec::with_capacity(plan.shapes.len());
-                for &shape in &plan.shapes {
+                let mut sessions = Vec::with_capacity(shapes.len());
+                for &shape in &shapes {
                     let opts = SessionOpts { threads: Some(per_tile_threads), simd: cfg.simd };
                     match backend.session_sendable(shape, opts)? {
                         Some(s) => sessions.push(s),
@@ -587,15 +788,15 @@ impl TiledExecutor {
                         }
                     }
                 }
-                par_workers.push(Mutex::new(TileWorker::new(cfg, &plan.shapes, sessions)));
+                par_workers.push(Mutex::new(TileWorker::new(cfg, &shapes, sessions)));
             }
         }
         let (pool, seq) = if par_workers.is_empty() {
-            let mut sessions = Vec::with_capacity(plan.shapes.len());
-            for &shape in &plan.shapes {
+            let mut sessions = Vec::with_capacity(shapes.len());
+            for &shape in &shapes {
                 sessions.push(backend.session(shape, cfg.session_opts())?);
             }
-            (None, Some(TileWorker::new(cfg, &plan.shapes, sessions)))
+            (None, Some(TileWorker::new(cfg, &shapes, sessions)))
         } else {
             (Some(WorkerPool::new(par_workers.len() - 1)), None)
         };
@@ -604,10 +805,10 @@ impl TiledExecutor {
             cfg: cfg.clone(),
             d,
             norm,
-            members: (0..b).map(|_| Vec::new()).collect(),
+            members: (0..max_tiles).map(|_| Vec::new()).collect(),
             rank: vec![0; cfg.grid.n()],
-            results: (0..b).map(|_| Mutex::new(None)).collect(),
-            plan,
+            results: (0..max_tiles).map(|_| Mutex::new(None)).collect(),
+            plans,
             par_workers,
             pool,
             seq,
@@ -615,16 +816,17 @@ impl TiledExecutor {
         })
     }
 
-    /// Dispatch every tile (parallel when a pool exists) and leave each
-    /// outcome in its `results` slot.
+    /// Dispatch every tile of `plans[plan_idx]` (parallel when a pool
+    /// exists) and leave each outcome in its `results` slot.
     fn dispatch_tiles(
         &mut self,
+        plan_idx: usize,
         tau: f32,
         x_shuf: &[f32],
         inv: &Permutation,
         phase_ctx: Option<trace::SpanContext>,
     ) -> Result<()> {
-        let plan = &self.plan;
+        let plan = &self.plans[plan_idx];
         let members = &self.members;
         let rank = &self.rank;
         let results = &self.results;
@@ -643,6 +845,7 @@ impl TiledExecutor {
                     let out = w.run_tile(
                         b,
                         &plan.tiles[b],
+                        plan.positions(b),
                         x_shuf,
                         inv_perm,
                         &members[b],
@@ -662,7 +865,18 @@ impl TiledExecutor {
             let w = self.seq.as_mut().expect("tiled executor has a sequential worker");
             for (b, spec) in plan.tiles.iter().enumerate() {
                 let out = w.run_tile(
-                    b, spec, x_shuf, inv_perm, &members[b], rank, cfg, tau, norm, d, phase_ctx,
+                    b,
+                    spec,
+                    plan.positions(b),
+                    x_shuf,
+                    inv_perm,
+                    &members[b],
+                    rank,
+                    cfg,
+                    tau,
+                    norm,
+                    d,
+                    phase_ctx,
                 );
                 *results[b].lock().expect("tile result mutex poisoned") = Some(out);
             }
@@ -673,7 +887,11 @@ impl TiledExecutor {
 
 impl PhaseExecutor for TiledExecutor {
     fn tiles(&self) -> usize {
-        self.plan.tiles.len()
+        self.plans[0].tiles.len()
+    }
+
+    fn annotate(&self, report: &mut RunReport) {
+        report.tile_plan = self.cfg.tile_plan.name().to_string();
     }
 
     fn run_phase(
@@ -689,7 +907,11 @@ impl PhaseExecutor for TiledExecutor {
     ) -> Result<Permutation> {
         let started = std::time::Instant::now();
         let n = shuf.len();
-        let b_total = self.plan.tiles.len();
+        // Phase-alternating plan selection: successive phases cycle
+        // through the plan set, so seams shift between phases (a no-op
+        // for `banded`, whose set has one plan).
+        let plan_idx = r % self.plans.len();
+        let b_total = self.plans[plan_idx].tiles.len();
 
         // Tile membership for this phase: shuffled slot j belongs to the
         // tile owning grid position shuf[j]; slots stay in ascending order
@@ -699,12 +921,12 @@ impl PhaseExecutor for TiledExecutor {
         }
         let shuf_s = shuf.as_slice();
         for (j, &pos) in shuf_s.iter().enumerate() {
-            let t = self.plan.tile_of[pos as usize] as usize;
+            let t = self.plans[plan_idx].tile_of[pos as usize] as usize;
             self.rank[j] = self.members[t].len() as u32;
             self.members[t].push(j as u32);
         }
 
-        self.dispatch_tiles(tau, x_shuf, inv, trace_ctx)?;
+        self.dispatch_tiles(plan_idx, tau, x_shuf, inv, trace_ctx)?;
 
         // Fold in tile-index order: deterministic no matter how the
         // dispatch interleaved. The per-tile permutations compose into one
@@ -751,6 +973,490 @@ impl PhaseExecutor for TiledExecutor {
         record_phase(report, &self.cfg, r, tau, &self.agg_losses, stats);
         Permutation::from_vec(sort_vec)
             .map_err(|e| anyhow!("tiled phase composition is not a bijection: {e}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pyramid executor: coarse-to-fine hierarchical phases.
+// ---------------------------------------------------------------------------
+
+/// One node of the pyramid's recursive split schedule, computed once per
+/// run from (grid, tile_n) and identical for every phase. Every region the
+/// recursion visits is a rectangle of the grid; splits are exact integer
+/// divisors, so all children of a `Split` share one region shape and one
+/// child node describes them all.
+enum PyrNode {
+    /// Region fits the budget: one SoftSort solve over the region grid.
+    Solve { shape_idx: usize },
+    /// No integer coarse split exists (prime-ish region): chunk the
+    /// region's row-major cells into independent ≈tile_n 1-D chains —
+    /// no cross-chain exchange at this level, noted in the run report.
+    Chains { chains: Vec<(usize, usize)> },
+    /// Sort the ch×cw subtile centroids on the coarse grid with the full
+    /// path, relocate whole subtiles by the coarse permutation, then
+    /// recurse into each subtile.
+    Split { ch: usize, cw: usize, coarse_idx: usize, sub_h: usize, sub_w: usize, child: Box<PyrNode> },
+}
+
+/// Pick the coarse split of an `h_r × w_r` region: among exact divisor
+/// pairs with 2 ≤ ch·cw ≤ tile_n and ≥ 2 cells per subtile, prefer the
+/// smallest coarse problem whose subtiles already fit the budget (its
+/// children are leaves — two levels total), tie-broken toward squarer
+/// subtiles; when no split reaches the budget in one step, take the
+/// largest coarse problem (fastest shrink), same tie-break. `None` when
+/// the region has no usable divisor pair at all.
+fn pick_split(h_r: usize, w_r: usize, tile_n: usize) -> Option<(usize, usize)> {
+    let n_r = h_r * w_r;
+    let mut best: Option<(bool, usize, usize, (usize, usize))> = None;
+    for ch in 1..=h_r {
+        if h_r % ch != 0 {
+            continue;
+        }
+        for cw in 1..=w_r {
+            if w_r % cw != 0 {
+                continue;
+            }
+            let b = ch * cw;
+            if b < 2 || b > tile_n {
+                continue;
+            }
+            let (sh, sw) = (h_r / ch, w_r / cw);
+            if sh * sw < 2 {
+                continue;
+            }
+            let fits = n_r / b <= tile_n;
+            // Rank: fits first; among fits smaller b wins, among non-fits
+            // larger b wins; then the squarer subtile.
+            let coarse_rank = if fits { tile_n - b } else { b };
+            let cand = (fits, coarse_rank, sh.min(sw), (ch, cw));
+            if best.as_ref().map_or(true, |bst| cand > *bst) {
+                best = Some(cand);
+            }
+        }
+    }
+    best.map(|(_, _, _, split)| split)
+}
+
+/// Build the split schedule for an `h_r × w_r` region. Returns the node
+/// and the number of leaf solves per region instance (`Split` multiplies
+/// by its subtile count). `levels` tracks the deepest `Split` nesting;
+/// `fallback` records whether any region needed the chains fallback.
+fn build_pyramid(
+    h_r: usize,
+    w_r: usize,
+    d: usize,
+    tile_n: usize,
+    depth: usize,
+    shapes: &mut Vec<StepShape>,
+    levels: &mut usize,
+    fallback: &mut bool,
+) -> (PyrNode, usize) {
+    let n_r = h_r * w_r;
+    let reg = |shapes: &mut Vec<StepShape>, shape: StepShape| match shapes
+        .iter()
+        .position(|s| *s == shape)
+    {
+        Some(i) => i,
+        None => {
+            shapes.push(shape);
+            shapes.len() - 1
+        }
+    };
+    if n_r <= tile_n || n_r <= 2 {
+        let idx = reg(shapes, StepShape { n: n_r, d, h: h_r, w: w_r });
+        return (PyrNode::Solve { shape_idx: idx }, 1);
+    }
+    match pick_split(h_r, w_r, tile_n) {
+        Some((ch, cw)) => {
+            *levels = (*levels).max(depth + 1);
+            let coarse_idx = reg(shapes, StepShape { n: ch * cw, d, h: ch, w: cw });
+            let (sub_h, sub_w) = (h_r / ch, w_r / cw);
+            let (child, child_leaves) =
+                build_pyramid(sub_h, sub_w, d, tile_n, depth + 1, shapes, levels, fallback);
+            let leaves = ch * cw * child_leaves;
+            (
+                PyrNode::Split { ch, cw, coarse_idx, sub_h, sub_w, child: Box::new(child) },
+                leaves,
+            )
+        }
+        None => {
+            // Prime-ish region: independent row-major chains (the banded
+            // wide-grid cut applied to the region), no coarse exchange.
+            *fallback = true;
+            let per = tile_n.clamp(2, n_r.max(2));
+            let mut chains = Vec::new();
+            let mut c0 = 0usize;
+            while c0 < n_r {
+                let mut take = per.min(n_r - c0);
+                if n_r - c0 - take == 1 {
+                    take += 1;
+                }
+                let idx = reg(shapes, StepShape { n: take, d, h: 1, w: take });
+                chains.push((take, idx));
+                c0 += take;
+            }
+            let count = chains.len();
+            (PyrNode::Chains { chains }, count)
+        }
+    }
+}
+
+/// The per-phase mutable state of the pyramid recursion, split out of the
+/// executor so the recursion can borrow it wholesale alongside the
+/// schedule. All buffers are allocated once and reused phase to phase.
+struct PyrState {
+    sessions: Vec<Box<dyn StepSession>>,
+    slots: Vec<ShapeSlot>,
+    bufs: LoopBufs,
+    /// Grid position → shuffled slot currently assigned there; seeded from
+    /// the phase's inverse shuffle, permuted in place by every coarse
+    /// relocation and leaf solve, and read out as the phase result.
+    slot_at: Vec<u32>,
+    /// Region-sized staging for subtile relocation and leaf gathers.
+    scratch: Vec<u32>,
+    /// Leaf gather: the leaf's slots ascending + slot → local rank.
+    members: Vec<u32>,
+    rank: Vec<u32>,
+    x_tile: Vec<f32>,
+    inv_tile: Vec<i32>,
+    /// Centroid rows for coarse solves (coarse-position order).
+    cent: Vec<f32>,
+    agg_losses: Vec<f64>,
+    stats: LoopStats,
+}
+
+/// Read-only per-phase context of the recursion.
+struct PyrEnv<'a> {
+    cfg: &'a ShuffleSoftSortConfig,
+    norm: f32,
+    d: usize,
+    grid_w: usize,
+    n: usize,
+    tau: f32,
+    /// Span context for the *root* solves only — deeper levels run
+    /// unparented so a sampled phase stays within the span budget no
+    /// matter how many regions the pyramid visits.
+    ctx: Option<trace::SpanContext>,
+}
+
+/// Solve one leaf over an explicit cell window: region cells are
+/// enumerated row-major (`k ∈ [k0, k0+len)`, cell `(top + k/w_r,
+/// left + k%w_r)`), gathered exactly like a tile (ascending-slot members,
+/// rank-composed inverse), solved on `shapes[shape_idx]`, and written back
+/// into `slot_at`. Losses fold item-weighted into the phase aggregate.
+#[allow(clippy::too_many_arguments)]
+fn pyr_solve_cells(
+    st: &mut PyrState,
+    env: &PyrEnv,
+    x_shuf: &[f32],
+    shape_idx: usize,
+    top: usize,
+    left: usize,
+    w_r: usize,
+    k0: usize,
+    len: usize,
+    ctx: Option<trace::SpanContext>,
+) -> Result<()> {
+    let PyrState {
+        sessions, slots, bufs, slot_at, scratch, members, rank, x_tile, inv_tile, agg_losses,
+        stats, ..
+    } = st;
+    let cell = |k: usize| (top + k / w_r) * env.grid_w + left + k % w_r;
+    // Current slots at the window's cells, in cell order.
+    scratch.clear();
+    scratch.extend((k0..k0 + len).map(|k| slot_at[cell(k)]));
+    members.clear();
+    members.extend_from_slice(scratch);
+    members.sort_unstable();
+    for (t, &s) in members.iter().enumerate() {
+        rank[s as usize] = t as u32;
+    }
+    x_tile.clear();
+    for &s in members.iter() {
+        let o = s as usize * env.d;
+        x_tile.extend_from_slice(&x_shuf[o..o + env.d]);
+    }
+    inv_tile.clear();
+    inv_tile.extend(scratch.iter().map(|&s| rank[s as usize] as i32));
+    let slot = &mut slots[shape_idx];
+    debug_assert_eq!(slot.shape.n, len);
+    let (perm, lstats) = run_inner_loop(
+        sessions[shape_idx].as_mut(),
+        &mut slot.step,
+        &mut slot.adam,
+        bufs,
+        x_tile,
+        inv_tile,
+        env.tau,
+        env.norm,
+        env.cfg,
+        ctx,
+    )?;
+    let wgt = len as f64 / env.n as f64;
+    for (i, &l) in bufs.losses.iter().enumerate() {
+        agg_losses[i] += l * wgt;
+    }
+    stats.extensions += lstats.extensions;
+    stats.repaired += lstats.repaired;
+    // New slot at local position q = members[p[inv_tile[q]]] — the same
+    // algebra as the tiled fold, applied in place.
+    let p = perm.as_slice();
+    for (q, k) in (k0..k0 + len).enumerate() {
+        slot_at[cell(k)] = members[p[inv_tile[q] as usize] as usize];
+    }
+    Ok(())
+}
+
+/// Run one pyramid node over the region at (top, left) of size h_r × w_r.
+#[allow(clippy::too_many_arguments)]
+fn pyr_solve_node(
+    node: &PyrNode,
+    st: &mut PyrState,
+    env: &PyrEnv,
+    x_shuf: &[f32],
+    top: usize,
+    left: usize,
+    h_r: usize,
+    w_r: usize,
+    depth: usize,
+) -> Result<()> {
+    let ctx = if depth == 0 { env.ctx } else { None };
+    match node {
+        PyrNode::Solve { shape_idx } => {
+            pyr_solve_cells(st, env, x_shuf, *shape_idx, top, left, w_r, 0, h_r * w_r, ctx)
+        }
+        PyrNode::Chains { chains } => {
+            let mut k0 = 0usize;
+            for &(len, shape_idx) in chains {
+                pyr_solve_cells(st, env, x_shuf, shape_idx, top, left, w_r, k0, len, None)?;
+                k0 += len;
+            }
+            Ok(())
+        }
+        PyrNode::Split { ch, cw, coarse_idx, sub_h, sub_w, child } => {
+            let (ch, cw) = (*ch, *cw);
+            let bb = ch * cw;
+            let sub_n = sub_h * sub_w;
+            let d = env.d;
+            // Subtile centroids in coarse row-major order: the mean row of
+            // the items currently assigned to each subtile.
+            {
+                let PyrState { slot_at, cent, .. } = &mut *st;
+                cent.clear();
+                cent.resize(bb * d, 0.0);
+                for rr in 0..h_r {
+                    let bi = rr / sub_h;
+                    for cc in 0..w_r {
+                        let b = bi * cw + cc / sub_w;
+                        let s = slot_at[(top + rr) * env.grid_w + left + cc] as usize;
+                        let (co, xo) = (b * d, s * d);
+                        for k in 0..d {
+                            cent[co + k] += x_shuf[xo + k];
+                        }
+                    }
+                }
+                let inv_n = 1.0 / sub_n as f32;
+                for v in cent.iter_mut() {
+                    *v *= inv_n;
+                }
+            }
+            // Coarse solve: B centroids on the ch×cw grid, identity
+            // current assignment (centroid b sits at coarse position b).
+            // Auxiliary to the item loss, so its losses stay out of the
+            // curve; its validity stats still count.
+            let perm_c = {
+                let PyrState { sessions, slots, bufs, inv_tile, cent, stats, .. } = &mut *st;
+                inv_tile.clear();
+                inv_tile.extend(0..bb as i32);
+                let slot = &mut slots[*coarse_idx];
+                let (perm_c, lstats) = run_inner_loop(
+                    sessions[*coarse_idx].as_mut(),
+                    &mut slot.step,
+                    &mut slot.adam,
+                    bufs,
+                    cent,
+                    inv_tile,
+                    env.tau,
+                    env.norm,
+                    env.cfg,
+                    ctx,
+                )?;
+                stats.extensions += lstats.extensions;
+                stats.repaired += lstats.repaired;
+                perm_c
+            };
+            // Relocate whole subtiles: coarse position b receives subtile
+            // perm_c[b]'s items, row-major layout preserved.
+            {
+                let PyrState { slot_at, scratch, .. } = &mut *st;
+                scratch.clear();
+                for b in 0..bb {
+                    let (bi, bj) = (b / cw, b % cw);
+                    for rr in 0..*sub_h {
+                        let row = (top + bi * sub_h + rr) * env.grid_w + left + bj * sub_w;
+                        scratch.extend_from_slice(&slot_at_row(slot_at, row, *sub_w));
+                    }
+                }
+                let pc = perm_c.as_slice();
+                for b in 0..bb {
+                    let src = pc[b] as usize * sub_n;
+                    let (bi, bj) = (b / cw, b % cw);
+                    for rr in 0..*sub_h {
+                        let row = (top + bi * sub_h + rr) * env.grid_w + left + bj * sub_w;
+                        slot_at[row..row + sub_w]
+                            .copy_from_slice(&scratch[src + rr * sub_w..src + (rr + 1) * sub_w]);
+                    }
+                }
+            }
+            // Refine within each relocated subtile.
+            for b in 0..bb {
+                let (bi, bj) = (b / cw, b % cw);
+                pyr_solve_node(
+                    child,
+                    st,
+                    env,
+                    x_shuf,
+                    top + bi * sub_h,
+                    left + bj * sub_w,
+                    *sub_h,
+                    *sub_w,
+                    depth + 1,
+                )?;
+            }
+            Ok(())
+        }
+    }
+}
+
+/// `slot_at[row .. row + w]` — a named helper only so the relocation's
+/// gather reads symmetrically to its scatter.
+fn slot_at_row(slot_at: &[u32], row: usize, w: usize) -> &[u32] {
+    &slot_at[row..row + w]
+}
+
+/// The coarse-to-fine executor (`pyramid=true`): every phase sorts
+/// subtile centroids on a coarse grid (whole-subtile relocation — items
+/// cross the entire grid in one phase), then refines recursively until
+/// regions fit the O(tile_n²) budget. Runs its solves sequentially (each
+/// session still uses the config's row-thread budget); the per-phase
+/// result is a single in-place permutation of the position→slot
+/// assignment, so the bijection invariant is checked once per phase like
+/// the tiled fold. With `tile_n >= N` the schedule is a single leaf and
+/// the phase is bit-identical to the full executor.
+pub(crate) struct PyramidExecutor {
+    cfg: ShuffleSoftSortConfig,
+    norm: f32,
+    root: PyrNode,
+    levels: usize,
+    leaf_tiles: usize,
+    notes: Vec<String>,
+    st: PyrState,
+    d: usize,
+}
+
+impl PyramidExecutor {
+    pub fn new(
+        backend: &dyn StepBackend,
+        cfg: &ShuffleSoftSortConfig,
+        d: usize,
+        norm: f32,
+        tile_n: usize,
+    ) -> Result<Self> {
+        let g = cfg.grid;
+        let tile_n = tile_n.max(2);
+        let mut shapes = Vec::new();
+        let (mut levels, mut fallback) = (0usize, false);
+        let (root, leaf_tiles) =
+            build_pyramid(g.h, g.w, d, tile_n, 0, &mut shapes, &mut levels, &mut fallback);
+        let mut notes = Vec::new();
+        if fallback {
+            notes.push(format!(
+                "pyramid: no integer coarse split for a {}x{} region; items there refine in \
+                 independent chains without cross-tile exchange",
+                g.h, g.w
+            ));
+        }
+        let mut sessions = Vec::with_capacity(shapes.len());
+        for &shape in &shapes {
+            sessions.push(backend.session(shape, cfg.session_opts())?);
+        }
+        let max_b = shapes.iter().map(|s| s.n).max().unwrap_or(0);
+        let st = PyrState {
+            sessions,
+            slots: shapes.iter().map(|&s| ShapeSlot::new(cfg, s)).collect(),
+            bufs: LoopBufs::default(),
+            slot_at: vec![0; g.n()],
+            scratch: Vec::with_capacity(g.n()),
+            members: Vec::with_capacity(max_b),
+            rank: vec![0; g.n()],
+            x_tile: Vec::with_capacity(max_b * d),
+            inv_tile: Vec::with_capacity(max_b),
+            cent: Vec::new(),
+            agg_losses: Vec::new(),
+            stats: LoopStats::default(),
+        };
+        Ok(PyramidExecutor { cfg: cfg.clone(), norm, root, levels, leaf_tiles, notes, st, d })
+    }
+}
+
+impl PhaseExecutor for PyramidExecutor {
+    fn tiles(&self) -> usize {
+        self.leaf_tiles
+    }
+
+    fn annotate(&self, report: &mut RunReport) {
+        report.tile_plan = "pyramid".to_string();
+        report.notes.extend(self.notes.iter().cloned());
+    }
+
+    fn run_phase(
+        &mut self,
+        r: usize,
+        tau: f32,
+        x_shuf: &[f32],
+        _shuf: &Permutation,
+        inv: &Permutation,
+        _inv_idx: &[i32],
+        report: &mut RunReport,
+        trace_ctx: Option<trace::SpanContext>,
+    ) -> Result<Permutation> {
+        let started = std::time::Instant::now();
+        let n = inv.len();
+        let g = self.cfg.grid;
+        let mut span = trace::Span::child_of(trace_ctx, "pyramid");
+        span.attr_u64("levels", self.levels as u64);
+        span.attr_u64("leaves", self.leaf_tiles as u64);
+
+        self.st.slot_at.clear();
+        self.st.slot_at.extend_from_slice(inv.as_slice());
+        self.st.agg_losses.clear();
+        self.st.agg_losses.resize(self.cfg.inner_iters, 0.0);
+        self.st.stats = LoopStats::default();
+
+        let env = PyrEnv {
+            cfg: &self.cfg,
+            norm: self.norm,
+            d: self.d,
+            grid_w: g.w,
+            n,
+            tau,
+            ctx: span.ctx(),
+        };
+        pyr_solve_node(&self.root, &mut self.st, &env, x_shuf, 0, 0, g.h, g.w, 0)
+            .with_context(|| format!("pyramid phase {r}"))?;
+        span.end();
+        report.sections.add("execute", started.elapsed());
+
+        // slot_at is the desired position→slot assignment; the driver's
+        // convention is slot_at[pos] = sort_perm[inv[pos]], so scatter
+        // through the inverse shuffle.
+        let mut sort_vec = vec![0u32; n];
+        for (pos, &s) in self.st.slot_at.iter().enumerate() {
+            sort_vec[inv.as_slice()[pos] as usize] = s;
+        }
+        record_phase(report, &self.cfg, r, tau, &self.st.agg_losses, self.st.stats);
+        Permutation::from_vec(sort_vec)
+            .map_err(|e| anyhow!("pyramid phase composition is not a bijection: {e}"))
     }
 }
 
@@ -806,8 +1512,9 @@ mod tests {
         // Coverage still exact.
         let g = GridShape::new(3, 13);
         let mut covered = vec![false; g.n()];
-        for (b, spec) in p.tiles.iter().enumerate() {
-            for pos in spec.pos0..spec.pos0 + spec.shape.n {
+        for b in 0..p.tiles.len() {
+            for &pos in p.positions(b) {
+                let pos = pos as usize;
                 assert!(!covered[pos]);
                 covered[pos] = true;
                 assert_eq!(p.tile_of[pos], b as u32);
@@ -835,14 +1542,165 @@ mod tests {
             let g = GridShape::new(h, w);
             let p = TilePlan::new(g, 3, t);
             let mut covered = vec![false; g.n()];
-            for (b, spec) in p.tiles.iter().enumerate() {
-                for pos in spec.pos0..spec.pos0 + spec.shape.n {
+            for b in 0..p.tiles.len() {
+                for &pos in p.positions(b) {
+                    let pos = pos as usize;
                     assert!(!covered[pos], "{h}x{w} t={t}: position {pos} covered twice");
                     covered[pos] = true;
                     assert_eq!(p.tile_of[pos], b as u32);
                 }
             }
             assert!(covered.iter().all(|&c| c), "{h}x{w} t={t}: gap in coverage");
+        }
+    }
+
+    /// Validity of a plan: every grid position appears exactly once across
+    /// the plan's tiles (a bijection between positions and (tile, local)
+    /// pairs), `tile_of` agrees with the position lists, and every tile
+    /// holds ≥ 2 items with a consistent shape.
+    fn assert_plan_valid(p: &TilePlan, g: GridShape, tag: &str) {
+        let mut covered = vec![false; g.n()];
+        for b in 0..p.tiles.len() {
+            let t = &p.tiles[b];
+            assert_eq!(t.shape.n, t.shape.h * t.shape.w, "{tag}: tile {b} shape inconsistent");
+            assert_eq!(t.shape, p.shapes[t.shape_idx], "{tag}: tile {b} shape_idx mismatch");
+            assert!(t.shape.n >= 2 || g.n() < 2, "{tag}: tile {b} holds < 2 items");
+            for &pos in p.positions(b) {
+                let pos = pos as usize;
+                assert!(pos < g.n(), "{tag}: tile {b} position {pos} out of grid");
+                assert!(!covered[pos], "{tag}: position {pos} covered twice");
+                covered[pos] = true;
+                assert_eq!(p.tile_of[pos], b as u32, "{tag}: tile_of disagrees at {pos}");
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "{tag}: gap in coverage");
+    }
+
+    #[test]
+    fn snake_and_overlapped_plans_are_valid_on_ragged_shapes() {
+        for (h, w, t) in [
+            (8usize, 8usize, 16usize),
+            (5, 7, 10),
+            (1, 40, 7),
+            (40, 1, 7),
+            (9, 4, 13),
+            (3, 50, 8),
+            (2, 2, 2),
+            (1, 5, 2),
+        ] {
+            let g = GridShape::new(h, w);
+            for kind in [TilePlanKind::Banded, TilePlanKind::Snake, TilePlanKind::Overlapped] {
+                let mut shapes = Vec::new();
+                let plans = TilePlan::plan_set(kind, g, 3, t, &mut shapes);
+                assert!(!plans.is_empty());
+                for (i, p) in plans.iter().enumerate() {
+                    assert_plan_valid(p, g, &format!("{kind:?}[{i}] {h}x{w} t={t}"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn offset_variants_shift_seams() {
+        // On shapes big enough to carry an offset, the phase-alternating
+        // pair must actually differ — otherwise overlapped degenerates to
+        // banded and seams never move.
+        for (kind, h, w, t) in [
+            (TilePlanKind::Overlapped, 16usize, 8usize, 16usize),
+            (TilePlanKind::Overlapped, 1, 40, 8),
+            (TilePlanKind::Snake, 16, 8, 16),
+            (TilePlanKind::Snake, 9, 4, 8),
+        ] {
+            let g = GridShape::new(h, w);
+            let mut shapes = Vec::new();
+            let plans = TilePlan::plan_set(kind, g, 3, t, &mut shapes);
+            assert_eq!(plans.len(), 2, "{kind:?} {h}x{w} t={t}: expected an alternating pair");
+            assert!(
+                !plans[1].same_partition(&plans[0]),
+                "{kind:?} {h}x{w} t={t}: offset variant equals the base cut"
+            );
+        }
+    }
+
+    #[test]
+    fn snake_path_is_boustrophedon() {
+        // Snake tiles walk row-major with odd rows reversed, so consecutive
+        // path positions are always grid neighbors (|Δrow| + |Δcol| == 1).
+        let g = GridShape::new(6, 5);
+        let mut shapes = Vec::new();
+        let p = TilePlan::snake(g, 3, 7, false, &mut shapes);
+        assert_plan_valid(&p, g, "snake 6x5");
+        let mut flat = Vec::new();
+        for b in 0..p.tiles.len() {
+            flat.extend_from_slice(p.positions(b));
+        }
+        for pair in flat.windows(2) {
+            let (a, b) = (pair[0] as usize, pair[1] as usize);
+            let (ar, ac) = (a / g.w, a % g.w);
+            let (br, bc) = (b / g.w, b % g.w);
+            let dist = ar.abs_diff(br) + ac.abs_diff(bc);
+            assert_eq!(dist, 1, "path jump between {a} and {b}");
+        }
+    }
+
+    #[test]
+    fn plan_set_collapses_when_one_tile_covers_the_grid() {
+        // tile_n >= n: every kind degenerates to the single full-grid tile
+        // (and the pair collapses), preserving the one-tile contract.
+        for kind in [TilePlanKind::Banded, TilePlanKind::Snake, TilePlanKind::Overlapped] {
+            let g = GridShape::new(4, 4);
+            let mut shapes = Vec::new();
+            let plans = TilePlan::plan_set(kind, g, 3, 16, &mut shapes);
+            assert_eq!(plans.len(), 1, "{kind:?}");
+            assert_eq!(plans[0].tiles.len(), 1, "{kind:?}");
+            let s = plans[0].tiles[0].shape;
+            assert_eq!((s.n, s.h, s.w), (16, 4, 4), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn pyramid_schedule_splits_to_budget() {
+        // 256x256 with tile_n=512: one coarse level (128 subtiles of 512)
+        // then leaves; every leaf fits the budget.
+        let mut shapes = Vec::new();
+        let (mut levels, mut fallback) = (0usize, false);
+        let (root, leaves) =
+            build_pyramid(256, 256, 3, 512, 0, &mut shapes, &mut levels, &mut fallback);
+        assert!(!fallback);
+        assert!(levels >= 1, "large grid must split at least once");
+        assert!(leaves > 1);
+        match &root {
+            PyrNode::Split { ch, cw, sub_h, sub_w, .. } => {
+                assert!(ch * cw >= 2 && ch * cw <= 512);
+                assert_eq!(ch * sub_h, 256);
+                assert_eq!(cw * sub_w, 256);
+            }
+            _ => panic!("256x256/512 must be a Split at the root"),
+        }
+        for s in &shapes {
+            assert!(s.n <= 512, "shape {s:?} exceeds the budget");
+        }
+
+        // Budget >= n: a single leaf solve of the whole grid.
+        let mut shapes = Vec::new();
+        let (mut levels, mut fallback) = (0usize, false);
+        let (root, leaves) =
+            build_pyramid(8, 8, 3, 512, 0, &mut shapes, &mut levels, &mut fallback);
+        assert_eq!((levels, leaves), (0, 1));
+        assert!(matches!(root, PyrNode::Solve { .. }));
+        assert_eq!(shapes, vec![StepShape { n: 64, d: 3, h: 8, w: 8 }]);
+
+        // Prime 1-D span falls back to chains but still covers everything.
+        let mut shapes = Vec::new();
+        let (mut levels, mut fallback) = (0usize, false);
+        let (root, _) = build_pyramid(1, 97, 3, 8, 0, &mut shapes, &mut levels, &mut fallback);
+        assert!(fallback);
+        match &root {
+            PyrNode::Chains { chains } => {
+                assert_eq!(chains.iter().map(|&(l, _)| l).sum::<usize>(), 97);
+                assert!(chains.iter().all(|&(l, _)| l >= 2));
+            }
+            _ => panic!("prime span must fall back to chains"),
         }
     }
 }

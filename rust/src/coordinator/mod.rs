@@ -108,6 +108,10 @@ pub(crate) fn run_shuffle_softsort(
     // optimizer, step scratch — allocated once here and reused per phase.
     let mut exec = executor::executor_for(backend, cfg, d, norm)?;
     report.tiles = exec.tiles();
+    exec.annotate(&mut report);
+    if let Some(note) = &cfg.tile_note {
+        report.notes.push(note.clone());
+    }
 
     let mut tracker = Tracker::new(n);
     let mut x_cur = data.rows.clone();

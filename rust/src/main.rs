@@ -82,6 +82,12 @@ fn cmd_sort(args: &ParsedArgs) -> Result<()> {
         t.parse::<usize>().map_err(|_| anyhow!("--tile-n must be an integer"))?;
         overrides.push(("tile_n".into(), t.to_string()));
     }
+    if let Some(p) = args.opt("tile-plan") {
+        overrides.push(("tile_plan".into(), p.to_string()));
+    }
+    if args.flag("pyramid") {
+        overrides.push(("pyramid".into(), "true".to_string()));
+    }
     overrides.extend(args.overrides.iter().cloned());
 
     let make_dataset = |seed: u64| -> Result<Dataset> {
@@ -259,6 +265,7 @@ fn cmd_serve(args: &ParsedArgs) -> Result<()> {
     }
     cfg.trace_sample = args.opt_usize("trace-sample", cfg.trace_sample as usize)? as u64;
     cfg.trace_keep = args.opt_usize("trace-keep", cfg.trace_keep)?.max(1);
+    cfg.trace_tail_ms = args.opt_usize("trace-tail-ms", cfg.trace_tail_ms as usize)? as u64;
     // Dedicated flags first, bare `k=v` pairs after: overrides win.
     for (k, v) in &args.overrides {
         cfg.set(k, v)?;

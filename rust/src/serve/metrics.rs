@@ -203,6 +203,9 @@ pub struct Metrics {
     pub rate_limited: AtomicU64,
     /// Requests refused with 401 (missing or wrong bearer token).
     pub auth_failures: AtomicU64,
+    /// Speculatively-traced requests kept by the tail sampler (root span
+    /// ran past `--trace-tail-ms` after the head sampler skipped them).
+    pub trace_tail_kept: AtomicU64,
     /// Time jobs spent in a shard sub-queue before an engine host popped
     /// them. Observed for every engine job, traced or not.
     pub queue_wait: Histogram,
@@ -243,6 +246,7 @@ impl Metrics {
             shard_steals: AtomicU64::new(0),
             rate_limited: AtomicU64::new(0),
             auth_failures: AtomicU64::new(0),
+            trace_tail_kept: AtomicU64::new(0),
             queue_wait: Histogram::default(),
             phase_exec: Histogram::default(),
             tile_exec: Histogram::default(),
@@ -488,6 +492,7 @@ impl Metrics {
                 obj([
                     ("keep", Json::from(view.trace_keep)),
                     ("finished_evictions", Json::from(view.trace_evictions)),
+                    ("tail_kept", Json::from(Self::load(&self.trace_tail_kept))),
                 ]),
             ),
             ("convergence", self.convergence_json()),
@@ -518,6 +523,7 @@ impl Metrics {
         metric("queue_depth", "gauge", view.queue_depth as u64);
         metric("trace_keep", "gauge", view.trace_keep);
         metric("trace_finished_evictions_total", "counter", view.trace_evictions);
+        metric("trace_tail_kept_total", "counter", Self::load(&self.trace_tail_kept));
         if let Some(p) = &view.persist {
             metric("cache_persist_appends_total", "counter", p.appends);
             metric("cache_persist_replayed_total", "counter", p.replayed);
@@ -939,13 +945,16 @@ mod tests {
     #[test]
     fn trace_lru_counters_export() {
         let m = Metrics::new();
+        m.trace_tail_kept.fetch_add(4, Ordering::Relaxed);
         let view = view_with_shards();
         let j = m.to_json(&view);
         let tr = j.get("trace").unwrap();
         assert_eq!(tr.get("keep").unwrap().as_usize(), Some(128));
         assert_eq!(tr.get("finished_evictions").unwrap().as_usize(), Some(3));
+        assert_eq!(tr.get("tail_kept").unwrap().as_usize(), Some(4));
         let text = m.to_prometheus(&view);
         assert!(text.contains("sssort_trace_keep 128"), "{text}");
         assert!(text.contains("sssort_trace_finished_evictions_total 3"), "{text}");
+        assert!(text.contains("sssort_trace_tail_kept_total 4"), "{text}");
     }
 }

@@ -215,6 +215,17 @@ struct Ctx {
     profile: trace::profile::Profile,
 }
 
+/// The per-request sampling decision: keep the trace unconditionally
+/// (head sampler hit), trace speculatively and keep it only if the
+/// request runs longer than `trace_tail_ms` (tail sampling), or don't
+/// trace at all.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum TraceMode {
+    Off,
+    Head,
+    Tail,
+}
+
 impl Ctx {
     /// Effective tracing switch: `trace=false` and `trace_sample=0` both
     /// mean "never trace" (no root spans, `/v1/trace` + `/v1/profile` 404).
@@ -222,17 +233,22 @@ impl Ctx {
         self.cfg.trace && self.cfg.trace_sample > 0
     }
 
-    /// The once-per-request head sampling decision, made at accept. A
+    /// The once-per-request sampling decision, made at accept. Head: a
     /// deterministic counter (not randomness) so exactly ⌈R/K⌉ of R
-    /// requests trace, starting with the first.
-    fn sample_request(&self) -> bool {
+    /// requests trace, starting with the first. When `trace_tail_ms > 0`,
+    /// a request the head counter would skip still traces speculatively
+    /// (`Tail`) — the handler keeps it only if the request turns out slow,
+    /// so latency outliers are captured even at sparse head rates.
+    fn sample_request(&self) -> TraceMode {
         if !self.cfg.trace {
-            return false;
+            return TraceMode::Off;
         }
         match self.cfg.trace_sample {
-            0 => false,
-            1 => true,
-            k => self.sample_counter.fetch_add(1, Ordering::Relaxed) % k == 0,
+            0 => TraceMode::Off,
+            1 => TraceMode::Head,
+            k if self.sample_counter.fetch_add(1, Ordering::Relaxed) % k == 0 => TraceMode::Head,
+            _ if self.cfg.trace_tail_ms > 0 => TraceMode::Tail,
+            _ => TraceMode::Off,
         }
     }
 }
@@ -515,7 +531,9 @@ fn handle(ctx: &Ctx, req: &Request, peer: IpAddr) -> Response {
     // requests get the inert span, so every downstream instrumentation
     // point (shard_route, queue_wait, engine_job, phases, tiles, step
     // clocks) sees `None` and stays on the load-and-branch path.
-    let mut root = if ctx.sample_request() {
+    let mode = ctx.sample_request();
+    let started = Instant::now();
+    let mut root = if mode != TraceMode::Off {
         trace::Span::root("request")
     } else {
         trace::Span::off()
@@ -537,6 +555,19 @@ fn handle(ctx: &Ctx, req: &Request, peer: IpAddr) -> Response {
     root.end();
     match trace_id {
         Some(id) => {
+            // Tail-sampled requests are kept only when the root span ran
+            // past the threshold; fast ones are discarded wholesale —
+            // their records never reach the finished LRU, the metrics
+            // histograms or the profile, and the client gets no
+            // `X-Trace-Id` (the trace does not exist).
+            if mode == TraceMode::Tail {
+                let kept = started.elapsed().as_millis() as u64 >= ctx.cfg.trace_tail_ms;
+                if !kept {
+                    trace::discard(id);
+                    return resp;
+                }
+                ctx.metrics.trace_tail_kept.fetch_add(1, Ordering::Relaxed);
+            }
             // Assemble now — every span of this request has ended — fold
             // the span-derived telemetry into /metrics and the collapsed
             // stacks into the continuous profile.
@@ -648,6 +679,7 @@ fn healthz(ctx: &Ctx) -> Response {
             ("version", Json::from(env!("CARGO_PKG_VERSION"))),
             ("simd", Json::from(crate::backend::simd::detected().name())),
             ("trace_sample", Json::from(if ctx.cfg.trace { ctx.cfg.trace_sample } else { 0 })),
+            ("trace_tail_ms", Json::from(if ctx.cfg.trace { ctx.cfg.trace_tail_ms } else { 0 })),
         ])
         .to_string_compact(),
     )
@@ -1141,6 +1173,8 @@ fn render_outcome(
                 ("rejected_phases", Json::from(out.report.rejected_phases)),
                 ("extensions", Json::from(out.report.extensions)),
                 ("tiles", Json::from(out.report.tiles)),
+                ("tile_plan", Json::from(out.report.tile_plan.as_str())),
+                ("notes", arr(out.report.notes.iter().map(|n| Json::from(n.as_str())))),
             ]),
         ));
     }

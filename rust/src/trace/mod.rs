@@ -629,6 +629,38 @@ pub fn finish(trace_id: u64) -> Option<Arc<FinishedTrace>> {
     Some(t)
 }
 
+/// Drop a trace the caller decided not to keep (tail-based sampling: a
+/// speculatively-traced request that finished fast). Drains the rings the
+/// same way [`finish`] does — so other traces' records still park in the
+/// pending map — then removes the discarded trace's records outright:
+/// they never enter the finished LRU and are not counted as orphans
+/// (dropping them is the caller's explicit intent, not record loss).
+pub fn discard(trace_id: u64) {
+    if !enabled() {
+        return;
+    }
+    let rings: Vec<Arc<Mutex<Ring>>> = lock(registry()).clone();
+    let mut drained: Vec<SpanRecord> = Vec::new();
+    let mut unattributed = 0u64;
+    for ring in &rings {
+        let (recs, dropped) = lock(ring).drain();
+        unattributed += dropped;
+        drained.extend(recs);
+    }
+    drop(rings);
+    lock(registry()).retain(|r| Arc::strong_count(r) > 1);
+    let mut st = lock(store());
+    st.orphan_dropped += unattributed;
+    for r in drained {
+        if r.trace_id == trace_id {
+            continue;
+        }
+        park(&mut st, r, trace_id);
+    }
+    st.pending.remove(&trace_id);
+    st.pending_order.retain(|id| *id != trace_id);
+}
+
 /// Look up a finished trace (`GET /v1/trace/<id>`) and bump its LRU
 /// recency — a trace a client is actively polling must not be the
 /// eviction victim while never-read traces survive.
@@ -746,6 +778,27 @@ mod tests {
         assert!(Span::child("y").ctx().is_none());
         assert!(finish(123).is_none());
         set_enabled(prev);
+    }
+
+    #[test]
+    fn discard_drops_a_trace_but_preserves_others() {
+        let _e = Enabled::new();
+        // Two concurrent traces; discarding one must not lose the other's
+        // already-recorded spans, and the discarded id must be gone.
+        let keep = Span::root("kept");
+        let keep_id = keep.ctx().unwrap().trace_id;
+        let inner = Span::child_of(keep.ctx(), "work");
+        inner.end();
+        let drop_root = Span::root("dropped");
+        let drop_id = drop_root.ctx().unwrap().trace_id;
+        drop_root.end();
+        discard(drop_id);
+        assert!(finish(drop_id).is_none(), "discarded trace must not finish");
+        assert!(get(drop_id).is_none(), "discarded trace must not be retrievable");
+        keep.end();
+        let t = finish(keep_id).expect("sibling trace survives a discard");
+        assert_eq!(t.spans.len(), 2);
+        assert_eq!(t.dropped, 0, "a discard is not record loss");
     }
 
     #[test]

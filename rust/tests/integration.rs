@@ -12,7 +12,7 @@
 //!   holds the native-vs-PJRT numerical parity tests.
 
 use shufflesort::backend::{NativeBackend, StepBackend};
-use shufflesort::config::{BaselineConfig, ShuffleSoftSortConfig};
+use shufflesort::config::{BaselineConfig, ShuffleSoftSortConfig, TilePlanKind};
 use shufflesort::coordinator::baselines::{
     GumbelSinkhornDriver, KissingDriver, SoftSortDriver,
 };
@@ -329,6 +329,131 @@ fn tiled_shuffle_softsort_improves_dpq_end_to_end() {
     assert!(
         out.report.final_dpq > before + 0.15,
         "tiled sss {} vs unsorted {before}",
+        out.report.final_dpq
+    );
+    assert_eq!(out.perm.apply_rows(&ds.rows, 3), out.arranged);
+}
+
+#[test]
+fn snake_and_overlapped_plans_compose_valid_permutations() {
+    // Boundary-aware plans: boustrophedon chains and phase-alternating
+    // half-offset bands must keep every phase a bijection on ragged
+    // shapes, including 1-D and w=1 grids, and the driver invariant
+    // perm→arranged must hold.
+    let backend = NativeBackend::default();
+    for kind in [TilePlanKind::Snake, TilePlanKind::Overlapped] {
+        for (h, w, tile_n) in [(8usize, 8usize, 24usize), (5, 7, 10), (1, 40, 7), (9, 4, 13)] {
+            let n = h * w;
+            let ds = random_colors(n, 7 + (h * 31 + w) as u64);
+            let mut cfg = ShuffleSoftSortConfig::for_grid(h, w);
+            cfg.phases = 24;
+            cfg.record_curve = false;
+            cfg.tile_n = Some(tile_n);
+            cfg.tile_plan = kind;
+            let out = ShuffleSoftSort::new(&backend, cfg).unwrap().sort(&ds).unwrap();
+            assert_eq!(out.perm.len(), n, "{kind:?} {h}x{w} tile_n={tile_n}");
+            assert!(out.report.tiles > 1, "{kind:?} {h}x{w}: expected a real split");
+            assert_eq!(out.report.tile_plan, kind.name(), "{kind:?} {h}x{w}");
+            assert!(out.report.final_dpq.is_finite());
+            assert_eq!(
+                out.perm.apply_rows(&ds.rows, 3),
+                out.arranged,
+                "{kind:?} {h}x{w} tile_n={tile_n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn alternating_plans_are_dispatch_order_invariant() {
+    // The overlapped plan alternates two cuts between phases; the
+    // tile-index-ordered fold must still make every thread budget
+    // bit-identical (threads 1–8 plus the backend default).
+    let ds = random_colors(640, 17);
+    let backend = NativeBackend::default();
+    let base_cfg = {
+        let mut cfg = ShuffleSoftSortConfig::for_grid(20, 32);
+        cfg.phases = 6;
+        cfg.record_curve = false;
+        cfg.tile_n = Some(128);
+        cfg.tile_plan = TilePlanKind::Overlapped;
+        cfg
+    };
+    let run = |threads: Option<usize>| {
+        let mut cfg = base_cfg.clone();
+        cfg.threads = threads;
+        ShuffleSoftSort::new(&backend, cfg).unwrap().sort(&ds).unwrap()
+    };
+    let base = run(Some(1));
+    for threads in [Some(2), Some(3), Some(4), Some(5), Some(6), Some(7), Some(8), None] {
+        let out = run(threads);
+        assert_eq!(out.perm, base.perm, "threads={threads:?}");
+        for (a, b) in out.arranged.iter().zip(&base.arranged) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={threads:?}");
+        }
+        assert_eq!(
+            out.report.final_dpq.to_bits(),
+            base.report.final_dpq.to_bits(),
+            "threads={threads:?}"
+        );
+    }
+}
+
+#[test]
+fn pyramid_with_single_coarse_tile_is_bit_identical_to_full_and_tiled() {
+    // Degeneracy contract, pyramid edition: a budget covering the whole
+    // grid collapses the schedule to one leaf solve, whose gather is the
+    // identity — bit-identical to the full executor (and hence to the
+    // one-tile tiled executor, which shares the contract).
+    let ds = random_colors(64, 31);
+    let backend = NativeBackend::default();
+    let mut full_cfg = ShuffleSoftSortConfig::for_grid(8, 8);
+    full_cfg.phases = 96;
+    let full = ShuffleSoftSort::new(&backend, full_cfg.clone()).unwrap().sort(&ds).unwrap();
+    for tile_n in [None, Some(64usize), Some(100_000)] {
+        let mut cfg = full_cfg.clone();
+        cfg.pyramid = true;
+        cfg.tile_n = tile_n;
+        let pyr = ShuffleSoftSort::new(&backend, cfg).unwrap().sort(&ds).unwrap();
+        assert_eq!(pyr.report.tiles, 1, "tile_n={tile_n:?}");
+        assert_eq!(pyr.report.tile_plan, "pyramid");
+        assert_eq!(pyr.perm, full.perm, "tile_n={tile_n:?}");
+        for (a, b) in pyr.arranged.iter().zip(&full.arranged) {
+            assert_eq!(a.to_bits(), b.to_bits(), "tile_n={tile_n:?}");
+        }
+        assert_eq!(
+            pyr.report.final_dpq.to_bits(),
+            full.report.final_dpq.to_bits(),
+            "tile_n={tile_n:?}"
+        );
+        assert_eq!(pyr.report.steps, full.report.steps);
+        for (a, b) in pyr.report.curve.iter().zip(&full.report.curve) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "tile_n={tile_n:?}");
+        }
+    }
+}
+
+#[test]
+fn pyramid_composes_valid_permutations_and_improves_dpq() {
+    // A real multi-level pyramid (32x32 with a 64-item budget → a 4x4
+    // coarse grid over 8x8 subtiles): every phase must compose a valid
+    // bijection, the coarse relocation must not break the perm→arranged
+    // invariant, and the run must clearly improve DPQ.
+    let ds = random_colors(1024, 42);
+    let g = GridShape::new(32, 32);
+    let before = dpq16(&ds.rows, 3, g);
+    let backend = NativeBackend::default();
+    let mut cfg = ShuffleSoftSortConfig::for_grid(32, 32);
+    cfg.phases = 192;
+    cfg.record_curve = false;
+    cfg.tile_n = Some(64);
+    cfg.pyramid = true;
+    let out = ShuffleSoftSort::new(&backend, cfg).unwrap().sort(&ds).unwrap();
+    assert_eq!(out.report.tiles, 16, "4x4 coarse split over 8x8 leaves");
+    assert_eq!(out.report.tile_plan, "pyramid");
+    assert!(
+        out.report.final_dpq > before + 0.1,
+        "pyramid sss {} vs unsorted {before}",
         out.report.final_dpq
     );
     assert_eq!(out.perm.apply_rows(&ds.rows, 3), out.arranged);

@@ -660,6 +660,13 @@ fn include_report_adds_run_telemetry_and_caches_separately() {
     assert!(report.get("rejected_phases").unwrap().as_usize().is_some());
     assert!(report.get("extensions").unwrap().as_usize().is_some());
     assert_eq!(report.get("tiles").unwrap().as_usize(), Some(1));
+    assert_eq!(report.get("tile_plan").unwrap().as_str(), Some("full"));
+    assert_eq!(
+        report.get("notes").unwrap().as_arr().map(|a| a.len()),
+        Some(0),
+        "no config adjustments on a plain full-executor sort: {}",
+        r.body
+    );
     // The rest of the body is unchanged by the rider.
     assert_eq!(perm_of(&j), perm_of(&plain.json()));
 
@@ -1011,6 +1018,53 @@ fn bearer_auth_guards_everything_but_healthz() {
         m.json().get("listener").unwrap().get("auth_failures").unwrap().as_usize(),
         Some(2)
     );
+
+    server.shutdown();
+}
+
+#[test]
+fn tail_sampling_keeps_slow_requests_the_head_sampler_would_drop() {
+    // A sparse head rate with a tail threshold: fast requests past the
+    // head window leave no trace at all, while a slow sort is kept even
+    // though the head counter skipped it.
+    let mut cfg = serve_cfg();
+    cfg.trace_sample = 1_000_000; // head-samples only request 0
+    cfg.trace_tail_ms = 15;
+    let server = start_server_with(cfg);
+    let addr = server.addr();
+
+    // Request 0 is the head sampler's; burn it on a trivial GET.
+    let r = get(addr, "/v1/methods");
+    assert!(r.header("x-trace-id").is_some(), "request 0 is head-sampled");
+
+    // A fast request past the head window: traced speculatively, then
+    // discarded below the threshold — no id minted for the client.
+    let fast = get(addr, "/v1/methods");
+    assert_eq!(fast.header("x-trace-id"), None, "fast request is tail-dropped");
+
+    // A heavy sort runs well past 15 ms: the tail sampler keeps it, the
+    // trace is retrievable and complete, and the keep is counted.
+    let body = r#"{"method":"shuffle-softsort","grid":"16x16","dataset":{"kind":"colors","n":256,"seed":3},"overrides":{"phases":512,"record_curve":false},"include_arranged":false}"#;
+    let slow = post(addr, "/v1/sort", body);
+    assert_eq!(slow.status, 200, "{}", slow.body);
+    let tid = slow
+        .header("x-trace-id")
+        .expect("slow request kept by tail sampling")
+        .to_string();
+    let t = get(addr, &format!("/v1/trace/{tid}"));
+    assert_eq!(t.status, 200, "{}", t.body);
+    assert!(t.body.contains("engine_job"), "tail-kept trace is complete: {}", t.body);
+
+    let m = get(addr, "/metrics").json();
+    assert_eq!(
+        m.get("trace").unwrap().get("tail_kept").unwrap().as_usize(),
+        Some(1),
+        "{m:?}"
+    );
+
+    // Boot config is visible on /healthz.
+    let h = get(addr, "/healthz").json();
+    assert_eq!(h.get("trace_tail_ms").unwrap().as_usize(), Some(15));
 
     server.shutdown();
 }
